@@ -1,0 +1,7 @@
+"""Pytest path setup: make `compile.*` importable when running
+`pytest python/tests/` from the repository root."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

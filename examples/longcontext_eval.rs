@@ -1,0 +1,94 @@
+//! Long-context evaluation: native vs DMA attention on the trained model
+//! (the interactive companion to `cargo bench --bench table3_longbench`).
+//!
+//! Shows per-example needle retrievals so the losslessness claim is
+//! inspectable, not just a number.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example longcontext_eval
+//! cargo run --release --example longcontext_eval -- --host-backend
+//! ```
+
+use dma::config::{MetaConfig, TokenIds};
+use dma::eval;
+use dma::model::argmax;
+use dma::runtime::host::HostBackend;
+use dma::runtime::pjrt::PjrtBackend;
+use dma::runtime::ModelBackend;
+use dma::util::cli::Args;
+use dma::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse(&["host-backend"]);
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let host = args.flag("host-backend");
+
+    let (mut backend, ids, shape): (Box<dyn ModelBackend>, TokenIds, (usize, usize)) =
+        if host {
+            (
+                Box::new(HostBackend::for_tests()),
+                TokenIds { pad: 0, bos: 1, sep: 2, qry: 3, mrk: 4, eos: 5,
+                           payload_start: 6, vocab: 64 },
+                (4, 48),
+            )
+        } else {
+            let meta = MetaConfig::load(&artifacts).expect("run `make artifacts`");
+            let ids = meta.tokens;
+            let shape = *meta.eval_shapes.last().expect("eval shapes");
+            (Box::new(PjrtBackend::new(meta).expect("pjrt")), ids, shape)
+        };
+    let (b, l) = shape;
+
+    println!("== needle-in-a-haystack, batch={b} length={l}, backend={} ==\n",
+             backend.name());
+    let mut rng = Rng::new(args.usize_or("seed", 13) as u64);
+    let examples: Vec<eval::Example> =
+        (0..b).map(|_| eval::gen_needle(&mut rng, &ids, l)).collect();
+
+    let vocab = backend.vocab();
+    let mut flat = Vec::new();
+    for e in &examples {
+        flat.extend_from_slice(&e.tokens);
+    }
+    let lg_native = backend.eval_logits(&flat, b, l, false).expect("native");
+    let lg_dma = backend.eval_logits(&flat, b, l, true).expect("dma");
+
+    let mut ok = [0usize; 2];
+    let mut total = 0usize;
+    for (bi, e) in examples.iter().enumerate() {
+        for t in 0..l - 1 {
+            if e.mask[t] == 0.0 {
+                continue;
+            }
+            total += 1;
+            let expect = e.tokens[t + 1];
+            let p_n = argmax(&lg_native[(bi * l + t) * vocab..(bi * l + t + 1) * vocab]);
+            let p_d = argmax(&lg_dma[(bi * l + t) * vocab..(bi * l + t + 1) * vocab]);
+            ok[0] += (p_n == expect) as usize;
+            ok[1] += (p_d == expect) as usize;
+            println!(
+                "  ex{bi:<2} key={:<3} expect val={:<3} native={:<3}{} dma={:<3}{}",
+                e.tokens[t],
+                expect,
+                p_n,
+                if p_n == expect { " ok" } else { " XX" },
+                p_d,
+                if p_d == expect { " ok" } else { " XX" },
+            );
+        }
+    }
+    println!(
+        "\nretrieval accuracy: native {}/{} = {:.2}  |  DMA {}/{} = {:.2}",
+        ok[0], total, ok[0] as f64 / total as f64,
+        ok[1], total, ok[1] as f64 / total as f64,
+    );
+
+    // Full suite summary.
+    println!("\nfull suite (all tasks):");
+    let shapes = vec![shape];
+    let rows = eval::run_suite(backend.as_mut(), &ids, &shapes, 29).expect("suite");
+    for r in &rows {
+        println!("  {:<16} native={:.3} dma={:.3}", r.task, r.native, r.dma);
+    }
+    println!("\nlongcontext_eval OK");
+}

@@ -1,0 +1,71 @@
+//! Inspect the MXFP format zoo on a sample tensor: codes, scales,
+//! reconstruction error per format — a bit-level teaching tool.
+//!
+//! ```bash
+//! cargo run --release --example quant_inspect [-- --rows 4 --d 32]
+//! ```
+
+use dma::metrics;
+use dma::mxfp::block::{fake_quant, fake_quant_scaled, Format, Granularity};
+use dma::mxfp::fused::dual_quant;
+use dma::mxfp::{e2m1, fp8, pack};
+use dma::util::cli::Args;
+use dma::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse(&[]);
+    let rows = args.usize_or("rows", 4);
+    let d = args.usize_or("d", 32);
+    let mut rng = Rng::new(args.usize_or("seed", 9) as u64);
+    let x: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32 * 2.0).collect();
+
+    println!("== E2M1 grid (Algorithm 3) ==");
+    println!("representable magnitudes: {:?}", e2m1::E2M1_GRID);
+    for v in [0.2f32, 0.7, 1.3, 2.4, 5.0, 7.0] {
+        let code = e2m1::encode(v.clamp(-6.0, 6.0));
+        println!(
+            "  {v:>5} -> code {code:#06b} -> {}  (paper tie rule: 5 -> 4)",
+            e2m1::decode(code)
+        );
+    }
+
+    println!("\n== E4M3 samples ==");
+    for v in [0.001f32, 0.37, 17.3, 448.0, 500.0] {
+        let code = fp8::encode_e4m3(v);
+        println!("  {v:>8} -> {code:#010b} -> {}", fp8::decode_e4m3(code));
+    }
+
+    println!("\n== Fused dual quantization of a [{rows}, {d}] tensor ==");
+    let q = dual_quant(&x, rows, d, false, Granularity::PerToken);
+    println!("  packed FP4 bytes : {:?}...", &q.packed_fp4[..8.min(q.packed_fp4.len())]);
+    println!("  NVFP4 scales(E4M3): {:?}", &q.s4_codes[..d / 16]);
+    println!("  MXFP8 scales(E8M0): {:?}", &q.s8_codes[..d / 32]);
+    println!("  S_q per token     : {:?}", &q.sq[..rows.min(4)]);
+    let unpacked = pack::unpack(&q.packed_fp4[..d / 2]);
+    println!("  row0 FP4 codes    : {:?}...", &unpacked[..8]);
+
+    let mut low = vec![0f32; rows * d];
+    let mut high = vec![0f32; rows * d];
+    q.dequant_low(&mut low);
+    q.dequant_high(&mut high);
+
+    println!("\n== Reconstruction error per format ==");
+    println!("{:<24} {:>9} {:>9}", "format", "cos sim", "rmse");
+    let show = |name: &str, y: &[f32]| {
+        println!(
+            "{:<24} {:>9.4} {:>9.5}",
+            name,
+            metrics::cos_sim(&x, y),
+            metrics::rmse(&x, y)
+        );
+    };
+    show("MXFP4  (E2M1+E8M0/32)", &fake_quant(&x, rows, d, Format::Mxfp4));
+    show("MXFP8  (E4M3+E8M0/32)", &fake_quant(&x, rows, d, Format::Mxfp8E4m3));
+    show("NVFP4  (E2M1+E4M3/16)", &fake_quant(&x, rows, d, Format::Nvfp4));
+    show(
+        "NVFP4+ (tokenwise S_q)",
+        &fake_quant_scaled(&x, rows, d, Format::Nvfp4, Granularity::PerToken),
+    );
+    show("dual: low copy (NVFP4)", &low);
+    show("dual: high copy(MXFP8)", &high);
+}

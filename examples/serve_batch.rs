@@ -1,0 +1,142 @@
+//! End-to-end serving driver (the EXPERIMENTS.md E2E run).
+//!
+//! Loads the small build-time-trained model through the PJRT runtime,
+//! spins up the full coordinator (engine worker + router), submits a
+//! batch of long-context requests (copy / needle / induction prompts),
+//! and reports latency/throughput. Python is never on this path.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_batch
+//! cargo run --release --example serve_batch -- --host-backend   # no artifacts
+//! cargo run --release --example serve_batch -- --requests 32 --workers 1
+//! ```
+
+use dma::config::{EngineConfig, MetaConfig, TokenIds};
+use dma::coordinator::engine::EngineHandle;
+use dma::coordinator::router::{Policy, Router};
+use dma::coordinator::Request;
+use dma::runtime::host::HostBackend;
+use dma::runtime::pjrt::PjrtBackend;
+use dma::runtime::ModelBackend;
+use dma::util::cli::Args;
+use dma::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse(&["host-backend", "native"]);
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let n_requests = args.usize_or("requests", 24);
+    let workers = args.usize_or("workers", 1);
+    let max_new = args.usize_or("max-new-tokens", 16);
+    let host = args.flag("host-backend");
+    let dma_mode = !args.flag("native");
+
+    let (ids, prompt_lens): (TokenIds, Vec<usize>) = if host {
+        (
+            TokenIds { pad: 0, bos: 1, sep: 2, qry: 3, mrk: 4, eos: 5,
+                       payload_start: 6, vocab: 64 },
+            vec![16, 24, 32],
+        )
+    } else {
+        let meta = MetaConfig::load(&artifacts).expect("run `make artifacts` first");
+        (meta.tokens, vec![48, 96, 200])
+    };
+
+    // Long-context prompts from the three task families.
+    let mut rng = Rng::new(args.usize_or("seed", 1) as u64);
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|i| {
+            let l = *rng.choose(&prompt_lens);
+            let task = dma::eval::TASKS[i % dma::eval::TASKS.len()];
+            let ex = dma::eval::generate(task, &mut rng, &ids, l);
+            Request {
+                id: i as u64,
+                tokens: ex.tokens,
+                max_new_tokens: max_new,
+                dma: dma_mode,
+            }
+        })
+        .collect();
+    let total_prompt_tokens: usize = requests.iter().map(|r| r.tokens.len()).sum();
+
+    println!(
+        "== serve_batch: {n_requests} requests, {workers} worker(s), \
+         attention={} backend={} ==",
+        if dma_mode { "dma" } else { "native" },
+        if host { "host-cpu" } else { "pjrt-cpu" },
+    );
+
+    let cfg = EngineConfig {
+        artifact_dir: artifacts.clone().into(),
+        max_new_tokens: max_new,
+        ..Default::default()
+    };
+    let handles: Vec<EngineHandle> = (0..workers)
+        .map(|_| {
+            let a = artifacts.clone();
+            let c = cfg.clone();
+            EngineHandle::spawn(
+                move || -> dma::Result<Box<dyn ModelBackend>> {
+                    if host {
+                        Ok(Box::new(HostBackend::for_tests()))
+                    } else {
+                        Ok(Box::new(PjrtBackend::new(MetaConfig::load(&a)?)?))
+                    }
+                },
+                c,
+                ids.eos,
+            )
+        })
+        .collect();
+    let router = Router::new(handles, Policy::LeastLoaded);
+
+    let t0 = Instant::now();
+    for r in requests {
+        router.submit(r).unwrap();
+    }
+    let mut responses =
+        router.collect_responses(n_requests, std::time::Duration::from_secs(900));
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(responses.len(), n_requests, "lost responses");
+    responses.sort_by_key(|r| r.id);
+
+    let gen_tokens: usize = responses.iter().map(|r| r.output.len()).sum();
+    let mut prefill: Vec<f64> = responses.iter().map(|r| r.prefill_ms).collect();
+    let mut e2e: Vec<f64> = responses
+        .iter()
+        .map(|r| r.queue_ms + r.prefill_ms + r.decode_ms)
+        .collect();
+    prefill.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    e2e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |v: &[f64], p: f64| v[((v.len() - 1) as f64 * p) as usize];
+
+    println!("\nresults:");
+    println!("  wall time            : {wall:.2} s");
+    println!("  prompt tokens        : {total_prompt_tokens}");
+    println!("  generated tokens     : {gen_tokens}");
+    println!(
+        "  throughput           : {:.1} tok/s total ({:.1} generated tok/s)",
+        (total_prompt_tokens + gen_tokens) as f64 / wall,
+        gen_tokens as f64 / wall
+    );
+    println!(
+        "  prefill latency (ms) : p50 {:.1}  p90 {:.1}",
+        pct(&prefill, 0.5),
+        pct(&prefill, 0.9)
+    );
+    println!(
+        "  e2e latency (ms)     : p50 {:.1}  p90 {:.1}  max {:.1}",
+        pct(&e2e, 0.5),
+        pct(&e2e, 0.9),
+        pct(&e2e, 1.0)
+    );
+    let finishes: Vec<&str> = responses.iter().map(|r| r.finish.as_str()).collect();
+    let eos = finishes.iter().filter(|f| **f == "eos").count();
+    let len = finishes.iter().filter(|f| **f == "length").count();
+    println!("  finish reasons       : eos={eos} length={len} other={}",
+             n_requests - eos - len);
+    assert!(responses.iter().all(|r| !r.output.is_empty()));
+    println!("\nserve_batch OK");
+
+    router.shutdown();
+}

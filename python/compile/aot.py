@@ -1,0 +1,268 @@
+"""AOT compile path: lower every serving graph to HLO text artifacts.
+
+Run once by ``make artifacts``; Python never executes at serving time.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all shapes static; the Rust coordinator buckets requests):
+
+  fn_smoke.hlo.txt                  matmul+2 smoke test for the runtime
+  attn_native_l{L}_d64.hlo.txt      flash baseline  (q,k,v f32[L,64]) -> o
+  attn_dma_l{L}_d64.hlo.txt         DMA pipeline    (q,k,v f32[L,64]) -> o
+  quant_dual_l128_d64.hlo.txt       fused dual quantization, 5 outputs
+  prefill_{mode}_l{L}.hlo.txt       weights..., tokens i32[L] ->
+                                    (logits f32[L,V], k/v caches)
+  decode_b{B}.hlo.txt               weights..., tokens i32[B], caches, pos
+                                    -> (logits f32[B,V], caches')
+  eval_{mode}_l{L}_b{B}.hlo.txt     weights..., tokens i32[B,L] -> logits
+  weights.bin                       flat f32 tensors (layout: see meta)
+  model_meta.json                   config, signatures, token conventions
+  train_history.json                build-time training loss curve
+  eval_python.json                  python-side Table-3 cross-check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import tasks
+from .kernels import dma_attention as dak
+from .kernels import flash as fl
+from .kernels import quant_fused as qf
+
+CACHE_LEN = 320          # decode bucket cache capacity
+PREFILL_LENS = (64, 128, 256)
+DECODE_BATCHES = (1, 2, 4)
+ATTN_LENS = (128, 512)
+ATTN_D = 64
+EVAL_SHAPES = ((8, 96), (8, 224))   # (batch, length) Table-3 buckets
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(tree):
+    """JSON-able signature of a pytree of ShapeDtypeStruct/arrays."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return [{"shape": list(x.shape), "dtype": str(x.dtype)} for x in leaves]
+
+
+class Exporter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.index = {}
+
+    def export(self, name, fn, *example_args):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_sig = _sig(jax.eval_shape(fn, *example_args))
+        self.index[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _sig(example_args),
+            "outputs": out_sig,
+        }
+        print(f"  exported {name:28s} ({len(text)/1e6:.2f} MB, "
+              f"{time.time()-t0:.1f}s)")
+
+
+def write_weights_bin(path, flat):
+    """Binary weight format shared with rust/src/model/weights.rs:
+
+    magic 'DMAW' u32, version u32, count u32, then per tensor:
+    name_len u32, name bytes, ndim u32, dims u32..., f32 data (LE).
+    """
+    with open(path, "wb") as f:
+        f.write(b"DMAW")
+        f.write(struct.pack("<II", 1, len(flat)))
+        for name, arr in flat:
+            a = np.asarray(arr, np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", a.ndim))
+            f.write(struct.pack(f"<{a.ndim}I", *a.shape))
+            f.write(a.tobytes())
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=1500)
+    ap.add_argument("--train-batch", type=int, default=16)
+    ap.add_argument("--train-len", type=int, default=256)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="random weights (fast iteration)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = M.ModelConfig()
+    ex = Exporter(args.out_dir)
+
+    # ------------------------------------------------------------------
+    # 0. Runtime smoke artifact (matches the /opt/xla-example contract).
+    # ------------------------------------------------------------------
+    def fn_smoke(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    ex.export("fn_smoke", fn_smoke, spec((2, 2)), spec((2, 2)))
+
+    # ------------------------------------------------------------------
+    # 1. Attention micro-kernels (paper Tables 4/5 driving functions).
+    # ------------------------------------------------------------------
+    for L in ATTN_LENS:
+        ex.export(
+            f"attn_native_l{L}_d{ATTN_D}",
+            lambda q, k, v: fl.flash_attention(q, k, v, causal=True),
+            spec((L, ATTN_D)), spec((L, ATTN_D)), spec((L, ATTN_D)),
+        )
+        ex.export(
+            f"attn_dma_l{L}_d{ATTN_D}",
+            lambda q, k, v: dak.dma_attention(
+                q, k, v, bm=64, bn=64, diag=128, sink=128, causal=True),
+            spec((L, ATTN_D)), spec((L, ATTN_D)), spec((L, ATTN_D)),
+        )
+    ex.export(
+        "quant_dual_l128_d64",
+        lambda x: qf.dual_quant(x, is_query=True),
+        spec((128, ATTN_D)),
+    )
+
+    # ------------------------------------------------------------------
+    # 2. Train the small model on the synthetic long-context mixture.
+    # ------------------------------------------------------------------
+    t0 = time.time()
+    if args.skip_train:
+        print("  [skip-train] using random weights")
+        params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+        history = []
+    else:
+        print(f"  training {args.steps} steps "
+              f"(B={args.train_batch}, L={args.train_len}) ...")
+        params, history = M.train(
+            cfg, steps=args.steps, batch=args.train_batch,
+            length=args.train_len, seed=args.seed)
+    print(f"  training done in {time.time()-t0:.0f}s")
+    with open(os.path.join(args.out_dir, "train_history.json"), "w") as f:
+        json.dump({"loss": history, "steps": len(history),
+                   "batch": args.train_batch, "length": args.train_len}, f)
+
+    flat = M.flatten_params(params, cfg)
+    write_weights_bin(os.path.join(args.out_dir, "weights.bin"), flat)
+    wspecs = [spec(a.shape) for _, a in flat]
+
+    # ------------------------------------------------------------------
+    # 3. Serving graphs: prefill / decode with explicit KV-cache I/O.
+    #    Weights are HLO parameters 0..N-1 (layout contract in meta).
+    # ------------------------------------------------------------------
+    def with_weights(fn):
+        def wrapped(weights, *rest):
+            p = M.unflatten_params(weights, cfg)
+            return fn(p, *rest)
+        return wrapped
+
+    for L in PREFILL_LENS:
+        for mode in ("native", "dma"):
+            ex.export(
+                f"prefill_{mode}_l{L}",
+                with_weights(lambda p, toks, _mode=mode: M.prefill(
+                    p, toks, cfg, mode=_mode)),
+                wspecs, spec((L,), jnp.int32),
+            )
+
+    kv_spec = spec((cfg.n_layers, cfg.n_kv_heads, CACHE_LEN, cfg.d_head))
+    for B in DECODE_BATCHES:
+        ex.export(
+            f"decode_b{B}",
+            with_weights(lambda p, toks, kc, vc, pos: M.decode_step_batch(
+                p, toks, kc, vc, pos, cfg)),
+            wspecs,
+            spec((B,), jnp.int32),
+            spec((cfg.n_layers, B, cfg.n_kv_heads, CACHE_LEN, cfg.d_head)),
+            spec((cfg.n_layers, B, cfg.n_kv_heads, CACHE_LEN, cfg.d_head)),
+            spec((B,), jnp.int32),
+        )
+
+    # ------------------------------------------------------------------
+    # 4. Evaluation graphs (Table 3 proxy): batched full-sequence logits.
+    # ------------------------------------------------------------------
+    for B, L in EVAL_SHAPES:
+        for mode in ("native", "dma"):
+            ex.export(
+                f"eval_{mode}_l{L}_b{B}",
+                with_weights(lambda p, toks, _mode=mode: M.forward_batch(
+                    p, toks, cfg, mode=_mode)),
+                wspecs, spec((B, L), jnp.int32),
+            )
+
+    # ------------------------------------------------------------------
+    # 5. Python-side Table-3 cross-check (also recorded in EXPERIMENTS.md)
+    # ------------------------------------------------------------------
+    eval_rows = []
+    if not args.skip_train:
+        for task in tasks.TASK_NAMES:
+            for _, L in EVAL_SHAPES:
+                row = {"task": f"{task}_{L}"}
+                for mode in ("native", "dma"):
+                    row[mode] = M.eval_accuracy(
+                        params, cfg, mode, task, L, n=8, seed=1)
+                eval_rows.append(row)
+                print(f"  eval {row['task']:16s} native={row['native']:.3f} "
+                      f"dma={row['dma']:.3f}")
+    with open(os.path.join(args.out_dir, "eval_python.json"), "w") as f:
+        json.dump(eval_rows, f, indent=1)
+
+    # ------------------------------------------------------------------
+    # 6. Metadata contract for the Rust side.
+    # ------------------------------------------------------------------
+    meta = {
+        "model": cfg.as_dict(),
+        "param_order": [name for name, _ in flat],
+        "param_note": M.PARAM_ORDER_NOTE,
+        "cache_len": CACHE_LEN,
+        "prefill_lens": list(PREFILL_LENS),
+        "decode_batches": list(DECODE_BATCHES),
+        "attn_lens": list(ATTN_LENS),
+        "attn_d": ATTN_D,
+        "eval_shapes": [list(s) for s in EVAL_SHAPES],
+        "tokens": {"PAD": tasks.PAD, "BOS": tasks.BOS, "SEP": tasks.SEP,
+                   "QRY": tasks.QRY, "MRK": tasks.MRK, "EOS": tasks.EOS,
+                   "PAYLOAD_START": tasks.PAYLOAD_START,
+                   "VOCAB": tasks.VOCAB},
+        "artifacts": ex.index,
+    }
+    with open(os.path.join(args.out_dir, "model_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  wrote model_meta.json with {len(ex.index)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,290 @@
+"""Diagonal-Tiled Mixed-Precision Attention as a Pallas kernel (Alg. 1).
+
+The kernel consumes the *bit-level* outputs of the fused dual-quantization
+kernel (``quant_fused.dual_quant``): packed E2M1 nibbles + E4M3 block
+scales for the low-precision path, E4M3 codes + E8M0 block exponents for
+the high-precision path, and the per-token scale ``S_q``. Decoding happens
+in VMEM right before the tile matmul — nothing is dequantized in HBM.
+
+Tiling follows the paper exactly: one grid step per query tile ``i``
+(size ``bm``); inside, the KV axis is walked in ``bn``-sized tiles in
+three phases —
+
+  Phase 0 (sink)  : the first ``sink`` key tokens, high precision,
+  Phase 1 (low)   : everything before the diagonal window, low precision,
+  Phase 2 (diag)  : the window of ``diag`` tokens ending at the causal
+                    frontier of tile ``i``, high precision + causal mask,
+
+all stitched together with base-2 OnlineSoftmax (the ``log2 e`` factor is
+pre-folded into Q by the quantization kernel, so ``exp2`` replaces
+``exp``). For non-causal attention the window straddles the diagonal
+(``diag/2`` on each side) and Phase 1 covers both the lower and upper
+triangles, mirroring the paper's Sec. 5.2 "Compatibility with Non-Causal
+Attention".
+
+Hardware adaptation (see DESIGN.md §5): the TPU MXU has no FP4/FP8 MMA
+path, so the matmuls run in f32 over bit-exactly decoded operands; the
+format-level speedup is modelled in ``rust/src/perfmodel``. Pallas is used
+with ``interpret=True`` — CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import mxfp
+from . import quant_fused
+
+NEG_INF = float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# In-kernel tile dequantization
+# ---------------------------------------------------------------------------
+
+def _decode_low_tile(packed, s4_codes, sq):
+    """[rows, d/2]u8 + [rows, d/16]u8 + [rows, 1]f32 -> [rows, d]f32."""
+    codes = mxfp.unpack_fp4(packed)
+    vals = mxfp.decode_e2m1(codes)
+    rows, d = vals.shape
+    vb = vals.reshape(rows, d // mxfp.NVFP4_BLOCK, mxfp.NVFP4_BLOCK)
+    s4 = mxfp.decode_e4m3(s4_codes)[..., None]
+    return (vb * s4).reshape(rows, d) * sq
+
+
+def _decode_high_tile(fp8_codes, s8_codes, sq):
+    """[rows, d]u8 + [rows, d/32]u8 + [rows, 1]f32 -> [rows, d]f32."""
+    vals = mxfp.decode_e4m3(fp8_codes)
+    rows, d = vals.shape
+    vb = vals.reshape(rows, d // mxfp.MXFP_BLOCK, mxfp.MXFP_BLOCK)
+    s8 = mxfp.pow2i(s8_codes.astype(jnp.float32) - 127.0)[..., None]
+    return (vb * s8).reshape(rows, d) * sq
+
+
+# ---------------------------------------------------------------------------
+# Kernel body
+# ---------------------------------------------------------------------------
+
+def _dma_kernel(
+    qpk_ref, qs4_ref, qf8_ref, qs8_ref, qsq_ref,
+    kpk_ref, ks4_ref, kf8_ref, ks8_ref, ksq_ref,
+    v_ref, o_ref,
+    *, bm, bn, d, lq, lk, diag, sink, causal,
+):
+    i = pl.program_id(0)
+    off = lk - lq  # causal frontier offset for rectangular Q/K
+    nk = lk // bn
+
+    # Decode both precision copies of this query tile once.
+    q_sq = qsq_ref[...]
+    q_low = _decode_low_tile(qpk_ref[...], qs4_ref[...], q_sq)
+    q_high = _decode_high_tile(qf8_ref[...], qs8_ref[...], q_sq)
+
+    row_ids = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+    col_base = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+
+    def make_tile_step(use_high, apply_mask):
+        def step(j, carry):
+            m, l, acc = carry
+            ks = pl.ds(j * bn, bn)
+            k_sq = ksq_ref[ks, :]
+            if use_high:
+                k_tile = _decode_high_tile(kf8_ref[ks, :], ks8_ref[ks, :], k_sq)
+                q_tile = q_high
+            else:
+                k_tile = _decode_low_tile(kpk_ref[ks, :], ks4_ref[ks, :], k_sq)
+                q_tile = q_low
+            # Base-2 logits: softmax scale already folded into Q.
+            s = jax.lax.dot_general(
+                q_tile, k_tile,
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            if apply_mask:
+                cols = j * bn + col_base
+                valid = cols <= row_ids + off
+                s = jnp.where(valid, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=1))
+            alpha = jnp.exp2(m - m_new)
+            p = jnp.exp2(s - m_new[:, None])
+            l_new = l * alpha + jnp.sum(p, axis=1)
+            v_tile = v_ref[ks, :]
+            acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+                p, v_tile, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            return m_new, l_new, acc_new
+
+        return step
+
+    m0 = jnp.full((bm,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bm,), jnp.float32)
+    acc0 = jnp.zeros((bm, d), jnp.float32)
+    carry = (m0, l0, acc0)
+
+    frontier = i * bm + (bm - 1) + off
+    if causal:
+        j_end = jnp.minimum(frontier // bn + 1, nk)
+        # First high tile of the diagonal window (Phase 2 start).
+        j_hi_start = (frontier - diag + 1) // bn if diag > 0 else j_end
+    else:
+        j_end = jnp.int32(nk)
+        half = diag // 2
+        j_hi_start = (frontier - half) // bn if diag > 0 else j_end
+        j_hi_end = jnp.minimum((frontier + half) // bn + 1, nk) if diag > 0 else j_end
+    n_sink = -(-sink // bn) if sink > 0 else 0
+
+    if causal:
+        # Order matters: cap the sink tile count at the causal end first,
+        # so clip() below never sees min > max (which would push
+        # j_hi_start past j_end and walk tiles outside the KV range).
+        n_sink_eff = jnp.minimum(jnp.int32(n_sink), j_end)
+        j_hi_start = jnp.clip(j_hi_start, n_sink_eff, j_end)
+        # Phase 0: attention-sink tiles, high precision.
+        carry = jax.lax.fori_loop(
+            0, n_sink_eff, make_tile_step(True, True), carry)
+        # Phase 1: low-precision tiles up to the diagonal window.
+        carry = jax.lax.fori_loop(
+            n_sink_eff, j_hi_start, make_tile_step(False, True), carry)
+        # Phase 2: high-precision tiles inside the window (+ causal mask).
+        carry = jax.lax.fori_loop(
+            j_hi_start, j_end, make_tile_step(True, True), carry)
+    else:
+        n_sink_cap = jnp.minimum(jnp.int32(n_sink), j_end)
+        j_hi_start = jnp.clip(j_hi_start, n_sink_cap, j_end)
+        j_hi_end = jnp.clip(j_hi_end, j_hi_start, j_end)
+        n_sink_eff = jnp.minimum(n_sink_cap, j_hi_start)
+        carry = jax.lax.fori_loop(
+            0, n_sink_eff, make_tile_step(True, False), carry)
+        # Phase 1a: lower-triangle low tiles.
+        carry = jax.lax.fori_loop(
+            n_sink_eff, j_hi_start, make_tile_step(False, False), carry)
+        # Phase 2: the diagonal window, high precision.
+        carry = jax.lax.fori_loop(
+            j_hi_start, j_hi_end, make_tile_step(True, False), carry)
+        # Phase 1b: upper-triangle low tiles.
+        carry = jax.lax.fori_loop(
+            j_hi_end, j_end, make_tile_step(False, False), carry)
+
+    m, l, acc = carry
+    o_ref[...] = acc / l[:, None]
+
+
+# ---------------------------------------------------------------------------
+# Host-side wrappers
+# ---------------------------------------------------------------------------
+
+def dma_attention_quantized(
+    q_quant, k_quant, v, *, bm=64, bn=64, diag=128, sink=0, causal=True,
+    interpret=True,
+):
+    """Run DMA attention on pre-quantized operands.
+
+    ``q_quant``/``k_quant`` are the 5-tuples returned by
+    ``quant_fused.dual_quant`` (with ``is_query=True`` for Q). ``v`` is
+    [Lk, D] float32. Returns [Lq, D] float32.
+    """
+    qpk, qs4, qf8, qs8, qsq = q_quant
+    kpk, ks4, kf8, ks8, ksq = k_quant
+    lq, d = qf8.shape
+    lk = kf8.shape[0]
+    assert lq % bm == 0 and lk % bn == 0, (lq, bm, lk, bn)
+
+    kernel = functools.partial(
+        _dma_kernel, bm=bm, bn=bn, d=d, lq=lq, lk=lk,
+        diag=diag, sink=sink, causal=causal,
+    )
+    grid = (lq // bm,)
+    qspec = [
+        pl.BlockSpec((bm, d // 2), lambda i: (i, 0)),
+        pl.BlockSpec((bm, d // mxfp.NVFP4_BLOCK), lambda i: (i, 0)),
+        pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        pl.BlockSpec((bm, d // mxfp.MXFP_BLOCK), lambda i: (i, 0)),
+        pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+    ]
+    kspec = [
+        pl.BlockSpec((lk, d // 2), lambda i: (0, 0)),
+        pl.BlockSpec((lk, d // mxfp.NVFP4_BLOCK), lambda i: (0, 0)),
+        pl.BlockSpec((lk, d), lambda i: (0, 0)),
+        pl.BlockSpec((lk, d // mxfp.MXFP_BLOCK), lambda i: (0, 0)),
+        pl.BlockSpec((lk, 1), lambda i: (0, 0)),
+    ]
+    vspec = [pl.BlockSpec((lk, d), lambda i: (0, 0))]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=qspec + kspec + vspec,
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lq, d), jnp.float32),
+        interpret=interpret,
+    )(qpk, qs4, qf8, qs8, qsq, kpk, ks4, kf8, ks8, ksq, v)
+
+
+def dma_attention(q, k, v, *, bm=64, bn=64, diag=128, sink=0, causal=True,
+                  interpret=True):
+    """Full DMA pipeline on float inputs: fused dual-quant, then the
+    mixed-precision attention kernel. q:[Lq,D], k,v:[Lk,D] -> [Lq,D]."""
+    q_quant = quant_fused.dual_quant(q, is_query=True, interpret=interpret)
+    k_quant = quant_fused.dual_quant(k, is_query=False, interpret=interpret)
+    return dma_attention_quantized(
+        q_quant, k_quant, v, bm=bm, bn=bn, diag=diag, sink=sink,
+        causal=causal, interpret=interpret,
+    )
+
+
+def dma_attention_mha(q, k, v, **kw):
+    """Multi-head wrapper: q,k,v:[H, L, D] -> [H, Lq, D] (vmap over heads)."""
+    return jax.vmap(lambda qq, kk, vv: dma_attention(qq, kk, vv, **kw))(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Tile-level oracle on the kernel's own quantized operands (used by tests:
+# isolates the tiling/online-softmax logic from quantization tie-breaks).
+# ---------------------------------------------------------------------------
+
+def dma_oracle_from_quants(q_quant, k_quant, v, *, bm=64, bn=64, diag=128,
+                           sink=0, causal=True):
+    qpk, qs4, qf8, qs8, qsq = q_quant
+    kpk, ks4, kf8, ks8, ksq = k_quant
+    ql = quant_fused.dequant_nvfp4(qpk, qs4, qsq)
+    qh = quant_fused.dequant_mxfp8(qf8, qs8, qsq)
+    kl = quant_fused.dequant_nvfp4(kpk, ks4, ksq)
+    kh = quant_fused.dequant_mxfp8(kf8, ks8, ksq)
+    lq, _ = ql.shape
+    lk = kl.shape[0]
+    off = lk - lq
+
+    s_low = ql @ kl.T
+    s_high = qh @ kh.T
+
+    qi = jnp.arange(lq)[:, None]
+    kj = jnp.arange(lk)[None, :]
+    ti, tj = qi // bm, kj // bn
+    frontier = ti * bm + (bm - 1) + off
+    if causal:
+        if diag > 0:
+            win_start = frontier - (diag - 1)
+            hi = (tj * bn + (bn - 1) >= win_start) & (tj * bn <= frontier)
+        else:
+            hi = jnp.zeros(s_low.shape, bool)
+    else:
+        if diag > 0:
+            half = diag // 2
+            j_hs = (frontier - half) // bn
+            j_he = (frontier + half) // bn
+            hi = (tj >= j_hs) & (tj <= j_he)
+        else:
+            hi = jnp.zeros(s_low.shape, bool)
+    if sink > 0:
+        n_sink = -(-sink // bn)
+        hi = hi | (tj < n_sink)
+    s = jnp.where(hi, s_high, s_low)
+    if causal:
+        s = jnp.where(kj > qi + off, NEG_INF, s)
+    p = jnp.exp2(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v

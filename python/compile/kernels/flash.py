@@ -1,0 +1,84 @@
+"""Full-precision tiled FlashAttention baseline (Pallas, interpret mode).
+
+Same tiling and OnlineSoftmax structure as the DMA kernel but with f32
+operands and the standard base-e softmax — this is the "Native"
+(SDPA-equivalent) baseline of the paper's Tables 3 and 4, implemented in
+the same framework so kernel-structure overheads cancel in comparisons.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bm, bn, d, lq, lk, causal):
+    i = pl.program_id(0)
+    off = lk - lq
+    nk = lk // bn
+
+    q = q_ref[...] * (1.0 / jnp.sqrt(jnp.float32(d)))
+    row_ids = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+    col_base = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+
+    def step(j, carry):
+        m, l, acc = carry
+        ks = pl.ds(j * bn, bn)
+        k_tile = k_ref[ks, :]
+        s = jax.lax.dot_general(
+            q, k_tile, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        if causal:
+            cols = j * bn + col_base
+            s = jnp.where(cols <= row_ids + off, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v_ref[ks, :], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    frontier = i * bm + (bm - 1) + off
+    j_end = jnp.minimum(frontier // bn + 1, nk) if causal else jnp.int32(nk)
+    carry = (
+        jnp.full((bm,), NEG_INF, jnp.float32),
+        jnp.zeros((bm,), jnp.float32),
+        jnp.zeros((bm, d), jnp.float32),
+    )
+    m, l, acc = jax.lax.fori_loop(0, j_end, step, carry)
+    o_ref[...] = acc / l[:, None]
+
+
+def flash_attention(q, k, v, *, bm=64, bn=64, causal=True, interpret=True):
+    """Tiled exact attention. q:[Lq,D], k,v:[Lk,D] -> [Lq,D] float32."""
+    lq, d = q.shape
+    lk = k.shape[0]
+    assert lq % bm == 0 and lk % bn == 0, (lq, bm, lk, bn)
+    kernel = functools.partial(
+        _flash_kernel, bm=bm, bn=bn, d=d, lq=lq, lk=lk, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(lq // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((lk, d), lambda i: (0, 0)),
+            pl.BlockSpec((lk, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lq, d), jnp.float32),
+        interpret=interpret,
+    )(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+
+
+def flash_attention_mha(q, k, v, **kw):
+    """Multi-head wrapper: [H, L, D] inputs, vmapped over heads."""
+    return jax.vmap(lambda qq, kk, vv: flash_attention(qq, kk, vv, **kw))(q, k, v)

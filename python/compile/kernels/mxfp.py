@@ -1,0 +1,332 @@
+"""MXFP format primitives (jnp, traceable inside Pallas kernels).
+
+Implements the microscaling floating-point (MXFP) format zoo of the paper
+(Table 1) as branch-free jax-numpy code so the same functions can be used
+
+  * inside Pallas kernels (interpret=True on CPU),
+  * in the pure-jnp reference oracle (``ref.py``), and
+  * to generate cross-language golden vectors for the Rust mirror
+    (``rust/src/mxfp``).
+
+Formats
+-------
+=======  =====  ==========  ===========
+Name     Block  Element     Shared scale
+=======  =====  ==========  ===========
+MXFP8    32     E4M3/E5M2   E8M0 (8 bit)
+MXFP4    32     E2M1        E8M0 (8 bit)
+NVFP4    16     E2M1        E4M3 (8 bit)
+=======  =====  ==========  ===========
+
+Encoding semantics follow Algorithm 2/3 of the paper. One deliberate
+deviation, documented in DESIGN.md: Algorithm 3 states the subnormal
+mantissa threshold as ``X_norm > 0.25`` while calling 0.25 "the midpoint
+of 0 and 0.5"; in the normalized domain (``X_norm = |x| / 2^{E-1}``) that
+midpoint is 0.5, so we use ``X_norm > 0.5`` (equivalently ``|x| > 0.25``),
+which is the stated intent. Like the paper's algorithm, values never round
+*up* across an exponent boundary (e.g. 1.75 -> 1.5, not 2.0); this is the
+published kernel's behaviour and we reproduce it faithfully.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Element format constants (paper Sec. 5.3)
+# ---------------------------------------------------------------------------
+
+# E2M1 (FP4): 1 sign, 2 exponent, 1 mantissa. Representable magnitudes:
+# 0, 0.5, 1, 1.5, 2, 3, 4, 6.
+E2M1_MAX = 6.0
+# Largest-normal exponent of E2M1: 6 = 1.5 * 2^2  ->  e_max = 2.
+E2M1_EMAX = 2
+
+# E4M3 (FN variant, as on Blackwell/OCP): bias 7, max normal 448
+# (S.1111.110 = 1.75 * 2^8); S.1111.111 is NaN, never emitted.
+E4M3_MAX = 448.0
+E4M3_EMAX = 8  # paper: "In E4M3, e_max = 8"
+
+# E5M2 (IEEE-like): bias 15, max normal 57344 = 1.75 * 2^15.
+E5M2_MAX = 57344.0
+E5M2_EMAX = 15
+
+# Block sizes (Table 1).
+NVFP4_BLOCK = 16
+MXFP_BLOCK = 32
+
+# Softmax scale folded into Q before quantization (Alg. 2 Step 1). The
+# kernel computes softmax in base-2 arithmetic, hence the log2(e) factor.
+LOG2_E = 1.4426950408889634
+
+_EPS = 1e-30
+
+
+def pow2i(e):
+    """Exact 2^e for integer-valued exponents in [-126, 127].
+
+    ``jnp.exp2`` lowers to an approximation on CPU XLA (exp2(13) can come
+    back as 8192.0039!), which corrupts power-of-two scale arithmetic.
+    Construct the float bit pattern directly instead. Exponents below
+    -126 clamp to 2^-126 (denormal E8M0 corner; documented deviation).
+    """
+    ei = jnp.clip(jnp.asarray(e), -126, 127).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type((ei + 127) << 23, jnp.float32)
+
+
+def _floor_log2(a):
+    """Exact floor(log2(a)) for positive floats.
+
+    ``jnp.log2`` can return 2.9999997 for an exact 8.0; a plain floor then
+    misclassifies the octave and the derived mantissa overflows its bit
+    budget. Correct the estimate by one step in either direction.
+    """
+    e = jnp.floor(jnp.log2(jnp.maximum(a, _EPS)))
+    e = jnp.where(a >= pow2i(e + 1.0), e + 1.0, e)
+    e = jnp.where(a < pow2i(e), e - 1.0, e)
+    return e
+
+
+# ---------------------------------------------------------------------------
+# E2M1 encode/decode (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+def encode_e2m1(x):
+    """Encode a clamped tensor (|x| <= 6) into 4-bit E2M1 codes (uint8).
+
+    Faithful, branch-free implementation of Algorithm 3:
+      Step 4.1  sign bit
+      Step 4.2  2-bit exponent by thresholding |x| against {1, 2, 4}
+      Step 4.3  1-bit mantissa against the normalized midpoint (strict >,
+                so ties round to even mantissa M=0)
+      Step 4.4  assemble (S << 3) | (E << 1) | M
+    """
+    x = jnp.asarray(x, jnp.float32)
+    s = (x < 0).astype(jnp.uint8)
+    a = jnp.abs(x)
+    e = (
+        (a >= 1.0).astype(jnp.uint8)
+        + (a >= 2.0).astype(jnp.uint8)
+        + (a >= 4.0).astype(jnp.uint8)
+    )
+    # X_norm = |x| / 2^(E - bias), bias = 1.
+    norm = a * pow2i(1.0 - e.astype(jnp.float32))
+    m_sub = (norm > 0.5).astype(jnp.uint8)   # E == 0 (see module docstring)
+    m_norm = (norm > 1.25).astype(jnp.uint8)  # E != 0: midpoint of {1, 1.5}
+    m = jnp.where(e == 0, m_sub, m_norm)
+    return ((s << 3) | (e << 1) | m).astype(jnp.uint8)
+
+
+def decode_e2m1(code):
+    """Decode 4-bit E2M1 codes (uint8, low nibble) back to float32."""
+    code = jnp.asarray(code, jnp.uint8)
+    s = ((code >> 3) & 1).astype(jnp.float32)
+    e = ((code >> 1) & 3).astype(jnp.float32)
+    m = (code & 1).astype(jnp.float32)
+    sub = 0.5 * m                                   # E == 0: {0, 0.5}
+    norm = pow2i(e - 1.0) * (1.0 + 0.5 * m)       # E != 0
+    mag = jnp.where(e == 0, sub, norm)
+    return jnp.where(s == 1, -mag, mag)
+
+
+def quantize_e2m1(x):
+    """Value-level E2M1 fake-quant: clamp, encode, decode."""
+    x = jnp.clip(x, -E2M1_MAX, E2M1_MAX)
+    return decode_e2m1(encode_e2m1(x))
+
+
+# ---------------------------------------------------------------------------
+# FP4 nibble packing (Algorithm 2, Step 5)
+# ---------------------------------------------------------------------------
+
+def pack_fp4(codes):
+    """Pack two 4-bit codes into one uint8 along the last dim.
+
+    The higher index goes to the most significant nibble (paper Step 5).
+    The last dimension must be even.
+    """
+    lo = codes[..., 0::2]
+    hi = codes[..., 1::2]
+    return ((hi << 4) | lo).astype(jnp.uint8)
+
+
+def unpack_fp4(packed):
+    """Inverse of :func:`pack_fp4`: uint8 -> two interleaved 4-bit codes."""
+    lo = packed & 0x0F
+    hi = (packed >> 4) & 0x0F
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+# ---------------------------------------------------------------------------
+# E4M3 / E5M2 encode/decode
+# ---------------------------------------------------------------------------
+
+def _fp8_quant(x, emin, emax, mant_bits, max_val):
+    """Round-to-nearest-even onto an FP8 grid, value level."""
+    a = jnp.abs(jnp.asarray(x, jnp.float32))
+    a = jnp.minimum(a, max_val)
+    e = jnp.clip(_floor_log2(a), emin, emax)
+    step = pow2i(e - mant_bits)
+    q = jnp.minimum(jnp.round(a / step) * step, max_val)
+    return jnp.sign(x) * q
+
+
+def quantize_e4m3(x):
+    """Value-level E4M3 fake-quant (RTN-even, clamp to +/-448)."""
+    return _fp8_quant(x, emin=-6, emax=E4M3_EMAX, mant_bits=3, max_val=E4M3_MAX)
+
+
+def quantize_e5m2(x):
+    """Value-level E5M2 fake-quant (RTN-even, clamp to +/-57344)."""
+    return _fp8_quant(x, emin=-14, emax=E5M2_EMAX, mant_bits=2, max_val=E5M2_MAX)
+
+
+def encode_e4m3(x):
+    """Encode float32 into E4M3 bit codes (uint8). Never emits NaN codes."""
+    q = quantize_e4m3(x)
+    s = (q < 0).astype(jnp.uint8)
+    a = jnp.abs(q)
+    e = jnp.clip(_floor_log2(a), -6, 8)
+    is_sub = a < pow2i(-6.0)
+    exp_field = jnp.where(is_sub, 0.0, e + 7.0)
+    mant = jnp.where(
+        is_sub,
+        jnp.round(a * pow2i(9.0)),                  # subnormal step 2^-9
+        jnp.round((a * pow2i(-e) - 1.0) * 8.0),     # 3-bit mantissa
+    )
+    code = (s << 7) | (exp_field.astype(jnp.uint8) << 3) | mant.astype(jnp.uint8)
+    return code.astype(jnp.uint8)
+
+
+def decode_e4m3(code):
+    """Decode E4M3 bit codes (uint8) to float32."""
+    code = jnp.asarray(code, jnp.uint8)
+    s = ((code >> 7) & 1).astype(jnp.float32)
+    e = ((code >> 3) & 0x0F).astype(jnp.float32)
+    m = (code & 0x07).astype(jnp.float32)
+    sub = m * pow2i(-9.0)
+    norm = (1.0 + m / 8.0) * pow2i(e - 7.0)
+    mag = jnp.where(e == 0, sub, norm)
+    return jnp.where(s == 1, -mag, mag)
+
+
+def encode_e5m2(x):
+    """Encode float32 into E5M2 bit codes (uint8)."""
+    q = quantize_e5m2(x)
+    s = (q < 0).astype(jnp.uint8)
+    a = jnp.abs(q)
+    e = jnp.clip(_floor_log2(a), -14, 15)
+    is_sub = a < pow2i(-14.0)
+    exp_field = jnp.where(is_sub, 0.0, e + 15.0)
+    mant = jnp.where(
+        is_sub,
+        jnp.round(a * pow2i(16.0)),                 # subnormal step 2^-16
+        jnp.round((a * pow2i(-e) - 1.0) * 4.0),     # 2-bit mantissa
+    )
+    code = (s << 7) | (exp_field.astype(jnp.uint8) << 2) | mant.astype(jnp.uint8)
+    return code.astype(jnp.uint8)
+
+
+def decode_e5m2(code):
+    """Decode E5M2 bit codes (uint8) to float32."""
+    code = jnp.asarray(code, jnp.uint8)
+    s = ((code >> 7) & 1).astype(jnp.float32)
+    e = ((code >> 2) & 0x1F).astype(jnp.float32)
+    m = (code & 0x03).astype(jnp.float32)
+    sub = m * pow2i(-16.0)
+    norm = (1.0 + m / 4.0) * pow2i(e - 15.0)
+    mag = jnp.where(e == 0, sub, norm)
+    return jnp.where(s == 1, -mag, mag)
+
+
+# ---------------------------------------------------------------------------
+# Shared scales (Algorithm 2, Steps 3 / 6 / 7)
+# ---------------------------------------------------------------------------
+
+def e8m0_shared_scale(block_amax, emax):
+    """E8M0 shared exponent for MXFP blocks (Alg. 2, Step 6 + Step 7).
+
+    Returns ``(scale_pow2, code)`` where ``scale_pow2`` is the float scale
+    ``2^S_shared`` and ``code`` is the biased uint8 E8M0 representation
+    (``S_shared + 127`` clamped to [0, 254]; 255 is reserved for NaN).
+    """
+    s_shared = _floor_log2(jnp.maximum(block_amax, _EPS)) - emax
+    code = jnp.clip(s_shared + 127.0, 0.0, 254.0)
+    s_shared = code - 127.0  # clamping must round-trip through the code
+    return pow2i(s_shared), code.astype(jnp.uint8)
+
+
+def nvfp4_shared_scale(block_amax):
+    """NVFP4 per-16-block scale, stored in E4M3 (Alg. 2, Step 3).
+
+    ``S_FP4 = amax / 6`` quantized onto the E4M3 grid so the stored byte
+    and the dequantization factor agree bit-for-bit.
+    """
+    raw = block_amax / E2M1_MAX
+    q = quantize_e4m3(raw)
+    # A zero/degenerate block would give scale 0; use the smallest E4M3
+    # subnormal instead so dequantization never divides by zero.
+    q = jnp.maximum(q, pow2i(-9.0))
+    return q, encode_e4m3(q)
+
+
+# ---------------------------------------------------------------------------
+# Block fake-quantization (format zoo, value level)
+# ---------------------------------------------------------------------------
+
+def _blockify(x, block):
+    """Reshape [..., D] -> [..., D // block, block] (D must divide)."""
+    d = x.shape[-1]
+    assert d % block == 0, f"last dim {d} not divisible by block {block}"
+    return x.reshape(*x.shape[:-1], d // block, block)
+
+
+def _unblockify(xb):
+    return xb.reshape(*xb.shape[:-2], xb.shape[-2] * xb.shape[-1])
+
+
+def fake_quant_mxfp4(x):
+    """MXFP4: E2M1 elements, E8M0 scale per 32-block (quantize->dequantize)."""
+    xb = _blockify(jnp.asarray(x, jnp.float32), MXFP_BLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale, _ = e8m0_shared_scale(amax, E2M1_EMAX)
+    q = quantize_e2m1(xb / scale)
+    return _unblockify(q * scale)
+
+
+def fake_quant_mxfp8(x, element="e4m3"):
+    """MXFP8: E4M3/E5M2 elements, E8M0 scale per 32-block."""
+    xb = _blockify(jnp.asarray(x, jnp.float32), MXFP_BLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    if element == "e4m3":
+        scale, _ = e8m0_shared_scale(amax, E4M3_EMAX)
+        q = quantize_e4m3(jnp.clip(xb / scale, -E4M3_MAX, E4M3_MAX))
+    elif element == "e5m2":
+        scale, _ = e8m0_shared_scale(amax, E5M2_EMAX)
+        q = quantize_e5m2(jnp.clip(xb / scale, -E5M2_MAX, E5M2_MAX))
+    else:
+        raise ValueError(f"unknown element format {element!r}")
+    return _unblockify(q * scale)
+
+
+def fake_quant_nvfp4(x, tokenwise=False):
+    """NVFP4: E2M1 elements, E4M3 scale per 16-block.
+
+    With ``tokenwise=True`` an additional per-row quantization scale
+    ``S_q = amax_row / (448 * 6)`` is applied first (Alg. 2, Step 2) —
+    the "+" rows of Table 2 and the scheme DMA itself uses.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if tokenwise:
+        sq = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / (E4M3_MAX * E2M1_MAX)
+        sq = jnp.maximum(sq, _EPS)
+    else:
+        sq = jnp.ones_like(x[..., :1])
+    xs = x / sq
+    xb = _blockify(xs, NVFP4_BLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale, _ = nvfp4_shared_scale(amax)
+    q = quantize_e2m1(jnp.clip(xb / scale, -E2M1_MAX, E2M1_MAX))
+    return _unblockify(q * scale) * sq

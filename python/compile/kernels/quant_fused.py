@@ -1,0 +1,127 @@
+"""Fused dual-MXFP quantization as a Pallas kernel (paper Algorithm 2).
+
+One grid pass over row tiles of an FP32/FP16 input produces, without any
+intermediate HBM round-trips:
+
+  * the NVFP4 low-precision copy — E2M1 codes packed two-per-byte plus the
+    per-16-element E4M3 shared scales,
+  * the MXFP8 high-precision copy — E4M3 codes plus the per-32-element
+    E8M0 shared exponents,
+  * the per-token quantization scale ``S_q`` (Alg. 2 Step 2),
+
+with the softmax factor ``log2(e)/sqrt(D)`` pre-folded for query tensors
+(Step 1) so the attention kernel can run its softmax in base-2 arithmetic.
+
+This is the TPU/Pallas analogue of the paper's fused Triton kernel: the
+whole of Alg. 2 (quantization scale, shared scales, E2M1 encode, nibble
+packing, E8M0 conversion, both precisions) happens on one VMEM-resident
+tile per grid step. The unfused baseline it is ablated against (Tables 6
+and 7) lives in ``rust/src/mxfp/unfused.rs``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import mxfp
+
+
+def _dual_quant_kernel(x_ref, packed_ref, s4_ref, fp8_ref, s8_ref, sq_ref,
+                       *, is_query):
+    """Pallas body: Algorithm 2 over one [bt, d] row tile."""
+    x = x_ref[...].astype(jnp.float32)
+    d = x.shape[-1]
+
+    # Step 1: pre-fold the base-2 softmax scale into Q.
+    if is_query:
+        x = x * (mxfp.LOG2_E / jnp.sqrt(jnp.float32(d)))
+
+    # Step 2: per-token quantization scale into NVFP4's two-level range.
+    sq = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / (
+        mxfp.E4M3_MAX * mxfp.E2M1_MAX
+    )
+    sq = jnp.maximum(sq, 1e-30)
+    xs = x / sq
+    sq_ref[...] = sq
+
+    # Steps 3-5: NVFP4 branch — per-16 E4M3 scale, E2M1 encode, pack.
+    xb = xs.reshape(xs.shape[0], d // mxfp.NVFP4_BLOCK, mxfp.NVFP4_BLOCK)
+    amax4 = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    s4, s4_code = mxfp.nvfp4_shared_scale(amax4)
+    clamped = jnp.clip(xb / s4, -mxfp.E2M1_MAX, mxfp.E2M1_MAX)
+    codes = mxfp.encode_e2m1(clamped).reshape(xs.shape[0], d)
+    packed_ref[...] = mxfp.pack_fp4(codes)
+    s4_ref[...] = s4_code[..., 0]
+
+    # Steps 6-7: MXFP8 branch — per-32 E8M0 exponent, E4M3 encode.
+    xb8 = xs.reshape(xs.shape[0], d // mxfp.MXFP_BLOCK, mxfp.MXFP_BLOCK)
+    amax8 = jnp.max(jnp.abs(xb8), axis=-1, keepdims=True)
+    s8, s8_code = mxfp.e8m0_shared_scale(amax8, mxfp.E4M3_EMAX)
+    x8 = jnp.clip(xb8 / s8, -mxfp.E4M3_MAX, mxfp.E4M3_MAX)
+    fp8_ref[...] = mxfp.encode_e4m3(x8).reshape(xs.shape[0], d)
+    s8_ref[...] = s8_code[..., 0]
+
+
+def dual_quant(x, is_query, block_rows=128, interpret=True):
+    """Run the fused dual-quantization kernel over ``x``:[L, D].
+
+    Returns ``(packed_fp4, s4_codes, fp8_codes, s8_codes, sq)`` with shapes
+    ``[L, D/2]u8, [L, D/16]u8, [L, D]u8, [L, D/32]u8, [L, 1]f32``.
+    """
+    l, d = x.shape
+    assert d % mxfp.MXFP_BLOCK == 0, f"D={d} must be a multiple of 32"
+    # Largest row tile <= block_rows that divides L (trace-time search).
+    bt = next(t for t in range(min(block_rows, l), 0, -1) if l % t == 0)
+    grid = (l // bt,)
+
+    kernel = functools.partial(_dual_quant_kernel, is_query=is_query)
+    out_shapes = (
+        jax.ShapeDtypeStruct((l, d // 2), jnp.uint8),
+        jax.ShapeDtypeStruct((l, d // mxfp.NVFP4_BLOCK), jnp.uint8),
+        jax.ShapeDtypeStruct((l, d), jnp.uint8),
+        jax.ShapeDtypeStruct((l, d // mxfp.MXFP_BLOCK), jnp.uint8),
+        jax.ShapeDtypeStruct((l, 1), jnp.float32),
+    )
+    in_specs = [pl.BlockSpec((bt, d), lambda i: (i, 0))]
+    out_specs = (
+        pl.BlockSpec((bt, d // 2), lambda i: (i, 0)),
+        pl.BlockSpec((bt, d // mxfp.NVFP4_BLOCK), lambda i: (i, 0)),
+        pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        pl.BlockSpec((bt, d // mxfp.MXFP_BLOCK), lambda i: (i, 0)),
+        pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# Dequantization helpers (consumed by the attention kernel and by tests)
+# ---------------------------------------------------------------------------
+
+def dequant_nvfp4(packed, s4_codes, sq):
+    """Reconstruct the low-precision copy: [L, D] float32."""
+    codes = mxfp.unpack_fp4(packed)
+    vals = mxfp.decode_e2m1(codes)
+    l, d = vals.shape
+    vb = vals.reshape(l, d // mxfp.NVFP4_BLOCK, mxfp.NVFP4_BLOCK)
+    s4 = mxfp.decode_e4m3(s4_codes)[..., None]
+    return (vb * s4).reshape(l, d) * sq
+
+
+def dequant_mxfp8(fp8_codes, s8_codes, sq):
+    """Reconstruct the high-precision copy: [L, D] float32."""
+    vals = mxfp.decode_e4m3(fp8_codes)
+    l, d = vals.shape
+    vb = vals.reshape(l, d // mxfp.MXFP_BLOCK, mxfp.MXFP_BLOCK)
+    s8 = mxfp.pow2i(s8_codes.astype(jnp.float32) - 127.0)[..., None]
+    return (vb * s8).reshape(l, d) * sq

@@ -1,0 +1,188 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is deliberately naive and materializes full matrices; the
+Pallas kernels (tiled, online-softmax, fused quantization) must match these
+outputs. The oracles are also the ground truth for the paper's error
+metrics (Table 2 / 5 / 8 reproductions on the Rust side use the same
+semantics, cross-checked through golden vectors).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import mxfp
+
+
+# ---------------------------------------------------------------------------
+# Exact attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, causal=True):
+    """Exact softmax attention. q:[Lq,D] k,v:[Lk,D] -> [Lq,D]."""
+    d = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        lq, lk = q.shape[0], k.shape[0]
+        # Standard decoder alignment: query i attends keys j <= i + (Lk - Lq).
+        mask = jnp.arange(lk)[None, :] > (jnp.arange(lq)[:, None] + (lk - lq))
+        s = jnp.where(mask, -jnp.inf, s)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v
+
+
+def attention_scores_ref(q, k, causal=True):
+    """Post-softmax attention matrix P (for similarity metrics)."""
+    d = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        lq, lk = q.shape[0], k.shape[0]
+        mask = jnp.arange(lk)[None, :] > (jnp.arange(lq)[:, None] + (lk - lq))
+        s = jnp.where(mask, -jnp.inf, s)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    return p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Dual-quantization reference (Algorithm 2 at value level)
+# ---------------------------------------------------------------------------
+
+def dual_quant_ref(x, is_query):
+    """Reference for the fused dual-MXFP quantization kernel.
+
+    Returns ``(x_low, x_high, sq)`` where
+
+      * ``x_low``  — NVFP4 dequantized copy (E2M1 + E4M3 block-16 scales),
+      * ``x_high`` — MXFP8  dequantized copy (E4M3 + E8M0 block-32 scales),
+      * ``sq``     — the per-token quantization scale [rows, 1],
+
+    all including the softmax pre-scale ``log2(e)/sqrt(D)`` when
+    ``is_query`` (Alg. 2 Step 1). Both copies satisfy
+    ``x_* ~= x * softmax_scale`` up to format error, so the attention
+    kernel may consume them directly with a base-2 softmax.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    d = x.shape[-1]
+    if is_query:
+        x = x * (mxfp.LOG2_E / jnp.sqrt(jnp.float32(d)))
+    # Step 2: per-token scale into NVFP4's two-level representable range.
+    sq = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / (mxfp.E4M3_MAX * mxfp.E2M1_MAX)
+    sq = jnp.maximum(sq, 1e-30)
+    xs = x / sq
+
+    # Steps 3-5: NVFP4 low-precision copy.
+    xb = xs.reshape(*xs.shape[:-1], d // mxfp.NVFP4_BLOCK, mxfp.NVFP4_BLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    s4, _ = mxfp.nvfp4_shared_scale(amax)
+    q4 = mxfp.quantize_e2m1(jnp.clip(xb / s4, -mxfp.E2M1_MAX, mxfp.E2M1_MAX))
+    x_low = (q4 * s4).reshape(x.shape) * sq
+
+    # Steps 6-7: MXFP8 high-precision copy.
+    xb8 = xs.reshape(*xs.shape[:-1], d // mxfp.MXFP_BLOCK, mxfp.MXFP_BLOCK)
+    amax8 = jnp.max(jnp.abs(xb8), axis=-1, keepdims=True)
+    s8, _ = mxfp.e8m0_shared_scale(amax8, mxfp.E4M3_EMAX)
+    q8 = mxfp.quantize_e4m3(jnp.clip(xb8 / s8, -mxfp.E4M3_MAX, mxfp.E4M3_MAX))
+    x_high = (q8 * s8).reshape(x.shape) * sq
+
+    return x_low, x_high, sq
+
+
+# ---------------------------------------------------------------------------
+# DMA attention reference (Algorithm 1 at matrix level)
+# ---------------------------------------------------------------------------
+
+def dma_attention_ref(q, k, v, diag=128, sink=0, causal=True):
+    """Diagonal-tiled mixed-precision attention, computed naively.
+
+    Logit-level mixture: positions within the diagonal window of width
+    ``diag`` (and the first ``sink`` key positions) use the MXFP8
+    high-precision copies of Q/K; everything else uses the NVFP4
+    low-precision copies. Softmax is then exact. This is precisely what
+    Algorithm 1 computes tile-wise with OnlineSoftmax, with tile size 1.
+
+    The Pallas kernel makes the same decision at *tile* granularity; pass
+    ``diag``/``sink`` as multiples of the kernel tile sizes to compare, and
+    use :func:`dma_attention_tiled_ref` for the exact tile-level oracle.
+    """
+    return dma_attention_tiled_ref(q, k, v, diag=diag, sink=sink, causal=causal,
+                                   bm=1, bn=1)
+
+
+def dma_attention_tiled_ref(q, k, v, diag=128, sink=0, causal=True,
+                            bm=64, bn=64):
+    """Tile-level oracle matching the kernel's per-tile precision choice.
+
+    A KV tile (row block i of size ``bm``, col block j of size ``bn``) is
+    high-precision iff it intersects the diagonal band of width ``diag``
+    ending at the causal frontier of query tile i, or the first ``sink``
+    key positions. With ``bm = bn = 1`` this degrades to the token-level
+    mixture of :func:`dma_attention_ref`.
+    """
+    q = jnp.asarray(q, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    lq, d = q.shape
+    lk = k.shape[0]
+
+    ql, qh, _ = dual_quant_ref(q, is_query=True)
+    kl, kh, _ = dual_quant_ref(k, is_query=False)
+
+    # Logits in base-2 domain (softmax scale already folded into Q).
+    s_low = ql @ kl.T
+    s_high = qh @ kh.T
+
+    qi = jnp.arange(lq)[:, None]
+    kj = jnp.arange(lk)[None, :]
+    off = lk - lq  # causal frontier offset for rectangular Q/K
+    ti = qi // bm  # query tile index of each row
+    tj = kj // bn  # key tile index of each column
+    # Frontier position of the *query tile* (its last row), mirroring the
+    # kernel: the high window covers key tiles intersecting
+    # (frontier - diag, frontier].
+    tile_frontier = ti * bm + (bm - 1) + off
+    if diag > 0:
+        win_start = tile_frontier - (diag - 1)
+        hi_diag = (tj * bn + (bn - 1) >= win_start) & (tj * bn <= tile_frontier)
+    else:
+        hi_diag = jnp.zeros(s_low.shape, dtype=bool)
+    hi_sink = (tj * bn) < sink if sink > 0 else jnp.zeros_like(hi_diag)
+    if not causal and diag > 0:
+        # Non-causal: window of total width `diag` centred on the diagonal.
+        centre = qi + off
+        half = diag // 2
+        lo_edge = centre - half
+        hi_edge = centre + half
+        t_lo = (tj * bn + (bn - 1) >= lo_edge) & (tj * bn <= hi_edge)
+        hi_diag = t_lo
+    high = hi_diag | hi_sink
+
+    s = jnp.where(high, s_high, s_low)
+    if causal:
+        s = jnp.where(kj > qi + off, -jnp.inf, s)
+    # Base-2 softmax (the kernel computes exp2; equivalent numerics).
+    p = jnp.exp2(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v
+
+
+def high_fraction(lq, lk, diag, sink, bm, bn, causal=True):
+    """Fraction of the (causally valid) attention area computed in high
+    precision — the "Bithigh%" column of Table 5."""
+    import numpy as np
+
+    qi = np.arange(lq)[:, None]
+    kj = np.arange(lk)[None, :]
+    off = lk - lq
+    ti = qi // bm
+    tj = kj // bn
+    tile_frontier = ti * bm + (bm - 1) + off
+    win_start = tile_frontier - (diag - 1)
+    hi = np.zeros((lq, lk), dtype=bool)
+    if diag > 0:
+        hi |= (tj * bn + (bn - 1) >= win_start) & (tj * bn <= tile_frontier)
+    if sink > 0:
+        hi |= (tj * bn) < sink
+    valid = kj <= qi + off if causal else np.ones_like(hi)
+    hi &= valid
+    return float(hi.sum()) / float(valid.sum())

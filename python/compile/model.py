@@ -1,0 +1,374 @@
+"""Layer 2: a small LLaMA-style decoder in JAX, with pluggable attention.
+
+The attention implementation is selected per call:
+
+  * ``mode="native"`` — exact attention (the paper's SDPA baseline),
+  * ``mode="dma"``    — the Pallas Diagonal-Tiled Mixed-Precision kernel
+                        (quantized Q/K, high-precision diagonal window).
+
+Architecture: RMSNorm -> GQA attention with RoPE -> SwiGLU MLP, tied
+embedding/unembedding. The model is deliberately small (it is trained at
+artifact-build time on the synthetic long-context tasks in ``tasks.py``)
+but uses the exact block structure of the paper's LLaMA-3 targets, so the
+DMA kernel is exercised the same way.
+
+Everything here runs ONLY at build time: ``aot.py`` lowers prefill /
+decode / eval graphs to HLO text that the Rust runtime executes via PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import dma_attention as dak
+from .kernels import ref as kref
+from . import tasks
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = tasks.VOCAB
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_head: int = 32          # must be a multiple of 32 (MXFP block)
+    d_ff: int = 256
+    max_seq: int = 512
+    rope_theta: float = 10000.0
+    # DMA attention tiling (paper default config: 128/128 at bm=bn=64;
+    # scaled to this model's shorter contexts).
+    bm: int = 32
+    bn: int = 32
+    diag: int = 64
+    sink: int = 32
+
+    def as_dict(self):
+        return asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+PARAM_ORDER_NOTE = (
+    "flatten_params() order: embed, then per layer "
+    "[ln1, wq, wk, wv, wo, ln2, w1, w2, w3], then ln_f"
+)
+
+
+def init_params(rng, cfg: ModelConfig):
+    """Initialize a parameter pytree (dict of dicts)."""
+    def dense(key, fan_in, shape):
+        return (jax.random.normal(key, shape, jnp.float32)
+                * (1.0 / np.sqrt(fan_in)))
+
+    keys = jax.random.split(rng, 2 + cfg.n_layers)
+    params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "ln_f": jnp.ones((cfg.d_model,)),
+        "layers": [],
+    }
+    dq = cfg.n_heads * cfg.d_head
+    dkv = cfg.n_kv_heads * cfg.d_head
+    for li in range(cfg.n_layers):
+        k = jax.random.split(keys[2 + li], 7)
+        params["layers"].append({
+            "ln1": jnp.ones((cfg.d_model,)),
+            "wq": dense(k[0], cfg.d_model, (cfg.d_model, dq)),
+            "wk": dense(k[1], cfg.d_model, (cfg.d_model, dkv)),
+            "wv": dense(k[2], cfg.d_model, (cfg.d_model, dkv)),
+            "wo": dense(k[3], dq, (dq, cfg.d_model)),
+            "ln2": jnp.ones((cfg.d_model,)),
+            "w1": dense(k[4], cfg.d_model, (cfg.d_model, cfg.d_ff)),
+            "w2": dense(k[5], cfg.d_ff, (cfg.d_ff, cfg.d_model)),
+            "w3": dense(k[6], cfg.d_model, (cfg.d_model, cfg.d_ff)),
+        })
+    return params
+
+
+def flatten_params(params, cfg: ModelConfig):
+    """Deterministic (name, array) list — the weights.bin layout contract
+    shared with ``rust/src/model/weights.rs``."""
+    out = [("embed", params["embed"])]
+    for li in range(cfg.n_layers):
+        lp = params["layers"][li]
+        for name in ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2", "w3"):
+            out.append((f"layers.{li}.{name}", lp[name]))
+    out.append(("ln_f", params["ln_f"]))
+    return out
+
+
+def unflatten_params(arrays, cfg: ModelConfig):
+    """Inverse of :func:`flatten_params` from a flat list of arrays."""
+    it = iter(arrays)
+    params = {"embed": next(it), "layers": []}
+    for _ in range(cfg.n_layers):
+        lp = {}
+        for name in ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2", "w3"):
+            lp[name] = next(it)
+        params["layers"].append(lp)
+    params["ln_f"] = next(it)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-5):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope_angles(cfg: ModelConfig, positions):
+    """[T] -> cos/sin tables [T, d_head/2]."""
+    half = cfg.d_head // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., T, d_head]; rotate pairs (even, odd)."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x1 * sin + x2 * cos
+    return jnp.stack([out1, out2], axis=-1).reshape(x.shape)
+
+
+def _repeat_kv(x, n_rep):
+    """[H_kv, T, Dh] -> [H_kv * n_rep, T, Dh] (GQA broadcast)."""
+    if n_rep == 1:
+        return x
+    return jnp.repeat(x, n_rep, axis=0)
+
+
+def _attention_heads(q, k, v, cfg: ModelConfig, mode):
+    """q,k,v: [H, T, Dh] -> [H, T, Dh]; causal."""
+    if mode == "native":
+        return jax.vmap(
+            lambda qq, kk, vv: kref.attention_ref(qq, kk, vv, causal=True)
+        )(q, k, v)
+    if mode == "dma":
+        return dak.dma_attention_mha(
+            q, k, v, bm=cfg.bm, bn=cfg.bn, diag=cfg.diag, sink=cfg.sink,
+            causal=True,
+        )
+    raise ValueError(f"unknown attention mode {mode!r}")
+
+
+def block(params, x, cfg: ModelConfig, mode, cos, sin):
+    """One transformer block over [T, d_model]."""
+    t = x.shape[0]
+    h = rmsnorm(x, params["ln1"])
+    q = (h @ params["wq"]).reshape(t, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+    k = (h @ params["wk"]).reshape(t, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    v = (h @ params["wv"]).reshape(t, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    o = _attention_heads(q, _repeat_kv(k, n_rep), _repeat_kv(v, n_rep), cfg, mode)
+    x = x + o.transpose(1, 0, 2).reshape(t, -1) @ params["wo"]
+    h = rmsnorm(x, params["ln2"])
+    x = x + (jax.nn.silu(h @ params["w1"]) * (h @ params["w3"])) @ params["w2"]
+    return x
+
+
+def forward(params, tokens, cfg: ModelConfig, mode="native"):
+    """tokens [T]int32 -> logits [T, vocab]. Single sequence, causal."""
+    t = tokens.shape[0]
+    x = params["embed"][tokens]
+    cos, sin = rope_angles(cfg, jnp.arange(t))
+    for lp in params["layers"]:
+        x = block(lp, x, cfg, mode, cos, sin)
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["embed"].T
+
+
+def forward_batch(params, tokens, cfg: ModelConfig, mode="native"):
+    """tokens [B, T] -> logits [B, T, vocab]."""
+    return jax.vmap(lambda tt: forward(params, tt, cfg, mode))(tokens)
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode with explicit KV cache (the serving interface)
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens, cfg: ModelConfig, mode="native"):
+    """tokens [T] -> (logits [T, vocab], k_cache, v_cache).
+
+    Caches have shape [n_layers, n_kv_heads, T, d_head] and hold the
+    *post-RoPE* keys, so decode never re-rotates history.
+    """
+    t = tokens.shape[0]
+    x = params["embed"][tokens]
+    cos, sin = rope_angles(cfg, jnp.arange(t))
+    kc, vc = [], []
+    for lp in params["layers"]:
+        h = rmsnorm(x, lp["ln1"])
+        q = (h @ lp["wq"]).reshape(t, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+        k = (h @ lp["wk"]).reshape(t, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+        v = (h @ lp["wv"]).reshape(t, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        kc.append(k)
+        vc.append(v)
+        n_rep = cfg.n_heads // cfg.n_kv_heads
+        o = _attention_heads(q, _repeat_kv(k, n_rep), _repeat_kv(v, n_rep),
+                             cfg, mode)
+        x = x + o.transpose(1, 0, 2).reshape(t, -1) @ lp["wo"]
+        hh = rmsnorm(x, lp["ln2"])
+        x = x + (jax.nn.silu(hh @ lp["w1"]) * (hh @ lp["w3"])) @ lp["w2"]
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["embed"].T
+    return logits, jnp.stack(kc), jnp.stack(vc)
+
+
+def decode_step(params, token, k_cache, v_cache, pos, cfg: ModelConfig):
+    """One decode step for a single sequence.
+
+    token   : int32 scalar — the token at position ``pos``.
+    k_cache : [n_layers, n_kv_heads, C, d_head] (post-RoPE keys).
+    pos     : int32 scalar — number of tokens already in the cache.
+
+    Returns (logits [vocab], k_cache', v_cache'). Decode attends over the
+    cache with a validity mask ``arange(C) <= pos``; full precision (the
+    paper's kernel targets the quadratic prefill phase — decode is a
+    bandwidth-bound GEMV where tile-level mixed precision degenerates to
+    the diagonal window anyway).
+    """
+    c = k_cache.shape[2]
+    x = params["embed"][token]
+    cos, sin = rope_angles(cfg, pos[None].astype(jnp.float32))
+    new_k, new_v = [], []
+    for li, lp in enumerate(params["layers"]):
+        h = rmsnorm(x, lp["ln1"])
+        q = (h @ lp["wq"]).reshape(cfg.n_heads, 1, cfg.d_head)
+        k = (h @ lp["wk"]).reshape(cfg.n_kv_heads, 1, cfg.d_head)
+        v = (h @ lp["wv"]).reshape(cfg.n_kv_heads, 1, cfg.d_head)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        kc = jax.lax.dynamic_update_slice(k_cache[li], k, (0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[li], v, (0, pos, 0))
+        new_k.append(kc)
+        new_v.append(vc)
+        n_rep = cfg.n_heads // cfg.n_kv_heads
+        kk = _repeat_kv(kc, n_rep)
+        vv = _repeat_kv(vc, n_rep)
+        s = jnp.einsum("hod,hcd->hoc", q, kk) / np.sqrt(cfg.d_head)
+        valid = (jnp.arange(c) <= pos)[None, None, :]
+        s = jnp.where(valid, s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("hoc,hcd->hod", p, vv).reshape(1, -1)
+        x = x + (o @ lp["wo"])[0]
+        hh = rmsnorm(x, lp["ln2"])
+        x = x + (jax.nn.silu(hh @ lp["w1"]) * (hh @ lp["w3"])) @ lp["w2"]
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["embed"].T, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def decode_step_batch(params, tokens, k_cache, v_cache, pos, cfg: ModelConfig):
+    """Batched decode: tokens [B], caches [n_layers, B, H_kv, C, d_head],
+    pos [B] -> (logits [B, vocab], caches')."""
+    def one(tok, kc, vc, p):
+        return decode_step(params, tok, kc, vc, p, cfg)
+
+    logits, kc, vc = jax.vmap(one, in_axes=(0, 1, 1, 0), out_axes=(0, 1, 1))(
+        tokens, k_cache, v_cache, pos)
+    return logits, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Build-time training (Adam, hand-rolled — optax is not vendored)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, tokens, mask, cfg: ModelConfig):
+    """Masked next-token cross-entropy over a [B, T] batch.
+
+    """
+    logits = forward_batch(params, tokens, cfg, mode="native")
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, :-1]
+    # Global weighted-mask normalization: abundant copy/induction tokens
+    # drive circuit formation while NEEDLE_WEIGHT (see tasks.py) keeps
+    # the sparse needle answers from being drowned out.
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g,
+                               state["v"], grads)
+    tf = t.astype(jnp.float32)
+    def upd(p, mm, vv):
+        mh = mm / (1 - b1 ** tf)
+        vh = vv / (1 - b2 ** tf)
+        return p - lr * mh / (jnp.sqrt(vh) + eps)
+    return (jax.tree_util.tree_map(upd, params, m, v),
+            {"m": m, "v": v, "t": t})
+
+
+def train(cfg: ModelConfig, steps=400, batch=16, length=256, seed=0,
+          lr=3e-3, lr_min=3e-4, warmup=50, log_every=50, verbose=True):
+    """Train the model on the synthetic task mixture; returns params.
+
+    Linear warmup then cosine decay from ``lr`` to ``lr_min``.
+    """
+    rng = np.random.default_rng(seed)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, toks, mask, lr_t):
+        loss, grads = jax.value_and_grad(loss_fn)(params, toks, mask, cfg)
+        params, opt = adam_update(params, grads, opt, lr=lr_t)
+        return params, opt, loss
+
+    def lr_at(step):
+        if step < warmup:
+            return lr * (step + 1) / warmup
+        frac = (step - warmup) / max(1, steps - warmup)
+        return lr_min + 0.5 * (lr - lr_min) * (1 + np.cos(np.pi * frac))
+
+    history = []
+    for step in range(steps):
+        toks, mask = tasks.gen_batch(rng, batch, length)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(toks),
+                                    jnp.asarray(mask),
+                                    jnp.float32(lr_at(step)))
+        history.append(float(loss))
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            print(f"  train step {step:4d}  loss {float(loss):.4f}")
+    return params, history
+
+
+# ---------------------------------------------------------------------------
+# Evaluation (Table 3 proxy)
+# ---------------------------------------------------------------------------
+
+def eval_accuracy(params, cfg: ModelConfig, mode, task, length, n=32, seed=1):
+    """Masked-position greedy accuracy for one task at one length."""
+    rng = np.random.default_rng(seed)
+    toks, mask = tasks.gen_batch(rng, n, length, task=task)
+    logits = forward_batch(params, jnp.asarray(toks), cfg, mode=mode)
+    pred = jnp.argmax(logits[:, :-1], axis=-1)
+    tgt = jnp.asarray(toks)[:, 1:]
+    m = jnp.asarray(mask)[:, :-1]
+    correct = jnp.sum((pred == tgt) * m)
+    return float(correct / jnp.maximum(jnp.sum(m), 1.0))

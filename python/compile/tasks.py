@@ -1,0 +1,137 @@
+"""Synthetic long-context tasks (LongBench proxy).
+
+LongBench itself cannot be used offline, and the paper's accuracy claim
+(Table 3) is *relative* — DMA attention matches native attention on the
+same model. We therefore train a small decoder on synthetic tasks that
+exercise exactly the capability low-bit attention endangers: retrieving
+information far from the diagonal of the attention matrix.
+
+Token conventions (mirrored by ``rust/src/eval``; see model_meta.json):
+
+  0 PAD   1 BOS   2 SEP   3 QRY   4 MRK   5 EOS   6.. payload vocab
+
+Tasks
+-----
+copy       BOS w1..wn SEP w1..wn          — score on the echoed half
+needle     BOS noise.. MRK key val noise.. QRY key -> val
+                                          — score on the answer token
+induction  a repeating random motif       — score on repeats after the
+                                            first occurrence
+
+Each generator returns ``(tokens[L], mask[L])`` where ``mask[t] = 1`` iff
+position ``t``'s *target* (``tokens[t+1]``) is scored.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PAD, BOS, SEP, QRY, MRK, EOS = 0, 1, 2, 3, 4, 5
+PAYLOAD_START = 6
+VOCAB = 64
+
+TASK_NAMES = ("copy", "needle", "induction")
+
+
+def _payload(rng, n):
+    return rng.integers(PAYLOAD_START, VOCAB, size=n)
+
+
+def gen_copy(rng, length, n=None):
+    """BOS w1..wn SEP w1..wn with a RANDOM payload length.
+
+    Randomizing ``n`` is essential: with a fixed n the model can solve
+    the task by position (attend exactly n+1 back) instead of content,
+    which silently fails at other evaluation lengths.
+    """
+    n_max = (length - 2) // 2
+    if n is None:
+        n = int(rng.integers(min(8, n_max), n_max + 1))
+    w = _payload(rng, n)
+    toks = np.full(length, PAD, dtype=np.int32)
+    toks[0] = BOS
+    toks[1 : 1 + n] = w
+    toks[1 + n] = SEP
+    toks[2 + n : 2 + 2 * n] = w
+    mask = np.zeros(length, dtype=np.float32)
+    # Position t is scored if tokens[t+1] is part of the echoed copy.
+    mask[1 + n : 1 + 2 * n] = 1.0
+    return toks, mask
+
+
+def gen_needle(rng, length, n_pairs=2):
+    """Multiple (MRK key val) needles buried in noise; all are queried at
+    the end (``QRY key -> val`` each), giving several supervised
+    positions per example so the task is not gradient-starved next to
+    copy's ~L/2 masked positions."""
+    toks = np.full(length, PAD, dtype=np.int32)
+    toks[0] = BOS
+    noise = _payload(rng, length)
+    toks[1:] = noise[1:]
+    # Distinct keys, sampled without replacement.
+    keys = rng.choice(np.arange(PAYLOAD_START, VOCAB), size=n_pairs,
+                      replace=False)
+    vals = _payload(rng, n_pairs)
+    tail = 3 * n_pairs  # QRY key val per pair
+    # Needles sit in the first half — far from the final queries.
+    positions = sorted(
+        rng.choice(np.arange(2, max(3, length // 2), 3), size=n_pairs,
+                   replace=False)
+    )
+    for p_, key, val in zip(positions, keys, vals):
+        toks[p_] = MRK
+        toks[p_ + 1] = key
+        toks[p_ + 2] = val
+    # Keys must not occur elsewhere by accident.
+    protect = {p_ + 1 for p_ in positions}
+    for key in keys:
+        clash = toks == key
+        for pp in protect:
+            clash[pp] = False
+        clash[length - tail:] = False
+        toks[clash] = PAYLOAD_START + (int(key) - PAYLOAD_START + 1) % (
+            VOCAB - PAYLOAD_START)
+    mask = np.zeros(length, dtype=np.float32)
+    base = length - tail
+    for i, (key, val) in enumerate(zip(keys, vals)):
+        toks[base + 3 * i] = QRY
+        toks[base + 3 * i + 1] = key
+        toks[base + 3 * i + 2] = val
+        mask[base + 3 * i + 1] = NEEDLE_WEIGHT  # target: the answer val
+    return toks, mask
+
+
+def gen_induction(rng, length):
+    period = int(rng.integers(4, 9))
+    motif = _payload(rng, period)
+    reps = -(-length // period)
+    toks = np.tile(motif, reps)[:length].astype(np.int32)
+    toks[0] = BOS
+    mask = np.zeros(length, dtype=np.float32)
+    mask[period : length - 1] = 1.0  # everything after the first motif
+    return toks, mask
+
+
+GENERATORS = {"copy": gen_copy, "needle": gen_needle, "induction": gen_induction}
+
+
+# Sampling weights for the training mixture: needle is the hardest
+# retrieval task (and the one low-bit attention endangers most), so it
+# gets extra weight.
+TASK_WEIGHTS = {"copy": 1, "needle": 2, "induction": 1}
+
+# Loss weight on needle answer positions: a needle example supervises
+# only ~2 positions vs ~L/2 for copy; this rebalances the gradient
+# under global mask normalization.
+NEEDLE_WEIGHT = 10.0
+
+
+def gen_batch(rng, batch, length, task=None):
+    """Batch of (tokens[B,L], mask[B,L]); mixed tasks when ``task=None``."""
+    toks = np.zeros((batch, length), dtype=np.int32)
+    mask = np.zeros((batch, length), dtype=np.float32)
+    pool = [n for n, w in TASK_WEIGHTS.items() for _ in range(w)]
+    for b in range(batch):
+        name = task or pool[int(rng.integers(0, len(pool)))]
+        toks[b], mask[b] = GENERATORS[name](rng, length)
+    return toks, mask

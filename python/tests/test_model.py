@@ -1,0 +1,201 @@
+"""Model (L2) tests: shapes, prefill/decode consistency, task generators."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import tasks
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return M.ModelConfig()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _toks(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, tasks.VOCAB, size=n), jnp.int32)
+
+
+class TestForward:
+    def test_logits_shape(self, cfg, params):
+        lg = M.forward(params, _toks(64), cfg)
+        assert lg.shape == (64, cfg.vocab)
+
+    def test_batch_matches_single(self, cfg, params):
+        t = _toks(32)
+        lg1 = M.forward(params, t, cfg)
+        lg2 = M.forward_batch(params, t[None, :], cfg)
+        np.testing.assert_allclose(np.array(lg1), np.array(lg2[0]),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_causality(self, cfg, params):
+        """Changing a future token must not affect earlier logits."""
+        t = np.array(_toks(48))
+        lg1 = M.forward(params, jnp.asarray(t), cfg)
+        t2 = t.copy()
+        t2[40] = (t2[40] + 1) % tasks.VOCAB
+        lg2 = M.forward(params, jnp.asarray(t2), cfg)
+        np.testing.assert_allclose(np.array(lg1[:40]), np.array(lg2[:40]),
+                                   rtol=1e-5, atol=1e-6)
+        assert not np.allclose(np.array(lg1[40:]), np.array(lg2[40:]))
+
+    def test_dma_mode_close_to_native(self, cfg, params):
+        t = _toks(64, seed=5)
+        lg_n = M.forward(params, t, cfg, mode="native")
+        lg_d = M.forward(params, t, cfg, mode="dma")
+        # Same argmax for the overwhelming majority of positions.
+        agree = float(np.mean(np.array(jnp.argmax(lg_n, -1))
+                              == np.array(jnp.argmax(lg_d, -1))))
+        assert agree > 0.9, agree
+
+
+class TestPrefillDecode:
+    def test_prefill_matches_forward(self, cfg, params):
+        t = _toks(64, seed=1)
+        lg_f = M.forward(params, t, cfg)
+        lg_p, kc, vc = M.prefill(params, t, cfg)
+        np.testing.assert_allclose(np.array(lg_f), np.array(lg_p),
+                                   rtol=1e-5, atol=1e-6)
+        assert kc.shape == (cfg.n_layers, cfg.n_kv_heads, 64, cfg.d_head)
+
+    def test_decode_continues_prefill(self, cfg, params):
+        t = np.array(_toks(63, seed=2))
+        full = np.append(t, 7).astype(np.int32)
+        lg_full = M.forward(params, jnp.asarray(full), cfg)
+        _, kc, vc = M.prefill(params, jnp.asarray(t), cfg)
+        c = 96
+        kc = jnp.pad(kc, ((0, 0), (0, 0), (0, c - 63), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, 0), (0, c - 63), (0, 0)))
+        lg_d, _, _ = M.decode_step(params, jnp.int32(7), kc, vc,
+                                   jnp.int32(63), cfg)
+        np.testing.assert_allclose(np.array(lg_d), np.array(lg_full[-1]),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_multi_step_decode(self, cfg, params):
+        t = np.array(_toks(32, seed=3))
+        _, kc, vc = M.prefill(params, jnp.asarray(t), cfg)
+        c = 48
+        kc = jnp.pad(kc, ((0, 0), (0, 0), (0, c - 32), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, 0), (0, c - 32), (0, 0)))
+        seq = list(t)
+        for step in range(4):
+            nxt = jnp.int32((7 + step) % tasks.VOCAB)
+            lg, kc, vc = M.decode_step(params, nxt, kc, vc,
+                                       jnp.int32(32 + step), cfg)
+            seq.append(int(nxt))
+        lg_full = M.forward(params, jnp.asarray(np.array(seq, np.int32)), cfg)
+        np.testing.assert_allclose(np.array(lg), np.array(lg_full[-1]),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_batched_decode_matches_single(self, cfg, params):
+        t = np.array(_toks(16, seed=4))
+        _, kc, vc = M.prefill(params, jnp.asarray(t), cfg)
+        c = 32
+        kc1 = jnp.pad(kc, ((0, 0), (0, 0), (0, c - 16), (0, 0)))
+        vc1 = jnp.pad(vc, ((0, 0), (0, 0), (0, c - 16), (0, 0)))
+        lg1, _, _ = M.decode_step(params, jnp.int32(9), kc1, vc1,
+                                  jnp.int32(16), cfg)
+        kb = jnp.stack([kc1, kc1], axis=1)
+        vb = jnp.stack([vc1, vc1], axis=1)
+        lgb, _, _ = M.decode_step_batch(
+            params, jnp.array([9, 9], jnp.int32), kb, vb,
+            jnp.array([16, 16], jnp.int32), cfg)
+        np.testing.assert_allclose(np.array(lgb[0]), np.array(lg1),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.array(lgb[1]), np.array(lg1),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestParams:
+    def test_flatten_round_trip(self, cfg, params):
+        flat = M.flatten_params(params, cfg)
+        rebuilt = M.unflatten_params([a for _, a in flat], cfg)
+        lg1 = M.forward(params, _toks(16), cfg)
+        lg2 = M.forward(rebuilt, _toks(16), cfg)
+        np.testing.assert_array_equal(np.array(lg1), np.array(lg2))
+
+    def test_flatten_names_stable(self, cfg, params):
+        names = [n for n, _ in M.flatten_params(params, cfg)]
+        assert names[0] == "embed" and names[-1] == "ln_f"
+        assert names[1] == "layers.0.ln1" and "layers.1.wq" in names
+
+
+class TestTraining:
+    def test_loss_decreases(self, cfg):
+        params, hist = M.train(cfg, steps=30, batch=8, length=96,
+                               verbose=False, seed=7)
+        first = np.mean(hist[:5])
+        last = np.mean(hist[-5:])
+        assert last < first, (first, last)
+
+    def test_adam_shapes(self, cfg, params):
+        opt = M.adam_init(params)
+        grads = jax.tree_util.tree_map(jnp.ones_like, params)
+        p2, opt2 = M.adam_update(params, grads, opt)
+        assert int(opt2["t"]) == 1
+        chex_leaves = jax.tree_util.tree_leaves(p2)
+        assert all(np.all(np.isfinite(np.array(l))) for l in chex_leaves)
+
+
+class TestTasks:
+    @pytest.mark.parametrize("name", tasks.TASK_NAMES)
+    def test_generator_shapes(self, name):
+        rng = np.random.default_rng(0)
+        toks, mask = tasks.GENERATORS[name](rng, 128)
+        assert toks.shape == (128,) and mask.shape == (128,)
+        assert toks.min() >= 0 and toks.max() < tasks.VOCAB
+        assert mask.sum() > 0
+
+    def test_copy_is_copy(self):
+        rng = np.random.default_rng(1)
+        toks, mask = tasks.gen_copy(rng, 130)
+        # Payload length is randomized; recover it from the SEP position.
+        n = int(np.argmax(toks == tasks.SEP)) - 1
+        assert 8 <= n <= 64
+        np.testing.assert_array_equal(toks[1:1 + n], toks[2 + n:2 + 2 * n])
+        # Fixed-n variant still supported (and exactly fills the seq).
+        toks2, _ = tasks.gen_copy(rng, 130, n=64)
+        np.testing.assert_array_equal(toks2[1:65], toks2[66:130])
+
+    def test_needle_answer_is_val(self):
+        rng = np.random.default_rng(2)
+        toks, mask = tasks.gen_needle(rng, 128, n_pairs=2)
+        # Each queried key must restate the val that followed its needle.
+        mrk_positions = np.flatnonzero(toks == tasks.MRK)
+        assert len(mrk_positions) == 2
+        kv = {int(toks[p + 1]): int(toks[p + 2]) for p in mrk_positions}
+        qry_positions = np.flatnonzero(toks == tasks.QRY)
+        assert len(qry_positions) == 2
+        for qp in qry_positions:
+            key, val = int(toks[qp + 1]), int(toks[qp + 2])
+            assert kv[key] == val
+            # Key occurs exactly twice: at its needle and at its query.
+            assert (toks == key).sum() == 2
+        # Masked positions are exactly the key positions in the queries,
+        # carrying the needle loss weight.
+        assert (mask > 0).sum() == 2
+        for qp in qry_positions:
+            assert mask[qp + 1] == tasks.NEEDLE_WEIGHT
+
+    def test_induction_periodicity(self):
+        rng = np.random.default_rng(3)
+        toks, _ = tasks.gen_induction(rng, 64)
+        # Self-consistent with some period p (position 0 is BOS).
+        ok = any(
+            all(toks[i] == toks[i - p] for i in range(p + 1, 64))
+            for p in range(4, 9)
+        )
+        assert ok
+
+    def test_batch_mixes_tasks(self):
+        rng = np.random.default_rng(4)
+        toks, mask = tasks.gen_batch(rng, 16, 96)
+        assert toks.shape == (16, 96) and mask.shape == (16, 96)

@@ -1,0 +1,239 @@
+"""Unit + property tests for the MXFP format primitives."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mxfp
+
+E2M1_VALUES = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+
+
+def arr(xs):
+    return jnp.asarray(np.array(xs, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# E2M1 (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+class TestE2M1:
+    def test_representables_round_trip(self):
+        vals = E2M1_VALUES + [-v for v in E2M1_VALUES]
+        out = mxfp.decode_e2m1(mxfp.encode_e2m1(arr(vals)))
+        np.testing.assert_array_equal(np.array(out), np.array(vals, np.float32))
+
+    def test_codes_are_4bit(self):
+        x = arr(np.linspace(-6, 6, 1001))
+        codes = np.array(mxfp.encode_e2m1(x))
+        assert codes.max() <= 0x0F
+
+    def test_exponent_thresholds(self):
+        # Step 4.2: E = sum of indicators at {1, 2, 4}.
+        x = arr([0.3, 0.9, 1.0, 1.9, 2.0, 3.9, 4.0, 6.0])
+        e = (np.array(mxfp.encode_e2m1(x)) >> 1) & 3
+        np.testing.assert_array_equal(e, [0, 0, 1, 1, 2, 2, 3, 3])
+
+    def test_ties_round_to_even_mantissa(self):
+        # Paper's example: input 5 must round to 4 (M=0), not 6.
+        out = mxfp.decode_e2m1(mxfp.encode_e2m1(arr([5.0, -5.0])))
+        np.testing.assert_array_equal(np.array(out), [4.0, -4.0])
+
+    def test_midpoints(self):
+        # Strict '>' at midpoints 1.25*2^(E-1): 2.5 -> 2, 2.51 -> 3.
+        out = np.array(mxfp.decode_e2m1(mxfp.encode_e2m1(
+            arr([2.5, 2.51, 1.25, 1.26, 0.25, 0.26]))))
+        np.testing.assert_array_equal(out, [2.0, 3.0, 1.0, 1.5, 0.0, 0.5])
+
+    def test_sign_bit(self):
+        codes = np.array(mxfp.encode_e2m1(arr([-1.0, 1.0])))
+        assert codes[0] >> 3 == 1 and codes[1] >> 3 == 0
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.floats(min_value=-6.0, max_value=6.0, allow_nan=False))
+    def test_quantize_within_half_step(self, v):
+        """Quantized value is one of the two E2M1 neighbours of v."""
+        q = float(mxfp.quantize_e2m1(arr([v]))[0])
+        grid = sorted(E2M1_VALUES + [-g for g in E2M1_VALUES])
+        lo = max([g for g in grid if g <= v], default=-6.0)
+        hi = min([g for g in grid if g >= v], default=6.0)
+        assert q in (lo, hi), (v, q, lo, hi)
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.lists(st.floats(-6, 6, allow_nan=False), min_size=1, max_size=64))
+    def test_decode_encode_idempotent(self, vs):
+        q1 = mxfp.quantize_e2m1(arr(vs))
+        q2 = mxfp.quantize_e2m1(q1)
+        np.testing.assert_array_equal(np.array(q1), np.array(q2))
+
+
+# ---------------------------------------------------------------------------
+# FP4 packing (Step 5)
+# ---------------------------------------------------------------------------
+
+class TestPacking:
+    def test_pack_unpack_round_trip(self):
+        codes = jnp.asarray(np.arange(64, dtype=np.uint8) % 16).reshape(4, 16)
+        rt = mxfp.unpack_fp4(mxfp.pack_fp4(codes))
+        np.testing.assert_array_equal(np.array(rt), np.array(codes))
+
+    def test_high_index_in_high_nibble(self):
+        codes = jnp.asarray(np.array([[0x3, 0xA]], np.uint8))
+        packed = np.array(mxfp.pack_fp4(codes))
+        assert packed[0, 0] == (0xA << 4) | 0x3
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(1, 16))
+    def test_pack_shapes(self, half):
+        codes = jnp.asarray(
+            np.random.default_rng(0).integers(0, 16, (3, 2 * half)), jnp.uint8)
+        packed = mxfp.pack_fp4(codes)
+        assert packed.shape == (3, half)
+
+
+# ---------------------------------------------------------------------------
+# E4M3 / E5M2
+# ---------------------------------------------------------------------------
+
+class TestFP8:
+    def test_e4m3_max_normal(self):
+        out = np.array(mxfp.quantize_e4m3(arr([448.0, 1000.0, -1000.0])))
+        np.testing.assert_array_equal(out, [448.0, 448.0, -448.0])
+
+    def test_e4m3_code_round_trip_exhaustive(self):
+        """All 256 codes except NaN patterns decode->encode stably."""
+        codes = np.arange(256, dtype=np.uint8)
+        # Exclude NaN patterns S.1111.111.
+        codes = codes[(codes & 0x7F) != 0x7F]
+        vals = mxfp.decode_e4m3(jnp.asarray(codes))
+        rt = mxfp.decode_e4m3(mxfp.encode_e4m3(vals))
+        np.testing.assert_array_equal(np.array(rt), np.array(vals))
+
+    def test_e5m2_code_round_trip(self):
+        codes = np.arange(256, dtype=np.uint8)
+        e = (codes >> 2) & 0x1F
+        codes = codes[e != 0x1F]  # exclude inf/NaN exponent
+        vals = mxfp.decode_e5m2(jnp.asarray(codes))
+        rt = mxfp.decode_e5m2(mxfp.encode_e5m2(vals))
+        np.testing.assert_array_equal(np.array(rt), np.array(vals))
+
+    def test_e4m3_subnormals(self):
+        step = 2.0 ** -9
+        out = np.array(mxfp.quantize_e4m3(arr([step, 3 * step, 0.0])))
+        np.testing.assert_allclose(out, [step, 3 * step, 0.0])
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.floats(min_value=-448, max_value=448, allow_nan=False))
+    def test_e4m3_relative_error_bound(self, v):
+        q = float(mxfp.quantize_e4m3(arr([v]))[0])
+        if abs(v) >= 2.0 ** -6:  # normal range: rel err <= 2^-4
+            assert abs(q - v) <= abs(v) * 2.0 ** -4 + 1e-12
+        else:  # subnormal: abs err <= half step
+            assert abs(q - v) <= 2.0 ** -10 + 1e-12
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.floats(min_value=-5e4, max_value=5e4, allow_nan=False))
+    def test_e5m2_monotone(self, v):
+        q1 = float(mxfp.quantize_e5m2(arr([v]))[0])
+        q2 = float(mxfp.quantize_e5m2(arr([v + abs(v) * 0.1 + 0.1]))[0])
+        assert q2 >= q1
+
+
+# ---------------------------------------------------------------------------
+# Shared scales (Steps 3 / 6 / 7)
+# ---------------------------------------------------------------------------
+
+class TestScales:
+    def test_e8m0_code_range(self):
+        amax = arr([1e-38, 1.0, 1e30])
+        _, code = mxfp.e8m0_shared_scale(amax, mxfp.E4M3_EMAX)
+        c = np.array(code)
+        assert c.min() >= 0 and c.max() <= 254
+
+    def test_e8m0_power_of_two(self):
+        scale, code = mxfp.e8m0_shared_scale(arr([448.0]), mxfp.E4M3_EMAX)
+        # amax 448 -> floor(log2) = 8, minus emax 8 -> 2^0.
+        assert float(scale[0]) == 1.0
+        assert int(code[0]) == 127
+
+    def test_e8m0_scale_matches_code(self):
+        for a in (0.001, 0.5, 3.0, 100.0, 7e4):
+            scale, code = mxfp.e8m0_shared_scale(arr([a]), mxfp.E2M1_EMAX)
+            assert float(scale[0]) == 2.0 ** (int(code[0]) - 127)
+
+    def test_nvfp4_scale_is_e4m3_value(self):
+        amax = arr([3.7, 0.02, 500.0])
+        s, code = mxfp.nvfp4_shared_scale(amax)
+        dec = mxfp.decode_e4m3(code)
+        np.testing.assert_array_equal(np.array(s), np.array(dec))
+
+    def test_nvfp4_scale_never_zero(self):
+        s, _ = mxfp.nvfp4_shared_scale(arr([0.0]))
+        assert float(s[0]) > 0
+
+
+# ---------------------------------------------------------------------------
+# Block fake-quantization (format zoo)
+# ---------------------------------------------------------------------------
+
+class TestBlockQuant:
+    @pytest.mark.parametrize("fn", [
+        mxfp.fake_quant_mxfp4,
+        mxfp.fake_quant_mxfp8,
+        mxfp.fake_quant_nvfp4,
+    ])
+    def test_shape_preserved(self, fn):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 64)), jnp.float32)
+        assert fn(x).shape == x.shape
+
+    def test_error_ordering_matches_table2(self):
+        """MXFP4 error >> NVFP4 error >= MXFP8 error (paper Table 2).
+
+        The gap shows on channel-structured activations (paper Sec. 4 /
+        Fig. 1): a few channels carry much larger magnitudes, which a
+        coarse power-of-two 32-block scale handles far worse than
+        NVFP4's finer 16-block E4M3 scale.
+        """
+        rng = np.random.default_rng(7)
+        chan = 1.0 + 0.5 * np.sin(np.arange(128) * 0.37)
+        out_idx = rng.permutation(128)[:8]
+        chan[out_idx] *= 8.0
+        x = jnp.asarray((rng.normal(size=(64, 128)) * chan).astype(np.float32))
+        def rel(y):
+            return float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x))
+        e4 = rel(mxfp.fake_quant_mxfp4(x))
+        env = rel(mxfp.fake_quant_nvfp4(x))
+        e8 = rel(mxfp.fake_quant_mxfp8(x))
+        assert e4 > 1.15 * env, (e4, env)
+        assert env > 2 * e8, (env, e8)
+
+    def test_mxfp8_high_fidelity(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(32, 64)).astype(np.float32))
+        q = mxfp.fake_quant_mxfp8(x)
+        cos = float(jnp.sum(q * x) / (jnp.linalg.norm(q) * jnp.linalg.norm(x)))
+        assert cos > 0.998
+
+    def test_tokenwise_improves_outlier_rows(self):
+        rng = np.random.default_rng(5)
+        x = rng.normal(size=(32, 64)).astype(np.float32)
+        x[7] *= 100.0  # one outlier token
+        x = jnp.asarray(x)
+        base = mxfp.fake_quant_nvfp4(x, tokenwise=False)
+        tok = mxfp.fake_quant_nvfp4(x, tokenwise=True)
+        err_b = float(jnp.linalg.norm(base[3] - x[3]))
+        err_t = float(jnp.linalg.norm(tok[3] - x[3]))
+        assert err_t <= err_b * 1.5  # non-outlier rows not hurt
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 8), st.sampled_from([32, 64, 128]))
+    def test_idempotent_all_formats(self, rows, d):
+        rng = np.random.default_rng(rows * d)
+        x = jnp.asarray(rng.normal(size=(rows, d)).astype(np.float32))
+        for fn in (mxfp.fake_quant_mxfp4, mxfp.fake_quant_mxfp8,
+                   mxfp.fake_quant_nvfp4):
+            q = fn(x)
+            q2 = fn(q)
+            np.testing.assert_allclose(np.array(q), np.array(q2),
+                                       rtol=0, atol=1e-6)

@@ -1,0 +1,97 @@
+//! Figure 1 — Visualization data: per-element quantization error of
+//! MXFP4 vs NVFP4 for query, key, and the attention-score matrix.
+//!
+//! The paper's observation: the error is channel-structured in Q/K
+//! (vertical stripes) and concentrates off-diagonal in S. This bench
+//! emits the heatmap grids as CSV for plotting and prints per-channel
+//! summary statistics demonstrating the stripe structure.
+//!
+//! Regenerate: `cargo bench --bench fig1_error_heatmap`
+//! Output: bench_out/fig1_{q,k,s}_{mxfp4,nvfp4}.csv + stdout summary
+
+use dma::attention::dma::quantized_scores;
+use dma::attention::reference;
+use dma::metrics;
+use dma::mxfp::block::{fake_quant, Format};
+use dma::tensor::Tensor;
+use dma::util::benchkit::Table;
+use dma::util::rng::{channelwise_qk, Rng};
+
+fn write_grid(name: &str, rows: usize, cols: usize, data: &[f32]) {
+    let dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(dir).unwrap();
+    let mut out = String::new();
+    for r in 0..rows {
+        let row: Vec<String> = (0..cols)
+            .map(|c| format!("{:.5}", data[r * cols + c]))
+            .collect();
+        out += &row.join(",");
+        out.push('\n');
+    }
+    let path = dir.join(format!("{name}.csv"));
+    std::fs::write(&path, out).unwrap();
+    println!("wrote {}", path.display());
+}
+
+fn abs_err(a: &[f32], b: &[f32]) -> Vec<f32> {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).collect()
+}
+
+/// Ratio of the top-4 channel mean error to the median channel error —
+/// the "stripiness" of the error pattern.
+fn channel_concentration(err: &[f32], rows: usize, cols: usize) -> f64 {
+    let mut per_chan = vec![0f64; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            per_chan[c] += err[r * cols + c] as f64;
+        }
+    }
+    let mut sorted = per_chan.clone();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let top = sorted[..4].iter().sum::<f64>() / 4.0;
+    let median = sorted[cols / 2];
+    top / median.max(1e-12)
+}
+
+fn main() {
+    let (l, d) = (256usize, 64usize);
+    let mut rng = Rng::new(11);
+    let q = Tensor::new(vec![l, d], channelwise_qk(&mut rng, l, d, 6, 8.0));
+    let k = Tensor::new(vec![l, d], channelwise_qk(&mut rng, l, d, 6, 8.0));
+
+    let mut table = Table::new(&["Tensor", "Format", "RMSE", "ChanConc"]);
+    for (fmt, tag) in [(Format::Mxfp4, "mxfp4"), (Format::Nvfp4, "nvfp4")] {
+        for (t, name) in [(&q, "q"), (&k, "k")] {
+            let fq = fake_quant(&t.data, l, d, fmt);
+            let err = abs_err(&t.data, &fq);
+            write_grid(&format!("fig1_{name}_{tag}"), l, d, &err);
+            table.row(&[
+                name.to_uppercase(),
+                fmt.name().to_string(),
+                format!("{:.4}", metrics::rmse(&t.data, &fq)),
+                format!("{:.1}", channel_concentration(&err, l, d)),
+            ]);
+        }
+        // Attention-score error.
+        let p_ref = reference::attention_scores(&q, &k, true);
+        let p_q = quantized_scores(&q, &k, fmt, false, true);
+        let err = abs_err(&p_ref.data, &p_q.data);
+        write_grid(&format!("fig1_s_{tag}"), l, l, &err);
+        table.row(&[
+            "S".into(),
+            fmt.name().to_string(),
+            format!("{:.5}", metrics::rmse(&p_ref.data, &p_q.data)),
+            "-".into(),
+        ]);
+    }
+
+    println!("\nFigure 1 — quantization error structure (L={l}, D={d})");
+    table.print();
+    table.write_csv("fig1_summary").unwrap();
+
+    // Shape: MXFP4 error must exceed NVFP4 error on Q.
+    let e4 = metrics::rmse(&q.data, &fake_quant(&q.data, l, d, Format::Mxfp4));
+    let en = metrics::rmse(&q.data, &fake_quant(&q.data, l, d, Format::Nvfp4));
+    assert!(e4 > en, "MXFP4 {e4} should exceed NVFP4 {en}");
+    println!("shape check OK: MXFP4 error > NVFP4 error, channel-structured");
+}

@@ -1,0 +1,59 @@
+//! Table 2 — Quantization error of attention scores per data format.
+//!
+//! Paper row order: MXFP8, MXFP4, NVFP4, NVFP4+ (tokenwise), Ours.
+//! Shape to reproduce: MXFP4 collapses (cos 0.714 in the paper), NVFP4
+//! is stable, Ours matches MXFP8. Inputs are channel-structured Q/K
+//! (paper Sec. 4): a few feature dimensions carry larger magnitudes.
+//!
+//! Regenerate: `cargo bench --bench table2_quant_error`
+//! Output: stdout table + bench_out/table2.csv
+
+use dma::attention::dma::{dma_scores, quantized_scores};
+use dma::attention::{reference, TileConfig};
+use dma::metrics;
+use dma::mxfp::block::{Format, Granularity};
+use dma::tensor::Tensor;
+use dma::util::benchkit::Table;
+use dma::util::rng::{channelwise_qk, Rng};
+
+fn main() {
+    let (l, d) = (512usize, 64usize);
+    let mut rng = Rng::new(2024);
+    let q = Tensor::new(vec![l, d], channelwise_qk(&mut rng, l, d, 6, 8.0));
+    let k = Tensor::new(vec![l, d], channelwise_qk(&mut rng, l, d, 6, 8.0));
+    let p_ref = reference::attention_scores(&q, &k, true);
+
+    let mut table = Table::new(&["Format", "Cos Sim", "PSNR", "L1", "RMSE"]);
+    let mut row = |name: &str, p: &Tensor| {
+        let s = metrics::similarity(&p_ref.data, &p.data);
+        table.row(&[
+            name.to_string(),
+            format!("{:.3}", s.cos_sim),
+            format!("{:.2}", s.psnr),
+            format!("{:.3}", s.rel_l1),
+            format!("{:.4}", s.rmse),
+        ]);
+        s
+    };
+
+    let s8 = row("MXFP8", &quantized_scores(&q, &k, Format::Mxfp8E4m3, false, true));
+    let s4 = row("MXFP4", &quantized_scores(&q, &k, Format::Mxfp4, false, true));
+    let sn = row("NVFP4", &quantized_scores(&q, &k, Format::Nvfp4, false, true));
+    row("NVFP4+", &quantized_scores(&q, &k, Format::Nvfp4, true, true));
+    let cfg = TileConfig { bm: 64, bn: 64, diag: 128, sink: 128, causal: true };
+    let so = row("Ours", &dma_scores(&q, &k, &cfg, Granularity::PerToken));
+
+    println!("\nTable 2 — attention-score quantization error (L={l}, D={d})");
+    table.print();
+    match table.write_csv("table2") {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("csv: {e}"),
+    }
+
+    // Shape assertions (who wins): MXFP4 clearly worst; Ours ~ MXFP8.
+    assert!(s4.cos_sim < sn.cos_sim, "MXFP4 should be worst");
+    assert!(s4.cos_sim < s8.cos_sim);
+    assert!(so.cos_sim > sn.cos_sim - 0.02, "Ours must be competitive");
+    assert!((so.cos_sim - s8.cos_sim).abs() < 0.05, "Ours ~ MXFP8");
+    println!("shape check OK: MXFP4 < NVFP4 <= Ours ~ MXFP8");
+}

@@ -1,0 +1,83 @@
+//! Table 5 — Similarity metrics under different diagonal/sink windows.
+//!
+//! Columns: Diag, Sink, Bithigh%, Cos Sim, Rel. L1, RMSE, PSNR.
+//! Paper rows: all-low (0%), all-high (100%), 0/128, 128/0, 128/128,
+//! 512/512, 2048/2048. Bithigh% uses the paper's full-matrix
+//! normalization at the paper's effective sequence length (~11.1k);
+//! similarity metrics are computed at L=2048 on channel-structured data.
+//!
+//! Regenerate: `cargo bench --bench table5_tile_similarity`
+//! Output: stdout table + bench_out/table5.csv
+
+use dma::attention::dma::{dma_scores, quantized_scores};
+use dma::attention::{reference, TileConfig};
+use dma::metrics;
+use dma::mxfp::block::{Format, Granularity};
+use dma::tensor::Tensor;
+use dma::util::benchkit::Table;
+use dma::util::rng::{channelwise_qk, Rng};
+
+fn main() {
+    let (l, d) = (2048usize, 64usize);
+    let l_paper = 11136usize; // Bithigh% normalization length (DESIGN.md)
+    let mut rng = Rng::new(5);
+    let q = Tensor::new(vec![l, d], channelwise_qk(&mut rng, l, d, 6, 8.0));
+    let k = Tensor::new(vec![l, d], channelwise_qk(&mut rng, l, d, 6, 8.0));
+    let p_ref = reference::attention_scores(&q, &k, true);
+
+    let mut table = Table::new(&[
+        "Diag", "Sink", "Bithigh (%)", "Cos Sim", "Rel. L1", "RMSE", "PSNR",
+    ]);
+    let mut results = Vec::new();
+    let mut push = |diag: &str, sink: &str, hi_pct: f64, p: &Tensor,
+                    table: &mut Table| {
+        let s = metrics::similarity(&p_ref.data, &p.data);
+        table.row(&[
+            diag.into(),
+            sink.into(),
+            format!("{:.2}", hi_pct),
+            format!("{:.3}", s.cos_sim),
+            format!("{:.3}", s.rel_l1),
+            format!("{:.4}", s.rmse),
+            format!("{:.3}", s.psnr),
+        ]);
+        s
+    };
+
+    // All-low (0%) and all-high (100%) reference rows.
+    let p_low = quantized_scores(&q, &k, Format::Nvfp4, true, true);
+    results.push(("low", push("-", "-", 0.0, &p_low, &mut table)));
+    let p_high = quantized_scores(&q, &k, Format::Mxfp8E4m3, false, true);
+    results.push(("high", push("-", "-", 100.0, &p_high, &mut table)));
+
+    for (diag, sink) in [(0usize, 128usize), (128, 0), (128, 128), (512, 512), (2048, 2048)] {
+        let cfg = TileConfig { bm: 64, bn: 64, diag, sink, causal: true };
+        let hi = cfg.high_fraction_full(l_paper, l_paper) * 100.0;
+        let p = dma_scores(&q, &k, &cfg, Granularity::PerToken);
+        let s = push(&diag.to_string(), &sink.to_string(), hi, &p, &mut table);
+        results.push(("cfg", s));
+    }
+
+    println!("\nTable 5 — similarity vs diagonal/sink windows (L={l}, D={d})");
+    table.print();
+    table.write_csv("table5").unwrap();
+
+    // Shape (paper rows in the same order): 0/128 and 128/0 each beat
+    // all-low slightly; 128/128 beats both; windows improve
+    // monotonically toward the all-high ceiling, which 2048/2048
+    // reaches. (In the paper the curve saturates almost immediately
+    // because its all-high ceiling is itself ~0.82; on this data the
+    // ceiling is higher, so the approach is more gradual.)
+    let low = results[0].1.cos_sim;
+    let high = results[1].1.cos_sim;
+    let c0_128 = results[2].1.cos_sim;
+    let c128_0 = results[3].1.cos_sim;
+    let c128 = results[4].1.cos_sim;
+    let c512 = results[5].1.cos_sim;
+    let c2048 = results[6].1.cos_sim;
+    assert!(c0_128 > low && c128_0 > low, "single windows must beat all-low");
+    assert!(c128 > c0_128 && c128 > c128_0, "128/128 must beat single windows");
+    assert!(c512 >= c128 && c2048 >= c512 - 1e-3, "monotone");
+    assert!(c2048 > high - 0.01, "2048/2048 {c2048} must reach all-high {high}");
+    println!("shape check OK: low {low:.3} < 128/128 {c128:.3} < ... < {c2048:.3} ~ high {high:.3}");
+}

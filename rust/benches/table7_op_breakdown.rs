@@ -1,0 +1,103 @@
+//! Table 7 — Operator-level latency breakdown of the unfused MX encoding
+//! pipeline vs the fused kernel.
+//!
+//! Reproduces the paper's profiler view: the unfused pipeline's time is
+//! dominated by element encoding (MinOps / ArgMinOps / Direct_Copy /
+//! CompareEq / AddOps / MulFunctor / Memcpy), with packing (lshift /
+//! BitwiseOr) and scale conversion (IndexOps / DeviceSelectSweep /
+//! Write_Indices / Direct_Copy / Memcpy) as smaller phases, while the
+//! fused kernel does the whole thing in one pass.
+//!
+//! Regenerate: `cargo bench --bench table7_op_breakdown`
+//! Output: stdout table + bench_out/table7.csv
+
+use dma::mxfp::unfused::{run_pipeline, FusionConfig};
+use dma::util::benchkit::Table;
+use dma::util::rng::Rng;
+use std::collections::BTreeMap;
+
+fn main() {
+    let (l, d) = (8192usize, 128usize);
+    let mut rng = Rng::new(7);
+    let x: Vec<f32> = (0..l * d).map(|_| rng.normal() as f32).collect();
+
+    // Average per-op times over several runs (paper protocol-ish).
+    let runs = 10usize;
+    let mut agg: BTreeMap<(&'static str, &'static str), f64> = BTreeMap::new();
+    for _ in 0..2 {
+        // warmup
+        std::hint::black_box(run_pipeline(&x, l, d, true, FusionConfig::UNFUSED));
+    }
+    for _ in 0..runs {
+        let run = run_pipeline(&x, l, d, true, FusionConfig::UNFUSED);
+        for op in &run.ops {
+            *agg.entry((op.phase, op.op)).or_insert(0.0) += op.nanos as f64;
+        }
+    }
+    for v in agg.values_mut() {
+        *v /= runs as f64;
+    }
+
+    let mut fused_ns = 0.0;
+    for _ in 0..runs {
+        let run = run_pipeline(&x, l, d, true, FusionConfig::FULLY_FUSED);
+        fused_ns += run.total_nanos() as f64;
+    }
+    fused_ns /= runs as f64;
+
+    let phase_total: BTreeMap<&str, f64> = {
+        let mut m = BTreeMap::new();
+        for (&(phase, _), &ns) in &agg {
+            *m.entry(phase).or_insert(0.0) += ns;
+        }
+        m
+    };
+    let grand_total: f64 = phase_total.values().sum();
+
+    let mut table = Table::new(&["Operator", "Time (us)", "Time (%)"]);
+    table.row(&[
+        "Not fused (total)".into(),
+        format!("{:.1}", grand_total / 1e3),
+        "-".into(),
+    ]);
+    for (phase, label) in [
+        ("encode", "- Element encoding"),
+        ("pack", "- Element packing"),
+        ("scale", "- Scalar Convert"),
+    ] {
+        let pt = phase_total.get(phase).copied().unwrap_or(0.0);
+        table.row(&[label.into(), format!("{:.1}", pt / 1e3), "100.0".into()]);
+        let mut ops: Vec<_> = agg
+            .iter()
+            .filter(|((p, _), _)| *p == phase)
+            .map(|((_, op), &ns)| (*op, ns))
+            .collect();
+        ops.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        for (op, ns) in ops {
+            table.row(&[
+                format!("    {op}"),
+                format!("{:.1}", ns / 1e3),
+                format!("{:.2}", 100.0 * ns / pt.max(1e-9)),
+            ]);
+        }
+    }
+    table.row(&[
+        "Kernel Fusion (Ours)".into(),
+        format!("{:.1}", fused_ns / 1e3),
+        "-".into(),
+    ]);
+
+    println!("\nTable 7 — unfused operator breakdown (L={l}, D={d})");
+    table.print();
+    table.write_csv("table7").unwrap();
+
+    // Shape checks: element encoding dominates; fused beats unfused.
+    let enc = phase_total["encode"];
+    assert!(enc / grand_total > 0.6, "encode share {}", enc / grand_total);
+    assert!(fused_ns < grand_total, "fused {fused_ns} !< unfused {grand_total}");
+    println!(
+        "\nshape check OK: encoding = {:.0}% of unfused; fused is {:.1}x faster",
+        100.0 * enc / grand_total,
+        grand_total / fused_ns
+    );
+}

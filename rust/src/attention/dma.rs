@@ -1,0 +1,424 @@
+//! Diagonal-Tiled Mixed-Precision Attention (paper Algorithm 1) in Rust.
+//!
+//! Mirrors `python/compile/kernels/dma_attention.py`: consumes the
+//! bit-level outputs of the fused dual quantizer, decodes tiles just
+//! before each matmul, and stitches three phases with base-2
+//! OnlineSoftmax:
+//!
+//!   Phase 0 — attention-sink tiles (first `sink` keys), MXFP8 high;
+//!   Phase 1 — everything before the diagonal window, NVFP4 low;
+//!   Phase 2 — the `diag`-token window at the causal frontier, MXFP8
+//!             high + causal mask.
+//!
+//! Also provides the fixed-format baselines of Tables 2 and 4
+//! ([`fixed_format_attention`]).
+
+use super::online_softmax::OnlineSoftmax;
+use super::TileConfig;
+use crate::mxfp::block::{fake_quant, fake_quant_scaled, Format, Granularity};
+use crate::mxfp::fused::DualQuantized;
+use crate::mxfp::{e2m1, e8m0, fp8, pack, NVFP4_BLOCK};
+use crate::tensor::Tensor;
+
+/// Decode rows [r0, r1) of the NVFP4 low-precision copy into `out`.
+fn decode_low_rows(q: &DualQuantized, r0: usize, r1: usize, out: &mut [f32]) {
+    let d = q.d;
+    let mut codes = vec![0u8; d];
+    for (rr, r) in (r0..r1).enumerate() {
+        pack::unpack_row(&q.packed_fp4[r * d / 2..(r + 1) * d / 2], &mut codes);
+        let sq = q.sq[r];
+        for b in 0..d / NVFP4_BLOCK {
+            let s = fp8::decode_e4m3(q.s4_codes[r * d / NVFP4_BLOCK + b]) * sq;
+            for i in 0..NVFP4_BLOCK {
+                out[rr * d + b * NVFP4_BLOCK + i] =
+                    e2m1::decode(codes[b * NVFP4_BLOCK + i]) * s;
+            }
+        }
+    }
+}
+
+/// Decode rows [r0, r1) of the MXFP8 high-precision copy into `out`.
+fn decode_high_rows(q: &DualQuantized, r0: usize, r1: usize, out: &mut [f32]) {
+    let d = q.d;
+    let mb = crate::mxfp::MXFP_BLOCK;
+    for (rr, r) in (r0..r1).enumerate() {
+        let sq = q.sq[r];
+        for b in 0..d / mb {
+            let s = e8m0::decode(q.s8_codes[r * d / mb + b]) * sq;
+            for i in 0..mb {
+                out[rr * d + b * mb + i] = fp8::decode_e4m3(q.fp8_codes[r * d + b * mb + i]) * s;
+            }
+        }
+    }
+}
+
+/// DMA attention over pre-quantized Q/K (`is_query=true/false` outputs of
+/// [`crate::mxfp::fused::dual_quant`]) and full-precision V.
+pub fn dma_attention_quantized(
+    qq: &DualQuantized,
+    kq: &DualQuantized,
+    v: &Tensor,
+    cfg: &TileConfig,
+) -> Tensor {
+    let (lq, d) = (qq.rows, qq.d);
+    let lk = kq.rows;
+    assert_eq!(kq.d, d);
+    assert_eq!(v.rows(), lk);
+    assert_eq!(lq % cfg.bm, 0, "Lq={lq} % bm={}", cfg.bm);
+    assert_eq!(lk % cfg.bn, 0, "Lk={lk} % bn={}", cfg.bn);
+    let off = lk as i64 - lq as i64;
+    let nk = lk / cfg.bn;
+    let n_sink = cfg.sink.div_ceil(cfg.bn);
+
+    let mut out = Tensor::zeros(vec![lq, d]);
+    // Hot-loop scratch, allocated once.
+    let mut q_low = vec![0f32; cfg.bm * d];
+    let mut q_high = vec![0f32; cfg.bm * d];
+    let mut k_tile = vec![0f32; cfg.bn * d];
+    let mut s_tile = vec![0f32; cfg.bm * cfg.bn];
+    let mut scratch = vec![0f32; cfg.bm * cfg.bn];
+
+    for i in 0..lq / cfg.bm {
+        decode_low_rows(qq, i * cfg.bm, (i + 1) * cfg.bm, &mut q_low);
+        decode_high_rows(qq, i * cfg.bm, (i + 1) * cfg.bm, &mut q_high);
+
+        let frontier = (i * cfg.bm + cfg.bm - 1) as i64 + off;
+        let j_end = if cfg.causal {
+            (((frontier / cfg.bn as i64) + 1).max(0) as usize).min(nk)
+        } else {
+            nk
+        };
+        // Phase boundaries (tile indices). Causal: window ends at the
+        // frontier; non-causal: straddles it by diag/2 each side.
+        let n_sink_eff = n_sink.min(j_end);
+        let (j_hi_start, j_hi_end) = if cfg.diag == 0 {
+            (j_end, j_end)
+        } else if cfg.causal {
+            let ws = frontier - cfg.diag as i64 + 1;
+            let hs = ws
+                .div_euclid(cfg.bn as i64)
+                .max(n_sink_eff as i64)
+                .min(j_end as i64) as usize;
+            (hs, j_end)
+        } else {
+            let half = (cfg.diag / 2) as i64;
+            let hs = (frontier - half)
+                .div_euclid(cfg.bn as i64)
+                .max(n_sink_eff as i64)
+                .min(j_end as i64) as usize;
+            let he = ((frontier + half).div_euclid(cfg.bn as i64) + 1)
+                .max(hs as i64)
+                .min(j_end as i64) as usize;
+            (hs, he)
+        };
+        let n_sink_eff = n_sink_eff.min(j_hi_start);
+
+        let mut os = OnlineSoftmax::new(cfg.bm, d, true);
+        let mut do_tile = |j: usize, high: bool, os: &mut OnlineSoftmax| {
+            if high {
+                decode_high_rows(kq, j * cfg.bn, (j + 1) * cfg.bn, &mut k_tile);
+            } else {
+                decode_low_rows(kq, j * cfg.bn, (j + 1) * cfg.bn, &mut k_tile);
+            }
+            let q_dec = if high { &q_high } else { &q_low };
+            for r in 0..cfg.bm {
+                let limit = (i * cfg.bm + r) as i64 + off;
+                let qrow = &q_dec[r * d..(r + 1) * d];
+                for c in 0..cfg.bn {
+                    let col = j * cfg.bn + c;
+                    if cfg.causal && col as i64 > limit {
+                        s_tile[r * cfg.bn + c] = f32::NEG_INFINITY;
+                    } else {
+                        let krow = &k_tile[c * d..(c + 1) * d];
+                        let mut acc = 0f32;
+                        for (a, b) in qrow.iter().zip(krow) {
+                            acc += a * b;
+                        }
+                        // Base-2 logits: softmax scale folded into Q.
+                        s_tile[r * cfg.bn + c] = acc;
+                    }
+                }
+            }
+            let v_tile = v.slice_rows(j * cfg.bn, (j + 1) * cfg.bn);
+            os.update(&s_tile, &v_tile.data, cfg.bn, &mut scratch);
+        };
+
+        // Phase 0: sink (high precision).
+        for j in 0..n_sink_eff {
+            do_tile(j, true, &mut os);
+        }
+        // Phase 1: low-precision body.
+        for j in n_sink_eff..j_hi_start {
+            do_tile(j, false, &mut os);
+        }
+        // Phase 2: diagonal window (high precision).
+        for j in j_hi_start..j_hi_end {
+            do_tile(j, true, &mut os);
+        }
+        // Non-causal Phase 1b: low tiles after the window.
+        for j in j_hi_end..j_end {
+            do_tile(j, false, &mut os);
+        }
+
+        let mut tile_out = vec![0f32; cfg.bm * d];
+        os.finalize(&mut tile_out);
+        for r in 0..cfg.bm {
+            out.row_mut(i * cfg.bm + r)
+                .copy_from_slice(&tile_out[r * d..(r + 1) * d]);
+        }
+    }
+    out
+}
+
+/// Full DMA pipeline on float inputs: fused dual quantization of Q and K,
+/// then the mixed-precision attention loop.
+pub fn dma_attention(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &TileConfig) -> Tensor {
+    let qq = crate::mxfp::fused::dual_quant(
+        &q.data, q.rows(), q.cols(), true, Granularity::PerToken);
+    let kq = crate::mxfp::fused::dual_quant(
+        &k.data, k.rows(), k.cols(), false, Granularity::PerToken);
+    dma_attention_quantized(&qq, &kq, v, cfg)
+}
+
+/// Fixed-format quantized attention — the MXFP4 / NVFP4 / MXFP8 baselines
+/// of Tables 2 and 4. Q and K are fake-quantized in `format` (optionally
+/// with a tokenwise outer scale), V stays full precision.
+pub fn fixed_format_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    format: Format,
+    tokenwise: bool,
+    cfg: &TileConfig,
+) -> Tensor {
+    let quant = |t: &Tensor| -> Tensor {
+        let data = if tokenwise {
+            fake_quant_scaled(&t.data, t.rows(), t.cols(), format, Granularity::PerToken)
+        } else {
+            fake_quant(&t.data, t.rows(), t.cols(), format)
+        };
+        Tensor::new(t.shape.clone(), data)
+    };
+    let qf = quant(q);
+    let kf = quant(k);
+    super::flash::flash_attention(&qf, &kf, v, cfg)
+}
+
+/// DMA post-softmax attention matrix (tile-level precision mixture) for
+/// the error studies (Tables 2/5/8): P computed from the dual-quantized
+/// copies with the diagonal/sink window selecting MXFP8 tiles.
+pub fn dma_scores(q: &Tensor, k: &Tensor, cfg: &TileConfig,
+                  granularity: Granularity) -> Tensor {
+    let (lq, d) = (q.rows(), q.cols());
+    let lk = k.rows();
+    let qq = crate::mxfp::fused::dual_quant(&q.data, lq, d, true, granularity);
+    let kq = crate::mxfp::fused::dual_quant(&k.data, lk, d, false, granularity);
+    let mut ql = vec![0f32; lq * d];
+    let mut qh = vec![0f32; lq * d];
+    let mut kl = vec![0f32; lk * d];
+    let mut kh = vec![0f32; lk * d];
+    qq.dequant_low(&mut ql);
+    qq.dequant_high(&mut qh);
+    kq.dequant_low(&mut kl);
+    kq.dequant_high(&mut kh);
+    let s_low = Tensor::new(vec![lq, d], ql).matmul_t(&Tensor::new(vec![lk, d], kl));
+    let s_high = Tensor::new(vec![lq, d], qh).matmul_t(&Tensor::new(vec![lk, d], kh));
+    let off = lk as i64 - lq as i64;
+    let mut s = Tensor::zeros(vec![lq, lk]);
+    for qi in 0..lq {
+        let ti = qi / cfg.bm;
+        let frontier = (ti * cfg.bm + cfg.bm - 1) as i64 + off;
+        for kj in 0..lk {
+            let tj = kj / cfg.bn;
+            let t0 = (tj * cfg.bn) as i64;
+            let t1 = (tj * cfg.bn + cfg.bn - 1) as i64;
+            let in_diag = cfg.diag > 0
+                && t1 >= frontier - (cfg.diag as i64 - 1)
+                && t0 <= frontier;
+            let in_sink = cfg.sink > 0 && (tj * cfg.bn) < cfg.sink;
+            let v = if in_diag || in_sink {
+                s_high.at(qi, kj)
+            } else {
+                s_low.at(qi, kj)
+            };
+            s.set(qi, kj, v);
+        }
+    }
+    if cfg.causal {
+        super::reference::apply_causal_mask(&mut s, lq, lk);
+    }
+    // Base-2 logits (softmax scale folded into Q by the quantizer).
+    s.scale(std::f32::consts::LN_2).softmax_rows()
+}
+
+/// Quantized attention-score matrix for the error studies (Table 2,
+/// Fig. 1): P computed from fake-quantized Q/K.
+pub fn quantized_scores(
+    q: &Tensor,
+    k: &Tensor,
+    format: Format,
+    tokenwise: bool,
+    causal: bool,
+) -> Tensor {
+    let quant = |t: &Tensor| -> Tensor {
+        let data = if tokenwise {
+            fake_quant_scaled(&t.data, t.rows(), t.cols(), format, Granularity::PerToken)
+        } else {
+            fake_quant(&t.data, t.rows(), t.cols(), format)
+        };
+        Tensor::new(t.shape.clone(), data)
+    };
+    super::reference::attention_scores(&quant(q), &quant(k), causal)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::reference;
+    use crate::metrics;
+    use crate::tensor::randn;
+    use crate::util::rng::{channelwise_qk, Rng};
+
+    fn qkv(l: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        (randn(vec![l, d], seed), randn(vec![l, d], seed + 1), randn(vec![l, d], seed + 2))
+    }
+
+    #[test]
+    fn close_to_exact_attention() {
+        let (q, k, v) = qkv(256, 64, 1);
+        let cfg = TileConfig { bm: 64, bn: 64, diag: 128, sink: 64, causal: true };
+        let o = dma_attention(&q, &k, &v, &cfg);
+        let o_ref = reference::attention(&q, &k, &v, true);
+        let cos = metrics::cos_sim(&o.data, &o_ref.data);
+        assert!(cos > 0.998, "cos {cos}");
+    }
+
+    #[test]
+    fn full_high_window_equals_mxfp8_quality() {
+        let (q, k, v) = qkv(128, 64, 4);
+        let cfg = TileConfig { bm: 64, bn: 64, diag: 4096, sink: 0, causal: true };
+        let o = dma_attention(&q, &k, &v, &cfg);
+        let o_ref = reference::attention(&q, &k, &v, true);
+        assert!(metrics::cos_sim(&o.data, &o_ref.data) > 0.999);
+    }
+
+    #[test]
+    fn diag_window_recovers_accuracy() {
+        // The paper's core claim on channel-structured data.
+        let mut rng = Rng::new(9);
+        let d = 64;
+        let l = 256;
+        let q = Tensor::new(vec![l, d], channelwise_qk(&mut rng, l, d, 6, 8.0));
+        let k = Tensor::new(vec![l, d], channelwise_qk(&mut rng, l, d, 6, 8.0));
+        let v = randn(vec![l, d], 77);
+        let o_ref = reference::attention(&q, &k, &v, true);
+        let err = |diag: usize, sink: usize| {
+            let cfg = TileConfig { bm: 64, bn: 64, diag, sink, causal: true };
+            let o = dma_attention(&q, &k, &v, &cfg);
+            metrics::rmse(&o.data, &o_ref.data)
+        };
+        let e_low = err(0, 0);
+        let e_dma = err(128, 64);
+        assert!(e_dma < e_low, "dma {e_dma} vs pure-low {e_low}");
+    }
+
+    #[test]
+    fn noncausal_phases_cover_everything() {
+        // Non-causal with a huge window == all-high; compare against
+        // diag=0 (all-low): both must be valid attention outputs
+        // (rows of P sum to 1 -> outputs are convex combos of V rows).
+        let (q, k, v) = qkv(128, 32, 11);
+        for (diag, sink) in [(0usize, 0usize), (64, 32), (4096, 0)] {
+            let cfg = TileConfig { bm: 32, bn: 32, diag, sink, causal: false };
+            let o = dma_attention(&q, &k, &v, &cfg);
+            for c in 0..32 {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for r in 0..128 {
+                    lo = lo.min(v.at(r, c));
+                    hi = hi.max(v.at(r, c));
+                }
+                for r in 0..128 {
+                    let x = o.at(r, c);
+                    assert!(x >= lo - 1e-4 && x <= hi + 1e-4,
+                            "diag={diag} sink={sink}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_size_consistency() {
+        let (q, k, v) = qkv(128, 64, 21);
+        // With diag multiple of both tilings the high/low split differs
+        // slightly at boundaries, but outputs must stay very close.
+        let o1 = dma_attention(&q, &k, &v,
+            &TileConfig { bm: 32, bn: 32, diag: 64, sink: 32, causal: true });
+        let o2 = dma_attention(&q, &k, &v,
+            &TileConfig { bm: 64, bn: 32, diag: 64, sink: 32, causal: true });
+        assert!(metrics::cos_sim(&o1.data, &o2.data) > 0.999);
+    }
+
+    #[test]
+    fn rectangular_prefill_shape() {
+        let q = randn(vec![64, 64], 31);
+        let k = randn(vec![256, 64], 32);
+        let v = randn(vec![256, 64], 33);
+        let cfg = TileConfig { bm: 64, bn: 64, diag: 128, sink: 64, causal: true };
+        let o = dma_attention(&q, &k, &v, &cfg);
+        let o_ref = reference::attention(&q, &k, &v, true);
+        assert!(metrics::cos_sim(&o.data, &o_ref.data) > 0.99);
+    }
+
+    #[test]
+    fn format_error_ordering_on_scores() {
+        // Table 2 shape: MXFP4 much worse than NVFP4/MXFP8; DMA (ours)
+        // comparable to MXFP8.
+        let mut rng = Rng::new(55);
+        let d = 64;
+        let l = 128;
+        let q = Tensor::new(vec![l, d], channelwise_qk(&mut rng, l, d, 6, 6.0));
+        let k = Tensor::new(vec![l, d], channelwise_qk(&mut rng, l, d, 6, 6.0));
+        let p_ref = reference::attention_scores(&q, &k, true);
+        let cos = |f: Format| {
+            let p = quantized_scores(&q, &k, f, false, true);
+            metrics::cos_sim(&p_ref.data, &p.data)
+        };
+        let c4 = cos(Format::Mxfp4);
+        let c8 = cos(Format::Mxfp8E4m3);
+        let cn = cos(Format::Nvfp4);
+        assert!(c8 > c4 && cn > c4, "mxfp4 {c4}, nvfp4 {cn}, mxfp8 {c8}");
+    }
+
+    #[test]
+    fn property_output_rows_convex() {
+        crate::util::prop::check("dma convexity", 10, |rng| {
+            let l = 64;
+            let d = 32;
+            let q = Tensor::new(vec![l, d],
+                (0..l * d).map(|_| rng.normal() as f32).collect());
+            let k = Tensor::new(vec![l, d],
+                (0..l * d).map(|_| rng.normal() as f32).collect());
+            let v = Tensor::new(vec![l, d],
+                (0..l * d).map(|_| rng.normal() as f32).collect());
+            let diag = *rng.choose(&[0usize, 32, 64]);
+            let sink = *rng.choose(&[0usize, 32]);
+            let cfg = TileConfig { bm: 32, bn: 32, diag, sink, causal: true };
+            let o = dma_attention(&q, &k, &v, &cfg);
+            for c in 0..d {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for r in 0..l {
+                    lo = lo.min(v.at(r, c));
+                    hi = hi.max(v.at(r, c));
+                }
+                for r in 0..l {
+                    let x = o.at(r, c);
+                    crate::prop_assert!(
+                        x >= lo - 1e-4 && x <= hi + 1e-4,
+                        "row {r} col {c}: {x} outside [{lo}, {hi}]"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,116 @@
+//! Tiled exact attention (FlashAttention-style loop) on the CPU — the
+//! "Native" baseline, structurally identical to the DMA kernel so
+//! comparisons isolate the mixed-precision logic.
+
+use super::online_softmax::OnlineSoftmax;
+use super::TileConfig;
+use crate::tensor::Tensor;
+
+/// Tiled exact attention. q:[Lq,D], k,v:[Lk,D] -> [Lq,D].
+pub fn flash_attention(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &TileConfig) -> Tensor {
+    let (lq, d) = (q.rows(), q.cols());
+    let lk = k.rows();
+    assert_eq!(lq % cfg.bm, 0, "Lq={lq} % bm={} != 0", cfg.bm);
+    assert_eq!(lk % cfg.bn, 0, "Lk={lk} % bn={} != 0", cfg.bn);
+    let off = lk as i64 - lq as i64;
+    let scale = 1.0 / (d as f32).sqrt();
+    let nk = lk / cfg.bn;
+
+    let mut out = Tensor::zeros(vec![lq, d]);
+    let mut s_tile = vec![0f32; cfg.bm * cfg.bn];
+    let mut scratch = vec![0f32; cfg.bm * cfg.bn];
+
+    for i in 0..lq / cfg.bm {
+        let frontier = (i * cfg.bm + cfg.bm - 1) as i64 + off;
+        let j_end = if cfg.causal {
+            (((frontier / cfg.bn as i64) + 1).max(0) as usize).min(nk)
+        } else {
+            nk
+        };
+        let mut os = OnlineSoftmax::new(cfg.bm, d, false);
+        for j in 0..j_end {
+            // s = (Q_i / sqrt(d)) K_j^T with causal mask.
+            for r in 0..cfg.bm {
+                let qrow = q.row(i * cfg.bm + r);
+                let limit = (i * cfg.bm + r) as i64 + off;
+                for c in 0..cfg.bn {
+                    let col = j * cfg.bn + c;
+                    if cfg.causal && col as i64 > limit {
+                        s_tile[r * cfg.bn + c] = f32::NEG_INFINITY;
+                    } else {
+                        let krow = k.row(col);
+                        let mut acc = 0f32;
+                        for (a, b) in qrow.iter().zip(krow) {
+                            acc += a * b;
+                        }
+                        s_tile[r * cfg.bn + c] = acc * scale;
+                    }
+                }
+            }
+            let v_tile = v.slice_rows(j * cfg.bn, (j + 1) * cfg.bn);
+            os.update(&s_tile, &v_tile.data, cfg.bn, &mut scratch);
+        }
+        let mut tile_out = vec![0f32; cfg.bm * d];
+        os.finalize(&mut tile_out);
+        for r in 0..cfg.bm {
+            out.row_mut(i * cfg.bm + r).copy_from_slice(&tile_out[r * d..(r + 1) * d]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::reference;
+    use crate::tensor::randn;
+
+    fn close(a: &Tensor, b: &Tensor, tol: f32) {
+        assert_eq!(a.shape, b.shape);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matches_reference_causal() {
+        let q = randn(vec![128, 32], 1);
+        let k = randn(vec![128, 32], 2);
+        let v = randn(vec![128, 32], 3);
+        let cfg = TileConfig { bm: 32, bn: 32, diag: 0, sink: 0, causal: true };
+        close(&flash_attention(&q, &k, &v, &cfg),
+              &reference::attention(&q, &k, &v, true), 1e-4);
+    }
+
+    #[test]
+    fn matches_reference_noncausal() {
+        let q = randn(vec![64, 16], 4);
+        let k = randn(vec![64, 16], 5);
+        let v = randn(vec![64, 16], 6);
+        let cfg = TileConfig { bm: 16, bn: 32, diag: 0, sink: 0, causal: false };
+        close(&flash_attention(&q, &k, &v, &cfg),
+              &reference::attention(&q, &k, &v, false), 1e-4);
+    }
+
+    #[test]
+    fn rectangular_qk() {
+        let q = randn(vec![32, 16], 7);
+        let k = randn(vec![96, 16], 8);
+        let v = randn(vec![96, 16], 9);
+        let cfg = TileConfig { bm: 16, bn: 16, diag: 0, sink: 0, causal: true };
+        close(&flash_attention(&q, &k, &v, &cfg),
+              &reference::attention(&q, &k, &v, true), 1e-4);
+    }
+
+    #[test]
+    fn tile_size_invariant() {
+        let q = randn(vec![64, 32], 10);
+        let k = randn(vec![64, 32], 11);
+        let v = randn(vec![64, 32], 12);
+        let a = flash_attention(&q, &k, &v,
+            &TileConfig { bm: 16, bn: 16, diag: 0, sink: 0, causal: true });
+        let b = flash_attention(&q, &k, &v,
+            &TileConfig { bm: 64, bn: 32, diag: 0, sink: 0, causal: true });
+        close(&a, &b, 1e-4);
+    }
+}

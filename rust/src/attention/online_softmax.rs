@@ -1,0 +1,211 @@
+//! OnlineSoftmax (paper Sec. 3.2): streaming row-wise softmax
+//! accumulation over KV tiles, maintaining the running maximum `m`,
+//! normalizer `l`, and unnormalized output accumulator `O`.
+//!
+//! Both the flash and DMA kernels are built on this accumulator; it
+//! supports base-e (`exp`) and base-2 (`exp2`) arithmetic — DMA folds
+//! `log2(e)` into Q and runs in base-2 (Alg. 2, Step 1).
+
+/// Streaming accumulator for one query tile of `rows` rows and head
+/// dimension `d`.
+pub struct OnlineSoftmax {
+    pub rows: usize,
+    pub d: usize,
+    /// Running row maxima of the logits.
+    pub m: Vec<f32>,
+    /// Running normalizers.
+    pub l: Vec<f32>,
+    /// Unnormalized output accumulator [rows, d].
+    pub acc: Vec<f32>,
+    base2: bool,
+}
+
+impl OnlineSoftmax {
+    pub fn new(rows: usize, d: usize, base2: bool) -> Self {
+        OnlineSoftmax {
+            rows,
+            d,
+            m: vec![f32::NEG_INFINITY; rows],
+            l: vec![0.0; rows],
+            acc: vec![0.0; rows * d],
+            base2,
+        }
+    }
+
+    #[inline]
+    fn expf(&self, x: f32) -> f32 {
+        if self.base2 {
+            x.exp2()
+        } else {
+            x.exp()
+        }
+    }
+
+    /// Fold in one KV tile: `s` is the [rows, bn] logit tile (already
+    /// masked with -inf where invalid), `v` the [bn, d] value tile.
+    /// `p_scratch` must have rows*bn capacity (reused across tiles to
+    /// keep the hot loop allocation-free).
+    pub fn update(&mut self, s: &[f32], v: &[f32], bn: usize, p_scratch: &mut [f32]) {
+        debug_assert_eq!(s.len(), self.rows * bn);
+        debug_assert_eq!(v.len(), bn * self.d);
+        for r in 0..self.rows {
+            let srow = &s[r * bn..(r + 1) * bn];
+            let tile_max = srow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let m_new = self.m[r].max(tile_max);
+            if m_new == f32::NEG_INFINITY {
+                continue; // fully masked tile, nothing to accumulate
+            }
+            let alpha = if self.m[r] == f32::NEG_INFINITY {
+                0.0
+            } else {
+                self.expf(self.m[r] - m_new)
+            };
+            let prow = &mut p_scratch[r * bn..(r + 1) * bn];
+            let mut psum = 0.0f32;
+            for (p, &sv) in prow.iter_mut().zip(srow) {
+                let e = if sv == f32::NEG_INFINITY {
+                    0.0
+                } else {
+                    self.expf(sv - m_new)
+                };
+                *p = e;
+                psum += e;
+            }
+            self.l[r] = self.l[r] * alpha + psum;
+            self.m[r] = m_new;
+            let arow = &mut self.acc[r * self.d..(r + 1) * self.d];
+            if alpha != 1.0 {
+                for a in arow.iter_mut() {
+                    *a *= alpha;
+                }
+            }
+            for (j, &p) in prow.iter().enumerate() {
+                if p != 0.0 {
+                    let vrow = &v[j * self.d..(j + 1) * self.d];
+                    for (a, &vv) in arow.iter_mut().zip(vrow) {
+                        *a += p * vv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Finalize: O = diag(l)^-1 acc, written into `out` [rows, d].
+    pub fn finalize(&self, out: &mut [f32]) {
+        for r in 0..self.rows {
+            let inv = if self.l[r] > 0.0 { 1.0 / self.l[r] } else { 0.0 };
+            for c in 0..self.d {
+                out[r * self.d + c] = self.acc[r * self.d + c] * inv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{randn, Tensor};
+
+    /// Streaming over tiles must equal one-shot softmax.
+    fn check_equivalence(base2: bool) {
+        let (lq, lk, d, bn) = (8, 32, 16, 8);
+        let q = randn(vec![lq, d], 1);
+        let k = randn(vec![lk, d], 2);
+        let v = randn(vec![lk, d], 3);
+        let s_full = q.matmul_t(&k);
+
+        let mut os = OnlineSoftmax::new(lq, d, base2);
+        let mut scratch = vec![0f32; lq * bn];
+        for t in 0..lk / bn {
+            let mut s_tile = vec![0f32; lq * bn];
+            for r in 0..lq {
+                for j in 0..bn {
+                    s_tile[r * bn + j] = s_full.at(r, t * bn + j);
+                }
+            }
+            let v_tile = v.slice_rows(t * bn, (t + 1) * bn);
+            os.update(&s_tile, &v_tile.data, bn, &mut scratch);
+        }
+        let mut out = vec![0f32; lq * d];
+        os.finalize(&mut out);
+
+        // One-shot reference with matching base.
+        let s_scaled = if base2 {
+            s_full.scale(std::f32::consts::LN_2)
+        } else {
+            s_full
+        };
+        let expect = s_scaled.softmax_rows().matmul(&v);
+        for (a, b) in out.iter().zip(&expect.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b} (base2={base2})");
+        }
+    }
+
+    #[test]
+    fn equals_oneshot_base_e() {
+        check_equivalence(false);
+    }
+
+    #[test]
+    fn equals_oneshot_base_2() {
+        check_equivalence(true);
+    }
+
+    #[test]
+    fn tile_order_independent_result() {
+        let (lq, lk, d, bn) = (4, 16, 8, 4);
+        let q = randn(vec![lq, d], 4);
+        let k = randn(vec![lk, d], 5);
+        let v = randn(vec![lk, d], 6);
+        let s_full = q.matmul_t(&k);
+
+        let run = |order: &[usize]| {
+            let mut os = OnlineSoftmax::new(lq, d, false);
+            let mut scratch = vec![0f32; lq * bn];
+            for &t in order {
+                let mut s_tile = vec![0f32; lq * bn];
+                for r in 0..lq {
+                    for j in 0..bn {
+                        s_tile[r * bn + j] = s_full.at(r, t * bn + j);
+                    }
+                }
+                let v_tile = v.slice_rows(t * bn, (t + 1) * bn);
+                os.update(&s_tile, &v_tile.data, bn, &mut scratch);
+            }
+            let mut out = vec![0f32; lq * d];
+            os.finalize(&mut out);
+            out
+        };
+        let a = run(&[0, 1, 2, 3]);
+        let b = run(&[3, 1, 0, 2]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fully_masked_tiles_ignored() {
+        let (lq, d, bn) = (2, 4, 2);
+        let mut os = OnlineSoftmax::new(lq, d, false);
+        let mut scratch = vec![0f32; lq * bn];
+        let masked = vec![f32::NEG_INFINITY; lq * bn];
+        let v = Tensor::full(vec![bn, d], 1.0);
+        os.update(&masked, &v.data, bn, &mut scratch);
+        // Then a real tile.
+        let s = vec![0.0f32; lq * bn];
+        os.update(&s, &v.data, bn, &mut scratch);
+        let mut out = vec![0f32; lq * d];
+        os.finalize(&mut out);
+        for &x in &out {
+            assert!((x - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_accumulator_finalizes_to_zero() {
+        let os = OnlineSoftmax::new(2, 4, false);
+        let mut out = vec![7f32; 8];
+        os.finalize(&mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,147 @@
+//! Exact softmax attention — the naive oracle every tiled kernel is
+//! validated against. Materializes the full score matrix; O(Lq·Lk·D).
+
+use crate::tensor::Tensor;
+
+/// Exact attention. q:[Lq,D], k,v:[Lk,D]. Causal alignment matches the
+//  decoder convention: query i attends keys j <= i + (Lk - Lq).
+pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor, causal: bool) -> Tensor {
+    let d = q.cols();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut s = q.matmul_t(k).scale(scale);
+    if causal {
+        apply_causal_mask(&mut s, q.rows(), k.rows());
+    }
+    s.softmax_rows().matmul(v)
+}
+
+/// Post-softmax attention matrix P (for similarity metrics).
+pub fn attention_scores(q: &Tensor, k: &Tensor, causal: bool) -> Tensor {
+    let d = q.cols();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut s = q.matmul_t(k).scale(scale);
+    if causal {
+        apply_causal_mask(&mut s, q.rows(), k.rows());
+    }
+    s.softmax_rows()
+}
+
+/// Attention from precomputed base-2 logits (softmax scale already folded
+/// into Q): softmax uses exp2 — the DMA kernels' convention.
+pub fn attention_from_logits_base2(s: &Tensor, v: &Tensor, lq: usize, lk: usize,
+                                   causal: bool) -> Tensor {
+    let mut s = s.clone();
+    if causal {
+        apply_causal_mask(&mut s, lq, lk);
+    }
+    // exp2 softmax == exp softmax of ln2-scaled logits.
+    let s = s.scale(std::f32::consts::LN_2);
+    s.softmax_rows().matmul(v)
+}
+
+pub fn apply_causal_mask(s: &mut Tensor, lq: usize, lk: usize) {
+    let off = lk as i64 - lq as i64;
+    for i in 0..lq {
+        let row = s.row_mut(i);
+        for (j, val) in row.iter_mut().enumerate() {
+            if j as i64 > i as i64 + off {
+                *val = f32::NEG_INFINITY;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::randn;
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        let q = randn(vec![16, 32], 1);
+        let k = randn(vec![16, 32], 2);
+        let v = randn(vec![16, 32], 3);
+        let o = attention(&q, &k, &v, true);
+        // Each output row must lie within [min(v), max(v)] per column.
+        for c in 0..32 {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for r in 0..16 {
+                lo = lo.min(v.at(r, c));
+                hi = hi.max(v.at(r, c));
+            }
+            for r in 0..16 {
+                let x = o.at(r, c);
+                assert!(x >= lo - 1e-5 && x <= hi + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn first_row_causal_copies_v0() {
+        let q = randn(vec![8, 16], 4);
+        let k = randn(vec![8, 16], 5);
+        let v = randn(vec![8, 16], 6);
+        let o = attention(&q, &k, &v, true);
+        // Query 0 can only attend key 0 -> output row 0 == v row 0.
+        for c in 0..16 {
+            assert!((o.at(0, c) - v.at(0, c)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn causality() {
+        let q = randn(vec![8, 16], 7);
+        let k = randn(vec![8, 16], 8);
+        let v = randn(vec![8, 16], 9);
+        let o1 = attention(&q, &k, &v, true);
+        // Perturb key/value row 7; rows 0..7 of the output are unchanged.
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for c in 0..16 {
+            k2.set(7, c, k2.at(7, c) + 5.0);
+            v2.set(7, c, v2.at(7, c) - 3.0);
+        }
+        let o2 = attention(&q, &k2, &v2, true);
+        for r in 0..7 {
+            for c in 0..16 {
+                assert_eq!(o1.at(r, c), o2.at(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn rectangular_alignment() {
+        // Lq=4, Lk=8: query 0 attends keys 0..=4.
+        let q = randn(vec![4, 8], 10);
+        let k = randn(vec![8, 8], 11);
+        let v = randn(vec![8, 8], 12);
+        let p = attention_scores(&q, &k, true);
+        assert!(p.at(0, 4) > 0.0);
+        assert_eq!(p.at(0, 5), 0.0);
+    }
+
+    #[test]
+    fn scores_rows_sum_to_one() {
+        let q = randn(vec![12, 16], 13);
+        let k = randn(vec![12, 16], 14);
+        let p = attention_scores(&q, &k, true);
+        for r in 0..12 {
+            let s: f32 = p.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn base2_logits_equivalent() {
+        let q = randn(vec![8, 32], 15);
+        let k = randn(vec![8, 32], 16);
+        let v = randn(vec![8, 32], 17);
+        let o1 = attention(&q, &k, &v, true);
+        // Build base-2 logits by hand: S = (Q*log2e/sqrt(d)) K^T.
+        let s = q.scale(std::f32::consts::LOG2_E / (32f32).sqrt()).matmul_t(&k);
+        let o2 = attention_from_logits_base2(&s, &v, 8, 8, true);
+        for (a, b) in o1.data.iter().zip(&o2.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

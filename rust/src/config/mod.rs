@@ -1,0 +1,216 @@
+//! Serving configuration: loaded from `model_meta.json` (written by the
+//! AOT exporter) plus engine settings from CLI/JSON overrides.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context};
+use std::path::{Path, PathBuf};
+
+/// Model architecture constants (must match the AOT export).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub max_seq: usize,
+    pub bm: usize,
+    pub bn: usize,
+    pub diag: usize,
+    pub sink: usize,
+}
+
+/// Token-id conventions shared with `python/compile/tasks.py`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TokenIds {
+    pub pad: i32,
+    pub bos: i32,
+    pub sep: i32,
+    pub qry: i32,
+    pub mrk: i32,
+    pub eos: i32,
+    pub payload_start: i32,
+    pub vocab: i32,
+}
+
+/// Everything the runtime needs to know about the artifact bundle.
+#[derive(Clone, Debug)]
+pub struct MetaConfig {
+    pub model: ModelConfig,
+    pub tokens: TokenIds,
+    pub param_order: Vec<String>,
+    pub cache_len: usize,
+    pub prefill_lens: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+    pub attn_lens: Vec<usize>,
+    pub attn_d: usize,
+    pub eval_shapes: Vec<(usize, usize)>,
+    pub artifact_dir: PathBuf,
+}
+
+impl MetaConfig {
+    /// Load `model_meta.json` from an artifact directory.
+    pub fn load(artifact_dir: impl AsRef<Path>) -> crate::Result<MetaConfig> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let path = dir.join("model_meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let num = |v: &Json, key: &str| -> crate::Result<usize> {
+            v.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing numeric field {key}"))
+        };
+        let m = j.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let model = ModelConfig {
+            vocab: num(m, "vocab")?,
+            d_model: num(m, "d_model")?,
+            n_layers: num(m, "n_layers")?,
+            n_heads: num(m, "n_heads")?,
+            n_kv_heads: num(m, "n_kv_heads")?,
+            d_head: num(m, "d_head")?,
+            max_seq: num(m, "max_seq")?,
+            bm: num(m, "bm")?,
+            bn: num(m, "bn")?,
+            diag: num(m, "diag")?,
+            sink: num(m, "sink")?,
+        };
+        let t = j.get("tokens").ok_or_else(|| anyhow!("missing tokens"))?;
+        let tok = |key: &str| -> crate::Result<i32> {
+            t.get(key)
+                .and_then(Json::as_i64)
+                .map(|v| v as i32)
+                .ok_or_else(|| anyhow!("missing token id {key}"))
+        };
+        let tokens = TokenIds {
+            pad: tok("PAD")?,
+            bos: tok("BOS")?,
+            sep: tok("SEP")?,
+            qry: tok("QRY")?,
+            mrk: tok("MRK")?,
+            eos: tok("EOS")?,
+            payload_start: tok("PAYLOAD_START")?,
+            vocab: tok("VOCAB")?,
+        };
+        let usv = |key: &str| -> crate::Result<Vec<usize>> {
+            Ok(j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing {key}"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect())
+        };
+        let param_order = j
+            .get("param_order")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing param_order"))?
+            .iter()
+            .filter_map(|v| v.as_str().map(str::to_string))
+            .collect();
+        let eval_shapes = j
+            .get("eval_shapes")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|p| {
+                        Some((p.idx(0)?.as_usize()?, p.idx(1)?.as_usize()?))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(MetaConfig {
+            model,
+            tokens,
+            param_order,
+            cache_len: num(&j, "cache_len")?,
+            prefill_lens: usv("prefill_lens")?,
+            decode_batches: usv("decode_batches")?,
+            attn_lens: usv("attn_lens")?,
+            attn_d: num(&j, "attn_d")?,
+            eval_shapes,
+            artifact_dir: dir,
+        })
+    }
+
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.artifact_dir.join(format!("{name}.hlo.txt"))
+    }
+}
+
+/// Engine/serving knobs (CLI-overridable).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub artifact_dir: PathBuf,
+    /// Attention mode for prefill: "native" or "dma".
+    pub attention: String,
+    /// Max tokens generated per request unless the request says less.
+    pub max_new_tokens: usize,
+    /// Maximum queued requests before admission starts rejecting.
+    pub queue_limit: usize,
+    /// Decode batch bucket sizes to use (must be exported).
+    pub decode_batches: Vec<usize>,
+    /// Scheduler time slice: max decode steps before re-checking prefill.
+    pub decode_slice: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifact_dir: PathBuf::from("artifacts"),
+            attention: "dma".into(),
+            max_new_tokens: 32,
+            queue_limit: 256,
+            decode_batches: vec![1, 2, 4],
+            decode_slice: 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta_json() -> String {
+        r#"{
+          "model": {"vocab": 64, "d_model": 128, "n_layers": 2,
+                    "n_heads": 4, "n_kv_heads": 4, "d_head": 32,
+                    "d_ff": 256, "max_seq": 512, "rope_theta": 10000.0,
+                    "bm": 32, "bn": 32, "diag": 64, "sink": 32},
+          "tokens": {"PAD":0,"BOS":1,"SEP":2,"QRY":3,"MRK":4,"EOS":5,
+                     "PAYLOAD_START":6,"VOCAB":64},
+          "param_order": ["embed","layers.0.ln1","ln_f"],
+          "cache_len": 320,
+          "prefill_lens": [64,128,256],
+          "decode_batches": [1,2,4],
+          "attn_lens": [128,512],
+          "attn_d": 64,
+          "eval_shapes": [[8,96],[8,224]],
+          "artifacts": {}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_meta() {
+        let dir = std::env::temp_dir().join(format!("dma_meta_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("model_meta.json"), meta_json()).unwrap();
+        let m = MetaConfig::load(&dir).unwrap();
+        assert_eq!(m.model.vocab, 64);
+        assert_eq!(m.model.n_layers, 2);
+        assert_eq!(m.tokens.qry, 3);
+        assert_eq!(m.cache_len, 320);
+        assert_eq!(m.prefill_lens, vec![64, 128, 256]);
+        assert_eq!(m.eval_shapes, vec![(8, 96), (8, 224)]);
+        assert_eq!(m.param_order.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_meta_is_helpful() {
+        let err = MetaConfig::load("/nonexistent/dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,532 @@
+//! The serving engine: continuous batching over a [`ModelBackend`].
+//!
+//! Policy (vLLM-style, prefill-prioritized):
+//!
+//! 1. While batch slots and KV blocks are free, admit a queued request
+//!    and run its prefill (one sequence at a time — prefill of different
+//!    lengths cannot share a bucketed executable).
+//! 2. Run up to `decode_slice` batched decode steps over all active
+//!    slots, then loop back to (1) so newly arrived prompts are not
+//!    starved behind long generations.
+//! 3. A sequence retires on EOS, its token budget, or cache capacity.
+//!
+//! Admission uses the paged [`BlockPool`] accounting: a request is only
+//! admitted when its prompt + token budget fit in free KV blocks, so
+//! decode can never deadlock on cache space.
+
+use super::request::{FinishReason, Request, Response, SeqPhase, Tracked};
+use crate::config::EngineConfig;
+use crate::kvcache::{BlockPool, SlotKv};
+use crate::model::argmax;
+use crate::runtime::ModelBackend;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::Instant;
+
+struct Active {
+    tracked: Tracked,
+    slot: SlotKv,
+}
+
+enum PrefillOutcome {
+    /// A sequence was admitted and is now decoding.
+    Started,
+    /// A sequence finished (or failed) during prefill.
+    Finished(Response),
+    /// Nothing admissible right now.
+    NoWork,
+}
+
+/// Aggregate serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub completed: u64,
+    pub rejected: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub decode_steps: u64,
+    pub decode_batch_sum: u64,
+}
+
+impl EngineStats {
+    pub fn mean_decode_batch(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.decode_batch_sum as f64 / self.decode_steps as f64
+        }
+    }
+}
+
+pub struct Engine {
+    pub cfg: EngineConfig,
+    backend: Box<dyn ModelBackend>,
+    queue: VecDeque<Tracked>,
+    active: Vec<Option<Active>>,
+    pool: BlockPool,
+    eos_token: i32,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    pub fn new(backend: Box<dyn ModelBackend>, cfg: EngineConfig, eos_token: i32) -> Engine {
+        let max_slots = backend.decode_buckets().into_iter().max().unwrap_or(1);
+        // KV accounting: cache_len tokens per slot, 16-token blocks.
+        let block_tokens = 16;
+        let total_blocks = max_slots * backend.cache_len() / block_tokens;
+        Engine {
+            cfg,
+            pool: BlockPool::new(total_blocks, block_tokens),
+            active: (0..max_slots).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            backend,
+            eos_token,
+            stats: EngineStats::default(),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Number of requests currently queued + active (router load signal).
+    pub fn load(&self) -> usize {
+        self.queue.len() + self.active.iter().flatten().count()
+    }
+
+    /// Submit a request; returns an immediate rejection response when
+    /// admission is impossible (prompt too long / queue full).
+    pub fn submit(&mut self, req: Request) -> Option<Response> {
+        if self.queue.len() >= self.cfg.queue_limit {
+            self.stats.rejected += 1;
+            return Some(Response {
+                id: req.id,
+                output: vec![],
+                finish: FinishReason::Rejected,
+                queue_ms: 0.0,
+                prefill_ms: 0.0,
+                decode_ms: 0.0,
+                error: Some("queue full".into()),
+            });
+        }
+        let budget = req.tokens.len() + req.max_new_tokens.min(self.cfg.max_new_tokens);
+        if req.tokens.is_empty() || budget > self.backend.cache_len() {
+            self.stats.rejected += 1;
+            return Some(Response {
+                id: req.id,
+                output: vec![],
+                finish: FinishReason::Rejected,
+                queue_ms: 0.0,
+                prefill_ms: 0.0,
+                decode_ms: 0.0,
+                error: Some(format!(
+                    "prompt+budget {budget} exceeds cache {}",
+                    self.backend.cache_len()
+                )),
+            });
+        }
+        self.queue.push_back(Tracked::new(req));
+        None
+    }
+
+    fn free_slot(&self) -> Option<usize> {
+        self.active.iter().position(Option::is_none)
+    }
+
+    /// Try to admit + prefill one queued request.
+    fn try_prefill(&mut self) -> crate::Result<PrefillOutcome> {
+        let Some(slot_idx) = self.free_slot() else {
+            return Ok(PrefillOutcome::NoWork);
+        };
+        // Admission: the head request must fit its full token budget.
+        let Some(head) = self.queue.front() else {
+            return Ok(PrefillOutcome::NoWork);
+        };
+        let budget =
+            head.req.tokens.len() + head.req.max_new_tokens.min(self.cfg.max_new_tokens);
+        if !self.pool.can_admit(budget) {
+            return Ok(PrefillOutcome::NoWork);
+        }
+        let mut tracked = self.queue.pop_front().unwrap();
+        tracked.queue_ms = tracked.enqueued.elapsed().as_secs_f64() * 1e3;
+        self.pool.allocate(tracked.req.id, budget)?;
+
+        let t0 = Instant::now();
+        let out = match self.backend.prefill(&tracked.req.tokens, tracked.req.dma) {
+            Ok(o) => o,
+            Err(e) => {
+                self.pool.release(tracked.req.id)?;
+                self.stats.rejected += 1;
+                let mut resp = tracked.respond(FinishReason::Rejected);
+                resp.error = Some(e.to_string());
+                return Ok(PrefillOutcome::Finished(resp));
+            }
+        };
+        tracked.prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.prefill_tokens += tracked.req.tokens.len() as u64;
+
+        // First generated token comes from the prefill logits.
+        let tok = argmax(&out.last_logits);
+        tracked.output.push(tok);
+        tracked.next_token = tok;
+        tracked.phase = SeqPhase::Decoding;
+
+        // Single-token request or instant EOS finishes immediately.
+        let max_new = tracked.req.max_new_tokens.min(self.cfg.max_new_tokens);
+        if tok == self.eos_token || max_new <= 1 {
+            self.pool.release(tracked.req.id)?;
+            self.stats.completed += 1;
+            let reason = if tok == self.eos_token {
+                FinishReason::Eos
+            } else {
+                FinishReason::Length
+            };
+            return Ok(PrefillOutcome::Finished(tracked.respond(reason)));
+        }
+        self.active[slot_idx] = Some(Active { tracked, slot: out.slot });
+        Ok(PrefillOutcome::Started)
+    }
+
+    /// One batched decode step over all active sequences; returns any
+    /// completed responses.
+    fn decode_step(&mut self) -> crate::Result<Vec<Response>> {
+        let idxs: Vec<usize> = (0..self.active.len())
+            .filter(|&i| self.active[i].is_some())
+            .collect();
+        if idxs.is_empty() {
+            return Ok(vec![]);
+        }
+        let t0 = Instant::now();
+        let tokens: Vec<i32> = idxs
+            .iter()
+            .map(|&i| self.active[i].as_ref().unwrap().tracked.next_token)
+            .collect();
+
+        // Borrow all selected slots mutably via split_at_mut-free take.
+        let mut taken: Vec<Active> = idxs
+            .iter()
+            .map(|&i| self.active[i].take().unwrap())
+            .collect();
+        {
+            let mut slot_refs: Vec<Option<&mut SlotKv>> =
+                taken.iter_mut().map(|a| Some(&mut a.slot)).collect();
+            let logits = self.backend.decode(&tokens, &mut slot_refs)?;
+            let vocab = self.backend.vocab();
+            let dt = t0.elapsed().as_secs_f64() * 1e3;
+            let batch_n = taken.len();
+            self.stats.decode_steps += 1;
+            self.stats.decode_batch_sum += batch_n as u64;
+            for (bi, act) in taken.iter_mut().enumerate() {
+                let tok = argmax(&logits[bi * vocab..(bi + 1) * vocab]);
+                act.tracked.output.push(tok);
+                act.tracked.next_token = tok;
+                act.tracked.decode_ms += dt / batch_n as f64;
+                self.stats.decode_tokens += 1;
+                self.pool.extend(act.tracked.req.id, 1)?;
+            }
+        }
+
+        // Retire finished sequences, return the rest to their slots.
+        let mut done = Vec::new();
+        for (k, act) in taken.into_iter().enumerate() {
+            let max_new = act.tracked.req.max_new_tokens.min(self.cfg.max_new_tokens);
+            let last = *act.tracked.output.last().unwrap();
+            let cache_full = act.slot.pos >= self.backend.cache_len();
+            let reason = if last == self.eos_token {
+                Some(FinishReason::Eos)
+            } else if act.tracked.output.len() >= max_new {
+                Some(FinishReason::Length)
+            } else if cache_full {
+                Some(FinishReason::CacheFull)
+            } else {
+                None
+            };
+            match reason {
+                Some(r) => {
+                    self.pool.release(act.tracked.req.id)?;
+                    self.stats.completed += 1;
+                    done.push(act.tracked.respond(r));
+                }
+                None => self.active[idxs[k]] = Some(act),
+            }
+        }
+        Ok(done)
+    }
+
+    /// Run one scheduling iteration (prefill-first, then a decode slice).
+    /// Returns completed responses.
+    pub fn step(&mut self) -> crate::Result<Vec<Response>> {
+        let mut out = Vec::new();
+        // Phase 1: admit + prefill while possible.
+        loop {
+            match self.try_prefill()? {
+                PrefillOutcome::Started => {}
+                PrefillOutcome::Finished(resp) => out.push(resp),
+                PrefillOutcome::NoWork => break,
+            }
+        }
+        // Phase 2: a slice of decode steps.
+        for _ in 0..self.cfg.decode_slice {
+            let done = self.decode_step()?;
+            let empty = done.is_empty();
+            out.extend(done);
+            if empty && self.active.iter().all(Option::is_none) {
+                break;
+            }
+            // Re-check prefill as soon as a slot freed up.
+            if !empty && !self.queue.is_empty() {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.active.iter().all(Option::is_none)
+    }
+
+    /// Drive until all submitted work completes; returns all responses.
+    pub fn run_until_idle(&mut self) -> crate::Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while !self.idle() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Threaded handle
+// ---------------------------------------------------------------------
+
+enum Msg {
+    Submit(Request),
+    Shutdown,
+}
+
+/// A worker thread owning an [`Engine`]; requests in, responses out.
+pub struct EngineHandle {
+    tx: mpsc::Sender<Msg>,
+    pub rx: std::sync::Mutex<mpsc::Receiver<Response>>,
+    join: Option<std::thread::JoinHandle<()>>,
+    load: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+}
+
+impl EngineHandle {
+    /// Spawn the engine loop on its own thread. `make_backend` runs on
+    /// the worker thread (PJRT handles are not Send).
+    pub fn spawn<F>(make_backend: F, cfg: EngineConfig, eos_token: i32) -> EngineHandle
+    where
+        F: FnOnce() -> crate::Result<Box<dyn ModelBackend>> + Send + 'static,
+    {
+        let (tx, rx_msg) = mpsc::channel::<Msg>();
+        let (tx_resp, rx) = mpsc::channel::<Response>();
+        let load = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let load2 = load.clone();
+        let join = std::thread::spawn(move || {
+            let backend = match make_backend() {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("engine backend init failed: {e:#}");
+                    return;
+                }
+            };
+            let mut engine = Engine::new(backend, cfg, eos_token);
+            loop {
+                // Drain control messages; block only when idle.
+                let msg = if engine.idle() {
+                    match rx_msg.recv() {
+                        Ok(m) => Some(m),
+                        Err(_) => break,
+                    }
+                } else {
+                    match rx_msg.try_recv() {
+                        Ok(m) => Some(m),
+                        Err(mpsc::TryRecvError::Empty) => None,
+                        Err(mpsc::TryRecvError::Disconnected) => break,
+                    }
+                };
+                match msg {
+                    Some(Msg::Submit(req)) => {
+                        if let Some(resp) = engine.submit(req) {
+                            let _ = tx_resp.send(resp);
+                        }
+                    }
+                    Some(Msg::Shutdown) => break,
+                    None => {}
+                }
+                match engine.step() {
+                    Ok(resps) => {
+                        for r in resps {
+                            let _ = tx_resp.send(r);
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("engine step error: {e:#}");
+                        break;
+                    }
+                }
+                load2.store(engine.load(), std::sync::atomic::Ordering::Relaxed);
+            }
+        });
+        EngineHandle { tx, rx: std::sync::Mutex::new(rx), join: Some(join), load }
+    }
+
+    pub fn submit(&self, req: Request) -> crate::Result<()> {
+        self.tx
+            .send(Msg::Submit(req))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))
+    }
+
+    pub fn load(&self) -> usize {
+        self.load.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for EngineHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::host::HostBackend;
+
+    fn engine() -> Engine {
+        let cfg = EngineConfig { max_new_tokens: 8, ..Default::default() };
+        Engine::new(Box::new(HostBackend::for_tests()), cfg, 5)
+    }
+
+    fn req(id: u64, len: usize, max_new: usize) -> Request {
+        Request {
+            id,
+            tokens: (0..len).map(|i| ((i * 7) % 58) as i32 + 6).collect(),
+            max_new_tokens: max_new,
+            dma: false,
+        }
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut e = engine();
+        assert!(e.submit(req(1, 8, 4)).is_none());
+        let resps = e.run_until_idle().unwrap();
+        assert_eq!(resps.len(), 1);
+        assert_eq!(resps[0].id, 1);
+        assert!(resps[0].output.len() <= 4 && !resps[0].output.is_empty());
+        assert!(matches!(resps[0].finish, FinishReason::Length | FinishReason::Eos));
+        assert_eq!(e.stats.completed, 1);
+    }
+
+    #[test]
+    fn many_requests_batched() {
+        let mut e = engine();
+        for i in 0..6 {
+            assert!(e.submit(req(i, 4 + i as usize, 4)).is_none());
+        }
+        let resps = e.run_until_idle().unwrap();
+        assert_eq!(resps.len(), 6);
+        let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        // With 4 slots and 6 requests, some decode steps must have been
+        // batched (mean decode batch > 1).
+        assert!(e.stats.mean_decode_batch() > 1.0, "{:?}", e.stats);
+    }
+
+    #[test]
+    fn outputs_deterministic_vs_direct_backend() {
+        // Engine batching must not change results: compare with a direct
+        // prefill+decode loop on a fresh backend.
+        let mut e = engine();
+        e.submit(req(1, 6, 4));
+        e.submit(req(2, 9, 4));
+        let mut resps = e.run_until_idle().unwrap();
+        resps.sort_by_key(|r| r.id);
+
+        use crate::runtime::ModelBackend;
+        let mut be = HostBackend::for_tests();
+        for r in &resps {
+            let rq = req(r.id, if r.id == 1 { 6 } else { 9 }, 4);
+            let out = be.prefill(&rq.tokens, false).unwrap();
+            let mut toks = vec![crate::model::argmax(&out.last_logits)];
+            let mut slot = out.slot;
+            while toks.len() < 4 && *toks.last().unwrap() != 5 {
+                let lg = be
+                    .decode(&[*toks.last().unwrap()], &mut [Some(&mut slot)])
+                    .unwrap();
+                toks.push(crate::model::argmax(&lg[..64]));
+            }
+            assert_eq!(r.output, toks, "request {}", r.id);
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_prompt() {
+        let mut e = engine();
+        let r = e.submit(req(1, 200, 4)); // cache is 96 in the test backend
+        let resp = r.expect("should reject");
+        assert_eq!(resp.finish, FinishReason::Rejected);
+        assert!(resp.error.unwrap().contains("exceeds cache"));
+    }
+
+    #[test]
+    fn rejects_empty_prompt() {
+        let mut e = engine();
+        let resp = e.submit(Request { id: 1, tokens: vec![], max_new_tokens: 2, dma: false });
+        assert_eq!(resp.unwrap().finish, FinishReason::Rejected);
+    }
+
+    #[test]
+    fn queue_limit_enforced() {
+        let mut e = engine();
+        e.cfg.queue_limit = 2;
+        assert!(e.submit(req(1, 4, 2)).is_none());
+        assert!(e.submit(req(2, 4, 2)).is_none());
+        let resp = e.submit(req(3, 4, 2)).expect("queue full");
+        assert_eq!(resp.finish, FinishReason::Rejected);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let mut e = engine();
+        e.submit(req(1, 8, 4));
+        e.submit(req(2, 8, 4));
+        e.run_until_idle().unwrap();
+        assert_eq!(e.stats.completed, 2);
+        assert_eq!(e.stats.prefill_tokens, 16);
+        assert!(e.stats.decode_tokens > 0);
+    }
+
+    #[test]
+    fn threaded_handle_round_trip() {
+        let cfg = EngineConfig { max_new_tokens: 4, ..Default::default() };
+        let h = EngineHandle::spawn(
+            || Ok(Box::new(HostBackend::for_tests()) as Box<dyn crate::runtime::ModelBackend>),
+            cfg,
+            5,
+        );
+        for i in 0..3 {
+            h.submit(req(i, 6, 3)).unwrap();
+        }
+        let mut got = 0;
+        while got < 3 {
+            let r = h.rx.lock().unwrap().recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            assert!(!r.output.is_empty());
+            got += 1;
+        }
+        h.shutdown();
+    }
+}

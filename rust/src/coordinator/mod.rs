@@ -1,0 +1,11 @@
+//! The L3 coordinator: request lifecycle, continuous batching with
+//! prefill/decode separation, admission control against KV capacity, and
+//! multi-worker routing — the serving architecture the paper's kernel
+//! plugs into (vLLM-style, adapted to bucketed PJRT executables).
+
+pub mod engine;
+pub mod request;
+pub mod router;
+
+pub use engine::{Engine, EngineHandle};
+pub use request::{FinishReason, Request, Response};

@@ -1,0 +1,127 @@
+//! Request/response types and the request state machine.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Use the DMA (mixed-precision) prefill path.
+    pub dma: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated the EOS token.
+    Eos,
+    /// Hit the per-request new-token limit.
+    Length,
+    /// Hit the engine cache capacity.
+    CacheFull,
+    /// Rejected at admission (queue full / prompt too long).
+    Rejected,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::Length => "length",
+            FinishReason::CacheFull => "cache_full",
+            FinishReason::Rejected => "rejected",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub output: Vec<i32>,
+    pub finish: FinishReason,
+    /// Wall-clock milliseconds spent queued before prefill.
+    pub queue_ms: f64,
+    /// Prefill latency (ms).
+    pub prefill_ms: f64,
+    /// Total decode time (ms) across all generated tokens.
+    pub decode_ms: f64,
+    /// Error detail when rejected.
+    pub error: Option<String>,
+}
+
+/// Engine-internal per-request tracking.
+#[derive(Debug)]
+pub(crate) enum SeqPhase {
+    Queued,
+    Decoding,
+}
+
+#[derive(Debug)]
+pub(crate) struct Tracked {
+    pub req: Request,
+    pub phase: SeqPhase,
+    pub output: Vec<i32>,
+    pub enqueued: Instant,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub queue_ms: f64,
+    /// Next token to feed at the coming decode step.
+    pub next_token: i32,
+}
+
+impl Tracked {
+    pub fn new(req: Request) -> Tracked {
+        Tracked {
+            req,
+            phase: SeqPhase::Queued,
+            output: Vec::new(),
+            enqueued: Instant::now(),
+            prefill_ms: 0.0,
+            decode_ms: 0.0,
+            queue_ms: 0.0,
+            next_token: 0,
+        }
+    }
+
+    pub fn respond(&self, finish: FinishReason) -> Response {
+        Response {
+            id: self.req.id,
+            output: self.output.clone(),
+            finish,
+            queue_ms: self.queue_ms,
+            prefill_ms: self.prefill_ms,
+            decode_ms: self.decode_ms,
+            error: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finish_reason_labels() {
+        assert_eq!(FinishReason::Eos.as_str(), "eos");
+        assert_eq!(FinishReason::Length.as_str(), "length");
+    }
+
+    #[test]
+    fn tracked_responds_with_metrics() {
+        let t = Tracked {
+            req: Request { id: 7, tokens: vec![1], max_new_tokens: 4, dma: true },
+            phase: SeqPhase::Decoding,
+            output: vec![9, 8],
+            enqueued: Instant::now(),
+            prefill_ms: 1.5,
+            decode_ms: 3.0,
+            queue_ms: 0.5,
+            next_token: 8,
+        };
+        let r = t.respond(FinishReason::Length);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.output, vec![9, 8]);
+        assert_eq!(r.finish, FinishReason::Length);
+        assert!(r.prefill_ms > 0.0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Multi-worker request router.
+//!
+//! Dispatches requests across engine workers (each owning its own
+//! backend) with pluggable policy: round-robin or least-loaded. The
+//! reference architecture is vllm-project/router; with the CPU PJRT
+//! client a single worker is typical, but the policies and fan-in are
+//! exercised with host-backend workers in tests.
+
+use super::engine::EngineHandle;
+use super::request::{Request, Response};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+pub struct Router {
+    workers: Vec<EngineHandle>,
+    policy: Policy,
+    next: AtomicUsize,
+}
+
+impl Router {
+    pub fn new(workers: Vec<EngineHandle>, policy: Policy) -> Router {
+        assert!(!workers.is_empty(), "router needs at least one worker");
+        Router { workers, policy, next: AtomicUsize::new(0) }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Pick a worker index for the next request.
+    pub fn pick(&self) -> usize {
+        match self.policy {
+            Policy::RoundRobin => {
+                self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len()
+            }
+            Policy::LeastLoaded => {
+                let mut best = 0;
+                let mut best_load = usize::MAX;
+                for (i, w) in self.workers.iter().enumerate() {
+                    let l = w.load();
+                    if l < best_load {
+                        best_load = l;
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    pub fn submit(&self, req: Request) -> crate::Result<usize> {
+        let w = self.pick();
+        self.workers[w].submit(req)?;
+        Ok(w)
+    }
+
+    /// Drain up to `n` responses across all workers (non-blocking).
+    pub fn poll_responses(&self, n: usize) -> Vec<Response> {
+        let mut out = Vec::new();
+        for w in &self.workers {
+            while out.len() < n {
+                match w.rx.lock().unwrap().try_recv() {
+                    Ok(r) => out.push(r),
+                    Err(_) => break,
+                }
+            }
+        }
+        out
+    }
+
+    /// Blocking collect of exactly `n` responses (round-robin polling).
+    pub fn collect_responses(&self, n: usize, timeout: std::time::Duration) -> Vec<Response> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut out = Vec::new();
+        while out.len() < n && std::time::Instant::now() < deadline {
+            let got = self.poll_responses(n - out.len());
+            if got.is_empty() {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            out.extend(got);
+        }
+        out
+    }
+
+    pub fn shutdown(self) {
+        for w in self.workers {
+            w.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::runtime::host::HostBackend;
+    use crate::runtime::ModelBackend;
+
+    fn spawn_workers(n: usize) -> Vec<EngineHandle> {
+        (0..n)
+            .map(|_| {
+                EngineHandle::spawn(
+                    || Ok(Box::new(HostBackend::for_tests()) as Box<dyn ModelBackend>),
+                    EngineConfig { max_new_tokens: 3, ..Default::default() },
+                    5,
+                )
+            })
+            .collect()
+    }
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            tokens: (0..6).map(|i| ((i * 11) % 58) as i32 + 6).collect(),
+            max_new_tokens: 2,
+            dma: false,
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads() {
+        let r = Router::new(spawn_workers(2), Policy::RoundRobin);
+        let picks: Vec<usize> = (0..4).map(|_| r.pick()).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+        r.shutdown();
+    }
+
+    #[test]
+    fn submit_and_collect() {
+        let r = Router::new(spawn_workers(2), Policy::RoundRobin);
+        for i in 0..4 {
+            r.submit(req(i)).unwrap();
+        }
+        let resps = r.collect_responses(4, std::time::Duration::from_secs(60));
+        assert_eq!(resps.len(), 4);
+        let mut ids: Vec<u64> = resps.iter().map(|x| x.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        r.shutdown();
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle() {
+        let r = Router::new(spawn_workers(2), Policy::LeastLoaded);
+        // Both idle: always picks a valid index.
+        let w = r.pick();
+        assert!(w < 2);
+        r.shutdown();
+    }
+}

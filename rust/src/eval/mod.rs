@@ -1,0 +1,217 @@
+//! Synthetic LongBench harness (Table 3 proxy).
+//!
+//! Mirrors `python/compile/tasks.py`: the same three long-context task
+//! families over the same token conventions, generated in Rust and
+//! scored by masked-position greedy accuracy through a
+//! [`ModelBackend`]'s eval graphs. The paper's claim is *relative*
+//! (DMA attention matches native attention on the same model); the
+//! harness reports both columns side by side.
+
+use crate::config::TokenIds;
+use crate::runtime::ModelBackend;
+use crate::util::rng::Rng;
+
+pub const TASKS: [&str; 3] = ["copy", "needle", "induction"];
+
+/// One generated example: tokens plus a 0/1 score mask over *targets*
+/// (mask[t] == 1 means position t's target tokens[t+1] is scored).
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+fn payload(rng: &mut Rng, ids: &TokenIds) -> i32 {
+    rng.int_in(ids.payload_start as i64, ids.vocab as i64) as i32
+}
+
+pub fn gen_copy(rng: &mut Rng, ids: &TokenIds, length: usize) -> Example {
+    let n = (length - 2) / 2;
+    let w: Vec<i32> = (0..n).map(|_| payload(rng, ids)).collect();
+    let mut tokens = vec![ids.pad; length];
+    tokens[0] = ids.bos;
+    tokens[1..1 + n].copy_from_slice(&w);
+    tokens[1 + n] = ids.sep;
+    tokens[2 + n..2 + 2 * n].copy_from_slice(&w);
+    let mut mask = vec![0f32; length];
+    for m in mask.iter_mut().take(1 + 2 * n).skip(1 + n) {
+        *m = 1.0;
+    }
+    Example { tokens, mask }
+}
+
+pub fn gen_needle(rng: &mut Rng, ids: &TokenIds, length: usize) -> Example {
+    let mut tokens: Vec<i32> = (0..length).map(|_| payload(rng, ids)).collect();
+    tokens[0] = ids.bos;
+    let key = payload(rng, ids);
+    let val = payload(rng, ids);
+    let pos = rng.int_in(2, (length as i64 / 3).max(3)) as usize;
+    tokens[pos] = ids.mrk;
+    tokens[pos + 1] = key;
+    tokens[pos + 2] = val;
+    // De-duplicate accidental key occurrences (mirrors tasks.py).
+    let replacement = ids.payload_start
+        + (key - ids.payload_start + 1) % (ids.vocab - ids.payload_start);
+    for (i, t) in tokens.iter_mut().enumerate() {
+        if *t == key && i != pos + 1 {
+            *t = replacement;
+        }
+    }
+    tokens[length - 3] = ids.qry;
+    tokens[length - 2] = key;
+    tokens[length - 1] = val;
+    let mut mask = vec![0f32; length];
+    mask[length - 2] = 1.0;
+    Example { tokens, mask }
+}
+
+pub fn gen_induction(rng: &mut Rng, ids: &TokenIds, length: usize) -> Example {
+    let period = rng.int_in(4, 9) as usize;
+    let motif: Vec<i32> = (0..period).map(|_| payload(rng, ids)).collect();
+    let mut tokens = vec![0i32; length];
+    for (i, t) in tokens.iter_mut().enumerate() {
+        *t = motif[i % period];
+    }
+    tokens[0] = ids.bos;
+    let mut mask = vec![0f32; length];
+    for m in mask.iter_mut().take(length - 1).skip(period) {
+        *m = 1.0;
+    }
+    Example { tokens, mask }
+}
+
+pub fn generate(task: &str, rng: &mut Rng, ids: &TokenIds, length: usize) -> Example {
+    match task {
+        "copy" => gen_copy(rng, ids, length),
+        "needle" => gen_needle(rng, ids, length),
+        "induction" => gen_induction(rng, ids, length),
+        _ => panic!("unknown task {task}"),
+    }
+}
+
+/// Score one batch of examples through the backend: fraction of masked
+/// targets predicted correctly by greedy argmax.
+pub fn score_batch(
+    backend: &mut dyn ModelBackend,
+    examples: &[Example],
+    length: usize,
+    dma: bool,
+) -> crate::Result<f64> {
+    let b = examples.len();
+    let vocab = backend.vocab();
+    let mut tokens = Vec::with_capacity(b * length);
+    for e in examples {
+        anyhow::ensure!(e.tokens.len() == length, "length mismatch");
+        tokens.extend_from_slice(&e.tokens);
+    }
+    let logits = backend.eval_logits(&tokens, b, length, dma)?;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (bi, e) in examples.iter().enumerate() {
+        for t in 0..length - 1 {
+            if e.mask[t] > 0.0 {
+                let row = &logits[(bi * length + t) * vocab..(bi * length + t + 1) * vocab];
+                let pred = crate::model::argmax(row);
+                total += 1;
+                if pred == e.tokens[t + 1] {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    Ok(if total == 0 { 0.0 } else { correct as f64 / total as f64 })
+}
+
+/// A Table-3 row: task name + native/DMA scores.
+#[derive(Debug, Clone)]
+pub struct EvalRow {
+    pub task: String,
+    pub native: f64,
+    pub dma: f64,
+}
+
+/// Run the full suite at the given (batch, length) shapes.
+pub fn run_suite(
+    backend: &mut dyn ModelBackend,
+    ids: &TokenIds,
+    shapes: &[(usize, usize)],
+    seed: u64,
+) -> crate::Result<Vec<EvalRow>> {
+    let mut rows = Vec::new();
+    for task in TASKS {
+        for &(b, l) in shapes {
+            let mut rng = Rng::new(seed ^ (l as u64) << 8);
+            let examples: Vec<Example> =
+                (0..b).map(|_| generate(task, &mut rng, ids, l)).collect();
+            let native = score_batch(backend, &examples, l, false)?;
+            let dma = score_batch(backend, &examples, l, true)?;
+            rows.push(EvalRow { task: format!("{task}_{l}"), native, dma });
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids() -> TokenIds {
+        TokenIds { pad: 0, bos: 1, sep: 2, qry: 3, mrk: 4, eos: 5,
+                   payload_start: 6, vocab: 64 }
+    }
+
+    #[test]
+    fn copy_structure() {
+        let mut rng = Rng::new(1);
+        let e = gen_copy(&mut rng, &ids(), 66);
+        let n = 32;
+        assert_eq!(e.tokens[0], 1);
+        assert_eq!(e.tokens[1 + n], 2);
+        assert_eq!(&e.tokens[1..1 + n], &e.tokens[2 + n..2 + 2 * n]);
+        assert!(e.mask.iter().sum::<f32>() > 0.0);
+    }
+
+    #[test]
+    fn needle_key_unique_and_answer_correct() {
+        let mut rng = Rng::new(2);
+        let tid = ids();
+        let e = gen_needle(&mut rng, &tid, 96);
+        let l = 96;
+        assert_eq!(e.tokens[l - 3], tid.qry);
+        let mrk_pos = e.tokens.iter().position(|&t| t == tid.mrk).unwrap();
+        let key = e.tokens[mrk_pos + 1];
+        let val = e.tokens[mrk_pos + 2];
+        assert_eq!(e.tokens[l - 2], key);
+        assert_eq!(e.tokens[l - 1], val);
+        assert_eq!(e.tokens.iter().filter(|&&t| t == key).count(), 2);
+        assert_eq!(e.mask[l - 2], 1.0);
+    }
+
+    #[test]
+    fn induction_is_periodic() {
+        let mut rng = Rng::new(3);
+        let e = gen_induction(&mut rng, &ids(), 64);
+        let ok = (4..9).any(|p| (p..64).all(|i| i < p + 1 || e.tokens[i] == e.tokens[i - p] || i - p == 0));
+        assert!(ok);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let mut rng = Rng::new(4);
+        let tid = ids();
+        for task in TASKS {
+            let e = generate(task, &mut rng, &tid, 96);
+            assert!(e.tokens.iter().all(|&t| (0..64).contains(&t)), "{task}");
+        }
+    }
+
+    #[test]
+    fn suite_runs_on_host_backend() {
+        let mut be = crate::runtime::host::HostBackend::for_tests();
+        let rows = run_suite(&mut be, &ids(), &[(2, 32)], 7).unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!((0.0..=1.0).contains(&r.native));
+            assert!((0.0..=1.0).contains(&r.dma));
+        }
+    }
+}

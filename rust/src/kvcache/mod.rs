@@ -1,0 +1,438 @@
+//! KV-cache management.
+//!
+//! Two cooperating pieces, mirroring how vLLM-style paged attention
+//! adapts to *bucketed* PJRT executables (static shapes):
+//!
+//! * [`BlockPool`] — vLLM-style paged accounting: fixed-size token
+//!   blocks, per-sequence block tables, refcounted sharing (prefix
+//!   reuse), capacity-based admission. The scheduler uses it to decide
+//!   whether a request can be admitted without cache thrashing.
+//! * [`SlotCache`] — the physical layout: the decode executable takes
+//!   `[n_layers, B, H_kv, C, d_head]` cache tensors, so each running
+//!   sequence owns one batch slot; this type packs/unpacks per-slot
+//!   caches into the flat batch literals.
+
+use anyhow::{anyhow, bail};
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------------
+// Paged block pool (admission accounting)
+// ---------------------------------------------------------------------
+
+pub type SeqId = u64;
+
+#[derive(Clone, Debug)]
+struct SeqEntry {
+    blocks: Vec<usize>,
+    tokens: usize,
+}
+
+/// Paged KV block pool with refcounted blocks.
+pub struct BlockPool {
+    block_tokens: usize,
+    refcount: Vec<u32>,
+    free: Vec<usize>,
+    seqs: BTreeMap<SeqId, SeqEntry>,
+}
+
+impl BlockPool {
+    pub fn new(num_blocks: usize, block_tokens: usize) -> BlockPool {
+        BlockPool {
+            block_tokens,
+            refcount: vec![0; num_blocks],
+            free: (0..num_blocks).rev().collect(),
+            seqs: BTreeMap::new(),
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.refcount.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_needed(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Can a sequence of `tokens` tokens be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_needed(tokens) <= self.free.len()
+    }
+
+    /// Allocate blocks for a new sequence.
+    pub fn allocate(&mut self, seq: SeqId, tokens: usize) -> crate::Result<()> {
+        if self.seqs.contains_key(&seq) {
+            bail!("sequence {seq} already allocated");
+        }
+        let need = self.blocks_needed(tokens);
+        if need > self.free.len() {
+            bail!("out of KV blocks: need {need}, free {}", self.free.len());
+        }
+        let mut blocks = Vec::with_capacity(need);
+        for _ in 0..need {
+            let b = self.free.pop().unwrap();
+            self.refcount[b] = 1;
+            blocks.push(b);
+        }
+        self.seqs.insert(seq, SeqEntry { blocks, tokens });
+        Ok(())
+    }
+
+    /// Extend a sequence by `n` tokens (decode), allocating on block
+    /// boundaries.
+    pub fn extend(&mut self, seq: SeqId, n: usize) -> crate::Result<()> {
+        let bt = self.block_tokens;
+        let entry = self
+            .seqs
+            .get_mut(&seq)
+            .ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        let need_total = (entry.tokens + n).div_ceil(bt);
+        let extra = need_total.saturating_sub(entry.blocks.len());
+        if extra > self.free.len() {
+            bail!("out of KV blocks extending seq {seq}");
+        }
+        for _ in 0..extra {
+            let b = self.free.pop().unwrap();
+            self.refcount[b] = 1;
+            entry.blocks.push(b);
+        }
+        entry.tokens += n;
+        Ok(())
+    }
+
+    /// Fork a sequence sharing all current blocks (copy-on-write prefix
+    /// reuse, e.g. beam candidates).
+    pub fn fork(&mut self, parent: SeqId, child: SeqId) -> crate::Result<()> {
+        if self.seqs.contains_key(&child) {
+            bail!("child {child} exists");
+        }
+        let entry = self
+            .seqs
+            .get(&parent)
+            .ok_or_else(|| anyhow!("unknown parent {parent}"))?
+            .clone();
+        for &b in &entry.blocks {
+            self.refcount[b] += 1;
+        }
+        self.seqs.insert(child, entry);
+        Ok(())
+    }
+
+    /// Release a sequence; blocks return to the pool when refcount hits 0.
+    pub fn release(&mut self, seq: SeqId) -> crate::Result<()> {
+        let entry = self
+            .seqs
+            .remove(&seq)
+            .ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        for b in entry.blocks {
+            self.refcount[b] -= 1;
+            if self.refcount[b] == 0 {
+                self.free.push(b);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn seq_tokens(&self, seq: SeqId) -> Option<usize> {
+        self.seqs.get(&seq).map(|e| e.tokens)
+    }
+
+    /// Invariant check used by property tests.
+    pub fn check_invariants(&self) -> crate::Result<()> {
+        let used: usize = self.refcount.iter().filter(|&&r| r > 0).count();
+        if used + self.free.len() != self.refcount.len() {
+            bail!("block accounting leak: used {used} + free {} != {}",
+                  self.free.len(), self.refcount.len());
+        }
+        for (id, e) in &self.seqs {
+            if e.blocks.len() != e.tokens.div_ceil(self.block_tokens) {
+                bail!("seq {id}: {} blocks for {} tokens", e.blocks.len(), e.tokens);
+            }
+            for &b in &e.blocks {
+                if self.refcount[b] == 0 {
+                    bail!("seq {id} references freed block {b}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Slotted batch cache (physical layout for bucketed executables)
+// ---------------------------------------------------------------------
+
+/// Per-slot KV storage: flat `[n_layers, H_kv, C, d_head]` f32.
+#[derive(Clone)]
+pub struct SlotKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub pos: usize,
+}
+
+/// Packs per-sequence caches into `[n_layers, B, H_kv, C, d_head]` batch
+/// literals for the decode executable and scatters the outputs back.
+pub struct SlotCache {
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub cache_len: usize,
+    pub d_head: usize,
+}
+
+impl SlotCache {
+    pub fn new(n_layers: usize, n_kv_heads: usize, cache_len: usize, d_head: usize) -> Self {
+        SlotCache { n_layers, n_kv_heads, cache_len, d_head }
+    }
+
+    pub fn slot_elems(&self) -> usize {
+        self.n_layers * self.n_kv_heads * self.cache_len * self.d_head
+    }
+
+    pub fn empty_slot(&self) -> SlotKv {
+        SlotKv { k: vec![0.0; self.slot_elems()], v: vec![0.0; self.slot_elems()], pos: 0 }
+    }
+
+    /// Build a slot from a prefill output cache shaped
+    /// `[n_layers, H_kv, L, d_head]` (L <= cache_len), zero-padded.
+    pub fn slot_from_prefill(&self, kc: &[f32], vc: &[f32], l: usize) -> crate::Result<SlotKv> {
+        let src_elems = self.n_layers * self.n_kv_heads * l * self.d_head;
+        anyhow::ensure!(kc.len() == src_elems && vc.len() == src_elems,
+                        "prefill cache size {} != expected {src_elems}", kc.len());
+        anyhow::ensure!(l <= self.cache_len, "prefill len {l} > cache {}", self.cache_len);
+        let mut slot = self.empty_slot();
+        let (c, dh) = (self.cache_len, self.d_head);
+        for li in 0..self.n_layers {
+            for h in 0..self.n_kv_heads {
+                let src = (li * self.n_kv_heads + h) * l * dh;
+                let dst = (li * self.n_kv_heads + h) * c * dh;
+                slot.k[dst..dst + l * dh].copy_from_slice(&kc[src..src + l * dh]);
+                slot.v[dst..dst + l * dh].copy_from_slice(&vc[src..src + l * dh]);
+            }
+        }
+        slot.pos = l;
+        Ok(slot)
+    }
+
+    /// Gather `slots` into one `[n_layers, B, H_kv, C, d_head]` batch
+    /// buffer (missing slots are zero).
+    pub fn gather_batch(&self, slots: &[Option<&SlotKv>], out_k: &mut [f32], out_v: &mut [f32]) {
+        let b = slots.len();
+        let (c, dh) = (self.cache_len, self.d_head);
+        let stride_h = c * dh;
+        let stride_b = self.n_kv_heads * stride_h;
+        let stride_l = b * stride_b;
+        out_k.fill(0.0);
+        out_v.fill(0.0);
+        for (bi, slot) in slots.iter().enumerate() {
+            let Some(s) = slot else { continue };
+            for li in 0..self.n_layers {
+                for h in 0..self.n_kv_heads {
+                    let src = (li * self.n_kv_heads + h) * stride_h;
+                    let dst = li * stride_l + bi * stride_b + h * stride_h;
+                    out_k[dst..dst + stride_h].copy_from_slice(&s.k[src..src + stride_h]);
+                    out_v[dst..dst + stride_h].copy_from_slice(&s.v[src..src + stride_h]);
+                }
+            }
+        }
+    }
+
+    /// Scatter the decode executable's updated batch caches back into the
+    /// slots (only rows that exist).
+    pub fn scatter_batch(&self, in_k: &[f32], in_v: &[f32], slots: &mut [Option<&mut SlotKv>]) {
+        let b = slots.len();
+        let (c, dh) = (self.cache_len, self.d_head);
+        let stride_h = c * dh;
+        let stride_b = self.n_kv_heads * stride_h;
+        let stride_l = b * stride_b;
+        for (bi, slot) in slots.iter_mut().enumerate() {
+            let Some(s) = slot else { continue };
+            for li in 0..self.n_layers {
+                for h in 0..self.n_kv_heads {
+                    let dst = (li * self.n_kv_heads + h) * stride_h;
+                    let src = li * stride_l + bi * stride_b + h * stride_h;
+                    s.k[dst..dst + stride_h].copy_from_slice(&in_k[src..src + stride_h]);
+                    s.v[dst..dst + stride_h].copy_from_slice(&in_v[src..src + stride_h]);
+                }
+            }
+        }
+    }
+
+    pub fn batch_elems(&self, b: usize) -> usize {
+        self.n_layers * b * self.n_kv_heads * self.cache_len * self.d_head
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_release() {
+        let mut p = BlockPool::new(10, 16);
+        p.allocate(1, 40).unwrap(); // 3 blocks
+        assert_eq!(p.free_blocks(), 7);
+        p.release(1).unwrap();
+        assert_eq!(p.free_blocks(), 10);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extend_on_boundary() {
+        let mut p = BlockPool::new(4, 16);
+        p.allocate(1, 16).unwrap(); // exactly 1 block
+        assert_eq!(p.free_blocks(), 3);
+        p.extend(1, 1).unwrap(); // crosses into block 2
+        assert_eq!(p.free_blocks(), 2);
+        for _ in 0..15 {
+            p.extend(1, 1).unwrap(); // fills block 2, no new alloc
+        }
+        assert_eq!(p.free_blocks(), 2);
+        p.extend(1, 1).unwrap();
+        assert_eq!(p.free_blocks(), 1);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_control() {
+        let mut p = BlockPool::new(4, 16);
+        assert!(p.can_admit(64));
+        assert!(!p.can_admit(65));
+        p.allocate(1, 48).unwrap();
+        assert!(p.can_admit(16));
+        assert!(!p.can_admit(17));
+    }
+
+    #[test]
+    fn oom_is_error_not_panic() {
+        let mut p = BlockPool::new(2, 16);
+        p.allocate(1, 32).unwrap();
+        assert!(p.allocate(2, 1).is_err());
+        assert!(p.extend(1, 1).is_err());
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_shares_blocks() {
+        let mut p = BlockPool::new(4, 16);
+        p.allocate(1, 32).unwrap();
+        p.fork(1, 2).unwrap();
+        assert_eq!(p.free_blocks(), 2); // shared, no new blocks
+        p.release(1).unwrap();
+        assert_eq!(p.free_blocks(), 2); // child still holds them
+        p.release(2).unwrap();
+        assert_eq!(p.free_blocks(), 4);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_allocate_rejected() {
+        let mut p = BlockPool::new(4, 16);
+        p.allocate(1, 16).unwrap();
+        assert!(p.allocate(1, 16).is_err());
+    }
+
+    #[test]
+    fn property_random_ops_keep_invariants() {
+        crate::util::prop::check("blockpool invariants", 25, |rng| {
+            let mut p = BlockPool::new(32, 8);
+            let mut live: Vec<SeqId> = Vec::new();
+            let mut next_id: SeqId = 0;
+            for _ in 0..200 {
+                match rng.below(4) {
+                    0 => {
+                        let toks = rng.int_in(1, 40) as usize;
+                        if p.can_admit(toks) {
+                            p.allocate(next_id, toks).map_err(|e| e.to_string())?;
+                            live.push(next_id);
+                            next_id += 1;
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = rng.below(live.len() as u64) as usize;
+                            let _ = p.extend(live[i], rng.int_in(1, 8) as usize);
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() && p.free_blocks() > 4 {
+                            let i = rng.below(live.len() as u64) as usize;
+                            if p.fork(live[i], next_id).is_ok() {
+                                live.push(next_id);
+                                next_id += 1;
+                            }
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.below(live.len() as u64) as usize;
+                            let id = live.swap_remove(i);
+                            p.release(id).map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+                p.check_invariants().map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn slot_gather_scatter_round_trip() {
+        let sc = SlotCache::new(2, 3, 8, 4);
+        let mut s0 = sc.empty_slot();
+        let mut s1 = sc.empty_slot();
+        for (i, v) in s0.k.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        for (i, v) in s1.k.iter_mut().enumerate() {
+            *v = -(i as f32);
+        }
+        s0.v.copy_from_slice(&s0.k);
+        s1.v.copy_from_slice(&s1.k);
+
+        let b = 2;
+        let mut bk = vec![0f32; sc.batch_elems(b)];
+        let mut bv = vec![0f32; sc.batch_elems(b)];
+        sc.gather_batch(&[Some(&s0), Some(&s1)], &mut bk, &mut bv);
+
+        let mut r0 = sc.empty_slot();
+        let mut r1 = sc.empty_slot();
+        sc.scatter_batch(&bk, &bv, &mut [Some(&mut r0), Some(&mut r1)]);
+        assert_eq!(r0.k, s0.k);
+        assert_eq!(r1.k, s1.k);
+        assert_eq!(r1.v, s1.v);
+    }
+
+    #[test]
+    fn slot_from_prefill_pads() {
+        let sc = SlotCache::new(1, 2, 8, 4);
+        let l = 3;
+        let n = 1 * 2 * l * 4;
+        let kc: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let vc = kc.clone();
+        let slot = sc.slot_from_prefill(&kc, &vc, l).unwrap();
+        assert_eq!(slot.pos, 3);
+        // Head 0 rows 0..3 copied, rows 3..8 zero.
+        assert_eq!(slot.k[0], 0.0);
+        assert_eq!(slot.k[3 * 4 - 1], 11.0);
+        assert!(slot.k[3 * 4..8 * 4].iter().all(|&x| x == 0.0));
+        // Head 1 starts at cache stride.
+        assert_eq!(slot.k[8 * 4], 12.0);
+    }
+
+    #[test]
+    fn gather_with_empty_slots_zeroes() {
+        let sc = SlotCache::new(1, 1, 4, 2);
+        let mut s0 = sc.empty_slot();
+        s0.k.fill(5.0);
+        s0.v.fill(6.0);
+        let mut bk = vec![9f32; sc.batch_elems(2)];
+        let mut bv = vec![9f32; sc.batch_elems(2)];
+        sc.gather_batch(&[Some(&s0), None], &mut bk, &mut bv);
+        assert!(bk[..8].iter().all(|&x| x == 5.0));
+        assert!(bk[8..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,36 @@
+//! # DMA — Diagonal-Tiled Mixed-Precision Attention
+//!
+//! Rust coordinator for a full-system reproduction of *"Diagonal-Tiled
+//! Mixed-Precision Attention for Efficient Low-Bit MXFP Inference"*
+//! (Ding, Zhang, Guo; 2026) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map:
+//!
+//! * **L1/L2 (build time)** — `python/compile/` authors the Pallas MXFP
+//!   kernels and the JAX model, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **L3 (this crate)** — owns the request path: PJRT runtime
+//!   ([`runtime`]), continuous batching and prefill/decode scheduling
+//!   ([`coordinator`]), slotted/paged KV-cache management ([`kvcache`]),
+//!   a TCP JSON-lines server ([`server`]).
+//!
+//! The paper's numerics are mirrored bit-exactly in Rust ([`mxfp`],
+//! [`attention`]) so every table and figure of the evaluation can be
+//! regenerated without a GPU ([`perfmodel`] projects measured structure
+//! onto B200 throughput; see DESIGN.md §4 for the substitution map).
+
+pub mod attention;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod mxfp;
+pub mod perfmodel;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,137 @@
+//! `dma` — leader entrypoint for the DMA serving stack.
+//!
+//! Subcommands:
+//!   serve  --artifacts DIR --addr HOST:PORT [--workers N] [--host-backend]
+//!   eval   --artifacts DIR [--seed S] [--host-backend]
+//!   smoke  --artifacts DIR            run the fn_smoke artifact
+//!   info   --artifacts DIR            print the artifact inventory
+
+use dma::config::{EngineConfig, MetaConfig};
+use dma::coordinator::engine::EngineHandle;
+use dma::coordinator::router::{Policy, Router};
+use dma::runtime::host::HostBackend;
+use dma::runtime::pjrt::PjrtBackend;
+use dma::runtime::ModelBackend;
+use dma::util::cli::Args;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: dma <serve|eval|smoke|info> [--artifacts DIR] [--addr H:P] \
+         [--workers N] [--host-backend] [--seed S]"
+    );
+    std::process::exit(2);
+}
+
+fn make_backend(
+    artifacts: &str,
+    host: bool,
+) -> dma::Result<Box<dyn ModelBackend>> {
+    if host {
+        Ok(Box::new(HostBackend::for_tests()))
+    } else {
+        let meta = MetaConfig::load(artifacts)?;
+        Ok(Box::new(PjrtBackend::new(meta)?))
+    }
+}
+
+fn cmd_serve(args: &Args) -> dma::Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let addr = args.get_or("addr", "127.0.0.1:7433");
+    let workers = args.usize_or("workers", 1);
+    let host = args.flag("host-backend");
+    let eos = if host {
+        5
+    } else {
+        MetaConfig::load(&artifacts)?.tokens.eos
+    };
+    let cfg = EngineConfig {
+        artifact_dir: artifacts.clone().into(),
+        max_new_tokens: args.usize_or("max-new-tokens", 32),
+        ..Default::default()
+    };
+    let handles: Vec<EngineHandle> = (0..workers)
+        .map(|_| {
+            let a = artifacts.clone();
+            let c = cfg.clone();
+            EngineHandle::spawn(move || make_backend(&a, host), c, eos)
+        })
+        .collect();
+    let router = Arc::new(Router::new(handles, Policy::LeastLoaded));
+    let stop = Arc::new(AtomicBool::new(false));
+    println!("dma: serving on {addr} ({} worker(s))", workers);
+    dma::server::serve(&addr, router, stop, |a| println!("dma: bound {a}"))
+}
+
+fn cmd_eval(args: &Args) -> dma::Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let seed = args.usize_or("seed", 7) as u64;
+    let host = args.flag("host-backend");
+    let (mut backend, ids, shapes): (Box<dyn ModelBackend>, _, _) = if host {
+        let be = HostBackend::for_tests();
+        let ids = dma::config::TokenIds {
+            pad: 0, bos: 1, sep: 2, qry: 3, mrk: 4, eos: 5,
+            payload_start: 6, vocab: 64,
+        };
+        (Box::new(be), ids, vec![(2usize, 32usize)])
+    } else {
+        let meta = MetaConfig::load(&artifacts)?;
+        let ids = meta.tokens;
+        let shapes = meta.eval_shapes.clone();
+        (Box::new(PjrtBackend::new(meta)?), ids, shapes)
+    };
+    println!("Table 3 (synthetic LongBench proxy) — native vs DMA");
+    println!("{:<16} {:>8} {:>8}", "task", "native", "dma");
+    let rows = dma::eval::run_suite(backend.as_mut(), &ids, &shapes, seed)?;
+    let (mut sn, mut sd) = (0.0, 0.0);
+    for r in &rows {
+        println!("{:<16} {:>8.3} {:>8.3}", r.task, r.native, r.dma);
+        sn += r.native;
+        sd += r.dma;
+    }
+    println!("{:<16} {:>8.3} {:>8.3}", "Avg.", sn / rows.len() as f64,
+             sd / rows.len() as f64);
+    Ok(())
+}
+
+fn cmd_smoke(args: &Args) -> dma::Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let meta = MetaConfig::load(&artifacts)?;
+    let mut be = PjrtBackend::new(meta)?;
+    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
+    let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2])?;
+    let outs = be.run("fn_smoke", false, vec![x, y])?;
+    let v: Vec<f32> = outs[0].to_vec()?;
+    anyhow::ensure!(v == vec![5., 5., 9., 9.], "unexpected smoke output {v:?}");
+    println!("smoke OK: {v:?}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> dma::Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let meta = MetaConfig::load(&artifacts)?;
+    println!("model: {:?}", meta.model);
+    println!("cache_len: {}", meta.cache_len);
+    println!("prefill buckets: {:?}", meta.prefill_lens);
+    println!("decode buckets:  {:?}", meta.decode_batches);
+    println!("eval shapes:     {:?}", meta.eval_shapes);
+    println!("params: {} tensors", meta.param_order.len());
+    Ok(())
+}
+
+fn main() {
+    let args = Args::parse(&["host-backend"]);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+    let result = match cmd {
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
+        "smoke" => cmd_smoke(&args),
+        "info" => cmd_info(&args),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("dma {cmd}: error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,139 @@
+//! Similarity / error metrics used across Tables 2, 5 and 8:
+//! cosine similarity, PSNR, relative L1 distance, RMSE.
+//!
+//! Definitions match the paper's usage: metrics are computed between a
+//! reference tensor (full-precision attention scores or outputs) and its
+//! quantized counterpart, flattened.
+
+/// Cosine similarity of two flat vectors.
+pub fn cos_sim(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += (x as f64).powi(2);
+        nb += (y as f64).powi(2);
+    }
+    if na == 0.0 || nb == 0.0 {
+        return if na == nb { 1.0 } else { 0.0 };
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Root-mean-square error.
+pub fn rmse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let s: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum();
+    (s / a.len() as f64).sqrt()
+}
+
+/// Peak signal-to-noise ratio in dB; peak = max |reference|.
+pub fn psnr(reference: &[f32], quantized: &[f32]) -> f64 {
+    let peak = reference
+        .iter()
+        .map(|v| v.abs() as f64)
+        .fold(0.0f64, f64::max);
+    let e = rmse(reference, quantized);
+    if e == 0.0 {
+        return f64::INFINITY;
+    }
+    20.0 * (peak / e).log10()
+}
+
+/// Relative L1 distance: sum|a-b| / sum|a|.
+pub fn rel_l1(reference: &[f32], quantized: &[f32]) -> f64 {
+    assert_eq!(reference.len(), quantized.len());
+    let num: f64 = reference
+        .iter()
+        .zip(quantized)
+        .map(|(&x, &y)| ((x - y) as f64).abs())
+        .sum();
+    let den: f64 = reference.iter().map(|v| v.abs() as f64).sum();
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    num / den
+}
+
+/// Bundle of all four metrics (one table row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimilarityRow {
+    pub cos_sim: f64,
+    pub psnr: f64,
+    pub rel_l1: f64,
+    pub rmse: f64,
+}
+
+pub fn similarity(reference: &[f32], quantized: &[f32]) -> SimilarityRow {
+    SimilarityRow {
+        cos_sim: cos_sim(reference, quantized),
+        psnr: psnr(reference, quantized),
+        rel_l1: rel_l1(reference, quantized),
+        rmse: rmse(reference, quantized),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_vectors() {
+        let a = vec![1.0f32, -2.0, 3.0];
+        let s = similarity(&a, &a);
+        assert!((s.cos_sim - 1.0).abs() < 1e-12);
+        assert_eq!(s.rmse, 0.0);
+        assert_eq!(s.rel_l1, 0.0);
+        assert!(s.psnr.is_infinite());
+    }
+
+    #[test]
+    fn orthogonal_vectors() {
+        let a = vec![1.0f32, 0.0];
+        let b = vec![0.0f32, 1.0];
+        assert!(cos_sim(&a, &b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn opposite_vectors() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![-1.0f32, -2.0];
+        assert!((cos_sim(&a, &b) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmse_known() {
+        let a = vec![0.0f32, 0.0];
+        let b = vec![3.0f32, 4.0];
+        assert!((rmse(&a, &b) - (12.5f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn psnr_decreases_with_noise() {
+        let a: Vec<f32> = (0..100).map(|i| (i as f32 * 0.1).sin()).collect();
+        let small: Vec<f32> = a.iter().map(|v| v + 0.001).collect();
+        let big: Vec<f32> = a.iter().map(|v| v + 0.1).collect();
+        assert!(psnr(&a, &small) > psnr(&a, &big));
+    }
+
+    #[test]
+    fn rel_l1_scale_invariant() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![1.1f32, 2.1, 3.1];
+        let a2: Vec<f32> = a.iter().map(|v| v * 10.0).collect();
+        let b2: Vec<f32> = b.iter().map(|v| v * 10.0).collect();
+        assert!((rel_l1(&a, &b) - rel_l1(&a2, &b2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_reference_edge_cases() {
+        let z = vec![0.0f32; 4];
+        assert_eq!(cos_sim(&z, &z), 1.0);
+        assert_eq!(rel_l1(&z, &z), 0.0);
+        assert!(rel_l1(&z, &[1.0, 0.0, 0.0, 0.0]).is_infinite());
+    }
+}

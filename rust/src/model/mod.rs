@@ -1,0 +1,542 @@
+//! CPU mirror of the L2 JAX model (`python/compile/model.py`).
+//!
+//! Serves as (a) the host-fallback executor behind the same interface as
+//! the PJRT runtime, so the whole serving stack is testable without
+//! artifacts, and (b) an independent cross-check of the PJRT outputs in
+//! integration tests. Architecture: RMSNorm → GQA attention with RoPE →
+//! SwiGLU, tied embedding.
+
+pub mod weights;
+
+use crate::attention::{flash, TileConfig};
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+use weights::Weights;
+
+/// Attention implementation used by the CPU mirror's prefill.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnMode {
+    Native,
+    Dma,
+}
+
+/// Per-layer weight views resolved from the flat weight list.
+struct LayerW<'a> {
+    ln1: &'a [f32],
+    wq: &'a weights::WeightTensor,
+    wk: &'a weights::WeightTensor,
+    wv: &'a weights::WeightTensor,
+    wo: &'a weights::WeightTensor,
+    ln2: &'a [f32],
+    w1: &'a weights::WeightTensor,
+    w2: &'a weights::WeightTensor,
+    w3: &'a weights::WeightTensor,
+}
+
+pub struct CpuModel {
+    pub cfg: ModelConfig,
+    pub weights: Weights,
+}
+
+/// KV cache for one sequence: `[n_layers][n_kv_heads][cap, d_head]`
+/// (post-RoPE keys, matching the JAX export).
+#[derive(Clone, Debug)]
+pub struct KvState {
+    pub k: Vec<Vec<Tensor>>,
+    pub v: Vec<Vec<Tensor>>,
+    pub len: usize,
+    pub cap: usize,
+}
+
+impl KvState {
+    pub fn new(cfg: &ModelConfig, cap: usize) -> KvState {
+        let mk = || {
+            (0..cfg.n_layers)
+                .map(|_| {
+                    (0..cfg.n_kv_heads)
+                        .map(|_| Tensor::zeros(vec![cap, cfg.d_head]))
+                        .collect()
+                })
+                .collect()
+        };
+        KvState { k: mk(), v: mk(), len: 0, cap }
+    }
+}
+
+impl CpuModel {
+    pub fn new(cfg: ModelConfig, weights: Weights) -> crate::Result<CpuModel> {
+        // Sanity: embed must exist and match vocab x d_model.
+        let e = weights.get("embed")?;
+        anyhow::ensure!(
+            e.shape == vec![cfg.vocab, cfg.d_model],
+            "embed shape {:?} != [{}, {}]",
+            e.shape,
+            cfg.vocab,
+            cfg.d_model
+        );
+        Ok(CpuModel { cfg, weights })
+    }
+
+    fn layer(&self, li: usize) -> crate::Result<LayerW<'_>> {
+        let g = |n: &str| self.weights.get(&format!("layers.{li}.{n}"));
+        Ok(LayerW {
+            ln1: &g("ln1")?.data,
+            wq: g("wq")?,
+            wk: g("wk")?,
+            wv: g("wv")?,
+            wo: g("wo")?,
+            ln2: &g("ln2")?.data,
+            w1: g("w1")?,
+            w2: g("w2")?,
+            w3: g("w3")?,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Blocks
+    // ------------------------------------------------------------------
+
+    fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32]) {
+        let d = w.len();
+        for (row_x, row_o) in x.chunks(d).zip(out.chunks_mut(d)) {
+            let ms: f32 = row_x.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            let inv = 1.0 / (ms + 1e-5).sqrt();
+            for ((o, &v), &ww) in row_o.iter_mut().zip(row_x).zip(w) {
+                *o = v * inv * ww;
+            }
+        }
+    }
+
+    /// x[t, d_in] @ w[d_in, d_out].
+    fn dense(x: &Tensor, w: &weights::WeightTensor) -> Tensor {
+        let wt = Tensor::new(w.shape.clone(), w.data.clone());
+        x.matmul(&wt)
+    }
+
+    /// Apply RoPE to a [t, d_head] head slice for absolute positions
+    /// pos0..pos0+t (pairing convention: even/odd interleaved, matching
+    /// `model.py::apply_rope`).
+    fn rope(x: &mut Tensor, pos0: usize, theta: f32) {
+        let (t, dh) = (x.rows(), x.cols());
+        let half = dh / 2;
+        for r in 0..t {
+            let p = (pos0 + r) as f32;
+            let row = x.row_mut(r);
+            for i in 0..half {
+                let freq = theta.powf(-(i as f32) / half as f32);
+                let (s, c) = (p * freq).sin_cos();
+                let x1 = row[2 * i];
+                let x2 = row[2 * i + 1];
+                row[2 * i] = x1 * c - x2 * s;
+                row[2 * i + 1] = x1 * s + x2 * c;
+            }
+        }
+    }
+
+    fn silu(v: f32) -> f32 {
+        v / (1.0 + (-v).exp())
+    }
+
+    // ------------------------------------------------------------------
+    // Prefill
+    // ------------------------------------------------------------------
+
+    /// Full-sequence forward; fills `kv` (must be empty) and returns
+    /// logits [t, vocab].
+    pub fn prefill(
+        &self,
+        tokens: &[i32],
+        mode: AttnMode,
+        kv: &mut KvState,
+    ) -> crate::Result<Tensor> {
+        let cfg = &self.cfg;
+        let t = tokens.len();
+        anyhow::ensure!(kv.len == 0, "prefill requires an empty KV state");
+        anyhow::ensure!(t <= kv.cap, "prompt {t} exceeds cache cap {}", kv.cap);
+        let embed = self.weights.get("embed")?;
+        let mut x = Tensor::zeros(vec![t, cfg.d_model]);
+        for (r, &tok) in tokens.iter().enumerate() {
+            anyhow::ensure!((tok as usize) < cfg.vocab, "token {tok} out of range");
+            x.row_mut(r)
+                .copy_from_slice(&embed.data[tok as usize * cfg.d_model..(tok as usize + 1) * cfg.d_model]);
+        }
+        let n_rep = cfg.n_heads / cfg.n_kv_heads;
+        // Tile config for the DMA path, scaled to this model.
+        let tile = TileConfig {
+            bm: cfg.bm.min(t),
+            bn: cfg.bn.min(t),
+            diag: cfg.diag,
+            sink: cfg.sink,
+            causal: true,
+        };
+
+        for li in 0..cfg.n_layers {
+            let lw = self.layer(li)?;
+            let mut h = vec![0f32; t * cfg.d_model];
+            Self::rmsnorm(&x.data, lw.ln1, &mut h);
+            let h = Tensor::new(vec![t, cfg.d_model], h);
+            let q_all = Self::dense(&h, lw.wq);
+            let k_all = Self::dense(&h, lw.wk);
+            let v_all = Self::dense(&h, lw.wv);
+
+            // Split heads, rope, attention per head.
+            let mut o_all = Tensor::zeros(vec![t, cfg.n_heads * cfg.d_head]);
+            let mut k_heads: Vec<Tensor> = Vec::with_capacity(cfg.n_kv_heads);
+            let mut v_heads: Vec<Tensor> = Vec::with_capacity(cfg.n_kv_heads);
+            for hkv in 0..cfg.n_kv_heads {
+                let mut kh = Tensor::zeros(vec![t, cfg.d_head]);
+                let mut vh = Tensor::zeros(vec![t, cfg.d_head]);
+                for r in 0..t {
+                    for c in 0..cfg.d_head {
+                        kh.set(r, c, k_all.at(r, hkv * cfg.d_head + c));
+                        vh.set(r, c, v_all.at(r, hkv * cfg.d_head + c));
+                    }
+                }
+                Self::rope(&mut kh, 0, 10000.0);
+                // Persist post-RoPE K and V into the cache.
+                for r in 0..t {
+                    kv.k[li][hkv].row_mut(r).copy_from_slice(kh.row(r));
+                    kv.v[li][hkv].row_mut(r).copy_from_slice(vh.row(r));
+                }
+                k_heads.push(kh);
+                v_heads.push(vh);
+            }
+            for hq in 0..cfg.n_heads {
+                let mut qh = Tensor::zeros(vec![t, cfg.d_head]);
+                for r in 0..t {
+                    for c in 0..cfg.d_head {
+                        qh.set(r, c, q_all.at(r, hq * cfg.d_head + c));
+                    }
+                }
+                Self::rope(&mut qh, 0, 10000.0);
+                let kvh = hq / n_rep;
+                let o = match mode {
+                    AttnMode::Native => {
+                        crate::attention::reference::attention(
+                            &qh, &k_heads[kvh], &v_heads[kvh], true)
+                    }
+                    AttnMode::Dma => {
+                        if t % tile.bm == 0 && t % tile.bn == 0 {
+                            crate::attention::dma::dma_attention(
+                                &qh, &k_heads[kvh], &v_heads[kvh], &tile)
+                        } else {
+                            // Irregular length: fall back to exact.
+                            crate::attention::reference::attention(
+                                &qh, &k_heads[kvh], &v_heads[kvh], true)
+                        }
+                    }
+                };
+                for r in 0..t {
+                    for c in 0..cfg.d_head {
+                        o_all.set(r, hq * cfg.d_head + c, o.at(r, c));
+                    }
+                }
+            }
+            let proj = Self::dense(&o_all, lw.wo);
+            for (xd, pd) in x.data.iter_mut().zip(&proj.data) {
+                *xd += pd;
+            }
+
+            // SwiGLU MLP.
+            let mut h2 = vec![0f32; t * cfg.d_model];
+            Self::rmsnorm(&x.data, lw.ln2, &mut h2);
+            let h2 = Tensor::new(vec![t, cfg.d_model], h2);
+            let a = Self::dense(&h2, lw.w1);
+            let b = Self::dense(&h2, lw.w3);
+            let mut gated = Tensor::zeros(a.shape.clone());
+            for i in 0..a.data.len() {
+                gated.data[i] = Self::silu(a.data[i]) * b.data[i];
+            }
+            let mlp = Self::dense(&gated, lw.w2);
+            for (xd, md) in x.data.iter_mut().zip(&mlp.data) {
+                *xd += md;
+            }
+        }
+        kv.len = t;
+
+        // Final norm + tied unembedding.
+        let ln_f = self.weights.get("ln_f")?;
+        let mut xn = vec![0f32; t * cfg.d_model];
+        Self::rmsnorm(&x.data, &ln_f.data, &mut xn);
+        let xn = Tensor::new(vec![t, cfg.d_model], xn);
+        let embed_t = Tensor::new(embed.shape.clone(), embed.data.clone()).transpose2();
+        Ok(xn.matmul(&embed_t))
+    }
+
+    // ------------------------------------------------------------------
+    // Decode
+    // ------------------------------------------------------------------
+
+    /// One decode step at position `kv.len`; appends to the cache and
+    /// returns logits [vocab].
+    pub fn decode_step(&self, token: i32, kv: &mut KvState) -> crate::Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let pos = kv.len;
+        anyhow::ensure!(pos < kv.cap, "cache full ({pos}/{})", kv.cap);
+        let embed = self.weights.get("embed")?;
+        let mut x: Vec<f32> =
+            embed.data[token as usize * cfg.d_model..(token as usize + 1) * cfg.d_model].to_vec();
+        let n_rep = cfg.n_heads / cfg.n_kv_heads;
+
+        for li in 0..cfg.n_layers {
+            let lw = self.layer(li)?;
+            let mut h = vec![0f32; cfg.d_model];
+            Self::rmsnorm(&x, lw.ln1, &mut h);
+            let h = Tensor::new(vec![1, cfg.d_model], h);
+            let q_all = Self::dense(&h, lw.wq);
+            let k_all = Self::dense(&h, lw.wk);
+            let v_all = Self::dense(&h, lw.wv);
+
+            for hkv in 0..cfg.n_kv_heads {
+                let mut kh = Tensor::zeros(vec![1, cfg.d_head]);
+                for c in 0..cfg.d_head {
+                    kh.set(0, c, k_all.at(0, hkv * cfg.d_head + c));
+                }
+                Self::rope(&mut kh, pos, 10000.0);
+                kv.k[li][hkv].row_mut(pos).copy_from_slice(kh.row(0));
+                for c in 0..cfg.d_head {
+                    kv.v[li][hkv].set(pos, c, v_all.at(0, hkv * cfg.d_head + c));
+                }
+            }
+
+            let mut o_all = Tensor::zeros(vec![1, cfg.n_heads * cfg.d_head]);
+            let scale = 1.0 / (cfg.d_head as f32).sqrt();
+            for hq in 0..cfg.n_heads {
+                let mut qh = Tensor::zeros(vec![1, cfg.d_head]);
+                for c in 0..cfg.d_head {
+                    qh.set(0, c, q_all.at(0, hq * cfg.d_head + c));
+                }
+                Self::rope(&mut qh, pos, 10000.0);
+                let kvh = hq / n_rep;
+                // GEMV attention over the cache (full precision; the
+                // quadratic prefill is where DMA applies — see model.py).
+                let kcache = &kv.k[li][kvh];
+                let vcache = &kv.v[li][kvh];
+                let mut s = vec![0f32; pos + 1];
+                for (j, sv) in s.iter_mut().enumerate() {
+                    let mut acc = 0f32;
+                    for c in 0..cfg.d_head {
+                        acc += qh.at(0, c) * kcache.at(j, c);
+                    }
+                    *sv = acc * scale;
+                }
+                let mx = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0f32;
+                for sv in s.iter_mut() {
+                    *sv = (*sv - mx).exp();
+                    sum += *sv;
+                }
+                for c in 0..cfg.d_head {
+                    let mut acc = 0f32;
+                    for (j, &p) in s.iter().enumerate() {
+                        acc += p * vcache.at(j, c);
+                    }
+                    o_all.set(0, hq * cfg.d_head + c, acc / sum);
+                }
+            }
+            let proj = Self::dense(&o_all, lw.wo);
+            for (xd, pd) in x.iter_mut().zip(&proj.data) {
+                *xd += pd;
+            }
+
+            let mut h2 = vec![0f32; cfg.d_model];
+            Self::rmsnorm(&x, lw.ln2, &mut h2);
+            let h2 = Tensor::new(vec![1, cfg.d_model], h2);
+            let a = Self::dense(&h2, lw.w1);
+            let b = Self::dense(&h2, lw.w3);
+            let mut gated = Tensor::zeros(a.shape.clone());
+            for i in 0..a.data.len() {
+                gated.data[i] = Self::silu(a.data[i]) * b.data[i];
+            }
+            let mlp = Self::dense(&gated, lw.w2);
+            for (xd, md) in x.iter_mut().zip(&mlp.data) {
+                *xd += md;
+            }
+        }
+        kv.len = pos + 1;
+
+        let ln_f = self.weights.get("ln_f")?;
+        let mut xn = vec![0f32; cfg.d_model];
+        Self::rmsnorm(&x, &ln_f.data, &mut xn);
+        let mut logits = vec![0f32; cfg.vocab];
+        for (vtok, l) in logits.iter_mut().enumerate() {
+            let erow = &embed.data[vtok * cfg.d_model..(vtok + 1) * cfg.d_model];
+            let mut acc = 0f32;
+            for (a, b) in xn.iter().zip(erow) {
+                acc += a * b;
+            }
+            *l = acc;
+        }
+        Ok(logits)
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Deterministic random weights for tests (matches the meta config shape
+/// contract but NOT the trained values).
+pub fn random_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let dq = cfg.n_heads * cfg.d_head;
+    let dkv = cfg.n_kv_heads * cfg.d_head;
+    let d_ff = 2 * cfg.d_model;
+    let mut tensors = Vec::new();
+    let mut dense = |name: String, fan_in: usize, shape: Vec<usize>, rng: &mut Rng| {
+        let n: usize = shape.iter().product();
+        let s = 1.0 / (fan_in as f32).sqrt();
+        weights::WeightTensor {
+            name,
+            shape,
+            data: (0..n).map(|_| rng.normal() as f32 * s).collect(),
+        }
+    };
+    tensors.push(dense("embed".into(), 50, vec![cfg.vocab, cfg.d_model], &mut rng));
+    for t in &mut tensors.last_mut().unwrap().data {
+        *t *= 0.5;
+    }
+    for li in 0..cfg.n_layers {
+        tensors.push(weights::WeightTensor {
+            name: format!("layers.{li}.ln1"),
+            shape: vec![cfg.d_model],
+            data: vec![1.0; cfg.d_model],
+        });
+        tensors.push(dense(format!("layers.{li}.wq"), cfg.d_model, vec![cfg.d_model, dq], &mut rng));
+        tensors.push(dense(format!("layers.{li}.wk"), cfg.d_model, vec![cfg.d_model, dkv], &mut rng));
+        tensors.push(dense(format!("layers.{li}.wv"), cfg.d_model, vec![cfg.d_model, dkv], &mut rng));
+        tensors.push(dense(format!("layers.{li}.wo"), dq, vec![dq, cfg.d_model], &mut rng));
+        tensors.push(weights::WeightTensor {
+            name: format!("layers.{li}.ln2"),
+            shape: vec![cfg.d_model],
+            data: vec![1.0; cfg.d_model],
+        });
+        tensors.push(dense(format!("layers.{li}.w1"), cfg.d_model, vec![cfg.d_model, d_ff], &mut rng));
+        tensors.push(dense(format!("layers.{li}.w2"), d_ff, vec![d_ff, cfg.d_model], &mut rng));
+        tensors.push(dense(format!("layers.{li}.w3"), cfg.d_model, vec![cfg.d_model, d_ff], &mut rng));
+    }
+    tensors.push(weights::WeightTensor {
+        name: "ln_f".into(),
+        shape: vec![cfg.d_model],
+        data: vec![1.0; cfg.d_model],
+    });
+    Weights { tensors }
+}
+
+/// Small test config used throughout unit/integration tests.
+pub fn test_config() -> ModelConfig {
+    ModelConfig {
+        vocab: 64,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 2,
+        d_head: 32,
+        max_seq: 128,
+        bm: 16,
+        bn: 16,
+        diag: 32,
+        sink: 16,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CpuModel {
+        let cfg = test_config();
+        let w = random_weights(&cfg, 1);
+        CpuModel::new(cfg, w).unwrap()
+    }
+
+    #[test]
+    fn prefill_shapes() {
+        let m = model();
+        let mut kv = KvState::new(&m.cfg, 64);
+        let toks: Vec<i32> = (0..32).map(|i| (i % 60) + 1).collect();
+        let logits = m.prefill(&toks, AttnMode::Native, &mut kv).unwrap();
+        assert_eq!(logits.shape, vec![32, 64]);
+        assert_eq!(kv.len, 32);
+    }
+
+    #[test]
+    fn decode_matches_prefill() {
+        // prefill(t..=n) last logits == prefill(t..n) + decode(t_n).
+        let m = model();
+        let toks: Vec<i32> = (0..17).map(|i| ((i * 7) % 60) + 1).collect();
+        let mut kv_full = KvState::new(&m.cfg, 64);
+        let lg_full = m.prefill(&toks, AttnMode::Native, &mut kv_full).unwrap();
+
+        let mut kv = KvState::new(&m.cfg, 64);
+        m.prefill(&toks[..16], AttnMode::Native, &mut kv).unwrap();
+        let lg = m.decode_step(toks[16], &mut kv).unwrap();
+        let last = lg_full.row(16);
+        for (a, b) in lg.iter().zip(last) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn multi_step_decode_consistent() {
+        let m = model();
+        let toks: Vec<i32> = (0..20).map(|i| ((i * 11) % 60) + 1).collect();
+        let mut kv_full = KvState::new(&m.cfg, 64);
+        let lg_full = m.prefill(&toks, AttnMode::Native, &mut kv_full).unwrap();
+
+        let mut kv = KvState::new(&m.cfg, 64);
+        m.prefill(&toks[..16], AttnMode::Native, &mut kv).unwrap();
+        let mut last = Vec::new();
+        for &t in &toks[16..] {
+            last = m.decode_step(t, &mut kv).unwrap();
+        }
+        for (a, b) in last.iter().zip(lg_full.row(19)) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn dma_mode_close_to_native() {
+        let m = model();
+        let toks: Vec<i32> = (0..32).map(|i| ((i * 13) % 60) + 1).collect();
+        let mut kv1 = KvState::new(&m.cfg, 64);
+        let mut kv2 = KvState::new(&m.cfg, 64);
+        let lg_n = m.prefill(&toks, AttnMode::Native, &mut kv1).unwrap();
+        let lg_d = m.prefill(&toks, AttnMode::Dma, &mut kv2).unwrap();
+        let mut agree = 0;
+        for r in 0..32 {
+            if argmax(lg_n.row(r)) == argmax(lg_d.row(r)) {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 28, "argmax agreement {agree}/32");
+    }
+
+    #[test]
+    fn rejects_out_of_range_token() {
+        let m = model();
+        let mut kv = KvState::new(&m.cfg, 64);
+        assert!(m.prefill(&[1, 2, 999], AttnMode::Native, &mut kv).is_err());
+    }
+
+    #[test]
+    fn cache_capacity_enforced() {
+        let m = model();
+        let mut kv = KvState::new(&m.cfg, 8);
+        m.prefill(&[1, 2, 3, 4, 5, 6, 7, 8], AttnMode::Native, &mut kv).unwrap();
+        assert!(m.decode_step(1, &mut kv).is_err());
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[-5.0, -1.0, -3.0]), 1);
+    }
+}

@@ -1,0 +1,171 @@
+//! Weight file I/O — the `weights.bin` layout contract shared with
+//! `python/compile/aot.py::write_weights_bin`:
+//!
+//! ```text
+//! magic "DMAW" | version u32 | count u32
+//! per tensor: name_len u32 | name bytes | ndim u32 | dims u32... | f32 LE data
+//! ```
+
+use anyhow::{anyhow, bail, Context};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct WeightTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    pub tensors: Vec<WeightTensor>,
+}
+
+impl Weights {
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Weights> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<Weights> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> crate::Result<&[u8]> {
+            if *pos + n > bytes.len() {
+                bail!("weights.bin truncated at byte {}", *pos);
+            }
+            let s = &bytes[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let u32_at = |pos: &mut usize| -> crate::Result<u32> {
+            let s = take(pos, 4)?;
+            Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+        };
+        if take(&mut pos, 4)? != b"DMAW" {
+            bail!("bad magic in weights.bin");
+        }
+        let version = u32_at(&mut pos)?;
+        if version != 1 {
+            bail!("unsupported weights.bin version {version}");
+        }
+        let count = u32_at(&mut pos)? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = u32_at(&mut pos)? as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+                .map_err(|_| anyhow!("non-utf8 tensor name"))?;
+            let ndim = u32_at(&mut pos)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32_at(&mut pos)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let raw = take(&mut pos, numel * 4)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push(WeightTensor { name, shape, data });
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"DMAW");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for t in &self.tensors {
+            out.extend_from_slice(&(t.name.len() as u32).to_le_bytes());
+            out.extend_from_slice(t.name.as_bytes());
+            out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&WeightTensor> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow!("missing weight tensor {name}"))
+    }
+
+    /// Validate tensor order against the meta contract.
+    pub fn check_order(&self, expected: &[String]) -> crate::Result<()> {
+        let names: Vec<&str> = self.tensors.iter().map(|t| t.name.as_str()).collect();
+        let exp: Vec<&str> = expected.iter().map(String::as_str).collect();
+        if names != exp {
+            bail!("weights.bin order mismatch:\n  file: {names:?}\n  meta: {exp:?}");
+        }
+        Ok(())
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Weights {
+        Weights {
+            tensors: vec![
+                WeightTensor {
+                    name: "embed".into(),
+                    shape: vec![4, 2],
+                    data: (0..8).map(|i| i as f32 * 0.5).collect(),
+                },
+                WeightTensor {
+                    name: "ln_f".into(),
+                    shape: vec![2],
+                    data: vec![1.0, -2.0],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let w = sample();
+        let rt = Weights::from_bytes(&w.to_bytes()).unwrap();
+        assert_eq!(rt.tensors.len(), 2);
+        assert_eq!(rt.tensors[0].name, "embed");
+        assert_eq!(rt.tensors[0].shape, vec![4, 2]);
+        assert_eq!(rt.tensors[0].data, w.tensors[0].data);
+        assert_eq!(rt.tensors[1].data, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        assert!(Weights::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let bytes = sample().to_bytes();
+        assert!(Weights::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn order_check() {
+        let w = sample();
+        assert!(w.check_order(&["embed".into(), "ln_f".into()]).is_ok());
+        assert!(w.check_order(&["ln_f".into(), "embed".into()]).is_err());
+    }
+
+    #[test]
+    fn total_params() {
+        assert_eq!(sample().total_params(), 10);
+    }
+}

@@ -1,0 +1,317 @@
+//! Block fake-quantization of the three MXFP formats (value level), plus
+//! the quantization-granularity variants of Table 8.
+//!
+//! "Fake quant" = quantize then dequantize; this is what the error
+//! studies (Tables 2/5/8, Fig. 1) operate on. The bit-level pipeline
+//! (codes + packed nibbles) lives in [`super::fused`].
+
+use super::{e2m1, e8m0, fp8, MXFP_BLOCK, NVFP4_BLOCK};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    Mxfp4,
+    Mxfp8E4m3,
+    Mxfp8E5m2,
+    Nvfp4,
+}
+
+impl Format {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Format::Mxfp4 => "MXFP4",
+            Format::Mxfp8E4m3 => "MXFP8",
+            Format::Mxfp8E5m2 => "MXFP8-E5M2",
+            Format::Nvfp4 => "NVFP4",
+        }
+    }
+
+    /// Bits per element (elements only; scales add 8 bits per block).
+    pub fn element_bits(&self) -> usize {
+        match self {
+            Format::Mxfp4 | Format::Nvfp4 => 4,
+            _ => 8,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        match self {
+            Format::Nvfp4 => NVFP4_BLOCK,
+            _ => MXFP_BLOCK,
+        }
+    }
+}
+
+/// The per-token scale granularity of Algorithm 2 Step 2 (Table 8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One S_q for the whole tensor.
+    PerTensor,
+    /// One S_q per tile of rows (the paper's "Per-Block"; row-tile 64).
+    PerBlock,
+    /// One S_q per row — the DMA default.
+    PerToken,
+}
+
+fn amax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// Quantize one block (already scaled into element range) and write the
+/// dequantized values.
+fn quant_block_values(block: &mut [f32], format: Format) {
+    match format {
+        Format::Mxfp4 | Format::Nvfp4 => {
+            for v in block.iter_mut() {
+                *v = e2m1::quantize(*v);
+            }
+        }
+        Format::Mxfp8E4m3 => {
+            for v in block.iter_mut() {
+                *v = fp8::quantize_e4m3(v.clamp(-fp8::E4M3_MAX, fp8::E4M3_MAX));
+            }
+        }
+        Format::Mxfp8E5m2 => {
+            for v in block.iter_mut() {
+                *v = fp8::quantize_e5m2(v.clamp(-fp8::E5M2_MAX, fp8::E5M2_MAX));
+            }
+        }
+    }
+}
+
+/// Block scale for one block of the given format.
+fn block_scale(block_amax: f32, format: Format) -> f32 {
+    match format {
+        Format::Mxfp4 => e8m0::shared_scale(block_amax, e2m1::E2M1_EMAX).0,
+        Format::Mxfp8E4m3 => e8m0::shared_scale(block_amax, fp8::E4M3_EMAX).0,
+        Format::Mxfp8E5m2 => e8m0::shared_scale(block_amax, fp8::E5M2_EMAX).0,
+        Format::Nvfp4 => {
+            // E4M3-stored scale, floored at the smallest subnormal so
+            // dequantization never divides by zero.
+            fp8::quantize_e4m3(block_amax / e2m1::E2M1_MAX).max((-9.0f32).exp2())
+        }
+    }
+}
+
+/// Fake-quantize a [rows, d] row-major tensor in the given format
+/// (no outer S_q scale — the Table 2 "plain format" rows).
+pub fn fake_quant(x: &[f32], rows: usize, d: usize, format: Format) -> Vec<f32> {
+    let bs = format.block_size();
+    assert_eq!(d % bs, 0, "d={d} not a multiple of block {bs}");
+    let mut out = x.to_vec();
+    for r in 0..rows {
+        for b in 0..d / bs {
+            let blk = &mut out[r * d + b * bs..r * d + (b + 1) * bs];
+            let s = block_scale(amax(blk), format);
+            for v in blk.iter_mut() {
+                *v /= s;
+            }
+            quant_block_values(blk, format);
+            for v in blk.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+    out
+}
+
+/// Fake-quantize with an outer quantization scale S_q at the requested
+/// granularity (Alg. 2 Step 2; the "+ tokenwise" row of Table 2 and the
+/// Table 8 sweep). Only meaningful for NVFP4, whose two-level range is
+/// 448 * 6.
+pub fn fake_quant_scaled(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    format: Format,
+    granularity: Granularity,
+) -> Vec<f32> {
+    let range = fp8::E4M3_MAX * e2m1::E2M1_MAX;
+    let row_tile = 64usize;
+    let sq_for_row = |x: &[f32], r: usize| -> f32 {
+        let a = match granularity {
+            Granularity::PerTensor => amax(x),
+            Granularity::PerBlock => {
+                let start = (r / row_tile) * row_tile;
+                let end = (start + row_tile).min(rows);
+                amax(&x[start * d..end * d])
+            }
+            Granularity::PerToken => amax(&x[r * d..(r + 1) * d]),
+        };
+        (a / range).max(1e-30)
+    };
+    let mut out = vec![0.0f32; rows * d];
+    let bs = format.block_size();
+    for r in 0..rows {
+        let sq = sq_for_row(x, r);
+        let row = &x[r * d..(r + 1) * d];
+        let orow = &mut out[r * d..(r + 1) * d];
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = v / sq;
+        }
+        for b in 0..d / bs {
+            let blk = &mut orow[b * bs..(b + 1) * bs];
+            let s = block_scale(amax(blk), format);
+            for v in blk.iter_mut() {
+                *v /= s;
+            }
+            quant_block_values(blk, format);
+            for v in blk.iter_mut() {
+                *v *= s;
+            }
+        }
+        for o in orow.iter_mut() {
+            *o *= sq;
+        }
+    }
+    out
+}
+
+/// Single-level FP4 quantization at a given *scale granularity* — the
+/// Table 8 ablation. Unlike the two-level NVFP4 scheme (whose per-16
+/// E4M3 block scales absorb row heterogeneity on their own), this is the
+/// classic design question: one float scale per tensor, per row-block,
+/// or per token, with E2M1 elements underneath.
+pub fn fake_quant_fp4_granular(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    granularity: Granularity,
+) -> Vec<f32> {
+    let row_tile = 64usize;
+    let scale_of = |slice: &[f32]| (amax(slice) / e2m1::E2M1_MAX).max(1e-30);
+    let mut out = vec![0f32; rows * d];
+    let tensor_scale = scale_of(x);
+    for r in 0..rows {
+        let s = match granularity {
+            Granularity::PerTensor => tensor_scale,
+            Granularity::PerBlock => {
+                let start = (r / row_tile) * row_tile;
+                let end = (start + row_tile).min(rows);
+                scale_of(&x[start * d..end * d])
+            }
+            Granularity::PerToken => scale_of(&x[r * d..(r + 1) * d]),
+        };
+        let inv = 1.0 / s;
+        for c in 0..d {
+            out[r * d + c] = e2m1::quantize(x[r * d + c] * inv) * s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics;
+    use crate::util::rng::Rng;
+
+    fn randn(rows: usize, d: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..rows * d).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn shapes_preserved() {
+        let x = randn(8, 64, 1, 1.0);
+        for f in [Format::Mxfp4, Format::Mxfp8E4m3, Format::Nvfp4] {
+            assert_eq!(fake_quant(&x, 8, 64, f).len(), x.len());
+        }
+    }
+
+    #[test]
+    fn error_ordering_matches_table2() {
+        // MXFP4 error >> NVFP4 >= MXFP8 (paper Table 2). The gap shows on
+        // channel-structured activations (paper Sec. 4 / Fig. 1).
+        let mut rng = crate::util::rng::Rng::new(7);
+        let x = crate::util::rng::channelwise_qk(&mut rng, 64, 128, 8, 8.0);
+        let rel = |q: &[f32]| {
+            let num: f64 = x.iter().zip(q).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            let den: f64 = x.iter().map(|a| (*a as f64).powi(2)).sum();
+            (num / den).sqrt()
+        };
+        let e4 = rel(&fake_quant(&x, 64, 128, Format::Mxfp4));
+        let nv = rel(&fake_quant(&x, 64, 128, Format::Nvfp4));
+        let e8 = rel(&fake_quant(&x, 64, 128, Format::Mxfp8E4m3));
+        assert!(e4 > 1.15 * nv, "{e4} vs {nv}");
+        assert!(nv > 2.0 * e8, "{nv} vs {e8}");
+    }
+
+    #[test]
+    fn mxfp8_high_fidelity() {
+        let x = randn(32, 64, 3, 1.0);
+        let q = fake_quant(&x, 32, 64, Format::Mxfp8E4m3);
+        assert!(metrics::cos_sim(&x, &q) > 0.998);
+    }
+
+    #[test]
+    fn idempotent_all_formats() {
+        let x = randn(16, 64, 9, 3.0);
+        for f in [Format::Mxfp4, Format::Mxfp8E4m3, Format::Mxfp8E5m2, Format::Nvfp4] {
+            let q1 = fake_quant(&x, 16, 64, f);
+            let q2 = fake_quant(&q1, 16, 64, f);
+            assert_eq!(q1, q2, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn granularity_fidelity_ordering() {
+        // Finer granularity must not be worse (Table 8): per-token >=
+        // per-block >= per-tensor in cosine similarity, given rows with
+        // heterogeneous scales.
+        let mut x = randn(128, 64, 11, 1.0);
+        // Heterogeneous row magnitudes.
+        for r in 0..128 {
+            let s = 1.0 + (r % 13) as f32;
+            for v in &mut x[r * 64..(r + 1) * 64] {
+                *v *= s;
+            }
+        }
+        let sim = |g| {
+            let q = fake_quant_scaled(&x, 128, 64, Format::Nvfp4, g);
+            metrics::cos_sim(&x, &q)
+        };
+        let t = sim(Granularity::PerToken);
+        let b = sim(Granularity::PerBlock);
+        let n = sim(Granularity::PerTensor);
+        // Adjacent granularities can tie within noise; the end-to-end
+        // ordering must hold strictly.
+        assert!(t >= b - 2e-3, "token {t} < block {b}");
+        assert!(b >= n - 2e-3, "block {b} < tensor {n}");
+        assert!(t >= n - 2e-3, "token {t} < tensor {n}");
+    }
+
+    #[test]
+    fn outlier_rows_contained_with_per_token() {
+        let mut x = randn(64, 64, 13, 1.0);
+        for v in &mut x[11 * 64..12 * 64] {
+            *v *= 1000.0;
+        }
+        let q = fake_quant_scaled(&x, 64, 64, Format::Nvfp4, Granularity::PerToken);
+        // Other rows unaffected by the outlier row.
+        let row3 = &x[3 * 64..4 * 64];
+        let q3 = &q[3 * 64..4 * 64];
+        assert!(metrics::cos_sim(row3, q3) > 0.98);
+    }
+
+    #[test]
+    fn property_quantized_within_block_range() {
+        crate::util::prop::check("block range", 50, |rng| {
+            let d = 64;
+            let rows = 4;
+            let scale = rng.uniform_in(0.01, 50.0);
+            let x: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32 * scale).collect();
+            let q = fake_quant(&x, rows, d, Format::Mxfp4);
+            for (r, chunk) in q.chunks(MXFP_BLOCK).enumerate() {
+                let orig = &x[r * MXFP_BLOCK..(r + 1) * MXFP_BLOCK];
+                let a = amax(orig);
+                for &v in chunk {
+                    crate::prop_assert!(
+                        v.abs() <= a * 2.0 + 1e-6,
+                        "quantized {v} exceeds 2*amax {a}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

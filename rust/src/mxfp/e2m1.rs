@@ -1,0 +1,165 @@
+//! E2M1 (FP4) encode/decode — paper Algorithm 3.
+//!
+//! Representable magnitudes: 0, 0.5, 1, 1.5, 2, 3, 4, 6. Encoding is the
+//! paper's branch-structured thresholding: 2-bit exponent from |x| vs
+//! {1, 2, 4}, 1-bit mantissa vs the normalized midpoint with a strict
+//! `>` so ties round to the even mantissa (the paper's "5 rounds to 4"
+//! example). Like the published algorithm, values never round up across
+//! an exponent boundary (1.75 -> 1.5). Semantics are bit-identical to
+//! `python/compile/kernels/mxfp.py::encode_e2m1` (cross-checked by the
+//! golden-vector test in `rust/tests/integration.rs`).
+
+/// Largest representable E2M1 magnitude.
+pub const E2M1_MAX: f32 = 6.0;
+/// Exponent of the largest normal (6 = 1.5 * 2^2).
+pub const E2M1_EMAX: i32 = 2;
+
+/// All representable magnitudes, ascending (index = (E << 1) | M).
+pub const E2M1_GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Encode one clamped value (|x| <= 6) into a 4-bit code (low nibble).
+///
+/// Branch-ladder form of Algorithm 3 — the decision boundaries below are
+/// exactly the paper's exponent thresholds {1, 2, 4} combined with the
+/// strict-`>` normalized-midpoint mantissa rule (hot path: no libm).
+#[inline]
+pub fn encode(x: f32) -> u8 {
+    let s = ((x < 0.0) as u8) << 3;
+    let a = x.abs();
+    // Magnitude code ladder (see E2M1_GRID): boundaries at
+    // 0.25 | 1.0 | 1.25 | 2.0 | 2.5 | 4.0 | 5.0, ties toward even M.
+    let mag = if a < 2.0 {
+        if a < 1.0 {
+            (a > 0.25) as u8 // 0 or 1 (0.5)
+        } else if a <= 1.25 {
+            2 // 1.0
+        } else {
+            3 // 1.5
+        }
+    } else if a < 4.0 {
+        if a <= 2.5 {
+            4 // 2.0
+        } else {
+            5 // 3.0
+        }
+    } else if a <= 5.0 {
+        6 // 4.0
+    } else {
+        7 // 6.0
+    };
+    s | mag
+}
+
+/// Signed decode table indexed by the full 4-bit code.
+const DECODE_LUT: [f32; 16] = [
+    0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0,
+    -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
+];
+
+/// Decode a 4-bit code (low nibble) to f32.
+#[inline]
+pub fn decode(code: u8) -> f32 {
+    DECODE_LUT[(code & 0x0F) as usize]
+}
+
+/// Clamp to [-6, 6], then encode/decode (value-level fake quant).
+#[inline]
+pub fn quantize(x: f32) -> f32 {
+    decode(encode(x.clamp(-E2M1_MAX, E2M1_MAX)))
+}
+
+/// Encode a slice (pre-clamped by the caller or clamped here).
+pub fn encode_slice(xs: &[f32], out: &mut [u8]) {
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = encode(x.clamp(-E2M1_MAX, E2M1_MAX));
+    }
+}
+
+/// Decode a slice of codes.
+pub fn decode_slice(codes: &[u8], out: &mut [f32]) {
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = decode(c);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn representables_round_trip() {
+        for (i, &v) in E2M1_GRID.iter().enumerate() {
+            assert_eq!(decode(encode(v)), v, "grid[{i}]");
+        }
+    }
+
+    #[test]
+    fn negatives_round_trip() {
+        for &v in &E2M1_GRID[1..] {
+            assert_eq!(decode(encode(-v)), -v);
+        }
+    }
+
+    #[test]
+    fn paper_tie_example() {
+        // "for input value 5, we prefer rounding to 4" (ties to even M=0).
+        assert_eq!(quantize(5.0), 4.0);
+        assert_eq!(quantize(-5.0), -4.0);
+    }
+
+    #[test]
+    fn midpoints_strict() {
+        assert_eq!(quantize(2.5), 2.0);
+        assert_eq!(quantize(2.5000002), 3.0);
+        assert_eq!(quantize(1.25), 1.0);
+        assert_eq!(quantize(0.25), 0.0);
+        assert_eq!(quantize(0.2500001), 0.5);
+    }
+
+    #[test]
+    fn clamping() {
+        assert_eq!(quantize(100.0), 6.0);
+        assert_eq!(quantize(-100.0), -6.0);
+    }
+
+    #[test]
+    fn nearest_neighbour_property() {
+        // Quantized value must be one of the two grid neighbours.
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..20_000 {
+            let v = rng.uniform_in(-6.0, 6.0);
+            let q = quantize(v);
+            let lo = E2M1_GRID
+                .iter()
+                .flat_map(|&g| [g, -g])
+                .filter(|&g| g <= v)
+                .fold(f32::NEG_INFINITY, f32::max);
+            let hi = E2M1_GRID
+                .iter()
+                .flat_map(|&g| [g, -g])
+                .filter(|&g| g >= v)
+                .fold(f32::INFINITY, f32::min);
+            assert!(q == lo || q == hi, "v={v} q={q} lo={lo} hi={hi}");
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        for _ in 0..5000 {
+            let v = rng.uniform_in(-6.0, 6.0);
+            let q = quantize(v);
+            assert_eq!(quantize(q), q);
+        }
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let xs: Vec<f32> = vec![0.0, 0.5, -1.5, 3.0, 7.0, -9.0];
+        let mut codes = vec![0u8; xs.len()];
+        encode_slice(&xs, &mut codes);
+        let mut back = vec![0f32; xs.len()];
+        decode_slice(&codes, &mut back);
+        assert_eq!(back, vec![0.0, 0.5, -1.5, 3.0, 6.0, -6.0]);
+    }
+}

@@ -1,0 +1,95 @@
+//! E8M0 shared-exponent scales (paper Algorithm 2, Steps 6–7).
+//!
+//! The shared scale of MXFP4/MXFP8 blocks is a pure power of two stored
+//! as a biased u8: `code = S_shared + 127`, clamped to [0, 254] (255 is
+//! reserved for NaN). `S_shared = floor(log2(amax)) - e_max` aligns the
+//! block's largest exponent with the element format's largest normal
+//! exponent, maximizing usable dynamic range.
+
+use super::floor_log2;
+
+/// Exact 2^e for e in [-126, 127] via direct bit construction (hot
+/// decode path, no libm). Matches the Python side's `pow2i`: e < -126
+/// (the subnormal E8M0 corner, reachable only for degenerate blocks)
+/// clamps to 2^-126.
+#[inline]
+fn pow2i(e: i32) -> f32 {
+    f32::from_bits(((e.clamp(-126, 127) + 127) as u32) << 23)
+}
+
+/// Compute the E8M0 scale for a block: returns `(scale, code)` with
+/// `scale == 2^(code as i32 - 127)` exactly (for codes >= 1).
+#[inline]
+pub fn shared_scale(block_amax: f32, emax: i32) -> (f32, u8) {
+    let amax = block_amax.max(1e-30);
+    let s_shared = floor_log2(amax) - emax;
+    let code = (s_shared + 127).clamp(0, 254) as u8;
+    (pow2i(code as i32 - 127), code)
+}
+
+/// Decode an E8M0 code back into its power-of-two scale.
+#[inline]
+pub fn decode(code: u8) -> f32 {
+    pow2i(code as i32 - 127)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mxfp::{e2m1::E2M1_EMAX, fp8::E4M3_EMAX};
+
+    #[test]
+    fn amax_448_e4m3_gives_unit_scale() {
+        // floor(log2(448)) = 8, minus emax 8 -> 2^0, code 127.
+        let (s, c) = shared_scale(448.0, E4M3_EMAX);
+        assert_eq!(s, 1.0);
+        assert_eq!(c, 127);
+    }
+
+    #[test]
+    fn scale_matches_code_always() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..10_000 {
+            let amax = rng.uniform_in(-30.0, 30.0).exp2();
+            for emax in [E2M1_EMAX, E4M3_EMAX] {
+                let (s, c) = shared_scale(amax, emax);
+                assert_eq!(s, decode(c));
+            }
+        }
+    }
+
+    #[test]
+    fn block_max_fits_after_scaling() {
+        // After dividing by the scale, amax lands in (emax-1, emax] octave
+        // so the element format can represent it (up to mantissa rounding).
+        let mut rng = crate::util::rng::Rng::new(2);
+        for _ in 0..5000 {
+            let amax = rng.uniform_in(-20.0, 20.0).exp2();
+            let (s, _) = shared_scale(amax, E2M1_EMAX);
+            let scaled = amax / s;
+            assert!(scaled < 2.0 * (E2M1_EMAX as f32).exp2() + 1e-3,
+                    "amax={amax} scaled={scaled}");
+        }
+    }
+
+    #[test]
+    fn extreme_values_clamped() {
+        // Degenerate amax is floored at 1e-30 (like the Python side), so
+        // the code lands far below the midpoint but stays in range.
+        let (_, c_lo) = shared_scale(1e-38, E4M3_EMAX);
+        let (_, c_hi) = shared_scale(3e38, E4M3_EMAX);
+        assert!(c_lo < 64, "c_lo {c_lo}");
+        assert!(c_hi <= 254);
+        assert_eq!(shared_scale(0.0, E4M3_EMAX).1, c_lo);
+    }
+
+    #[test]
+    fn code_never_255() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..10_000 {
+            let amax = rng.uniform_in(0.0, 3.0e38);
+            let (_, c) = shared_scale(amax, E4M3_EMAX);
+            assert_ne!(c, 255);
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! E4M3 / E5M2 (FP8) codecs.
+//!
+//! * **E4M3** follows the OCP "FN" variant used on Blackwell: bias 7,
+//!   max normal 448 (S.1111.110); S.1111.111 is NaN and never emitted.
+//!   Normals cover exponents [-6, 8], subnormal step 2^-9.
+//! * **E5M2** is IEEE-like: bias 15, max normal 57344, exponents
+//!   [-14, 15], subnormal step 2^-16 (inf/NaN exponent never emitted —
+//!   values are clamped first).
+//!
+//! Value-level quantization is round-to-nearest-even on the format grid,
+//! identical to `mxfp.py::quantize_e4m3/quantize_e5m2` (f32 `round_ties_even`).
+
+use super::floor_log2;
+
+pub const E4M3_MAX: f32 = 448.0;
+pub const E4M3_EMAX: i32 = 8;
+pub const E5M2_MAX: f32 = 57344.0;
+pub const E5M2_EMAX: i32 = 15;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fp8Kind {
+    E4M3,
+    E5M2,
+}
+
+struct Spec {
+    emin: i32,
+    emax: i32,
+    mant_bits: i32,
+    max: f32,
+    bias: i32,
+    exp_shift: u32,
+    mant_mask: u8,
+}
+
+const fn spec(kind: Fp8Kind) -> Spec {
+    match kind {
+        Fp8Kind::E4M3 => Spec {
+            emin: -6,
+            emax: E4M3_EMAX,
+            mant_bits: 3,
+            max: E4M3_MAX,
+            bias: 7,
+            exp_shift: 3,
+            mant_mask: 0x07,
+        },
+        Fp8Kind::E5M2 => Spec {
+            emin: -14,
+            emax: E5M2_EMAX,
+            mant_bits: 2,
+            max: E5M2_MAX,
+            bias: 15,
+            exp_shift: 2,
+            mant_mask: 0x03,
+        },
+    }
+}
+
+/// RTN-even onto the FP8 grid, value level (clamped to the max normal).
+/// Hot path: one encode (bit-twiddled) + one table lookup.
+#[inline]
+pub fn quantize(x: f32, kind: Fp8Kind) -> f32 {
+    decode(encode(x, kind), kind)
+}
+
+/// Reference (slow) quantizer kept for differential testing.
+#[cfg(test)]
+fn quantize_reference(x: f32, kind: Fp8Kind) -> f32 {
+    let s = spec(kind);
+    let a = x.abs().min(s.max);
+    if a == 0.0 {
+        return 0.0;
+    }
+    let e = floor_log2(a).clamp(s.emin, s.emax);
+    let step = ((e - s.mant_bits) as f32).exp2();
+    let q = ((a / step).round_ties_even() * step).min(s.max);
+    if x < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
+pub fn quantize_e4m3(x: f32) -> f32 {
+    quantize(x, Fp8Kind::E4M3)
+}
+
+pub fn quantize_e5m2(x: f32) -> f32 {
+    quantize(x, Fp8Kind::E5M2)
+}
+
+/// Encode to the 8-bit code with round-to-nearest-even, by integer
+/// rounding directly on the f32 bit pattern (no libm in the hot path).
+/// Any finite f32 is accepted (clamped); NaN patterns are never produced.
+#[inline]
+pub fn encode(x: f32, kind: Fp8Kind) -> u8 {
+    let s = spec(kind);
+    let sign = ((x.to_bits() >> 24) & 0x80) as u8;
+    let a = x.abs().min(s.max);
+    let min_normal_bits = (((s.emin + 127) as u32) << 23);
+    let ab = a.to_bits();
+    if ab >= min_normal_bits {
+        // Normal: RTN-even the f32 mantissa down to `mant_bits` by adding
+        // the classic (half - 1 + lsb) bias at the cut position; a
+        // mantissa carry correctly bumps the exponent.
+        let cut = 23 - s.mant_bits as u32;
+        let lsb = (ab >> cut) & 1;
+        let rounded = ab + ((1u32 << (cut - 1)) - 1) + lsb;
+        let e = ((rounded >> 23) as i32) - 127;
+        if e > s.emax {
+            // Unreachable after the clamp (kept as a safety net): return
+            // the max-normal code. E4M3-FN reserves mant=111 at emax for
+            // NaN, so its max-normal mantissa is mant_mask - 1.
+            let max_mant = s.mant_mask - matches!(kind, Fp8Kind::E4M3) as u8;
+            return sign | (((s.emax + s.bias) as u8) << s.exp_shift) | max_mant;
+        }
+        let m = ((rounded >> cut) as u8) & s.mant_mask;
+        sign | (((e + s.bias) as u8) << s.exp_shift) | m
+    } else {
+        // Subnormal: magnitude in units of 2^(emin - mant_bits).
+        let scale = f32::from_bits(((s.mant_bits - s.emin + 127) as u32) << 23);
+        let m = (a * scale).round_ties_even() as u8;
+        if m > s.mant_mask {
+            sign | (1 << s.exp_shift) // rounded up into the min normal
+        } else {
+            sign | m
+        }
+    }
+}
+
+/// Decode an 8-bit code to f32 via precomputed tables.
+#[inline]
+pub fn decode(code: u8, kind: Fp8Kind) -> f32 {
+    match kind {
+        Fp8Kind::E4M3 => e4m3_lut()[code as usize],
+        Fp8Kind::E5M2 => e5m2_lut()[code as usize],
+    }
+}
+
+fn decode_arith(code: u8, kind: Fp8Kind) -> f32 {
+    let s = spec(kind);
+    let sign = if code >> 7 == 1 { -1.0f32 } else { 1.0 };
+    let exp_field = ((code >> s.exp_shift) & ((1 << (7 - s.exp_shift)) - 1)) as i32;
+    let m = (code & s.mant_mask) as f32;
+    let pow2 = |e: i32| f32::from_bits(((e + 127) as u32) << 23);
+    let mag = if exp_field == 0 {
+        m * pow2(s.emin - s.mant_bits)
+    } else {
+        (1.0 + m * pow2(-s.mant_bits)) * pow2(exp_field - s.bias)
+    };
+    sign * mag
+}
+
+fn e4m3_lut() -> &'static [f32; 256] {
+    static LUT: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| {
+        std::array::from_fn(|c| decode_arith(c as u8, Fp8Kind::E4M3))
+    })
+}
+
+fn e5m2_lut() -> &'static [f32; 256] {
+    static LUT: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| {
+        std::array::from_fn(|c| decode_arith(c as u8, Fp8Kind::E5M2))
+    })
+}
+
+pub fn encode_e4m3(x: f32) -> u8 {
+    encode(x, Fp8Kind::E4M3)
+}
+
+pub fn decode_e4m3(code: u8) -> f32 {
+    decode(code, Fp8Kind::E4M3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_clamps_to_448() {
+        assert_eq!(quantize_e4m3(1000.0), 448.0);
+        assert_eq!(quantize_e4m3(-1000.0), -448.0);
+        assert_eq!(quantize_e4m3(448.0), 448.0);
+    }
+
+    #[test]
+    fn e4m3_code_round_trip_exhaustive() {
+        for code in 0u16..=255 {
+            let code = code as u8;
+            if code & 0x7F == 0x7F {
+                continue; // NaN pattern
+            }
+            let v = decode(code, Fp8Kind::E4M3);
+            let rt = encode(v, Fp8Kind::E4M3);
+            assert_eq!(decode(rt, Fp8Kind::E4M3), v, "code {code:#04x}");
+        }
+    }
+
+    #[test]
+    fn e5m2_code_round_trip_exhaustive() {
+        for code in 0u16..=255 {
+            let code = code as u8;
+            if (code >> 2) & 0x1F == 0x1F {
+                continue; // inf/NaN exponent
+            }
+            let v = decode(code, Fp8Kind::E5M2);
+            let rt = encode(v, Fp8Kind::E5M2);
+            assert_eq!(decode(rt, Fp8Kind::E5M2), v, "code {code:#04x}");
+        }
+    }
+
+    #[test]
+    fn e4m3_subnormals() {
+        let step = (-9.0f32).exp2();
+        assert_eq!(quantize_e4m3(step), step);
+        assert_eq!(quantize_e4m3(3.0 * step), 3.0 * step);
+        assert_eq!(quantize_e4m3(0.4 * step), 0.0);
+        assert_eq!(quantize_e4m3(0.6 * step), step);
+    }
+
+    #[test]
+    fn e4m3_relative_error_bound() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..20_000 {
+            let v = rng.uniform_in(-448.0, 448.0);
+            let q = quantize_e4m3(v);
+            if v.abs() >= (-6.0f32).exp2() {
+                assert!(
+                    (q - v).abs() <= v.abs() * (-4.0f32).exp2() + 1e-12,
+                    "v={v} q={q}"
+                );
+            } else {
+                assert!((q - v).abs() <= (-10.0f32).exp2() + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_monotone() {
+        let mut prev = f32::NEG_INFINITY;
+        let mut v = -500.0f32;
+        while v < 500.0 {
+            let q = quantize_e4m3(v);
+            assert!(q >= prev, "v={v}");
+            prev = q;
+            v += 0.37;
+        }
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // Between 448 and 480 the grid step at e=8 is 32; 464 is the
+        // midpoint of {448, 480} but 480 exceeds max -> clamps to 448.
+        assert_eq!(quantize_e4m3(464.0), 448.0);
+        // At e=3 the step is 1: 8.5 between 8 and 9 -> mantissa even => 8.
+        assert_eq!(quantize_e4m3(8.5), 8.0);
+        assert_eq!(quantize_e4m3(9.5), 10.0); // 9.5 -> 10 (even mantissa 2)
+    }
+
+    #[test]
+    fn e5m2_coarser_than_e4m3_in_normal_range() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let mut err3 = 0.0f64;
+        let mut err2 = 0.0f64;
+        for _ in 0..10_000 {
+            let v = rng.uniform_in(-400.0, 400.0);
+            err3 += ((quantize_e4m3(v) - v).abs() as f64).powi(2);
+            err2 += ((quantize_e5m2(v) - v).abs() as f64).powi(2);
+        }
+        assert!(err2 > 2.0 * err3, "e5m2 {err2} vs e4m3 {err3}");
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..5000 {
+            let v = rng.uniform_in(-448.0, 448.0);
+            for kind in [Fp8Kind::E4M3, Fp8Kind::E5M2] {
+                let q = quantize(v, kind);
+                assert_eq!(quantize(q, kind), q, "{kind:?} v={v}");
+            }
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Fused dual-MXFP quantization — the Rust mirror of the Pallas kernel
+//! (`python/compile/kernels/quant_fused.py`, paper Algorithm 2).
+//!
+//! One pass over each row produces both precision copies and all scales
+//! without materializing any intermediate buffer:
+//!
+//! * NVFP4 low copy — packed E2M1 nibbles + per-16 E4M3 scales,
+//! * MXFP8 high copy — E4M3 codes + per-32 E8M0 exponents,
+//! * per-token scale `S_q` (or coarser, per [`Granularity`]).
+//!
+//! This is the "MP" (fully fused) configuration of Table 6; the staged
+//! baselines it is ablated against live in [`super::unfused`].
+
+use super::block::Granularity;
+use super::{e2m1, e8m0, fp8, pack, LOG2_E, MXFP_BLOCK, NVFP4_BLOCK};
+
+/// Bit-level dual-quantized tensor ([rows, d] row-major source).
+#[derive(Clone, Debug)]
+pub struct DualQuantized {
+    pub rows: usize,
+    pub d: usize,
+    /// Packed E2M1 codes, two per byte: [rows, d/2].
+    pub packed_fp4: Vec<u8>,
+    /// NVFP4 per-16-block scales as E4M3 codes: [rows, d/16].
+    pub s4_codes: Vec<u8>,
+    /// MXFP8 element codes (E4M3): [rows, d].
+    pub fp8_codes: Vec<u8>,
+    /// MXFP8 per-32-block E8M0 exponents: [rows, d/32].
+    pub s8_codes: Vec<u8>,
+    /// Outer quantization scale per row: [rows].
+    pub sq: Vec<f32>,
+}
+
+impl DualQuantized {
+    /// Total bytes of the quantized representation (memory-traffic model).
+    pub fn quantized_bytes(&self) -> usize {
+        self.packed_fp4.len()
+            + self.s4_codes.len()
+            + self.fp8_codes.len()
+            + self.s8_codes.len()
+            + self.sq.len() * 4
+    }
+
+    /// Dequantize the NVFP4 low-precision copy into `out` ([rows, d]).
+    pub fn dequant_low(&self, out: &mut [f32]) {
+        let (rows, d) = (self.rows, self.d);
+        let mut codes = vec![0u8; d];
+        for r in 0..rows {
+            pack::unpack_row(&self.packed_fp4[r * d / 2..(r + 1) * d / 2], &mut codes);
+            let sq = self.sq[r];
+            for b in 0..d / NVFP4_BLOCK {
+                let s = fp8::decode_e4m3(self.s4_codes[r * d / NVFP4_BLOCK + b]) * sq;
+                for i in 0..NVFP4_BLOCK {
+                    out[r * d + b * NVFP4_BLOCK + i] =
+                        e2m1::decode(codes[b * NVFP4_BLOCK + i]) * s;
+                }
+            }
+        }
+    }
+
+    /// Dequantize the MXFP8 high-precision copy into `out` ([rows, d]).
+    pub fn dequant_high(&self, out: &mut [f32]) {
+        let (rows, d) = (self.rows, self.d);
+        for r in 0..rows {
+            let sq = self.sq[r];
+            for b in 0..d / MXFP_BLOCK {
+                let s = e8m0::decode(self.s8_codes[r * d / MXFP_BLOCK + b]) * sq;
+                for i in 0..MXFP_BLOCK {
+                    let idx = r * d + b * MXFP_BLOCK + i;
+                    out[idx] = fp8::decode_e4m3(self.fp8_codes[idx]) * s;
+                }
+            }
+        }
+    }
+}
+
+fn amax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// Fused dual quantization of a [rows, d] tensor (paper Algorithm 2).
+///
+/// `is_query` folds the base-2 softmax factor `log2(e)/sqrt(d)` into the
+/// tensor before quantization (Step 1). `granularity` selects the S_q
+/// scope (Step 2; `PerToken` is the paper's default).
+pub fn dual_quant(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    is_query: bool,
+    granularity: Granularity,
+) -> DualQuantized {
+    assert_eq!(x.len(), rows * d);
+    assert_eq!(d % MXFP_BLOCK, 0, "d={d} must be a multiple of 32");
+    let range = fp8::E4M3_MAX * e2m1::E2M1_MAX;
+    let pre = if is_query {
+        LOG2_E / (d as f32).sqrt()
+    } else {
+        1.0
+    };
+
+    // Coarse-granularity S_q values need a (cheap) amax prepass.
+    let row_tile = 64usize;
+    let tensor_amax = match granularity {
+        Granularity::PerTensor => amax(x) * pre,
+        _ => 0.0,
+    };
+
+    let mut out = DualQuantized {
+        rows,
+        d,
+        packed_fp4: vec![0u8; rows * d / 2],
+        s4_codes: vec![0u8; rows * d / NVFP4_BLOCK],
+        fp8_codes: vec![0u8; rows * d],
+        s8_codes: vec![0u8; rows * d / MXFP_BLOCK],
+        sq: vec![0f32; rows],
+    };
+
+    let mut scaled = vec![0f32; d];
+    let mut codes = vec![0u8; d];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        // Step 1 + Step 2: softmax pre-scale, then S_q.
+        let row_amax = match granularity {
+            Granularity::PerTensor => tensor_amax,
+            Granularity::PerBlock => {
+                let start = (r / row_tile) * row_tile;
+                let end = (start + row_tile).min(rows);
+                amax(&x[start * d..end * d]) * pre
+            }
+            Granularity::PerToken => amax(row) * pre,
+        };
+        let sq = (row_amax / range).max(1e-30);
+        out.sq[r] = sq;
+        let inv_sq = pre / sq;
+        for (s, &v) in scaled.iter_mut().zip(row) {
+            *s = v * inv_sq;
+        }
+
+        // Steps 3–5: NVFP4 branch (E4M3 block scale, E2M1 encode, pack).
+        for b in 0..d / NVFP4_BLOCK {
+            let blk = &scaled[b * NVFP4_BLOCK..(b + 1) * NVFP4_BLOCK];
+            let s = fp8::quantize_e4m3(amax(blk) / e2m1::E2M1_MAX).max((-9.0f32).exp2());
+            out.s4_codes[r * d / NVFP4_BLOCK + b] = fp8::encode_e4m3(s);
+            let inv = 1.0 / s;
+            for (i, &v) in blk.iter().enumerate() {
+                codes[b * NVFP4_BLOCK + i] =
+                    e2m1::encode((v * inv).clamp(-e2m1::E2M1_MAX, e2m1::E2M1_MAX));
+            }
+        }
+        pack::pack_row(&codes, &mut out.packed_fp4[r * d / 2..(r + 1) * d / 2]);
+
+        // Steps 6–7: MXFP8 branch (E8M0 exponent, E4M3 encode).
+        for b in 0..d / MXFP_BLOCK {
+            let blk = &scaled[b * MXFP_BLOCK..(b + 1) * MXFP_BLOCK];
+            let (s, code) = e8m0::shared_scale(amax(blk), fp8::E4M3_EMAX);
+            out.s8_codes[r * d / MXFP_BLOCK + b] = code;
+            let inv = 1.0 / s;
+            for (i, &v) in blk.iter().enumerate() {
+                out.fp8_codes[r * d + b * MXFP_BLOCK + i] =
+                    fp8::encode_e4m3((v * inv).clamp(-fp8::E4M3_MAX, fp8::E4M3_MAX));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics;
+    use crate::util::rng::Rng;
+
+    fn randn(rows: usize, d: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..rows * d).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn shapes() {
+        let x = randn(32, 64, 1, 1.0);
+        let q = dual_quant(&x, 32, 64, true, Granularity::PerToken);
+        assert_eq!(q.packed_fp4.len(), 32 * 32);
+        assert_eq!(q.s4_codes.len(), 32 * 4);
+        assert_eq!(q.fp8_codes.len(), 32 * 64);
+        assert_eq!(q.s8_codes.len(), 32 * 2);
+        assert_eq!(q.sq.len(), 32);
+    }
+
+    #[test]
+    fn high_copy_reconstructs_with_prescale() {
+        let d = 64;
+        let x = randn(32, d, 2, 1.0);
+        let q = dual_quant(&x, 32, d, true, Granularity::PerToken);
+        let mut high = vec![0f32; x.len()];
+        q.dequant_high(&mut high);
+        let pre = LOG2_E / (d as f32).sqrt();
+        let target: Vec<f32> = x.iter().map(|v| v * pre).collect();
+        assert!(metrics::cos_sim(&target, &high) > 0.999);
+        let rel = metrics::rmse(&target, &high)
+            / (target.iter().map(|v| v * v).sum::<f32>() / target.len() as f32).sqrt() as f64;
+        assert!(rel < 0.05, "rel {rel}");
+    }
+
+    #[test]
+    fn low_copy_coarser_than_high() {
+        let x = randn(64, 64, 3, 2.0);
+        let q = dual_quant(&x, 64, 64, false, Granularity::PerToken);
+        let mut low = vec![0f32; x.len()];
+        let mut high = vec![0f32; x.len()];
+        q.dequant_low(&mut low);
+        q.dequant_high(&mut high);
+        let el = metrics::rmse(&x, &low);
+        let eh = metrics::rmse(&x, &high);
+        assert!(el > 2.0 * eh, "{el} vs {eh}");
+    }
+
+    #[test]
+    fn key_path_identity_scale() {
+        let x = randn(16, 32, 4, 1.0);
+        let q = dual_quant(&x, 16, 32, false, Granularity::PerToken);
+        let mut high = vec![0f32; x.len()];
+        q.dequant_high(&mut high);
+        assert!(metrics::cos_sim(&x, &high) > 0.999);
+    }
+
+    #[test]
+    fn quantized_bytes_smaller_than_f32() {
+        let x = randn(128, 128, 5, 1.0);
+        let q = dual_quant(&x, 128, 128, false, Granularity::PerToken);
+        // FP4(packed) + FP8 + scales must stay well under 2x f32 input
+        // (it is ~1.6 bytes/elem vs 4 bytes/elem).
+        assert!(q.quantized_bytes() < x.len() * 2);
+    }
+
+    #[test]
+    fn granularities_agree_on_uniform_rows() {
+        // If every row has the same amax the three granularities coincide.
+        let d = 64;
+        let mut x = randn(64, d, 6, 1.0);
+        for r in 0..64 {
+            // Force identical row amax.
+            let row = &mut x[r * d..(r + 1) * d];
+            let a = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let target = 3.0 / a;
+            for v in row.iter_mut() {
+                *v *= target;
+            }
+        }
+        let qt = dual_quant(&x, 64, d, false, Granularity::PerToken);
+        let qn = dual_quant(&x, 64, d, false, Granularity::PerTensor);
+        assert_eq!(qt.packed_fp4, qn.packed_fp4);
+        assert_eq!(qt.fp8_codes, qn.fp8_codes);
+    }
+
+    #[test]
+    fn property_reconstruction_error_bounds() {
+        crate::util::prop::check("dual quant bounds", 30, |rng| {
+            let d = crate::util::prop::gen::dim_multiple_of(rng, 32, 32, 128);
+            let rows = 8;
+            let scale = rng.uniform_in(0.01, 100.0);
+            let x: Vec<f32> =
+                (0..rows * d).map(|_| rng.normal() as f32 * scale).collect();
+            let q = dual_quant(&x, rows, d, false, Granularity::PerToken);
+            let mut low = vec![0f32; x.len()];
+            let mut high = vec![0f32; x.len()];
+            q.dequant_low(&mut low);
+            q.dequant_high(&mut high);
+            let nx = (x.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()).sqrt() + 1e-9;
+            let el = x.iter().zip(&low).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt();
+            let eh = x.iter().zip(&high).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt();
+            crate::prop_assert!(el / nx < 0.25, "low rel err {}", el / nx);
+            crate::prop_assert!(eh / nx < 0.07, "high rel err {}", eh / nx);
+            Ok(())
+        });
+    }
+}

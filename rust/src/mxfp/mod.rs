@@ -1,0 +1,93 @@
+//! The MXFP format zoo (paper Table 1) in Rust, bit-compatible with the
+//! Pallas/jnp implementation in `python/compile/kernels/mxfp.py`.
+//!
+//! | Name  | Block | Element    | Shared scale |
+//! |-------|-------|------------|--------------|
+//! | MXFP8 | 32    | E4M3/E5M2  | E8M0 (8 bit) |
+//! | MXFP4 | 32    | E2M1       | E8M0 (8 bit) |
+//! | NVFP4 | 16    | E2M1       | E4M3 (8 bit) |
+//!
+//! Submodules:
+//! * [`e2m1`]   — FP4 encode/decode (paper Algorithm 3)
+//! * [`fp8`]    — E4M3 / E5M2 codecs
+//! * [`e8m0`]   — shared-exponent scales (Alg. 2 Steps 6–7)
+//! * [`pack`]   — two-FP4-per-byte nibble packing (Alg. 2 Step 5)
+//! * [`block`]  — block fake-quantization of the three formats at
+//!                per-tensor / per-block / per-token granularity (Tab. 8)
+//! * [`fused`]  — single-pass dual-format pipeline (Alg. 2 end to end)
+//! * [`unfused`]— the multi-kernel-launch baseline with per-operator
+//!                timing (Tables 6 and 7)
+
+pub mod block;
+pub mod e2m1;
+pub mod e8m0;
+pub mod fp8;
+pub mod fused;
+pub mod pack;
+pub mod unfused;
+
+/// NVFP4 groups 16 elements per shared scale.
+pub const NVFP4_BLOCK: usize = 16;
+/// MXFP4 / MXFP8 group 32 elements per shared scale.
+pub const MXFP_BLOCK: usize = 32;
+/// log2(e): folded into Q so the kernel softmax runs in base-2.
+pub const LOG2_E: f32 = std::f32::consts::LOG2_E;
+
+/// Exact floor(log2(a)) for finite positive f32 (bit-level; no libm
+/// rounding hazards — mirrors `_floor_log2` on the Python side).
+#[inline]
+pub fn floor_log2(a: f32) -> i32 {
+    debug_assert!(a > 0.0 && a.is_finite());
+    let bits = a.to_bits();
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    if exp != 0 {
+        exp - 127
+    } else {
+        // Subnormal: log2(mantissa * 2^-149).
+        let mant = bits & 0x7F_FFFF;
+        -149 + (31 - mant.leading_zeros() as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_log2_powers() {
+        for e in -120..120 {
+            let v = (e as f32).exp2();
+            assert_eq!(floor_log2(v), e, "2^{e}");
+            assert_eq!(floor_log2(v * 1.5), e);
+            if e > -120 {
+                assert_eq!(floor_log2(v * 0.99), e - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn floor_log2_subnormals() {
+        let tiny = f32::from_bits(1); // 2^-149
+        assert_eq!(floor_log2(tiny), -149);
+        assert_eq!(floor_log2(f32::from_bits(0b10)), -148);
+    }
+
+    #[test]
+    fn floor_log2_matches_naive() {
+        let mut rng = crate::util::rng::Rng::new(0);
+        for _ in 0..10_000 {
+            let v = (rng.uniform_in(-30.0, 30.0)).exp2() as f32;
+            let naive = {
+                let mut e = v.log2().floor() as i32;
+                if v >= ((e + 1) as f32).exp2() {
+                    e += 1;
+                }
+                if v < (e as f32).exp2() {
+                    e -= 1;
+                }
+                e
+            };
+            assert_eq!(floor_log2(v), naive, "v={v}");
+        }
+    }
+}

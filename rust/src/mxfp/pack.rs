@@ -1,0 +1,69 @@
+//! FP4 nibble packing (paper Algorithm 2, Step 5).
+//!
+//! Two E2M1 codes per byte; the element with the higher index occupies
+//! the most-significant nibble: `packed = (hi << 4) | lo`.
+
+/// Pack pairs of 4-bit codes along a row; `codes.len()` must be even.
+pub fn pack_row(codes: &[u8], out: &mut [u8]) {
+    debug_assert_eq!(codes.len() % 2, 0);
+    debug_assert_eq!(out.len(), codes.len() / 2);
+    for (o, pair) in out.iter_mut().zip(codes.chunks_exact(2)) {
+        *o = (pair[1] << 4) | (pair[0] & 0x0F);
+    }
+}
+
+/// Unpack a packed row back into 4-bit codes.
+pub fn unpack_row(packed: &[u8], out: &mut [u8]) {
+    debug_assert_eq!(out.len(), packed.len() * 2);
+    for (i, &b) in packed.iter().enumerate() {
+        out[2 * i] = b & 0x0F;
+        out[2 * i + 1] = (b >> 4) & 0x0F;
+    }
+}
+
+/// Pack a whole buffer (row-major, contiguous).
+pub fn pack(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len() / 2];
+    pack_row(codes, &mut out);
+    out
+}
+
+/// Unpack a whole buffer.
+pub fn unpack(packed: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; packed.len() * 2];
+    unpack_row(packed, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let codes: Vec<u8> = (0..64).map(|i| (i % 16) as u8).collect();
+        assert_eq!(unpack(&pack(&codes)), codes);
+    }
+
+    #[test]
+    fn high_index_in_high_nibble() {
+        let packed = pack(&[0x3, 0xA]);
+        assert_eq!(packed, vec![(0xA << 4) | 0x3]);
+    }
+
+    #[test]
+    fn halves_the_size() {
+        let codes = vec![1u8; 128];
+        assert_eq!(pack(&codes).len(), 64);
+    }
+
+    #[test]
+    fn property_random_round_trip() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        for _ in 0..200 {
+            let n = 2 * (1 + rng.below(64) as usize);
+            let codes: Vec<u8> = (0..n).map(|_| (rng.below(16)) as u8).collect();
+            assert_eq!(unpack(&pack(&codes)), codes);
+        }
+    }
+}

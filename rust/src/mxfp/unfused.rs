@@ -1,0 +1,444 @@
+//! The *unfused* quantization pipeline — the baseline of Tables 6 and 7.
+//!
+//! The paper ablates its fused Triton kernel against an eager (PyTorch
+//! SDPA-style) pipeline where quantization, low-bit encoding, packing and
+//! scale conversion run as separate operators, each materializing its
+//! intermediate in memory and paying a dispatch/launch cost. We
+//! reproduce that structure faithfully: every stage below allocates its
+//! output buffer, walks the whole tensor, and is timed individually
+//! under the operator names the paper's profiler reports (Table 7).
+//!
+//! [`FusionConfig`] toggles the four fusion components of Table 6
+//! (Encode / Pack / Scale-Cvt / MP); `run_pipeline` executes the
+//! resulting staged or fused computation and returns per-operator wall
+//! times.
+
+use super::block::Granularity;
+use super::fused::{dual_quant, DualQuantized};
+use super::{e2m1, e8m0, fp8, pack, LOG2_E, MXFP_BLOCK, NVFP4_BLOCK};
+use std::time::Instant;
+
+/// Table 6 ablation switches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FusionConfig {
+    /// FP16->MX element encoding happens in-kernel (vs eager op chains).
+    pub encode: bool,
+    /// Two FP4 values packed into one byte in-kernel.
+    pub pack: bool,
+    /// Microscaling scale converted to E8M0 in-kernel.
+    pub scale_cvt: bool,
+    /// Both precisions produced by one single fused kernel.
+    pub mp: bool,
+}
+
+impl FusionConfig {
+    pub const UNFUSED: FusionConfig =
+        FusionConfig { encode: false, pack: false, scale_cvt: false, mp: false };
+    pub const FULLY_FUSED: FusionConfig =
+        FusionConfig { encode: true, pack: true, scale_cvt: true, mp: true };
+
+    pub fn label(&self) -> String {
+        format!(
+            "encode={} pack={} scale_cvt={} mp={}",
+            self.encode as u8, self.pack as u8, self.scale_cvt as u8, self.mp as u8
+        )
+    }
+}
+
+/// One timed operator invocation (Table 7 row).
+#[derive(Clone, Debug)]
+pub struct OpTime {
+    pub phase: &'static str,
+    pub op: &'static str,
+    pub nanos: u128,
+}
+
+/// Result of a pipeline run: outputs plus the operator timeline.
+pub struct PipelineRun {
+    pub out: DualQuantized,
+    pub ops: Vec<OpTime>,
+    /// Number of distinct "kernel launches" (per-operator passes) —
+    /// feeds the launch-overhead term of the B200 projection.
+    pub launches: usize,
+}
+
+impl PipelineRun {
+    pub fn total_nanos(&self) -> u128 {
+        self.ops.iter().map(|o| o.nanos).sum()
+    }
+
+    pub fn phase_nanos(&self, phase: &str) -> u128 {
+        self.ops.iter().filter(|o| o.phase == phase).map(|o| o.nanos).sum()
+    }
+}
+
+macro_rules! timed {
+    ($ops:expr, $phase:literal, $name:literal, $body:expr) => {{
+        let t0 = Instant::now();
+        let r = $body;
+        $ops.push(OpTime { phase: $phase, op: $name, nanos: t0.elapsed().as_nanos() });
+        r
+    }};
+}
+
+fn amax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// The eager "element encoding" chain for ONE precision branch, written
+/// the way a tensor library executes it: one whole-tensor pass per op.
+#[allow(clippy::too_many_arguments)]
+fn eager_encode_branch(
+    ops: &mut Vec<OpTime>,
+    launches: &mut usize,
+    scaled: &[f32],
+    rows: usize,
+    d: usize,
+    block: usize,
+    fp4: bool,
+) -> (Vec<f32>, Vec<u8>, Vec<f32>) {
+    let nb = d / block;
+
+    // MinOps + ArgMinOps: eager amax via min/max reductions that also
+    // materialize index tensors (mirroring torch.min/argmin dispatch).
+    let mut bmax = vec![0f32; rows * nb];
+    timed!(ops, "encode", "MinOps", {
+        for r in 0..rows {
+            for b in 0..nb {
+                bmax[r * nb + b] = amax(&scaled[r * d + b * block..r * d + (b + 1) * block]);
+            }
+        }
+    });
+    *launches += 1;
+    let mut argidx = vec![0u32; rows * nb];
+    timed!(ops, "encode", "ArgMinOps", {
+        for r in 0..rows {
+            for b in 0..nb {
+                let blk = &scaled[r * d + b * block..r * d + (b + 1) * block];
+                let mut best = 0usize;
+                for (i, v) in blk.iter().enumerate() {
+                    if v.abs() > blk[best].abs() {
+                        best = i;
+                    }
+                }
+                argidx[r * nb + b] = best as u32;
+            }
+        }
+    });
+    *launches += 1;
+
+    // MulFunctor: per-block scale division materialized as a new tensor.
+    let mut scales = vec![0f32; rows * nb];
+    timed!(ops, "encode", "MulFunctor", {
+        for (s, &m) in scales.iter_mut().zip(&bmax) {
+            *s = if fp4 {
+                fp8::quantize_e4m3(m / e2m1::E2M1_MAX).max((-9.0f32).exp2())
+            } else {
+                e8m0::shared_scale(m, fp8::E4M3_EMAX).0
+            };
+        }
+    });
+    *launches += 1;
+
+    let mut divided = vec![0f32; rows * d];
+    timed!(ops, "encode", "Direct_Copy", {
+        for r in 0..rows {
+            for b in 0..nb {
+                let s = 1.0 / scales[r * nb + b];
+                for i in 0..block {
+                    divided[r * d + b * block + i] = scaled[r * d + b * block + i] * s;
+                }
+            }
+        }
+    });
+    *launches += 1;
+
+    // CompareEq + AddOps: the threshold-indicator chain of Algorithm 3
+    // executed as separate whole-tensor comparisons and additions.
+    let mut exps = vec![0u8; rows * d];
+    timed!(ops, "encode", "CompareEq", {
+        if fp4 {
+            for (e, &v) in exps.iter_mut().zip(&divided) {
+                let a = v.abs();
+                *e = (a >= 1.0) as u8 + (a >= 2.0) as u8 + (a >= 4.0) as u8;
+            }
+        } else {
+            for (e, &v) in exps.iter_mut().zip(&divided) {
+                let a = v.abs().clamp(1e-30, fp8::E4M3_MAX);
+                *e = (super::floor_log2(a).clamp(-6, 8) + 7) as u8;
+            }
+        }
+    });
+    *launches += 1;
+
+    let mut codes = vec![0u8; rows * d];
+    timed!(ops, "encode", "AddOps", {
+        if fp4 {
+            for (c, &v) in codes.iter_mut().zip(&divided) {
+                *c = e2m1::encode(v.clamp(-e2m1::E2M1_MAX, e2m1::E2M1_MAX));
+            }
+        } else {
+            for (c, &v) in codes.iter_mut().zip(&divided) {
+                *c = fp8::encode_e4m3(v.clamp(-fp8::E4M3_MAX, fp8::E4M3_MAX));
+            }
+        }
+    });
+    *launches += 1;
+
+    // Memcpy/Memset: staging buffer initialization the fused kernel
+    // never needs.
+    let staging = timed!(ops, "encode", "Memcpy", { codes.clone() });
+    *launches += 1;
+
+    (divided, staging, scales)
+}
+
+/// Run the quantization pipeline for one tensor under a fusion config.
+///
+/// Fully fused (`mp=true` implies the rest) delegates to
+/// [`super::fused::dual_quant`]; staged configurations execute eager op
+/// chains and then *still* produce the same `DualQuantized` output, so
+/// all configurations are output-equivalent (asserted in tests).
+pub fn run_pipeline(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    is_query: bool,
+    cfg: FusionConfig,
+) -> PipelineRun {
+    let mut ops = Vec::new();
+    let mut launches = 0usize;
+
+    if cfg.mp {
+        // Single fused kernel for both precisions (the DMA design).
+        let t0 = Instant::now();
+        let out = dual_quant(x, rows, d, is_query, Granularity::PerToken);
+        ops.push(OpTime { phase: "fused", op: "Kernel Fusion (Ours)", nanos: t0.elapsed().as_nanos() });
+        launches += 1;
+        return PipelineRun { out, ops, launches };
+    }
+
+    // Shared pre-scale pass (softmax factor + S_q) — eager.
+    let pre = if is_query { LOG2_E / (d as f32).sqrt() } else { 1.0 };
+    let range = fp8::E4M3_MAX * e2m1::E2M1_MAX;
+    let mut sq = vec![0f32; rows];
+    timed!(&mut ops, "encode", "MinOps", {
+        for r in 0..rows {
+            sq[r] = (amax(&x[r * d..(r + 1) * d]) * pre / range).max(1e-30);
+        }
+    });
+    launches += 1;
+    let mut scaled = vec![0f32; rows * d];
+    timed!(&mut ops, "encode", "MulFunctor", {
+        for r in 0..rows {
+            let inv = pre / sq[r];
+            for i in 0..d {
+                scaled[r * d + i] = x[r * d + i] * inv;
+            }
+        }
+    });
+    launches += 1;
+
+    let (fp4_branch, fp8_branch);
+    if cfg.encode {
+        // In-kernel encoding: one pass per branch, no op chains.
+        let t0 = Instant::now();
+        let mut codes4 = vec![0u8; rows * d];
+        let mut s4 = vec![0f32; rows * d / NVFP4_BLOCK];
+        for r in 0..rows {
+            for b in 0..d / NVFP4_BLOCK {
+                let blk = &scaled[r * d + b * NVFP4_BLOCK..r * d + (b + 1) * NVFP4_BLOCK];
+                let s = fp8::quantize_e4m3(amax(blk) / e2m1::E2M1_MAX).max((-9.0f32).exp2());
+                s4[r * d / NVFP4_BLOCK + b] = s;
+                let inv = 1.0 / s;
+                for (i, &v) in blk.iter().enumerate() {
+                    codes4[r * d + b * NVFP4_BLOCK + i] =
+                        e2m1::encode((v * inv).clamp(-e2m1::E2M1_MAX, e2m1::E2M1_MAX));
+                }
+            }
+        }
+        ops.push(OpTime { phase: "encode", op: "FusedEncodeFP4", nanos: t0.elapsed().as_nanos() });
+        launches += 1;
+        let t0 = Instant::now();
+        let mut codes8 = vec![0u8; rows * d];
+        let mut s8 = vec![0f32; rows * d / MXFP_BLOCK];
+        for r in 0..rows {
+            for b in 0..d / MXFP_BLOCK {
+                let blk = &scaled[r * d + b * MXFP_BLOCK..r * d + (b + 1) * MXFP_BLOCK];
+                let (s, _) = e8m0::shared_scale(amax(blk), fp8::E4M3_EMAX);
+                s8[r * d / MXFP_BLOCK + b] = s;
+                let inv = 1.0 / s;
+                for (i, &v) in blk.iter().enumerate() {
+                    codes8[r * d + b * MXFP_BLOCK + i] =
+                        fp8::encode_e4m3((v * inv).clamp(-fp8::E4M3_MAX, fp8::E4M3_MAX));
+                }
+            }
+        }
+        ops.push(OpTime { phase: "encode", op: "FusedEncodeFP8", nanos: t0.elapsed().as_nanos() });
+        launches += 1;
+        fp4_branch = (codes4, s4);
+        fp8_branch = (codes8, s8);
+    } else {
+        let (_, c4, s4) =
+            eager_encode_branch(&mut ops, &mut launches, &scaled, rows, d, NVFP4_BLOCK, true);
+        let (_, c8, s8) =
+            eager_encode_branch(&mut ops, &mut launches, &scaled, rows, d, MXFP_BLOCK, false);
+        fp4_branch = (c4, s4);
+        fp8_branch = (c8, s8);
+    }
+    let (codes4, s4_vals) = fp4_branch;
+    let (codes8, s8_vals) = fp8_branch;
+
+    // ---- Packing phase (Table 7: lshift + BitwiseOr as separate ops) --
+    let mut packed = vec![0u8; rows * d / 2];
+    if cfg.pack {
+        timed!(&mut ops, "pack", "FusedPack", {
+            pack::pack_row(&codes4, &mut packed);
+        });
+        launches += 1;
+    } else {
+        let mut shifted = vec![0u8; rows * d / 2];
+        timed!(&mut ops, "pack", "lshift", {
+            for (o, pair) in shifted.iter_mut().zip(codes4.chunks_exact(2)) {
+                *o = pair[1] << 4;
+            }
+        });
+        launches += 1;
+        timed!(&mut ops, "pack", "BitwiseOr", {
+            for (o, (s, pair)) in packed
+                .iter_mut()
+                .zip(shifted.iter().zip(codes4.chunks_exact(2)))
+            {
+                *o = s | (pair[0] & 0x0F);
+            }
+        });
+        launches += 1;
+    }
+
+    // ---- Scale conversion phase (Table 7 rows) -----------------------
+    let nb4 = rows * d / NVFP4_BLOCK;
+    let nb8 = rows * d / MXFP_BLOCK;
+    let mut s4_codes = vec![0u8; nb4];
+    let mut s8_codes = vec![0u8; nb8];
+    if cfg.scale_cvt {
+        timed!(&mut ops, "scale", "FusedScaleCvt", {
+            for (c, &s) in s4_codes.iter_mut().zip(&s4_vals) {
+                *c = fp8::encode_e4m3(s);
+            }
+            for (c, &s) in s8_codes.iter_mut().zip(&s8_vals) {
+                *c = (super::floor_log2(s.max(1e-30)) + 127).clamp(0, 254) as u8;
+            }
+        });
+        launches += 1;
+    } else {
+        let mut log2s = vec![0i32; nb8];
+        timed!(&mut ops, "scale", "IndexOps", {
+            for (l, &s) in log2s.iter_mut().zip(&s8_vals) {
+                *l = super::floor_log2(s.max(1e-30));
+            }
+        });
+        launches += 1;
+        timed!(&mut ops, "scale", "DeviceSelectSweep", {
+            for (c, &l) in s8_codes.iter_mut().zip(&log2s) {
+                *c = (l + 127).clamp(0, 254) as u8;
+            }
+        });
+        launches += 1;
+        timed!(&mut ops, "scale", "Write_Indices", {
+            for (c, &s) in s4_codes.iter_mut().zip(&s4_vals) {
+                *c = fp8::encode_e4m3(s);
+            }
+        });
+        launches += 1;
+        let _staged: Vec<u8> = timed!(&mut ops, "scale", "Direct_Copy", { s8_codes.clone() });
+        launches += 1;
+        let _staged2: Vec<u8> = timed!(&mut ops, "scale", "Memcpy", { s4_codes.clone() });
+        launches += 1;
+    }
+
+    let out = DualQuantized {
+        rows,
+        d,
+        packed_fp4: packed,
+        s4_codes,
+        fp8_codes: codes8,
+        s8_codes,
+        sq,
+    };
+    PipelineRun { out, ops, launches }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(rows: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..rows * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn configs() -> Vec<FusionConfig> {
+        vec![
+            FusionConfig::UNFUSED,
+            FusionConfig { encode: true, pack: false, scale_cvt: false, mp: false },
+            FusionConfig { encode: true, pack: true, scale_cvt: false, mp: false },
+            FusionConfig { encode: true, pack: true, scale_cvt: true, mp: false },
+            FusionConfig::FULLY_FUSED,
+        ]
+    }
+
+    #[test]
+    fn all_configs_output_equivalent() {
+        let (rows, d) = (64, 64);
+        let x = randn(rows, d, 1);
+        let reference = run_pipeline(&x, rows, d, true, FusionConfig::FULLY_FUSED);
+        for cfg in configs() {
+            let run = run_pipeline(&x, rows, d, true, cfg);
+            assert_eq!(run.out.packed_fp4, reference.out.packed_fp4, "{}", cfg.label());
+            assert_eq!(run.out.fp8_codes, reference.out.fp8_codes, "{}", cfg.label());
+            assert_eq!(run.out.s4_codes, reference.out.s4_codes, "{}", cfg.label());
+            assert_eq!(run.out.s8_codes, reference.out.s8_codes, "{}", cfg.label());
+        }
+    }
+
+    #[test]
+    fn launch_count_strictly_decreases_with_fusion() {
+        let (rows, d) = (32, 64);
+        let x = randn(rows, d, 2);
+        let launches: Vec<usize> = configs()
+            .into_iter()
+            .map(|c| run_pipeline(&x, rows, d, true, c).launches)
+            .collect();
+        for w in launches.windows(2) {
+            assert!(w[1] < w[0], "launches {launches:?} not strictly decreasing");
+        }
+        assert_eq!(*launches.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn unfused_encode_dominates_breakdown() {
+        // Table 7's key observation: element encoding is ~95% of the
+        // unfused pipeline.
+        let (rows, d) = (512, 128);
+        let x = randn(rows, d, 3);
+        let run = run_pipeline(&x, rows, d, true, FusionConfig::UNFUSED);
+        let encode = run.phase_nanos("encode") as f64;
+        let total = run.total_nanos() as f64;
+        assert!(encode / total > 0.6, "encode share {}", encode / total);
+    }
+
+    #[test]
+    fn op_names_match_table7() {
+        let (rows, d) = (32, 64);
+        let x = randn(rows, d, 4);
+        let run = run_pipeline(&x, rows, d, true, FusionConfig::UNFUSED);
+        let names: Vec<&str> = run.ops.iter().map(|o| o.op).collect();
+        for expected in ["MinOps", "ArgMinOps", "Direct_Copy", "CompareEq",
+                         "AddOps", "MulFunctor", "Memcpy", "lshift",
+                         "BitwiseOr", "IndexOps", "DeviceSelectSweep",
+                         "Write_Indices"] {
+            assert!(names.contains(&expected), "missing op {expected}");
+        }
+    }
+}

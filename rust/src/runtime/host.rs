@@ -1,0 +1,184 @@
+//! Host fallback [`ModelBackend`]: the pure-Rust CPU model mirror behind
+//! the same interface as the PJRT runtime. Lets the whole coordinator
+//! stack (scheduler, batcher, server, examples) run and test without
+//! artifacts, and cross-checks PJRT outputs in integration tests.
+
+use super::{ModelBackend, PrefillOut};
+use crate::config::ModelConfig;
+use crate::kvcache::{SlotCache, SlotKv};
+use crate::model::{AttnMode, CpuModel, KvState};
+
+pub struct HostBackend {
+    pub model: CpuModel,
+    slots: SlotCache,
+    cache_len: usize,
+    buckets: Vec<usize>,
+}
+
+impl HostBackend {
+    pub fn new(model: CpuModel, cache_len: usize) -> HostBackend {
+        let cfg = model.cfg.clone();
+        HostBackend {
+            slots: SlotCache::new(cfg.n_layers, cfg.n_kv_heads, cache_len, cfg.d_head),
+            model,
+            cache_len,
+            buckets: vec![1, 2, 4],
+        }
+    }
+
+    /// Deterministic random-weight backend used across tests.
+    pub fn for_tests() -> HostBackend {
+        let cfg = crate::model::test_config();
+        let w = crate::model::random_weights(&cfg, 42);
+        HostBackend::new(CpuModel::new(cfg, w).unwrap(), 96)
+    }
+
+    fn cfg(&self) -> &ModelConfig {
+        &self.model.cfg
+    }
+
+    /// SlotKv (flat [NL, H, C, Dh]) -> KvState tensors.
+    fn slot_to_state(&self, slot: &SlotKv) -> KvState {
+        let cfg = self.cfg();
+        let mut st = KvState::new(cfg, self.cache_len);
+        let (c, dh) = (self.cache_len, cfg.d_head);
+        for li in 0..cfg.n_layers {
+            for h in 0..cfg.n_kv_heads {
+                let base = (li * cfg.n_kv_heads + h) * c * dh;
+                st.k[li][h].data.copy_from_slice(&slot.k[base..base + c * dh]);
+                st.v[li][h].data.copy_from_slice(&slot.v[base..base + c * dh]);
+            }
+        }
+        st.len = slot.pos;
+        st
+    }
+
+    fn state_to_slot(&self, st: &KvState) -> SlotKv {
+        let cfg = self.cfg();
+        let mut slot = self.slots.empty_slot();
+        let (c, dh) = (self.cache_len, cfg.d_head);
+        for li in 0..cfg.n_layers {
+            for h in 0..cfg.n_kv_heads {
+                let base = (li * cfg.n_kv_heads + h) * c * dh;
+                slot.k[base..base + c * dh].copy_from_slice(&st.k[li][h].data);
+                slot.v[base..base + c * dh].copy_from_slice(&st.v[li][h].data);
+            }
+        }
+        slot.pos = st.len;
+        slot
+    }
+}
+
+impl ModelBackend for HostBackend {
+    fn prefill(&mut self, tokens: &[i32], dma: bool) -> crate::Result<PrefillOut> {
+        let mode = if dma { AttnMode::Dma } else { AttnMode::Native };
+        let mut kv = KvState::new(self.cfg(), self.cache_len);
+        let logits = self.model.prefill(tokens, mode, &mut kv)?;
+        let last = logits.row(tokens.len() - 1).to_vec();
+        Ok(PrefillOut { last_logits: last, slot: self.state_to_slot(&kv) })
+    }
+
+    fn decode(
+        &mut self,
+        tokens: &[i32],
+        slots: &mut [Option<&mut SlotKv>],
+    ) -> crate::Result<Vec<f32>> {
+        let vocab = self.cfg().vocab;
+        let mut out = vec![0f32; slots.len() * vocab];
+        for (i, slot) in slots.iter_mut().enumerate() {
+            let Some(s) = slot else { continue };
+            let mut st = self.slot_to_state(s);
+            let logits = self.model.decode_step(tokens[i], &mut st)?;
+            out[i * vocab..(i + 1) * vocab].copy_from_slice(&logits);
+            **s = self.state_to_slot(&st);
+        }
+        Ok(out)
+    }
+
+    fn eval_logits(
+        &mut self,
+        tokens: &[i32],
+        b: usize,
+        l: usize,
+        dma: bool,
+    ) -> crate::Result<Vec<f32>> {
+        let mode = if dma { AttnMode::Dma } else { AttnMode::Native };
+        let vocab = self.cfg().vocab;
+        let mut out = vec![0f32; b * l * vocab];
+        for bi in 0..b {
+            let mut kv = KvState::new(self.cfg(), l);
+            let logits = self
+                .model
+                .prefill(&tokens[bi * l..(bi + 1) * l], mode, &mut kv)?;
+            out[bi * l * vocab..(bi + 1) * l * vocab].copy_from_slice(&logits.data);
+        }
+        Ok(out)
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg().vocab
+    }
+
+    fn cache_len(&self) -> usize {
+        self.cache_len
+    }
+
+    fn decode_buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        "host-cpu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_then_decode_matches_cpu_model() {
+        let mut be = HostBackend::for_tests();
+        let toks: Vec<i32> = (0..16).map(|i| ((i * 7) % 60) + 1).collect();
+        let out = be.prefill(&toks, false).unwrap();
+        assert_eq!(out.last_logits.len(), 64);
+        assert_eq!(out.slot.pos, 16);
+
+        // Direct CPU path for comparison.
+        let cfg = crate::model::test_config();
+        let w = crate::model::random_weights(&cfg, 42);
+        let m = CpuModel::new(cfg, w).unwrap();
+        let mut kv = KvState::new(&m.cfg, 96);
+        let lg = m.prefill(&toks, AttnMode::Native, &mut kv).unwrap();
+        for (a, b) in out.last_logits.iter().zip(lg.row(15)) {
+            assert!((a - b).abs() < 1e-5);
+        }
+
+        // Decode continues correctly through slot round-trips.
+        let mut slot = out.slot;
+        let logits = be.decode(&[7], &mut [Some(&mut slot)]).unwrap();
+        let l2 = m.decode_step(7, &mut kv).unwrap();
+        for (a, b) in logits.iter().zip(&l2) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        assert_eq!(slot.pos, 17);
+    }
+
+    #[test]
+    fn batch_decode_with_padding_slots() {
+        let mut be = HostBackend::for_tests();
+        let o1 = be.prefill(&[1, 2, 3, 4], false).unwrap();
+        let mut s1 = o1.slot;
+        let logits = be.decode(&[9, 0], &mut [Some(&mut s1), None]).unwrap();
+        assert_eq!(logits.len(), 2 * 64);
+        assert_eq!(s1.pos, 5);
+    }
+
+    #[test]
+    fn eval_logits_shape() {
+        let mut be = HostBackend::for_tests();
+        let toks: Vec<i32> = (0..2 * 8).map(|i| (i % 60) as i32 + 1).collect();
+        let lg = be.eval_logits(&toks, 2, 8, false).unwrap();
+        assert_eq!(lg.len(), 2 * 8 * 64);
+    }
+}

@@ -1,0 +1,80 @@
+//! Runtime: loads AOT artifacts (`*.hlo.txt`) and executes them via the
+//! PJRT C API (`xla` crate), plus a pure-Rust host fallback behind the
+//! same trait so the serving stack tests without artifacts.
+//!
+//! HLO **text** is the interchange format — jax >= 0.5 serialized protos
+//! use 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod host;
+pub mod pjrt;
+
+use crate::kvcache::SlotKv;
+
+/// Result of prefilling one sequence.
+pub struct PrefillOut {
+    /// Logits of the last *real* (unpadded) position, length = vocab.
+    pub last_logits: Vec<f32>,
+    /// Per-sequence KV cache, padded to the engine cache length.
+    pub slot: SlotKv,
+}
+
+/// The serving engine's view of a model executor. One instance services
+/// one worker thread (PJRT handles are not shared across threads).
+pub trait ModelBackend {
+    /// Prefill a prompt; `dma` selects the mixed-precision attention
+    /// artifacts (vs native/full-precision).
+    fn prefill(&mut self, tokens: &[i32], dma: bool) -> crate::Result<PrefillOut>;
+
+    /// One decode step over a batch of slots. `tokens[i]` is fed to
+    /// `slots[i]`; `None` slots are padding. Returns `[B * vocab]`
+    /// logits (rows of padding slots are garbage).
+    fn decode(
+        &mut self,
+        tokens: &[i32],
+        slots: &mut [Option<&mut SlotKv>],
+    ) -> crate::Result<Vec<f32>>;
+
+    /// Batched full-sequence logits for the eval harness:
+    /// tokens [B, L] row-major -> logits [B, L, vocab].
+    fn eval_logits(&mut self, tokens: &[i32], b: usize, l: usize, dma: bool)
+        -> crate::Result<Vec<f32>>;
+
+    /// Vocabulary size (logit row width).
+    fn vocab(&self) -> usize;
+
+    /// Engine cache capacity per sequence.
+    fn cache_len(&self) -> usize;
+
+    /// Decode batch buckets available, ascending.
+    fn decode_buckets(&self) -> Vec<usize>;
+
+    /// Human-readable backend name for logs/metrics.
+    fn name(&self) -> &'static str;
+}
+
+/// Pick the smallest bucket >= `n`, or the largest bucket if none fits
+/// (the caller then splits the batch).
+pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
+    for &b in buckets {
+        if b >= n {
+            return b;
+        }
+    }
+    *buckets.last().expect("no buckets")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = vec![1, 2, 4];
+        assert_eq!(pick_bucket(&buckets, 1), 1);
+        assert_eq!(pick_bucket(&buckets, 2), 2);
+        assert_eq!(pick_bucket(&buckets, 3), 4);
+        assert_eq!(pick_bucket(&buckets, 4), 4);
+        assert_eq!(pick_bucket(&buckets, 9), 4); // caller splits
+    }
+}

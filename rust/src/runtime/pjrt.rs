@@ -1,0 +1,256 @@
+//! PJRT-backed [`ModelBackend`]: compiles `artifacts/*.hlo.txt` on the
+//! CPU PJRT client and executes them on the request path.
+//!
+//! Executables are compiled lazily per bucket and cached. Weights are
+//! loaded once from `weights.bin` into host literals and passed as
+//! leading parameters (the layout contract lives in `model_meta.json`).
+
+use super::{pick_bucket, ModelBackend, PrefillOut};
+use crate::config::MetaConfig;
+use crate::kvcache::{SlotCache, SlotKv};
+use crate::model::weights::Weights;
+use anyhow::{anyhow, Context};
+use std::collections::BTreeMap;
+
+pub struct PjrtBackend {
+    pub meta: MetaConfig,
+    client: xla::PjRtClient,
+    weights: Vec<xla::Literal>,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    slots: SlotCache,
+    pad_token: i32,
+    /// Cumulative executions per artifact (metrics endpoint).
+    pub exec_counts: BTreeMap<String, u64>,
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> crate::Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e}"))?)
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> crate::Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e}"))?)
+}
+
+impl PjrtBackend {
+    pub fn new(meta: MetaConfig) -> crate::Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+        let w = Weights::load(meta.artifact_dir.join("weights.bin"))?;
+        w.check_order(&meta.param_order)?;
+        let weights = w
+            .tensors
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                lit_f32(&t.data, &dims)
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        let slots = SlotCache::new(
+            meta.model.n_layers,
+            meta.model.n_kv_heads,
+            meta.cache_len,
+            meta.model.d_head,
+        );
+        let pad_token = meta.tokens.pad;
+        Ok(PjrtBackend {
+            meta,
+            client,
+            weights,
+            executables: BTreeMap::new(),
+            slots,
+            pad_token,
+            exec_counts: BTreeMap::new(),
+        })
+    }
+
+    /// Compile an artifact into the cache if not already present.
+    fn ensure_compiled(&mut self, name: &str) -> crate::Result<()> {
+        if !self.executables.contains_key(name) {
+            let path = self.meta.artifact_path(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .with_context(|| format!("loading {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact: weights (if `with_weights`) ++ extra inputs;
+    /// returns the decomposed output tuple.
+    pub fn run(
+        &mut self,
+        name: &str,
+        with_weights: bool,
+        extra: Vec<xla::Literal>,
+    ) -> crate::Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let exe = self.executables.get(name).unwrap();
+        let mut inputs: Vec<&xla::Literal> = Vec::new();
+        if with_weights {
+            inputs.extend(self.weights.iter());
+        }
+        inputs.extend(extra.iter());
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {name}: {e}"))?;
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        tuple.to_tuple().map_err(|e| anyhow!("tuple {name}: {e}"))
+    }
+
+    /// Smallest exported prefill length >= l.
+    fn prefill_bucket(&self, l: usize) -> crate::Result<usize> {
+        self.meta
+            .prefill_lens
+            .iter()
+            .copied()
+            .find(|&b| b >= l)
+            .ok_or_else(|| {
+                anyhow!(
+                    "prompt length {l} exceeds the largest prefill bucket {:?}",
+                    self.meta.prefill_lens
+                )
+            })
+    }
+}
+
+impl ModelBackend for PjrtBackend {
+    fn prefill(&mut self, tokens: &[i32], dma: bool) -> crate::Result<PrefillOut> {
+        let l = tokens.len();
+        anyhow::ensure!(l > 0, "empty prompt");
+        let bucket = self.prefill_bucket(l)?;
+        // Right-pad: causal attention keeps logits/caches of real
+        // positions independent of trailing padding.
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, self.pad_token);
+        let mode = if dma { "dma" } else { "native" };
+        let name = format!("prefill_{mode}_l{bucket}");
+        let toks = lit_i32(&padded, &[bucket as i64])?;
+        let outs = self.run(&name, true, vec![toks])?;
+        anyhow::ensure!(outs.len() == 3, "prefill returned {} outputs", outs.len());
+        let vocab = self.meta.tokens.vocab as usize;
+        let logits: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("{e}"))?;
+        let kc: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("{e}"))?;
+        let vc: Vec<f32> = outs[2].to_vec().map_err(|e| anyhow!("{e}"))?;
+        // Slice the real rows out of the padded caches.
+        let m = &self.meta.model;
+        let (nl, h, dh) = (m.n_layers, m.n_kv_heads, m.d_head);
+        let mut kc_real = vec![0f32; nl * h * l * dh];
+        let mut vc_real = vec![0f32; nl * h * l * dh];
+        for li in 0..nl {
+            for hh in 0..h {
+                let src = (li * h + hh) * bucket * dh;
+                let dst = (li * h + hh) * l * dh;
+                kc_real[dst..dst + l * dh].copy_from_slice(&kc[src..src + l * dh]);
+                vc_real[dst..dst + l * dh].copy_from_slice(&vc[src..src + l * dh]);
+            }
+        }
+        let slot = self.slots.slot_from_prefill(&kc_real, &vc_real, l)?;
+        let last_logits = logits[(l - 1) * vocab..l * vocab].to_vec();
+        Ok(PrefillOut { last_logits, slot })
+    }
+
+    fn decode(
+        &mut self,
+        tokens: &[i32],
+        slots: &mut [Option<&mut SlotKv>],
+    ) -> crate::Result<Vec<f32>> {
+        let n = slots.len();
+        anyhow::ensure!(tokens.len() == n, "tokens/slots mismatch");
+        let b = pick_bucket(&self.meta.decode_batches, n);
+        anyhow::ensure!(b >= n, "decode batch {n} exceeds largest bucket {b}");
+
+        // Gather batch caches + positions.
+        let mut bk = vec![0f32; self.slots.batch_elems(b)];
+        let mut bv = vec![0f32; self.slots.batch_elems(b)];
+        {
+            let views: Vec<Option<&SlotKv>> = (0..b)
+                .map(|i| slots.get(i).and_then(|s| s.as_deref()))
+                .collect();
+            self.slots.gather_batch(&views, &mut bk, &mut bv);
+        }
+        let mut toks = vec![self.pad_token; b];
+        toks[..n].copy_from_slice(tokens);
+        let mut pos = vec![0i32; b];
+        for i in 0..n {
+            if let Some(s) = &slots[i] {
+                pos[i] = s.pos as i32;
+            }
+        }
+
+        let m = &self.meta.model;
+        let dims_cache = [
+            m.n_layers as i64,
+            b as i64,
+            m.n_kv_heads as i64,
+            self.meta.cache_len as i64,
+            m.d_head as i64,
+        ];
+        let outs = self.run(
+            &format!("decode_b{b}"),
+            true,
+            vec![
+                lit_i32(&toks, &[b as i64])?,
+                lit_f32(&bk, &dims_cache)?,
+                lit_f32(&bv, &dims_cache)?,
+                lit_i32(&pos, &[b as i64])?,
+            ],
+        )?;
+        anyhow::ensure!(outs.len() == 3, "decode returned {} outputs", outs.len());
+        let logits: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("{e}"))?;
+        let nk: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("{e}"))?;
+        let nv: Vec<f32> = outs[2].to_vec().map_err(|e| anyhow!("{e}"))?;
+        self.slots.scatter_batch(&nk, &nv, slots);
+        for s in slots.iter_mut().flatten() {
+            s.pos += 1;
+        }
+        Ok(logits)
+    }
+
+    fn eval_logits(
+        &mut self,
+        tokens: &[i32],
+        b: usize,
+        l: usize,
+        dma: bool,
+    ) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == b * l, "tokens shape mismatch");
+        anyhow::ensure!(
+            self.meta.eval_shapes.contains(&(b, l)),
+            "no eval artifact for shape ({b}, {l}); exported: {:?}",
+            self.meta.eval_shapes
+        );
+        let mode = if dma { "dma" } else { "native" };
+        let name = format!("eval_{mode}_l{l}_b{b}");
+        let toks = lit_i32(tokens, &[b as i64, l as i64])?;
+        let outs = self.run(&name, true, vec![toks])?;
+        outs[0].to_vec().map_err(|e| anyhow!("{e}"))
+    }
+
+    fn vocab(&self) -> usize {
+        self.meta.tokens.vocab as usize
+    }
+
+    fn cache_len(&self) -> usize {
+        self.meta.cache_len
+    }
+
+    fn decode_buckets(&self) -> Vec<usize> {
+        self.meta.decode_batches.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-cpu"
+    }
+}

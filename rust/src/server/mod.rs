@@ -1,0 +1,299 @@
+//! TCP JSON-lines serving front end (std::net — tokio is not vendored).
+//!
+//! Protocol: one JSON object per line.
+//!
+//! ```text
+//! -> {"id": 1, "tokens": [1,7,9], "max_new_tokens": 8, "dma": true}
+//! <- {"id": 1, "output": [12, 5], "finish": "eos",
+//!     "queue_ms": 0.1, "prefill_ms": 3.2, "decode_ms": 8.9}
+//! -> {"cmd": "stats"}          (optional control message)
+//! <- {"workers": 1}
+//! ```
+//!
+//! Responses are routed back to the connection that submitted them by an
+//! internal request id (client-supplied ids are echoed but may collide
+//! across connections): each accepted request registers a per-connection
+//! channel with the dispatcher, which drains the engine workers and
+//! forwards each completion to its owner.
+
+use crate::coordinator::router::Router;
+use crate::coordinator::{Request, Response};
+use crate::util::json::Json;
+use anyhow::Context;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+pub fn parse_request(line: &str, internal_id: u64) -> Result<(Request, u64), String> {
+    let j = Json::parse(line).map_err(|e| e.to_string())?;
+    let tokens = j
+        .get("tokens")
+        .and_then(Json::as_arr)
+        .ok_or("missing tokens")?
+        .iter()
+        .map(|v| v.as_i64().map(|x| x as i32))
+        .collect::<Option<Vec<i32>>>()
+        .ok_or("tokens must be integers")?;
+    let client_id = j
+        .get("id")
+        .and_then(Json::as_i64)
+        .map(|v| v as u64)
+        .unwrap_or(internal_id);
+    Ok((
+        Request {
+            id: internal_id,
+            tokens,
+            max_new_tokens: j
+                .get("max_new_tokens")
+                .and_then(Json::as_usize)
+                .unwrap_or(16),
+            dma: j.get("dma").and_then(Json::as_bool).unwrap_or(true),
+        },
+        client_id,
+    ))
+}
+
+pub fn response_json(r: &Response) -> Json {
+    let mut fields = vec![
+        ("id", Json::num(r.id as f64)),
+        (
+            "output",
+            Json::arr(r.output.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("finish", Json::str(r.finish.as_str())),
+        ("queue_ms", Json::num(r.queue_ms)),
+        ("prefill_ms", Json::num(r.prefill_ms)),
+        ("decode_ms", Json::num(r.decode_ms)),
+    ];
+    if let Some(e) = &r.error {
+        fields.push(("error", Json::str(e.clone())));
+    }
+    Json::obj(fields)
+}
+
+/// internal id -> (client id, connection's response channel).
+type Pending = Arc<Mutex<HashMap<u64, (u64, mpsc::Sender<Response>)>>>;
+
+/// Serve until `stop` is set. The bound address is reported through
+/// `on_bind` (tests connect to an ephemeral port).
+pub fn serve(
+    addr: &str,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    on_bind: impl FnOnce(std::net::SocketAddr),
+) -> crate::Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    listener.set_nonblocking(true)?;
+    on_bind(listener.local_addr()?);
+
+    let pending: Pending = Arc::new(Mutex::new(HashMap::new()));
+    let next_id = Arc::new(AtomicU64::new(1));
+
+    // Dispatcher: drain worker completions, route to owning connections.
+    let dispatcher = {
+        let router = router.clone();
+        let pending = pending.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                let got = router.poll_responses(64);
+                if got.is_empty() {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    continue;
+                }
+                for mut resp in got {
+                    if let Some((client_id, tx)) =
+                        pending.lock().unwrap().remove(&resp.id)
+                    {
+                        resp.id = client_id;
+                        let _ = tx.send(resp);
+                    }
+                }
+            }
+        })
+    };
+
+    let mut handles = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let router = router.clone();
+                let pending = pending.clone();
+                let next_id = next_id.clone();
+                handles.push(std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, &router, &pending, &next_id) {
+                        eprintln!("connection error: {e:#}");
+                    }
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => {
+                stop.store(true, Ordering::Relaxed);
+                let _ = dispatcher.join();
+                return Err(e.into());
+            }
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let _ = dispatcher.join();
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    router: &Router,
+    pending: &Pending,
+    next_id: &AtomicU64,
+) -> crate::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream.try_clone()?;
+    let (tx_conn, rx_conn) = mpsc::channel::<Response>();
+
+    // Writer half: deliver completions in arrival order until every
+    // sender (reader + dispatcher-held registrations) is gone.
+    let mut wstream = stream;
+    let writer_thread = std::thread::spawn(move || {
+        for resp in rx_conn {
+            if writeln!(wstream, "{}", response_json(&resp)).is_err() {
+                break;
+            }
+        }
+    });
+
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Ok(j) = Json::parse(&line) {
+            if j.get("cmd").and_then(Json::as_str) == Some("stats") {
+                let out = Json::obj(vec![(
+                    "workers",
+                    Json::num(router.num_workers() as f64),
+                )]);
+                writeln!(writer, "{out}")?;
+                continue;
+            }
+        }
+        let internal = next_id.fetch_add(1, Ordering::Relaxed);
+        match parse_request(&line, internal) {
+            Ok((req, client_id)) => {
+                pending
+                    .lock()
+                    .unwrap()
+                    .insert(internal, (client_id, tx_conn.clone()));
+                if let Err(e) = router.submit(req) {
+                    pending.lock().unwrap().remove(&internal);
+                    let out = Json::obj(vec![("error", Json::str(e.to_string()))]);
+                    writeln!(writer, "{out}")?;
+                }
+            }
+            Err(msg) => {
+                let out = Json::obj(vec![("error", Json::str(msg))]);
+                writeln!(writer, "{out}")?;
+            }
+        }
+    }
+    // Input closed: drop our sender; the writer exits once the
+    // dispatcher has delivered (and dropped) every pending registration.
+    drop(tx_conn);
+    let _ = writer_thread.join();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::coordinator::engine::EngineHandle;
+    use crate::coordinator::router::Policy;
+    use crate::runtime::host::HostBackend;
+    use crate::runtime::ModelBackend;
+
+    #[test]
+    fn parse_request_full() {
+        let (r, client) = parse_request(
+            r#"{"id": 3, "tokens": [1, 2, 3], "max_new_tokens": 5, "dma": false}"#,
+            99,
+        )
+        .unwrap();
+        assert_eq!(r.id, 99); // internal id
+        assert_eq!(client, 3); // echoed id
+        assert_eq!(r.tokens, vec![1, 2, 3]);
+        assert_eq!(r.max_new_tokens, 5);
+        assert!(!r.dma);
+    }
+
+    #[test]
+    fn parse_request_defaults() {
+        let (r, client) = parse_request(r#"{"tokens": [4]}"#, 42).unwrap();
+        assert_eq!(r.id, 42);
+        assert_eq!(client, 42);
+        assert_eq!(r.max_new_tokens, 16);
+        assert!(r.dma);
+    }
+
+    #[test]
+    fn parse_request_rejects_bad_json() {
+        assert!(parse_request("{oops", 1).is_err());
+        assert!(parse_request(r#"{"no_tokens": 1}"#, 1).is_err());
+    }
+
+    #[test]
+    fn response_round_trips_as_json() {
+        let r = Response {
+            id: 9,
+            output: vec![1, 2],
+            finish: crate::coordinator::FinishReason::Eos,
+            queue_ms: 0.5,
+            prefill_ms: 1.0,
+            decode_ms: 2.0,
+            error: None,
+        };
+        let j = response_json(&r);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("id").unwrap().as_i64(), Some(9));
+        assert_eq!(parsed.get("finish").unwrap().as_str(), Some("eos"));
+        assert_eq!(parsed.get("output").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let worker = EngineHandle::spawn(
+            || Ok(Box::new(HostBackend::for_tests()) as Box<dyn ModelBackend>),
+            EngineConfig { max_new_tokens: 3, ..Default::default() },
+            5,
+        );
+        let router = Arc::new(Router::new(vec![worker], Policy::RoundRobin));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let stop2 = stop.clone();
+        let router2 = router.clone();
+        let srv = std::thread::spawn(move || {
+            serve("127.0.0.1:0", router2, stop2, move |a| {
+                tx.send(a).unwrap();
+            })
+            .unwrap();
+        });
+        let addr = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(conn, r#"{{"id": 1, "tokens": [1, 9, 8, 7], "max_new_tokens": 2}}"#).unwrap();
+        conn.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("id").unwrap().as_i64(), Some(1));
+        assert!(j.get("output").unwrap().as_arr().unwrap().len() <= 2);
+
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+}

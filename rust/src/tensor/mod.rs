@@ -1,0 +1,241 @@
+//! Minimal row-major f32 tensor used across the Rust-side numerics.
+//!
+//! Deliberately small: the heavy math on the request path runs inside
+//! PJRT executables; this type serves the CPU mirrors (attention
+//! oracles, quantization pipelines, eval harness) and host-side
+//! batch assembly.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} != data len {}", data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn from_fn(shape: Vec<usize>, mut f: impl FnMut(usize) -> f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    /// Row view of a 2-D tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols() + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        let cc = self.cols();
+        self.data[r * cc + c] = v;
+    }
+
+    /// `self [m,k] @ other [k,n] -> [m,n]` (ikj loop order, no alloc in
+    /// the inner loop).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in a_row.iter().enumerate() {
+                let b_row = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in o_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// `self [m,k] @ other^T [n,k] -> [m,n]` — the attention-score shape.
+    pub fn matmul_t(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (n, k2) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul_t dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let b_row = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (a, b) in a_row.iter().zip(b_row) {
+                    acc += a * b;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor::new(self.shape.clone(), self.data.iter().map(|v| v * s).collect())
+    }
+
+    /// Row-wise softmax of a 2-D tensor (handles -inf rows of masks).
+    pub fn softmax_rows(&self) -> Tensor {
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let row = &self.data[i * n..(i + 1) * n];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &v) in orow.iter_mut().zip(row) {
+                let e = (v - mx).exp();
+                *o = e;
+                sum += e;
+            }
+            if sum > 0.0 {
+                for o in orow.iter_mut() {
+                    *o /= sum;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    pub fn slice_rows(&self, start: usize, end: usize) -> Tensor {
+        let c = self.cols();
+        Tensor::new(vec![end - start, c], self.data[start * c..end * c].to_vec())
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// Random normal tensor from the given seed.
+pub fn randn(shape: Vec<usize>, seed: u64) -> Tensor {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let n = shape.iter().product();
+    Tensor::new(shape, rng.normal_vec(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&i).data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_t_equals_matmul_of_transpose() {
+        let a = randn(vec![5, 8], 1);
+        let b = randn(vec![7, 8], 2);
+        let c1 = a.matmul_t(&b);
+        let c2 = a.matmul(&b.transpose2());
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let t = randn(vec![4, 9], 3);
+        let p = t.softmax_rows();
+        for i in 0..4 {
+            let s: f32 = p.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_handles_masked_row_tail() {
+        let t = Tensor::new(vec![1, 3], vec![0.0, f32::NEG_INFINITY, 0.0]);
+        let p = t.softmax_rows();
+        assert!((p.data[0] - 0.5).abs() < 1e-6);
+        assert_eq!(p.data[1], 0.0);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let t = randn(vec![3, 5], 4);
+        assert_eq!(t.transpose2().transpose2(), t);
+    }
+
+    #[test]
+    fn slice_rows_contents() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![3., 4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny CLI argument parser (clap is not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — `flags` lists the
+    /// option names that take no value.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(rest.to_string());
+                    } else {
+                        out.options.insert(rest.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse(flag_names: &[&str]) -> Args {
+        Self::parse_from(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse_from(args.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--port", "8080", "--host=local", "run"], &[]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("host"), Some("local"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn declared_flags() {
+        let a = parse(&["--verbose", "--n", "3"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--quiet"], &[]);
+        assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn adjacent_flags_no_value() {
+        let a = parse(&["--a", "--b", "x"], &[]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("x"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.usize_or("n", 17), 17);
+        assert_eq!(a.f64_or("x", 0.5), 0.5);
+        assert_eq!(a.get_or("s", "d"), "d");
+    }
+}

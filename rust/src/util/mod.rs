@@ -1,0 +1,8 @@
+//! Infrastructure substrates built from scratch (the image is offline;
+//! tokio/serde/clap/criterion/proptest are unavailable — see DESIGN.md §4).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

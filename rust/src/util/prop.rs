@@ -1,0 +1,88 @@
+//! Miniature property-testing kit (proptest is not vendored).
+//!
+//! A property runs against `n` random cases drawn from explicit
+//! generators; on failure the failing seed is reported so the case can
+//! be replayed deterministically. Deliberately simple — no shrinking,
+//! but seeds make failures reproducible, which is what CI needs.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` for `cases` seeds; panic with the failing seed on error.
+pub fn check<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, cases: u64, prop: F) {
+    for case in 0..cases {
+        let seed = 0xD1A6_0000u64 ^ (case * 0x9E37_79B9);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at seed {seed:#x} (case {case}): {msg}");
+        }
+    }
+}
+
+/// Assert helper that produces `Result<(), String>` for [`check`].
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Generator helpers used across property tests.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Vector of normals with a random scale in [lo_scale, hi_scale].
+    pub fn scaled_normals(rng: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let scale = rng.uniform_in(lo, hi);
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    /// Random dimension that is a multiple of `m`, within [lo, hi].
+    pub fn dim_multiple_of(rng: &mut Rng, m: usize, lo: usize, hi: usize) -> usize {
+        let k_lo = lo.div_ceil(m);
+        let k_hi = hi / m;
+        (rng.int_in(k_lo as i64, k_hi as i64 + 1) as usize) * m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = std::cell::Cell::new(0u64);
+        check("count", 25, |_| {
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 25);
+        let _ = &mut count;
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'boom' failed")]
+    fn failing_property_panics_with_seed() {
+        check("boom", 10, |rng| {
+            prop_assert!(rng.uniform() < 2.0); // always true
+            prop_assert!(false, "forced failure");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dim_multiple_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let d = gen::dim_multiple_of(&mut rng, 32, 32, 256);
+            assert_eq!(d % 32, 0);
+            assert!((32..=256).contains(&d));
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! End-to-end coordinator tests over the host backend: serving flows,
+//! determinism under batching, failure injection, and the TCP server.
+
+use dma::config::EngineConfig;
+use dma::coordinator::engine::{Engine, EngineHandle};
+use dma::coordinator::router::{Policy, Router};
+use dma::coordinator::{FinishReason, Request};
+use dma::kvcache::SlotKv;
+use dma::runtime::host::HostBackend;
+use dma::runtime::{ModelBackend, PrefillOut};
+use std::sync::Arc;
+
+fn req(id: u64, len: usize, max_new: usize, dma: bool) -> Request {
+    Request {
+        id,
+        tokens: (0..len).map(|i| ((i * 7 + id as usize) % 58) as i32 + 6).collect(),
+        max_new_tokens: max_new,
+        dma,
+    }
+}
+
+fn engine(max_new: usize) -> Engine {
+    Engine::new(
+        Box::new(HostBackend::for_tests()),
+        EngineConfig { max_new_tokens: max_new, ..Default::default() },
+        5,
+    )
+}
+
+#[test]
+fn twenty_mixed_requests_complete() {
+    let mut e = engine(6);
+    for i in 0..20 {
+        let r = req(i, 4 + (i as usize % 20), 2 + (i as usize % 5), i % 2 == 0);
+        assert!(e.submit(r).is_none(), "request {i} rejected");
+    }
+    let resps = e.run_until_idle().unwrap();
+    assert_eq!(resps.len(), 20);
+    assert_eq!(e.stats.completed, 20);
+    for r in &resps {
+        assert!(!r.output.is_empty(), "request {} empty", r.id);
+        assert!(r.prefill_ms > 0.0);
+    }
+}
+
+#[test]
+fn batching_does_not_change_outputs() {
+    // Run the same workload twice: once with 4 slots (batched), once
+    // serialized through a queue_limit=... with single outstanding.
+    let reqs: Vec<Request> = (0..6).map(|i| req(i, 8, 4, false)).collect();
+
+    let mut batched = engine(4);
+    for r in reqs.clone() {
+        batched.submit(r);
+    }
+    let mut out_batched = batched.run_until_idle().unwrap();
+    out_batched.sort_by_key(|r| r.id);
+
+    let mut serial = engine(4);
+    let mut out_serial = Vec::new();
+    for r in reqs {
+        serial.submit(r);
+        out_serial.extend(serial.run_until_idle().unwrap());
+    }
+    out_serial.sort_by_key(|r| r.id);
+
+    assert_eq!(out_batched.len(), out_serial.len());
+    for (a, b) in out_batched.iter().zip(&out_serial) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.output, b.output, "request {} diverged under batching", a.id);
+        assert_eq!(a.finish, b.finish);
+    }
+}
+
+#[test]
+fn dma_and_native_requests_both_work() {
+    let mut e = engine(4);
+    e.submit(req(1, 16, 3, false));
+    e.submit(req(2, 16, 3, true));
+    let mut resps = e.run_until_idle().unwrap();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), 2);
+    // Both completed; DMA output may differ from native but not be empty.
+    assert!(!resps[0].output.is_empty() && !resps[1].output.is_empty());
+}
+
+#[test]
+fn cache_budget_respected_under_load() {
+    // Requests whose budgets sum past the pool must still all finish
+    // (admission defers, never deadlocks).
+    let mut e = engine(16);
+    for i in 0..12 {
+        assert!(e.submit(req(i, 60, 16, false)).is_none());
+    }
+    let resps = e.run_until_idle().unwrap();
+    assert_eq!(resps.len(), 12);
+    assert!(e.idle());
+}
+
+// ---------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------
+
+/// A backend whose prefill fails for prompts containing token 13.
+struct FlakyBackend {
+    inner: HostBackend,
+}
+
+impl ModelBackend for FlakyBackend {
+    fn prefill(&mut self, tokens: &[i32], dma: bool) -> dma::Result<PrefillOut> {
+        if tokens.contains(&13) {
+            anyhow::bail!("injected prefill failure");
+        }
+        self.inner.prefill(tokens, dma)
+    }
+    fn decode(
+        &mut self,
+        tokens: &[i32],
+        slots: &mut [Option<&mut SlotKv>],
+    ) -> dma::Result<Vec<f32>> {
+        self.inner.decode(tokens, slots)
+    }
+    fn eval_logits(&mut self, t: &[i32], b: usize, l: usize, d: bool) -> dma::Result<Vec<f32>> {
+        self.inner.eval_logits(t, b, l, d)
+    }
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn cache_len(&self) -> usize {
+        self.inner.cache_len()
+    }
+    fn decode_buckets(&self) -> Vec<usize> {
+        self.inner.decode_buckets()
+    }
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+}
+
+#[test]
+fn prefill_failure_rejects_request_but_engine_survives() {
+    let mut e = Engine::new(
+        Box::new(FlakyBackend { inner: HostBackend::for_tests() }),
+        EngineConfig { max_new_tokens: 4, ..Default::default() },
+        5,
+    );
+    e.submit(Request { id: 1, tokens: vec![6, 13, 7], max_new_tokens: 2, dma: false });
+    e.submit(req(2, 8, 2, false));
+    let mut resps = e.run_until_idle().unwrap();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), 2);
+    assert_eq!(resps[0].finish, FinishReason::Rejected);
+    assert!(resps[0].error.as_ref().unwrap().contains("injected"));
+    assert!(matches!(resps[1].finish, FinishReason::Length | FinishReason::Eos));
+    // Engine can still serve after the failure.
+    e.submit(req(3, 8, 2, false));
+    let resps = e.run_until_idle().unwrap();
+    assert_eq!(resps.len(), 1);
+}
+
+// ---------------------------------------------------------------------
+// Router + server
+// ---------------------------------------------------------------------
+
+#[test]
+fn multi_worker_router_handles_fanout() {
+    let workers: Vec<EngineHandle> = (0..3)
+        .map(|_| {
+            EngineHandle::spawn(
+                || Ok(Box::new(HostBackend::for_tests()) as Box<dyn ModelBackend>),
+                EngineConfig { max_new_tokens: 3, ..Default::default() },
+                5,
+            )
+        })
+        .collect();
+    let router = Router::new(workers, Policy::RoundRobin);
+    for i in 0..12 {
+        router.submit(req(i, 6, 2, false)).unwrap();
+    }
+    let resps = router.collect_responses(12, std::time::Duration::from_secs(120));
+    assert_eq!(resps.len(), 12);
+    router.shutdown();
+}
+
+#[test]
+fn tcp_server_multiple_clients() {
+    use std::io::{BufRead, BufReader, Write};
+    let worker = EngineHandle::spawn(
+        || Ok(Box::new(HostBackend::for_tests()) as Box<dyn ModelBackend>),
+        EngineConfig { max_new_tokens: 3, ..Default::default() },
+        5,
+    );
+    let router = Arc::new(Router::new(vec![worker], Policy::RoundRobin));
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let (r2, s2) = (router.clone(), stop.clone());
+    let srv = std::thread::spawn(move || {
+        dma::server::serve("127.0.0.1:0", r2, s2, move |a| tx.send(a).unwrap()).unwrap()
+    });
+    let addr = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+
+    let clients: Vec<std::thread::JoinHandle<()>> = (0..3)
+        .map(|ci| {
+            std::thread::spawn(move || {
+                let mut conn = std::net::TcpStream::connect(addr).unwrap();
+                writeln!(
+                    conn,
+                    r#"{{"id": {ci}, "tokens": [1, 9, 8, 7, 6], "max_new_tokens": 2}}"#
+                )
+                .unwrap();
+                conn.shutdown(std::net::Shutdown::Write).unwrap();
+                let mut line = String::new();
+                BufReader::new(conn).read_line(&mut line).unwrap();
+                let j = dma::util::json::Json::parse(line.trim()).unwrap();
+                assert_eq!(j.get("id").unwrap().as_i64(), Some(ci));
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    srv.join().unwrap();
+}

@@ -1,0 +1,181 @@
+//! Cross-module property tests (the crate's own prop kit; see
+//! `util::prop` — seeds make every failure replayable).
+
+use dma::attention::dma::dma_attention;
+use dma::attention::{flash, reference, TileConfig};
+use dma::metrics;
+use dma::mxfp::block::{fake_quant, fake_quant_scaled, Format, Granularity};
+use dma::mxfp::fused::dual_quant;
+use dma::mxfp::{e2m1, fp8};
+use dma::prop_assert;
+use dma::tensor::Tensor;
+use dma::util::prop::{check, gen};
+
+#[test]
+fn prop_e2m1_never_increases_magnitude_beyond_clamp() {
+    check("e2m1 magnitude", 200, |rng| {
+        let v = rng.uniform_in(-100.0, 100.0);
+        let q = e2m1::quantize(v);
+        prop_assert!(q.abs() <= 6.0, "|{q}| > 6 from {v}");
+        prop_assert!(q == 0.0 || q.signum() == v.signum(), "sign flip {v} -> {q}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fp8_quantize_idempotent_and_monotone() {
+    check("fp8 idempotent", 100, |rng| {
+        let kind = if rng.below(2) == 0 { fp8::Fp8Kind::E4M3 } else { fp8::Fp8Kind::E5M2 };
+        let a = rng.uniform_in(-400.0, 400.0);
+        let b = a + rng.uniform_in(0.0, 50.0);
+        let qa = fp8::quantize(a, kind);
+        let qb = fp8::quantize(b, kind);
+        prop_assert!(qb >= qa, "monotonicity {a}->{qa}, {b}->{qb}");
+        prop_assert!(fp8::quantize(qa, kind) == qa, "idempotence at {a}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_quant_never_amplifies_block_amax_much() {
+    check("block amax", 50, |rng| {
+        let d = gen::dim_multiple_of(rng, 32, 32, 128);
+        let x = gen::scaled_normals(rng, 4 * d, 0.01, 30.0);
+        for f in [Format::Mxfp4, Format::Mxfp8E4m3, Format::Nvfp4] {
+            let q = fake_quant(&x, 4, d, f);
+            let bs = f.block_size();
+            for (orig, quant) in x.chunks(bs).zip(q.chunks(bs)) {
+                let a = orig.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let qa = quant.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                prop_assert!(qa <= 2.0 * a + 1e-6, "{f:?}: amax {a} -> {qa}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dual_quant_high_always_tighter_than_low() {
+    check("high <= low error", 40, |rng| {
+        let d = gen::dim_multiple_of(rng, 32, 32, 96);
+        let rows = 8;
+        let x = gen::scaled_normals(rng, rows * d, 0.1, 20.0);
+        let q = dual_quant(&x, rows, d, false, Granularity::PerToken);
+        let mut low = vec![0f32; x.len()];
+        let mut high = vec![0f32; x.len()];
+        q.dequant_low(&mut low);
+        q.dequant_high(&mut high);
+        let el = metrics::rmse(&x, &low);
+        let eh = metrics::rmse(&x, &high);
+        prop_assert!(eh <= el + 1e-9, "high err {eh} > low err {el}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dma_attention_rows_sum_preserved() {
+    // Attention output = P @ V with P row-stochastic, so column sums of
+    // the output weighted by l are bounded... we check the convexity
+    // invariant per column instead, across random windows and shapes.
+    check("dma convexity", 12, |rng| {
+        let l = 32 * (1 + rng.below(3) as usize); // 32/64/96
+        let d = 32;
+        let q = Tensor::new(vec![l, d], gen::scaled_normals(rng, l * d, 0.5, 3.0));
+        let k = Tensor::new(vec![l, d], gen::scaled_normals(rng, l * d, 0.5, 3.0));
+        let v = Tensor::new(vec![l, d], gen::scaled_normals(rng, l * d, 0.5, 3.0));
+        let diag = 32 * rng.below(3) as usize;
+        let sink = 32 * rng.below(2) as usize;
+        let cfg = TileConfig { bm: 32, bn: 32, diag, sink, causal: true };
+        let o = dma_attention(&q, &k, &v, &cfg);
+        for c in 0..d {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for r in 0..l {
+                lo = lo.min(v.at(r, c));
+                hi = hi.max(v.at(r, c));
+            }
+            for r in 0..l {
+                let x = o.at(r, c);
+                prop_assert!(
+                    x >= lo - 1e-4 && x <= hi + 1e-4,
+                    "l={l} diag={diag} sink={sink} row {r} col {c}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flash_matches_reference_any_tiling() {
+    check("flash vs ref", 15, |rng| {
+        let bm = [16usize, 32][rng.below(2) as usize];
+        let bn = [16usize, 32][rng.below(2) as usize];
+        let l = bm.max(bn) * (2 + rng.below(3) as usize);
+        let l = l - (l % bm.max(bn));
+        let l = if l % bm == 0 && l % bn == 0 { l } else { bm * bn };
+        let d = 16;
+        let q = Tensor::new(vec![l, d], gen::scaled_normals(rng, l * d, 0.5, 2.0));
+        let k = Tensor::new(vec![l, d], gen::scaled_normals(rng, l * d, 0.5, 2.0));
+        let v = Tensor::new(vec![l, d], gen::scaled_normals(rng, l * d, 0.5, 2.0));
+        let causal = rng.below(2) == 0;
+        let cfg = TileConfig { bm, bn, diag: 0, sink: 0, causal };
+        let a = flash::flash_attention(&q, &k, &v, &cfg);
+        let b = reference::attention(&q, &k, &v, causal);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            prop_assert!((x - y).abs() < 1e-3, "flash mismatch {x} vs {y}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_granularity_refinement_never_hurts_much() {
+    check("granularity", 20, |rng| {
+        let d = 64;
+        let rows = 64;
+        let mut x = gen::scaled_normals(rng, rows * d, 0.5, 2.0);
+        // Heterogeneous row scales make the granularity matter.
+        for r in 0..rows {
+            let s = 1.0 + rng.uniform_in(0.0, 20.0);
+            for v in &mut x[r * d..(r + 1) * d] {
+                *v *= s;
+            }
+        }
+        let sim = |g| {
+            metrics::cos_sim(
+                &x,
+                &fake_quant_scaled(&x, rows, d, Format::Nvfp4, g),
+            )
+        };
+        let token = sim(Granularity::PerToken);
+        let tensor = sim(Granularity::PerTensor);
+        prop_assert!(token >= tensor - 5e-3, "token {token} < tensor {tensor}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kvcache_pool_conservation() {
+    use dma::kvcache::BlockPool;
+    check("pool conservation", 30, |rng| {
+        let mut p = BlockPool::new(24, 8);
+        let mut live = Vec::new();
+        for id in 0..60u64 {
+            if rng.below(3) < 2 {
+                let toks = rng.int_in(1, 50) as usize;
+                if p.can_admit(toks) && p.allocate(id, toks).is_ok() {
+                    live.push(id);
+                }
+            } else if !live.is_empty() {
+                let i = rng.below(live.len() as u64) as usize;
+                p.release(live.swap_remove(i)).map_err(|e| e.to_string())?;
+            }
+            p.check_invariants().map_err(|e| e.to_string())?;
+        }
+        for id in live {
+            p.release(id).map_err(|e| e.to_string())?;
+        }
+        prop_assert!(p.free_blocks() == 24, "leaked blocks");
+        Ok(())
+    });
+}
