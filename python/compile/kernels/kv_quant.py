@@ -1,0 +1,234 @@
+"""MXFP-quantized paged KV cache — parity reference for ``rust/src/kvquant``.
+
+The serving path stores decode-time K/V in pages of ``page_tokens`` rows,
+quantized on append with the fused dual quantizer (Alg. 2): an MXFP8 high
+copy (E4M3 codes + E8M0 block exponents) and/or an NVFP4 low copy (packed
+E2M1 nibbles + E4M3 block scales), sharing one per-token scale ``S_q``.
+Because ``S_q`` is per-token, appending rows in any chunking produces
+bit-identical planes to quantizing the whole matrix at once — the
+invariant that makes an *appendable* quantized cache possible.
+
+At decode time the paper's diagonal-tile precision policy is applied to
+cache *pages* instead of attention tiles: pages overlapping the attention
+sink and the causal-frontier window decode MXFP8-high, everything in
+between decodes NVFP4-low, page by page, with no full-precision K/V
+materialization (only one page of scratch at a time).
+
+Formats
+-------
+``"dual"``        both copies retained (policy picks per page),
+``"mxfp8-high"``  only the MXFP8 copy (every page decodes high),
+``"nvfp4-low"``   only the NVFP4 copy (every page decodes low).
+
+This module is the cross-language oracle: ``rust/src/kvquant`` must
+produce bit-identical code planes and matching page-precision schedules
+(see ``python/tests/gen_golden_kvquant.py`` and
+``rust/tests/kvquant_parity.rs``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import mxfp
+from . import quant_fused
+
+FORMATS = ("dual", "mxfp8-high", "nvfp4-low")
+
+#: Default page size in tokens; matches the Rust engine's KV block size so
+#: pages align with BlockPool admission blocks.
+PAGE_TOKENS = 16
+
+
+def has_low(fmt: str) -> bool:
+    """Does ``fmt`` retain the NVFP4 low-precision copy?"""
+    return fmt in ("dual", "nvfp4-low")
+
+
+def has_high(fmt: str) -> bool:
+    """Does ``fmt`` retain the MXFP8 high-precision copy?"""
+    return fmt in ("dual", "mxfp8-high")
+
+
+def row_bytes(fmt: str, d: int) -> int:
+    """Stored bytes per cached K (or V) row of width ``d``.
+
+    Mirrors ``KvFormat::row_bytes`` in Rust: retained code planes plus the
+    4-byte per-token scale S_q (shared by both copies).
+    """
+    b = 4  # S_q
+    if has_low(fmt):
+        b += d // 2 + d // mxfp.NVFP4_BLOCK
+    if has_high(fmt):
+        b += d + d // mxfp.MXFP_BLOCK
+    return b
+
+
+def f32_row_bytes(d: int) -> int:
+    return 4 * d
+
+
+def page_precisions(n_tokens: int, page_tokens: int, sink: int, diag: int):
+    """Per-page precision schedule for a decode query at the frontier.
+
+    Derived from the phase boundaries of the DMA attention kernel
+    (Alg. 1) with one query tile whose causal frontier is token
+    ``n_tokens - 1`` and KV tile size ``page_tokens``:
+
+      Phase 0  pages overlapping the first ``sink`` tokens    -> "high"
+      Phase 1  pages before the diagonal window               -> "low"
+      Phase 2  pages inside the trailing ``diag``-token window -> "high"
+
+    Returns a list of ``"high"`` / ``"low"`` strings, one per page.
+    """
+    p = page_tokens
+    n_pages = -(-n_tokens // p)
+    n_sink = -(-sink // p) if sink > 0 else 0
+    n_sink_eff = min(n_sink, n_pages)
+    if diag == 0:
+        j_hi_start = n_pages
+    else:
+        # Window start token is frontier - diag + 1 = n_tokens - diag;
+        # floor-divide (matches Rust div_euclid for negative starts).
+        j_hi_start = (n_tokens - diag) // p
+        j_hi_start = min(max(j_hi_start, n_sink_eff), n_pages)
+    return [
+        "high" if (j < n_sink_eff or j >= j_hi_start) else "low"
+        for j in range(n_pages)
+    ]
+
+
+class PagedKvCache:
+    """Appendable dual-format quantized row store for one (layer, head).
+
+    Rows are quantized on append; only the planes required by ``fmt`` are
+    retained. Pages are logical ``page_tokens``-row ranges over the
+    contiguous planes (no per-page allocation).
+    """
+
+    def __init__(self, d: int, fmt: str = "dual", page_tokens: int = PAGE_TOKENS):
+        assert fmt in FORMATS, f"unknown kv format {fmt!r}"
+        assert d % mxfp.MXFP_BLOCK == 0, f"d={d} must be a multiple of 32"
+        self.d = d
+        self.fmt = fmt
+        self.page_tokens = page_tokens
+        self.n = 0
+        self.packed = np.zeros((0, d // 2), np.uint8)
+        self.s4 = np.zeros((0, d // mxfp.NVFP4_BLOCK), np.uint8)
+        self.fp8 = np.zeros((0, d), np.uint8)
+        self.s8 = np.zeros((0, d // mxfp.MXFP_BLOCK), np.uint8)
+        self.sq = np.zeros((0, 1), np.float32)
+
+    def append(self, rows) -> None:
+        """Quantize and append ``rows``: [n, d] float32 (keys: no softmax
+        pre-scale — V rows use the identical path). A flat [n * d] vector
+        is accepted; a 2-D array must already be d wide."""
+        rows = np.asarray(rows, np.float32)
+        assert rows.ndim <= 2, f"rows must be 1-D or 2-D, got {rows.shape}"
+        if rows.ndim == 2:
+            assert rows.shape[1] == self.d, \
+                f"row width {rows.shape[1]} != d {self.d}"
+        rows = rows.reshape(-1, self.d)
+        if rows.shape[0] == 0:
+            return
+        pk, s4, f8, s8, sq = (
+            np.asarray(a)
+            for a in quant_fused.dual_quant(jnp.asarray(rows), is_query=False)
+        )
+        if has_low(self.fmt):
+            self.packed = np.concatenate([self.packed, pk])
+            self.s4 = np.concatenate([self.s4, s4])
+        if has_high(self.fmt):
+            self.fp8 = np.concatenate([self.fp8, f8])
+            self.s8 = np.concatenate([self.s8, s8])
+        self.sq = np.concatenate([self.sq, sq])
+        self.n += rows.shape[0]
+
+    @property
+    def n_pages(self) -> int:
+        return -(-self.n // self.page_tokens)
+
+    def page_rows(self, j: int):
+        """Row range [r0, r1) of page ``j`` (last page may be partial)."""
+        r0 = j * self.page_tokens
+        return r0, min(r0 + self.page_tokens, self.n)
+
+    def nbytes(self) -> int:
+        """Stored bytes (code planes + scales)."""
+        return (
+            self.packed.size + self.s4.size + self.fp8.size + self.s8.size
+            + self.sq.size * 4
+        )
+
+    def effective(self, precision: str) -> str:
+        """Clamp a requested precision to the copies this format retains."""
+        if precision == "high" and not has_high(self.fmt):
+            return "low"
+        if precision == "low" and not has_low(self.fmt):
+            return "high"
+        return precision
+
+    def decode_rows(self, r0: int, r1: int, precision: str) -> np.ndarray:
+        """Dequantize rows [r0, r1) at ``precision`` (after clamping)."""
+        precision = self.effective(precision)
+        if precision == "high":
+            out = quant_fused.dequant_mxfp8(
+                jnp.asarray(self.fp8[r0:r1]),
+                jnp.asarray(self.s8[r0:r1]),
+                jnp.asarray(self.sq[r0:r1]),
+            )
+        else:
+            out = quant_fused.dequant_nvfp4(
+                jnp.asarray(self.packed[r0:r1]),
+                jnp.asarray(self.s4[r0:r1]),
+                jnp.asarray(self.sq[r0:r1]),
+            )
+        return np.asarray(out, np.float32)
+
+
+def paged_decode_attention(q_row, cache_k: PagedKvCache, cache_v: PagedKvCache,
+                           *, sink: int, diag: int, counters=None):
+    """One decode step of DMA attention over a quantized paged cache.
+
+    ``q_row``: [d] float32 query at position ``cache_k.n - 1``. The query
+    is dual-quantized (softmax scale folded, Alg. 2 Step 1) and each page
+    is decoded just before its matvec — K at the policy's precision, V at
+    the highest precision its format retains — stitched with base-2
+    online softmax. Returns [d] float32.
+
+    ``counters``, if given, is a dict accumulating ``"high"``/``"low"``
+    page-decode hit counts (the serving metrics' per-precision counters).
+    """
+    d, n = cache_k.d, cache_k.n
+    assert n > 0 and cache_v.n == n and cache_v.d == d
+    q = np.asarray(q_row, np.float32).reshape(1, d)
+    qpk, qs4, qf8, qs8, qsq = (
+        np.asarray(a) for a in quant_fused.dual_quant(jnp.asarray(q), is_query=True)
+    )
+    q_low = np.asarray(
+        quant_fused.dequant_nvfp4(jnp.asarray(qpk), jnp.asarray(qs4), jnp.asarray(qsq)),
+        np.float32)[0]
+    q_high = np.asarray(
+        quant_fused.dequant_mxfp8(jnp.asarray(qf8), jnp.asarray(qs8), jnp.asarray(qsq)),
+        np.float32)[0]
+
+    m = np.float32(-np.inf)
+    l = np.float32(0.0)
+    acc = np.zeros(d, np.float32)
+    for j, prec in enumerate(page_precisions(n, cache_k.page_tokens, sink, diag)):
+        r0, r1 = cache_k.page_rows(j)
+        eff = cache_k.effective(prec)
+        k_tile = cache_k.decode_rows(r0, r1, eff)
+        q_dec = q_high if eff == "high" else q_low
+        if counters is not None:
+            counters[eff] = counters.get(eff, 0) + 1
+        s = (k_tile @ q_dec).astype(np.float32)  # base-2 logits
+        m_new = np.float32(max(m, s.max()))
+        alpha = np.float32(0.0) if np.isneginf(m) else np.float32(np.exp2(m - m_new))
+        p = np.exp2(s - m_new).astype(np.float32)
+        l = l * alpha + p.sum(dtype=np.float32)
+        v_tile = cache_v.decode_rows(r0, r1, "high")
+        acc = acc * alpha + p @ v_tile
+        m = m_new
+    return acc / l

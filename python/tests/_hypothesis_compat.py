@@ -1,0 +1,25 @@
+"""Optional-hypothesis shim: the property sweeps need `hypothesis`, but
+the rest of each module must stay collectible without it. Import `given`,
+`settings`, `st` from here; when hypothesis is absent the decorated tests
+are skipped instead of breaking collection."""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover — CI images without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f

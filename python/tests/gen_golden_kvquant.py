@@ -1,0 +1,180 @@
+"""Generate the cross-language golden vectors consumed by the Rust tests.
+
+Writes (relative to the repository root):
+
+  * ``rust/testdata/golden_mxfp.json``    — codec vectors for
+    ``rust/tests/integration.rs`` (e2m1 / e4m3 / e5m2 / e8m0 /
+    dual_quant),
+  * ``rust/testdata/golden_kvquant.json`` — paged quantized KV-cache
+    vectors for ``rust/tests/kvquant_parity.rs``.
+
+The jnp implementations are the source of truth; the Rust mirrors must
+reproduce the integer code planes bit-for-bit (modulo the documented
+1-ulp S_q rounding ties) and the attention outputs numerically.
+
+Run from the repository root:  python3 python/tests/gen_golden_kvquant.py
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.kernels import kv_quant, mxfp, quant_fused  # noqa: E402
+
+
+def f32s(a):
+    """Floats serialized so f64 JSON round-trips to the exact f32."""
+    return [float(np.float32(v)) for v in np.asarray(a, np.float32).ravel()]
+
+
+def u8s(a):
+    return [int(v) for v in np.asarray(a, np.uint8).ravel()]
+
+
+def codec_vectors():
+    r = np.random.default_rng(2026)
+
+    def sweep(maxval):
+        vals = np.concatenate([
+            np.array([0.0, -0.0], np.float32),
+            r.uniform(-maxval * 1.2, maxval * 1.2, 64).astype(np.float32),
+            r.standard_normal(64).astype(np.float32),
+            (r.standard_normal(32) * maxval / 4).astype(np.float32),
+        ])
+        return vals.astype(np.float32)
+
+    out = {}
+    x = np.concatenate([
+        np.array([0.0, 0.25, 0.5, 1.0, 1.25, 1.5, 2.0, 2.5, 3.0, 4.0,
+                  5.0, 6.0, 7.5, -5.0, -0.25, 1.75], np.float32),
+        sweep(6.0),
+    ])
+    xc = np.clip(x, -6.0, 6.0)
+    code = mxfp.encode_e2m1(jnp.asarray(xc))
+    out["e2m1"] = {
+        "input": f32s(x),
+        "code": u8s(code),
+        "decoded": f32s(mxfp.decode_e2m1(code)),
+    }
+
+    x = np.concatenate([
+        np.array([0.0, 448.0, 500.0, -448.0, 0.001953125, 2.0 ** -9,
+                  2.0 ** -6, 1.0, -1.0], np.float32),
+        sweep(448.0),
+    ])
+    code = mxfp.encode_e4m3(jnp.asarray(x))
+    out["e4m3"] = {
+        "input": f32s(x),
+        "code": u8s(code),
+        "decoded": f32s(mxfp.decode_e4m3(code)),
+    }
+
+    x = np.concatenate([
+        np.array([0.0, 57344.0, 60000.0, -57344.0, 2.0 ** -16, 2.0 ** -14,
+                  1.0, -3.5], np.float32),
+        sweep(57344.0),
+    ])
+    code = mxfp.encode_e5m2(jnp.asarray(x))
+    out["e5m2"] = {
+        "input": f32s(x),
+        "code": u8s(code),
+        "decoded": f32s(mxfp.decode_e5m2(code)),
+    }
+
+    cases = []
+    for emax in (mxfp.E2M1_EMAX, mxfp.E4M3_EMAX):
+        amax = np.concatenate([
+            np.array([448.0, 6.0, 1.0, 0.0, 1e-30], np.float32),
+            np.exp2(r.uniform(-40, 40, 64)).astype(np.float32),
+        ])
+        scale, code = mxfp.e8m0_shared_scale(jnp.asarray(amax), emax)
+        cases.append({
+            "emax": emax,
+            "amax": f32s(amax),
+            "scale": f32s(scale),
+            "code": u8s(code),
+        })
+    out["e8m0"] = cases
+
+    rows, d = 8, 64
+    x = (r.standard_normal((rows, d)) * np.exp2(
+        r.uniform(-2, 4, (rows, 1)))).astype(np.float32)
+    dq = {"x": f32s(x), "rows": rows, "d": d}
+    for tag, is_q in (("query", True), ("key", False)):
+        pk, s4, f8, s8, sq = quant_fused.dual_quant(
+            jnp.asarray(x), is_query=is_q)
+        dq[tag] = {
+            "packed": u8s(pk), "s4": u8s(s4), "fp8": u8s(f8),
+            "s8": u8s(s8), "sq": f32s(sq),
+        }
+    out["dual_quant"] = dq
+    return out
+
+
+def kvquant_vectors():
+    r = np.random.default_rng(7)
+    d, page, sink, diag, n = 32, 8, 8, 16, 40
+    chunks = [17, 13, 10]
+    k_rows = r.standard_normal((n, d)).astype(np.float32)
+    v_rows = r.standard_normal((n, d)).astype(np.float32)
+    q_row = r.standard_normal(d).astype(np.float32)
+
+    caches = {}
+    for fmt in kv_quant.FORMATS:
+        ck = kv_quant.PagedKvCache(d, fmt, page)
+        cv = kv_quant.PagedKvCache(d, fmt, page)
+        i = 0
+        for ch in chunks:
+            ck.append(k_rows[i:i + ch])
+            cv.append(v_rows[i:i + ch])
+            i += ch
+        caches[fmt] = (ck, cv)
+
+    ck, cv = caches["dual"]
+    counters = {}
+    out = kv_quant.paged_decode_attention(
+        q_row, ck, cv, sink=sink, diag=diag, counters=counters)
+    ck_lo, cv_lo = caches["nvfp4-low"]
+    out_low = kv_quant.paged_decode_attention(
+        q_row, ck_lo, cv_lo, sink=sink, diag=diag)
+
+    return {
+        "d": d, "page_tokens": page, "sink": sink, "diag": diag, "len": n,
+        "append_chunks": chunks,
+        "k": f32s(k_rows), "v": f32s(v_rows), "q": f32s(q_row),
+        "k_planes": {
+            "packed": u8s(ck.packed), "s4": u8s(ck.s4),
+            "fp8": u8s(ck.fp8), "s8": u8s(ck.s8), "sq": f32s(ck.sq),
+        },
+        "bytes": {fmt: {"k": caches[fmt][0].nbytes(),
+                        "v": caches[fmt][1].nbytes()}
+                  for fmt in kv_quant.FORMATS},
+        "page_precisions": kv_quant.page_precisions(n, page, sink, diag),
+        "page_hits": counters,
+        "out": f32s(out),
+        "out_low": f32s(out_low),
+    }
+
+
+def main():
+    root = os.path.join(os.path.dirname(__file__), "..", "..")
+    testdata = os.path.join(root, "rust", "testdata")
+    os.makedirs(testdata, exist_ok=True)
+    for name, payload in (
+        ("golden_mxfp.json", codec_vectors()),
+        ("golden_kvquant.json", kvquant_vectors()),
+    ):
+        path = os.path.join(testdata, name)
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        print(f"wrote {os.path.relpath(path, root)}"
+              f" ({os.path.getsize(path)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

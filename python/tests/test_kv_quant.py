@@ -1,0 +1,296 @@
+"""Tests for the MXFP-quantized paged KV cache (`kv_quant.py`).
+
+Covers the three contracts the Rust subsystem mirrors:
+
+  1. append-chunking invariance (per-token S_q => planes identical no
+     matter how rows arrive),
+  2. the page precision policy matches the DMA kernel's phase boundaries,
+  3. paged decode attention over a quantized cache equals the contiguous
+     DMA attention kernel on the equivalent contiguous layout.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import dma_attention, kv_quant, mxfp, quant_fused
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def filled_cache(n, d, fmt="dual", page_tokens=8, seed=1, chunks=None):
+    """A cache of n random rows appended in the given chunk sizes."""
+    r = rng(seed)
+    rows = r.standard_normal((n, d)).astype(np.float32)
+    c = kv_quant.PagedKvCache(d, fmt, page_tokens)
+    if chunks is None:
+        chunks = [n]
+    assert sum(chunks) == n
+    i = 0
+    for ch in chunks:
+        c.append(rows[i:i + ch])
+        i += ch
+    return rows, c
+
+
+# ---------------------------------------------------------------------------
+# Storage / accounting
+# ---------------------------------------------------------------------------
+
+class TestStore:
+    def test_append_chunking_invariant(self):
+        """Appending token-by-token must produce bit-identical planes to
+        one bulk append (per-token granularity guarantees this)."""
+        n, d = 13, 32
+        rows, bulk = filled_cache(n, d, "dual", 4, seed=3)
+        _, steps = filled_cache(n, d, "dual", 4, seed=3,
+                                chunks=[1] * n)
+        np.testing.assert_array_equal(bulk.packed, steps.packed)
+        np.testing.assert_array_equal(bulk.s4, steps.s4)
+        np.testing.assert_array_equal(bulk.fp8, steps.fp8)
+        np.testing.assert_array_equal(bulk.s8, steps.s8)
+        np.testing.assert_array_equal(bulk.sq, steps.sq)
+
+    def test_planes_match_bulk_dual_quant(self):
+        n, d = 24, 64
+        rows, c = filled_cache(n, d, "dual", 8, seed=4, chunks=[5, 11, 8])
+        pk, s4, f8, s8, sq = quant_fused.dual_quant(
+            jnp.asarray(rows), is_query=False)
+        np.testing.assert_array_equal(c.packed, np.asarray(pk))
+        np.testing.assert_array_equal(c.fp8, np.asarray(f8))
+        np.testing.assert_array_equal(c.sq, np.asarray(sq))
+
+    def test_single_format_drops_other_planes(self):
+        _, lo = filled_cache(16, 32, "nvfp4-low", 8)
+        assert lo.fp8.size == 0 and lo.s8.size == 0
+        assert lo.packed.size == 16 * 16
+        _, hi = filled_cache(16, 32, "mxfp8-high", 8)
+        assert hi.packed.size == 0 and hi.s4.size == 0
+        assert hi.fp8.size == 16 * 32
+
+    def test_bytes_per_token_ratios(self):
+        """nvfp4-low must be >= 3x (actually ~6x) smaller than f32; the
+        engine's admission accounting relies on these exact numbers."""
+        for d in (32, 64, 128):
+            f32 = kv_quant.f32_row_bytes(d)
+            assert f32 >= 3 * kv_quant.row_bytes("nvfp4-low", d)
+            assert f32 >= 3 * kv_quant.row_bytes("mxfp8-high", d)
+            assert kv_quant.row_bytes("dual", d) < f32
+        # Stored bytes agree with the accounting formula.
+        n, d = 32, 64
+        for fmt in kv_quant.FORMATS:
+            _, c = filled_cache(n, d, fmt, 8)
+            assert c.nbytes() == n * kv_quant.row_bytes(fmt, d)
+
+    def test_partial_page_rows(self):
+        _, c = filled_cache(19, 32, "dual", 8)
+        assert c.n_pages == 3
+        assert c.page_rows(0) == (0, 8)
+        assert c.page_rows(2) == (16, 19)
+
+    def test_decode_rows_reconstructs(self):
+        n, d = 16, 32
+        rows, c = filled_cache(n, d, "dual", 8, seed=9)
+        hi = c.decode_rows(0, n, "high")
+        lo = c.decode_rows(0, n, "low")
+        def rel(a, b):
+            return np.linalg.norm(a - b) / np.linalg.norm(a)
+        assert rel(rows, hi) < 0.05
+        assert rel(rows, lo) < 0.25
+        assert rel(rows, hi) < rel(rows, lo)
+
+    def test_effective_precision_clamps_to_format(self):
+        _, lo = filled_cache(8, 32, "nvfp4-low", 8)
+        assert lo.effective("high") == "low"
+        _, hi = filled_cache(8, 32, "mxfp8-high", 8)
+        assert hi.effective("low") == "high"
+        _, du = filled_cache(8, 32, "dual", 8)
+        assert du.effective("high") == "high"
+        assert du.effective("low") == "low"
+
+
+# ---------------------------------------------------------------------------
+# Page precision policy
+# ---------------------------------------------------------------------------
+
+class TestPolicy:
+    def test_sink_and_frontier_high(self):
+        p = kv_quant.page_precisions(64, 8, sink=8, diag=16)
+        assert p[0] == "high"           # sink page
+        assert p[-1] == "high"          # frontier page
+        assert p[-2] == "high"          # diag=16 covers two 8-token pages
+        assert all(x == "low" for x in p[1:-2])
+
+    def test_diag_zero_all_low(self):
+        assert kv_quant.page_precisions(64, 8, sink=0, diag=0) == ["low"] * 8
+
+    def test_small_cache_all_high(self):
+        # Cache shorter than the window: everything decodes high.
+        assert kv_quant.page_precisions(16, 8, sink=0, diag=64) == ["high"] * 2
+
+    def test_sink_rounds_up_to_page(self):
+        p = kv_quant.page_precisions(64, 8, sink=9, diag=8)
+        assert p[0] == "high" and p[1] == "high"  # ceil(9/8) = 2 pages
+
+    def test_matches_dma_kernel_phases(self):
+        """The page schedule must equal the tile schedule the contiguous
+        DMA kernel uses for a decode query at the frontier (bm=1)."""
+        for n, p, sink, diag in [(64, 8, 8, 16), (96, 16, 32, 32),
+                                 (40, 8, 0, 24), (64, 8, 64, 0)]:
+            precs = kv_quant.page_precisions(n, p, sink, diag)
+            # Re-derive from the kernel's own boundary arithmetic
+            # (dma_attention.py::_dma_kernel, causal branch, lq=1).
+            frontier = n - 1
+            nk = -(-n // p)
+            j_end = min(frontier // p + 1, nk)
+            n_sink = -(-sink // p) if sink > 0 else 0
+            n_sink_eff = min(n_sink, j_end)
+            j_hi = (frontier - diag + 1) // p if diag > 0 else j_end
+            j_hi = min(max(j_hi, n_sink_eff), j_end)
+            expect = ["high" if (j < n_sink_eff or j >= j_hi) else "low"
+                      for j in range(j_end)]
+            assert precs == expect, (n, p, sink, diag)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention
+# ---------------------------------------------------------------------------
+
+class TestPagedAttention:
+    def _paged_vs_contiguous(self, fmt, n=64, d=32, page=8, sink=8, diag=16,
+                             seed=11):
+        r = rng(seed)
+        k_rows, ck = filled_cache(n, d, fmt, page, seed=seed,
+                                  chunks=[n // 2, n // 4, n // 4])
+        v_rows, cv = filled_cache(n, d, fmt, page, seed=seed + 1)
+        q_row = r.standard_normal(d).astype(np.float32)
+
+        counters = {}
+        out = kv_quant.paged_decode_attention(
+            q_row, ck, cv, sink=sink, diag=diag, counters=counters)
+
+        # Equivalent contiguous layout: same K code planes, V as the exact
+        # dequantization the paged path uses.
+        q_quant = quant_fused.dual_quant(
+            jnp.asarray(q_row.reshape(1, d)), is_query=True)
+        k_quant = (jnp.asarray(ck.packed), jnp.asarray(ck.s4),
+                   jnp.asarray(ck.fp8), jnp.asarray(ck.s8),
+                   jnp.asarray(ck.sq))
+        v_eq = jnp.asarray(cv.decode_rows(0, n, "high"))
+        ref = np.asarray(dma_attention.dma_attention_quantized(
+            q_quant, k_quant, v_eq, bm=1, bn=page, diag=diag, sink=sink,
+            causal=True))[0]
+        np.testing.assert_allclose(out, ref, rtol=0, atol=2e-5)
+        return counters
+
+    def test_dual_matches_contiguous_kernel(self):
+        counters = self._paged_vs_contiguous("dual")
+        # sink page + two frontier pages high, five body pages low.
+        assert counters == {"high": 3, "low": 5}
+
+    def test_mixed_policies(self):
+        for sink, diag in [(0, 0), (16, 0), (0, 32), (32, 32)]:
+            self._paged_vs_contiguous("dual", sink=sink, diag=diag,
+                                      seed=100 + sink + diag)
+
+    def test_single_format_caches(self):
+        # nvfp4-low / mxfp8-high: one copy only; the contiguous oracle
+        # needs matching planes, so compare against a dual cache whose
+        # policy is forced all-low / all-high instead.
+        n, d, page = 48, 32, 8
+        k_rows, ck_dual = filled_cache(n, d, "dual", page, seed=21)
+        v_rows, cv_dual = filled_cache(n, d, "dual", page, seed=22)
+        q_row = rng(23).standard_normal(d).astype(np.float32)
+
+        _, ck_lo = filled_cache(n, d, "nvfp4-low", page, seed=21)
+        _, cv_lo = filled_cache(n, d, "nvfp4-low", page, seed=22)
+        out_lo = kv_quant.paged_decode_attention(
+            q_row, ck_lo, cv_lo, sink=8, diag=16)
+        # In a low-only cache the policy is moot: equals dual with diag=sink=0
+        # except V also decodes low — rebuild the oracle with low V.
+        c2 = {}
+        out_dual_all_low = kv_quant.paged_decode_attention(
+            q_row, ck_dual, _force_low_v(cv_dual), sink=0, diag=0, counters=c2)
+        np.testing.assert_allclose(out_lo, out_dual_all_low, atol=2e-5)
+        assert c2 == {"low": 6}
+
+        _, ck_hi = filled_cache(n, d, "mxfp8-high", page, seed=21)
+        _, cv_hi = filled_cache(n, d, "mxfp8-high", page, seed=22)
+        out_hi = kv_quant.paged_decode_attention(
+            q_row, ck_hi, cv_hi, sink=8, diag=16)
+        out_dual_all_high = kv_quant.paged_decode_attention(
+            q_row, ck_dual, cv_dual, sink=0, diag=10 ** 6)
+        np.testing.assert_allclose(out_hi, out_dual_all_high, atol=2e-5)
+
+    def test_partial_frontier_page(self):
+        """Cache length not a multiple of the page size: the frontier page
+        is partial; compare against a dense softmax oracle."""
+        n, d, page = 27, 32, 8
+        k_rows, ck = filled_cache(n, d, "dual", page, seed=31)
+        v_rows, cv = filled_cache(n, d, "dual", page, seed=32)
+        q_row = rng(33).standard_normal(d).astype(np.float32)
+        out = kv_quant.paged_decode_attention(q_row, ck, cv, sink=8, diag=16)
+
+        # Dense oracle on the decoded operands with the page-level mixture.
+        qq = quant_fused.dual_quant(
+            jnp.asarray(q_row.reshape(1, d)), is_query=True)
+        qpk, qs4, qf8, qs8, qsq = qq
+        ql = np.asarray(quant_fused.dequant_nvfp4(qpk, qs4, qsq))[0]
+        qh = np.asarray(quant_fused.dequant_mxfp8(qf8, qs8, qsq))[0]
+        precs = kv_quant.page_precisions(n, page, 8, 16)
+        s = np.empty(n, np.float32)
+        for j, pr in enumerate(precs):
+            r0, r1 = ck.page_rows(j)
+            kt = ck.decode_rows(r0, r1, pr)
+            s[r0:r1] = kt @ (qh if pr == "high" else ql)
+        p = np.exp2((s - s.max()).astype(np.float32))
+        p /= p.sum()
+        ref = p @ cv.decode_rows(0, n, "high")
+        np.testing.assert_allclose(out, ref, atol=2e-5)
+
+    def test_precision_policy_quality_ordering(self):
+        """The paper's claim at page granularity: all-high is close to
+        exact f32 attention, and the sink+diagonal policy beats all-low."""
+        n, d, page = 64, 32, 8
+        k_rows, ck = filled_cache(n, d, "dual", page, seed=41)
+        v_rows, cv = filled_cache(n, d, "dual", page, seed=42)
+
+        err = {"dma": 0.0, "low": 0.0, "high": 0.0}
+        cos_high = []
+        for qi in range(8):
+            q_row = rng(43 + qi).standard_normal(d).astype(np.float32)
+            s = (k_rows @ q_row) / np.sqrt(d)
+            p = np.exp(s - s.max())
+            p /= p.sum()
+            ref = p @ v_rows
+            outs = {
+                "dma": kv_quant.paged_decode_attention(
+                    q_row, ck, cv, sink=8, diag=16),
+                "low": kv_quant.paged_decode_attention(
+                    q_row, ck, cv, sink=0, diag=0),
+                "high": kv_quant.paged_decode_attention(
+                    q_row, ck, cv, sink=0, diag=10 ** 6),
+            }
+            for k, o in outs.items():
+                err[k] += float(np.linalg.norm(o - ref))
+            cos_high.append(float(
+                np.dot(outs["high"], ref)
+                / (np.linalg.norm(outs["high"]) * np.linalg.norm(ref))))
+        assert min(cos_high) > 0.995, cos_high
+        assert err["high"] < err["dma"] < err["low"], err
+
+    def test_requires_nonempty_cache(self):
+        c = kv_quant.PagedKvCache(32, "dual", 8)
+        with pytest.raises(AssertionError):
+            kv_quant.paged_decode_attention(
+                np.zeros(32, np.float32), c, c, sink=0, diag=0)
+
+
+def _force_low_v(cache):
+    """A view of a dual cache that decodes V low (test helper)."""
+    import copy
+    c = copy.copy(cache)
+    c.fmt = "nvfp4-low"
+    return c

@@ -9,7 +9,7 @@ equality and (b) every mismatch bounded by one local grid step.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from compile.kernels import mxfp, ref, quant_fused as qf
 

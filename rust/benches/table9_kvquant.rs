@@ -1,0 +1,114 @@
+//! Table 9 — MXFP-quantized paged KV cache: memory and decode latency.
+//!
+//! The serving-side extension of the paper's evaluation: store decode
+//! K/V in quantized pages (`kvquant`) instead of f32 slots and run the
+//! diagonal-tile precision policy over cache *pages* at decode time
+//! (`attention::paged`). Two tables:
+//!
+//!  1. **Memory** — exact bytes/token of each cache format vs f32 (this
+//!     is accounting, not measurement: the admission capacity the engine
+//!     gains is byte-for-byte this ratio).
+//!  2. **Decode latency (this testbed)** — one decode step (1 query row)
+//!     over an L-token cache: f32 GEMV attention vs the paged quantized
+//!     path (dual_quant of the query + page decode + mixed-precision
+//!     attention), paper timing protocol (5 warmups, mean of 10).
+//!     Absolute numbers are CPU-scale; on bandwidth-bound hardware the
+//!     byte ratio of table 1 is the speedup ceiling.
+//!
+//! Regenerate: `cargo bench --bench table9_kvquant`
+//! Output: stdout tables + bench_out/table9_{memory,decode}.csv
+
+use dma::attention::paged::dma_attention_paged;
+use dma::attention::reference;
+use dma::kvquant::{KvFormat, KvPolicy, QuantPagedKv, PAGE_TOKENS};
+use dma::metrics::{compression_ratio, KvPageStats};
+use dma::mxfp::block::Granularity;
+use dma::mxfp::fused::dual_quant;
+use dma::tensor::{randn, Tensor};
+use dma::util::benchkit::{bench_paper_protocol, Table};
+
+fn main() {
+    let d = 128usize;
+    let policy = KvPolicy { sink: 128, diag: 128 };
+
+    // ---------------- memory accounting ----------------
+    let mut mem = Table::new(&["Format", "Bytes/row (d=128)", "vs f32"]);
+    let f32_row = KvFormat::F32.row_bytes(d);
+    for fmt in [KvFormat::F32, KvFormat::Dual, KvFormat::Mxfp8, KvFormat::Nvfp4] {
+        let b = fmt.row_bytes(d);
+        mem.row(&[
+            fmt.name().into(),
+            format!("{b}"),
+            format!("{:.2}x", compression_ratio(f32_row, b)),
+        ]);
+    }
+    println!("\nTable 9a — KV cache bytes per row (d={d})");
+    mem.print();
+    mem.write_csv("table9_memory").unwrap();
+
+    // ---------------- decode latency ----------------
+    let mut lat = Table::new(&["L", "f32 GEMV (ms)", "paged dual (ms)", "paged nvfp4 (ms)", "high pages %"]);
+    for l in [512usize, 2048] {
+        let k = randn(vec![l, d], 1);
+        let v = randn(vec![l, d], 2);
+        let q = randn(vec![1, d], 3);
+
+        let t_f32 = bench_paper_protocol(|| {
+            std::hint::black_box(reference::attention(&q, &k, &v, true));
+        });
+
+        let mut run_fmt = |fmt: KvFormat| -> (f64, KvPageStats) {
+            let mut ck = QuantPagedKv::new(d, fmt, PAGE_TOKENS);
+            ck.append_rows(&k.data);
+            let mut cv = QuantPagedKv::new(d, fmt, PAGE_TOKENS);
+            cv.append_rows(&v.data);
+            let mut stats = KvPageStats::default();
+            let t = bench_paper_protocol(|| {
+                let qq = dual_quant(&q.data, 1, d, true, Granularity::PerToken);
+                std::hint::black_box(dma_attention_paged(&qq, &ck, &cv, &policy, &mut stats));
+            });
+            (t.mean_ms(), stats)
+        };
+        let (t_dual, stats_dual) = run_fmt(KvFormat::Dual);
+        let (t_lo, _) = run_fmt(KvFormat::Nvfp4);
+
+        lat.row(&[
+            format!("{l}"),
+            format!("{:.3}", t_f32.mean_ms()),
+            format!("{t_dual:.3}"),
+            format!("{t_lo:.3}"),
+            format!("{:.1}", 100.0 * stats_dual.high_fraction()),
+        ]);
+    }
+    println!("\nTable 9b — one decode step over an L-token cache (CPU, d={d})");
+    lat.print();
+    lat.write_csv("table9_decode").unwrap();
+
+    // ---------------- shape checks ----------------
+    // The acceptance bar: single-format quantized caches are >= 3x
+    // smaller than f32; the policy keeps the high-precision page share
+    // bounded by sink+diag.
+    assert!(f32_row >= 3 * KvFormat::Nvfp4.row_bytes(d));
+    assert!(f32_row >= 3 * KvFormat::Mxfp8.row_bytes(d));
+    let q = randn(vec![1, d], 7);
+    let qq = dual_quant(&q.data, 1, d, true, Granularity::PerToken);
+    let l = 2048usize;
+    let mut ck = QuantPagedKv::new(d, KvFormat::Dual, PAGE_TOKENS);
+    ck.append_rows(&randn(vec![l, d], 8).data);
+    let mut cv = QuantPagedKv::new(d, KvFormat::Dual, PAGE_TOKENS);
+    cv.append_rows(&randn(vec![l, d], 9).data);
+    let mut stats = KvPageStats::default();
+    let out: Tensor = dma_attention_paged(&qq, &ck, &cv, &policy, &mut stats);
+    assert_eq!(out.shape, vec![1, d]);
+    let expect_high = policy.sink.div_ceil(PAGE_TOKENS) + policy.diag.div_ceil(PAGE_TOKENS);
+    assert!(
+        stats.high_pages as usize <= expect_high + 1,
+        "high pages {} exceed sink+diag bound {expect_high}",
+        stats.high_pages
+    );
+    println!(
+        "\nshape check OK: nvfp4-low {:.2}x smaller than f32, {:.1}% pages high at L={l}",
+        compression_ratio(f32_row, KvFormat::Nvfp4.row_bytes(d)),
+        100.0 * stats.high_fraction()
+    );
+}

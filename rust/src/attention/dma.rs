@@ -17,36 +17,40 @@ use super::online_softmax::OnlineSoftmax;
 use super::TileConfig;
 use crate::mxfp::block::{fake_quant, fake_quant_scaled, Format, Granularity};
 use crate::mxfp::fused::DualQuantized;
-use crate::mxfp::{e2m1, e8m0, fp8, pack, NVFP4_BLOCK};
 use crate::tensor::Tensor;
 
-/// Decode rows [r0, r1) of the NVFP4 low-precision copy into `out`.
-fn decode_low_rows(q: &DualQuantized, r0: usize, r1: usize, out: &mut [f32]) {
-    let d = q.d;
-    let mut codes = vec![0u8; d];
-    for (rr, r) in (r0..r1).enumerate() {
-        pack::unpack_row(&q.packed_fp4[r * d / 2..(r + 1) * d / 2], &mut codes);
-        let sq = q.sq[r];
-        for b in 0..d / NVFP4_BLOCK {
-            let s = fp8::decode_e4m3(q.s4_codes[r * d / NVFP4_BLOCK + b]) * sq;
-            for i in 0..NVFP4_BLOCK {
-                out[rr * d + b * NVFP4_BLOCK + i] =
-                    e2m1::decode(codes[b * NVFP4_BLOCK + i]) * s;
-            }
-        }
-    }
-}
-
-/// Decode rows [r0, r1) of the MXFP8 high-precision copy into `out`.
-fn decode_high_rows(q: &DualQuantized, r0: usize, r1: usize, out: &mut [f32]) {
-    let d = q.d;
-    let mb = crate::mxfp::MXFP_BLOCK;
-    for (rr, r) in (r0..r1).enumerate() {
-        let sq = q.sq[r];
-        for b in 0..d / mb {
-            let s = e8m0::decode(q.s8_codes[r * d / mb + b]) * sq;
-            for i in 0..mb {
-                out[rr * d + b * mb + i] = fp8::decode_e4m3(q.fp8_codes[r * d + b * mb + i]) * s;
+/// Compute one `[rows, cols]` logit tile over decoded operands:
+/// `s[r, c] = q_dec[r] . k_tile[c]`, with causal masking against absolute
+/// positions (`q_pos0 + r` is the position of query row `r`, `col0 + c`
+/// the position of key column `c`). Shared by the contiguous DMA loop and
+/// the paged decode path ([`super::paged`]) so both produce bit-identical
+/// floating-point operation sequences.
+pub(crate) fn score_tile(
+    q_dec: &[f32],
+    rows: usize,
+    d: usize,
+    k_tile: &[f32],
+    cols: usize,
+    q_pos0: i64,
+    col0: usize,
+    causal: bool,
+    s_tile: &mut [f32],
+) {
+    for r in 0..rows {
+        let limit = q_pos0 + r as i64;
+        let qrow = &q_dec[r * d..(r + 1) * d];
+        for c in 0..cols {
+            let col = col0 + c;
+            if causal && col as i64 > limit {
+                s_tile[r * cols + c] = f32::NEG_INFINITY;
+            } else {
+                let krow = &k_tile[c * d..(c + 1) * d];
+                let mut acc = 0f32;
+                for (a, b) in qrow.iter().zip(krow) {
+                    acc += a * b;
+                }
+                // Base-2 logits: softmax scale folded into Q.
+                s_tile[r * cols + c] = acc;
             }
         }
     }
@@ -79,8 +83,8 @@ pub fn dma_attention_quantized(
     let mut scratch = vec![0f32; cfg.bm * cfg.bn];
 
     for i in 0..lq / cfg.bm {
-        decode_low_rows(qq, i * cfg.bm, (i + 1) * cfg.bm, &mut q_low);
-        decode_high_rows(qq, i * cfg.bm, (i + 1) * cfg.bm, &mut q_high);
+        qq.decode_low_rows(i * cfg.bm, (i + 1) * cfg.bm, &mut q_low);
+        qq.decode_high_rows(i * cfg.bm, (i + 1) * cfg.bm, &mut q_high);
 
         let frontier = (i * cfg.bm + cfg.bm - 1) as i64 + off;
         let j_end = if cfg.causal {
@@ -116,29 +120,16 @@ pub fn dma_attention_quantized(
         let mut os = OnlineSoftmax::new(cfg.bm, d, true);
         let mut do_tile = |j: usize, high: bool, os: &mut OnlineSoftmax| {
             if high {
-                decode_high_rows(kq, j * cfg.bn, (j + 1) * cfg.bn, &mut k_tile);
+                kq.decode_high_rows(j * cfg.bn, (j + 1) * cfg.bn, &mut k_tile);
             } else {
-                decode_low_rows(kq, j * cfg.bn, (j + 1) * cfg.bn, &mut k_tile);
+                kq.decode_low_rows(j * cfg.bn, (j + 1) * cfg.bn, &mut k_tile);
             }
             let q_dec = if high { &q_high } else { &q_low };
-            for r in 0..cfg.bm {
-                let limit = (i * cfg.bm + r) as i64 + off;
-                let qrow = &q_dec[r * d..(r + 1) * d];
-                for c in 0..cfg.bn {
-                    let col = j * cfg.bn + c;
-                    if cfg.causal && col as i64 > limit {
-                        s_tile[r * cfg.bn + c] = f32::NEG_INFINITY;
-                    } else {
-                        let krow = &k_tile[c * d..(c + 1) * d];
-                        let mut acc = 0f32;
-                        for (a, b) in qrow.iter().zip(krow) {
-                            acc += a * b;
-                        }
-                        // Base-2 logits: softmax scale folded into Q.
-                        s_tile[r * cfg.bn + c] = acc;
-                    }
-                }
-            }
+            score_tile(
+                q_dec, cfg.bm, d, &k_tile, cfg.bn,
+                (i * cfg.bm) as i64 + off, j * cfg.bn, cfg.causal,
+                &mut s_tile,
+            );
             let v_tile = v.slice_rows(j * cfg.bn, (j + 1) * cfg.bn);
             os.update(&s_tile, &v_tile.data, cfg.bn, &mut scratch);
         };

@@ -10,10 +10,13 @@
 //! * [`online_softmax`] — streaming row accumulator (Sec. 3.2)
 //! * [`flash`]          — tiled exact attention (FlashAttention loop)
 //! * [`dma`]            — Diagonal-Tiled Mixed-Precision (Algorithm 1)
+//! * [`paged`]          — DMA decode over a quantized paged KV cache
+//!                        ([`crate::kvquant`])
 
 pub mod dma;
 pub mod flash;
 pub mod online_softmax;
+pub mod paged;
 pub mod reference;
 
 /// Tiling/window configuration shared by the tiled kernels.

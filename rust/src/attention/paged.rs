@@ -1,0 +1,365 @@
+//! Paged-decode DMA attention: Algorithm 1's precision schedule applied
+//! to the pages of an MXFP-quantized KV cache ([`crate::kvquant`]).
+//!
+//! One query tile (the trailing `lq` positions — `lq = 1` in serving
+//! decode) attends over the cache page by page: each page's K rows are
+//! dequantized into a scratch tile at the precision the [`KvPolicy`]
+//! assigns (sink / frontier pages high, body pages low, clamped to the
+//! copies the cache's [`KvFormat`] retains), V pages decode at the
+//! highest retained precision, and everything is stitched with base-2
+//! [`OnlineSoftmax`]. No full-precision K/V is ever materialized — the
+//! scratch footprint is one page.
+//!
+//! When the cache length is a multiple of the page size and the policy
+//! mirrors a [`super::TileConfig`] (`bn = page_tokens`, same sink/diag),
+//! the result is **bit-exact** with [`super::dma::dma_attention_quantized`]
+//! on the equivalent contiguous layout: both paths share the same row
+//! decoders, the same [`score_tile`] arithmetic and the same accumulator
+//! update order (see `paged_bit_exact_with_contiguous_kernel` below).
+//!
+//! [`KvPolicy`]: crate::kvquant::KvPolicy
+//! [`KvFormat`]: crate::kvquant::KvFormat
+
+use super::dma::score_tile;
+use super::online_softmax::OnlineSoftmax;
+use crate::kvquant::{KvPolicy, Precision, QuantPagedKv};
+use crate::metrics::KvPageStats;
+use crate::mxfp::fused::DualQuantized;
+use crate::tensor::Tensor;
+
+/// Mixed-precision attention of the dual-quantized query tile `qq`
+/// (`is_query=true` output of [`crate::mxfp::fused::dual_quant`], the
+/// trailing `qq.rows` positions of the sequence) over a quantized paged
+/// K/V cache. Causal; returns `[lq, d]`. Page decode counts are
+/// accumulated into `stats`.
+pub fn dma_attention_paged(
+    qq: &DualQuantized,
+    k: &QuantPagedKv,
+    v: &QuantPagedKv,
+    policy: &KvPolicy,
+    stats: &mut KvPageStats,
+) -> Tensor {
+    let len = k.len();
+    assert!(len >= qq.rows, "cache len {len} < query rows {}", qq.rows);
+    // Query row r sits at absolute position len - lq + r.
+    paged_attention_impl(qq, k, v, policy, (len - qq.rows) as i64, stats)
+}
+
+/// GQA decode variant: every row of `qq` is an independent query *head*
+/// at the causal frontier (position `len - 1`) — the
+/// `n_heads / n_kv_heads` query heads that share one kv head. Each cache
+/// page is dequantized once for the whole head group instead of once per
+/// head. Bit-identical to calling [`dma_attention_paged`] per head row.
+pub fn dma_attention_paged_heads(
+    qq: &DualQuantized,
+    k: &QuantPagedKv,
+    v: &QuantPagedKv,
+    policy: &KvPolicy,
+    stats: &mut KvPageStats,
+) -> Tensor {
+    let len = k.len();
+    assert!(len >= 1, "empty cache");
+    // All rows share the frontier position: no key is ever masked.
+    paged_attention_impl(qq, k, v, policy, len as i64 - 1, stats)
+}
+
+fn paged_attention_impl(
+    qq: &DualQuantized,
+    k: &QuantPagedKv,
+    v: &QuantPagedKv,
+    policy: &KvPolicy,
+    q_pos0: i64,
+    stats: &mut KvPageStats,
+) -> Tensor {
+    let (lq, d) = (qq.rows, qq.d);
+    let len = k.len();
+    assert!(lq >= 1, "empty query tile");
+    assert_eq!(k.d(), d, "K width");
+    assert_eq!(v.d(), d, "V width");
+    assert_eq!(v.len(), len, "K/V length mismatch");
+    let pt = k.page_tokens;
+    assert_eq!(v.page_tokens, pt, "K/V page size mismatch");
+
+    // Decode both precision copies of the query tile once.
+    let mut q_low = vec![0f32; lq * d];
+    let mut q_high = vec![0f32; lq * d];
+    qq.decode_low_rows(0, lq, &mut q_low);
+    qq.decode_high_rows(0, lq, &mut q_high);
+
+    let schedule = policy.page_precisions(len, pt);
+
+    let mut os = OnlineSoftmax::new(lq, d, true);
+    // Hot-loop scratch: one page.
+    let mut k_tile = vec![0f32; pt * d];
+    let mut v_tile = vec![0f32; pt * d];
+    let mut s_tile = vec![0f32; lq * pt];
+    let mut scratch = vec![0f32; lq * pt];
+
+    for (j, &prec) in schedule.iter().enumerate() {
+        let (r0, r1) = k.page_rows(j);
+        let cols = r1 - r0;
+        let eff = k.effective(prec);
+        k.decode_rows(r0, r1, eff, &mut k_tile);
+        match eff {
+            Precision::High => stats.high_pages += 1,
+            Precision::Low => stats.low_pages += 1,
+        }
+        let q_dec = if eff == Precision::High { &q_high } else { &q_low };
+        score_tile(q_dec, lq, d, &k_tile, cols, q_pos0, r0, true, &mut s_tile);
+        v.decode_rows(r0, r1, Precision::High, &mut v_tile);
+        os.update(&s_tile[..lq * cols], &v_tile[..cols * d], cols, &mut scratch);
+    }
+
+    let mut out = Tensor::zeros(vec![lq, d]);
+    os.finalize(&mut out.data);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dma::dma_attention_quantized;
+    use crate::attention::TileConfig;
+    use crate::kvquant::KvFormat;
+    use crate::mxfp::block::Granularity;
+    use crate::mxfp::fused::dual_quant;
+    use crate::util::rng::Rng;
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn filled(n: usize, d: usize, fmt: KvFormat, pt: usize, seed: u64) -> QuantPagedKv {
+        let mut s = QuantPagedKv::new(d, fmt, pt);
+        let x = rows(n, d, seed);
+        // Append in uneven chunks to exercise the chunking invariance.
+        let mut i = 0;
+        for ch in [n / 2, n / 4, n - n / 2 - n / 4] {
+            s.append_rows(&x[i * d..(i + ch) * d]);
+            i += ch;
+        }
+        s
+    }
+
+    fn decode_all_high(s: &QuantPagedKv) -> Tensor {
+        let (n, d) = (s.len(), s.d());
+        let mut out = Tensor::zeros(vec![n, d]);
+        s.decode_rows(0, n, Precision::High, &mut out.data);
+        out
+    }
+
+    #[test]
+    fn paged_bit_exact_with_contiguous_kernel() {
+        // The acceptance-bar test: over a dual-format cache whose length
+        // is a page multiple, the paged path must equal the contiguous
+        // DMA kernel bit for bit on the equivalent contiguous layout.
+        let (n, d, pt) = (64usize, 32usize, 8usize);
+        let k = filled(n, d, KvFormat::Dual, pt, 1);
+        let v = filled(n, d, KvFormat::Dual, pt, 2);
+        for (lq, sink, diag) in [
+            (1usize, 8usize, 16usize),
+            (1, 0, 0),
+            (1, 16, 0),
+            (1, 0, 32),
+            (8, 8, 16),
+            (8, 64, 64),
+        ] {
+            let q = rows(lq, d, 100 + (lq + sink + diag) as u64);
+            let qq = dual_quant(&q, lq, d, true, Granularity::PerToken);
+            let policy = KvPolicy { sink, diag };
+            let mut stats = KvPageStats::default();
+            let paged = dma_attention_paged(&qq, &k, &v, &policy, &mut stats);
+            assert_eq!(stats.total(), (n / pt) as u64);
+
+            // Contiguous layout: identical K planes (chunking invariance)
+            // and V as the exact high dequantization the paged path uses.
+            let kq = dual_quant(&rows(n, d, 1), n, d, false, Granularity::PerToken);
+            assert_eq!(kq.packed_fp4, k.store.packed_fp4);
+            assert_eq!(kq.fp8_codes, k.store.fp8_codes);
+            let v_eq = decode_all_high(&v);
+            let cfg = TileConfig { bm: lq, bn: pt, diag, sink, causal: true };
+            let contiguous = dma_attention_quantized(&qq, &kq, &v_eq, &cfg);
+            assert_eq!(
+                paged.data, contiguous.data,
+                "lq={lq} sink={sink} diag={diag}"
+            );
+        }
+    }
+
+    #[test]
+    fn head_grouped_variant_bit_matches_per_head_calls() {
+        // GQA grouping: one multi-row frontier call must equal per-head
+        // single-row calls bit for bit, with 1/n_rep the page decodes.
+        let (n, d, pt, n_rep) = (40usize, 32usize, 8usize, 4usize);
+        let k = filled(n, d, KvFormat::Dual, pt, 20);
+        let v = filled(n, d, KvFormat::Dual, pt, 21);
+        let policy = KvPolicy { sink: 8, diag: 16 };
+        let heads = rows(n_rep, d, 22);
+
+        let qq_group = dual_quant(&heads, n_rep, d, true, Granularity::PerToken);
+        let mut s_group = KvPageStats::default();
+        let grouped = dma_attention_paged_heads(&qq_group, &k, &v, &policy, &mut s_group);
+
+        let mut s_single = KvPageStats::default();
+        for h in 0..n_rep {
+            let qq = dual_quant(&heads[h * d..(h + 1) * d], 1, d, true, Granularity::PerToken);
+            let one = dma_attention_paged(&qq, &k, &v, &policy, &mut s_single);
+            assert_eq!(one.data, grouped.row(h).to_vec(), "head {h}");
+        }
+        // Grouping decodes each page once instead of n_rep times.
+        assert_eq!(s_single.total(), n_rep as u64 * s_group.total());
+    }
+
+    #[test]
+    fn page_hit_counters_follow_policy() {
+        let (n, d, pt) = (64usize, 32usize, 8usize);
+        let k = filled(n, d, KvFormat::Dual, pt, 3);
+        let v = filled(n, d, KvFormat::Dual, pt, 4);
+        let q = rows(1, d, 5);
+        let qq = dual_quant(&q, 1, d, true, Granularity::PerToken);
+        let mut stats = KvPageStats::default();
+        dma_attention_paged(&qq, &k, &v, &KvPolicy { sink: 8, diag: 16 }, &mut stats);
+        // 1 sink page + 2 frontier pages high, 5 body pages low.
+        assert_eq!(stats, KvPageStats { high_pages: 3, low_pages: 5 });
+        assert!((stats.high_fraction() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_format_cache_ignores_policy() {
+        // nvfp4-low: every page decodes low regardless of sink/diag, so
+        // the result equals a dual cache under the all-low policy with V
+        // decoded low on both sides.
+        let (n, d, pt) = (48usize, 32usize, 8usize);
+        let k_lo = filled(n, d, KvFormat::Nvfp4, pt, 6);
+        let v_lo = filled(n, d, KvFormat::Nvfp4, pt, 7);
+        let k_du = filled(n, d, KvFormat::Dual, pt, 6);
+        let v_du = filled(n, d, KvFormat::Dual, pt, 7);
+        // Sanity: low planes identical across formats.
+        assert_eq!(k_lo.store.packed_fp4, k_du.store.packed_fp4);
+
+        let q = rows(1, d, 8);
+        let qq = dual_quant(&q, 1, d, true, Granularity::PerToken);
+        let mut s1 = KvPageStats::default();
+        let o_lo = dma_attention_paged(&qq, &k_lo, &v_lo, &KvPolicy { sink: 8, diag: 16 }, &mut s1);
+        assert_eq!(s1.high_pages, 0);
+
+        // Dual oracle: all-low policy; force V low by rebuilding the V
+        // store in nvfp4 (same planes as v_du's low copy).
+        let mut s2 = KvPageStats::default();
+        let o_du = dma_attention_paged(&qq, &k_du, &v_lo, &KvPolicy { sink: 0, diag: 0 }, &mut s2);
+        assert_eq!(o_lo.data, o_du.data);
+
+        // mxfp8-high: everything decodes high.
+        let k_hi = filled(n, d, KvFormat::Mxfp8, pt, 6);
+        let v_hi = filled(n, d, KvFormat::Mxfp8, pt, 7);
+        let mut s3 = KvPageStats::default();
+        let o_hi = dma_attention_paged(&qq, &k_hi, &v_hi, &KvPolicy { sink: 0, diag: 0 }, &mut s3);
+        assert_eq!(s3.low_pages, 0);
+        let mut s4 = KvPageStats::default();
+        let o_du_hi =
+            dma_attention_paged(&qq, &k_du, &v_du, &KvPolicy { sink: 0, diag: usize::MAX / 2 }, &mut s4);
+        assert_eq!(o_hi.data, o_du_hi.data);
+    }
+
+    #[test]
+    fn partial_frontier_page_matches_dense_oracle() {
+        // Cache length not a multiple of the page size: compare against a
+        // one-shot softmax over the page-mixed decoded operands.
+        let (n, d, pt) = (27usize, 32usize, 8usize);
+        let k = filled(n, d, KvFormat::Dual, pt, 9);
+        let v = filled(n, d, KvFormat::Dual, pt, 10);
+        let q = rows(1, d, 11);
+        let qq = dual_quant(&q, 1, d, true, Granularity::PerToken);
+        let policy = KvPolicy { sink: 8, diag: 16 };
+        let mut stats = KvPageStats::default();
+        let out = dma_attention_paged(&qq, &k, &v, &policy, &mut stats);
+        assert_eq!(stats.total(), 4); // ceil(27 / 8) pages
+
+        let mut ql = vec![0f32; d];
+        let mut qh = vec![0f32; d];
+        qq.decode_low_rows(0, 1, &mut ql);
+        qq.decode_high_rows(0, 1, &mut qh);
+        let mut s = vec![0f32; n];
+        let mut k_tile = vec![0f32; pt * d];
+        for (j, &prec) in policy.page_precisions(n, pt).iter().enumerate() {
+            let (r0, r1) = k.page_rows(j);
+            k.decode_rows(r0, r1, prec, &mut k_tile);
+            let qd = if prec == Precision::High { &qh } else { &ql };
+            for c in 0..r1 - r0 {
+                s[r0 + c] = k_tile[c * d..(c + 1) * d]
+                    .iter()
+                    .zip(qd)
+                    .map(|(a, b)| a * b)
+                    .sum();
+            }
+        }
+        let m = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let p: Vec<f32> = s.iter().map(|&x| (x - m).exp2()).collect();
+        let z: f32 = p.iter().sum();
+        let v_all = decode_all_high(&v);
+        for c in 0..d {
+            let mut acc = 0f32;
+            for (j, &pj) in p.iter().enumerate() {
+                acc += pj * v_all.at(j, c);
+            }
+            let expect = acc / z;
+            assert!(
+                (out.at(0, c) - expect).abs() < 1e-4,
+                "col {c}: {} vs {expect}",
+                out.at(0, c)
+            );
+        }
+    }
+
+    #[test]
+    fn sink_and_diag_policy_improves_over_all_low() {
+        // The paper's quality claim at page granularity, on
+        // channel-structured keys where low-bit hurts.
+        let d = 64;
+        let n = 256;
+        let pt = 16;
+        let mut rng = Rng::new(12);
+        let kx = crate::util::rng::channelwise_qk(&mut rng, n, d, 6, 8.0);
+        let vx = rows(n, d, 13);
+        let mut k = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        k.append_rows(&kx);
+        let mut v = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        v.append_rows(&vx);
+
+        let mut err = |sink: usize, diag: usize| -> f64 {
+            let mut total = 0.0;
+            for _ in 0..8 {
+                let q = crate::util::rng::channelwise_qk(&mut rng, 1, d, 6, 8.0);
+                let qq = dual_quant(&q, 1, d, true, Granularity::PerToken);
+                let mut stats = KvPageStats::default();
+                let out = dma_attention_paged(&qq, &k, &v, &KvPolicy { sink, diag }, &mut stats);
+                // Exact f32 reference.
+                let scale = 1.0 / (d as f32).sqrt();
+                let mut s = vec![0f32; n];
+                for (j, sv) in s.iter_mut().enumerate() {
+                    *sv = kx[j * d..(j + 1) * d]
+                        .iter()
+                        .zip(&q)
+                        .map(|(a, b)| a * b)
+                        .sum::<f32>()
+                        * scale;
+                }
+                let m = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let p: Vec<f32> = s.iter().map(|&x| (x - m).exp()).collect();
+                let z: f32 = p.iter().sum();
+                let mut reference = vec![0f32; d];
+                for (j, &pj) in p.iter().enumerate() {
+                    for c in 0..d {
+                        reference[c] += pj / z * vx[j * d + c];
+                    }
+                }
+                total += crate::metrics::rmse(&out.data, &reference);
+            }
+            total
+        };
+        let e_dma = err(32, 64);
+        let e_low = err(0, 0);
+        assert!(e_dma < e_low, "dma {e_dma} vs all-low {e_low}");
+    }
+}

@@ -153,6 +153,14 @@ pub struct EngineConfig {
     pub decode_batches: Vec<usize>,
     /// Scheduler time slice: max decode steps before re-checking prefill.
     pub decode_slice: usize,
+    /// KV-cache storage format: `f32` (legacy batch slots), `mxfp8-high`,
+    /// `nvfp4-low`, or `dual` (both copies; the page policy picks).
+    /// Quantized formats require a backend with a paged decode path
+    /// (the host backend; PJRT executables are f32-only).
+    pub kv_format: crate::kvquant::KvFormat,
+    /// Page precision policy for quantized caches: sink/frontier windows
+    /// in tokens (pages there decode MXFP8-high, the body NVFP4-low).
+    pub kv_precision_policy: crate::kvquant::KvPolicy,
 }
 
 impl Default for EngineConfig {
@@ -164,6 +172,8 @@ impl Default for EngineConfig {
             queue_limit: 256,
             decode_batches: vec![1, 2, 4],
             decode_slice: 8,
+            kv_format: crate::kvquant::KvFormat::F32,
+            kv_precision_policy: crate::kvquant::KvPolicy::default(),
         }
     }
 }
@@ -212,5 +222,13 @@ mod tests {
     fn missing_meta_is_helpful() {
         let err = MetaConfig::load("/nonexistent/dir").unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn engine_config_defaults_to_f32_cache() {
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.kv_format, crate::kvquant::KvFormat::F32);
+        assert_eq!(cfg.kv_precision_policy.sink, 128);
+        assert_eq!(cfg.kv_precision_policy.diag, 128);
     }
 }

@@ -16,7 +16,8 @@
 
 use super::request::{FinishReason, Request, Response, SeqPhase, Tracked};
 use crate::config::EngineConfig;
-use crate::kvcache::{BlockPool, SlotKv};
+use crate::kvcache::{BlockPool, SeqKv, SlotCache};
+use crate::kvquant::{KvFormat, KvQuantConfig, QuantSlotKv, PAGE_TOKENS};
 use crate::model::argmax;
 use crate::runtime::ModelBackend;
 use std::collections::VecDeque;
@@ -25,7 +26,7 @@ use std::time::Instant;
 
 struct Active {
     tracked: Tracked,
-    slot: SlotKv,
+    slot: SeqKv,
 }
 
 enum PrefillOutcome {
@@ -46,6 +47,16 @@ pub struct EngineStats {
     pub decode_tokens: u64,
     pub decode_steps: u64,
     pub decode_batch_sum: u64,
+    /// Admission accounting cost of one cached token in bytes at the
+    /// configured `kv_format` (all layers/heads, K + V).
+    pub kv_bytes_per_token: u64,
+    /// The same cost at f32 — `kv_bytes_per_token / kv_f32_bytes_per_token`
+    /// is the cache compression the format buys.
+    pub kv_f32_bytes_per_token: u64,
+    /// Peak resident bytes of all active sequence caches.
+    pub kv_bytes_peak: u64,
+    /// Per-precision page-decode hits (quantized caches only).
+    pub kv_pages: crate::metrics::KvPageStats,
 }
 
 impl EngineStats {
@@ -56,6 +67,14 @@ impl EngineStats {
             self.decode_batch_sum as f64 / self.decode_steps as f64
         }
     }
+
+    /// Cache bytes-per-token compression vs f32 (1.0 for the f32 cache).
+    pub fn kv_compression(&self) -> f64 {
+        crate::metrics::compression_ratio(
+            self.kv_f32_bytes_per_token as usize,
+            self.kv_bytes_per_token as usize,
+        )
+    }
 }
 
 pub struct Engine {
@@ -65,23 +84,47 @@ pub struct Engine {
     active: Vec<Option<Active>>,
     pool: BlockPool,
     eos_token: i32,
+    /// Quantized-cache layout, `None` for the f32 cache.
+    kv_quant: Option<KvQuantConfig>,
+    /// `(n_layers, n_kv_heads, d_head)` from the backend.
+    kv_dims: (usize, usize, usize),
     pub stats: EngineStats,
 }
 
 impl Engine {
     pub fn new(backend: Box<dyn ModelBackend>, cfg: EngineConfig, eos_token: i32) -> Engine {
         let max_slots = backend.decode_buckets().into_iter().max().unwrap_or(1);
-        // KV accounting: cache_len tokens per slot, 16-token blocks.
-        let block_tokens = 16;
-        let total_blocks = max_slots * backend.cache_len() / block_tokens;
+        // Format-aware KV accounting: the physical budget is what the f32
+        // slots would occupy (max_slots full-length caches); cheaper
+        // formats get proportionally more 16-token admission blocks.
+        let block_tokens = PAGE_TOKENS;
+        let (nl, hk, dh) = backend.kv_dims();
+        let f32_bpt = 2 * nl * hk * dh * 4;
+        let bpt = 2 * nl * hk * cfg.kv_format.row_bytes(dh);
+        let budget = max_slots * backend.cache_len() * f32_bpt;
+        let kv_quant = match cfg.kv_format {
+            KvFormat::F32 => None,
+            format => Some(KvQuantConfig {
+                format,
+                page_tokens: block_tokens,
+                policy: cfg.kv_precision_policy,
+            }),
+        };
+        let stats = EngineStats {
+            kv_bytes_per_token: bpt as u64,
+            kv_f32_bytes_per_token: f32_bpt as u64,
+            ..Default::default()
+        };
         Engine {
             cfg,
-            pool: BlockPool::new(total_blocks, block_tokens),
+            pool: BlockPool::with_byte_budget(budget, block_tokens, bpt),
             active: (0..max_slots).map(|_| None).collect(),
             queue: VecDeque::new(),
             backend,
             eos_token,
-            stats: EngineStats::default(),
+            kv_quant,
+            kv_dims: (nl, hk, dh),
+            stats,
         }
     }
 
@@ -183,7 +226,18 @@ impl Engine {
             };
             return Ok(PrefillOutcome::Finished(tracked.respond(reason)));
         }
-        self.active[slot_idx] = Some(Active { tracked, slot: out.slot });
+        // Quantize the prefill cache into the paged store when the
+        // configured format asks for one; decode then runs entirely over
+        // quantized pages.
+        let slot = match &self.kv_quant {
+            None => SeqKv::F32(out.slot),
+            Some(qcfg) => {
+                let (nl, hk, dh) = self.kv_dims;
+                let layout = SlotCache::new(nl, hk, self.backend.cache_len(), dh);
+                SeqKv::Quant(QuantSlotKv::from_slot(&out.slot, &layout, *qcfg))
+            }
+        };
+        self.active[slot_idx] = Some(Active { tracked, slot });
         Ok(PrefillOutcome::Started)
     }
 
@@ -208,7 +262,7 @@ impl Engine {
             .map(|&i| self.active[i].take().unwrap())
             .collect();
         {
-            let mut slot_refs: Vec<Option<&mut SlotKv>> =
+            let mut slot_refs: Vec<Option<&mut SeqKv>> =
                 taken.iter_mut().map(|a| Some(&mut a.slot)).collect();
             let logits = self.backend.decode(&tokens, &mut slot_refs)?;
             let vocab = self.backend.vocab();
@@ -225,13 +279,17 @@ impl Engine {
                 self.pool.extend(act.tracked.req.id, 1)?;
             }
         }
+        // Cache-byte and page-precision reporting.
+        let live: u64 = taken.iter().map(|a| a.slot.resident_bytes() as u64).sum();
+        self.stats.kv_bytes_peak = self.stats.kv_bytes_peak.max(live);
+        self.stats.kv_pages = self.backend.kv_page_stats();
 
         // Retire finished sequences, return the rest to their slots.
         let mut done = Vec::new();
         for (k, act) in taken.into_iter().enumerate() {
             let max_new = act.tracked.req.max_new_tokens.min(self.cfg.max_new_tokens);
             let last = *act.tracked.output.last().unwrap();
-            let cache_full = act.slot.pos >= self.backend.cache_len();
+            let cache_full = act.slot.pos() >= self.backend.cache_len();
             let reason = if last == self.eos_token {
                 Some(FinishReason::Eos)
             } else if act.tracked.output.len() >= max_new {
@@ -310,6 +368,7 @@ pub struct EngineHandle {
     pub rx: std::sync::Mutex<mpsc::Receiver<Response>>,
     join: Option<std::thread::JoinHandle<()>>,
     load: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    kv_format: &'static str,
 }
 
 impl EngineHandle {
@@ -319,6 +378,7 @@ impl EngineHandle {
     where
         F: FnOnce() -> crate::Result<Box<dyn ModelBackend>> + Send + 'static,
     {
+        let kv_format = cfg.kv_format.name();
         let (tx, rx_msg) = mpsc::channel::<Msg>();
         let (tx_resp, rx) = mpsc::channel::<Response>();
         let load = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
@@ -369,7 +429,7 @@ impl EngineHandle {
                 load2.store(engine.load(), std::sync::atomic::Ordering::Relaxed);
             }
         });
-        EngineHandle { tx, rx: std::sync::Mutex::new(rx), join: Some(join), load }
+        EngineHandle { tx, rx: std::sync::Mutex::new(rx), join: Some(join), load, kv_format }
     }
 
     pub fn submit(&self, req: Request) -> crate::Result<()> {
@@ -380,6 +440,11 @@ impl EngineHandle {
 
     pub fn load(&self) -> usize {
         self.load.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// KV-cache storage format this worker was configured with.
+    pub fn kv_format(&self) -> &'static str {
+        self.kv_format
     }
 
     pub fn shutdown(mut self) {
@@ -462,7 +527,7 @@ mod tests {
             let rq = req(r.id, if r.id == 1 { 6 } else { 9 }, 4);
             let out = be.prefill(&rq.tokens, false).unwrap();
             let mut toks = vec![crate::model::argmax(&out.last_logits)];
-            let mut slot = out.slot;
+            let mut slot = SeqKv::F32(out.slot);
             while toks.len() < 4 && *toks.last().unwrap() != 5 {
                 let lg = be
                     .decode(&[*toks.last().unwrap()], &mut [Some(&mut slot)])
@@ -470,6 +535,32 @@ mod tests {
                 toks.push(crate::model::argmax(&lg[..64]));
             }
             assert_eq!(r.output, toks, "request {}", r.id);
+        }
+    }
+
+    #[test]
+    fn quantized_cache_engine_round_trip() {
+        // The engine serves end to end over each quantized format; the
+        // admission accounting reflects the format's bytes/token.
+        for format in [KvFormat::Dual, KvFormat::Mxfp8, KvFormat::Nvfp4] {
+            let cfg = EngineConfig {
+                max_new_tokens: 4,
+                kv_format: format,
+                kv_precision_policy: crate::kvquant::KvPolicy { sink: 16, diag: 16 },
+                ..Default::default()
+            };
+            let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+            for i in 0..3 {
+                assert!(e.submit(req(i, 8, 4)).is_none(), "{format:?}");
+            }
+            let resps = e.run_until_idle().unwrap();
+            assert_eq!(resps.len(), 3, "{format:?}");
+            for r in &resps {
+                assert!(!r.output.is_empty(), "{format:?} req {}", r.id);
+            }
+            assert!(e.stats.kv_bytes_per_token < e.stats.kv_f32_bytes_per_token);
+            assert!(e.stats.kv_pages.total() > 0, "{format:?}");
+            assert!(e.stats.kv_bytes_peak > 0, "{format:?}");
         }
     }
 

@@ -32,6 +32,11 @@ impl Router {
         self.workers.len()
     }
 
+    /// KV-cache storage format of the fleet (workers share one config).
+    pub fn kv_format(&self) -> &'static str {
+        self.workers[0].kv_format()
+    }
+
     /// Pick a worker index for the next request.
     pub fn pick(&self) -> usize {
         match self.policy {

@@ -5,12 +5,19 @@
 //!
 //! * [`BlockPool`] — vLLM-style paged accounting: fixed-size token
 //!   blocks, per-sequence block tables, refcounted sharing (prefix
-//!   reuse), capacity-based admission. The scheduler uses it to decide
-//!   whether a request can be admitted without cache thrashing.
+//!   reuse), capacity-based admission. Admission is *format-aware*: the
+//!   pool is sized from a byte budget and a bytes-per-token cost
+//!   ([`BlockPool::with_byte_budget`]), so an MXFP-quantized cache
+//!   ([`crate::kvquant`]) admits proportionally more tokens than f32
+//!   within the same physical budget.
 //! * [`SlotCache`] — the physical layout: the decode executable takes
 //!   `[n_layers, B, H_kv, C, d_head]` cache tensors, so each running
 //!   sequence owns one batch slot; this type packs/unpacks per-slot
 //!   caches into the flat batch literals.
+//! * [`SeqKv`] — a running sequence's cache payload: either a
+//!   full-precision [`SlotKv`] batch slot or a quantized paged
+//!   [`crate::kvquant::QuantSlotKv`], selected by
+//!   `EngineConfig::kv_format`.
 
 use anyhow::{anyhow, bail};
 use std::collections::BTreeMap;
@@ -30,6 +37,10 @@ struct SeqEntry {
 /// Paged KV block pool with refcounted blocks.
 pub struct BlockPool {
     block_tokens: usize,
+    /// Accounting cost of one cached token in bytes (all layers/heads,
+    /// K + V, at the cache's storage format). 1 when the pool was built
+    /// token-denominated via [`BlockPool::new`].
+    bytes_per_token: usize,
     refcount: Vec<u32>,
     free: Vec<usize>,
     seqs: BTreeMap<SeqId, SeqEntry>,
@@ -39,10 +50,28 @@ impl BlockPool {
     pub fn new(num_blocks: usize, block_tokens: usize) -> BlockPool {
         BlockPool {
             block_tokens,
+            bytes_per_token: 1,
             refcount: vec![0; num_blocks],
             free: (0..num_blocks).rev().collect(),
             seqs: BTreeMap::new(),
         }
+    }
+
+    /// Size the pool from a physical byte budget and a per-token storage
+    /// cost: cheaper formats get proportionally more blocks. This is how
+    /// the engine turns `kv_format` into admission capacity — e.g. an
+    /// `nvfp4-low` cache (~6x fewer bytes/token) yields ~6x the blocks of
+    /// f32 within the same budget.
+    pub fn with_byte_budget(
+        total_bytes: usize,
+        block_tokens: usize,
+        bytes_per_token: usize,
+    ) -> BlockPool {
+        assert!(block_tokens > 0 && bytes_per_token > 0);
+        let num_blocks = total_bytes / (block_tokens * bytes_per_token);
+        let mut pool = BlockPool::new(num_blocks, block_tokens);
+        pool.bytes_per_token = bytes_per_token;
+        pool
     }
 
     pub fn num_blocks(&self) -> usize {
@@ -51,6 +80,21 @@ impl BlockPool {
 
     pub fn free_blocks(&self) -> usize {
         self.free.len()
+    }
+
+    pub fn bytes_per_token(&self) -> usize {
+        self.bytes_per_token
+    }
+
+    /// Accounting capacity in bytes.
+    pub fn bytes_capacity(&self) -> usize {
+        self.refcount.len() * self.block_tokens * self.bytes_per_token
+    }
+
+    /// Bytes of allocated (referenced) blocks.
+    pub fn bytes_in_use(&self) -> usize {
+        let used = self.refcount.iter().filter(|&&r| r > 0).count();
+        used * self.block_tokens * self.bytes_per_token
     }
 
     pub fn blocks_needed(&self, tokens: usize) -> usize {
@@ -265,6 +309,53 @@ impl SlotCache {
     }
 }
 
+// ---------------------------------------------------------------------
+// Per-sequence cache payload (format dispatch)
+// ---------------------------------------------------------------------
+
+/// The cache a running sequence owns: full-precision batch slot or
+/// quantized paged store. Backends dispatch on the variant in `decode`;
+/// the engine picks the variant from `EngineConfig::kv_format` right
+/// after prefill.
+pub enum SeqKv {
+    F32(SlotKv),
+    Quant(crate::kvquant::QuantSlotKv),
+}
+
+impl SeqKv {
+    /// Tokens currently cached.
+    pub fn pos(&self) -> usize {
+        match self {
+            SeqKv::F32(s) => s.pos,
+            SeqKv::Quant(s) => s.pos,
+        }
+    }
+
+    /// Resident bytes of the cache payload. F32 slots are pre-allocated
+    /// to the full engine cache length (that is their real footprint);
+    /// quantized stores grow page-by-page with the sequence.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            SeqKv::F32(s) => (s.k.len() + s.v.len()) * 4,
+            SeqKv::Quant(s) => s.quantized_bytes(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&SlotKv> {
+        match self {
+            SeqKv::F32(s) => Some(s),
+            SeqKv::Quant(_) => None,
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Option<&mut SlotKv> {
+        match self {
+            SeqKv::F32(s) => Some(s),
+            SeqKv::Quant(_) => None,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -377,6 +468,49 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn byte_budget_scales_blocks_with_format_cost() {
+        // Same physical budget, cheaper format => proportionally more
+        // blocks (the format-aware admission the engine relies on).
+        let budget = 16 * 1024usize;
+        let f32_pool = BlockPool::with_byte_budget(budget, 16, 1024);
+        assert_eq!(f32_pool.num_blocks(), 1);
+        assert_eq!(f32_pool.bytes_capacity(), budget);
+        let nvfp4_pool = BlockPool::with_byte_budget(budget, 16, 176);
+        assert_eq!(nvfp4_pool.num_blocks(), 5);
+        assert!(nvfp4_pool.num_blocks() >= 3 * f32_pool.num_blocks());
+    }
+
+    #[test]
+    fn bytes_in_use_tracks_allocation() {
+        let mut p = BlockPool::with_byte_budget(4 * 16 * 100, 16, 100);
+        assert_eq!(p.bytes_per_token(), 100);
+        assert_eq!(p.bytes_in_use(), 0);
+        p.allocate(1, 20).unwrap(); // 2 blocks
+        assert_eq!(p.bytes_in_use(), 2 * 16 * 100);
+        p.release(1).unwrap();
+        assert_eq!(p.bytes_in_use(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn seqkv_dispatch() {
+        let sc = SlotCache::new(1, 1, 8, 32);
+        let mut slot = sc.empty_slot();
+        slot.pos = 3;
+        let kv = SeqKv::F32(slot);
+        assert_eq!(kv.pos(), 3);
+        assert_eq!(kv.resident_bytes(), 2 * 8 * 32 * 4);
+        assert!(kv.as_f32().is_some());
+
+        let q = crate::kvquant::QuantSlotKv::new(
+            crate::kvquant::KvQuantConfig::default(), 1, 1, 32);
+        let kvq = SeqKv::Quant(q);
+        assert_eq!(kvq.pos(), 0);
+        assert_eq!(kvq.resident_bytes(), 0);
+        assert!(kvq.as_f32().is_none());
     }
 
     #[test]

@@ -1,0 +1,525 @@
+//! MXFP-quantized paged KV cache (the serving-side counterpart of the
+//! paper's diagonal-tiled mixed-precision attention).
+//!
+//! The f32 serving cache ([`crate::kvcache::SlotKv`]) spends 4 bytes per
+//! cached element; this subsystem stores decode-time K/V as quantized
+//! *pages* instead, quantizing rows on append with the fused dual
+//! quantizer ([`crate::mxfp::fused::dual_quant`]):
+//!
+//! * MXFP8 **high** copy — E4M3 codes + per-32 E8M0 exponents,
+//! * NVFP4 **low** copy — packed E2M1 nibbles + per-16 E4M3 scales,
+//!
+//! sharing one per-token scale `S_q`. Because `S_q` is per-token,
+//! appending rows in any chunking yields bit-identical planes to
+//! quantizing the whole matrix at once — the invariant that makes an
+//! appendable quantized cache possible.
+//!
+//! At decode time ([`crate::attention::paged::dma_attention_paged`]) the
+//! paper's tile precision policy is applied to cache pages: pages
+//! overlapping the attention sink and the causal-frontier window decode
+//! MXFP8-high, the body decodes NVFP4-low, one page of scratch at a time
+//! — no full-precision K/V is ever materialized.
+//!
+//! [`KvFormat`] selects which copies are retained ([`KvFormat::Dual`]
+//! keeps both so the policy can choose; the single-format variants trade
+//! policy freedom for bytes — `nvfp4-low` stores ~6x fewer bytes per
+//! token than f32). The Python parity reference is
+//! `python/compile/kernels/kv_quant.py`; cross-language golden vectors
+//! live in `rust/testdata/golden_kvquant.json`.
+
+use crate::kvcache::{SlotCache, SlotKv};
+use crate::mxfp::block::Granularity;
+use crate::mxfp::fused::{dual_quant, DualQuantized};
+use crate::mxfp::{MXFP_BLOCK, NVFP4_BLOCK};
+use anyhow::bail;
+
+/// Default page size in tokens. Matches the engine's KV block size so
+/// pages align one-to-one with [`crate::kvcache::BlockPool`] admission
+/// blocks.
+pub const PAGE_TOKENS: usize = 16;
+
+// ---------------------------------------------------------------------
+// Formats and policy
+// ---------------------------------------------------------------------
+
+/// Storage format of the serving KV cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KvFormat {
+    /// Legacy full-precision cache (4 B/element).
+    #[default]
+    F32,
+    /// MXFP8 copy only: every page decodes high (~3.5x smaller than f32).
+    Mxfp8,
+    /// NVFP4 copy only: every page decodes low (~6x smaller than f32).
+    Nvfp4,
+    /// Both copies retained; the page policy picks per page (~2.5x).
+    Dual,
+}
+
+impl KvFormat {
+    pub fn parse(s: &str) -> crate::Result<KvFormat> {
+        Ok(match s {
+            "f32" | "fp32" => KvFormat::F32,
+            "mxfp8-high" | "mxfp8" => KvFormat::Mxfp8,
+            "nvfp4-low" | "nvfp4" => KvFormat::Nvfp4,
+            "dual" | "mxfp8+nvfp4" => KvFormat::Dual,
+            _ => bail!(
+                "unknown kv format {s:?} (expected f32, mxfp8-high, nvfp4-low or dual)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvFormat::F32 => "f32",
+            KvFormat::Mxfp8 => "mxfp8-high",
+            KvFormat::Nvfp4 => "nvfp4-low",
+            KvFormat::Dual => "dual",
+        }
+    }
+
+    /// Is the NVFP4 low-precision copy retained?
+    pub fn has_low(self) -> bool {
+        matches!(self, KvFormat::Nvfp4 | KvFormat::Dual)
+    }
+
+    /// Is the MXFP8 high-precision copy retained?
+    pub fn has_high(self) -> bool {
+        matches!(self, KvFormat::Mxfp8 | KvFormat::Dual)
+    }
+
+    /// Stored bytes per cached K (or V) row of width `d`: the retained
+    /// code planes plus the 4-byte per-token scale `S_q` (shared by both
+    /// copies). Drives the format-aware admission accounting in
+    /// [`crate::kvcache::BlockPool`].
+    pub fn row_bytes(self, d: usize) -> usize {
+        if self == KvFormat::F32 {
+            return 4 * d;
+        }
+        let mut b = 4; // S_q
+        if self.has_low() {
+            b += d / 2 + d / NVFP4_BLOCK;
+        }
+        if self.has_high() {
+            b += d + d / MXFP_BLOCK;
+        }
+        b
+    }
+}
+
+impl std::str::FromStr for KvFormat {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        KvFormat::parse(s)
+    }
+}
+
+/// Decode precision of one cache page.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    High,
+    Low,
+}
+
+/// Page-level precision policy: the paper's diagonal-tile schedule
+/// projected onto cache pages for a decode query at the causal frontier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvPolicy {
+    /// Attention-sink window in tokens from position 0 (pages overlapping
+    /// it decode high).
+    pub sink: usize,
+    /// Causal-frontier window in tokens (the trailing `diag` tokens
+    /// decode high). 0 = everything low.
+    pub diag: usize,
+}
+
+impl Default for KvPolicy {
+    fn default() -> Self {
+        // The paper's default 128/128 configuration.
+        KvPolicy { sink: 128, diag: 128 }
+    }
+}
+
+impl KvPolicy {
+    /// Parse `"SINK/DIAG"`, e.g. `"128/128"`.
+    pub fn parse(s: &str) -> crate::Result<KvPolicy> {
+        let Some((a, b)) = s.split_once('/') else {
+            bail!("kv policy {s:?} must be SINK/DIAG, e.g. 128/128");
+        };
+        Ok(KvPolicy {
+            sink: a.trim().parse().map_err(|e| anyhow::anyhow!("bad sink: {e}"))?,
+            diag: b.trim().parse().map_err(|e| anyhow::anyhow!("bad diag: {e}"))?,
+        })
+    }
+
+    /// Per-page precision schedule for a cache of `len` tokens, derived
+    /// from the DMA kernel's phase boundaries (Alg. 1, causal, one query
+    /// tile whose frontier is token `len - 1`):
+    ///
+    ///   Phase 0  pages overlapping the first `sink` tokens  -> High
+    ///   Phase 1  pages before the diagonal window           -> Low
+    ///   Phase 2  pages inside the trailing `diag` window    -> High
+    pub fn page_precisions(&self, len: usize, page_tokens: usize) -> Vec<Precision> {
+        let n_pages = len.div_ceil(page_tokens);
+        let n_sink = if self.sink > 0 { self.sink.div_ceil(page_tokens) } else { 0 };
+        let n_sink_eff = n_sink.min(n_pages);
+        let j_hi_start = if self.diag == 0 {
+            n_pages
+        } else {
+            // Window start token is frontier - diag + 1 = len - diag.
+            (len as i64 - self.diag as i64)
+                .div_euclid(page_tokens as i64)
+                .max(n_sink_eff as i64)
+                .min(n_pages as i64) as usize
+        };
+        (0..n_pages)
+            .map(|j| {
+                if j < n_sink_eff || j >= j_hi_start {
+                    Precision::High
+                } else {
+                    Precision::Low
+                }
+            })
+            .collect()
+    }
+}
+
+impl std::str::FromStr for KvPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        KvPolicy::parse(s)
+    }
+}
+
+/// Everything a quantized slot needs to know about its own layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvQuantConfig {
+    pub format: KvFormat,
+    pub page_tokens: usize,
+    pub policy: KvPolicy,
+}
+
+impl KvQuantConfig {
+    pub fn new(format: KvFormat, policy: KvPolicy) -> KvQuantConfig {
+        KvQuantConfig { format, page_tokens: PAGE_TOKENS, policy }
+    }
+}
+
+impl Default for KvQuantConfig {
+    fn default() -> Self {
+        KvQuantConfig::new(KvFormat::Dual, KvPolicy::default())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Paged quantized row store
+// ---------------------------------------------------------------------
+
+/// Appendable quantized row store for one (layer, kv-head): contiguous
+/// code planes, with pages as logical `page_tokens`-row ranges (no
+/// per-page allocation; the last page may be partial).
+pub struct QuantPagedKv {
+    /// Code planes; only those selected by `format` are populated.
+    pub store: DualQuantized,
+    pub format: KvFormat,
+    pub page_tokens: usize,
+}
+
+impl QuantPagedKv {
+    pub fn new(d: usize, format: KvFormat, page_tokens: usize) -> QuantPagedKv {
+        assert!(format != KvFormat::F32, "use SlotKv for the f32 cache");
+        assert!(page_tokens > 0);
+        QuantPagedKv { store: DualQuantized::empty(d), format, page_tokens }
+    }
+
+    pub fn d(&self) -> usize {
+        self.store.d
+    }
+
+    /// Cached tokens.
+    pub fn len(&self) -> usize {
+        self.store.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.rows == 0
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.len().div_ceil(self.page_tokens)
+    }
+
+    /// Row range `[r0, r1)` of page `j` (the last page may be partial).
+    pub fn page_rows(&self, j: usize) -> (usize, usize) {
+        let r0 = j * self.page_tokens;
+        (r0, (r0 + self.page_tokens).min(self.len()))
+    }
+
+    /// Quantize and append `rows` (`[n, d]` row-major f32; keys and
+    /// values both use the no-prescale path).
+    pub fn append_rows(&mut self, rows: &[f32]) {
+        let d = self.d();
+        assert_eq!(rows.len() % d, 0, "append length {} % d {d}", rows.len());
+        let n = rows.len() / d;
+        if n == 0 {
+            return;
+        }
+        let q = dual_quant(rows, n, d, false, Granularity::PerToken);
+        self.store.append_rows(&q, self.format.has_low(), self.format.has_high());
+    }
+
+    /// Clamp a requested precision to the copies this format retains.
+    pub fn effective(&self, p: Precision) -> Precision {
+        match p {
+            Precision::High if !self.format.has_high() => Precision::Low,
+            Precision::Low if !self.format.has_low() => Precision::High,
+            p => p,
+        }
+    }
+
+    /// Dequantize rows `[r0, r1)` at `p` (after clamping) into `out`.
+    pub fn decode_rows(&self, r0: usize, r1: usize, p: Precision, out: &mut [f32]) {
+        match self.effective(p) {
+            Precision::High => self.store.decode_high_rows(r0, r1, out),
+            Precision::Low => self.store.decode_low_rows(r0, r1, out),
+        }
+    }
+
+    /// Stored bytes (code planes + scales).
+    pub fn quantized_bytes(&self) -> usize {
+        self.store.quantized_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-sequence quantized slot
+// ---------------------------------------------------------------------
+
+/// Quantized per-sequence KV cache: one [`QuantPagedKv`] per
+/// (layer, kv-head) for K and for V — the quantized sibling of
+/// [`SlotKv`], selected by `EngineConfig::kv_format`.
+pub struct QuantSlotKv {
+    pub cfg: KvQuantConfig,
+    /// `[n_layers][n_kv_heads]` key stores.
+    pub k: Vec<Vec<QuantPagedKv>>,
+    /// `[n_layers][n_kv_heads]` value stores.
+    pub v: Vec<Vec<QuantPagedKv>>,
+    /// Cached tokens (equal to every store's `len`).
+    pub pos: usize,
+}
+
+impl QuantSlotKv {
+    pub fn new(
+        cfg: KvQuantConfig,
+        n_layers: usize,
+        n_kv_heads: usize,
+        d_head: usize,
+    ) -> QuantSlotKv {
+        let mk = || {
+            (0..n_layers)
+                .map(|_| {
+                    (0..n_kv_heads)
+                        .map(|_| QuantPagedKv::new(d_head, cfg.format, cfg.page_tokens))
+                        .collect()
+                })
+                .collect()
+        };
+        QuantSlotKv { cfg, k: mk(), v: mk(), pos: 0 }
+    }
+
+    /// Quantize a prefilled f32 slot (`layout` describes its flat
+    /// `[n_layers, H_kv, C, d_head]` geometry). The engine calls this
+    /// once per admitted sequence, right after prefill.
+    pub fn from_slot(slot: &SlotKv, layout: &SlotCache, cfg: KvQuantConfig) -> QuantSlotKv {
+        let mut out = QuantSlotKv::new(cfg, layout.n_layers, layout.n_kv_heads, layout.d_head);
+        let (c, dh) = (layout.cache_len, layout.d_head);
+        for li in 0..layout.n_layers {
+            for h in 0..layout.n_kv_heads {
+                let base = (li * layout.n_kv_heads + h) * c * dh;
+                out.k[li][h].append_rows(&slot.k[base..base + slot.pos * dh]);
+                out.v[li][h].append_rows(&slot.v[base..base + slot.pos * dh]);
+            }
+        }
+        out.pos = slot.pos;
+        out
+    }
+
+    /// Append one token's K/V rows for `(layer, head)`. The caller bumps
+    /// `pos` once per token after all layers/heads appended.
+    pub fn append_token(&mut self, layer: usize, head: usize, krow: &[f32], vrow: &[f32]) {
+        self.k[layer][head].append_rows(krow);
+        self.v[layer][head].append_rows(vrow);
+    }
+
+    /// Total resident bytes of the quantized payload.
+    pub fn quantized_bytes(&self) -> usize {
+        let sum = |s: &[Vec<QuantPagedKv>]| -> usize {
+            s.iter().flatten().map(QuantPagedKv::quantized_bytes).sum()
+        };
+        sum(&self.k) + sum(&self.v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn format_parsing_round_trips() {
+        for f in [KvFormat::F32, KvFormat::Mxfp8, KvFormat::Nvfp4, KvFormat::Dual] {
+            assert_eq!(KvFormat::parse(f.name()).unwrap(), f);
+        }
+        assert_eq!(KvFormat::parse("nvfp4").unwrap(), KvFormat::Nvfp4);
+        assert!(KvFormat::parse("int8").is_err());
+        assert_eq!("128/64".parse::<KvPolicy>().unwrap(), KvPolicy { sink: 128, diag: 64 });
+        assert!("128".parse::<KvPolicy>().is_err());
+    }
+
+    #[test]
+    fn row_bytes_hits_compression_targets() {
+        // The acceptance bar: >= 3x fewer bytes/token than f32 for the
+        // single-format caches, at every realistic head width.
+        for d in [32usize, 64, 128] {
+            let f32b = KvFormat::F32.row_bytes(d);
+            assert_eq!(f32b, 4 * d);
+            assert!(f32b >= 3 * KvFormat::Nvfp4.row_bytes(d), "nvfp4 d={d}");
+            assert!(f32b >= 3 * KvFormat::Mxfp8.row_bytes(d), "mxfp8 d={d}");
+            assert!(KvFormat::Dual.row_bytes(d) < f32b, "dual d={d}");
+        }
+        // Exact formulas at d=32 (the golden fixture's width).
+        assert_eq!(KvFormat::Nvfp4.row_bytes(32), 16 + 2 + 4);
+        assert_eq!(KvFormat::Mxfp8.row_bytes(32), 32 + 1 + 4);
+        assert_eq!(KvFormat::Dual.row_bytes(32), 16 + 2 + 32 + 1 + 4);
+    }
+
+    #[test]
+    fn policy_schedule_matches_dma_phases() {
+        let p = KvPolicy { sink: 8, diag: 16 };
+        let sched = p.page_precisions(64, 8);
+        assert_eq!(sched.len(), 8);
+        assert_eq!(sched[0], Precision::High); // sink page
+        assert_eq!(sched[6], Precision::High); // frontier window
+        assert_eq!(sched[7], Precision::High);
+        assert!(sched[1..6].iter().all(|&x| x == Precision::Low));
+
+        // diag=0: all low. Short cache: all high.
+        assert!(KvPolicy { sink: 0, diag: 0 }
+            .page_precisions(64, 8)
+            .iter()
+            .all(|&x| x == Precision::Low));
+        assert!(KvPolicy { sink: 0, diag: 64 }
+            .page_precisions(16, 8)
+            .iter()
+            .all(|&x| x == Precision::High));
+        // Sink rounds up to whole pages.
+        let s = KvPolicy { sink: 9, diag: 8 }.page_precisions(64, 8);
+        assert_eq!(&s[..2], &[Precision::High, Precision::High]);
+    }
+
+    #[test]
+    fn append_chunking_is_bit_invariant() {
+        let (n, d) = (21usize, 32usize);
+        let x = rows(n, d, 3);
+        let mut bulk = QuantPagedKv::new(d, KvFormat::Dual, 8);
+        bulk.append_rows(&x);
+        let mut steps = QuantPagedKv::new(d, KvFormat::Dual, 8);
+        for r in 0..n {
+            steps.append_rows(&x[r * d..(r + 1) * d]);
+        }
+        assert_eq!(steps.len(), n);
+        assert_eq!(steps.store.packed_fp4, bulk.store.packed_fp4);
+        assert_eq!(steps.store.s4_codes, bulk.store.s4_codes);
+        assert_eq!(steps.store.fp8_codes, bulk.store.fp8_codes);
+        assert_eq!(steps.store.s8_codes, bulk.store.s8_codes);
+        assert_eq!(steps.store.sq, bulk.store.sq);
+    }
+
+    #[test]
+    fn single_format_stores_clamp_and_shrink() {
+        let (n, d) = (16usize, 32usize);
+        let x = rows(n, d, 4);
+        let mut lo = QuantPagedKv::new(d, KvFormat::Nvfp4, 8);
+        lo.append_rows(&x);
+        assert_eq!(lo.store.fp8_codes.len(), 0);
+        assert_eq!(lo.effective(Precision::High), Precision::Low);
+        assert_eq!(lo.quantized_bytes(), n * KvFormat::Nvfp4.row_bytes(d));
+
+        let mut hi = QuantPagedKv::new(d, KvFormat::Mxfp8, 8);
+        hi.append_rows(&x);
+        assert_eq!(hi.store.packed_fp4.len(), 0);
+        assert_eq!(hi.effective(Precision::Low), Precision::High);
+        assert_eq!(hi.quantized_bytes(), n * KvFormat::Mxfp8.row_bytes(d));
+
+        // High decode of the high-only store equals the dual store's.
+        let mut dual = QuantPagedKv::new(d, KvFormat::Dual, 8);
+        dual.append_rows(&x);
+        let mut a = vec![0f32; n * d];
+        let mut b = vec![0f32; n * d];
+        hi.decode_rows(0, n, Precision::High, &mut a);
+        dual.decode_rows(0, n, Precision::High, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn partial_page_geometry() {
+        let mut s = QuantPagedKv::new(32, KvFormat::Dual, 8);
+        s.append_rows(&rows(19, 32, 5));
+        assert_eq!(s.n_pages(), 3);
+        assert_eq!(s.page_rows(0), (0, 8));
+        assert_eq!(s.page_rows(2), (16, 19));
+    }
+
+    #[test]
+    fn from_slot_quantizes_only_live_rows() {
+        let layout = SlotCache::new(2, 2, 16, 32);
+        let mut slot = layout.empty_slot();
+        let live = 5usize;
+        let mut rng = Rng::new(9);
+        for li in 0..2 {
+            for h in 0..2 {
+                let base = (li * 2 + h) * 16 * 32;
+                for e in &mut slot.k[base..base + live * 32] {
+                    *e = rng.normal() as f32;
+                }
+                for e in &mut slot.v[base..base + live * 32] {
+                    *e = rng.normal() as f32;
+                }
+            }
+        }
+        slot.pos = live;
+        let q = QuantSlotKv::from_slot(&slot, &layout, KvQuantConfig::default());
+        assert_eq!(q.pos, live);
+        for li in 0..2 {
+            for h in 0..2 {
+                assert_eq!(q.k[li][h].len(), live);
+                assert_eq!(q.v[li][h].len(), live);
+            }
+        }
+        // 2 layers x 2 heads x (K + V) x live rows x dual row bytes.
+        assert_eq!(
+            q.quantized_bytes(),
+            2 * 2 * 2 * live * KvFormat::Dual.row_bytes(32)
+        );
+    }
+
+    #[test]
+    fn append_token_tracks_slot_growth() {
+        let cfg = KvQuantConfig::new(KvFormat::Nvfp4, KvPolicy::default());
+        let mut q = QuantSlotKv::new(cfg, 1, 2, 32);
+        let kr = rows(1, 32, 11);
+        let vr = rows(1, 32, 12);
+        for h in 0..2 {
+            q.append_token(0, h, &kr, &vr);
+        }
+        q.pos += 1;
+        assert_eq!(q.pos, 1);
+        assert_eq!(q.k[0][1].len(), 1);
+        assert_eq!(q.quantized_bytes(), 2 * 2 * KvFormat::Nvfp4.row_bytes(32));
+    }
+}

@@ -11,18 +11,28 @@
 //! * **L3 (this crate)** — owns the request path: PJRT runtime
 //!   ([`runtime`]), continuous batching and prefill/decode scheduling
 //!   ([`coordinator`]), slotted/paged KV-cache management ([`kvcache`]),
-//!   a TCP JSON-lines server ([`server`]).
+//!   an MXFP-quantized paged KV cache with tile-precision-aware decode
+//!   ([`kvquant`], [`attention::paged`]), a TCP JSON-lines server
+//!   ([`server`]).
 //!
 //! The paper's numerics are mirrored bit-exactly in Rust ([`mxfp`],
 //! [`attention`]) so every table and figure of the evaluation can be
 //! regenerated without a GPU ([`perfmodel`] projects measured structure
 //! onto B200 throughput; see DESIGN.md §4 for the substitution map).
+//!
+//! The serving cache has two storage backends, selected by
+//! `EngineConfig::kv_format`: the full-precision batch slots the bucketed
+//! PJRT executables require, and the quantized paged store ([`kvquant`])
+//! that keeps K/V in MXFP8/NVFP4 pages end to end — cutting cache bytes
+//! ~3–6x and decoding each page at the precision the paper's
+//! diagonal-tile policy assigns (sink + causal frontier high, body low).
 
 pub mod attention;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
 pub mod kvcache;
+pub mod kvquant;
 pub mod metrics;
 pub mod model;
 pub mod mxfp;

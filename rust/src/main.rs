@@ -10,6 +10,7 @@ use dma::config::{EngineConfig, MetaConfig};
 use dma::coordinator::engine::EngineHandle;
 use dma::coordinator::router::{Policy, Router};
 use dma::runtime::host::HostBackend;
+#[cfg(feature = "pjrt")]
 use dma::runtime::pjrt::PjrtBackend;
 use dma::runtime::ModelBackend;
 use dma::util::cli::Args;
@@ -19,7 +20,8 @@ use std::sync::Arc;
 fn usage() -> ! {
     eprintln!(
         "usage: dma <serve|eval|smoke|info> [--artifacts DIR] [--addr H:P] \
-         [--workers N] [--host-backend] [--seed S]"
+         [--workers N] [--host-backend] [--seed S] \
+         [--kv-format f32|mxfp8-high|nvfp4-low|dual] [--kv-policy SINK/DIAG]"
     );
     std::process::exit(2);
 }
@@ -31,9 +33,22 @@ fn make_backend(
     if host {
         Ok(Box::new(HostBackend::for_tests()))
     } else {
-        let meta = MetaConfig::load(artifacts)?;
-        Ok(Box::new(PjrtBackend::new(meta)?))
+        pjrt_backend(artifacts)
     }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(artifacts: &str) -> dma::Result<Box<dyn ModelBackend>> {
+    let meta = MetaConfig::load(artifacts)?;
+    Ok(Box::new(PjrtBackend::new(meta)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_artifacts: &str) -> dma::Result<Box<dyn ModelBackend>> {
+    anyhow::bail!(
+        "dma was built without the `pjrt` feature; rebuild with \
+         `--features pjrt` or pass --host-backend"
+    )
 }
 
 fn cmd_serve(args: &Args) -> dma::Result<()> {
@@ -46,9 +61,24 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
     } else {
         MetaConfig::load(&artifacts)?.tokens.eos
     };
+    let kv_format = match args.get("kv-format") {
+        Some(s) => dma::kvquant::KvFormat::parse(s)?,
+        None => dma::kvquant::KvFormat::F32,
+    };
+    if kv_format != dma::kvquant::KvFormat::F32 && !host {
+        anyhow::bail!(
+            "--kv-format {} requires --host-backend (PJRT executables take f32 caches)",
+            kv_format.name()
+        );
+    }
     let cfg = EngineConfig {
         artifact_dir: artifacts.clone().into(),
         max_new_tokens: args.usize_or("max-new-tokens", 32),
+        kv_format,
+        kv_precision_policy: match args.get("kv-policy") {
+            Some(s) => dma::kvquant::KvPolicy::parse(s)?,
+            None => dma::kvquant::KvPolicy::default(),
+        },
         ..Default::default()
     };
     let handles: Vec<EngineHandle> = (0..workers)
@@ -60,7 +90,11 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         .collect();
     let router = Arc::new(Router::new(handles, Policy::LeastLoaded));
     let stop = Arc::new(AtomicBool::new(false));
-    println!("dma: serving on {addr} ({} worker(s))", workers);
+    println!(
+        "dma: serving on {addr} ({} worker(s), kv cache {})",
+        workers,
+        cfg.kv_format.name()
+    );
     dma::server::serve(&addr, router, stop, |a| println!("dma: bound {a}"))
 }
 
@@ -74,12 +108,9 @@ fn cmd_eval(args: &Args) -> dma::Result<()> {
             pad: 0, bos: 1, sep: 2, qry: 3, mrk: 4, eos: 5,
             payload_start: 6, vocab: 64,
         };
-        (Box::new(be), ids, vec![(2usize, 32usize)])
+        (Box::new(be) as Box<dyn ModelBackend>, ids, vec![(2usize, 32usize)])
     } else {
-        let meta = MetaConfig::load(&artifacts)?;
-        let ids = meta.tokens;
-        let shapes = meta.eval_shapes.clone();
-        (Box::new(PjrtBackend::new(meta)?), ids, shapes)
+        pjrt_eval_parts(&artifacts)?
     };
     println!("Table 3 (synthetic LongBench proxy) — native vs DMA");
     println!("{:<16} {:>8} {:>8}", "task", "native", "dma");
@@ -95,6 +126,27 @@ fn cmd_eval(args: &Args) -> dma::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
+fn pjrt_eval_parts(
+    artifacts: &str,
+) -> dma::Result<(Box<dyn ModelBackend>, dma::config::TokenIds, Vec<(usize, usize)>)> {
+    let meta = MetaConfig::load(artifacts)?;
+    let ids = meta.tokens;
+    let shapes = meta.eval_shapes.clone();
+    Ok((Box::new(PjrtBackend::new(meta)?), ids, shapes))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_eval_parts(
+    _artifacts: &str,
+) -> dma::Result<(Box<dyn ModelBackend>, dma::config::TokenIds, Vec<(usize, usize)>)> {
+    anyhow::bail!(
+        "dma was built without the `pjrt` feature; rebuild with \
+         `--features pjrt` or pass --host-backend"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_smoke(args: &Args) -> dma::Result<()> {
     let artifacts = args.get_or("artifacts", "artifacts");
     let meta = MetaConfig::load(&artifacts)?;
@@ -106,6 +158,11 @@ fn cmd_smoke(args: &Args) -> dma::Result<()> {
     anyhow::ensure!(v == vec![5., 5., 9., 9.], "unexpected smoke output {v:?}");
     println!("smoke OK: {v:?}");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_smoke(_args: &Args) -> dma::Result<()> {
+    anyhow::bail!("the smoke subcommand requires the `pjrt` feature")
 }
 
 fn cmd_info(args: &Args) -> dma::Result<()> {

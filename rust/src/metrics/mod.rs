@@ -4,6 +4,11 @@
 //! Definitions match the paper's usage: metrics are computed between a
 //! reference tensor (full-precision attention scores or outputs) and its
 //! quantized counterpart, flattened.
+//!
+//! Also home to the serving-side KV-cache counters: per-precision page
+//! decode hits ([`KvPageStats`]) and byte accounting
+//! ([`compression_ratio`]) for the quantized paged cache
+//! ([`crate::kvquant`]).
 
 /// Cosine similarity of two flat vectors.
 pub fn cos_sim(a: &[f32], b: &[f32]) -> f64 {
@@ -77,6 +82,45 @@ pub fn similarity(reference: &[f32], quantized: &[f32]) -> SimilarityRow {
     }
 }
 
+/// Per-precision page-decode counters for the quantized paged KV cache:
+/// how many cache pages were dequantized MXFP8-high vs NVFP4-low during
+/// decode attention. Reported by the engine alongside cache bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvPageStats {
+    pub high_pages: u64,
+    pub low_pages: u64,
+}
+
+impl KvPageStats {
+    pub fn total(&self) -> u64 {
+        self.high_pages + self.low_pages
+    }
+
+    /// Fraction of page decodes served at high precision (the serving
+    /// analogue of the paper's "Bithigh%" column).
+    pub fn high_fraction(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.high_pages as f64 / self.total() as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: KvPageStats) {
+        self.high_pages += other.high_pages;
+        self.low_pages += other.low_pages;
+    }
+}
+
+/// Cache compression: f32 bytes over quantized bytes for the same token
+/// count (>= 1 for every quantized format; ~6x for `nvfp4-low`).
+pub fn compression_ratio(f32_bytes: usize, quantized_bytes: usize) -> f64 {
+    if quantized_bytes == 0 {
+        return f64::INFINITY;
+    }
+    f32_bytes as f64 / quantized_bytes as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,5 +179,23 @@ mod tests {
         assert_eq!(cos_sim(&z, &z), 1.0);
         assert_eq!(rel_l1(&z, &z), 0.0);
         assert!(rel_l1(&z, &[1.0, 0.0, 0.0, 0.0]).is_infinite());
+    }
+
+    #[test]
+    fn kv_page_stats_accounting() {
+        let mut s = KvPageStats::default();
+        assert_eq!(s.total(), 0);
+        assert_eq!(s.high_fraction(), 0.0);
+        s.merge(KvPageStats { high_pages: 3, low_pages: 5 });
+        s.merge(KvPageStats { high_pages: 1, low_pages: 7 });
+        assert_eq!(s.total(), 16);
+        assert!((s.high_fraction() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compression_ratio_bounds() {
+        assert!((compression_ratio(1024, 176) - 1024.0 / 176.0).abs() < 1e-12);
+        assert_eq!(compression_ratio(4, 4), 1.0);
+        assert!(compression_ratio(1, 0).is_infinite());
     }
 }

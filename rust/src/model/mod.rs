@@ -339,25 +339,132 @@ impl CpuModel {
                 *xd += pd;
             }
 
-            let mut h2 = vec![0f32; cfg.d_model];
-            Self::rmsnorm(&x, lw.ln2, &mut h2);
-            let h2 = Tensor::new(vec![1, cfg.d_model], h2);
-            let a = Self::dense(&h2, lw.w1);
-            let b = Self::dense(&h2, lw.w3);
-            let mut gated = Tensor::zeros(a.shape.clone());
-            for i in 0..a.data.len() {
-                gated.data[i] = Self::silu(a.data[i]) * b.data[i];
-            }
-            let mlp = Self::dense(&gated, lw.w2);
-            for (xd, md) in x.iter_mut().zip(&mlp.data) {
-                *xd += md;
-            }
+            self.mlp_block(&lw, &mut x);
         }
         kv.len = pos + 1;
 
+        self.unembed(&x)
+    }
+
+    /// One decode step over an MXFP-quantized paged KV cache
+    /// ([`crate::kvquant::QuantSlotKv`]): the new token's K/V rows are
+    /// quantized on append, and attention runs
+    /// [`crate::attention::paged::dma_attention_paged_heads`] over the
+    /// cache pages with the slot's precision policy, grouping the query
+    /// heads of each kv head so pages decode once per group — K/V never
+    /// materialize in full precision. Appends to the cache and returns
+    /// logits [vocab].
+    ///
+    /// NOTE: the layer body (projections, RoPE base, SwiGLU) mirrors
+    /// [`Self::decode_step`]; changes to one must be applied to both.
+    pub fn decode_step_paged(
+        &self,
+        token: i32,
+        kv: &mut crate::kvquant::QuantSlotKv,
+        stats: &mut crate::metrics::KvPageStats,
+    ) -> crate::Result<Vec<f32>> {
+        use crate::mxfp::block::Granularity;
+
+        let cfg = &self.cfg;
+        let pos = kv.pos;
+        anyhow::ensure!((token as usize) < cfg.vocab, "token {token} out of range");
+        let embed = self.weights.get("embed")?;
+        let mut x: Vec<f32> =
+            embed.data[token as usize * cfg.d_model..(token as usize + 1) * cfg.d_model].to_vec();
+        let n_rep = cfg.n_heads / cfg.n_kv_heads;
+        let policy = kv.cfg.policy;
+
+        for li in 0..cfg.n_layers {
+            let lw = self.layer(li)?;
+            let mut h = vec![0f32; cfg.d_model];
+            Self::rmsnorm(&x, lw.ln1, &mut h);
+            let h = Tensor::new(vec![1, cfg.d_model], h);
+            let q_all = Self::dense(&h, lw.wq);
+            let k_all = Self::dense(&h, lw.wk);
+            let v_all = Self::dense(&h, lw.wv);
+
+            // Quantize-on-append: the new token's post-RoPE K row and V
+            // row go straight into the paged stores.
+            let mut vrow = vec![0f32; cfg.d_head];
+            for hkv in 0..cfg.n_kv_heads {
+                let mut kh = Tensor::zeros(vec![1, cfg.d_head]);
+                for c in 0..cfg.d_head {
+                    kh.set(0, c, k_all.at(0, hkv * cfg.d_head + c));
+                    vrow[c] = v_all.at(0, hkv * cfg.d_head + c);
+                }
+                Self::rope(&mut kh, pos, 10000.0);
+                kv.append_token(li, hkv, kh.row(0), &vrow);
+            }
+
+            let mut o_all = Tensor::zeros(vec![1, cfg.n_heads * cfg.d_head]);
+            for kvh in 0..cfg.n_kv_heads {
+                // Group the n_rep query heads that share this kv head
+                // into one frontier tile so each cache page is decoded
+                // once per group, not once per head.
+                let mut qh = Tensor::zeros(vec![n_rep, cfg.d_head]);
+                for r in 0..n_rep {
+                    let hq = kvh * n_rep + r;
+                    for c in 0..cfg.d_head {
+                        qh.set(r, c, q_all.at(0, hq * cfg.d_head + c));
+                    }
+                }
+                // RoPE per head row at the shared position `pos`.
+                for r in 0..n_rep {
+                    let mut row = Tensor::new(vec![1, cfg.d_head], qh.row(r).to_vec());
+                    Self::rope(&mut row, pos, 10000.0);
+                    qh.row_mut(r).copy_from_slice(row.row(0));
+                }
+                // Dual-quantize the head group (softmax scale folded,
+                // base-2) and attend page-by-page over the cache.
+                let qq = crate::mxfp::fused::dual_quant(
+                    &qh.data, n_rep, cfg.d_head, true, Granularity::PerToken);
+                let o = crate::attention::paged::dma_attention_paged_heads(
+                    &qq, &kv.k[li][kvh], &kv.v[li][kvh], &policy, stats);
+                for r in 0..n_rep {
+                    let hq = kvh * n_rep + r;
+                    for c in 0..cfg.d_head {
+                        o_all.set(0, hq * cfg.d_head + c, o.at(r, c));
+                    }
+                }
+            }
+            let proj = Self::dense(&o_all, lw.wo);
+            for (xd, pd) in x.iter_mut().zip(&proj.data) {
+                *xd += pd;
+            }
+
+            self.mlp_block(&lw, &mut x);
+        }
+        kv.pos = pos + 1;
+
+        self.unembed(&x)
+    }
+
+    /// Post-attention SwiGLU MLP block for one token row, residual
+    /// included (shared by both decode paths).
+    fn mlp_block(&self, lw: &LayerW<'_>, x: &mut [f32]) {
+        let cfg = &self.cfg;
+        let mut h2 = vec![0f32; cfg.d_model];
+        Self::rmsnorm(x, lw.ln2, &mut h2);
+        let h2 = Tensor::new(vec![1, cfg.d_model], h2);
+        let a = Self::dense(&h2, lw.w1);
+        let b = Self::dense(&h2, lw.w3);
+        let mut gated = Tensor::zeros(a.shape.clone());
+        for i in 0..a.data.len() {
+            gated.data[i] = Self::silu(a.data[i]) * b.data[i];
+        }
+        let mlp = Self::dense(&gated, lw.w2);
+        for (xd, md) in x.iter_mut().zip(&mlp.data) {
+            *xd += md;
+        }
+    }
+
+    /// Final norm + tied unembedding of one hidden row.
+    fn unembed(&self, x: &[f32]) -> crate::Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let embed = self.weights.get("embed")?;
         let ln_f = self.weights.get("ln_f")?;
         let mut xn = vec![0f32; cfg.d_model];
-        Self::rmsnorm(&x, &ln_f.data, &mut xn);
+        Self::rmsnorm(x, &ln_f.data, &mut xn);
         let mut logits = vec![0f32; cfg.vocab];
         for (vtok, l) in logits.iter_mut().enumerate() {
             let erow = &embed.data[vtok * cfg.d_model..(vtok + 1) * cfg.d_model];
@@ -517,6 +624,58 @@ mod tests {
             }
         }
         assert!(agree >= 28, "argmax agreement {agree}/32");
+    }
+
+    #[test]
+    fn paged_quantized_decode_tracks_f32_decode() {
+        use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv};
+        let m = model();
+        let toks: Vec<i32> = (0..16).map(|i| ((i * 7) % 60) + 1).collect();
+
+        // f32 path.
+        let mut kv = KvState::new(&m.cfg, 64);
+        m.prefill(&toks, AttnMode::Native, &mut kv).unwrap();
+
+        // Quantized path seeded from the same prefill cache.
+        let mut kv2 = KvState::new(&m.cfg, 64);
+        m.prefill(&toks, AttnMode::Native, &mut kv2).unwrap();
+        let qcfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 8,
+            policy: KvPolicy { sink: 8, diag: 16 },
+        };
+        let mut qkv = QuantSlotKv::new(qcfg, m.cfg.n_layers, m.cfg.n_kv_heads, m.cfg.d_head);
+        for li in 0..m.cfg.n_layers {
+            for h in 0..m.cfg.n_kv_heads {
+                qkv.k[li][h].append_rows(&kv2.k[li][h].data[..16 * m.cfg.d_head]);
+                qkv.v[li][h].append_rows(&kv2.v[li][h].data[..16 * m.cfg.d_head]);
+            }
+        }
+        qkv.pos = 16;
+
+        let mut stats = crate::metrics::KvPageStats::default();
+        let mut agree = 0;
+        let mut next_f32 = 7i32;
+        let mut next_q = 7i32;
+        for _ in 0..4 {
+            let lf = m.decode_step(next_f32, &mut kv).unwrap();
+            let lq = m.decode_step_paged(next_q, &mut qkv, &mut stats).unwrap();
+            assert!(crate::metrics::cos_sim(&lf, &lq) > 0.97);
+            next_f32 = argmax(&lf);
+            next_q = argmax(&lq);
+            if next_f32 == next_q {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 3, "argmax agreement {agree}/4");
+        assert_eq!(qkv.pos, 20);
+        assert!(stats.total() > 0);
+        // Dual cache stores both copies of K and V for every token.
+        assert_eq!(
+            qkv.quantized_bytes(),
+            2 * m.cfg.n_layers * m.cfg.n_kv_heads * 20
+                * KvFormat::Dual.row_bytes(m.cfg.d_head)
+        );
     }
 
     #[test]

@@ -41,35 +41,85 @@ impl DualQuantized {
             + self.sq.len() * 4
     }
 
-    /// Dequantize the NVFP4 low-precision copy into `out` ([rows, d]).
-    pub fn dequant_low(&self, out: &mut [f32]) {
-        let (rows, d) = (self.rows, self.d);
+    /// Dequantize rows `[r0, r1)` of the NVFP4 low-precision copy into
+    /// `out` (`[(r1 - r0), d]`, row-major). This is the tile decoder the
+    /// DMA attention loop and the paged KV cache run right before each
+    /// matmul — no full-tensor materialization.
+    pub fn decode_low_rows(&self, r0: usize, r1: usize, out: &mut [f32]) {
+        let d = self.d;
+        debug_assert!(r1 <= self.rows && out.len() >= (r1 - r0) * d);
         let mut codes = vec![0u8; d];
-        for r in 0..rows {
+        for (rr, r) in (r0..r1).enumerate() {
             pack::unpack_row(&self.packed_fp4[r * d / 2..(r + 1) * d / 2], &mut codes);
             let sq = self.sq[r];
             for b in 0..d / NVFP4_BLOCK {
                 let s = fp8::decode_e4m3(self.s4_codes[r * d / NVFP4_BLOCK + b]) * sq;
                 for i in 0..NVFP4_BLOCK {
-                    out[r * d + b * NVFP4_BLOCK + i] =
+                    out[rr * d + b * NVFP4_BLOCK + i] =
                         e2m1::decode(codes[b * NVFP4_BLOCK + i]) * s;
                 }
             }
         }
     }
 
-    /// Dequantize the MXFP8 high-precision copy into `out` ([rows, d]).
-    pub fn dequant_high(&self, out: &mut [f32]) {
-        let (rows, d) = (self.rows, self.d);
-        for r in 0..rows {
+    /// Dequantize rows `[r0, r1)` of the MXFP8 high-precision copy into
+    /// `out` (`[(r1 - r0), d]`, row-major).
+    pub fn decode_high_rows(&self, r0: usize, r1: usize, out: &mut [f32]) {
+        let d = self.d;
+        debug_assert!(r1 <= self.rows && out.len() >= (r1 - r0) * d);
+        for (rr, r) in (r0..r1).enumerate() {
             let sq = self.sq[r];
             for b in 0..d / MXFP_BLOCK {
                 let s = e8m0::decode(self.s8_codes[r * d / MXFP_BLOCK + b]) * sq;
                 for i in 0..MXFP_BLOCK {
-                    let idx = r * d + b * MXFP_BLOCK + i;
-                    out[idx] = fp8::decode_e4m3(self.fp8_codes[idx]) * s;
+                    out[rr * d + b * MXFP_BLOCK + i] =
+                        fp8::decode_e4m3(self.fp8_codes[r * d + b * MXFP_BLOCK + i]) * s;
                 }
             }
+        }
+    }
+
+    /// Dequantize the NVFP4 low-precision copy into `out` ([rows, d]).
+    pub fn dequant_low(&self, out: &mut [f32]) {
+        self.decode_low_rows(0, self.rows, out);
+    }
+
+    /// Dequantize the MXFP8 high-precision copy into `out` ([rows, d]).
+    pub fn dequant_high(&self, out: &mut [f32]) {
+        self.decode_high_rows(0, self.rows, out);
+    }
+
+    /// Append all rows of `other` (same `d`), keeping only the planes
+    /// selected by `keep_low` / `keep_high`. The per-token scale plane is
+    /// always kept (both copies share it). Because `S_q` is per-token,
+    /// appending in any chunking is bit-identical to quantizing the whole
+    /// matrix at once — the invariant behind the appendable KV cache
+    /// ([`crate::kvquant`]).
+    pub fn append_rows(&mut self, other: &DualQuantized, keep_low: bool, keep_high: bool) {
+        assert_eq!(other.d, self.d, "row width mismatch");
+        if keep_low {
+            self.packed_fp4.extend_from_slice(&other.packed_fp4);
+            self.s4_codes.extend_from_slice(&other.s4_codes);
+        }
+        if keep_high {
+            self.fp8_codes.extend_from_slice(&other.fp8_codes);
+            self.s8_codes.extend_from_slice(&other.s8_codes);
+        }
+        self.sq.extend_from_slice(&other.sq);
+        self.rows += other.rows;
+    }
+
+    /// An empty store of width `d` ready for [`Self::append_rows`].
+    pub fn empty(d: usize) -> DualQuantized {
+        assert_eq!(d % MXFP_BLOCK, 0, "d={d} must be a multiple of 32");
+        DualQuantized {
+            rows: 0,
+            d,
+            packed_fp4: Vec::new(),
+            s4_codes: Vec::new(),
+            fp8_codes: Vec::new(),
+            s8_codes: Vec::new(),
+            sq: Vec::new(),
         }
     }
 }
@@ -251,6 +301,70 @@ mod tests {
         let qn = dual_quant(&x, 64, d, false, Granularity::PerTensor);
         assert_eq!(qt.packed_fp4, qn.packed_fp4);
         assert_eq!(qt.fp8_codes, qn.fp8_codes);
+    }
+
+    #[test]
+    fn decode_rows_matches_full_dequant() {
+        let (rows, d) = (24usize, 64usize);
+        let x = randn(rows, d, 11, 1.5);
+        let q = dual_quant(&x, rows, d, false, Granularity::PerToken);
+        let mut low = vec![0f32; rows * d];
+        let mut high = vec![0f32; rows * d];
+        q.dequant_low(&mut low);
+        q.dequant_high(&mut high);
+        // Any sub-range decode must equal the corresponding slice of the
+        // full decode, bit for bit.
+        for (r0, r1) in [(0usize, 5usize), (5, 24), (7, 8), (16, 24)] {
+            let n = r1 - r0;
+            let mut lo = vec![0f32; n * d];
+            let mut hi = vec![0f32; n * d];
+            q.decode_low_rows(r0, r1, &mut lo);
+            q.decode_high_rows(r0, r1, &mut hi);
+            assert_eq!(lo, low[r0 * d..r1 * d].to_vec(), "low [{r0}, {r1})");
+            assert_eq!(hi, high[r0 * d..r1 * d].to_vec(), "high [{r0}, {r1})");
+        }
+    }
+
+    #[test]
+    fn append_rows_chunking_invariant() {
+        // Appending in chunks must be bit-identical to one-shot
+        // quantization (per-token S_q).
+        let (rows, d) = (21usize, 32usize);
+        let x = randn(rows, d, 12, 2.0);
+        let bulk = dual_quant(&x, rows, d, false, Granularity::PerToken);
+        let mut acc = DualQuantized::empty(d);
+        for (r0, r1) in [(0usize, 9usize), (9, 10), (10, 21)] {
+            let chunk = dual_quant(&x[r0 * d..r1 * d], r1 - r0, d, false,
+                                   Granularity::PerToken);
+            acc.append_rows(&chunk, true, true);
+        }
+        assert_eq!(acc.rows, rows);
+        assert_eq!(acc.packed_fp4, bulk.packed_fp4);
+        assert_eq!(acc.s4_codes, bulk.s4_codes);
+        assert_eq!(acc.fp8_codes, bulk.fp8_codes);
+        assert_eq!(acc.s8_codes, bulk.s8_codes);
+        assert_eq!(acc.sq, bulk.sq);
+    }
+
+    #[test]
+    fn append_rows_partial_planes() {
+        let (rows, d) = (8usize, 32usize);
+        let x = randn(rows, d, 13, 1.0);
+        let q = dual_quant(&x, rows, d, false, Granularity::PerToken);
+        let mut low_only = DualQuantized::empty(d);
+        low_only.append_rows(&q, true, false);
+        assert_eq!(low_only.fp8_codes.len(), 0);
+        assert_eq!(low_only.packed_fp4, q.packed_fp4);
+        assert_eq!(low_only.quantized_bytes(),
+                   q.packed_fp4.len() + q.s4_codes.len() + rows * 4);
+        let mut high_only = DualQuantized::empty(d);
+        high_only.append_rows(&q, false, true);
+        assert_eq!(high_only.packed_fp4.len(), 0);
+        let mut out = vec![0f32; rows * d];
+        high_only.decode_high_rows(0, rows, &mut out);
+        let mut expect = vec![0f32; rows * d];
+        q.dequant_high(&mut expect);
+        assert_eq!(out, expect);
     }
 
     #[test]

@@ -5,7 +5,8 @@
 
 use super::{ModelBackend, PrefillOut};
 use crate::config::ModelConfig;
-use crate::kvcache::{SlotCache, SlotKv};
+use crate::kvcache::{SeqKv, SlotCache, SlotKv};
+use crate::metrics::KvPageStats;
 use crate::model::{AttnMode, CpuModel, KvState};
 
 pub struct HostBackend {
@@ -13,6 +14,8 @@ pub struct HostBackend {
     slots: SlotCache,
     cache_len: usize,
     buckets: Vec<usize>,
+    /// Cumulative page-decode counters from quantized-cache decodes.
+    kv_stats: KvPageStats,
 }
 
 impl HostBackend {
@@ -23,6 +26,7 @@ impl HostBackend {
             model,
             cache_len,
             buckets: vec![1, 2, 4],
+            kv_stats: KvPageStats::default(),
         }
     }
 
@@ -81,16 +85,32 @@ impl ModelBackend for HostBackend {
     fn decode(
         &mut self,
         tokens: &[i32],
-        slots: &mut [Option<&mut SlotKv>],
+        slots: &mut [Option<&mut SeqKv>],
     ) -> crate::Result<Vec<f32>> {
         let vocab = self.cfg().vocab;
         let mut out = vec![0f32; slots.len() * vocab];
         for (i, slot) in slots.iter_mut().enumerate() {
             let Some(s) = slot else { continue };
-            let mut st = self.slot_to_state(s);
-            let logits = self.model.decode_step(tokens[i], &mut st)?;
+            let logits = match &mut **s {
+                SeqKv::F32(sl) => {
+                    let mut st = self.slot_to_state(sl);
+                    let logits = self.model.decode_step(tokens[i], &mut st)?;
+                    *sl = self.state_to_slot(&st);
+                    logits
+                }
+                SeqKv::Quant(qs) => {
+                    // Mirror the f32 path's capacity guard (KvState checks
+                    // this internally; the paged store grows on demand).
+                    anyhow::ensure!(
+                        qs.pos < self.cache_len,
+                        "cache full ({}/{})",
+                        qs.pos,
+                        self.cache_len
+                    );
+                    self.model.decode_step_paged(tokens[i], qs, &mut self.kv_stats)?
+                }
+            };
             out[i * vocab..(i + 1) * vocab].copy_from_slice(&logits);
-            **s = self.state_to_slot(&st);
         }
         Ok(out)
     }
@@ -127,6 +147,15 @@ impl ModelBackend for HostBackend {
         self.buckets.clone()
     }
 
+    fn kv_dims(&self) -> (usize, usize, usize) {
+        let cfg = self.cfg();
+        (cfg.n_layers, cfg.n_kv_heads, cfg.d_head)
+    }
+
+    fn kv_page_stats(&self) -> KvPageStats {
+        self.kv_stats
+    }
+
     fn name(&self) -> &'static str {
         "host-cpu"
     }
@@ -155,23 +184,57 @@ mod tests {
         }
 
         // Decode continues correctly through slot round-trips.
-        let mut slot = out.slot;
+        let mut slot = SeqKv::F32(out.slot);
         let logits = be.decode(&[7], &mut [Some(&mut slot)]).unwrap();
         let l2 = m.decode_step(7, &mut kv).unwrap();
         for (a, b) in logits.iter().zip(&l2) {
             assert!((a - b).abs() < 1e-4);
         }
-        assert_eq!(slot.pos, 17);
+        assert_eq!(slot.pos(), 17);
     }
 
     #[test]
     fn batch_decode_with_padding_slots() {
         let mut be = HostBackend::for_tests();
         let o1 = be.prefill(&[1, 2, 3, 4], false).unwrap();
-        let mut s1 = o1.slot;
+        let mut s1 = SeqKv::F32(o1.slot);
         let logits = be.decode(&[9, 0], &mut [Some(&mut s1), None]).unwrap();
         assert_eq!(logits.len(), 2 * 64);
-        assert_eq!(s1.pos, 5);
+        assert_eq!(s1.pos(), 5);
+    }
+
+    #[test]
+    fn quantized_decode_path_runs_and_counts_pages() {
+        use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv};
+        let mut be = HostBackend::for_tests();
+        let toks: Vec<i32> = (0..28).map(|i| ((i * 7) % 60) + 1).collect();
+        let out = be.prefill(&toks, false).unwrap();
+        let qcfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 8,
+            policy: KvPolicy { sink: 8, diag: 8 },
+        };
+        let mut slot = SeqKv::Quant(QuantSlotKv::from_slot(&out.slot, &be.slots, qcfg));
+        assert_eq!(slot.pos(), 28);
+
+        let logits = be.decode(&[7], &mut [Some(&mut slot)]).unwrap();
+        assert_eq!(logits.len(), 64);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(slot.pos(), 29);
+        // 2 layers x 2 heads x ceil(29/8) pages of K decoded; at 29
+        // tokens the sink page and the frontier pages are high, page 1
+        // sits in the low body.
+        let stats = be.kv_page_stats();
+        assert_eq!(stats.total(), 2 * 2 * 4);
+        assert!(stats.high_pages > 0 && stats.low_pages > 0, "{stats:?}");
+
+        // Quantized decode tracks the f32 path closely enough to agree on
+        // the argmax token most of the time; at minimum it must be a
+        // plausible distribution (finite, non-degenerate).
+        let mut f32_slot = SeqKv::F32(be.prefill(&toks, false).unwrap().slot);
+        let f32_logits = be.decode(&[7], &mut [Some(&mut f32_slot)]).unwrap();
+        let cos = crate::metrics::cos_sim(&logits, &f32_logits);
+        assert!(cos > 0.95, "quantized decode diverged: cos {cos}");
     }
 
     #[test]

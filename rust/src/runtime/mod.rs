@@ -7,15 +7,18 @@
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
 pub mod host;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-use crate::kvcache::SlotKv;
+use crate::kvcache::{SeqKv, SlotKv};
 
 /// Result of prefilling one sequence.
 pub struct PrefillOut {
     /// Logits of the last *real* (unpadded) position, length = vocab.
     pub last_logits: Vec<f32>,
-    /// Per-sequence KV cache, padded to the engine cache length.
+    /// Per-sequence KV cache, padded to the engine cache length. Always
+    /// f32 — the engine quantizes it into a paged store right after
+    /// prefill when `kv_format` asks for one.
     pub slot: SlotKv,
 }
 
@@ -26,13 +29,15 @@ pub trait ModelBackend {
     /// artifacts (vs native/full-precision).
     fn prefill(&mut self, tokens: &[i32], dma: bool) -> crate::Result<PrefillOut>;
 
-    /// One decode step over a batch of slots. `tokens[i]` is fed to
-    /// `slots[i]`; `None` slots are padding. Returns `[B * vocab]`
-    /// logits (rows of padding slots are garbage).
+    /// One decode step over a batch of sequence caches. `tokens[i]` is
+    /// fed to `slots[i]`; `None` slots are padding. Returns `[B * vocab]`
+    /// logits (rows of padding slots are garbage). Backends dispatch on
+    /// the [`SeqKv`] variant; a backend without a quantized decode path
+    /// must error on [`SeqKv::Quant`] rather than silently dequantize.
     fn decode(
         &mut self,
         tokens: &[i32],
-        slots: &mut [Option<&mut SlotKv>],
+        slots: &mut [Option<&mut SeqKv>],
     ) -> crate::Result<Vec<f32>>;
 
     /// Batched full-sequence logits for the eval harness:
@@ -48,6 +53,16 @@ pub trait ModelBackend {
 
     /// Decode batch buckets available, ascending.
     fn decode_buckets(&self) -> Vec<usize>;
+
+    /// Model geometry the engine needs for format-aware KV accounting:
+    /// `(n_layers, n_kv_heads, d_head)`.
+    fn kv_dims(&self) -> (usize, usize, usize);
+
+    /// Cumulative per-precision page-decode counters (quantized caches
+    /// only; backends without a paged path report zeros).
+    fn kv_page_stats(&self) -> crate::metrics::KvPageStats {
+        crate::metrics::KvPageStats::default()
+    }
 
     /// Human-readable backend name for logs/metrics.
     fn name(&self) -> &'static str;

@@ -6,6 +6,7 @@
 //! leading parameters (the layout contract lives in `model_meta.json`).
 
 use super::{pick_bucket, ModelBackend, PrefillOut};
+use crate::kvcache::SeqKv;
 use crate::config::MetaConfig;
 use crate::kvcache::{SlotCache, SlotKv};
 use crate::model::weights::Weights;
@@ -164,19 +165,34 @@ impl ModelBackend for PjrtBackend {
     fn decode(
         &mut self,
         tokens: &[i32],
-        slots: &mut [Option<&mut SlotKv>],
+        slots: &mut [Option<&mut SeqKv>],
     ) -> crate::Result<Vec<f32>> {
         let n = slots.len();
         anyhow::ensure!(tokens.len() == n, "tokens/slots mismatch");
         let b = pick_bucket(&self.meta.decode_batches, n);
         anyhow::ensure!(b >= n, "decode batch {n} exceeds largest bucket {b}");
+        // The bucketed executables take f32 cache literals; a quantized
+        // cache cannot be served here without materializing it, which
+        // defeats its purpose — reject loudly instead.
+        for s in slots.iter().flatten() {
+            anyhow::ensure!(
+                s.as_f32().is_some(),
+                "quantized KV cache not supported by the PJRT backend; \
+                 use kv_format=f32 or the host backend"
+            );
+        }
 
         // Gather batch caches + positions.
         let mut bk = vec![0f32; self.slots.batch_elems(b)];
         let mut bv = vec![0f32; self.slots.batch_elems(b)];
         {
             let views: Vec<Option<&SlotKv>> = (0..b)
-                .map(|i| slots.get(i).and_then(|s| s.as_deref()))
+                .map(|i| {
+                    slots
+                        .get(i)
+                        .and_then(|s| s.as_deref())
+                        .and_then(SeqKv::as_f32)
+                })
                 .collect();
             self.slots.gather_batch(&views, &mut bk, &mut bv);
         }
@@ -185,7 +201,7 @@ impl ModelBackend for PjrtBackend {
         let mut pos = vec![0i32; b];
         for i in 0..n {
             if let Some(s) = &slots[i] {
-                pos[i] = s.pos as i32;
+                pos[i] = s.pos() as i32;
             }
         }
 
@@ -211,9 +227,15 @@ impl ModelBackend for PjrtBackend {
         let logits: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("{e}"))?;
         let nk: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("{e}"))?;
         let nv: Vec<f32> = outs[2].to_vec().map_err(|e| anyhow!("{e}"))?;
-        self.slots.scatter_batch(&nk, &nv, slots);
-        for s in slots.iter_mut().flatten() {
-            s.pos += 1;
+        {
+            let mut f32_slots: Vec<Option<&mut SlotKv>> = slots
+                .iter_mut()
+                .map(|s| s.as_deref_mut().and_then(SeqKv::as_f32_mut))
+                .collect();
+            self.slots.scatter_batch(&nk, &nv, &mut f32_slots);
+            for s in f32_slots.into_iter().flatten() {
+                s.pos += 1;
+            }
         }
         Ok(logits)
     }
@@ -248,6 +270,11 @@ impl ModelBackend for PjrtBackend {
 
     fn decode_buckets(&self) -> Vec<usize> {
         self.meta.decode_batches.clone()
+    }
+
+    fn kv_dims(&self) -> (usize, usize, usize) {
+        let m = &self.meta.model;
+        (m.n_layers, m.n_kv_heads, m.d_head)
     }
 
     fn name(&self) -> &'static str {

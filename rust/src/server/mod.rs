@@ -7,7 +7,7 @@
 //! <- {"id": 1, "output": [12, 5], "finish": "eos",
 //!     "queue_ms": 0.1, "prefill_ms": 3.2, "decode_ms": 8.9}
 //! -> {"cmd": "stats"}          (optional control message)
-//! <- {"workers": 1}
+//! <- {"workers": 1, "kv_format": "f32"}
 //! ```
 //!
 //! Responses are routed back to the connection that submitted them by an
@@ -173,10 +173,10 @@ fn handle_conn(
         }
         if let Ok(j) = Json::parse(&line) {
             if j.get("cmd").and_then(Json::as_str) == Some("stats") {
-                let out = Json::obj(vec![(
-                    "workers",
-                    Json::num(router.num_workers() as f64),
-                )]);
+                let out = Json::obj(vec![
+                    ("workers", Json::num(router.num_workers() as f64)),
+                    ("kv_format", Json::str(router.kv_format())),
+                ]);
                 writeln!(writer, "{out}")?;
                 continue;
             }
@@ -284,10 +284,16 @@ mod tests {
         let addr = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
 
         let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(conn, r#"{{"cmd": "stats"}}"#).unwrap();
         writeln!(conn, r#"{{"id": 1, "tokens": [1, 9, 8, 7], "max_new_tokens": 2}}"#).unwrap();
         conn.shutdown(std::net::Shutdown::Write).unwrap();
         let mut reader = BufReader::new(conn);
         let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let s = Json::parse(line.trim()).unwrap();
+        assert_eq!(s.get("workers").unwrap().as_i64(), Some(1));
+        assert_eq!(s.get("kv_format").unwrap().as_str(), Some("f32"));
+        line.clear();
         reader.read_line(&mut line).unwrap();
         let j = Json::parse(line.trim()).unwrap();
         assert_eq!(j.get("id").unwrap().as_i64(), Some(1));

@@ -5,7 +5,8 @@ use dma::config::EngineConfig;
 use dma::coordinator::engine::{Engine, EngineHandle};
 use dma::coordinator::router::{Policy, Router};
 use dma::coordinator::{FinishReason, Request};
-use dma::kvcache::SlotKv;
+use dma::kvcache::SeqKv;
+use dma::kvquant::{KvFormat, KvPolicy};
 use dma::runtime::host::HostBackend;
 use dma::runtime::{ModelBackend, PrefillOut};
 use std::sync::Arc;
@@ -98,6 +99,81 @@ fn cache_budget_respected_under_load() {
 }
 
 // ---------------------------------------------------------------------
+// Quantized KV cache serving
+// ---------------------------------------------------------------------
+
+fn run_request_set(format: KvFormat) -> (Vec<dma::coordinator::Response>, dma::coordinator::engine::EngineStats) {
+    let cfg = EngineConfig {
+        max_new_tokens: 6,
+        kv_format: format,
+        kv_precision_policy: KvPolicy { sink: 16, diag: 32 },
+        ..Default::default()
+    };
+    let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+    for i in 0..8 {
+        assert!(
+            e.submit(req(i, 8 + (i as usize % 3) * 4, 4 + (i as usize % 3), false)).is_none(),
+            "{format:?} request {i} rejected"
+        );
+    }
+    let mut resps = e.run_until_idle().unwrap();
+    resps.sort_by_key(|r| r.id);
+    (resps, e.stats.clone())
+}
+
+#[test]
+fn nvfp4_cache_serves_same_requests_with_3x_fewer_bytes_per_token() {
+    // The acceptance bar: the same request set completes under the
+    // nvfp4-low cache as under f32, with >= 3x fewer KV bytes/token in
+    // the admission accounting AND in peak resident cache bytes.
+    let (f32_resps, f32_stats) = run_request_set(KvFormat::F32);
+    let (q_resps, q_stats) = run_request_set(KvFormat::Nvfp4);
+
+    assert_eq!(f32_resps.len(), 8);
+    assert_eq!(q_resps.len(), 8);
+    for (a, b) in f32_resps.iter().zip(&q_resps) {
+        assert_eq!(a.id, b.id);
+        assert!(!b.output.is_empty(), "request {} empty under nvfp4", b.id);
+        assert!(
+            matches!(b.finish, FinishReason::Length | FinishReason::Eos),
+            "request {} finished {:?}",
+            b.id,
+            b.finish
+        );
+    }
+
+    assert_eq!(f32_stats.kv_bytes_per_token, f32_stats.kv_f32_bytes_per_token);
+    assert!(
+        f32_stats.kv_bytes_per_token >= 3 * q_stats.kv_bytes_per_token,
+        "bytes/token: f32 {} vs nvfp4 {}",
+        f32_stats.kv_bytes_per_token,
+        q_stats.kv_bytes_per_token
+    );
+    assert!(q_stats.kv_compression() >= 3.0, "{}", q_stats.kv_compression());
+    assert!(
+        f32_stats.kv_bytes_peak >= 3 * q_stats.kv_bytes_peak,
+        "peak bytes: f32 {} vs nvfp4 {}",
+        f32_stats.kv_bytes_peak,
+        q_stats.kv_bytes_peak
+    );
+    // nvfp4-low never decodes a page high.
+    assert!(q_stats.kv_pages.total() > 0);
+    assert_eq!(q_stats.kv_pages.high_pages, 0);
+}
+
+#[test]
+fn dual_cache_reports_mixed_page_precisions() {
+    let (resps, stats) = run_request_set(KvFormat::Dual);
+    assert_eq!(resps.len(), 8);
+    assert!(stats.kv_pages.high_pages > 0, "{:?}", stats.kv_pages);
+    // Short sequences sit inside the sink+frontier windows, so high
+    // dominates — but the fraction must be sane.
+    let f = stats.kv_pages.high_fraction();
+    assert!((0.0..=1.0).contains(&f));
+    assert!(stats.kv_bytes_per_token < stats.kv_f32_bytes_per_token);
+}
+
+// ---------------------------------------------------------------------
 // Failure injection
 // ---------------------------------------------------------------------
 
@@ -116,7 +192,7 @@ impl ModelBackend for FlakyBackend {
     fn decode(
         &mut self,
         tokens: &[i32],
-        slots: &mut [Option<&mut SlotKv>],
+        slots: &mut [Option<&mut SeqKv>],
     ) -> dma::Result<Vec<f32>> {
         self.inner.decode(tokens, slots)
     }
@@ -131,6 +207,9 @@ impl ModelBackend for FlakyBackend {
     }
     fn decode_buckets(&self) -> Vec<usize> {
         self.inner.decode_buckets()
+    }
+    fn kv_dims(&self) -> (usize, usize, usize) {
+        self.inner.kv_dims()
     }
     fn name(&self) -> &'static str {
         "flaky"

@@ -6,10 +6,112 @@ use dma::attention::{flash, reference, TileConfig};
 use dma::metrics;
 use dma::mxfp::block::{fake_quant, fake_quant_scaled, Format, Granularity};
 use dma::mxfp::fused::dual_quant;
-use dma::mxfp::{e2m1, fp8};
+use dma::mxfp::{e2m1, fp8, pack};
 use dma::prop_assert;
 use dma::tensor::Tensor;
 use dma::util::prop::{check, gen};
+
+#[test]
+fn prop_e2m1_all_16_codes_round_trip() {
+    // Exhaustive: every 4-bit code decodes to a grid value that encodes
+    // back to the same code (modulo the two zero codes: -0.0 re-encodes
+    // as +0.0 since the sign of zero is not observable after decode).
+    for code in 0u8..16 {
+        let v = e2m1::decode(code);
+        let back = e2m1::encode(v);
+        if code == 0b1000 {
+            assert_eq!(back, 0, "-0.0 re-encodes as +0.0");
+        } else {
+            assert_eq!(back, code, "code {code} -> {v} -> {back}");
+        }
+        assert!(v.abs() <= e2m1::E2M1_MAX);
+        assert_eq!(e2m1::decode(code | 0xF0), v, "high nibble must be ignored");
+    }
+    // The magnitude table is exactly the spec grid, both signs.
+    for (i, &g) in e2m1::E2M1_GRID.iter().enumerate() {
+        assert_eq!(e2m1::decode(i as u8), g);
+        assert_eq!(e2m1::decode(i as u8 | 0x8), -g);
+    }
+}
+
+#[test]
+fn prop_e2m1_random_f32_encode_is_nearest_grid_neighbour() {
+    check("e2m1 random f32", 300, |rng| {
+        // Wide range incl. out-of-range values that must clamp.
+        let v = rng.uniform_in(-20.0, 20.0);
+        let q = e2m1::quantize(v);
+        let c = v.clamp(-e2m1::E2M1_MAX, e2m1::E2M1_MAX);
+        // q is one of the two grid neighbours of the clamped value.
+        let lo = e2m1::E2M1_GRID
+            .iter()
+            .flat_map(|&g| [g, -g])
+            .filter(|&g| g <= c)
+            .fold(f32::NEG_INFINITY, f32::max);
+        let hi = e2m1::E2M1_GRID
+            .iter()
+            .flat_map(|&g| [g, -g])
+            .filter(|&g| g >= c)
+            .fold(f32::INFINITY, f32::min);
+        prop_assert!(q == lo || q == hi, "{v} -> {q}, neighbours [{lo}, {hi}]");
+        // Idempotent and round-trips through the bit code.
+        prop_assert!(e2m1::quantize(q) == q, "not idempotent at {v}");
+        prop_assert!(e2m1::decode(e2m1::encode(q)) == q, "code round trip at {v}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pack_round_trips_and_halves() {
+    check("fp4 pack round trip", 200, |rng| {
+        let n = 2 * (1 + rng.below(128) as usize);
+        let codes: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
+        let packed = pack::pack(&codes);
+        prop_assert!(packed.len() == n / 2, "packed {} != {}", packed.len(), n / 2);
+        prop_assert!(pack::unpack(&packed) == codes, "round trip length {n}");
+        // Byte layout: higher index in the high nibble.
+        for (i, &b) in packed.iter().enumerate() {
+            prop_assert!(b & 0x0F == codes[2 * i], "lo nibble at {i}");
+            prop_assert!(b >> 4 == codes[2 * i + 1], "hi nibble at {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pack_tolerates_dirty_high_nibbles() {
+    // pack_row masks the low element; codes with stray high bits must
+    // not corrupt their neighbour.
+    check("fp4 pack dirty nibbles", 100, |rng| {
+        let n = 2 * (1 + rng.below(32) as usize);
+        let clean: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
+        let dirty: Vec<u8> = clean
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| if i % 2 == 0 { c | 0xF0 } else { c })
+            .collect();
+        prop_assert!(
+            pack::pack(&dirty) == pack::pack(&clean),
+            "low-element high bits leaked"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_e2m1_encode_slice_matches_scalar_path() {
+    check("e2m1 slice vs scalar", 100, |rng| {
+        let n = 1 + rng.below(64) as usize;
+        let xs: Vec<f32> = (0..n).map(|_| rng.uniform_in(-10.0, 10.0)).collect();
+        let mut codes = vec![0u8; n];
+        e2m1::encode_slice(&xs, &mut codes);
+        let mut vals = vec![0f32; n];
+        e2m1::decode_slice(&codes, &mut vals);
+        for (i, &x) in xs.iter().enumerate() {
+            prop_assert!(vals[i] == e2m1::quantize(x), "index {i}: {x}");
+        }
+        Ok(())
+    });
+}
 
 #[test]
 fn prop_e2m1_never_increases_magnitude_beyond_clamp() {

@@ -1,6 +1,8 @@
 //! Artifact-backed integration tests: the full L1/L2 -> L3 path through
 //! PJRT. All tests skip gracefully (with a notice) when `make artifacts`
 //! has not been run, so `cargo test` stays green in a fresh checkout.
+//! The whole file needs the `pjrt` feature (xla bindings).
+#![cfg(feature = "pjrt")]
 
 use dma::config::MetaConfig;
 use dma::model::{argmax, AttnMode, CpuModel, KvState};
@@ -133,14 +135,14 @@ fn decode_continues_prefill_through_pjrt() {
     let tokens: Vec<i32> = (0..32).map(|i| ((i * 11) % 58) as i32 + 6).collect();
     let out = be.prefill(&tokens, false).unwrap();
     let tok1 = argmax(&out.last_logits);
-    let mut slot = out.slot;
-    assert_eq!(slot.pos, 32);
+    let mut slot = dma::kvcache::SeqKv::F32(out.slot);
+    assert_eq!(slot.pos(), 32);
 
     // Decode three steps; positions advance, logits stay finite.
     let mut cur = tok1;
     for step in 0..3 {
         let logits = be.decode(&[cur], &mut [Some(&mut slot)]).unwrap();
-        assert_eq!(slot.pos, 33 + step);
+        assert_eq!(slot.pos(), 33 + step);
         let vocab = be.vocab();
         assert!(logits[..vocab].iter().all(|v| v.is_finite()));
         cur = argmax(&logits[..vocab]);
@@ -154,7 +156,7 @@ fn decode_continues_prefill_through_pjrt() {
     // First decoded next-token must match the prefill-extended argmax.
     let logits = {
         let o = be.prefill(&tokens, false).unwrap();
-        let mut s = o.slot;
+        let mut s = dma::kvcache::SeqKv::F32(o.slot);
         be.decode(&[tok1], &mut [Some(&mut s)]).unwrap()
     };
     assert_eq!(argmax(&logits[..be.vocab()]), direct);
@@ -167,8 +169,10 @@ fn batched_decode_matches_single_through_pjrt() {
     let t2: Vec<i32> = (0..24).map(|i| ((i * 7) % 58) as i32 + 6).collect();
     let o1 = be.prefill(&t1, false).unwrap();
     let o2 = be.prefill(&t2, false).unwrap();
-    let (mut s1a, mut s2a) = (o1.slot.clone(), o2.slot.clone());
-    let (mut s1b, mut s2b) = (o1.slot, o2.slot);
+    use dma::kvcache::SeqKv;
+    let (mut s1a, mut s2a) =
+        (SeqKv::F32(o1.slot.clone()), SeqKv::F32(o2.slot.clone()));
+    let (mut s1b, mut s2b) = (SeqKv::F32(o1.slot), SeqKv::F32(o2.slot));
     let vocab = be.vocab();
 
     // Batched.
