@@ -69,29 +69,40 @@ def f32_row_bytes(d: int) -> int:
     return 4 * d
 
 
-def page_precisions(n_tokens: int, page_tokens: int, sink: int, diag: int):
-    """Per-page precision schedule for a decode query at the frontier.
+def page_precisions(n_tokens: int, page_tokens: int, sink: int, diag: int,
+                    frontier: int | None = None):
+    """Per-page precision schedule for a query at its causal frontier.
 
     Derived from the phase boundaries of the DMA attention kernel
     (Alg. 1) with one query tile whose causal frontier is token
-    ``n_tokens - 1`` and KV tile size ``page_tokens``:
+    ``frontier`` (default ``n_tokens - 1``, a decode step) and KV tile
+    size ``page_tokens``:
 
       Phase 0  pages overlapping the first ``sink`` tokens    -> "high"
       Phase 1  pages before the diagonal window               -> "low"
-      Phase 2  pages inside the trailing ``diag``-token window -> "high"
+      Phase 2  pages inside the ``diag``-token window ending at the
+               frontier                                        -> "high"
 
-    Returns a list of ``"high"`` / ``"low"`` strings, one per page.
+    ``frontier`` may lie beyond the cached range — a prefill chunk
+    attending its quantized prefix, or a long sequence attending pages
+    shared from a shorter one. This position-awareness is what keeps a
+    shared body page decoding "low" for a sequence whose own frontier is
+    far past it, even if a shorter sharer sees the same page as
+    "frontier". Returns a list of ``"high"`` / ``"low"`` strings, one per
+    page.
     """
     p = page_tokens
+    if frontier is None:
+        frontier = n_tokens - 1
     n_pages = -(-n_tokens // p)
     n_sink = -(-sink // p) if sink > 0 else 0
     n_sink_eff = min(n_sink, n_pages)
     if diag == 0:
         j_hi_start = n_pages
     else:
-        # Window start token is frontier - diag + 1 = n_tokens - diag;
-        # floor-divide (matches Rust div_euclid for negative starts).
-        j_hi_start = (n_tokens - diag) // p
+        # Window start token is frontier - diag + 1; floor-divide
+        # (matches Rust div_euclid for negative starts).
+        j_hi_start = (frontier + 1 - diag) // p
         j_hi_start = min(max(j_hi_start, n_sink_eff), n_pages)
     return [
         "high" if (j < n_sink_eff or j >= j_hi_start) else "low"
@@ -232,3 +243,80 @@ def paged_decode_attention(q_row, cache_k: PagedKvCache, cache_v: PagedKvCache,
         acc = acc * alpha + p @ v_tile
         m = m_new
     return acc / l
+
+
+def chunked_prefill_attention(q_chunk, k_chunk, v_chunk,
+                              cache_k: PagedKvCache, cache_v: PagedKvCache,
+                              *, sink: int, diag: int, counters=None):
+    """One chunk of streaming prefill attention over a quantized prefix.
+
+    ``q_chunk``/``k_chunk``/``v_chunk``: ``[c, d]`` float32 post-RoPE
+    tiles for the chunk at absolute positions
+    ``[cache_k.n, cache_k.n + c)`` — everything already in the caches is
+    prefix. The caller appends the chunk's K/V rows *after* this call
+    (the caches are authoritative for the prefix only while scoring).
+
+    Prefix pages decode at the position-aware policy precision
+    (:func:`page_precisions` with the chunk's frontier), scored against
+    the dual-quantized query copy of the matching precision — the decode
+    kernel's arithmetic. The in-chunk causal triangle is scored in f32
+    with the base-2 softmax scale folded in, and both parts stitch
+    through one base-2 online softmax. Prefix V decodes high; chunk V
+    stays f32. Returns ``[c, d]`` float32.
+
+    This is the parity reference for
+    ``rust/src/attention/paged.rs::dma_attention_prefill_chunk``.
+    """
+    d, pos0 = cache_k.d, cache_k.n
+    assert cache_v.n == pos0 and cache_v.d == d
+    q = np.asarray(q_chunk, np.float32).reshape(-1, d)
+    kc = np.asarray(k_chunk, np.float32).reshape(-1, d)
+    vc = np.asarray(v_chunk, np.float32).reshape(-1, d)
+    c = q.shape[0]
+    assert c >= 1 and kc.shape[0] == c and vc.shape[0] == c
+
+    qpk, qs4, qf8, qs8, qsq = (
+        np.asarray(a) for a in quant_fused.dual_quant(jnp.asarray(q), is_query=True)
+    )
+    q_low = np.asarray(
+        quant_fused.dequant_nvfp4(jnp.asarray(qpk), jnp.asarray(qs4), jnp.asarray(qsq)),
+        np.float32)
+    q_high = np.asarray(
+        quant_fused.dequant_mxfp8(jnp.asarray(qf8), jnp.asarray(qs8), jnp.asarray(qsq)),
+        np.float32)
+
+    m = np.full(c, -np.inf, np.float32)
+    l = np.zeros(c, np.float32)
+    acc = np.zeros((c, d), np.float32)
+
+    def update(s, v_tile):
+        # Base-2 online-softmax tile update ([c, cols] logits, -inf mask).
+        nonlocal m, l, acc
+        m_new = np.maximum(m, s.max(axis=1)).astype(np.float32)
+        alpha = np.where(np.isneginf(m), np.float32(0.0),
+                         np.exp2(m - m_new)).astype(np.float32)
+        p = np.exp2(s - m_new[:, None]).astype(np.float32)  # exp2(-inf) = 0
+        l[:] = l * alpha + p.sum(axis=1, dtype=np.float32)
+        acc[:] = acc * alpha[:, None] + p @ v_tile
+        m[:] = m_new
+
+    # Prefix pages at the position-aware precision (no causal masking:
+    # every prefix key precedes every chunk query).
+    for j, prec in enumerate(page_precisions(pos0, cache_k.page_tokens,
+                                             sink, diag,
+                                             frontier=pos0 + c - 1)):
+        r0, r1 = cache_k.page_rows(j)
+        eff = cache_k.effective(prec)
+        if counters is not None:
+            counters[eff] = counters.get(eff, 0) + 1
+        k_tile = cache_k.decode_rows(r0, r1, eff)
+        q_dec = q_high if eff == "high" else q_low
+        update((q_dec @ k_tile.T).astype(np.float32),
+               cache_v.decode_rows(r0, r1, "high"))
+
+    # The chunk's own causal triangle in f32, base-2 logits.
+    pre = np.float32(np.log2(np.float32(np.e)) / np.sqrt(np.float32(d)))
+    s = ((q @ kc.T).astype(np.float32) * pre).astype(np.float32)
+    s[np.triu(np.ones((c, c), dtype=bool), 1)] = -np.inf
+    update(s, vc)
+    return acc / l[:, None]

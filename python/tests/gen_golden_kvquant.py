@@ -158,6 +158,48 @@ def kvquant_vectors():
         "page_hits": counters,
         "out": f32s(out),
         "out_low": f32s(out_low),
+        "chunked_prefill": chunked_prefill_vectors(),
+    }
+
+
+def chunked_prefill_vectors():
+    """Streaming-prefill fixture: K/V/Q tiles fed chunk by chunk through
+    ``chunked_prefill_attention`` + append, recording each chunk's output,
+    the position-aware schedules, the page-hit counters and the final
+    planes (consumed by ``golden_chunked_prefill_parity`` in
+    ``rust/tests/kvquant_parity.rs``)."""
+    r = np.random.default_rng(11)
+    d, page, sink, diag = 32, 8, 8, 16
+    chunk, n = 8, 32
+    k_rows = r.standard_normal((n, d)).astype(np.float32)
+    v_rows = r.standard_normal((n, d)).astype(np.float32)
+    q_rows = r.standard_normal((n, d)).astype(np.float32)
+
+    ck = kv_quant.PagedKvCache(d, "dual", page)
+    cv = kv_quant.PagedKvCache(d, "dual", page)
+    counters = {}
+    chunk_outs, schedules = [], []
+    for pos0 in range(0, n, chunk):
+        schedules.append(kv_quant.page_precisions(
+            pos0, page, sink, diag, frontier=pos0 + chunk - 1))
+        out = kv_quant.chunked_prefill_attention(
+            q_rows[pos0:pos0 + chunk], k_rows[pos0:pos0 + chunk],
+            v_rows[pos0:pos0 + chunk], ck, cv,
+            sink=sink, diag=diag, counters=counters)
+        chunk_outs.append(f32s(out))
+        ck.append(k_rows[pos0:pos0 + chunk])
+        cv.append(v_rows[pos0:pos0 + chunk])
+
+    return {
+        "d": d, "page_tokens": page, "sink": sink, "diag": diag,
+        "chunk_tokens": chunk,
+        "k": f32s(k_rows), "v": f32s(v_rows), "q": f32s(q_rows),
+        "chunk_outs": chunk_outs,
+        "schedules": schedules,
+        "page_hits": counters,
+        "k_planes": {
+            "packed": u8s(ck.packed), "fp8": u8s(ck.fp8), "s8": u8s(ck.s8),
+        },
     }
 
 

@@ -134,6 +134,21 @@ class TestPolicy:
         p = kv_quant.page_precisions(64, 8, sink=9, diag=8)
         assert p[0] == "high" and p[1] == "high"  # ceil(9/8) = 2 pages
 
+    def test_position_aware_frontier(self):
+        """The same cached pages decode differently depending on where
+        the querying sequence's frontier sits — a shared body page inside
+        a short sequence's diag window is still low for a longer one."""
+        near = kv_quant.page_precisions(32, 8, sink=8, diag=16, frontier=31)
+        assert near == ["high", "low", "high", "high"]
+        far = kv_quant.page_precisions(32, 8, sink=8, diag=16, frontier=127)
+        assert far == ["high", "low", "low", "low"]
+        # Default frontier is the last cached token (the decode schedule).
+        assert (kv_quant.page_precisions(64, 8, sink=8, diag=16, frontier=63)
+                == kv_quant.page_precisions(64, 8, sink=8, diag=16))
+        # A frontier beyond a short prefix with a window reaching back in.
+        reach = kv_quant.page_precisions(16, 8, sink=0, diag=16, frontier=23)
+        assert reach == ["low", "high"]
+
     def test_matches_dma_kernel_phases(self):
         """The page schedule must equal the tile schedule the contiguous
         DMA kernel uses for a decode query at the frontier (bm=1)."""
@@ -286,6 +301,129 @@ class TestPagedAttention:
         with pytest.raises(AssertionError):
             kv_quant.paged_decode_attention(
                 np.zeros(32, np.float32), c, c, sink=0, diag=0)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill over a quantized prefix
+# ---------------------------------------------------------------------------
+
+class TestChunkedPrefill:
+    def _stream(self, n, d, chunk, page, sink, diag, seed):
+        r = rng(seed)
+        k = r.standard_normal((n, d)).astype(np.float32)
+        v = r.standard_normal((n, d)).astype(np.float32)
+        q = r.standard_normal((n, d)).astype(np.float32)
+        ck = kv_quant.PagedKvCache(d, "dual", page)
+        cv = kv_quant.PagedKvCache(d, "dual", page)
+        outs, counters = [], {}
+        for p0 in range(0, n, chunk):
+            outs.append(kv_quant.chunked_prefill_attention(
+                q[p0:p0 + chunk], k[p0:p0 + chunk], v[p0:p0 + chunk],
+                ck, cv, sink=sink, diag=diag, counters=counters))
+            ck.append(k[p0:p0 + chunk])
+            cv.append(v[p0:p0 + chunk])
+        return k, v, q, ck, cv, np.concatenate(outs), counters
+
+    def test_streamed_planes_bit_equal_bulk(self):
+        """Quantize-on-append during chunked prefill must produce the
+        same planes as bulk-quantizing all K rows at once — the invariant
+        that makes chunked prefill bit-compatible with the monolithic
+        prefill+quantize path."""
+        k, _, _, ck, _, _, _ = self._stream(32, 32, 8, 8, 8, 16, seed=50)
+        pk, s4, f8, s8, sq = quant_fused.dual_quant(
+            jnp.asarray(k), is_query=False)
+        np.testing.assert_array_equal(ck.packed, np.asarray(pk))
+        np.testing.assert_array_equal(ck.fp8, np.asarray(f8))
+        np.testing.assert_array_equal(ck.sq, np.asarray(sq))
+
+    def test_first_chunk_is_pure_f32_triangle(self):
+        """With an empty prefix the kernel reduces to exact causal
+        attention on the f32 chunk operands (base-2 softmax)."""
+        n, d = 8, 32
+        r = rng(51)
+        q = r.standard_normal((n, d)).astype(np.float32)
+        k = r.standard_normal((n, d)).astype(np.float32)
+        v = r.standard_normal((n, d)).astype(np.float32)
+        ck = kv_quant.PagedKvCache(d, "dual", 8)
+        cv = kv_quant.PagedKvCache(d, "dual", 8)
+        counters = {}
+        out = kv_quant.chunked_prefill_attention(
+            q, k, v, ck, cv, sink=8, diag=8, counters=counters)
+        assert counters == {}
+        s = (q @ k.T) / np.sqrt(np.float32(d))
+        s[np.triu(np.ones((n, n), dtype=bool), 1)] = -np.inf
+        p = np.exp(s - s.max(axis=1, keepdims=True))
+        p /= p.sum(axis=1, keepdims=True)
+        np.testing.assert_allclose(out, p @ v, atol=2e-5)
+
+    def test_chunk_matches_dense_mixed_oracle(self):
+        """A chunk over a quantized prefix equals a one-shot base-2
+        softmax over the page-mixed prefix + f32 chunk logits."""
+        n, d, chunk, page, sink, diag = 32, 32, 8, 8, 8, 16
+        k, v, q, ck, cv, outs, counters = self._stream(
+            n, d, chunk, page, sink, diag, seed=52)
+        assert counters["high"] + counters["low"] == 1 + 2 + 3
+
+        # Re-derive the last chunk from decoded operands.
+        p0 = n - chunk
+        ck2 = kv_quant.PagedKvCache(d, "dual", page)
+        cv2 = kv_quant.PagedKvCache(d, "dual", page)
+        ck2.append(k[:p0])
+        cv2.append(v[:p0])
+        qq = quant_fused.dual_quant(jnp.asarray(q[p0:]), is_query=True)
+        qpk, qs4, qf8, qs8, qsq = qq
+        ql = np.asarray(quant_fused.dequant_nvfp4(qpk, qs4, qsq))
+        qh = np.asarray(quant_fused.dequant_mxfp8(qf8, qs8, qsq))
+        precs = kv_quant.page_precisions(p0, page, sink, diag,
+                                         frontier=n - 1)
+        pre = np.float32(np.log2(np.float32(np.e)) / np.sqrt(np.float32(d)))
+        s = np.full((chunk, n), -np.inf, np.float32)
+        for j, pr in enumerate(precs):
+            r0, r1 = ck2.page_rows(j)
+            kt = ck2.decode_rows(r0, r1, pr)
+            qd = qh if pr == "high" else ql
+            s[:, r0:r1] = qd @ kt.T
+        tri = (q[p0:] @ k[p0:].T).astype(np.float32) * pre
+        tri[np.triu(np.ones((chunk, chunk), dtype=bool), 1)] = -np.inf
+        s[:, p0:] = tri
+        p = np.exp2(s - s.max(axis=1, keepdims=True))
+        p /= p.sum(axis=1, keepdims=True)
+        p = np.nan_to_num(p)
+        v_all = np.concatenate(
+            [cv2.decode_rows(0, p0, "high"), v[p0:]], axis=0)
+        ref = p @ v_all
+        np.testing.assert_allclose(outs[p0:], ref, atol=2e-4)
+
+    def test_shared_prefix_reproduces_cold_start(self):
+        """Prefix-cache contract at the kernel level: importing another
+        stream's prefix planes and prefilling only the suffix yields
+        bit-identical planes and outputs to the cold run."""
+        n, d, chunk, page = 32, 32, 8, 8
+        k, v, q, ck, cv, outs, _ = self._stream(n, d, chunk, page, 8, 16,
+                                                seed=53)
+        shared = 16  # two full pages, chunk-aligned
+        ck2 = kv_quant.PagedKvCache(d, "dual", page)
+        cv2 = kv_quant.PagedKvCache(d, "dual", page)
+        # Import the cold run's prefix planes (numpy slices share memory —
+        # the zero-copy analogue of the Rust Arc pages).
+        for cache, src in ((ck2, ck), (cv2, cv)):
+            cache.packed = src.packed[:shared]
+            cache.s4 = src.s4[:shared]
+            cache.fp8 = src.fp8[:shared]
+            cache.s8 = src.s8[:shared]
+            cache.sq = src.sq[:shared]
+            cache.n = shared
+        warm_outs = []
+        for p0 in range(shared, n, chunk):
+            warm_outs.append(kv_quant.chunked_prefill_attention(
+                q[p0:p0 + chunk], k[p0:p0 + chunk], v[p0:p0 + chunk],
+                ck2, cv2, sink=8, diag=16))
+            ck2.append(k[p0:p0 + chunk])
+            cv2.append(v[p0:p0 + chunk])
+        np.testing.assert_array_equal(np.concatenate(warm_outs),
+                                      outs[shared:])
+        np.testing.assert_array_equal(ck2.packed, ck.packed)
+        np.testing.assert_array_equal(ck2.fp8, ck.fp8)
 
 
 def _force_low_v(cache):

@@ -24,7 +24,9 @@ use super::dma::score_tile;
 use super::online_softmax::OnlineSoftmax;
 use crate::kvquant::{KvPolicy, Precision, QuantPagedKv};
 use crate::metrics::KvPageStats;
-use crate::mxfp::fused::DualQuantized;
+use crate::mxfp::block::Granularity;
+use crate::mxfp::fused::{dual_quant, DualQuantized};
+use crate::mxfp::LOG2_E;
 use crate::tensor::Tensor;
 
 /// Mixed-precision attention of the dual-quantized query tile `qq`
@@ -115,6 +117,112 @@ fn paged_attention_impl(
     out
 }
 
+/// Chunked-prefill attention over a quantized prefix: the chunk's f32
+/// query rows sit at absolute positions `[pos0, pos0 + lq)` where
+/// `pos0 = k.len()` and `lq = k_chunk.rows()` — everything already in
+/// the cache is prefix, the chunk's own K/V tiles arrive in f32
+/// (`k_chunk`/`v_chunk`, `[lq, d]`) and are appended by the caller
+/// *after* this call.
+///
+/// GQA head grouping: `q` may stack the `n_heads / n_kv_heads` query
+/// heads sharing this kv head as consecutive `[lq, d]` tiles
+/// (`q.rows() = heads * lq`; row `h*lq + r` sits at position
+/// `pos0 + r`). Each prefix page then decodes once for the whole group
+/// instead of once per head — the prefill analogue of
+/// [`dma_attention_paged_heads`] — and the result is bit-identical to
+/// per-head calls (online-softmax rows are independent).
+///
+/// Prefix pages decode at the position-aware policy precision
+/// ([`KvPolicy::page_precisions_at`] with the chunk's causal frontier
+/// `pos0 + lq - 1`), scored against the dual-quantized query copy of the
+/// matching precision — exactly the decode kernel's arithmetic. The
+/// in-chunk causal triangle is scored in f32 with the base-2 softmax
+/// scale folded in, and everything is stitched with one base-2
+/// [`OnlineSoftmax`]. Prefix V decodes high; chunk V stays f32.
+///
+/// This is the kernel behind [`crate::model::CpuModel::prefill_chunk_quant`];
+/// the Python parity reference is
+/// `python/compile/kernels/kv_quant.py::chunked_prefill_attention` (cross
+/// checked bit-level through `rust/testdata/golden_kvquant.json`).
+pub fn dma_attention_prefill_chunk(
+    q: &Tensor,
+    k_chunk: &Tensor,
+    v_chunk: &Tensor,
+    k: &QuantPagedKv,
+    v: &QuantPagedKv,
+    policy: &KvPolicy,
+    stats: &mut KvPageStats,
+) -> Tensor {
+    let (rows, d) = (q.rows(), q.cols());
+    let lq = k_chunk.rows();
+    assert!(lq >= 1, "empty chunk");
+    assert!(rows >= lq && rows % lq == 0, "q rows {rows} not a multiple of chunk {lq}");
+    assert_eq!(v_chunk.rows(), lq, "chunk V rows");
+    assert_eq!(k.d(), d, "K width");
+    assert_eq!(v.d(), d, "V width");
+    let pos0 = k.len();
+    assert_eq!(v.len(), pos0, "K/V prefix length mismatch");
+    let pt = k.page_tokens;
+    assert_eq!(v.page_tokens, pt, "K/V page size mismatch");
+
+    // Quantize the chunk queries once (softmax scale folded, base-2) and
+    // decode both precision copies, mirroring the decode kernel.
+    let qq = dual_quant(&q.data, rows, d, true, Granularity::PerToken);
+    let mut q_low = vec![0f32; rows * d];
+    let mut q_high = vec![0f32; rows * d];
+    qq.decode_low_rows(0, rows, &mut q_low);
+    qq.decode_high_rows(0, rows, &mut q_high);
+
+    let mut os = OnlineSoftmax::new(rows, d, true);
+    let mut k_tile = vec![0f32; pt * d];
+    let mut v_tile = vec![0f32; pt * d];
+    let mut s_tile = vec![0f32; rows * pt.max(lq)];
+    let mut scratch = vec![0f32; rows * pt.max(lq)];
+
+    // Prefix pages at the position-aware precision. No causal masking:
+    // every prefix key precedes every chunk query.
+    let schedule = policy.page_precisions_at(pos0 + lq - 1, pos0, pt);
+    for (j, &prec) in schedule.iter().enumerate() {
+        let (r0, r1) = k.page_rows(j);
+        let cols = r1 - r0;
+        let eff = k.effective(prec);
+        k.decode_rows(r0, r1, eff, &mut k_tile);
+        match eff {
+            Precision::High => stats.high_pages += 1,
+            Precision::Low => stats.low_pages += 1,
+        }
+        let q_dec = if eff == Precision::High { &q_high } else { &q_low };
+        score_tile(q_dec, rows, d, &k_tile, cols, pos0 as i64, r0, false,
+                   &mut s_tile[..rows * cols]);
+        v.decode_rows(r0, r1, Precision::High, &mut v_tile);
+        os.update(&s_tile[..rows * cols], &v_tile[..cols * d], cols, &mut scratch);
+    }
+
+    // The chunk's own causal triangle in f32, base-2 logits: fold the
+    // softmax scale into the raw queries the same way the quantizer does
+    // for the prefix scores. Row h*lq + r is query position pos0 + r.
+    let pre = LOG2_E / (d as f32).sqrt();
+    for r in 0..rows {
+        let rr = r % lq;
+        for c in 0..lq {
+            s_tile[r * lq + c] = if c > rr {
+                f32::NEG_INFINITY
+            } else {
+                let mut acc = 0f32;
+                for (a, b) in q.row(r).iter().zip(k_chunk.row(c)) {
+                    acc += a * b;
+                }
+                acc * pre
+            };
+        }
+    }
+    os.update(&s_tile[..rows * lq], &v_chunk.data, lq, &mut scratch);
+
+    let mut out = Tensor::zeros(vec![rows, d]);
+    os.finalize(&mut out.data);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,8 +283,8 @@ mod tests {
             // Contiguous layout: identical K planes (chunking invariance)
             // and V as the exact high dequantization the paged path uses.
             let kq = dual_quant(&rows(n, d, 1), n, d, false, Granularity::PerToken);
-            assert_eq!(kq.packed_fp4, k.store.packed_fp4);
-            assert_eq!(kq.fp8_codes, k.store.fp8_codes);
+            assert_eq!(kq.packed_fp4, k.planes().packed_fp4);
+            assert_eq!(kq.fp8_codes, k.planes().fp8_codes);
             let v_eq = decode_all_high(&v);
             let cfg = TileConfig { bm: lq, bn: pt, diag, sink, causal: true };
             let contiguous = dma_attention_quantized(&qq, &kq, &v_eq, &cfg);
@@ -236,7 +344,7 @@ mod tests {
         let k_du = filled(n, d, KvFormat::Dual, pt, 6);
         let v_du = filled(n, d, KvFormat::Dual, pt, 7);
         // Sanity: low planes identical across formats.
-        assert_eq!(k_lo.store.packed_fp4, k_du.store.packed_fp4);
+        assert_eq!(k_lo.planes().packed_fp4, k_du.planes().packed_fp4);
 
         let q = rows(1, d, 8);
         let qq = dual_quant(&q, 1, d, true, Granularity::PerToken);
@@ -310,6 +418,158 @@ mod tests {
                 out.at(0, c)
             );
         }
+    }
+
+    #[test]
+    fn prefill_chunk_matches_dense_oracle() {
+        // A chunk of 8 queries at positions [24, 32) over a 24-token
+        // quantized prefix: compare against a one-shot base-2 softmax
+        // over the page-mixed prefix + f32 chunk operands.
+        let (pos0, lq, d, pt) = (24usize, 8usize, 32usize, 8usize);
+        let k = filled(pos0, d, KvFormat::Dual, pt, 40);
+        let v = filled(pos0, d, KvFormat::Dual, pt, 41);
+        let q = Tensor::new(vec![lq, d], rows(lq, d, 42));
+        let kc = Tensor::new(vec![lq, d], rows(lq, d, 43));
+        let vc = Tensor::new(vec![lq, d], rows(lq, d, 44));
+        let policy = KvPolicy { sink: 8, diag: 16 };
+        let mut stats = KvPageStats::default();
+        let out = dma_attention_prefill_chunk(&q, &kc, &vc, &k, &v, &policy, &mut stats);
+        assert_eq!(stats.total(), (pos0 / pt) as u64);
+
+        // Oracle: decode prefix K at the position-aware schedule, stack
+        // the f32 chunk, one-shot exp2 softmax per query row.
+        let qq = dual_quant(&q.data, lq, d, true, Granularity::PerToken);
+        let mut ql = vec![0f32; lq * d];
+        let mut qh = vec![0f32; lq * d];
+        qq.decode_low_rows(0, lq, &mut ql);
+        qq.decode_high_rows(0, lq, &mut qh);
+        let sched = policy.page_precisions_at(pos0 + lq - 1, pos0, pt);
+        let pre = crate::mxfp::LOG2_E / (d as f32).sqrt();
+        let n = pos0 + lq;
+        let mut v_all = vec![0f32; n * d];
+        v.decode_rows(0, pos0, Precision::High, &mut v_all[..pos0 * d]);
+        v_all[pos0 * d..].copy_from_slice(&vc.data);
+        for r in 0..lq {
+            let mut s = vec![f32::NEG_INFINITY; n];
+            let mut k_tile = vec![0f32; pt * d];
+            for (j, &prec) in sched.iter().enumerate() {
+                let (r0, r1) = k.page_rows(j);
+                k.decode_rows(r0, r1, prec, &mut k_tile);
+                let qd = if prec == Precision::High { &qh } else { &ql };
+                for c in 0..r1 - r0 {
+                    s[r0 + c] = k_tile[c * d..(c + 1) * d]
+                        .iter()
+                        .zip(&qd[r * d..(r + 1) * d])
+                        .map(|(a, b)| a * b)
+                        .sum();
+                }
+            }
+            for c in 0..=r {
+                s[pos0 + c] = kc.row(c)
+                    .iter()
+                    .zip(q.row(r))
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>()
+                    * pre;
+            }
+            let m = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let p: Vec<f32> = s.iter().map(|&x| if x == f32::NEG_INFINITY { 0.0 } else { (x - m).exp2() }).collect();
+            let z: f32 = p.iter().sum();
+            for c in 0..d {
+                let mut acc = 0f32;
+                for (j, &pj) in p.iter().enumerate() {
+                    acc += pj * v_all[j * d + c];
+                }
+                let expect = acc / z;
+                assert!(
+                    (out.at(r, c) - expect).abs() < 1e-4,
+                    "row {r} col {c}: {} vs {expect}",
+                    out.at(r, c)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_empty_prefix_is_pure_f32_tile() {
+        // pos0 = 0: no pages, only the causal f32 triangle — equals the
+        // exact base-2 reference on the chunk operands.
+        let (lq, d) = (8usize, 32usize);
+        let q = Tensor::new(vec![lq, d], rows(lq, d, 50));
+        let kc = Tensor::new(vec![lq, d], rows(lq, d, 51));
+        let vc = Tensor::new(vec![lq, d], rows(lq, d, 52));
+        let k = QuantPagedKv::new(d, KvFormat::Dual, 8);
+        let v = QuantPagedKv::new(d, KvFormat::Dual, 8);
+        let mut stats = KvPageStats::default();
+        let out = dma_attention_prefill_chunk(
+            &q, &kc, &vc, &k, &v, &KvPolicy { sink: 8, diag: 8 }, &mut stats);
+        assert_eq!(stats.total(), 0);
+        let pre = crate::mxfp::LOG2_E / (d as f32).sqrt();
+        let s = q.scale(pre).matmul_t(&kc);
+        let expect = crate::attention::reference::attention_from_logits_base2(
+            &s, &vc, lq, lq, true);
+        for (a, b) in out.data.iter().zip(&expect.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_head_grouping_bit_matches_per_head_calls() {
+        // GQA grouping for the prefill kernel: stacking n_rep head tiles
+        // into one call must equal per-head calls bit for bit, with
+        // 1/n_rep the page decodes (same contract as
+        // dma_attention_paged_heads).
+        let (pos0, lq, d, pt, n_rep) = (24usize, 4usize, 32usize, 8usize, 4usize);
+        let k = filled(pos0, d, KvFormat::Dual, pt, 90);
+        let v = filled(pos0, d, KvFormat::Dual, pt, 91);
+        let kc = Tensor::new(vec![lq, d], rows(lq, d, 92));
+        let vc = Tensor::new(vec![lq, d], rows(lq, d, 93));
+        let heads = rows(n_rep * lq, d, 94);
+        let policy = KvPolicy { sink: 8, diag: 16 };
+
+        let qs = Tensor::new(vec![n_rep * lq, d], heads.clone());
+        let mut s_group = KvPageStats::default();
+        let grouped = dma_attention_prefill_chunk(&qs, &kc, &vc, &k, &v, &policy, &mut s_group);
+
+        let mut s_single = KvPageStats::default();
+        for h in 0..n_rep {
+            let qh = Tensor::new(vec![lq, d], heads[h * lq * d..(h + 1) * lq * d].to_vec());
+            let one =
+                dma_attention_prefill_chunk(&qh, &kc, &vc, &k, &v, &policy, &mut s_single);
+            for r in 0..lq {
+                assert_eq!(one.row(r), grouped.row(h * lq + r), "head {h} row {r}");
+            }
+        }
+        assert_eq!(s_single.total(), n_rep as u64 * s_group.total());
+    }
+
+    #[test]
+    fn prefill_chunk_uses_position_aware_precision() {
+        // The chunk's frontier is past the prefix, so a prefix page that
+        // would be "frontier" for a decode at pos0-1 can fall out of the
+        // diag window once the chunk is long enough.
+        let (pos0, d, pt) = (32usize, 32usize, 8usize);
+        let k = filled(pos0, d, KvFormat::Dual, pt, 60);
+        let v = filled(pos0, d, KvFormat::Dual, pt, 61);
+        let policy = KvPolicy { sink: 8, diag: 8 };
+        let mk = |lq: usize, seed: u64| {
+            (
+                Tensor::new(vec![lq, d], rows(lq, d, seed)),
+                Tensor::new(vec![lq, d], rows(lq, d, seed + 1)),
+                Tensor::new(vec![lq, d], rows(lq, d, seed + 2)),
+            )
+        };
+        // Short chunk (frontier 33): last prefix page overlaps the window.
+        let (q, kc, vc) = mk(2, 70);
+        let mut s_near = KvPageStats::default();
+        dma_attention_prefill_chunk(&q, &kc, &vc, &k, &v, &policy, &mut s_near);
+        assert_eq!(s_near, KvPageStats { high_pages: 2, low_pages: 2 });
+        // Long chunk (frontier 47): the window no longer reaches the
+        // prefix at all — only the sink page decodes high.
+        let (q, kc, vc) = mk(16, 80);
+        let mut s_far = KvPageStats::default();
+        dma_attention_prefill_chunk(&q, &kc, &vc, &k, &v, &policy, &mut s_far);
+        assert_eq!(s_far, KvPageStats { high_pages: 1, low_pages: 3 });
     }
 
     #[test]

@@ -153,14 +153,26 @@ pub struct EngineConfig {
     pub decode_batches: Vec<usize>,
     /// Scheduler time slice: max decode steps before re-checking prefill.
     pub decode_slice: usize,
+    /// Chunked prefill: prompt tokens run per scheduler step per
+    /// prefilling sequence. Rounded up to a whole number of KV pages by
+    /// the engine; a long prompt no longer stalls decoding sequences for
+    /// its full length.
+    pub prefill_chunk: usize,
+    /// Radix prefix cache: retain the full quantized pages of completed
+    /// prefills keyed by their token content, so a request sharing a
+    /// prompt prefix skips prefill for the shared pages (quantized
+    /// formats only; ignored for the f32 cache).
+    pub prefix_cache: bool,
     /// KV-cache storage format: `f32` (legacy batch slots), `mxfp8-high`,
     /// `nvfp4-low`, or `dual` (both copies; the page policy picks).
     /// Quantized formats require a backend with a paged decode path
     /// (the host backend; PJRT executables are f32-only).
     pub kv_format: crate::kvquant::KvFormat,
-    /// Page precision policy for quantized caches: sink/frontier windows
-    /// in tokens (pages there decode MXFP8-high, the body NVFP4-low).
-    pub kv_precision_policy: crate::kvquant::KvPolicy,
+    /// Page precision policies for quantized caches: sink/frontier
+    /// windows in tokens (pages there decode MXFP8-high, the body
+    /// NVFP4-low). One entry broadcasts to every layer; otherwise one
+    /// entry per layer (`--kv-policy l0:S/D;l1:S/D;...`).
+    pub kv_precision_policies: Vec<crate::kvquant::KvPolicy>,
 }
 
 impl Default for EngineConfig {
@@ -172,8 +184,10 @@ impl Default for EngineConfig {
             queue_limit: 256,
             decode_batches: vec![1, 2, 4],
             decode_slice: 8,
+            prefill_chunk: 32,
+            prefix_cache: false,
             kv_format: crate::kvquant::KvFormat::F32,
-            kv_precision_policy: crate::kvquant::KvPolicy::default(),
+            kv_precision_policies: vec![crate::kvquant::KvPolicy::default()],
         }
     }
 }
@@ -228,7 +242,10 @@ mod tests {
     fn engine_config_defaults_to_f32_cache() {
         let cfg = EngineConfig::default();
         assert_eq!(cfg.kv_format, crate::kvquant::KvFormat::F32);
-        assert_eq!(cfg.kv_precision_policy.sink, 128);
-        assert_eq!(cfg.kv_precision_policy.diag, 128);
+        assert_eq!(cfg.kv_precision_policies.len(), 1);
+        assert_eq!(cfg.kv_precision_policies[0].sink, 128);
+        assert_eq!(cfg.kv_precision_policies[0].diag, 128);
+        assert!(!cfg.prefix_cache);
+        assert!(cfg.prefill_chunk > 0);
     }
 }

@@ -1,38 +1,66 @@
 //! The serving engine: continuous batching over a [`ModelBackend`].
 //!
-//! Policy (vLLM-style, prefill-prioritized):
+//! Policy (vLLM-style, chunked-prefill interleaved):
 //!
-//! 1. While batch slots and KV blocks are free, admit a queued request
-//!    and run its prefill (one sequence at a time — prefill of different
-//!    lengths cannot share a bucketed executable).
-//! 2. Run up to `decode_slice` batched decode steps over all active
-//!    slots, then loop back to (1) so newly arrived prompts are not
-//!    starved behind long generations.
-//! 3. A sequence retires on EOS, its token budget, or cache capacity.
+//! 1. While batch slots and KV blocks are free, admit a queued request:
+//!    consult the radix prefix cache ([`super::radix`]) for shared
+//!    quantized pages, pin them (pool fork), and open a streaming
+//!    prefill ([`ModelBackend::begin_prefill`]).
+//! 2. Advance every prefilling sequence by one `--prefill-chunk` slice —
+//!    prompts enter the cache incrementally, so a long prompt never
+//!    stalls decoding sequences for its full length.
+//! 3. Run up to `decode_slice` batched decode steps over the decoding
+//!    slots, then loop back to (1)/(2).
+//! 4. A sequence retires on EOS, its token budget, or cache capacity;
+//!    when a quantized prefill completes, its full prompt pages are
+//!    donated to the radix cache (block accounting forked out of the
+//!    sequence's table) so later requests sharing the prefix skip that
+//!    prefill work entirely.
 //!
 //! Admission uses the paged [`BlockPool`] accounting: a request is only
-//! admitted when its prompt + token budget fit in free KV blocks, so
-//! decode can never deadlock on cache space.
+//! admitted when its *unshared* prompt + token budget fit in free KV
+//! blocks (cold cached pages are LRU-evicted under pressure), so decode
+//! can never deadlock on cache space.
 
+use super::radix::{PrefixHit, RadixCache};
 use super::request::{FinishReason, Request, Response, SeqPhase, Tracked};
 use crate::config::EngineConfig;
-use crate::kvcache::{BlockPool, SeqKv, SlotCache};
-use crate::kvquant::{KvFormat, KvQuantConfig, QuantSlotKv, PAGE_TOKENS};
+use crate::kvcache::{BlockPool, SeqId, SeqKv};
+use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv, PAGE_TOKENS};
 use crate::model::argmax;
-use crate::runtime::ModelBackend;
+use crate::runtime::{ModelBackend, PrefillSeq};
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::time::Instant;
 
-struct Active {
-    tracked: Tracked,
-    slot: SeqKv,
+/// Scheduler state of one batch slot.
+enum SlotState {
+    /// Streaming prefill in flight (advanced one chunk per step).
+    Prefilling(PrefillSeq),
+    /// Generating tokens over its cache.
+    Decoding(SeqKv),
 }
 
-enum PrefillOutcome {
-    /// A sequence was admitted and is now decoding.
-    Started,
-    /// A sequence finished (or failed) during prefill.
+struct Active {
+    tracked: Tracked,
+    state: SlotState,
+    /// Engine-issued [`BlockPool`] id of this sequence's own allocation.
+    /// Client-chosen request ids never enter the pool namespace — every
+    /// pool id (sequences, radix nodes, shared forks) comes from one
+    /// internal counter, so they cannot collide.
+    pool_id: SeqId,
+    /// Pool ids forked from radix-cache nodes (pins the shared pages'
+    /// admission blocks for this sequence's lifetime).
+    shared_forks: Vec<SeqId>,
+    /// Prompt tokens imported from the prefix cache (never prefilled
+    /// here).
+    shared_tokens: usize,
+}
+
+enum AdmitOutcome {
+    /// A sequence was admitted and is now prefilling.
+    Admitted,
+    /// A sequence failed during admission (immediate response).
     Finished(Response),
     /// Nothing admissible right now.
     NoWork,
@@ -43,7 +71,18 @@ enum PrefillOutcome {
 pub struct EngineStats {
     pub completed: u64,
     pub rejected: u64,
+    /// Prompt tokens actually run through the model (prefix-cache hits
+    /// are excluded — they skip prefill).
     pub prefill_tokens: u64,
+    /// Prefill chunks processed (chunked scheduler work units).
+    pub prefill_chunks: u64,
+    /// Scheduler iterations ([`Engine::step`] calls).
+    pub engine_steps: u64,
+    /// Requests that imported at least one shared page.
+    pub prefix_hits: u64,
+    /// Prompt tokens served from the radix prefix cache instead of
+    /// prefill.
+    pub prefix_hit_tokens: u64,
     pub decode_tokens: u64,
     pub decode_steps: u64,
     pub decode_batch_sum: u64,
@@ -68,6 +107,16 @@ impl EngineStats {
         }
     }
 
+    /// Mean prefill chunks per scheduler step — the interleaving ratio
+    /// the chunked scheduler actually achieved.
+    pub fn mean_chunks_per_step(&self) -> f64 {
+        if self.engine_steps == 0 {
+            0.0
+        } else {
+            self.prefill_chunks as f64 / self.engine_steps as f64
+        }
+    }
+
     /// Cache bytes-per-token compression vs f32 (1.0 for the f32 cache).
     pub fn kv_compression(&self) -> f64 {
         crate::metrics::compression_ratio(
@@ -88,6 +137,15 @@ pub struct Engine {
     kv_quant: Option<KvQuantConfig>,
     /// `(n_layers, n_kv_heads, d_head)` from the backend.
     kv_dims: (usize, usize, usize),
+    /// Radix prefix cache of shared quantized pages (quantized formats
+    /// with `prefix_cache` on).
+    radix: Option<RadixCache>,
+    /// Effective prefill chunk (config value rounded up to whole pages).
+    prefill_chunk: usize,
+    /// Id source for every [`BlockPool`] sequence this engine creates
+    /// (request allocations, radix nodes, shared forks). Pool ids are
+    /// never taken from client-supplied request ids.
+    next_internal: u64,
     pub stats: EngineStats,
 }
 
@@ -107,8 +165,19 @@ impl Engine {
             format => Some(KvQuantConfig {
                 format,
                 page_tokens: block_tokens,
-                policy: cfg.kv_precision_policy,
+                policies: if cfg.kv_precision_policies.is_empty() {
+                    vec![KvPolicy::default()]
+                } else {
+                    cfg.kv_precision_policies.clone()
+                },
             }),
+        };
+        // Sharing and chunking align on page boundaries.
+        let prefill_chunk = cfg.prefill_chunk.max(1).next_multiple_of(block_tokens);
+        let radix = if cfg.prefix_cache && kv_quant.is_some() {
+            Some(RadixCache::new(block_tokens))
+        } else {
+            None
         };
         let stats = EngineStats {
             kv_bytes_per_token: bpt as u64,
@@ -124,12 +193,20 @@ impl Engine {
             eos_token,
             kv_quant,
             kv_dims: (nl, hk, dh),
+            radix,
+            prefill_chunk,
+            next_internal: 0,
             stats,
         }
     }
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Pages currently resident in the radix prefix cache.
+    pub fn prefix_cache_pages(&self) -> usize {
+        self.radix.as_ref().map_or(0, RadixCache::len)
     }
 
     /// Number of requests currently queued + active (router load signal).
@@ -176,37 +253,208 @@ impl Engine {
         self.active.iter().position(Option::is_none)
     }
 
-    /// Try to admit + prefill one queued request.
-    fn try_prefill(&mut self) -> crate::Result<PrefillOutcome> {
+    fn next_internal_id(&mut self) -> u64 {
+        let id = self.next_internal;
+        self.next_internal += 1;
+        id
+    }
+
+    /// Release every pool holding of a sequence: its own allocation plus
+    /// the radix-node forks pinning shared pages.
+    fn release_holdings(&mut self, pool_id: SeqId, shared_forks: &[SeqId]) -> crate::Result<()> {
+        self.pool.release(pool_id)?;
+        for &id in shared_forks {
+            self.pool.release(id)?;
+        }
+        Ok(())
+    }
+
+    /// Try to admit one queued request into a free slot (phase 1).
+    fn try_admit(&mut self) -> crate::Result<AdmitOutcome> {
         let Some(slot_idx) = self.free_slot() else {
-            return Ok(PrefillOutcome::NoWork);
+            return Ok(AdmitOutcome::NoWork);
         };
-        // Admission: the head request must fit its full token budget.
         let Some(head) = self.queue.front() else {
-            return Ok(PrefillOutcome::NoWork);
+            return Ok(AdmitOutcome::NoWork);
         };
         let budget =
             head.req.tokens.len() + head.req.max_new_tokens.min(self.cfg.max_new_tokens);
-        if !self.pool.can_admit(budget) {
-            return Ok(PrefillOutcome::NoWork);
+
+        // Prefix-cache lookup. Sharing is capped at a prefill-chunk
+        // boundary strictly inside the prompt: the warm run's remaining
+        // chunk boundaries then coincide with the cold run's, so the
+        // suffix pages — and every decoded token — reproduce exactly, and
+        // at least one chunk always runs to produce the last-position
+        // logits.
+        let max_share =
+            (head.req.tokens.len().saturating_sub(1) / self.prefill_chunk) * self.prefill_chunk;
+        let mut hit = match &mut self.radix {
+            Some(r) if max_share > 0 => r.lookup(&head.req.tokens, head.req.dma, max_share),
+            _ => PrefixHit::empty(),
+        };
+        // A hit may end mid-chunk (tail pages evicted); keep only whole
+        // chunks so the suffix prefill chunks exactly like a cold run.
+        hit.align_to(self.prefill_chunk, PAGE_TOKENS);
+        // Pin the shared nodes before any eviction can release them.
+        let mut shared_forks = Vec::with_capacity(hit.pool_ids.len());
+        for &node_id in &hit.pool_ids {
+            let child = self.next_internal_id();
+            self.pool.fork(node_id, child)?;
+            shared_forks.push(child);
         }
+
+        // Admission: the unshared prompt + token budget must fit; cold
+        // cached pages are evicted LRU-first to make room. Stop as soon
+        // as an eviction frees no block (the page is still pinned by a
+        // running sequence's fork) — flushing more of the cache could not
+        // help this admission either.
+        let own_budget = budget - hit.tokens;
+        while !self.pool.can_admit(own_budget) {
+            // Only unpinned pages qualify (no running sequence forks
+            // their block), so every eviction frees a block.
+            let pool = &self.pool;
+            let evicted = self.radix.as_mut().and_then(|r| {
+                r.evict_lru_leaf(|id| pool.seq_max_refcount(id) == Some(1))
+            });
+            match evicted {
+                Some(id) => self.pool.release(id)?,
+                None => break,
+            }
+        }
+        if !self.pool.can_admit(own_budget) {
+            for id in shared_forks {
+                self.pool.release(id)?;
+            }
+            return Ok(AdmitOutcome::NoWork);
+        }
+
         let mut tracked = self.queue.pop_front().unwrap();
         tracked.queue_ms = tracked.enqueued.elapsed().as_secs_f64() * 1e3;
-        self.pool.allocate(tracked.req.id, budget)?;
+        let pool_id = self.next_internal_id();
+        self.pool.allocate(pool_id, own_budget)?;
 
-        let t0 = Instant::now();
-        let out = match self.backend.prefill(&tracked.req.tokens, tracked.req.dma) {
-            Ok(o) => o,
+        // Seed a quantized slot with the shared pages (zero-copy) and
+        // open the streaming prefill.
+        let seed = if hit.tokens > 0 {
+            let (nl, hk, dh) = self.kv_dims;
+            let mut slot =
+                QuantSlotKv::new(self.kv_quant.clone().unwrap(), nl, hk, dh);
+            hit.seed(&mut slot);
+            Some(slot)
+        } else {
+            None
+        };
+        let seq = match self.backend.begin_prefill(
+            &tracked.req.tokens,
+            tracked.req.dma,
+            self.kv_quant.as_ref(),
+            seed,
+        ) {
+            Ok(s) => s,
             Err(e) => {
-                self.pool.release(tracked.req.id)?;
+                self.release_holdings(pool_id, &shared_forks)?;
                 self.stats.rejected += 1;
                 let mut resp = tracked.respond(FinishReason::Rejected);
                 resp.error = Some(e.to_string());
-                return Ok(PrefillOutcome::Finished(resp));
+                return Ok(AdmitOutcome::Finished(resp));
             }
         };
-        tracked.prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-        self.stats.prefill_tokens += tracked.req.tokens.len() as u64;
+        if hit.tokens > 0 {
+            self.stats.prefix_hits += 1;
+            self.stats.prefix_hit_tokens += hit.tokens as u64;
+        }
+        tracked.phase = SeqPhase::Prefilling { done_tokens: seq.done };
+        self.active[slot_idx] = Some(Active {
+            tracked,
+            state: SlotState::Prefilling(seq),
+            pool_id,
+            shared_forks,
+            shared_tokens: hit.tokens,
+        });
+        Ok(AdmitOutcome::Admitted)
+    }
+
+    /// Advance the prefilling sequence in `idx` by one chunk (phase 2);
+    /// returns a response when it finishes (or fails) outright.
+    fn advance_prefill(&mut self, idx: usize) -> crate::Result<Option<Response>> {
+        let is_prefilling = matches!(
+            self.active[idx].as_ref().map(|a| &a.state),
+            Some(SlotState::Prefilling(_))
+        );
+        if !is_prefilling {
+            return Ok(None);
+        }
+        let mut act = self.active[idx].take().unwrap();
+        let SlotState::Prefilling(ref mut seq) = act.state else { unreachable!() };
+        let before = seq.done;
+        let t0 = Instant::now();
+        if let Err(e) = self.backend.prefill_chunk(seq, self.prefill_chunk) {
+            self.release_holdings(act.pool_id, &act.shared_forks)?;
+            self.stats.rejected += 1;
+            let mut resp = act.tracked.respond(FinishReason::Rejected);
+            resp.error = Some(e.to_string());
+            return Ok(Some(resp));
+        }
+        act.tracked.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.prefill_chunks += 1;
+        let SlotState::Prefilling(ref seq) = act.state else { unreachable!() };
+        self.stats.prefill_tokens += (seq.done - before) as u64;
+        act.tracked.phase = SeqPhase::Prefilling { done_tokens: seq.done };
+        if !seq.is_done() {
+            self.active[idx] = Some(act);
+            return Ok(None);
+        }
+        self.complete_prefill(idx, act)
+    }
+
+    /// Prefill finished: close the streaming state, donate prompt pages
+    /// to the radix cache, take the first token and either retire the
+    /// sequence immediately or move it to decoding.
+    fn complete_prefill(
+        &mut self,
+        idx: usize,
+        act: Active,
+    ) -> crate::Result<Option<Response>> {
+        let Active { mut tracked, state, pool_id, shared_forks, shared_tokens } = act;
+        let SlotState::Prefilling(seq) = state else { unreachable!() };
+        // finish_prefill is real work for deferring backends (PJRT runs
+        // the whole monolithic prefill here) — it counts as prefill time.
+        let t0 = Instant::now();
+        let out = match self.backend.finish_prefill(seq) {
+            Ok(o) => o,
+            Err(e) => {
+                self.release_holdings(pool_id, &shared_forks)?;
+                self.stats.rejected += 1;
+                let mut resp = tracked.respond(FinishReason::Rejected);
+                resp.error = Some(e.to_string());
+                return Ok(Some(resp));
+            }
+        };
+        tracked.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+
+        // Donate the prompt's full pages to the prefix cache: each new
+        // page's admission block is forked out of this sequence's table,
+        // so it stays reserved after the sequence releases.
+        if let (Some(radix), SeqKv::Quant(q)) = (self.radix.as_mut(), &out.kv) {
+            let shared_pages = shared_tokens / PAGE_TOKENS;
+            let pool = &mut self.pool;
+            let next_internal = &mut self.next_internal;
+            radix.insert(&tracked.req.tokens, tracked.req.dma, q, |j| {
+                if j < shared_pages {
+                    // An upstream page was evicted mid-flight; this
+                    // sequence's blocks only cover its own suffix.
+                    return None;
+                }
+                let id = *next_internal;
+                match pool.fork_block(pool_id, id, j - shared_pages) {
+                    Ok(()) => {
+                        *next_internal += 1;
+                        Some(id)
+                    }
+                    Err(_) => None,
+                }
+            });
+        }
 
         // First generated token comes from the prefill logits.
         let tok = argmax(&out.last_logits);
@@ -217,35 +465,35 @@ impl Engine {
         // Single-token request or instant EOS finishes immediately.
         let max_new = tracked.req.max_new_tokens.min(self.cfg.max_new_tokens);
         if tok == self.eos_token || max_new <= 1 {
-            self.pool.release(tracked.req.id)?;
+            self.release_holdings(pool_id, &shared_forks)?;
             self.stats.completed += 1;
             let reason = if tok == self.eos_token {
                 FinishReason::Eos
             } else {
                 FinishReason::Length
             };
-            return Ok(PrefillOutcome::Finished(tracked.respond(reason)));
+            return Ok(Some(tracked.respond(reason)));
         }
-        // Quantize the prefill cache into the paged store when the
-        // configured format asks for one; decode then runs entirely over
-        // quantized pages.
-        let slot = match &self.kv_quant {
-            None => SeqKv::F32(out.slot),
-            Some(qcfg) => {
-                let (nl, hk, dh) = self.kv_dims;
-                let layout = SlotCache::new(nl, hk, self.backend.cache_len(), dh);
-                SeqKv::Quant(QuantSlotKv::from_slot(&out.slot, &layout, *qcfg))
-            }
-        };
-        self.active[slot_idx] = Some(Active { tracked, slot });
-        Ok(PrefillOutcome::Started)
+        self.active[idx] = Some(Active {
+            tracked,
+            state: SlotState::Decoding(out.kv),
+            pool_id,
+            shared_forks,
+            shared_tokens,
+        });
+        Ok(None)
     }
 
-    /// One batched decode step over all active sequences; returns any
+    /// One batched decode step over all decoding sequences; returns any
     /// completed responses.
     fn decode_step(&mut self) -> crate::Result<Vec<Response>> {
         let idxs: Vec<usize> = (0..self.active.len())
-            .filter(|&i| self.active[i].is_some())
+            .filter(|&i| {
+                matches!(
+                    self.active[i].as_ref().map(|a| &a.state),
+                    Some(SlotState::Decoding(_))
+                )
+            })
             .collect();
         if idxs.is_empty() {
             return Ok(vec![]);
@@ -262,34 +510,43 @@ impl Engine {
             .map(|&i| self.active[i].take().unwrap())
             .collect();
         {
-            let mut slot_refs: Vec<Option<&mut SeqKv>> =
-                taken.iter_mut().map(|a| Some(&mut a.slot)).collect();
+            let mut slot_refs: Vec<Option<&mut SeqKv>> = taken
+                .iter_mut()
+                .map(|a| match &mut a.state {
+                    SlotState::Decoding(kv) => Some(kv),
+                    SlotState::Prefilling(_) => {
+                        unreachable!("taken slots are decoding by construction")
+                    }
+                })
+                .collect();
             let logits = self.backend.decode(&tokens, &mut slot_refs)?;
             let vocab = self.backend.vocab();
             let dt = t0.elapsed().as_secs_f64() * 1e3;
             let batch_n = taken.len();
             self.stats.decode_steps += 1;
             self.stats.decode_batch_sum += batch_n as u64;
+            // No pool.extend here: admission already reserved the full
+            // prompt + max_new_tokens budget, so growing the accounting
+            // per generated token would double-count — and, with the
+            // radix cache retaining blocks, could spuriously exhaust the
+            // pool mid-decode.
             for (bi, act) in taken.iter_mut().enumerate() {
                 let tok = argmax(&logits[bi * vocab..(bi + 1) * vocab]);
                 act.tracked.output.push(tok);
                 act.tracked.next_token = tok;
                 act.tracked.decode_ms += dt / batch_n as f64;
                 self.stats.decode_tokens += 1;
-                self.pool.extend(act.tracked.req.id, 1)?;
             }
         }
-        // Cache-byte and page-precision reporting.
-        let live: u64 = taken.iter().map(|a| a.slot.resident_bytes() as u64).sum();
-        self.stats.kv_bytes_peak = self.stats.kv_bytes_peak.max(live);
-        self.stats.kv_pages = self.backend.kv_page_stats();
-
         // Retire finished sequences, return the rest to their slots.
         let mut done = Vec::new();
         for (k, act) in taken.into_iter().enumerate() {
             let max_new = act.tracked.req.max_new_tokens.min(self.cfg.max_new_tokens);
             let last = *act.tracked.output.last().unwrap();
-            let cache_full = act.slot.pos() >= self.backend.cache_len();
+            let SlotState::Decoding(ref kv) = act.state else {
+                unreachable!("taken slots are decoding by construction")
+            };
+            let cache_full = kv.pos() >= self.backend.cache_len();
             let reason = if last == self.eos_token {
                 Some(FinishReason::Eos)
             } else if act.tracked.output.len() >= max_new {
@@ -301,7 +558,7 @@ impl Engine {
             };
             match reason {
                 Some(r) => {
-                    self.pool.release(act.tracked.req.id)?;
+                    self.release_holdings(act.pool_id, &act.shared_forks)?;
                     self.stats.completed += 1;
                     done.push(act.tracked.respond(r));
                 }
@@ -311,24 +568,60 @@ impl Engine {
         Ok(done)
     }
 
-    /// Run one scheduling iteration (prefill-first, then a decode slice).
-    /// Returns completed responses.
+    /// Sample peak resident cache bytes and the backend's cumulative
+    /// page-decode counters with every slot in place. Called from
+    /// [`Self::step`] after the prefill and decode phases so pure-prefill
+    /// windows (where `decode_step` never runs) are covered too — chunked
+    /// prefill is exactly when a sequence's cache grows.
+    fn sample_kv_stats(&mut self) {
+        let live: u64 = self
+            .active
+            .iter()
+            .flatten()
+            .map(|a| match &a.state {
+                SlotState::Decoding(kv) => kv.resident_bytes() as u64,
+                SlotState::Prefilling(seq) => seq.resident_bytes() as u64,
+            })
+            .sum();
+        self.stats.kv_bytes_peak = self.stats.kv_bytes_peak.max(live);
+        self.stats.kv_pages = self.backend.kv_page_stats();
+    }
+
+    /// Run one scheduling iteration (admit, one prefill chunk per
+    /// prefilling sequence, then a decode slice). Returns completed
+    /// responses.
     pub fn step(&mut self) -> crate::Result<Vec<Response>> {
+        self.stats.engine_steps += 1;
         let mut out = Vec::new();
-        // Phase 1: admit + prefill while possible.
+        // Phase 1: admit while slots and KV blocks allow.
         loop {
-            match self.try_prefill()? {
-                PrefillOutcome::Started => {}
-                PrefillOutcome::Finished(resp) => out.push(resp),
-                PrefillOutcome::NoWork => break,
+            match self.try_admit()? {
+                AdmitOutcome::Admitted => {}
+                AdmitOutcome::Finished(resp) => out.push(resp),
+                AdmitOutcome::NoWork => break,
             }
         }
-        // Phase 2: a slice of decode steps.
+        // Phase 2: one chunk per prefilling sequence — prefill and decode
+        // interleave instead of prefill running whole prompts to
+        // completion first.
+        for idx in 0..self.active.len() {
+            if let Some(resp) = self.advance_prefill(idx)? {
+                out.push(resp);
+            }
+        }
+        self.sample_kv_stats();
+        // Phase 3: a slice of decode steps.
         for _ in 0..self.cfg.decode_slice {
             let done = self.decode_step()?;
             let empty = done.is_empty();
             out.extend(done);
-            if empty && self.active.iter().all(Option::is_none) {
+            if empty
+                && !self
+                    .active
+                    .iter()
+                    .flatten()
+                    .any(|a| matches!(a.state, SlotState::Decoding(_)))
+            {
                 break;
             }
             // Re-check prefill as soon as a slot freed up.
@@ -336,6 +629,7 @@ impl Engine {
                 break;
             }
         }
+        self.sample_kv_stats();
         Ok(out)
     }
 
@@ -368,7 +662,9 @@ pub struct EngineHandle {
     pub rx: std::sync::Mutex<mpsc::Receiver<Response>>,
     join: Option<std::thread::JoinHandle<()>>,
     load: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    prefix_hit_tokens: std::sync::Arc<std::sync::atomic::AtomicU64>,
     kv_format: &'static str,
+    kv_policy: String,
 }
 
 impl EngineHandle {
@@ -379,10 +675,13 @@ impl EngineHandle {
         F: FnOnce() -> crate::Result<Box<dyn ModelBackend>> + Send + 'static,
     {
         let kv_format = cfg.kv_format.name();
+        let kv_policy = KvPolicy::format_layers(&cfg.kv_precision_policies);
         let (tx, rx_msg) = mpsc::channel::<Msg>();
         let (tx_resp, rx) = mpsc::channel::<Response>();
         let load = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let load2 = load.clone();
+        let prefix_hit_tokens = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let pht2 = prefix_hit_tokens.clone();
         let join = std::thread::spawn(move || {
             let backend = match make_backend() {
                 Ok(b) => b,
@@ -427,9 +726,21 @@ impl EngineHandle {
                     }
                 }
                 load2.store(engine.load(), std::sync::atomic::Ordering::Relaxed);
+                pht2.store(
+                    engine.stats.prefix_hit_tokens,
+                    std::sync::atomic::Ordering::Relaxed,
+                );
             }
         });
-        EngineHandle { tx, rx: std::sync::Mutex::new(rx), join: Some(join), load, kv_format }
+        EngineHandle {
+            tx,
+            rx: std::sync::Mutex::new(rx),
+            join: Some(join),
+            load,
+            prefix_hit_tokens,
+            kv_format,
+            kv_policy,
+        }
     }
 
     pub fn submit(&self, req: Request) -> crate::Result<()> {
@@ -445,6 +756,18 @@ impl EngineHandle {
     /// KV-cache storage format this worker was configured with.
     pub fn kv_format(&self) -> &'static str {
         self.kv_format
+    }
+
+    /// Precision policy spec this worker was configured with
+    /// (`SINK/DIAG` or per-layer `l0:...;l1:...`).
+    pub fn kv_policy(&self) -> &str {
+        &self.kv_policy
+    }
+
+    /// Prompt tokens this worker served from its prefix cache so far.
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.prefix_hit_tokens
+            .load(std::sync::atomic::Ordering::Relaxed)
     }
 
     pub fn shutdown(mut self) {
@@ -525,9 +848,9 @@ mod tests {
         let mut be = HostBackend::for_tests();
         for r in &resps {
             let rq = req(r.id, if r.id == 1 { 6 } else { 9 }, 4);
-            let out = be.prefill(&rq.tokens, false).unwrap();
+            let out = be.prefill(&rq.tokens, false, None).unwrap();
             let mut toks = vec![crate::model::argmax(&out.last_logits)];
-            let mut slot = SeqKv::F32(out.slot);
+            let mut slot = out.kv;
             while toks.len() < 4 && *toks.last().unwrap() != 5 {
                 let lg = be
                     .decode(&[*toks.last().unwrap()], &mut [Some(&mut slot)])
@@ -539,6 +862,45 @@ mod tests {
     }
 
     #[test]
+    fn chunked_prefill_interleaves_with_decode() {
+        // A long prompt admitted while another sequence decodes must not
+        // be prefilled in one scheduler step: its chunks spread over
+        // several steps, and the decoding sequence keeps making progress
+        // between them.
+        let cfg = EngineConfig {
+            max_new_tokens: 24,
+            prefill_chunk: 16,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        let mut resps = Vec::new();
+        // Short prompt, long generation: becomes the decoder.
+        e.submit(req(1, 4, 24));
+        resps.extend(e.step().unwrap());
+        let decoded_before = e.stats.decode_tokens;
+        assert!(decoded_before > 0);
+        // Long prompt arrives: 64 tokens = 4 chunks of 16.
+        e.submit(req(2, 64, 2));
+        let chunks_before = e.stats.prefill_chunks;
+        resps.extend(e.step().unwrap());
+        assert_eq!(
+            e.stats.prefill_chunks - chunks_before,
+            1,
+            "exactly one chunk per step per prefilling sequence"
+        );
+        // The decoder advanced within the same step.
+        assert!(e.stats.decode_tokens > decoded_before);
+        // Three more steps finish the prefill.
+        resps.extend(e.step().unwrap());
+        resps.extend(e.step().unwrap());
+        resps.extend(e.step().unwrap());
+        assert_eq!(e.stats.prefill_tokens, 4 + 64);
+        assert!(e.stats.mean_chunks_per_step() > 0.0);
+        resps.extend(e.run_until_idle().unwrap());
+        assert_eq!(resps.len(), 2);
+    }
+
+    #[test]
     fn quantized_cache_engine_round_trip() {
         // The engine serves end to end over each quantized format; the
         // admission accounting reflects the format's bytes/token.
@@ -546,7 +908,7 @@ mod tests {
             let cfg = EngineConfig {
                 max_new_tokens: 4,
                 kv_format: format,
-                kv_precision_policy: crate::kvquant::KvPolicy { sink: 16, diag: 16 },
+                kv_precision_policies: vec![crate::kvquant::KvPolicy { sink: 16, diag: 16 }],
                 ..Default::default()
             };
             let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
@@ -562,6 +924,112 @@ mod tests {
             assert!(e.stats.kv_pages.total() > 0, "{format:?}");
             assert!(e.stats.kv_bytes_peak > 0, "{format:?}");
         }
+    }
+
+    #[test]
+    fn prefix_cache_skips_shared_prefill() {
+        // Same prompt twice through a prefix-cached quantized engine: the
+        // second request prefills only the last chunk and produces the
+        // same tokens.
+        let prompt_len = 48usize;
+        let mk = |prefix_cache: bool| EngineConfig {
+            max_new_tokens: 4,
+            kv_format: KvFormat::Dual,
+            prefill_chunk: 16,
+            prefix_cache,
+            kv_precision_policies: vec![crate::kvquant::KvPolicy { sink: 16, diag: 16 }],
+            ..Default::default()
+        };
+        let mut cold = Engine::new(Box::new(HostBackend::for_tests()), mk(false), 5);
+        cold.submit(req(1, prompt_len, 4));
+        let cold_resps = cold.run_until_idle().unwrap();
+
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), mk(true), 5);
+        e.submit(req(1, prompt_len, 4));
+        let first = e.run_until_idle().unwrap();
+        assert_eq!(first[0].output, cold_resps[0].output);
+        assert_eq!(e.stats.prefill_tokens, prompt_len as u64);
+        assert_eq!(e.stats.prefix_hit_tokens, 0);
+        // 48 tokens = 3 pages donated to the cache.
+        assert_eq!(e.prefix_cache_pages(), 3);
+
+        e.submit(req(2, prompt_len, 4));
+        let second = e.run_until_idle().unwrap();
+        assert_eq!(second[0].output, cold_resps[0].output, "warm run diverged");
+        // Sharing is capped inside the prompt: 32 of 48 tokens shared,
+        // the final chunk prefilled.
+        assert_eq!(e.stats.prefix_hit_tokens, 32);
+        assert_eq!(e.stats.prefix_hits, 1);
+        assert_eq!(e.stats.prefill_tokens, prompt_len as u64 + 16);
+    }
+
+    #[test]
+    fn prefix_cache_never_crosses_attention_modes() {
+        // Pages prefilled under native attention must not seed a DMA-mode
+        // request with the same tokens (and vice versa): first-chunk
+        // hidden states differ between the modes.
+        let cfg = EngineConfig {
+            max_new_tokens: 4,
+            kv_format: KvFormat::Dual,
+            prefill_chunk: 16,
+            prefix_cache: true,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        let tokens: Vec<i32> = (0..48).map(|i| ((i * 7) % 58) as i32 + 6).collect();
+        let mk = |id: u64, dma: bool| Request {
+            id,
+            tokens: tokens.clone(),
+            max_new_tokens: 4,
+            dma,
+        };
+        e.submit(mk(1, false));
+        e.run_until_idle().unwrap();
+        // Same tokens, other mode: no hit.
+        e.submit(mk(2, true));
+        e.run_until_idle().unwrap();
+        assert_eq!(e.stats.prefix_hit_tokens, 0, "cross-mode prefix hit");
+        // Same tokens, same mode as the second request: hits.
+        e.submit(mk(3, true));
+        e.run_until_idle().unwrap();
+        assert_eq!(e.stats.prefix_hit_tokens, 32);
+    }
+
+    #[test]
+    fn prefix_cache_evicts_under_pressure() {
+        // Fill the cache with disjoint prompts, then admit requests whose
+        // budgets need the blocks back: eviction must free them and every
+        // request still completes.
+        let cfg = EngineConfig {
+            max_new_tokens: 4,
+            kv_format: KvFormat::Dual,
+            prefill_chunk: 16,
+            prefix_cache: true,
+            queue_limit: 64,
+            ..Default::default()
+        };
+        // Dual format: 111 pool blocks. 40 disjoint 60-token prompts
+        // retain 3 cache pages each — the cache alone would need 120
+        // blocks, so admission must evict LRU pages along the way.
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        let mut resps = Vec::new();
+        for i in 0..40u64 {
+            let mut r = req(i, 60, 4);
+            // Disjoint prompts: no sharing, maximal cache churn.
+            for t in r.tokens.iter_mut() {
+                *t = ((*t as u64 * (i + 3)) % 58) as i32 + 6;
+            }
+            assert!(e.submit(r).is_none());
+            resps.extend(e.step().unwrap());
+        }
+        resps.extend(e.run_until_idle().unwrap());
+        assert_eq!(resps.len(), 40);
+        assert!(e.idle());
+        // Eviction really ran: fewer pages resident than were donated.
+        assert!(e.prefix_cache_pages() < 120, "{}", e.prefix_cache_pages());
+        // The pool must not have leaked: all blocks either free or held
+        // by resident cache pages.
+        assert!(e.pool.check_invariants().is_ok());
     }
 
     #[test]
@@ -598,6 +1066,8 @@ mod tests {
         e.run_until_idle().unwrap();
         assert_eq!(e.stats.completed, 2);
         assert_eq!(e.stats.prefill_tokens, 16);
+        assert!(e.stats.prefill_chunks >= 2);
+        assert!(e.stats.engine_steps > 0);
         assert!(e.stats.decode_tokens > 0);
     }
 
@@ -609,6 +1079,7 @@ mod tests {
             cfg,
             5,
         );
+        assert_eq!(h.kv_policy(), "128/128");
         for i in 0..3 {
             h.submit(req(i, 6, 3)).unwrap();
         }

@@ -4,6 +4,7 @@
 //! plugs into (vLLM-style, adapted to bucketed PJRT executables).
 
 pub mod engine;
+pub mod radix;
 pub mod request;
 pub mod router;
 

@@ -1,0 +1,434 @@
+//! Radix (token-trie) prefix cache of immutable quantized KV pages.
+//!
+//! Every edge of the trie is one *full* cache page worth of prompt
+//! tokens (`page_tokens`, matching the [`crate::kvcache::BlockPool`]
+//! block size); a node holds the quantized K/V pages produced for that
+//! token range — one [`Arc`] page per (layer, kv head) — plus the pool
+//! accounting id that keeps the page's admission block reserved while it
+//! is resident.
+//!
+//! Because the chunked quantized prefill is cache-authoritative (chunk
+//! attention reads the quantized prefix pages, see
+//! [`crate::model::CpuModel::prefill_chunk_quant`]), a page's content is
+//! a pure function of the prompt tokens before it: two prompts sharing a
+//! prefix produce bit-identical pages for it, so handing a new request
+//! the cached pages and prefilling only the suffix reproduces its
+//! cold-start outputs token for token — while the MXFP page format makes
+//! each retained token 3–6x cheaper than an f32 prefix cache would be.
+//!
+//! Sharing is pure [`Arc`] cloning, no payload copies: [`PrefixHit::seed`]
+//! imports the hit pages into a fresh sequence slot via
+//! [`crate::kvquant::QuantPagedKv::push_shared_page`] (the related
+//! `QuantPagedKv::fork` is the whole-store sequence-fork primitive for
+//! future beam/parallel sampling — same pages, copy-on-write frontier).
+//! Pool accounting is wired through
+//! [`crate::kvcache::BlockPool::fork_block`] (donation: one admission
+//! block per cached page, split out of the donor's table) and
+//! [`BlockPool::fork`](crate::kvcache::BlockPool::fork) (each sharer pins
+//! the node's block for its lifetime). Eviction is LRU over leaves and
+//! only targets unpinned pages, so every eviction frees a block.
+
+use crate::kvcache::SeqId;
+use crate::kvquant::QuantSlotKv;
+use crate::mxfp::fused::DualQuantized;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// `[layer][kv head]` page payload of one node.
+type PagePlane = Vec<Vec<Arc<DualQuantized>>>;
+
+struct Node {
+    /// BlockPool accounting id holding this page's admission block.
+    pool_id: SeqId,
+    k: PagePlane,
+    v: PagePlane,
+    /// LRU stamp (monotonic clock; larger = touched more recently).
+    stamp: u64,
+    children: BTreeMap<Vec<i32>, Node>,
+}
+
+/// Result of a prefix lookup: everything the engine needs to seed a
+/// sequence — shared token count, the pool ids to fork for the sequence's
+/// lifetime, and the page arcs in prefix order.
+pub struct PrefixHit {
+    pub tokens: usize,
+    pub pool_ids: Vec<SeqId>,
+    /// `[page][layer][head]` key pages, prefix order.
+    pub k: Vec<PagePlane>,
+    /// `[page][layer][head]` value pages, prefix order.
+    pub v: Vec<PagePlane>,
+}
+
+impl PrefixHit {
+    pub fn empty() -> PrefixHit {
+        PrefixHit { tokens: 0, pool_ids: Vec::new(), k: Vec::new(), v: Vec::new() }
+    }
+
+    /// Drop trailing pages until the shared length is a multiple of
+    /// `granularity` (the engine's prefill chunk): resuming prefill at a
+    /// chunk boundary keeps the warm run's chunk layout — and therefore
+    /// its pages and tokens — identical to the cold run's.
+    pub fn align_to(&mut self, granularity: usize, page_tokens: usize) {
+        // A granularity that is not a whole number of pages would leave
+        // `tokens` pointing past the retained page lists.
+        assert!(
+            granularity >= page_tokens && granularity % page_tokens == 0,
+            "align granularity {granularity} must be a multiple of page size {page_tokens}"
+        );
+        let aligned = (self.tokens / granularity) * granularity;
+        if aligned == self.tokens {
+            return;
+        }
+        let pages = aligned / page_tokens;
+        self.tokens = aligned;
+        self.pool_ids.truncate(pages);
+        self.k.truncate(pages);
+        self.v.truncate(pages);
+    }
+
+    /// Seed a fresh quantized slot with the shared pages (zero-copy).
+    pub fn seed(&self, slot: &mut QuantSlotKv) {
+        for (pk, pv) in self.k.iter().zip(&self.v) {
+            for (li, heads) in pk.iter().enumerate() {
+                for (h, page) in heads.iter().enumerate() {
+                    slot.k[li][h].push_shared_page(page.clone());
+                    slot.v[li][h].push_shared_page(pv[li][h].clone());
+                }
+            }
+        }
+        slot.pos = self.tokens;
+    }
+}
+
+pub struct RadixCache {
+    page_tokens: usize,
+    /// One trie per prefill attention mode (`[native, dma]`): page
+    /// content is a function of the prompt tokens AND the attention mode
+    /// (the DMA kernel's mixed-precision first chunk produces different
+    /// hidden states than native), so cross-mode reuse would break the
+    /// warm-run-equals-cold-run contract.
+    roots: [BTreeMap<Vec<i32>, Node>; 2],
+    clock: u64,
+    pages: usize,
+}
+
+impl RadixCache {
+    pub fn new(page_tokens: usize) -> RadixCache {
+        RadixCache {
+            page_tokens,
+            roots: [BTreeMap::new(), BTreeMap::new()],
+            clock: 0,
+            pages: 0,
+        }
+    }
+
+    /// Resident pages.
+    pub fn len(&self) -> usize {
+        self.pages
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pages == 0
+    }
+
+    /// Longest cached prefix of `prompt` under attention mode `dma`,
+    /// capped at `max_tokens` (the engine caps at a prefill-chunk
+    /// boundary strictly inside the prompt so chunk boundaries — and
+    /// therefore outputs — match the cold-start run exactly). Matched
+    /// nodes are LRU-touched.
+    pub fn lookup(&mut self, prompt: &[i32], dma: bool, max_tokens: usize) -> PrefixHit {
+        let pt = self.page_tokens;
+        let mut hit = PrefixHit::empty();
+        let mut level = &mut self.roots[dma as usize];
+        for chunk in prompt.chunks_exact(pt) {
+            if hit.tokens + pt > max_tokens {
+                break;
+            }
+            let cur = level;
+            let Some(node) = cur.get_mut(chunk) else { break };
+            self.clock += 1;
+            node.stamp = self.clock;
+            hit.tokens += pt;
+            hit.pool_ids.push(node.pool_id);
+            hit.k.push(node.k.clone());
+            hit.v.push(node.v.clone());
+            level = &mut node.children;
+        }
+        hit
+    }
+
+    /// Insert the full pages of a freshly prefilled prompt. Pages already
+    /// resident are LRU-touched; for each new page `register(page_index)`
+    /// must reserve pool accounting and return its id (returning `None`
+    /// stops the insertion — no capacity left for the cache). Returns the
+    /// number of pages inserted.
+    pub fn insert(
+        &mut self,
+        prompt: &[i32],
+        dma: bool,
+        slot: &QuantSlotKv,
+        mut register: impl FnMut(usize) -> Option<SeqId>,
+    ) -> usize {
+        let pt = self.page_tokens;
+        let mut inserted = 0;
+        let mut level = &mut self.roots[dma as usize];
+        for (j, chunk) in prompt.chunks_exact(pt).enumerate() {
+            if j >= slot.k[0][0].n_full_pages() {
+                break;
+            }
+            let cur = level;
+            if !cur.contains_key(chunk) {
+                let Some(pool_id) = register(j) else { break };
+                let plane = |s: &[Vec<crate::kvquant::QuantPagedKv>]| -> PagePlane {
+                    s.iter()
+                        .map(|heads| heads.iter().map(|st| st.page_arc(j).clone()).collect())
+                        .collect()
+                };
+                self.clock += 1;
+                cur.insert(
+                    chunk.to_vec(),
+                    Node {
+                        pool_id,
+                        k: plane(&slot.k),
+                        v: plane(&slot.v),
+                        stamp: self.clock,
+                        children: BTreeMap::new(),
+                    },
+                );
+                self.pages += 1;
+                inserted += 1;
+            }
+            let node = cur.get_mut(chunk).unwrap();
+            self.clock += 1;
+            node.stamp = self.clock;
+            level = &mut node.children;
+        }
+        inserted
+    }
+
+    /// Evict the least-recently-used *leaf* page whose pool id passes
+    /// `evictable` (the engine supplies "no running sequence still forks
+    /// its block", so every eviction really frees a block), returning its
+    /// pool id for the engine to release. `None` when nothing qualifies.
+    ///
+    /// The scan walks both tries (O(pages)); fine at this testbed's cache
+    /// sizes — a stamp-ordered side index would make it O(log n) if the
+    /// cache ever grows past that.
+    pub fn evict_lru_leaf(&mut self, evictable: impl Fn(SeqId) -> bool) -> Option<SeqId> {
+        fn min_leaf(
+            level: &BTreeMap<Vec<i32>, Node>,
+            evictable: &impl Fn(SeqId) -> bool,
+        ) -> Option<(u64, Vec<Vec<i32>>)> {
+            let mut best: Option<(u64, Vec<Vec<i32>>)> = None;
+            for (key, node) in level {
+                let cand = if node.children.is_empty() {
+                    if evictable(node.pool_id) {
+                        Some((node.stamp, vec![key.clone()]))
+                    } else {
+                        None
+                    }
+                } else {
+                    min_leaf(&node.children, evictable).map(|(s, mut path)| {
+                        path.insert(0, key.clone());
+                        (s, path)
+                    })
+                };
+                if let Some((s, path)) = cand {
+                    let better = match &best {
+                        None => true,
+                        Some((bs, _)) => s < *bs,
+                    };
+                    if better {
+                        best = Some((s, path));
+                    }
+                }
+            }
+            best
+        }
+        // Globally-LRU qualifying leaf across both mode tries.
+        let (root_idx, path) = self
+            .roots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| min_leaf(r, &evictable).map(|(s, p)| (s, i, p)))
+            .min_by_key(|&(s, _, _)| s)
+            .map(|(_, i, p)| (i, p))?;
+        let mut level = &mut self.roots[root_idx];
+        for key in &path[..path.len() - 1] {
+            level = &mut level.get_mut(key).unwrap().children;
+        }
+        let node = level.remove(path.last().unwrap()).unwrap();
+        self.pages -= 1;
+        Some(node.pool_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig};
+    use crate::util::rng::Rng;
+
+    fn slot_with(tokens: usize, seed: u64) -> QuantSlotKv {
+        let cfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 4,
+            policies: vec![KvPolicy { sink: 4, diag: 4 }],
+        };
+        let mut s = QuantSlotKv::new(cfg, 2, 2, 32);
+        let mut rng = Rng::new(seed);
+        for li in 0..2 {
+            for h in 0..2 {
+                let rows: Vec<f32> =
+                    (0..tokens * 32).map(|_| rng.normal() as f32).collect();
+                s.k[li][h].append_rows(&rows);
+                s.v[li][h].append_rows(&rows);
+            }
+        }
+        s.pos = tokens;
+        s
+    }
+
+    fn prompt(n: usize) -> Vec<i32> {
+        (0..n).map(|i| (i % 50) as i32 + 1).collect()
+    }
+
+    #[test]
+    fn miss_then_hit_after_insert() {
+        let mut c = RadixCache::new(4);
+        let p = prompt(12);
+        assert_eq!(c.lookup(&p, false, 64).tokens, 0);
+
+        let slot = slot_with(12, 1);
+        let mut next = 100u64;
+        let n = c.insert(&p, false, &slot, |_| {
+            next += 1;
+            Some(next)
+        });
+        assert_eq!(n, 3);
+        assert_eq!(c.len(), 3);
+
+        let hit = c.lookup(&p, false, 64);
+        assert_eq!(hit.tokens, 12);
+        assert_eq!(hit.pool_ids.len(), 3);
+        // Payload pages are the very same Arcs the slot holds.
+        assert!(Arc::ptr_eq(&hit.k[0][1][0], slot.k[1][0].page_arc(0)));
+        assert!(Arc::ptr_eq(&hit.v[2][0][1], slot.v[0][1].page_arc(2)));
+
+        // A prompt sharing only the first 8 tokens matches two pages.
+        let mut p2 = prompt(12);
+        p2[9] = 49;
+        assert_eq!(c.lookup(&p2, false, 64).tokens, 8);
+        // The cap truncates to whole pages.
+        assert_eq!(c.lookup(&p, false, 9).tokens, 8);
+        assert_eq!(c.lookup(&p, false, 3).tokens, 0);
+    }
+
+    #[test]
+    fn seed_imports_shared_pages() {
+        let mut c = RadixCache::new(4);
+        let p = prompt(8);
+        let slot = slot_with(8, 2);
+        c.insert(&p, false, &slot, |j| Some(10 + j as u64));
+        let hit = c.lookup(&p, false, 8);
+        let cfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 4,
+            policies: vec![KvPolicy { sink: 4, diag: 4 }],
+        };
+        let mut seeded = QuantSlotKv::new(cfg, 2, 2, 32);
+        hit.seed(&mut seeded);
+        assert_eq!(seeded.pos, 8);
+        assert!(Arc::ptr_eq(seeded.k[1][1].page_arc(1), slot.k[1][1].page_arc(1)));
+    }
+
+    #[test]
+    fn insert_dedupes_and_stops_on_capacity() {
+        let mut c = RadixCache::new(4);
+        let p = prompt(16);
+        let slot = slot_with(16, 3);
+        // Only the first two registrations succeed.
+        let mut budget = 2;
+        let n = c.insert(&p, false, &slot, |j| {
+            if budget == 0 {
+                None
+            } else {
+                budget -= 1;
+                Some(20 + j as u64)
+            }
+        });
+        assert_eq!(n, 2);
+        // Re-insert with capacity: only the missing tail registers.
+        let mut calls = Vec::new();
+        let n = c.insert(&p, false, &slot, |j| {
+            calls.push(j);
+            Some(30 + j as u64)
+        });
+        assert_eq!(n, 2);
+        assert_eq!(calls, vec![2, 3]);
+        assert_eq!(c.lookup(&p, false, 64).tokens, 16);
+    }
+
+    #[test]
+    fn attention_modes_do_not_share_pages() {
+        // DMA-mode prefill produces different pages than native for the
+        // same tokens, so the tries are disjoint per mode.
+        let mut c = RadixCache::new(4);
+        let p = prompt(8);
+        c.insert(&p, false, &slot_with(8, 7), |j| Some(300 + j as u64));
+        assert_eq!(c.lookup(&p, false, 64).tokens, 8);
+        assert_eq!(c.lookup(&p, true, 64).tokens, 0, "cross-mode hit");
+        c.insert(&p, true, &slot_with(8, 8), |j| Some(400 + j as u64));
+        assert_eq!(c.lookup(&p, true, 64).tokens, 8);
+        assert_eq!(c.len(), 4);
+        // Eviction drains both tries.
+        let mut freed = Vec::new();
+        while let Some(id) = c.evict_lru_leaf(|_| true) {
+            freed.push(id);
+        }
+        freed.sort_unstable();
+        assert_eq!(freed, vec![300, 301, 400, 401]);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn hit_aligns_down_to_chunk_multiples() {
+        let mut c = RadixCache::new(4);
+        let p = prompt(20);
+        c.insert(&p, false, &slot_with(20, 6), |j| Some(40 + j as u64));
+        // 5 pages resident; a 8-token chunk granularity keeps 4 (16
+        // tokens), dropping the trailing page.
+        let mut hit = c.lookup(&p, false, 64);
+        assert_eq!(hit.tokens, 20);
+        hit.align_to(8, 4);
+        assert_eq!(hit.tokens, 16);
+        assert_eq!(hit.pool_ids, vec![40, 41, 42, 43]);
+        assert_eq!(hit.k.len(), 4);
+        // Already aligned: untouched.
+        let mut hit = c.lookup(&p, false, 16);
+        hit.align_to(8, 4);
+        assert_eq!(hit.tokens, 16);
+    }
+
+    #[test]
+    fn lru_leaf_eviction_order() {
+        let mut c = RadixCache::new(4);
+        let a = prompt(8);
+        let mut b = prompt(8);
+        b[5] = 49; // shares page 0, diverges on page 1
+        c.insert(&a, false, &slot_with(8, 4), |j| Some(100 + j as u64));
+        c.insert(&b, false, &slot_with(8, 5), |j| Some(200 + j as u64));
+        assert_eq!(c.len(), 3); // shared root page + two leaves
+
+        // Touch a's path so b's leaf is the LRU leaf.
+        c.lookup(&a, false, 64);
+        assert_eq!(c.evict_lru_leaf(|_| true), Some(201));
+        assert_eq!(c.lookup(&b, false, 64).tokens, 4);
+        // Next LRU leaf is a's page 1, then the shared root page.
+        assert_eq!(c.evict_lru_leaf(|_| true), Some(101));
+        assert_eq!(c.evict_lru_leaf(|_| true), Some(100));
+        assert_eq!(c.evict_lru_leaf(|_| true), None);
+        assert!(c.is_empty());
+        assert_eq!(c.lookup(&a, false, 64).tokens, 0);
+    }
+}

@@ -53,6 +53,9 @@ pub struct Response {
 #[derive(Debug)]
 pub(crate) enum SeqPhase {
     Queued,
+    /// Chunked prefill in flight: `done_tokens` prompt tokens processed
+    /// so far (including any prefix-cache hit that skipped real work).
+    Prefilling { done_tokens: usize },
     Decoding,
 }
 

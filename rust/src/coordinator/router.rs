@@ -37,6 +37,16 @@ impl Router {
         self.workers[0].kv_format()
     }
 
+    /// Precision policy spec of the fleet (workers share one config).
+    pub fn kv_policy(&self) -> &str {
+        self.workers[0].kv_policy()
+    }
+
+    /// Prompt tokens served from prefix caches across all workers.
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.workers.iter().map(EngineHandle::prefix_hit_tokens).sum()
+    }
+
     /// Pick a worker index for the next request.
     pub fn pick(&self) -> usize {
         match self.policy {

@@ -165,6 +165,29 @@ impl BlockPool {
         Ok(())
     }
 
+    /// Register `child` as a new one-block sequence sharing the `idx`-th
+    /// block of `parent` (refcount++). This is how the radix prefix cache
+    /// ([`crate::coordinator::radix`]) retains admission accounting for
+    /// one cached page after the sequence that produced it releases: the
+    /// cache forks the block out of the running sequence's table, and
+    /// later sharers fork the cache node's entry in turn.
+    pub fn fork_block(&mut self, parent: SeqId, child: SeqId, idx: usize) -> crate::Result<()> {
+        if self.seqs.contains_key(&child) {
+            bail!("child {child} exists");
+        }
+        let entry = self
+            .seqs
+            .get(&parent)
+            .ok_or_else(|| anyhow!("unknown parent {parent}"))?;
+        let Some(&b) = entry.blocks.get(idx) else {
+            bail!("parent {parent} has no block {idx}");
+        };
+        self.refcount[b] += 1;
+        self.seqs
+            .insert(child, SeqEntry { blocks: vec![b], tokens: self.block_tokens });
+        Ok(())
+    }
+
     /// Release a sequence; blocks return to the pool when refcount hits 0.
     pub fn release(&mut self, seq: SeqId) -> crate::Result<()> {
         let entry = self
@@ -182,6 +205,15 @@ impl BlockPool {
 
     pub fn seq_tokens(&self, seq: SeqId) -> Option<usize> {
         self.seqs.get(&seq).map(|e| e.tokens)
+    }
+
+    /// Largest refcount across a sequence's blocks — 1 means no other
+    /// sequence shares any of them (the eviction-safety signal: releasing
+    /// such a sequence really frees its blocks).
+    pub fn seq_max_refcount(&self, seq: SeqId) -> Option<u32> {
+        self.seqs
+            .get(&seq)
+            .map(|e| e.blocks.iter().map(|&b| self.refcount[b]).max().unwrap_or(0))
     }
 
     /// Invariant check used by property tests.
@@ -426,13 +458,48 @@ mod tests {
     }
 
     #[test]
+    fn fork_block_shares_one_block() {
+        let mut p = BlockPool::with_byte_budget(8 * 16 * 100, 16, 100);
+        p.allocate(1, 40).unwrap(); // 3 blocks
+        let used = p.bytes_in_use();
+        p.fork_block(1, 100, 1).unwrap();
+        // Shared block: no new bytes, no new blocks.
+        assert_eq!(p.bytes_in_use(), used);
+        assert_eq!(p.free_blocks(), 5);
+        assert_eq!(p.seq_tokens(100), Some(16));
+        assert_eq!(p.seq_max_refcount(100), Some(2));
+        assert_eq!(p.seq_max_refcount(1), Some(2)); // block 1 is shared
+        assert_eq!(p.seq_max_refcount(7), None);
+        // Parent releases; the forked child keeps its block alive.
+        p.release(1).unwrap();
+        assert_eq!(p.free_blocks(), 7);
+        assert_eq!(p.bytes_in_use(), 16 * 100);
+        p.release(100).unwrap();
+        assert_eq!(p.free_blocks(), 8);
+        p.check_invariants().unwrap();
+
+        // Errors: unknown parent, out-of-range block, duplicate child.
+        assert!(p.fork_block(1, 101, 0).is_err());
+        p.allocate(2, 16).unwrap();
+        assert!(p.fork_block(2, 102, 5).is_err());
+        p.fork_block(2, 102, 0).unwrap();
+        assert!(p.fork_block(2, 102, 0).is_err());
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
     fn property_random_ops_keep_invariants() {
+        // Interleaves allocate / extend / fork / fork_block / release and
+        // asserts, beyond the structural invariants, that the byte
+        // accounting matches a from-scratch recount every step — fork
+        // carries real traffic now (radix prefix cache), so shared blocks
+        // must be counted exactly once however many sequences hold them.
         crate::util::prop::check("blockpool invariants", 25, |rng| {
-            let mut p = BlockPool::new(32, 8);
+            let mut p = BlockPool::with_byte_budget(32 * 8 * 64, 8, 64);
             let mut live: Vec<SeqId> = Vec::new();
             let mut next_id: SeqId = 0;
-            for _ in 0..200 {
-                match rng.below(4) {
+            for _ in 0..300 {
+                match rng.below(5) {
                     0 => {
                         let toks = rng.int_in(1, 40) as usize;
                         if p.can_admit(toks) {
@@ -456,6 +523,19 @@ mod tests {
                             }
                         }
                     }
+                    3 => {
+                        // Radix-cache-style single-block fork.
+                        if !live.is_empty() {
+                            let i = rng.below(live.len() as u64) as usize;
+                            let parent = live[i];
+                            let nb = p.seqs[&parent].blocks.len();
+                            let idx = rng.below(nb as u64) as usize;
+                            if p.fork_block(parent, next_id, idx).is_ok() {
+                                live.push(next_id);
+                                next_id += 1;
+                            }
+                        }
+                    }
                     _ => {
                         if !live.is_empty() {
                             let i = rng.below(live.len() as u64) as usize;
@@ -465,7 +545,37 @@ mod tests {
                     }
                 }
                 p.check_invariants().map_err(|e| e.to_string())?;
+                // Byte accounting: recount from the refcount plane.
+                let used = p.refcount.iter().filter(|&&r| r > 0).count();
+                crate::prop_assert!(
+                    p.bytes_in_use() == used * 8 * 64,
+                    "bytes_in_use {} != recount {}",
+                    p.bytes_in_use(),
+                    used * 8 * 64
+                );
+                crate::prop_assert!(
+                    p.bytes_in_use() <= p.bytes_capacity(),
+                    "in use past capacity"
+                );
+                // Every referenced block is reachable from some live seq
+                // and refcounts equal the number of holders.
+                let mut holders = vec![0u32; p.num_blocks()];
+                for e in p.seqs.values() {
+                    for &b in &e.blocks {
+                        holders[b] += 1;
+                    }
+                }
+                crate::prop_assert!(
+                    holders == p.refcount,
+                    "refcount plane diverged from holder recount"
+                );
             }
+            // Drain everything: the pool must come back whole.
+            for id in live {
+                p.release(id).map_err(|e| e.to_string())?;
+            }
+            crate::prop_assert!(p.free_blocks() == p.num_blocks(), "leak after drain");
+            crate::prop_assert!(p.bytes_in_use() == 0, "bytes leak after drain");
             Ok(())
         });
     }

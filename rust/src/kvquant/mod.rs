@@ -12,13 +12,28 @@
 //! sharing one per-token scale `S_q`. Because `S_q` is per-token,
 //! appending rows in any chunking yields bit-identical planes to
 //! quantizing the whole matrix at once — the invariant that makes an
-//! appendable quantized cache possible.
+//! appendable quantized cache possible (and that makes **chunked
+//! prefill** stream straight into pages, see
+//! [`crate::model::CpuModel::prefill_chunk_quant`]).
+//!
+//! Pages are physically separate, immutable once full, and shared
+//! between sequences via [`Arc`]: the radix prefix cache
+//! ([`crate::coordinator::radix`]) hands the same full pages to every
+//! sequence whose prompt shares the prefix
+//! ([`QuantPagedKv::push_shared_page`], zero-copy). For whole-store
+//! duplication (beam/parallel-sampling forks), [`QuantPagedKv::fork`]
+//! clones a store in O(pages) with copy-on-write on the partial frontier
+//! page (the first append after a fork copies it; full pages are never
+//! copied).
 //!
 //! At decode time ([`crate::attention::paged::dma_attention_paged`]) the
 //! paper's tile precision policy is applied to cache pages: pages
 //! overlapping the attention sink and the causal-frontier window decode
 //! MXFP8-high, the body decodes NVFP4-low, one page of scratch at a time
-//! — no full-precision K/V is ever materialized.
+//! — no full-precision K/V is ever materialized. The schedule is
+//! **position-aware** ([`KvPolicy::page_precisions_at`]): a shared body
+//! page that sits inside a short sequence's frontier window still
+//! decodes low for a longer sequence attending it from farther away.
 //!
 //! [`KvFormat`] selects which copies are retained ([`KvFormat::Dual`]
 //! keeps both so the policy can choose; the single-format variants trade
@@ -32,6 +47,7 @@ use crate::mxfp::block::Granularity;
 use crate::mxfp::fused::{dual_quant, DualQuantized};
 use crate::mxfp::{MXFP_BLOCK, NVFP4_BLOCK};
 use anyhow::bail;
+use std::sync::Arc;
 
 /// Default page size in tokens. Matches the engine's KV block size so
 /// pages align one-to-one with [`crate::kvcache::BlockPool`] admission
@@ -122,7 +138,7 @@ pub enum Precision {
 }
 
 /// Page-level precision policy: the paper's diagonal-tile schedule
-/// projected onto cache pages for a decode query at the causal frontier.
+/// projected onto cache pages for a query tile at the causal frontier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct KvPolicy {
     /// Attention-sink window in tokens from position 0 (pages overlapping
@@ -141,9 +157,9 @@ impl Default for KvPolicy {
 }
 
 impl KvPolicy {
-    /// Parse `"SINK/DIAG"`, e.g. `"128/128"`.
+    /// Parse `"SINK/DIAG"` (also accepts a comma), e.g. `"128/128"`.
     pub fn parse(s: &str) -> crate::Result<KvPolicy> {
-        let Some((a, b)) = s.split_once('/') else {
+        let Some((a, b)) = s.split_once('/').or_else(|| s.split_once(',')) else {
             bail!("kv policy {s:?} must be SINK/DIAG, e.g. 128/128");
         };
         Ok(KvPolicy {
@@ -152,22 +168,86 @@ impl KvPolicy {
         })
     }
 
-    /// Per-page precision schedule for a cache of `len` tokens, derived
-    /// from the DMA kernel's phase boundaries (Alg. 1, causal, one query
-    /// tile whose frontier is token `len - 1`):
+    /// Parse either a single `"SINK/DIAG"` policy (broadcast to every
+    /// layer) or a per-layer spec `"l0:SINK/DIAG;l1:SINK/DIAG;..."`
+    /// (layers must be listed contiguously from `l0`; `,` is accepted in
+    /// place of `/`).
+    pub fn parse_layers(s: &str) -> crate::Result<Vec<KvPolicy>> {
+        if !s.contains(':') {
+            return Ok(vec![KvPolicy::parse(s)?]);
+        }
+        let mut out = Vec::new();
+        for (i, part) in s.split(';').filter(|p| !p.trim().is_empty()).enumerate() {
+            let Some((layer, spec)) = part.split_once(':') else {
+                bail!("per-layer kv policy entry {part:?} must be lN:SINK/DIAG");
+            };
+            let layer = layer.trim();
+            let n: usize = layer
+                .strip_prefix('l')
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("bad layer tag {layer:?} (expected lN)"))?;
+            if n != i {
+                bail!("kv policy layers must be contiguous from l0 (got {layer} at position {i})");
+            }
+            out.push(KvPolicy::parse(spec)?);
+        }
+        if out.is_empty() {
+            bail!("empty kv policy spec");
+        }
+        Ok(out)
+    }
+
+    /// Render a policy list in the `parse_layers` syntax (uniform lists
+    /// collapse to a single `SINK/DIAG`).
+    pub fn format_layers(policies: &[KvPolicy]) -> String {
+        if policies.len() == 1 || policies.windows(2).all(|w| w[0] == w[1]) {
+            let p = policies.first().copied().unwrap_or_default();
+            return format!("{}/{}", p.sink, p.diag);
+        }
+        policies
+            .iter()
+            .enumerate()
+            .map(|(i, p)| format!("l{i}:{}/{}", p.sink, p.diag))
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// Per-page precision schedule for a decode query at the causal
+    /// frontier of a cache of `len` tokens — the position-aware schedule
+    /// ([`Self::page_precisions_at`]) with `frontier = len - 1`:
     ///
     ///   Phase 0  pages overlapping the first `sink` tokens  -> High
     ///   Phase 1  pages before the diagonal window           -> Low
     ///   Phase 2  pages inside the trailing `diag` window    -> High
     pub fn page_precisions(&self, len: usize, page_tokens: usize) -> Vec<Precision> {
+        self.page_precisions_at(len.saturating_sub(1), len, page_tokens)
+    }
+
+    /// Position-aware schedule: precision of the `len.div_ceil(pt)` cache
+    /// pages as seen by a query tile whose causal frontier is absolute
+    /// position `frontier` (which may lie beyond the cached range, e.g. a
+    /// prefill chunk attending its quantized prefix). A page is High when
+    /// it overlaps the sink window or the trailing `diag`-token window
+    /// `[frontier - diag + 1, frontier]`.
+    ///
+    /// This is what makes shared pages decode correctly: a body page that
+    /// a 64-token sequence sees inside its frontier window (High) is
+    /// still decoded Low by a 256-token sequence attending it from far
+    /// behind its own frontier.
+    pub fn page_precisions_at(
+        &self,
+        frontier: usize,
+        len: usize,
+        page_tokens: usize,
+    ) -> Vec<Precision> {
         let n_pages = len.div_ceil(page_tokens);
         let n_sink = if self.sink > 0 { self.sink.div_ceil(page_tokens) } else { 0 };
         let n_sink_eff = n_sink.min(n_pages);
         let j_hi_start = if self.diag == 0 {
             n_pages
         } else {
-            // Window start token is frontier - diag + 1 = len - diag.
-            (len as i64 - self.diag as i64)
+            // Window start token is frontier - diag + 1.
+            (frontier as i64 + 1 - self.diag as i64)
                 .div_euclid(page_tokens as i64)
                 .max(n_sink_eff as i64)
                 .min(n_pages as i64) as usize
@@ -192,16 +272,33 @@ impl std::str::FromStr for KvPolicy {
 }
 
 /// Everything a quantized slot needs to know about its own layout.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `policies` holds either one policy (broadcast to every layer) or one
+/// per layer — the paper's ablations show early layers tolerate NVFP4
+/// worse than late ones, so the sink/diag windows are layer-tunable.
+#[derive(Clone, Debug, PartialEq)]
 pub struct KvQuantConfig {
     pub format: KvFormat,
     pub page_tokens: usize,
-    pub policy: KvPolicy,
+    pub policies: Vec<KvPolicy>,
 }
 
 impl KvQuantConfig {
     pub fn new(format: KvFormat, policy: KvPolicy) -> KvQuantConfig {
-        KvQuantConfig { format, page_tokens: PAGE_TOKENS, policy }
+        KvQuantConfig { format, page_tokens: PAGE_TOKENS, policies: vec![policy] }
+    }
+
+    pub fn with_policies(format: KvFormat, policies: Vec<KvPolicy>) -> KvQuantConfig {
+        assert!(!policies.is_empty(), "at least one policy required");
+        KvQuantConfig { format, page_tokens: PAGE_TOKENS, policies }
+    }
+
+    /// Policy for `layer` (single-policy configs broadcast).
+    pub fn policy_for(&self, layer: usize) -> KvPolicy {
+        if self.policies.len() == 1 {
+            self.policies[0]
+        } else {
+            self.policies[layer.min(self.policies.len() - 1)]
+        }
     }
 }
 
@@ -215,38 +312,55 @@ impl Default for KvQuantConfig {
 // Paged quantized row store
 // ---------------------------------------------------------------------
 
-/// Appendable quantized row store for one (layer, kv-head): contiguous
-/// code planes, with pages as logical `page_tokens`-row ranges (no
-/// per-page allocation; the last page may be partial).
+/// Appendable quantized row store for one (layer, kv-head): a list of
+/// immutable full pages (each `page_tokens` quantized rows, shareable
+/// across sequences via [`Arc`]) plus one partial frontier page that
+/// appends copy-on-write.
 pub struct QuantPagedKv {
-    /// Code planes; only those selected by `format` are populated.
-    pub store: DualQuantized,
+    d: usize,
     pub format: KvFormat,
     pub page_tokens: usize,
+    /// Immutable, fully-populated pages. `Arc` strong counts are the page
+    /// sharing refcounts (radix prefix cache + forked sequences).
+    pages: Vec<Arc<DualQuantized>>,
+    /// The partial page rows append into. Shared after [`Self::fork`];
+    /// the first subsequent append copies it (`Arc::make_mut`).
+    frontier: Arc<DualQuantized>,
 }
 
 impl QuantPagedKv {
     pub fn new(d: usize, format: KvFormat, page_tokens: usize) -> QuantPagedKv {
         assert!(format != KvFormat::F32, "use SlotKv for the f32 cache");
         assert!(page_tokens > 0);
-        QuantPagedKv { store: DualQuantized::empty(d), format, page_tokens }
+        QuantPagedKv {
+            d,
+            format,
+            page_tokens,
+            pages: Vec::new(),
+            frontier: Arc::new(DualQuantized::empty(d)),
+        }
     }
 
     pub fn d(&self) -> usize {
-        self.store.d
+        self.d
     }
 
     /// Cached tokens.
     pub fn len(&self) -> usize {
-        self.store.rows
+        self.pages.len() * self.page_tokens + self.frontier.rows
     }
 
     pub fn is_empty(&self) -> bool {
-        self.store.rows == 0
+        self.len() == 0
     }
 
     pub fn n_pages(&self) -> usize {
         self.len().div_ceil(self.page_tokens)
+    }
+
+    /// Full (immutable, shareable) pages — excludes the partial frontier.
+    pub fn n_full_pages(&self) -> usize {
+        self.pages.len()
     }
 
     /// Row range `[r0, r1)` of page `j` (the last page may be partial).
@@ -255,17 +369,58 @@ impl QuantPagedKv {
         (r0, (r0 + self.page_tokens).min(self.len()))
     }
 
+    /// The `Arc` of full page `j` (for sharing into another store or the
+    /// radix prefix cache).
+    pub fn page_arc(&self, j: usize) -> &Arc<DualQuantized> {
+        &self.pages[j]
+    }
+
+    /// Append a full shared page (zero-copy). Only legal while the store
+    /// ends on a page boundary — shared prefixes are imported before any
+    /// sequence-private rows are appended.
+    pub fn push_shared_page(&mut self, page: Arc<DualQuantized>) {
+        assert_eq!(self.frontier.rows, 0, "cannot share into a partial frontier");
+        assert_eq!(page.rows, self.page_tokens, "shared page must be full");
+        assert_eq!(page.d, self.d, "shared page width");
+        self.pages.push(page);
+    }
+
+    /// O(pages) fork sharing every full page and the frontier
+    /// copy-on-write: both stores read the same bytes until one appends.
+    pub fn fork(&self) -> QuantPagedKv {
+        QuantPagedKv {
+            d: self.d,
+            format: self.format,
+            page_tokens: self.page_tokens,
+            pages: self.pages.clone(),
+            frontier: self.frontier.clone(),
+        }
+    }
+
     /// Quantize and append `rows` (`[n, d]` row-major f32; keys and
-    /// values both use the no-prescale path).
+    /// values both use the no-prescale path). Per-token `S_q` makes any
+    /// chunking bit-identical to one-shot quantization.
     pub fn append_rows(&mut self, rows: &[f32]) {
-        let d = self.d();
+        let d = self.d;
         assert_eq!(rows.len() % d, 0, "append length {} % d {d}", rows.len());
         let n = rows.len() / d;
-        if n == 0 {
-            return;
+        let mut i = 0;
+        while i < n {
+            let take = (self.page_tokens - self.frontier.rows).min(n - i);
+            let q = dual_quant(&rows[i * d..(i + take) * d], take, d, false,
+                               Granularity::PerToken);
+            // COW: a forked frontier is copied here, on first write.
+            Arc::make_mut(&mut self.frontier)
+                .append_rows(&q, self.format.has_low(), self.format.has_high());
+            if self.frontier.rows == self.page_tokens {
+                let full = std::mem::replace(
+                    &mut self.frontier,
+                    Arc::new(DualQuantized::empty(d)),
+                );
+                self.pages.push(full);
+            }
+            i += take;
         }
-        let q = dual_quant(rows, n, d, false, Granularity::PerToken);
-        self.store.append_rows(&q, self.format.has_low(), self.format.has_high());
     }
 
     /// Clamp a requested precision to the copies this format retains.
@@ -277,17 +432,52 @@ impl QuantPagedKv {
         }
     }
 
-    /// Dequantize rows `[r0, r1)` at `p` (after clamping) into `out`.
-    pub fn decode_rows(&self, r0: usize, r1: usize, p: Precision, out: &mut [f32]) {
-        match self.effective(p) {
-            Precision::High => self.store.decode_high_rows(r0, r1, out),
-            Precision::Low => self.store.decode_low_rows(r0, r1, out),
+    fn page_ref(&self, j: usize) -> &DualQuantized {
+        if j < self.pages.len() {
+            &self.pages[j]
+        } else {
+            &self.frontier
         }
     }
 
-    /// Stored bytes (code planes + scales).
+    /// Dequantize rows `[r0, r1)` at `p` (after clamping) into `out`,
+    /// stitching across page boundaries.
+    pub fn decode_rows(&self, r0: usize, r1: usize, p: Precision, out: &mut [f32]) {
+        let (d, pt) = (self.d, self.page_tokens);
+        debug_assert!(r1 <= self.len());
+        let eff = self.effective(p);
+        let mut r = r0;
+        while r < r1 {
+            let j = r / pt;
+            let w0 = r - j * pt;
+            let w1 = (r1 - j * pt).min(pt);
+            let page = self.page_ref(j);
+            let dst = &mut out[(r - r0) * d..(r - r0 + (w1 - w0)) * d];
+            match eff {
+                Precision::High => page.decode_high_rows(w0, w1, dst),
+                Precision::Low => page.decode_low_rows(w0, w1, dst),
+            }
+            r += w1 - w0;
+        }
+    }
+
+    /// Stored bytes (code planes + scales). Shared pages are counted in
+    /// full for every store referencing them — this is the per-sequence
+    /// view; physically a shared page exists once.
     pub fn quantized_bytes(&self) -> usize {
-        self.store.quantized_bytes()
+        self.pages.iter().map(|p| p.quantized_bytes()).sum::<usize>()
+            + self.frontier.quantized_bytes()
+    }
+
+    /// Materialize the contiguous code planes (tests / cross-language
+    /// parity — the hot paths never concatenate pages).
+    pub fn planes(&self) -> DualQuantized {
+        let mut out = DualQuantized::empty(self.d);
+        for p in &self.pages {
+            out.append_rows(p, self.format.has_low(), self.format.has_high());
+        }
+        out.append_rows(&self.frontier, self.format.has_low(), self.format.has_high());
+        out
     }
 }
 
@@ -324,12 +514,19 @@ impl QuantSlotKv {
                 })
                 .collect()
         };
-        QuantSlotKv { cfg, k: mk(), v: mk(), pos: 0 }
+        QuantSlotKv { k: mk(), v: mk(), cfg, pos: 0 }
+    }
+
+    /// Per-layer precision policy (broadcast when uniform).
+    pub fn policy_for(&self, layer: usize) -> KvPolicy {
+        self.cfg.policy_for(layer)
     }
 
     /// Quantize a prefilled f32 slot (`layout` describes its flat
-    /// `[n_layers, H_kv, C, d_head]` geometry). The engine calls this
-    /// once per admitted sequence, right after prefill.
+    /// `[n_layers, H_kv, C, d_head]` geometry) — the legacy monolithic
+    /// path; the engine now streams chunks in via
+    /// [`crate::model::CpuModel::prefill_chunk_quant`], which produces
+    /// bit-identical pages (per-token `S_q` chunking invariance).
     pub fn from_slot(slot: &SlotKv, layout: &SlotCache, cfg: KvQuantConfig) -> QuantSlotKv {
         let mut out = QuantSlotKv::new(cfg, layout.n_layers, layout.n_kv_heads, layout.d_head);
         let (c, dh) = (layout.cache_len, layout.d_head);
@@ -344,6 +541,15 @@ impl QuantSlotKv {
         out
     }
 
+    /// O(pages) fork of the whole slot: full pages shared, frontier pages
+    /// copy-on-write.
+    pub fn fork(&self) -> QuantSlotKv {
+        let fk = |s: &Vec<Vec<QuantPagedKv>>| {
+            s.iter().map(|hs| hs.iter().map(QuantPagedKv::fork).collect()).collect()
+        };
+        QuantSlotKv { cfg: self.cfg.clone(), k: fk(&self.k), v: fk(&self.v), pos: self.pos }
+    }
+
     /// Append one token's K/V rows for `(layer, head)`. The caller bumps
     /// `pos` once per token after all layers/heads appended.
     pub fn append_token(&mut self, layer: usize, head: usize, krow: &[f32], vrow: &[f32]) {
@@ -351,7 +557,8 @@ impl QuantSlotKv {
         self.v[layer][head].append_rows(vrow);
     }
 
-    /// Total resident bytes of the quantized payload.
+    /// Total resident bytes of the quantized payload (per-sequence view;
+    /// shared pages counted once per referencing sequence).
     pub fn quantized_bytes(&self) -> usize {
         let sum = |s: &[Vec<QuantPagedKv>]| -> usize {
             s.iter().flatten().map(QuantPagedKv::quantized_bytes).sum()
@@ -378,7 +585,45 @@ mod tests {
         assert_eq!(KvFormat::parse("nvfp4").unwrap(), KvFormat::Nvfp4);
         assert!(KvFormat::parse("int8").is_err());
         assert_eq!("128/64".parse::<KvPolicy>().unwrap(), KvPolicy { sink: 128, diag: 64 });
+        assert_eq!("128,64".parse::<KvPolicy>().unwrap(), KvPolicy { sink: 128, diag: 64 });
         assert!("128".parse::<KvPolicy>().is_err());
+    }
+
+    #[test]
+    fn per_layer_policy_parsing() {
+        // Uniform spec broadcasts.
+        let one = KvPolicy::parse_layers("64/32").unwrap();
+        assert_eq!(one, vec![KvPolicy { sink: 64, diag: 32 }]);
+        // Per-layer spec, both separators.
+        let many = KvPolicy::parse_layers("l0:128/128;l1:64,32").unwrap();
+        assert_eq!(
+            many,
+            vec![KvPolicy { sink: 128, diag: 128 }, KvPolicy { sink: 64, diag: 32 }]
+        );
+        // Layers must be contiguous from l0.
+        assert!(KvPolicy::parse_layers("l1:1/1").is_err());
+        assert!(KvPolicy::parse_layers("l0:1/1;l2:2/2").is_err());
+        assert!(KvPolicy::parse_layers("x0:1/1").is_err());
+
+        // Round trip through the formatter.
+        assert_eq!(KvPolicy::format_layers(&many), "l0:128/128;l1:64/32");
+        assert_eq!(KvPolicy::format_layers(&one), "64/32");
+        let uniform = vec![KvPolicy { sink: 8, diag: 8 }; 3];
+        assert_eq!(KvPolicy::format_layers(&uniform), "8/8");
+    }
+
+    #[test]
+    fn config_policy_broadcast() {
+        let cfg = KvQuantConfig::new(KvFormat::Dual, KvPolicy { sink: 8, diag: 16 });
+        assert_eq!(cfg.policy_for(0), cfg.policy_for(5));
+        let cfg = KvQuantConfig::with_policies(
+            KvFormat::Dual,
+            vec![KvPolicy { sink: 1, diag: 1 }, KvPolicy { sink: 2, diag: 2 }],
+        );
+        assert_eq!(cfg.policy_for(0).sink, 1);
+        assert_eq!(cfg.policy_for(1).sink, 2);
+        // Out-of-range layers clamp to the last listed policy.
+        assert_eq!(cfg.policy_for(9).sink, 2);
     }
 
     #[test]
@@ -423,6 +668,28 @@ mod tests {
     }
 
     #[test]
+    fn position_aware_schedule_moves_with_frontier() {
+        let p = KvPolicy { sink: 8, diag: 16 };
+        // A 32-token cache seen from its own frontier (31): pages 2..4
+        // are inside the diag window.
+        let near = p.page_precisions_at(31, 32, 8);
+        assert_eq!(
+            near,
+            vec![Precision::High, Precision::Low, Precision::High, Precision::High]
+        );
+        // The same 32 cached tokens seen by a query much farther along
+        // (e.g. a longer sequence sharing these pages): the frontier
+        // window no longer reaches them — body pages decode Low.
+        let far = p.page_precisions_at(127, 32, 8);
+        assert_eq!(
+            far,
+            vec![Precision::High, Precision::Low, Precision::Low, Precision::Low]
+        );
+        // Frontier-at-len-1 delegation is exactly the legacy schedule.
+        assert_eq!(p.page_precisions_at(63, 64, 8), p.page_precisions(64, 8));
+    }
+
+    #[test]
     fn append_chunking_is_bit_invariant() {
         let (n, d) = (21usize, 32usize);
         let x = rows(n, d, 3);
@@ -433,11 +700,92 @@ mod tests {
             steps.append_rows(&x[r * d..(r + 1) * d]);
         }
         assert_eq!(steps.len(), n);
-        assert_eq!(steps.store.packed_fp4, bulk.store.packed_fp4);
-        assert_eq!(steps.store.s4_codes, bulk.store.s4_codes);
-        assert_eq!(steps.store.fp8_codes, bulk.store.fp8_codes);
-        assert_eq!(steps.store.s8_codes, bulk.store.s8_codes);
-        assert_eq!(steps.store.sq, bulk.store.sq);
+        let (a, b) = (steps.planes(), bulk.planes());
+        assert_eq!(a.packed_fp4, b.packed_fp4);
+        assert_eq!(a.s4_codes, b.s4_codes);
+        assert_eq!(a.fp8_codes, b.fp8_codes);
+        assert_eq!(a.s8_codes, b.s8_codes);
+        assert_eq!(a.sq, b.sq);
+    }
+
+    #[test]
+    fn fork_shares_pages_and_copies_frontier_on_write() {
+        let (n, d, pt) = (20usize, 32usize, 8usize);
+        let x = rows(n, d, 7);
+        let mut parent = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        parent.append_rows(&x);
+        assert_eq!(parent.n_full_pages(), 2);
+
+        let mut child = parent.fork();
+        // Full pages are the same allocation (refcounted sharing)...
+        for j in 0..2 {
+            assert!(Arc::ptr_eq(parent.page_arc(j), child.page_arc(j)));
+        }
+        // ...and so is the frontier until someone writes.
+        assert!(Arc::ptr_eq(&parent.frontier, &child.frontier));
+
+        // Child appends: its frontier is copied, the parent's is not.
+        let extra = rows(3, d, 8);
+        child.append_rows(&extra);
+        assert!(!Arc::ptr_eq(&parent.frontier, &child.frontier));
+        assert_eq!(parent.len(), 20);
+        assert_eq!(child.len(), 23);
+        // Divergent frontiers decode independently; shared pages agree.
+        let mut a = vec![0f32; 16 * d];
+        let mut b = vec![0f32; 16 * d];
+        parent.decode_rows(0, 16, Precision::High, &mut a);
+        child.decode_rows(0, 16, Precision::High, &mut b);
+        assert_eq!(a, b);
+        // COW preserved the parent's bytes: equal to a never-forked store.
+        let mut oracle = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        oracle.append_rows(&x);
+        assert_eq!(parent.planes().sq, oracle.planes().sq);
+        // And the child equals a store that appended everything itself.
+        let mut oracle2 = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        oracle2.append_rows(&x);
+        oracle2.append_rows(&extra);
+        assert_eq!(child.planes().packed_fp4, oracle2.planes().packed_fp4);
+        assert_eq!(child.planes().sq, oracle2.planes().sq);
+    }
+
+    #[test]
+    fn shared_page_import_is_zero_copy() {
+        let (d, pt) = (32usize, 8usize);
+        let x = rows(16, d, 9);
+        let mut src = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        src.append_rows(&x);
+        let mut dst = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        dst.push_shared_page(src.page_arc(0).clone());
+        dst.push_shared_page(src.page_arc(1).clone());
+        assert_eq!(dst.len(), 16);
+        assert!(Arc::ptr_eq(src.page_arc(1), dst.page_arc(1)));
+        // The importer appends its own suffix without touching the shared
+        // pages.
+        dst.append_rows(&rows(5, d, 10));
+        assert_eq!(dst.len(), 21);
+        assert!(Arc::ptr_eq(src.page_arc(0), dst.page_arc(0)));
+        let mut a = vec![0f32; 16 * d];
+        let mut b = vec![0f32; 16 * d];
+        src.decode_rows(0, 16, Precision::Low, &mut a);
+        dst.decode_rows(0, 16, Precision::Low, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn decode_rows_stitches_across_pages() {
+        let (n, d, pt) = (21usize, 32usize, 8usize);
+        let x = rows(n, d, 14);
+        let mut s = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        s.append_rows(&x);
+        // Full-range decode equals the contiguous-plane decode.
+        let planes = s.planes();
+        let mut whole = vec![0f32; n * d];
+        planes.decode_high_rows(0, n, &mut whole);
+        for (r0, r1) in [(0usize, n), (3, 11), (7, 8), (6, 21), (16, 21)] {
+            let mut part = vec![0f32; (r1 - r0) * d];
+            s.decode_rows(r0, r1, Precision::High, &mut part);
+            assert_eq!(part, whole[r0 * d..r1 * d].to_vec(), "[{r0}, {r1})");
+        }
     }
 
     #[test]
@@ -446,13 +794,13 @@ mod tests {
         let x = rows(n, d, 4);
         let mut lo = QuantPagedKv::new(d, KvFormat::Nvfp4, 8);
         lo.append_rows(&x);
-        assert_eq!(lo.store.fp8_codes.len(), 0);
+        assert_eq!(lo.planes().fp8_codes.len(), 0);
         assert_eq!(lo.effective(Precision::High), Precision::Low);
         assert_eq!(lo.quantized_bytes(), n * KvFormat::Nvfp4.row_bytes(d));
 
         let mut hi = QuantPagedKv::new(d, KvFormat::Mxfp8, 8);
         hi.append_rows(&x);
-        assert_eq!(hi.store.packed_fp4.len(), 0);
+        assert_eq!(hi.planes().packed_fp4.len(), 0);
         assert_eq!(hi.effective(Precision::Low), Precision::High);
         assert_eq!(hi.quantized_bytes(), n * KvFormat::Mxfp8.row_bytes(d));
 
@@ -471,6 +819,7 @@ mod tests {
         let mut s = QuantPagedKv::new(32, KvFormat::Dual, 8);
         s.append_rows(&rows(19, 32, 5));
         assert_eq!(s.n_pages(), 3);
+        assert_eq!(s.n_full_pages(), 2);
         assert_eq!(s.page_rows(0), (0, 8));
         assert_eq!(s.page_rows(2), (16, 19));
     }
@@ -506,6 +855,27 @@ mod tests {
             q.quantized_bytes(),
             2 * 2 * 2 * live * KvFormat::Dual.row_bytes(32)
         );
+    }
+
+    #[test]
+    fn slot_fork_shares_all_pages() {
+        let cfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 8,
+            policies: vec![KvPolicy { sink: 8, diag: 8 }],
+        };
+        let mut q = QuantSlotKv::new(cfg, 2, 2, 32);
+        for li in 0..2 {
+            for h in 0..2 {
+                q.k[li][h].append_rows(&rows(12, 32, (li * 2 + h) as u64));
+                q.v[li][h].append_rows(&rows(12, 32, 100 + (li * 2 + h) as u64));
+            }
+        }
+        q.pos = 12;
+        let f = q.fork();
+        assert_eq!(f.pos, 12);
+        assert!(Arc::ptr_eq(q.k[1][1].page_arc(0), f.k[1][1].page_arc(0)));
+        assert_eq!(f.quantized_bytes(), q.quantized_bytes());
     }
 
     #[test]

@@ -21,7 +21,9 @@ fn usage() -> ! {
     eprintln!(
         "usage: dma <serve|eval|smoke|info> [--artifacts DIR] [--addr H:P] \
          [--workers N] [--host-backend] [--seed S] \
-         [--kv-format f32|mxfp8-high|nvfp4-low|dual] [--kv-policy SINK/DIAG]"
+         [--kv-format f32|mxfp8-high|nvfp4-low|dual] \
+         [--kv-policy SINK/DIAG | l0:S/D;l1:S/D;...] \
+         [--prefill-chunk TOKENS] [--prefix-cache]"
     );
     std::process::exit(2);
 }
@@ -71,13 +73,22 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
             kv_format.name()
         );
     }
+    let prefix_cache = args.flag("prefix-cache");
+    if prefix_cache && kv_format == dma::kvquant::KvFormat::F32 {
+        anyhow::bail!(
+            "--prefix-cache shares quantized pages; pick a quantized --kv-format \
+             (mxfp8-high, nvfp4-low or dual)"
+        );
+    }
     let cfg = EngineConfig {
         artifact_dir: artifacts.clone().into(),
         max_new_tokens: args.usize_or("max-new-tokens", 32),
+        prefill_chunk: args.usize_or("prefill-chunk", 32),
+        prefix_cache,
         kv_format,
-        kv_precision_policy: match args.get("kv-policy") {
-            Some(s) => dma::kvquant::KvPolicy::parse(s)?,
-            None => dma::kvquant::KvPolicy::default(),
+        kv_precision_policies: match args.get("kv-policy") {
+            Some(s) => dma::kvquant::KvPolicy::parse_layers(s)?,
+            None => vec![dma::kvquant::KvPolicy::default()],
         },
         ..Default::default()
     };
@@ -91,9 +102,13 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
     let router = Arc::new(Router::new(handles, Policy::LeastLoaded));
     let stop = Arc::new(AtomicBool::new(false));
     println!(
-        "dma: serving on {addr} ({} worker(s), kv cache {})",
+        "dma: serving on {addr} ({} worker(s), kv cache {}, policy {}, \
+         prefill chunk {}, prefix cache {})",
         workers,
-        cfg.kv_format.name()
+        cfg.kv_format.name(),
+        dma::kvquant::KvPolicy::format_layers(&cfg.kv_precision_policies),
+        cfg.prefill_chunk,
+        if cfg.prefix_cache { "on" } else { "off" }
     );
     dma::server::serve(&addr, router, stop, |a| println!("dma: bound {a}"))
 }
@@ -178,7 +193,7 @@ fn cmd_info(args: &Args) -> dma::Result<()> {
 }
 
 fn main() {
-    let args = Args::parse(&["host-backend"]);
+    let args = Args::parse(&["host-backend", "prefix-cache"]);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("");
     let result = match cmd {
         "serve" => cmd_serve(&args),

@@ -38,6 +38,34 @@ pub struct CpuModel {
     pub weights: Weights,
 }
 
+/// Destination cache of one prefill chunk: the exact f32 working state or
+/// the quantized paged stores (quantize-on-append, pages authoritative).
+/// One shared layer body serves both ([`CpuModel::prefill_chunk_impl`])
+/// so the projections/RoPE/SwiGLU arithmetic cannot drift between paths.
+enum ChunkTarget<'a> {
+    F32(&'a mut KvState),
+    Quant(
+        &'a mut crate::kvquant::QuantSlotKv,
+        &'a mut crate::metrics::KvPageStats,
+    ),
+}
+
+impl ChunkTarget<'_> {
+    fn pos(&self) -> usize {
+        match self {
+            ChunkTarget::F32(kv) => kv.len,
+            ChunkTarget::Quant(kv, _) => kv.pos,
+        }
+    }
+
+    fn advance(&mut self, n: usize) {
+        match self {
+            ChunkTarget::F32(kv) => kv.len += n,
+            ChunkTarget::Quant(kv, _) => kv.pos += n,
+        }
+    }
+}
+
 /// KV cache for one sequence: `[n_layers][n_kv_heads][cap, d_head]`
 /// (post-RoPE keys, matching the JAX export).
 #[derive(Clone, Debug)]
@@ -138,30 +166,92 @@ impl CpuModel {
     }
 
     // ------------------------------------------------------------------
-    // Prefill
+    // Prefill (chunked; the monolithic entry point is one full-prompt
+    // chunk)
     // ------------------------------------------------------------------
 
     /// Full-sequence forward; fills `kv` (must be empty) and returns
-    /// logits [t, vocab].
+    /// logits [t, vocab]. Exactly one full-prompt chunk of
+    /// [`Self::prefill_chunk`].
     pub fn prefill(
         &self,
         tokens: &[i32],
         mode: AttnMode,
         kv: &mut KvState,
     ) -> crate::Result<Tensor> {
-        let cfg = &self.cfg;
-        let t = tokens.len();
         anyhow::ensure!(kv.len == 0, "prefill requires an empty KV state");
-        anyhow::ensure!(t <= kv.cap, "prompt {t} exceeds cache cap {}", kv.cap);
+        self.prefill_chunk(tokens, mode, kv)
+    }
+
+    /// Run one prompt chunk (positions `[kv.len, kv.len + chunk.len())`)
+    /// through the model against the f32 working cache; fills the chunk's
+    /// K/V rows and returns the chunk's logits `[c, vocab]`.
+    ///
+    /// Chunk attention is *exact*: each chunk query attends every cached
+    /// prefix row plus the in-chunk causal triangle through the same
+    /// per-row arithmetic as the monolithic path, so splitting a prompt
+    /// into chunks is **bit-invariant** — any chunking produces the same
+    /// cache rows and logits as one [`Self::prefill`] call
+    /// (`chunked_f32_prefill_bit_exact_with_monolithic` below). The DMA
+    /// tiled kernel applies only to a first chunk whose length fits its
+    /// tiling (as in the monolithic path); later chunks are
+    /// prefix-rectangular and use the exact oracle.
+    pub fn prefill_chunk(
+        &self,
+        chunk: &[i32],
+        mode: AttnMode,
+        kv: &mut KvState,
+    ) -> crate::Result<Tensor> {
+        let pos0 = kv.len;
+        let c = chunk.len();
+        anyhow::ensure!(pos0 + c <= kv.cap, "chunk end {} exceeds cache cap {}",
+                        pos0 + c, kv.cap);
+        self.prefill_chunk_impl(chunk, mode, &mut ChunkTarget::F32(kv))
+    }
+
+    /// Quantized-cache sibling of [`Self::prefill_chunk`]: the chunk's
+    /// K/V tiles stream through [`crate::mxfp::fused::dual_quant`]
+    /// straight into the paged stores (no f32 staging slot), and chunk
+    /// attention reads the *quantized* prefix pages at the position-aware
+    /// policy precision
+    /// ([`crate::attention::paged::dma_attention_prefill_chunk`]) — the
+    /// cache is authoritative, which is what lets the radix prefix cache
+    /// seed `kv` with pages produced by another sequence and still
+    /// reproduce cold-start outputs token for token.
+    ///
+    /// A single full-prompt chunk is bit-exact with the legacy monolithic
+    /// path (f32 prefill + [`crate::kvquant::QuantSlotKv::from_slot`]):
+    /// with no prefix the attention is the same f32 kernel, and per-token
+    /// `S_q` makes streamed quantization bit-identical to bulk.
+    pub fn prefill_chunk_quant(
+        &self,
+        chunk: &[i32],
+        mode: AttnMode,
+        kv: &mut crate::kvquant::QuantSlotKv,
+        stats: &mut crate::metrics::KvPageStats,
+    ) -> crate::Result<Tensor> {
+        self.prefill_chunk_impl(chunk, mode, &mut ChunkTarget::Quant(kv, stats))
+    }
+
+    fn prefill_chunk_impl(
+        &self,
+        chunk: &[i32],
+        mode: AttnMode,
+        target: &mut ChunkTarget<'_>,
+    ) -> crate::Result<Tensor> {
+        let cfg = &self.cfg;
+        let t = chunk.len();
+        let pos0 = target.pos();
+        anyhow::ensure!(t > 0, "empty prefill chunk");
         let embed = self.weights.get("embed")?;
         let mut x = Tensor::zeros(vec![t, cfg.d_model]);
-        for (r, &tok) in tokens.iter().enumerate() {
+        for (r, &tok) in chunk.iter().enumerate() {
             anyhow::ensure!((tok as usize) < cfg.vocab, "token {tok} out of range");
             x.row_mut(r)
                 .copy_from_slice(&embed.data[tok as usize * cfg.d_model..(tok as usize + 1) * cfg.d_model]);
         }
         let n_rep = cfg.n_heads / cfg.n_kv_heads;
-        // Tile config for the DMA path, scaled to this model.
+        // Tile config for the DMA path, scaled to this chunk.
         let tile = TileConfig {
             bm: cfg.bm.min(t),
             bn: cfg.bn.min(t),
@@ -179,8 +269,7 @@ impl CpuModel {
             let k_all = Self::dense(&h, lw.wk);
             let v_all = Self::dense(&h, lw.wv);
 
-            // Split heads, rope, attention per head.
-            let mut o_all = Tensor::zeros(vec![t, cfg.n_heads * cfg.d_head]);
+            // Split kv heads and RoPE at the chunk's absolute positions.
             let mut k_heads: Vec<Tensor> = Vec::with_capacity(cfg.n_kv_heads);
             let mut v_heads: Vec<Tensor> = Vec::with_capacity(cfg.n_kv_heads);
             for hkv in 0..cfg.n_kv_heads {
@@ -192,44 +281,116 @@ impl CpuModel {
                         vh.set(r, c, v_all.at(r, hkv * cfg.d_head + c));
                     }
                 }
-                Self::rope(&mut kh, 0, 10000.0);
-                // Persist post-RoPE K and V into the cache.
-                for r in 0..t {
-                    kv.k[li][hkv].row_mut(r).copy_from_slice(kh.row(r));
-                    kv.v[li][hkv].row_mut(r).copy_from_slice(vh.row(r));
+                Self::rope(&mut kh, pos0, 10000.0);
+                // The f32 cache persists rows before attention (chunk
+                // queries read them back through row slices); quantized
+                // stores append *after* attention so scoring sees exactly
+                // the prefix pages.
+                if let ChunkTarget::F32(kv) = target {
+                    for r in 0..t {
+                        kv.k[li][hkv].row_mut(pos0 + r).copy_from_slice(kh.row(r));
+                        kv.v[li][hkv].row_mut(pos0 + r).copy_from_slice(vh.row(r));
+                    }
                 }
                 k_heads.push(kh);
                 v_heads.push(vh);
             }
-            for hq in 0..cfg.n_heads {
+
+            let mut o_all = Tensor::zeros(vec![t, cfg.n_heads * cfg.d_head]);
+            // Roped [t, d_head] query tile of one head.
+            let build_q = |hq: usize| -> Tensor {
                 let mut qh = Tensor::zeros(vec![t, cfg.d_head]);
                 for r in 0..t {
                     for c in 0..cfg.d_head {
                         qh.set(r, c, q_all.at(r, hq * cfg.d_head + c));
                     }
                 }
-                Self::rope(&mut qh, 0, 10000.0);
-                let kvh = hq / n_rep;
-                let o = match mode {
-                    AttnMode::Native => {
-                        crate::attention::reference::attention(
-                            &qh, &k_heads[kvh], &v_heads[kvh], true)
-                    }
-                    AttnMode::Dma => {
-                        if t % tile.bm == 0 && t % tile.bn == 0 {
-                            crate::attention::dma::dma_attention(
-                                &qh, &k_heads[kvh], &v_heads[kvh], &tile)
-                        } else {
-                            // Irregular length: fall back to exact.
-                            crate::attention::reference::attention(
-                                &qh, &k_heads[kvh], &v_heads[kvh], true)
+                Self::rope(&mut qh, pos0, 10000.0);
+                qh
+            };
+            for kvh in 0..cfg.n_kv_heads {
+                if pos0 == 0 {
+                    // First chunk: identical to the monolithic path.
+                    for rh in 0..n_rep {
+                        let hq = kvh * n_rep + rh;
+                        let qh = build_q(hq);
+                        let o = match mode {
+                            AttnMode::Native => {
+                                crate::attention::reference::attention(
+                                    &qh, &k_heads[kvh], &v_heads[kvh], true)
+                            }
+                            AttnMode::Dma => {
+                                if t % tile.bm == 0 && t % tile.bn == 0 {
+                                    crate::attention::dma::dma_attention(
+                                        &qh, &k_heads[kvh], &v_heads[kvh], &tile)
+                                } else {
+                                    // Irregular length: fall back to exact.
+                                    crate::attention::reference::attention(
+                                        &qh, &k_heads[kvh], &v_heads[kvh], true)
+                                }
+                            }
+                        };
+                        for r in 0..t {
+                            for c in 0..cfg.d_head {
+                                o_all.set(r, hq * cfg.d_head + c, o.at(r, c));
+                            }
                         }
                     }
-                };
-                for r in 0..t {
-                    for c in 0..cfg.d_head {
-                        o_all.set(r, hq * cfg.d_head + c, o.at(r, c));
+                    continue;
+                }
+                match target {
+                    ChunkTarget::F32(kv) => {
+                        // Exact rectangular attention over prefix + chunk:
+                        // row r attends keys 0..=pos0+r, the same per-row
+                        // arithmetic as one monolithic pass (bit-invariant
+                        // to chunking). The prefix slice is materialized
+                        // once per kv head, not per query head.
+                        let k_cache = kv.k[li][kvh].slice_rows(0, pos0 + t);
+                        let v_cache = kv.v[li][kvh].slice_rows(0, pos0 + t);
+                        for rh in 0..n_rep {
+                            let hq = kvh * n_rep + rh;
+                            let qh = build_q(hq);
+                            let o = crate::attention::reference::attention(
+                                &qh, &k_cache, &v_cache, true);
+                            for r in 0..t {
+                                for c in 0..cfg.d_head {
+                                    o_all.set(r, hq * cfg.d_head + c, o.at(r, c));
+                                }
+                            }
+                        }
                     }
+                    ChunkTarget::Quant(kv, stats) => {
+                        // Stack the group's query tiles so each prefix
+                        // page decodes once per kv head, not once per
+                        // query head (mirrors decode's head grouping;
+                        // bit-identical to per-head calls).
+                        let mut qs = Tensor::zeros(vec![n_rep * t, cfg.d_head]);
+                        for rh in 0..n_rep {
+                            let qh = build_q(kvh * n_rep + rh);
+                            for r in 0..t {
+                                qs.row_mut(rh * t + r).copy_from_slice(qh.row(r));
+                            }
+                        }
+                        let o = crate::attention::paged::dma_attention_prefill_chunk(
+                            &qs, &k_heads[kvh], &v_heads[kvh],
+                            &kv.k[li][kvh], &kv.v[li][kvh],
+                            &kv.policy_for(li), stats);
+                        for rh in 0..n_rep {
+                            let hq = kvh * n_rep + rh;
+                            for r in 0..t {
+                                for c in 0..cfg.d_head {
+                                    o_all.set(r, hq * cfg.d_head + c, o.at(rh * t + r, c));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // Stream the chunk's K/V tiles into the quantized pages.
+            if let ChunkTarget::Quant(kv, _) = target {
+                for hkv in 0..cfg.n_kv_heads {
+                    kv.k[li][hkv].append_rows(&k_heads[hkv].data);
+                    kv.v[li][hkv].append_rows(&v_heads[hkv].data);
                 }
             }
             let proj = Self::dense(&o_all, lw.wo);
@@ -252,7 +413,7 @@ impl CpuModel {
                 *xd += md;
             }
         }
-        kv.len = t;
+        target.advance(t);
 
         // Final norm + tied unembedding.
         let ln_f = self.weights.get("ln_f")?;
@@ -372,9 +533,9 @@ impl CpuModel {
         let mut x: Vec<f32> =
             embed.data[token as usize * cfg.d_model..(token as usize + 1) * cfg.d_model].to_vec();
         let n_rep = cfg.n_heads / cfg.n_kv_heads;
-        let policy = kv.cfg.policy;
 
         for li in 0..cfg.n_layers {
+            let policy = kv.policy_for(li);
             let lw = self.layer(li)?;
             let mut h = vec![0f32; cfg.d_model];
             Self::rmsnorm(&x, lw.ln1, &mut h);
@@ -642,7 +803,7 @@ mod tests {
         let qcfg = KvQuantConfig {
             format: KvFormat::Dual,
             page_tokens: 8,
-            policy: KvPolicy { sink: 8, diag: 16 },
+            policies: vec![KvPolicy { sink: 8, diag: 16 }],
         };
         let mut qkv = QuantSlotKv::new(qcfg, m.cfg.n_layers, m.cfg.n_kv_heads, m.cfg.d_head);
         for li in 0..m.cfg.n_layers {
@@ -676,6 +837,216 @@ mod tests {
             2 * m.cfg.n_layers * m.cfg.n_kv_heads * 20
                 * KvFormat::Dual.row_bytes(m.cfg.d_head)
         );
+    }
+
+    #[test]
+    fn chunked_f32_prefill_bit_exact_with_monolithic() {
+        // The tentpole invariant for the f32 cache: any chunking of the
+        // prompt produces bit-identical cache rows and logits to one
+        // monolithic prefill — chunk attention reproduces the reference
+        // kernel's per-row arithmetic exactly.
+        let m = model();
+        let toks: Vec<i32> = (0..29).map(|i| ((i * 7) % 60) + 1).collect();
+        let mut kv_mono = KvState::new(&m.cfg, 64);
+        let lg_mono = m.prefill(&toks, AttnMode::Native, &mut kv_mono).unwrap();
+
+        for chunks in [vec![16usize, 13], vec![8, 8, 8, 5], vec![1; 29]] {
+            let mut kv = KvState::new(&m.cfg, 64);
+            let mut logits_rows: Vec<Vec<f32>> = Vec::new();
+            let mut i = 0;
+            for c in &chunks {
+                let lg = m
+                    .prefill_chunk(&toks[i..i + c], AttnMode::Native, &mut kv)
+                    .unwrap();
+                for r in 0..*c {
+                    logits_rows.push(lg.row(r).to_vec());
+                }
+                i += c;
+            }
+            assert_eq!(kv.len, 29, "{chunks:?}");
+            for li in 0..m.cfg.n_layers {
+                for h in 0..m.cfg.n_kv_heads {
+                    assert_eq!(
+                        &kv.k[li][h].data[..29 * m.cfg.d_head],
+                        &kv_mono.k[li][h].data[..29 * m.cfg.d_head],
+                        "K rows diverged, layer {li} head {h} chunks {chunks:?}"
+                    );
+                    assert_eq!(
+                        &kv.v[li][h].data[..29 * m.cfg.d_head],
+                        &kv_mono.v[li][h].data[..29 * m.cfg.d_head],
+                    );
+                }
+            }
+            for (r, row) in logits_rows.iter().enumerate() {
+                assert_eq!(row.as_slice(), lg_mono.row(r), "logits row {r} {chunks:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_chunk_quant_prefill_bit_exact_with_monolithic_quantize() {
+        // One full-prompt chunk through the quantized streaming path must
+        // equal the legacy monolithic path (f32 prefill, then
+        // QuantSlotKv::from_slot) bit for bit: same attention kernel with
+        // no prefix, and per-token S_q chunking invariance on append.
+        use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv};
+        let m = model();
+        let toks: Vec<i32> = (0..24).map(|i| ((i * 11) % 60) + 1).collect();
+        let qcfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 8,
+            policies: vec![KvPolicy { sink: 8, diag: 16 }],
+        };
+
+        for mode in [AttnMode::Native, AttnMode::Dma] {
+            // Legacy: monolithic f32 prefill + bulk quantization.
+            let mut kv = KvState::new(&m.cfg, 64);
+            let lg_mono = m.prefill(&toks, mode, &mut kv).unwrap();
+            let mut legacy =
+                QuantSlotKv::new(qcfg.clone(), m.cfg.n_layers, m.cfg.n_kv_heads, m.cfg.d_head);
+            for li in 0..m.cfg.n_layers {
+                for h in 0..m.cfg.n_kv_heads {
+                    legacy.k[li][h].append_rows(&kv.k[li][h].data[..24 * m.cfg.d_head]);
+                    legacy.v[li][h].append_rows(&kv.v[li][h].data[..24 * m.cfg.d_head]);
+                }
+            }
+            legacy.pos = 24;
+
+            // Streaming: one full-prompt chunk straight into pages.
+            let mut streamed =
+                QuantSlotKv::new(qcfg.clone(), m.cfg.n_layers, m.cfg.n_kv_heads, m.cfg.d_head);
+            let mut stats = crate::metrics::KvPageStats::default();
+            let lg = m
+                .prefill_chunk_quant(&toks, mode, &mut streamed, &mut stats)
+                .unwrap();
+            assert_eq!(streamed.pos, 24);
+            assert_eq!(stats.total(), 0, "no prefix pages on the first chunk");
+            assert_eq!(lg.data, lg_mono.data, "{mode:?} logits");
+            for li in 0..m.cfg.n_layers {
+                for h in 0..m.cfg.n_kv_heads {
+                    let (a, b) = (streamed.k[li][h].planes(), legacy.k[li][h].planes());
+                    assert_eq!(a.packed_fp4, b.packed_fp4, "{mode:?} l{li}h{h} fp4");
+                    assert_eq!(a.fp8_codes, b.fp8_codes, "{mode:?} l{li}h{h} fp8");
+                    assert_eq!(a.s4_codes, b.s4_codes);
+                    assert_eq!(a.s8_codes, b.s8_codes);
+                    assert_eq!(a.sq, b.sq);
+                    let (av, bv) = (streamed.v[li][h].planes(), legacy.v[li][h].planes());
+                    assert_eq!(av.packed_fp4, bv.packed_fp4);
+                    assert_eq!(av.sq, bv.sq);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_quant_prefill_is_deterministic_and_tracks_f32() {
+        // Multi-chunk quantized prefill attends the quantized prefix
+        // (cache-authoritative) — not bit-equal to monolithic f32, but it
+        // must be deterministic, count prefix pages, and stay close to
+        // the exact path.
+        use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv};
+        let m = model();
+        let toks: Vec<i32> = (0..32).map(|i| ((i * 13) % 60) + 1).collect();
+        let qcfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 8,
+            policies: vec![KvPolicy { sink: 8, diag: 16 }],
+        };
+        let run = || {
+            let mut kv =
+                QuantSlotKv::new(qcfg.clone(), m.cfg.n_layers, m.cfg.n_kv_heads, m.cfg.d_head);
+            let mut stats = crate::metrics::KvPageStats::default();
+            let mut last = Tensor::zeros(vec![1, 1]);
+            for i in (0..32).step_by(8) {
+                last = m
+                    .prefill_chunk_quant(&toks[i..i + 8], AttnMode::Native, &mut kv, &mut stats)
+                    .unwrap();
+            }
+            (kv, stats, last)
+        };
+        let (kv1, stats1, lg1) = run();
+        let (kv2, _, lg2) = run();
+        assert_eq!(kv1.pos, 32);
+        assert_eq!(lg1.data, lg2.data, "chunked quant prefill must be deterministic");
+        assert_eq!(
+            kv1.k[0][0].planes().packed_fp4,
+            kv2.k[0][0].planes().packed_fp4
+        );
+        // Chunks 2..4 attend 1, 2, 3 prefix pages per layer/head/query
+        // head (page size == chunk size here).
+        assert!(stats1.total() > 0);
+
+        // Quality: last-row logits stay close to the exact f32 prefill.
+        let mut kv_f32 = KvState::new(&m.cfg, 64);
+        let lg_f32 = m.prefill(&toks, AttnMode::Native, &mut kv_f32).unwrap();
+        let cos = crate::metrics::cos_sim(lg1.row(7), lg_f32.row(31));
+        assert!(cos > 0.9, "chunked quant prefill diverged: cos {cos}");
+    }
+
+    #[test]
+    fn quant_prefill_seeded_from_shared_pages_reproduces_cold_start() {
+        // The prefix-cache contract at the model level: prefilling only
+        // the suffix over imported shared pages yields bit-identical
+        // pages, logits and decode steps to chunk-prefilling the whole
+        // prompt cold.
+        use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv};
+        let m = model();
+        let toks: Vec<i32> = (0..32).map(|i| ((i * 7) % 60) + 1).collect();
+        let qcfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 8,
+            policies: vec![KvPolicy { sink: 8, diag: 16 }],
+        };
+        let chunk = 8usize;
+        let prefill_from = |kv: &mut QuantSlotKv, from: usize| {
+            let mut stats = crate::metrics::KvPageStats::default();
+            let mut last = Tensor::zeros(vec![1, 1]);
+            let mut i = from;
+            while i < toks.len() {
+                last = m
+                    .prefill_chunk_quant(&toks[i..i + chunk], AttnMode::Native, kv, &mut stats)
+                    .unwrap();
+                i += chunk;
+            }
+            last
+        };
+
+        // Cold: all four chunks.
+        let mut cold = QuantSlotKv::new(qcfg.clone(), m.cfg.n_layers, m.cfg.n_kv_heads, m.cfg.d_head);
+        let lg_cold = prefill_from(&mut cold, 0);
+
+        // Warm: import the first 24 tokens (3 full pages) as shared Arcs
+        // from the cold run, then prefill only the last chunk.
+        let mut warm = QuantSlotKv::new(qcfg.clone(), m.cfg.n_layers, m.cfg.n_kv_heads, m.cfg.d_head);
+        for li in 0..m.cfg.n_layers {
+            for h in 0..m.cfg.n_kv_heads {
+                for j in 0..3 {
+                    warm.k[li][h].push_shared_page(cold.k[li][h].page_arc(j).clone());
+                    warm.v[li][h].push_shared_page(cold.v[li][h].page_arc(j).clone());
+                }
+            }
+        }
+        warm.pos = 24;
+        let lg_warm = prefill_from(&mut warm, 24);
+        assert_eq!(lg_warm.data, lg_cold.data, "suffix logits diverged");
+        assert_eq!(
+            cold.k[1][1].planes().packed_fp4,
+            warm.k[1][1].planes().packed_fp4,
+            "suffix pages diverged"
+        );
+
+        // Decode runs identically over both caches.
+        let mut s1 = crate::metrics::KvPageStats::default();
+        let mut s2 = crate::metrics::KvPageStats::default();
+        let (mut t1, mut t2) = (7i32, 7i32);
+        for _ in 0..4 {
+            let l1 = m.decode_step_paged(t1, &mut cold, &mut s1).unwrap();
+            let l2 = m.decode_step_paged(t2, &mut warm, &mut s2).unwrap();
+            assert_eq!(l1, l2, "decode diverged between cold and seeded cache");
+            t1 = argmax(&l1);
+            t2 = argmax(&l2);
+        }
+        assert_eq!(s1, s2);
     }
 
     #[test]

@@ -2,10 +2,16 @@
 //! the same interface as the PJRT runtime. Lets the whole coordinator
 //! stack (scheduler, batcher, server, examples) run and test without
 //! artifacts, and cross-checks PJRT outputs in integration tests.
+//!
+//! Prefill streams: each [`ModelBackend::prefill_chunk`] call runs one
+//! prompt slice through [`CpuModel::prefill_chunk`] (f32 working cache)
+//! or [`CpuModel::prefill_chunk_quant`] (quantize-on-append into paged
+//! stores — no f32 staging slot ever exists for quantized formats).
 
-use super::{ModelBackend, PrefillOut};
+use super::{ModelBackend, PrefillOut, PrefillSeq, PrefillState};
 use crate::config::ModelConfig;
 use crate::kvcache::{SeqKv, SlotCache, SlotKv};
+use crate::kvquant::{KvQuantConfig, QuantSlotKv};
 use crate::metrics::KvPageStats;
 use crate::model::{AttnMode, CpuModel, KvState};
 
@@ -14,7 +20,8 @@ pub struct HostBackend {
     slots: SlotCache,
     cache_len: usize,
     buckets: Vec<usize>,
-    /// Cumulative page-decode counters from quantized-cache decodes.
+    /// Cumulative page-decode counters from quantized-cache prefills and
+    /// decodes.
     kv_stats: KvPageStats,
 }
 
@@ -37,6 +44,14 @@ impl HostBackend {
         HostBackend::new(CpuModel::new(cfg, w).unwrap(), 96)
     }
 
+    /// Same model/weights as [`Self::for_tests`] with a caller-chosen
+    /// cache length (benches that need room for long shared prompts).
+    pub fn for_tests_with_cache(cache_len: usize) -> HostBackend {
+        let cfg = crate::model::test_config();
+        let w = crate::model::random_weights(&cfg, 42);
+        HostBackend::new(CpuModel::new(cfg, w).unwrap(), cache_len)
+    }
+
     fn cfg(&self) -> &ModelConfig {
         &self.model.cfg
     }
@@ -57,15 +72,19 @@ impl HostBackend {
         st
     }
 
+    /// KvState (any capacity >= its live rows) -> padded batch SlotKv.
     fn state_to_slot(&self, st: &KvState) -> SlotKv {
         let cfg = self.cfg();
         let mut slot = self.slots.empty_slot();
         let (c, dh) = (self.cache_len, cfg.d_head);
+        let live = st.len.min(c);
         for li in 0..cfg.n_layers {
             for h in 0..cfg.n_kv_heads {
                 let base = (li * cfg.n_kv_heads + h) * c * dh;
-                slot.k[base..base + c * dh].copy_from_slice(&st.k[li][h].data);
-                slot.v[base..base + c * dh].copy_from_slice(&st.v[li][h].data);
+                slot.k[base..base + live * dh]
+                    .copy_from_slice(&st.k[li][h].data[..live * dh]);
+                slot.v[base..base + live * dh]
+                    .copy_from_slice(&st.v[li][h].data[..live * dh]);
             }
         }
         slot.pos = st.len;
@@ -74,12 +93,90 @@ impl HostBackend {
 }
 
 impl ModelBackend for HostBackend {
-    fn prefill(&mut self, tokens: &[i32], dma: bool) -> crate::Result<PrefillOut> {
-        let mode = if dma { AttnMode::Dma } else { AttnMode::Native };
-        let mut kv = KvState::new(self.cfg(), self.cache_len);
-        let logits = self.model.prefill(tokens, mode, &mut kv)?;
-        let last = logits.row(tokens.len() - 1).to_vec();
-        Ok(PrefillOut { last_logits: last, slot: self.state_to_slot(&kv) })
+    fn begin_prefill(
+        &mut self,
+        tokens: &[i32],
+        dma: bool,
+        quant: Option<&KvQuantConfig>,
+        seed: Option<QuantSlotKv>,
+    ) -> crate::Result<PrefillSeq> {
+        anyhow::ensure!(!tokens.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            tokens.len() <= self.cache_len,
+            "prompt {} exceeds cache {}",
+            tokens.len(),
+            self.cache_len
+        );
+        let cfg = self.cfg().clone();
+        let (state, done) = match quant {
+            Some(qcfg) => {
+                let slot = match seed {
+                    Some(s) => {
+                        anyhow::ensure!(
+                            s.pos < tokens.len(),
+                            "seed covers the whole prompt ({} >= {})",
+                            s.pos,
+                            tokens.len()
+                        );
+                        s
+                    }
+                    None => QuantSlotKv::new(
+                        qcfg.clone(),
+                        cfg.n_layers,
+                        cfg.n_kv_heads,
+                        cfg.d_head,
+                    ),
+                };
+                let done = slot.pos;
+                (PrefillState::Quant(slot), done)
+            }
+            None => {
+                anyhow::ensure!(seed.is_none(), "prefix seeding requires a quantized cache");
+                // Prompt-length working cache — the cache-length f32
+                // staging slot is gone; padding happens once at finish.
+                (PrefillState::F32(KvState::new(&cfg, tokens.len())), 0)
+            }
+        };
+        Ok(PrefillSeq {
+            tokens: tokens.to_vec(),
+            dma,
+            done,
+            last_logits: Vec::new(),
+            state,
+        })
+    }
+
+    fn prefill_chunk(&mut self, seq: &mut PrefillSeq, max_tokens: usize) -> crate::Result<()> {
+        anyhow::ensure!(max_tokens > 0, "zero-token prefill chunk");
+        let n = max_tokens.min(seq.remaining());
+        if n == 0 {
+            return Ok(());
+        }
+        let mode = if seq.dma { AttnMode::Dma } else { AttnMode::Native };
+        let chunk = &seq.tokens[seq.done..seq.done + n];
+        let logits = match &mut seq.state {
+            PrefillState::F32(kv) => self.model.prefill_chunk(chunk, mode, kv)?,
+            PrefillState::Quant(kv) => {
+                self.model.prefill_chunk_quant(chunk, mode, kv, &mut self.kv_stats)?
+            }
+            PrefillState::Deferred => {
+                anyhow::bail!("host backend does not defer prefill")
+            }
+        };
+        seq.last_logits = logits.row(n - 1).to_vec();
+        seq.done += n;
+        Ok(())
+    }
+
+    fn finish_prefill(&mut self, seq: PrefillSeq) -> crate::Result<PrefillOut> {
+        anyhow::ensure!(seq.is_done(), "prefill incomplete ({}/{})",
+                        seq.done, seq.tokens.len());
+        let kv = match seq.state {
+            PrefillState::F32(st) => SeqKv::F32(self.state_to_slot(&st)),
+            PrefillState::Quant(q) => SeqKv::Quant(q),
+            PrefillState::Deferred => anyhow::bail!("host backend does not defer prefill"),
+        };
+        Ok(PrefillOut { last_logits: seq.last_logits, kv })
     }
 
     fn decode(
@@ -169,9 +266,9 @@ mod tests {
     fn prefill_then_decode_matches_cpu_model() {
         let mut be = HostBackend::for_tests();
         let toks: Vec<i32> = (0..16).map(|i| ((i * 7) % 60) + 1).collect();
-        let out = be.prefill(&toks, false).unwrap();
+        let out = be.prefill(&toks, false, None).unwrap();
         assert_eq!(out.last_logits.len(), 64);
-        assert_eq!(out.slot.pos, 16);
+        assert_eq!(out.kv.pos(), 16);
 
         // Direct CPU path for comparison.
         let cfg = crate::model::test_config();
@@ -184,7 +281,7 @@ mod tests {
         }
 
         // Decode continues correctly through slot round-trips.
-        let mut slot = SeqKv::F32(out.slot);
+        let mut slot = out.kv;
         let logits = be.decode(&[7], &mut [Some(&mut slot)]).unwrap();
         let l2 = m.decode_step(7, &mut kv).unwrap();
         for (a, b) in logits.iter().zip(&l2) {
@@ -194,10 +291,62 @@ mod tests {
     }
 
     #[test]
+    fn chunked_prefill_matches_one_shot() {
+        // The backend-level chunking contract: advancing a PrefillSeq in
+        // small slices ends with the same slot contents and last logits
+        // as one full-prompt chunk (f32 path is bit-invariant).
+        let toks: Vec<i32> = (0..23).map(|i| ((i * 5) % 60) + 1).collect();
+
+        let mut be1 = HostBackend::for_tests();
+        let one = be1.prefill(&toks, false, None).unwrap();
+
+        let mut be2 = HostBackend::for_tests();
+        let mut seq = be2.begin_prefill(&toks, false, None, None).unwrap();
+        while !seq.is_done() {
+            be2.prefill_chunk(&mut seq, 7).unwrap();
+        }
+        let many = be2.finish_prefill(seq).unwrap();
+
+        assert_eq!(one.last_logits, many.last_logits);
+        let (a, b) = (one.kv.as_f32().unwrap(), many.kv.as_f32().unwrap());
+        assert_eq!(a.pos, b.pos);
+        assert_eq!(a.k, b.k);
+        assert_eq!(a.v, b.v);
+    }
+
+    #[test]
+    fn chunked_quant_prefill_streams_into_pages() {
+        use crate::kvquant::{KvFormat, KvPolicy};
+        let toks: Vec<i32> = (0..28).map(|i| ((i * 7) % 60) + 1).collect();
+        let qcfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 8,
+            policies: vec![KvPolicy { sink: 8, diag: 8 }],
+        };
+        let mut be = HostBackend::for_tests();
+        let mut seq = be.begin_prefill(&toks, false, Some(&qcfg), None).unwrap();
+        be.prefill_chunk(&mut seq, 16).unwrap();
+        assert_eq!(seq.done, 16);
+        be.prefill_chunk(&mut seq, 16).unwrap();
+        assert!(seq.is_done());
+        let out = be.finish_prefill(seq).unwrap();
+        let SeqKv::Quant(ref q) = out.kv else { panic!("expected quantized cache") };
+        assert_eq!(q.pos, 28);
+        // The second chunk attended the first chunk's quantized pages.
+        assert!(be.kv_page_stats().total() > 0);
+
+        // Decode proceeds over the streamed cache.
+        let mut slot = out.kv;
+        let logits = be.decode(&[7], &mut [Some(&mut slot)]).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(slot.pos(), 29);
+    }
+
+    #[test]
     fn batch_decode_with_padding_slots() {
         let mut be = HostBackend::for_tests();
-        let o1 = be.prefill(&[1, 2, 3, 4], false).unwrap();
-        let mut s1 = SeqKv::F32(o1.slot);
+        let o1 = be.prefill(&[1, 2, 3, 4], false, None).unwrap();
+        let mut s1 = o1.kv;
         let logits = be.decode(&[9, 0], &mut [Some(&mut s1), None]).unwrap();
         assert_eq!(logits.len(), 2 * 64);
         assert_eq!(s1.pos(), 5);
@@ -205,17 +354,18 @@ mod tests {
 
     #[test]
     fn quantized_decode_path_runs_and_counts_pages() {
-        use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv};
+        use crate::kvquant::{KvFormat, KvPolicy};
         let mut be = HostBackend::for_tests();
         let toks: Vec<i32> = (0..28).map(|i| ((i * 7) % 60) + 1).collect();
-        let out = be.prefill(&toks, false).unwrap();
         let qcfg = KvQuantConfig {
             format: KvFormat::Dual,
             page_tokens: 8,
-            policy: KvPolicy { sink: 8, diag: 8 },
+            policies: vec![KvPolicy { sink: 8, diag: 8 }],
         };
-        let mut slot = SeqKv::Quant(QuantSlotKv::from_slot(&out.slot, &be.slots, qcfg));
+        let out = be.prefill(&toks, false, Some(&qcfg)).unwrap();
+        let mut slot = out.kv;
         assert_eq!(slot.pos(), 28);
+        let base_pages = be.kv_page_stats();
 
         let logits = be.decode(&[7], &mut [Some(&mut slot)]).unwrap();
         assert_eq!(logits.len(), 64);
@@ -225,13 +375,12 @@ mod tests {
         // tokens the sink page and the frontier pages are high, page 1
         // sits in the low body.
         let stats = be.kv_page_stats();
-        assert_eq!(stats.total(), 2 * 2 * 4);
+        assert_eq!(stats.total() - base_pages.total(), 2 * 2 * 4);
         assert!(stats.high_pages > 0 && stats.low_pages > 0, "{stats:?}");
 
-        // Quantized decode tracks the f32 path closely enough to agree on
-        // the argmax token most of the time; at minimum it must be a
-        // plausible distribution (finite, non-degenerate).
-        let mut f32_slot = SeqKv::F32(be.prefill(&toks, false).unwrap().slot);
+        // Quantized decode tracks the f32 path closely enough to stay a
+        // plausible distribution (finite, non-degenerate) and similar.
+        let mut f32_slot = be.prefill(&toks, false, None).unwrap().kv;
         let f32_logits = be.decode(&[7], &mut [Some(&mut f32_slot)]).unwrap();
         let cos = crate::metrics::cos_sim(&logits, &f32_logits);
         assert!(cos > 0.95, "quantized decode diverged: cos {cos}");

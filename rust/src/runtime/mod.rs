@@ -10,24 +10,115 @@ pub mod host;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-use crate::kvcache::{SeqKv, SlotKv};
+use crate::kvcache::SeqKv;
+use crate::kvquant::{KvQuantConfig, QuantSlotKv};
 
-/// Result of prefilling one sequence.
+/// Result of finishing one sequence's prefill.
 pub struct PrefillOut {
     /// Logits of the last *real* (unpadded) position, length = vocab.
     pub last_logits: Vec<f32>,
-    /// Per-sequence KV cache, padded to the engine cache length. Always
-    /// f32 — the engine quantizes it into a paged store right after
-    /// prefill when `kv_format` asks for one.
-    pub slot: SlotKv,
+    /// The sequence's decode cache: a padded f32 batch slot, or the
+    /// quantized paged store the prefill chunks streamed into directly
+    /// (no f32 staging slot exists for quantized formats).
+    pub kv: SeqKv,
+}
+
+/// Streaming prefill in flight for one sequence. The engine owns this
+/// between scheduler steps, advancing it one `--prefill-chunk` slice at a
+/// time so prefill interleaves with decode instead of stalling it.
+pub struct PrefillSeq {
+    /// The full prompt.
+    pub tokens: Vec<i32>,
+    /// Use the DMA (mixed-precision) attention path.
+    pub dma: bool,
+    /// Prompt tokens already run through the model (includes any shared
+    /// prefix imported from the radix cache — those were never run here).
+    pub done: usize,
+    /// Logits of the last processed position. Sharing is capped strictly
+    /// inside the prompt, so at least one chunk always runs and this is
+    /// populated by the time the prefill finishes.
+    pub last_logits: Vec<f32>,
+    pub state: PrefillState,
+}
+
+/// Backend-side working state of a streaming prefill.
+pub enum PrefillState {
+    /// Exact f32 working cache, prompt-length (host backend, f32 serving
+    /// format). Converted to a padded batch slot at finish; the old
+    /// cache-length staging slot is gone.
+    F32(crate::model::KvState),
+    /// Quantized paged stores; chunks quantize-on-append and attend the
+    /// quantized prefix (host backend, quantized formats). May start
+    /// seeded with shared pages from the radix prefix cache.
+    Quant(QuantSlotKv),
+    /// The backend cannot stream (bucketed PJRT prefill executables take
+    /// the whole prompt): chunks are only counted, and `finish_prefill`
+    /// runs one monolithic execution.
+    Deferred,
+}
+
+impl PrefillSeq {
+    pub fn remaining(&self) -> usize {
+        self.tokens.len() - self.done
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done >= self.tokens.len()
+    }
+
+    /// Resident bytes of the in-flight working cache (the engine folds
+    /// this into its peak-bytes accounting — chunked prefill is exactly
+    /// when a sequence's cache grows).
+    pub fn resident_bytes(&self) -> usize {
+        match &self.state {
+            PrefillState::F32(kv) => kv
+                .k
+                .iter()
+                .flatten()
+                .chain(kv.v.iter().flatten())
+                .map(|t| t.data.len() * 4)
+                .sum(),
+            PrefillState::Quant(q) => q.quantized_bytes(),
+            PrefillState::Deferred => 0,
+        }
+    }
 }
 
 /// The serving engine's view of a model executor. One instance services
 /// one worker thread (PJRT handles are not shared across threads).
 pub trait ModelBackend {
-    /// Prefill a prompt; `dma` selects the mixed-precision attention
-    /// artifacts (vs native/full-precision).
-    fn prefill(&mut self, tokens: &[i32], dma: bool) -> crate::Result<PrefillOut>;
+    /// Begin a streaming prefill. `quant` selects quantize-on-append into
+    /// paged stores; `seed` imports a radix-cache prefix hit (a slot
+    /// pre-populated with `seed.pos` tokens of shared pages — quantized
+    /// formats only).
+    fn begin_prefill(
+        &mut self,
+        tokens: &[i32],
+        dma: bool,
+        quant: Option<&KvQuantConfig>,
+        seed: Option<QuantSlotKv>,
+    ) -> crate::Result<PrefillSeq>;
+
+    /// Advance a streaming prefill by up to `max_tokens` prompt tokens.
+    fn prefill_chunk(&mut self, seq: &mut PrefillSeq, max_tokens: usize)
+        -> crate::Result<()>;
+
+    /// Complete a finished (`seq.is_done()`) prefill: last-position
+    /// logits plus the sequence's decode cache.
+    fn finish_prefill(&mut self, seq: PrefillSeq) -> crate::Result<PrefillOut>;
+
+    /// Convenience: run a whole prompt as one chunk (tests, eval,
+    /// latency-insensitive callers).
+    fn prefill(
+        &mut self,
+        tokens: &[i32],
+        dma: bool,
+        quant: Option<&KvQuantConfig>,
+    ) -> crate::Result<PrefillOut> {
+        let mut seq = self.begin_prefill(tokens, dma, quant, None)?;
+        self.prefill_chunk(&mut seq, tokens.len())?;
+        self.finish_prefill(seq)
+    }
 
     /// One decode step over a batch of sequence caches. `tokens[i]` is
     /// fed to `slots[i]`; `None` slots are padding. Returns `[B * vocab]`

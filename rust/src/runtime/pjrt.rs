@@ -5,7 +5,7 @@
 //! loaded once from `weights.bin` into host literals and passed as
 //! leading parameters (the layout contract lives in `model_meta.json`).
 
-use super::{pick_bucket, ModelBackend, PrefillOut};
+use super::{pick_bucket, ModelBackend, PrefillOut, PrefillSeq, PrefillState};
 use crate::kvcache::SeqKv;
 use crate::config::MetaConfig;
 use crate::kvcache::{SlotCache, SlotKv};
@@ -126,8 +126,10 @@ impl PjrtBackend {
     }
 }
 
-impl ModelBackend for PjrtBackend {
-    fn prefill(&mut self, tokens: &[i32], dma: bool) -> crate::Result<PrefillOut> {
+impl PjrtBackend {
+    /// One monolithic prefill execution (bucketed executables take the
+    /// whole prompt; streaming chunks are deferred to this).
+    fn prefill_full(&mut self, tokens: &[i32], dma: bool) -> crate::Result<PrefillOut> {
         let l = tokens.len();
         anyhow::ensure!(l > 0, "empty prompt");
         let bucket = self.prefill_bucket(l)?;
@@ -159,7 +161,48 @@ impl ModelBackend for PjrtBackend {
         }
         let slot = self.slots.slot_from_prefill(&kc_real, &vc_real, l)?;
         let last_logits = logits[(l - 1) * vocab..l * vocab].to_vec();
-        Ok(PrefillOut { last_logits, slot })
+        Ok(PrefillOut { last_logits, kv: SeqKv::F32(slot) })
+    }
+}
+
+impl ModelBackend for PjrtBackend {
+    fn begin_prefill(
+        &mut self,
+        tokens: &[i32],
+        dma: bool,
+        quant: Option<&crate::kvquant::KvQuantConfig>,
+        seed: Option<crate::kvquant::QuantSlotKv>,
+    ) -> crate::Result<PrefillSeq> {
+        anyhow::ensure!(!tokens.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            quant.is_none() && seed.is_none(),
+            "quantized KV cache not supported by the PJRT backend; \
+             use kv_format=f32 or the host backend"
+        );
+        // Bucketed prefill executables take the whole prompt: chunks are
+        // only counted and the execution happens once at finish.
+        Ok(PrefillSeq {
+            tokens: tokens.to_vec(),
+            dma,
+            done: 0,
+            last_logits: Vec::new(),
+            state: PrefillState::Deferred,
+        })
+    }
+
+    fn prefill_chunk(&mut self, seq: &mut PrefillSeq, max_tokens: usize) -> crate::Result<()> {
+        anyhow::ensure!(max_tokens > 0, "zero-token prefill chunk");
+        // No streaming here: pacing a deferred prefill through multiple
+        // scheduler steps would only delay the one monolithic execution,
+        // so the first chunk call completes the count.
+        seq.done = seq.tokens.len();
+        Ok(())
+    }
+
+    fn finish_prefill(&mut self, seq: PrefillSeq) -> crate::Result<PrefillOut> {
+        anyhow::ensure!(seq.is_done(), "prefill incomplete ({}/{})",
+                        seq.done, seq.tokens.len());
+        self.prefill_full(&seq.tokens, seq.dma)
     }
 
     fn decode(

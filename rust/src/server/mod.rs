@@ -7,7 +7,8 @@
 //! <- {"id": 1, "output": [12, 5], "finish": "eos",
 //!     "queue_ms": 0.1, "prefill_ms": 3.2, "decode_ms": 8.9}
 //! -> {"cmd": "stats"}          (optional control message)
-//! <- {"workers": 1, "kv_format": "f32"}
+//! <- {"workers": 1, "kv_format": "f32", "kv_policy": "128/128",
+//!     "prefix_hit_tokens": 0}
 //! ```
 //!
 //! Responses are routed back to the connection that submitted them by an
@@ -176,6 +177,11 @@ fn handle_conn(
                 let out = Json::obj(vec![
                     ("workers", Json::num(router.num_workers() as f64)),
                     ("kv_format", Json::str(router.kv_format())),
+                    ("kv_policy", Json::str(router.kv_policy())),
+                    (
+                        "prefix_hit_tokens",
+                        Json::num(router.prefix_hit_tokens() as f64),
+                    ),
                 ]);
                 writeln!(writer, "{out}")?;
                 continue;
@@ -293,6 +299,8 @@ mod tests {
         let s = Json::parse(line.trim()).unwrap();
         assert_eq!(s.get("workers").unwrap().as_i64(), Some(1));
         assert_eq!(s.get("kv_format").unwrap().as_str(), Some("f32"));
+        assert_eq!(s.get("kv_policy").unwrap().as_str(), Some("128/128"));
+        assert_eq!(s.get("prefix_hit_tokens").unwrap().as_i64(), Some(0));
         line.clear();
         reader.read_line(&mut line).unwrap();
         let j = Json::parse(line.trim()).unwrap();

@@ -94,6 +94,30 @@ impl Table {
         }
     }
 
+    /// Write as JSON rows under `bench_out/<name>.json` (creates the
+    /// directory): one object per row, keyed by the column headers.
+    pub fn write_json(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        use crate::util::json::Json;
+        let dir = std::path::Path::new("bench_out");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.json"));
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                Json::obj(
+                    self.headers
+                        .iter()
+                        .zip(row)
+                        .map(|(h, c)| (h.as_str(), Json::str(c.clone())))
+                        .collect(),
+                )
+            })
+            .collect();
+        std::fs::write(&path, Json::arr(rows).to_string())?;
+        Ok(path)
+    }
+
     /// Write as CSV under `bench_out/<name>.csv` (creates the directory).
     pub fn write_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
         let dir = std::path::Path::new("bench_out");

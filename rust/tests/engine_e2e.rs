@@ -6,9 +6,9 @@ use dma::coordinator::engine::{Engine, EngineHandle};
 use dma::coordinator::router::{Policy, Router};
 use dma::coordinator::{FinishReason, Request};
 use dma::kvcache::SeqKv;
-use dma::kvquant::{KvFormat, KvPolicy};
+use dma::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv};
 use dma::runtime::host::HostBackend;
-use dma::runtime::{ModelBackend, PrefillOut};
+use dma::runtime::{ModelBackend, PrefillOut, PrefillSeq};
 use std::sync::Arc;
 
 fn req(id: u64, len: usize, max_new: usize, dma: bool) -> Request {
@@ -106,7 +106,7 @@ fn run_request_set(format: KvFormat) -> (Vec<dma::coordinator::Response>, dma::c
     let cfg = EngineConfig {
         max_new_tokens: 6,
         kv_format: format,
-        kv_precision_policy: KvPolicy { sink: 16, diag: 32 },
+        kv_precision_policies: vec![KvPolicy { sink: 16, diag: 32 }],
         ..Default::default()
     };
     let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
@@ -174,6 +174,89 @@ fn dual_cache_reports_mixed_page_precisions() {
 }
 
 // ---------------------------------------------------------------------
+// Chunked prefill + radix prefix cache
+// ---------------------------------------------------------------------
+
+#[test]
+fn chunked_prefill_engine_outputs_match_any_chunk_size() {
+    // The f32 chunked prefill is bit-invariant: the same workload through
+    // engines with different --prefill-chunk settings produces identical
+    // tokens.
+    let run = |chunk: usize| {
+        let cfg = EngineConfig {
+            max_new_tokens: 4,
+            prefill_chunk: chunk,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        for i in 0..4 {
+            e.submit(req(i, 40 + i as usize, 4, false));
+        }
+        let mut resps = e.run_until_idle().unwrap();
+        resps.sort_by_key(|r| r.id);
+        (resps, e.stats.clone())
+    };
+    let (small, small_stats) = run(16);
+    let (big, big_stats) = run(512);
+    assert_eq!(small.len(), 4);
+    for (a, b) in small.iter().zip(&big) {
+        assert_eq!(a.output, b.output, "request {} diverged across chunk sizes", a.id);
+    }
+    // Small chunks really did split the work.
+    assert!(small_stats.prefill_chunks > big_stats.prefill_chunks);
+    assert_eq!(small_stats.prefill_tokens, big_stats.prefill_tokens);
+}
+
+#[test]
+fn prefix_cache_reproduces_cold_start_and_skips_shared_prefill() {
+    // The acceptance-bar e2e: two requests whose prompts share 75% of
+    // their tokens. The second must produce tokens identical to its own
+    // cold-start run while prefill_tokens counts only the unshared
+    // suffix (asserted via the new prefix-hit metrics).
+    let prompt_a: Vec<i32> = (0..64).map(|i| ((i * 7) % 58) as i32 + 6).collect();
+    let mut prompt_b = prompt_a.clone();
+    for t in prompt_b[48..].iter_mut() {
+        *t = (*t % 50) + 7; // diverge in the last 25%
+    }
+    let cfg = |prefix_cache: bool| EngineConfig {
+        max_new_tokens: 6,
+        kv_format: KvFormat::Dual,
+        prefill_chunk: 16,
+        prefix_cache,
+        kv_precision_policies: vec![KvPolicy { sink: 16, diag: 16 }],
+        ..Default::default()
+    };
+
+    // Cold-start oracles: each request alone on a fresh engine, no cache.
+    let cold = |tokens: &[i32]| {
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg(false), 5);
+        e.submit(Request { id: 9, tokens: tokens.to_vec(), max_new_tokens: 6, dma: false });
+        e.run_until_idle().unwrap().remove(0)
+    };
+    let cold_a = cold(&prompt_a);
+    let cold_b = cold(&prompt_b);
+
+    // Warm engine: A populates the cache, B shares its first 48 tokens.
+    let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg(true), 5);
+    e.submit(Request { id: 1, tokens: prompt_a.clone(), max_new_tokens: 6, dma: false });
+    let first = e.run_until_idle().unwrap();
+    assert_eq!(first[0].output, cold_a.output, "request A diverged from cold start");
+    assert_eq!(e.stats.prefill_tokens, 64);
+    assert_eq!(e.stats.prefix_hit_tokens, 0);
+
+    e.submit(Request { id: 2, tokens: prompt_b.clone(), max_new_tokens: 6, dma: false });
+    let second = e.run_until_idle().unwrap();
+    assert_eq!(
+        second[0].output, cold_b.output,
+        "prefix-cache hit changed request B's tokens"
+    );
+    // B shared 48 of 64 tokens; only the 16-token suffix was prefilled.
+    assert_eq!(e.stats.prefix_hits, 1);
+    assert_eq!(e.stats.prefix_hit_tokens, 48);
+    assert_eq!(e.stats.prefill_tokens, 64 + 16);
+}
+
+// ---------------------------------------------------------------------
 // Failure injection
 // ---------------------------------------------------------------------
 
@@ -183,11 +266,24 @@ struct FlakyBackend {
 }
 
 impl ModelBackend for FlakyBackend {
-    fn prefill(&mut self, tokens: &[i32], dma: bool) -> dma::Result<PrefillOut> {
-        if tokens.contains(&13) {
+    fn begin_prefill(
+        &mut self,
+        tokens: &[i32],
+        dma: bool,
+        quant: Option<&KvQuantConfig>,
+        seed: Option<QuantSlotKv>,
+    ) -> dma::Result<PrefillSeq> {
+        self.inner.begin_prefill(tokens, dma, quant, seed)
+    }
+    fn prefill_chunk(&mut self, seq: &mut PrefillSeq, max_tokens: usize) -> dma::Result<()> {
+        let end = (seq.done + max_tokens).min(seq.tokens.len());
+        if seq.tokens[seq.done..end].contains(&13) {
             anyhow::bail!("injected prefill failure");
         }
-        self.inner.prefill(tokens, dma)
+        self.inner.prefill_chunk(seq, max_tokens)
+    }
+    fn finish_prefill(&mut self, seq: PrefillSeq) -> dma::Result<PrefillOut> {
+        self.inner.finish_prefill(seq)
     }
     fn decode(
         &mut self,

@@ -119,7 +119,7 @@ fn prefill_matches_cpu_mirror() {
     let cpu = CpuModel::new(meta_model, weights).unwrap();
 
     let tokens: Vec<i32> = (0..48).map(|i| ((i * 5) % 58) as i32 + 6).collect();
-    let out = be.prefill(&tokens, false).unwrap();
+    let out = be.prefill(&tokens, false, None).unwrap();
 
     let mut kv = KvState::new(&cpu.cfg, 64);
     let logits = cpu.prefill(&tokens, AttnMode::Native, &mut kv).unwrap();
@@ -133,9 +133,9 @@ fn prefill_matches_cpu_mirror() {
 fn decode_continues_prefill_through_pjrt() {
     let Some(mut be) = load_backend() else { return };
     let tokens: Vec<i32> = (0..32).map(|i| ((i * 11) % 58) as i32 + 6).collect();
-    let out = be.prefill(&tokens, false).unwrap();
+    let out = be.prefill(&tokens, false, None).unwrap();
     let tok1 = argmax(&out.last_logits);
-    let mut slot = dma::kvcache::SeqKv::F32(out.slot);
+    let mut slot = out.kv;
     assert_eq!(slot.pos(), 32);
 
     // Decode three steps; positions advance, logits stay finite.
@@ -151,12 +151,12 @@ fn decode_continues_prefill_through_pjrt() {
     // Cross-check against one long prefill.
     let mut full = tokens.clone();
     full.push(tok1);
-    let out2 = be.prefill(&full, false).unwrap();
+    let out2 = be.prefill(&full, false, None).unwrap();
     let direct = argmax(&out2.last_logits);
     // First decoded next-token must match the prefill-extended argmax.
     let logits = {
-        let o = be.prefill(&tokens, false).unwrap();
-        let mut s = dma::kvcache::SeqKv::F32(o.slot);
+        let o = be.prefill(&tokens, false, None).unwrap();
+        let mut s = o.kv;
         be.decode(&[tok1], &mut [Some(&mut s)]).unwrap()
     };
     assert_eq!(argmax(&logits[..be.vocab()]), direct);
@@ -167,12 +167,15 @@ fn batched_decode_matches_single_through_pjrt() {
     let Some(mut be) = load_backend() else { return };
     let t1: Vec<i32> = (0..16).map(|i| ((i * 3) % 58) as i32 + 6).collect();
     let t2: Vec<i32> = (0..24).map(|i| ((i * 7) % 58) as i32 + 6).collect();
-    let o1 = be.prefill(&t1, false).unwrap();
-    let o2 = be.prefill(&t2, false).unwrap();
+    let o1 = be.prefill(&t1, false, None).unwrap();
+    let o2 = be.prefill(&t2, false, None).unwrap();
     use dma::kvcache::SeqKv;
-    let (mut s1a, mut s2a) =
-        (SeqKv::F32(o1.slot.clone()), SeqKv::F32(o2.slot.clone()));
-    let (mut s1b, mut s2b) = (SeqKv::F32(o1.slot), SeqKv::F32(o2.slot));
+    let (s1, s2) = (
+        o1.kv.as_f32().unwrap().clone(),
+        o2.kv.as_f32().unwrap().clone(),
+    );
+    let (mut s1a, mut s2a) = (SeqKv::F32(s1.clone()), SeqKv::F32(s2.clone()));
+    let (mut s1b, mut s2b) = (SeqKv::F32(s1), SeqKv::F32(s2));
     let vocab = be.vocab();
 
     // Batched.
