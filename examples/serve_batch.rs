@@ -1,26 +1,65 @@
 //! End-to-end serving driver (the EXPERIMENTS.md E2E run).
 //!
-//! Loads the small build-time-trained model through the PJRT runtime,
-//! spins up the full coordinator (engine worker + router), submits a
-//! batch of long-context requests (copy / needle / induction prompts),
-//! and reports latency/throughput. Python is never on this path.
+//! Loads the small build-time-trained model through the PJRT runtime
+//! (or the pure-Rust host backend with `--host-backend` — no artifacts
+//! or `pjrt` feature needed), spins up the full coordinator (engine
+//! workers + router), submits a batch of long-context requests (copy /
+//! needle / induction prompts), and reports latency/throughput — then
+//! demonstrates the v2 event API: a streamed request printed token by
+//! token with its TTFT, and a long request cancelled mid-generation.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_batch
+//! make artifacts && cargo run --release --features pjrt --example serve_batch
 //! cargo run --release --example serve_batch -- --host-backend   # no artifacts
-//! cargo run --release --example serve_batch -- --requests 32 --workers 1
+//! cargo run --release --example serve_batch -- --host-backend --requests 32
 //! ```
 
-use dma::config::{EngineConfig, MetaConfig, TokenIds};
+use dma::config::{EngineConfig, TokenIds};
 use dma::coordinator::engine::EngineHandle;
 use dma::coordinator::router::{Policy, Router};
-use dma::coordinator::Request;
+use dma::coordinator::{EngineEvent, Request, SamplingParams};
 use dma::runtime::host::HostBackend;
-use dma::runtime::pjrt::PjrtBackend;
 use dma::runtime::ModelBackend;
 use dma::util::cli::Args;
 use dma::util::rng::Rng;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+fn make_backend(artifacts: &str, host: bool) -> dma::Result<Box<dyn ModelBackend>> {
+    if host {
+        return Ok(Box::new(HostBackend::for_tests()));
+    }
+    pjrt_backend(artifacts)
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(artifacts: &str) -> dma::Result<Box<dyn ModelBackend>> {
+    let meta = dma::config::MetaConfig::load(artifacts)?;
+    Ok(Box::new(dma::runtime::pjrt::PjrtBackend::new(meta)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_artifacts: &str) -> dma::Result<Box<dyn ModelBackend>> {
+    anyhow::bail!(
+        "built without the `pjrt` feature; rebuild with --features pjrt \
+         or pass --host-backend"
+    )
+}
+
+#[cfg(feature = "pjrt")]
+fn artifact_ids(artifacts: &str) -> (TokenIds, Vec<usize>) {
+    let meta =
+        dma::config::MetaConfig::load(artifacts).expect("run `make artifacts` first");
+    (meta.tokens, vec![48, 96, 200])
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn artifact_ids(_artifacts: &str) -> (TokenIds, Vec<usize>) {
+    eprintln!(
+        "built without the `pjrt` feature; pass --host-backend or rebuild \
+         with --features pjrt"
+    );
+    std::process::exit(2)
+}
 
 fn main() {
     let args = Args::parse(&["host-backend", "native"]);
@@ -38,8 +77,7 @@ fn main() {
             vec![16, 24, 32],
         )
     } else {
-        let meta = MetaConfig::load(&artifacts).expect("run `make artifacts` first");
-        (meta.tokens, vec![48, 96, 200])
+        artifact_ids(&artifacts)
     };
 
     // Long-context prompts from the three task families.
@@ -54,6 +92,7 @@ fn main() {
                 tokens: ex.tokens,
                 max_new_tokens: max_new,
                 dma: dma_mode,
+                ..Default::default()
             }
         })
         .collect();
@@ -68,24 +107,18 @@ fn main() {
 
     let cfg = EngineConfig {
         artifact_dir: artifacts.clone().into(),
-        max_new_tokens: max_new,
+        max_new_tokens: max_new.max(64),
+        // One decode step per scheduler iteration: control messages are
+        // drained between steps, so the cancellation demo below has ~60
+        // steps of margin instead of ~7 (decode batching is unaffected).
+        decode_slice: 1,
         ..Default::default()
     };
     let handles: Vec<EngineHandle> = (0..workers)
         .map(|_| {
             let a = artifacts.clone();
             let c = cfg.clone();
-            EngineHandle::spawn(
-                move || -> dma::Result<Box<dyn ModelBackend>> {
-                    if host {
-                        Ok(Box::new(HostBackend::for_tests()))
-                    } else {
-                        Ok(Box::new(PjrtBackend::new(MetaConfig::load(&a)?)?))
-                    }
-                },
-                c,
-                ids.eos,
-            )
+            EngineHandle::spawn(move || make_backend(&a, host), c, ids.eos)
         })
         .collect();
     let router = Router::new(handles, Policy::LeastLoaded);
@@ -94,19 +127,20 @@ fn main() {
     for r in requests {
         router.submit(r).unwrap();
     }
-    let mut responses =
-        router.collect_responses(n_requests, std::time::Duration::from_secs(900));
+    let mut responses = router.collect_responses(n_requests, Duration::from_secs(900));
     let wall = t0.elapsed().as_secs_f64();
     assert_eq!(responses.len(), n_requests, "lost responses");
     responses.sort_by_key(|r| r.id);
 
     let gen_tokens: usize = responses.iter().map(|r| r.output.len()).sum();
     let mut prefill: Vec<f64> = responses.iter().map(|r| r.prefill_ms).collect();
+    let mut ttft: Vec<f64> = responses.iter().map(|r| r.ttft_ms).collect();
     let mut e2e: Vec<f64> = responses
         .iter()
         .map(|r| r.queue_ms + r.prefill_ms + r.decode_ms)
         .collect();
     prefill.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
     e2e.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |v: &[f64], p: f64| v[((v.len() - 1) as f64 * p) as usize];
 
@@ -125,6 +159,11 @@ fn main() {
         pct(&prefill, 0.9)
     );
     println!(
+        "  ttft (ms)            : p50 {:.1}  p90 {:.1}",
+        pct(&ttft, 0.5),
+        pct(&ttft, 0.9)
+    );
+    println!(
         "  e2e latency (ms)     : p50 {:.1}  p90 {:.1}  max {:.1}",
         pct(&e2e, 0.5),
         pct(&e2e, 0.9),
@@ -136,7 +175,97 @@ fn main() {
     println!("  finish reasons       : eos={eos} length={len} other={}",
              n_requests - eos - len);
     assert!(responses.iter().all(|r| !r.output.is_empty()));
-    println!("\nserve_batch OK");
 
+    // ------------------------------------------------------------------
+    // Streaming demo: consume one request's event stream token by token.
+    // ------------------------------------------------------------------
+    println!("\n== streaming (one request, seeded sampling) ==");
+    let prompt: Vec<i32> = (0..16).map(|i| ((i * 7) % 50) as i32 + 6).collect();
+    let submit_at = Instant::now();
+    router
+        .submit(Request {
+            id: 1_000,
+            tokens: prompt.clone(),
+            max_new_tokens: 12,
+            dma: dma_mode,
+            sampling: SamplingParams {
+                temperature: 0.8,
+                seed: 7,
+                ignore_eos: true,
+                ..Default::default()
+            },
+        })
+        .unwrap();
+    let mut first_token_ms = None;
+    'stream: loop {
+        for ev in router.poll_events(16) {
+            match ev {
+                EngineEvent::Started { queue_ms, .. } => {
+                    println!("  started (queued {queue_ms:.2} ms)");
+                }
+                EngineEvent::Token { token, index, .. } => {
+                    if index == 0 {
+                        first_token_ms =
+                            Some(submit_at.elapsed().as_secs_f64() * 1e3);
+                    }
+                    println!("  token[{index}] = {token}");
+                }
+                EngineEvent::Finished(r) => {
+                    println!(
+                        "  finished: {} tokens, finish={}, engine ttft {:.2} ms, \
+                         client ttft {:.2} ms",
+                        r.output.len(),
+                        r.finish.as_str(),
+                        r.ttft_ms,
+                        first_token_ms.unwrap_or(0.0)
+                    );
+                    break 'stream;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // ------------------------------------------------------------------
+    // Cancellation demo: abandon a long generation at its first token.
+    // The budget (64 tokens ≈ 8 scheduler steps) leaves the cancel many
+    // decode steps of margin to land mid-flight.
+    // ------------------------------------------------------------------
+    println!("\n== cancellation (long request, cancelled at the first token) ==");
+    router
+        .submit(Request {
+            id: 1_001,
+            tokens: prompt,
+            max_new_tokens: 64,
+            dma: dma_mode,
+            sampling: SamplingParams { ignore_eos: true, ..Default::default() },
+        })
+        .unwrap();
+    let mut cancelled = false;
+    'cancel: loop {
+        for ev in router.poll_events(16) {
+            match ev {
+                EngineEvent::Token { index, .. } if !cancelled => {
+                    println!("  token[{index}] seen -> cancel");
+                    router.cancel(1_001).unwrap();
+                    cancelled = true;
+                }
+                EngineEvent::Finished(r) => {
+                    println!(
+                        "  finished: finish={}, {} of 64 tokens generated",
+                        r.finish.as_str(),
+                        r.output.len()
+                    );
+                    assert_eq!(r.finish.as_str(), "cancelled");
+                    assert!(r.output.len() < 64);
+                    break 'cancel;
+                }
+                _ => {}
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    println!("\nserve_batch OK");
     router.shutdown();
 }

@@ -257,6 +257,14 @@ def main():
                    "QRY": tasks.QRY, "MRK": tasks.MRK, "EOS": tasks.EOS,
                    "PAYLOAD_START": tasks.PAYLOAD_START,
                    "VOCAB": tasks.VOCAB},
+        # Per-layer KV-cache precision policy the serving side defaults
+        # to (rust MetaConfig checks: 1 entry broadcasts, else one per
+        # layer). Derived from the attention windows the model was built
+        # around — pages inside the sink/diag windows decode high.
+        "kv_precision_policy": {
+            "layers": [{"sink": cfg.sink, "diag": cfg.diag}
+                       for _ in range(cfg.n_layers)],
+        },
         "artifacts": ex.index,
     }
     with open(os.path.join(args.out_dir, "model_meta.json"), "w") as f:

@@ -52,7 +52,7 @@ fn shared_prefix_requests(n: u64, shared: usize, unique: usize) -> Vec<Request> 
         .map(|id| {
             let mut tokens = prefix.clone();
             tokens.extend((0..unique).map(|i| ((i * 11 + id as usize * 13) % 58) as i32 + 6));
-            Request { id, tokens, max_new_tokens: 8, dma: false }
+            Request { id, tokens, max_new_tokens: 8, dma: false, ..Default::default() }
         })
         .collect()
 }
@@ -134,6 +134,7 @@ fn main() {
             tokens: (0..8).map(|i| (i % 58) as i32 + 6).collect(),
             max_new_tokens: 48,
             dma: false,
+            ..Default::default()
         });
         e.step().unwrap();
         let decode_before = e.stats.decode_tokens;
@@ -143,6 +144,7 @@ fn main() {
             tokens: (0..long_prompt).map(|i| ((i * 5) % 58) as i32 + 6).collect(),
             max_new_tokens: 2,
             dma: false,
+            ..Default::default()
         });
         let target = e.stats.prefill_tokens + long_prompt as u64;
         let (mut steps, mut max_ms, mut sum_ms) = (0u32, 0f64, 0f64);

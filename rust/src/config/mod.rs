@@ -46,6 +46,12 @@ pub struct MetaConfig {
     pub attn_lens: Vec<usize>,
     pub attn_d: usize,
     pub eval_shapes: Vec<(usize, usize)>,
+    /// Per-layer KV-cache precision policy exported by the AOT bundle
+    /// (`kv_precision_policy.layers` in `model_meta.json`): the
+    /// sink/diag windows the model was built around, used as the
+    /// serving default when no `--kv-policy` override is given. Empty
+    /// for pre-policy bundles.
+    pub kv_precision_policies: Vec<crate::kvquant::KvPolicy>,
     pub artifact_dir: PathBuf,
 }
 
@@ -120,6 +126,36 @@ impl MetaConfig {
                     .collect()
             })
             .unwrap_or_default();
+        // Per-layer KV precision policy (optional: pre-policy bundles
+        // omit it). When present it must broadcast (one entry) or cover
+        // every layer — a mismatched bundle is a build error, not
+        // something to guess around at serving time.
+        let kv_precision_policies = match j.get("kv_precision_policy") {
+            None => Vec::new(),
+            Some(p) => {
+                let layers = p
+                    .get("layers")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("kv_precision_policy.layers must be an array"))?;
+                let parsed: Vec<crate::kvquant::KvPolicy> = layers
+                    .iter()
+                    .map(|l| -> crate::Result<crate::kvquant::KvPolicy> {
+                        Ok(crate::kvquant::KvPolicy {
+                            sink: num(l, "sink")?,
+                            diag: num(l, "diag")?,
+                        })
+                    })
+                    .collect::<crate::Result<_>>()?;
+                if parsed.is_empty() || (parsed.len() != 1 && parsed.len() != model.n_layers) {
+                    return Err(anyhow!(
+                        "kv_precision_policy has {} entries; expected 1 or n_layers={}",
+                        parsed.len(),
+                        model.n_layers
+                    ));
+                }
+                parsed
+            }
+        };
         Ok(MetaConfig {
             model,
             tokens,
@@ -130,6 +166,7 @@ impl MetaConfig {
             attn_lens: usv("attn_lens")?,
             attn_d: num(&j, "attn_d")?,
             eval_shapes,
+            kv_precision_policies,
             artifact_dir: dir,
         })
     }
@@ -211,6 +248,8 @@ mod tests {
           "attn_lens": [128,512],
           "attn_d": 64,
           "eval_shapes": [[8,96],[8,224]],
+          "kv_precision_policy": {"layers": [{"sink": 32, "diag": 64},
+                                             {"sink": 16, "diag": 32}]},
           "artifacts": {}
         }"#
         .to_string()
@@ -229,6 +268,49 @@ mod tests {
         assert_eq!(m.prefill_lens, vec![64, 128, 256]);
         assert_eq!(m.eval_shapes, vec![(8, 96), (8, 224)]);
         assert_eq!(m.param_order.len(), 3);
+        assert_eq!(
+            m.kv_precision_policies,
+            vec![
+                crate::kvquant::KvPolicy { sink: 32, diag: 64 },
+                crate::kvquant::KvPolicy { sink: 16, diag: 32 },
+            ]
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn meta_without_policy_defaults_empty() {
+        let dir = std::env::temp_dir()
+            .join(format!("dma_meta_nopolicy_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let stripped = meta_json().replace(
+            r#""kv_precision_policy": {"layers": [{"sink": 32, "diag": 64},
+                                             {"sink": 16, "diag": 32}]},"#,
+            "",
+        );
+        assert!(!stripped.contains("kv_precision_policy"));
+        std::fs::write(dir.join("model_meta.json"), stripped).unwrap();
+        let m = MetaConfig::load(&dir).unwrap();
+        assert!(m.kv_precision_policies.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn meta_policy_layer_count_is_checked() {
+        // 3 entries for a 2-layer model: the loader must refuse the
+        // bundle rather than mis-assign policies.
+        let dir = std::env::temp_dir()
+            .join(format!("dma_meta_badpolicy_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = meta_json().replace(
+            r#"{"layers": [{"sink": 32, "diag": 64},
+                                             {"sink": 16, "diag": 32}]}"#,
+            r#"{"layers": [{"sink": 32, "diag": 64}, {"sink": 16, "diag": 32},
+                           {"sink": 8, "diag": 8}]}"#,
+        );
+        std::fs::write(dir.join("model_meta.json"), bad).unwrap();
+        let err = MetaConfig::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("expected 1 or n_layers"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -11,23 +11,29 @@
 //!    stalls decoding sequences for its full length.
 //! 3. Run up to `decode_slice` batched decode steps over the decoding
 //!    slots, then loop back to (1)/(2).
-//! 4. A sequence retires on EOS, its token budget, or cache capacity;
-//!    when a quantized prefill completes, its full prompt pages are
-//!    donated to the radix cache (block accounting forked out of the
-//!    sequence's table) so later requests sharing the prefix skip that
-//!    prefill work entirely.
+//! 4. A sequence retires on EOS, a stop token, its token budget, cache
+//!    capacity, or a [`Engine::cancel`]; when a quantized prefill
+//!    completes, its full prompt pages are donated to the radix cache
+//!    (block accounting forked out of the sequence's table) so later
+//!    requests sharing the prefix skip that prefill work entirely.
+//!
+//! Output is an incremental [`EngineEvent`] stream: `Started` on
+//! admission, one `Token` per generated token (sampled through the
+//! request's seeded [`super::sampling::Sampler`]), and a terminal
+//! `Finished` carrying the assembled back-compat [`Response`].
 //!
 //! Admission uses the paged [`BlockPool`] accounting: a request is only
 //! admitted when its *unshared* prompt + token budget fit in free KV
 //! blocks (cold cached pages are LRU-evicted under pressure), so decode
-//! can never deadlock on cache space.
+//! can never deadlock on cache space. Cancellation releases the
+//! sequence's own allocation plus its radix forks and re-checks the
+//! pool's byte accounting against a from-scratch recount.
 
 use super::radix::{PrefixHit, RadixCache};
-use super::request::{FinishReason, Request, Response, SeqPhase, Tracked};
+use super::request::{EngineEvent, FinishReason, Request, Response, SeqPhase, Tracked};
 use crate::config::EngineConfig;
 use crate::kvcache::{BlockPool, SeqId, SeqKv};
 use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv, PAGE_TOKENS};
-use crate::model::argmax;
 use crate::runtime::{ModelBackend, PrefillSeq};
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -57,20 +63,13 @@ struct Active {
     shared_tokens: usize,
 }
 
-enum AdmitOutcome {
-    /// A sequence was admitted and is now prefilling.
-    Admitted,
-    /// A sequence failed during admission (immediate response).
-    Finished(Response),
-    /// Nothing admissible right now.
-    NoWork,
-}
-
 /// Aggregate serving metrics.
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
     pub completed: u64,
     pub rejected: u64,
+    /// Requests cancelled mid-flight (queued, prefilling, or decoding).
+    pub cancelled: u64,
     /// Prompt tokens actually run through the model (prefix-cache hits
     /// are excluded — they skip prefill).
     pub prefill_tokens: u64,
@@ -214,6 +213,25 @@ impl Engine {
         self.queue.len() + self.active.iter().flatten().count()
     }
 
+    /// Bytes of KV blocks currently referenced in the admission pool
+    /// (running sequences + retained radix pages). Recounted from the
+    /// refcount plane on every call — cancellation tests compare this
+    /// against the pre-admission value.
+    pub fn kv_bytes_in_use(&self) -> usize {
+        self.pool.bytes_in_use()
+    }
+
+    /// Free admission blocks in the KV pool.
+    pub fn kv_free_blocks(&self) -> usize {
+        self.pool.free_blocks()
+    }
+
+    /// Structural pool-accounting check (used by cancellation paths and
+    /// tests).
+    pub fn pool_check(&self) -> crate::Result<()> {
+        self.pool.check_invariants()
+    }
+
     /// Submit a request; returns an immediate rejection response when
     /// admission is impossible (prompt too long / queue full).
     pub fn submit(&mut self, req: Request) -> Option<Response> {
@@ -226,6 +244,7 @@ impl Engine {
                 queue_ms: 0.0,
                 prefill_ms: 0.0,
                 decode_ms: 0.0,
+                ttft_ms: 0.0,
                 error: Some("queue full".into()),
             });
         }
@@ -239,6 +258,7 @@ impl Engine {
                 queue_ms: 0.0,
                 prefill_ms: 0.0,
                 decode_ms: 0.0,
+                ttft_ms: 0.0,
                 error: Some(format!(
                     "prompt+budget {budget} exceeds cache {}",
                     self.backend.cache_len()
@@ -247,6 +267,41 @@ impl Engine {
         }
         self.queue.push_back(Tracked::new(req));
         None
+    }
+
+    /// Cancel a request by id, wherever it is in its lifecycle. Queued
+    /// requests are dropped before admission; active ones release their
+    /// KV holdings — the sequence's own pool allocation plus the forks
+    /// pinning radix pages, and the in-flight cache payload (dropping a
+    /// quantized store decrements the shared pages' `Arc` counts, which
+    /// is what frees a COW frontier mid-prefill). Returns the terminal
+    /// event, or `None` when the id is not in flight (already finished).
+    pub fn cancel(&mut self, id: u64) -> crate::Result<Option<EngineEvent>> {
+        if let Some(pos) = self.queue.iter().position(|t| t.req.id == id) {
+            let mut t = self.queue.remove(pos).unwrap();
+            t.queue_ms = t.enqueued.elapsed().as_secs_f64() * 1e3;
+            self.stats.cancelled += 1;
+            return Ok(Some(EngineEvent::Finished(t.respond(FinishReason::Cancelled))));
+        }
+        let Some(idx) = self
+            .active
+            .iter()
+            .position(|a| a.as_ref().is_some_and(|a| a.tracked.req.id == id))
+        else {
+            return Ok(None);
+        };
+        let Active { tracked, state, pool_id, shared_forks, .. } =
+            self.active[idx].take().unwrap();
+        // Drop the cache payload before releasing the accounting: a
+        // mid-prefill quantized store holds Arc'd shared pages whose
+        // admission blocks the forks below pin.
+        drop(state);
+        self.release_holdings(pool_id, &shared_forks)?;
+        // Recount path: the byte accounting must match a from-scratch
+        // recount of the refcount plane after the release.
+        self.pool.check_invariants()?;
+        self.stats.cancelled += 1;
+        Ok(Some(EngineEvent::Finished(tracked.respond(FinishReason::Cancelled))))
     }
 
     fn free_slot(&self) -> Option<usize> {
@@ -269,13 +324,30 @@ impl Engine {
         Ok(())
     }
 
+    /// The finish reason `tok` implies for `t`, if any (EOS respects
+    /// `ignore_eos`, then the request's stop set, then the length cap).
+    fn finish_after_token(&self, t: &Tracked, tok: i32) -> Option<FinishReason> {
+        let max_new = t.req.max_new_tokens.min(self.cfg.max_new_tokens);
+        if tok == self.eos_token && !t.req.sampling.ignore_eos {
+            Some(FinishReason::Eos)
+        } else if t.req.sampling.stop.contains(&tok) {
+            Some(FinishReason::Stop)
+        } else if t.output.len() >= max_new {
+            Some(FinishReason::Length)
+        } else {
+            None
+        }
+    }
+
     /// Try to admit one queued request into a free slot (phase 1).
-    fn try_admit(&mut self) -> crate::Result<AdmitOutcome> {
+    /// Returns whether admission made progress (keep calling) and pushes
+    /// `Started` / terminal events.
+    fn try_admit(&mut self, out: &mut Vec<EngineEvent>) -> crate::Result<bool> {
         let Some(slot_idx) = self.free_slot() else {
-            return Ok(AdmitOutcome::NoWork);
+            return Ok(false);
         };
         let Some(head) = self.queue.front() else {
-            return Ok(AdmitOutcome::NoWork);
+            return Ok(false);
         };
         let budget =
             head.req.tokens.len() + head.req.max_new_tokens.min(self.cfg.max_new_tokens);
@@ -325,7 +397,7 @@ impl Engine {
             for id in shared_forks {
                 self.pool.release(id)?;
             }
-            return Ok(AdmitOutcome::NoWork);
+            return Ok(false);
         }
 
         let mut tracked = self.queue.pop_front().unwrap();
@@ -356,13 +428,18 @@ impl Engine {
                 self.stats.rejected += 1;
                 let mut resp = tracked.respond(FinishReason::Rejected);
                 resp.error = Some(e.to_string());
-                return Ok(AdmitOutcome::Finished(resp));
+                out.push(EngineEvent::Finished(resp));
+                return Ok(true);
             }
         };
         if hit.tokens > 0 {
             self.stats.prefix_hits += 1;
             self.stats.prefix_hit_tokens += hit.tokens as u64;
         }
+        out.push(EngineEvent::Started {
+            id: tracked.req.id,
+            queue_ms: tracked.queue_ms,
+        });
         tracked.phase = SeqPhase::Prefilling { done_tokens: seq.done };
         self.active[slot_idx] = Some(Active {
             tracked,
@@ -371,18 +448,18 @@ impl Engine {
             shared_forks,
             shared_tokens: hit.tokens,
         });
-        Ok(AdmitOutcome::Admitted)
+        Ok(true)
     }
 
     /// Advance the prefilling sequence in `idx` by one chunk (phase 2);
-    /// returns a response when it finishes (or fails) outright.
-    fn advance_prefill(&mut self, idx: usize) -> crate::Result<Option<Response>> {
+    /// pushes the sequence's events when it finishes (or fails) outright.
+    fn advance_prefill(&mut self, idx: usize, out: &mut Vec<EngineEvent>) -> crate::Result<()> {
         let is_prefilling = matches!(
             self.active[idx].as_ref().map(|a| &a.state),
             Some(SlotState::Prefilling(_))
         );
         if !is_prefilling {
-            return Ok(None);
+            return Ok(());
         }
         let mut act = self.active[idx].take().unwrap();
         let SlotState::Prefilling(ref mut seq) = act.state else { unreachable!() };
@@ -393,7 +470,8 @@ impl Engine {
             self.stats.rejected += 1;
             let mut resp = act.tracked.respond(FinishReason::Rejected);
             resp.error = Some(e.to_string());
-            return Ok(Some(resp));
+            out.push(EngineEvent::Finished(resp));
+            return Ok(());
         }
         act.tracked.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
         self.stats.prefill_chunks += 1;
@@ -402,32 +480,34 @@ impl Engine {
         act.tracked.phase = SeqPhase::Prefilling { done_tokens: seq.done };
         if !seq.is_done() {
             self.active[idx] = Some(act);
-            return Ok(None);
+            return Ok(());
         }
-        self.complete_prefill(idx, act)
+        self.complete_prefill(idx, act, out)
     }
 
     /// Prefill finished: close the streaming state, donate prompt pages
-    /// to the radix cache, take the first token and either retire the
+    /// to the radix cache, sample the first token and either retire the
     /// sequence immediately or move it to decoding.
     fn complete_prefill(
         &mut self,
         idx: usize,
         act: Active,
-    ) -> crate::Result<Option<Response>> {
+        out: &mut Vec<EngineEvent>,
+    ) -> crate::Result<()> {
         let Active { mut tracked, state, pool_id, shared_forks, shared_tokens } = act;
         let SlotState::Prefilling(seq) = state else { unreachable!() };
         // finish_prefill is real work for deferring backends (PJRT runs
         // the whole monolithic prefill here) — it counts as prefill time.
         let t0 = Instant::now();
-        let out = match self.backend.finish_prefill(seq) {
+        let pre = match self.backend.finish_prefill(seq) {
             Ok(o) => o,
             Err(e) => {
                 self.release_holdings(pool_id, &shared_forks)?;
                 self.stats.rejected += 1;
                 let mut resp = tracked.respond(FinishReason::Rejected);
                 resp.error = Some(e.to_string());
-                return Ok(Some(resp));
+                out.push(EngineEvent::Finished(resp));
+                return Ok(());
             }
         };
         tracked.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
@@ -435,7 +515,7 @@ impl Engine {
         // Donate the prompt's full pages to the prefix cache: each new
         // page's admission block is forked out of this sequence's table,
         // so it stays reserved after the sequence releases.
-        if let (Some(radix), SeqKv::Quant(q)) = (self.radix.as_mut(), &out.kv) {
+        if let (Some(radix), SeqKv::Quant(q)) = (self.radix.as_mut(), &pre.kv) {
             let shared_pages = shared_tokens / PAGE_TOKENS;
             let pool = &mut self.pool;
             let next_internal = &mut self.next_internal;
@@ -457,36 +537,30 @@ impl Engine {
         }
 
         // First generated token comes from the prefill logits.
-        let tok = argmax(&out.last_logits);
-        tracked.output.push(tok);
-        tracked.next_token = tok;
+        let tok = tracked.sampler.sample(&pre.last_logits);
+        out.push(tracked.push_token(tok, 0.0));
         tracked.phase = SeqPhase::Decoding;
 
-        // Single-token request or instant EOS finishes immediately.
-        let max_new = tracked.req.max_new_tokens.min(self.cfg.max_new_tokens);
-        if tok == self.eos_token || max_new <= 1 {
+        if let Some(reason) = self.finish_after_token(&tracked, tok) {
             self.release_holdings(pool_id, &shared_forks)?;
             self.stats.completed += 1;
-            let reason = if tok == self.eos_token {
-                FinishReason::Eos
-            } else {
-                FinishReason::Length
-            };
-            return Ok(Some(tracked.respond(reason)));
+            out.push(EngineEvent::Finished(tracked.respond(reason)));
+            return Ok(());
         }
         self.active[idx] = Some(Active {
             tracked,
-            state: SlotState::Decoding(out.kv),
+            state: SlotState::Decoding(pre.kv),
             pool_id,
             shared_forks,
             shared_tokens,
         });
-        Ok(None)
+        Ok(())
     }
 
-    /// One batched decode step over all decoding sequences; returns any
-    /// completed responses.
-    fn decode_step(&mut self) -> crate::Result<Vec<Response>> {
+    /// One batched decode step over all decoding sequences; pushes a
+    /// `Token` event per sequence plus terminal events. Returns how many
+    /// sequences finished.
+    fn decode_step(&mut self, out: &mut Vec<EngineEvent>) -> crate::Result<usize> {
         let idxs: Vec<usize> = (0..self.active.len())
             .filter(|&i| {
                 matches!(
@@ -496,7 +570,7 @@ impl Engine {
             })
             .collect();
         if idxs.is_empty() {
-            return Ok(vec![]);
+            return Ok(0);
         }
         let t0 = Instant::now();
         let tokens: Vec<i32> = idxs
@@ -531,36 +605,31 @@ impl Engine {
             // radix cache retaining blocks, could spuriously exhaust the
             // pool mid-decode.
             for (bi, act) in taken.iter_mut().enumerate() {
-                let tok = argmax(&logits[bi * vocab..(bi + 1) * vocab]);
-                act.tracked.output.push(tok);
-                act.tracked.next_token = tok;
+                let tok = act.tracked.sampler.sample(&logits[bi * vocab..(bi + 1) * vocab]);
                 act.tracked.decode_ms += dt / batch_n as f64;
+                out.push(act.tracked.push_token(tok, dt / batch_n as f64));
                 self.stats.decode_tokens += 1;
             }
         }
         // Retire finished sequences, return the rest to their slots.
-        let mut done = Vec::new();
+        let mut done = 0;
         for (k, act) in taken.into_iter().enumerate() {
-            let max_new = act.tracked.req.max_new_tokens.min(self.cfg.max_new_tokens);
             let last = *act.tracked.output.last().unwrap();
             let SlotState::Decoding(ref kv) = act.state else {
                 unreachable!("taken slots are decoding by construction")
             };
             let cache_full = kv.pos() >= self.backend.cache_len();
-            let reason = if last == self.eos_token {
-                Some(FinishReason::Eos)
-            } else if act.tracked.output.len() >= max_new {
-                Some(FinishReason::Length)
-            } else if cache_full {
+            let reason = self.finish_after_token(&act.tracked, last).or(if cache_full {
                 Some(FinishReason::CacheFull)
             } else {
                 None
-            };
+            });
             match reason {
                 Some(r) => {
                     self.release_holdings(act.pool_id, &act.shared_forks)?;
                     self.stats.completed += 1;
-                    done.push(act.tracked.respond(r));
+                    done += 1;
+                    out.push(EngineEvent::Finished(act.tracked.respond(r)));
                 }
                 None => self.active[idxs[k]] = Some(act),
             }
@@ -588,34 +657,24 @@ impl Engine {
     }
 
     /// Run one scheduling iteration (admit, one prefill chunk per
-    /// prefilling sequence, then a decode slice). Returns completed
-    /// responses.
-    pub fn step(&mut self) -> crate::Result<Vec<Response>> {
+    /// prefilling sequence, then a decode slice). Returns the events the
+    /// iteration produced, in emission order.
+    pub fn step(&mut self) -> crate::Result<Vec<EngineEvent>> {
         self.stats.engine_steps += 1;
         let mut out = Vec::new();
         // Phase 1: admit while slots and KV blocks allow.
-        loop {
-            match self.try_admit()? {
-                AdmitOutcome::Admitted => {}
-                AdmitOutcome::Finished(resp) => out.push(resp),
-                AdmitOutcome::NoWork => break,
-            }
-        }
+        while self.try_admit(&mut out)? {}
         // Phase 2: one chunk per prefilling sequence — prefill and decode
         // interleave instead of prefill running whole prompts to
         // completion first.
         for idx in 0..self.active.len() {
-            if let Some(resp) = self.advance_prefill(idx)? {
-                out.push(resp);
-            }
+            self.advance_prefill(idx, &mut out)?;
         }
         self.sample_kv_stats();
         // Phase 3: a slice of decode steps.
         for _ in 0..self.cfg.decode_slice {
-            let done = self.decode_step()?;
-            let empty = done.is_empty();
-            out.extend(done);
-            if empty
+            let done = self.decode_step(&mut out)?;
+            if done == 0
                 && !self
                     .active
                     .iter()
@@ -625,7 +684,7 @@ impl Engine {
                 break;
             }
             // Re-check prefill as soon as a slot freed up.
-            if !empty && !self.queue.is_empty() {
+            if done > 0 && !self.queue.is_empty() {
                 break;
             }
         }
@@ -637,13 +696,24 @@ impl Engine {
         self.queue.is_empty() && self.active.iter().all(Option::is_none)
     }
 
-    /// Drive until all submitted work completes; returns all responses.
-    pub fn run_until_idle(&mut self) -> crate::Result<Vec<Response>> {
+    /// Drive until all submitted work completes; returns the full event
+    /// stream.
+    pub fn run_until_idle_events(&mut self) -> crate::Result<Vec<EngineEvent>> {
         let mut out = Vec::new();
         while !self.idle() {
             out.extend(self.step()?);
         }
         Ok(out)
+    }
+
+    /// Drive until all submitted work completes; returns the terminal
+    /// responses (back-compat batch API over the event stream).
+    pub fn run_until_idle(&mut self) -> crate::Result<Vec<Response>> {
+        Ok(self
+            .run_until_idle_events()?
+            .into_iter()
+            .filter_map(EngineEvent::into_finished)
+            .collect())
     }
 }
 
@@ -653,16 +723,19 @@ impl Engine {
 
 enum Msg {
     Submit(Request),
+    Cancel(u64),
     Shutdown,
 }
 
-/// A worker thread owning an [`Engine`]; requests in, responses out.
+/// A worker thread owning an [`Engine`]; requests and cancels in,
+/// [`EngineEvent`]s out.
 pub struct EngineHandle {
     tx: mpsc::Sender<Msg>,
-    pub rx: std::sync::Mutex<mpsc::Receiver<Response>>,
+    pub rx: std::sync::Mutex<mpsc::Receiver<EngineEvent>>,
     join: Option<std::thread::JoinHandle<()>>,
     load: std::sync::Arc<std::sync::atomic::AtomicUsize>,
     prefix_hit_tokens: std::sync::Arc<std::sync::atomic::AtomicU64>,
+    kv_bytes_in_use: std::sync::Arc<std::sync::atomic::AtomicU64>,
     kv_format: &'static str,
     kv_policy: String,
 }
@@ -677,11 +750,13 @@ impl EngineHandle {
         let kv_format = cfg.kv_format.name();
         let kv_policy = KvPolicy::format_layers(&cfg.kv_precision_policies);
         let (tx, rx_msg) = mpsc::channel::<Msg>();
-        let (tx_resp, rx) = mpsc::channel::<Response>();
+        let (tx_ev, rx) = mpsc::channel::<EngineEvent>();
         let load = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let load2 = load.clone();
         let prefix_hit_tokens = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
         let pht2 = prefix_hit_tokens.clone();
+        let kv_bytes_in_use = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let kvb2 = kv_bytes_in_use.clone();
         let join = std::thread::spawn(move || {
             let backend = match make_backend() {
                 Ok(b) => b,
@@ -691,33 +766,57 @@ impl EngineHandle {
                 }
             };
             let mut engine = Engine::new(backend, cfg, eos_token);
-            loop {
-                // Drain control messages; block only when idle.
-                let msg = if engine.idle() {
-                    match rx_msg.recv() {
-                        Ok(m) => Some(m),
-                        Err(_) => break,
-                    }
-                } else {
-                    match rx_msg.try_recv() {
-                        Ok(m) => Some(m),
-                        Err(mpsc::TryRecvError::Empty) => None,
-                        Err(mpsc::TryRecvError::Disconnected) => break,
-                    }
-                };
+            // Apply one control message; true means shut down.
+            fn apply(engine: &mut Engine, tx_ev: &mpsc::Sender<EngineEvent>, msg: Msg) -> bool {
                 match msg {
-                    Some(Msg::Submit(req)) => {
+                    Msg::Submit(req) => {
                         if let Some(resp) = engine.submit(req) {
-                            let _ = tx_resp.send(resp);
+                            let _ = tx_ev.send(EngineEvent::Finished(resp));
                         }
+                        false
                     }
-                    Some(Msg::Shutdown) => break,
-                    None => {}
+                    Msg::Cancel(id) => {
+                        match engine.cancel(id) {
+                            Ok(Some(ev)) => {
+                                let _ = tx_ev.send(ev);
+                            }
+                            Ok(None) => {} // already finished — no-op
+                            Err(e) => eprintln!("engine cancel error: {e:#}"),
+                        }
+                        false
+                    }
+                    Msg::Shutdown => true,
+                }
+            }
+            'run: loop {
+                // Block for work only when idle; otherwise drain every
+                // pending control message (a cancel burst must not wait
+                // one scheduler step per message).
+                if engine.idle() {
+                    match rx_msg.recv() {
+                        Ok(m) => {
+                            if apply(&mut engine, &tx_ev, m) {
+                                break 'run;
+                            }
+                        }
+                        Err(_) => break 'run,
+                    }
+                }
+                loop {
+                    match rx_msg.try_recv() {
+                        Ok(m) => {
+                            if apply(&mut engine, &tx_ev, m) {
+                                break 'run;
+                            }
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => break 'run,
+                    }
                 }
                 match engine.step() {
-                    Ok(resps) => {
-                        for r in resps {
-                            let _ = tx_resp.send(r);
+                    Ok(events) => {
+                        for ev in events {
+                            let _ = tx_ev.send(ev);
                         }
                     }
                     Err(e) => {
@@ -730,6 +829,10 @@ impl EngineHandle {
                     engine.stats.prefix_hit_tokens,
                     std::sync::atomic::Ordering::Relaxed,
                 );
+                kvb2.store(
+                    engine.kv_bytes_in_use() as u64,
+                    std::sync::atomic::Ordering::Relaxed,
+                );
             }
         });
         EngineHandle {
@@ -738,6 +841,7 @@ impl EngineHandle {
             join: Some(join),
             load,
             prefix_hit_tokens,
+            kv_bytes_in_use,
             kv_format,
             kv_policy,
         }
@@ -746,6 +850,15 @@ impl EngineHandle {
     pub fn submit(&self, req: Request) -> crate::Result<()> {
         self.tx
             .send(Msg::Submit(req))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))
+    }
+
+    /// Cancel a request by id. Fire-and-forget: the terminal
+    /// `cancelled` event arrives on the event channel (nothing arrives
+    /// when the request already finished).
+    pub fn cancel(&self, id: u64) -> crate::Result<()> {
+        self.tx
+            .send(Msg::Cancel(id))
             .map_err(|_| anyhow::anyhow!("engine thread gone"))
     }
 
@@ -770,6 +883,13 @@ impl EngineHandle {
             .load(std::sync::atomic::Ordering::Relaxed)
     }
 
+    /// KV pool bytes currently referenced by this worker (sampled after
+    /// each scheduler step).
+    pub fn kv_bytes_in_use(&self) -> u64 {
+        self.kv_bytes_in_use
+            .load(std::sync::atomic::Ordering::Relaxed)
+    }
+
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(j) = self.join.take() {
@@ -790,6 +910,7 @@ impl Drop for EngineHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::SamplingParams;
     use crate::runtime::host::HostBackend;
 
     fn engine() -> Engine {
@@ -803,6 +924,7 @@ mod tests {
             tokens: (0..len).map(|i| ((i * 7) % 58) as i32 + 6).collect(),
             max_new_tokens: max_new,
             dma: false,
+            ..Default::default()
         }
     }
 
@@ -816,6 +938,35 @@ mod tests {
         assert!(resps[0].output.len() <= 4 && !resps[0].output.is_empty());
         assert!(matches!(resps[0].finish, FinishReason::Length | FinishReason::Eos));
         assert_eq!(e.stats.completed, 1);
+    }
+
+    #[test]
+    fn event_stream_matches_terminal_response() {
+        // Started precedes the first Token; the Token events replay the
+        // final output exactly, with contiguous indices; TTFT is set.
+        let mut e = engine();
+        e.submit(req(1, 8, 4));
+        let events = e.run_until_idle_events().unwrap();
+        assert!(matches!(events[0], EngineEvent::Started { id: 1, .. }));
+        let toks: Vec<i32> = events
+            .iter()
+            .filter_map(|ev| match ev {
+                EngineEvent::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        let idxs: Vec<usize> = events
+            .iter()
+            .filter_map(|ev| match ev {
+                EngineEvent::Token { index, .. } => Some(*index),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(idxs, (0..toks.len()).collect::<Vec<_>>());
+        let resp = events.last().unwrap().as_finished().expect("terminal event");
+        assert_eq!(resp.output, toks);
+        assert!(resp.ttft_ms > 0.0);
+        assert!(resp.ttft_ms <= resp.queue_ms + resp.prefill_ms + resp.decode_ms + 1.0);
     }
 
     #[test]
@@ -862,6 +1013,156 @@ mod tests {
     }
 
     #[test]
+    fn seeded_sampling_is_deterministic_and_batch_invariant() {
+        // temperature > 0: the same request produces the same tokens on
+        // a fresh engine, alone or batched with other traffic.
+        let sampled = |id: u64| Request {
+            sampling: SamplingParams { temperature: 0.8, seed: 42, ..Default::default() },
+            ..req(id, 8, 6)
+        };
+        let mut alone = engine();
+        alone.submit(sampled(1));
+        let solo = alone.run_until_idle().unwrap().remove(0);
+
+        let mut busy = engine();
+        busy.submit(req(7, 12, 6));
+        busy.submit(sampled(1));
+        busy.submit(req(8, 5, 6));
+        let mut resps = busy.run_until_idle().unwrap();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps[0].output, solo.output, "batching changed a seeded stream");
+
+        // A different seed may (and here does) diverge.
+        let mut other = engine();
+        other.submit(Request {
+            sampling: SamplingParams { temperature: 0.8, seed: 43, ..Default::default() },
+            ..req(1, 8, 6)
+        });
+        let alt = other.run_until_idle().unwrap().remove(0);
+        assert!(!alt.output.is_empty());
+    }
+
+    #[test]
+    fn stop_tokens_truncate_generation() {
+        // Learn the greedy output, then replay with its second token as
+        // a stop token: generation must end there with finish "stop".
+        let mut e = engine();
+        e.submit(req(1, 8, 6));
+        let full = e.run_until_idle().unwrap().remove(0);
+        assert!(full.output.len() >= 2, "need >= 2 tokens: {:?}", full.output);
+        let stop_tok = full.output[1];
+
+        let mut e2 = engine();
+        e2.submit(Request {
+            sampling: SamplingParams { stop: vec![stop_tok], ..Default::default() },
+            ..req(1, 8, 6)
+        });
+        let stopped = e2.run_until_idle().unwrap().remove(0);
+        assert_eq!(stopped.finish, FinishReason::Stop);
+        assert_eq!(stopped.output, full.output[..2].to_vec());
+    }
+
+    #[test]
+    fn ignore_eos_generates_to_length() {
+        // With ignore_eos the sequence runs to its token budget even if
+        // EOS appears (force EOS-prone traffic by making EOS = the
+        // greedy first token of a known request).
+        let mut probe = engine();
+        probe.submit(req(1, 8, 1));
+        let first_tok = probe.run_until_idle().unwrap().remove(0).output[0];
+
+        let mut e = Engine::new(
+            Box::new(HostBackend::for_tests()),
+            EngineConfig { max_new_tokens: 8, ..Default::default() },
+            first_tok, // EOS == the first greedy token
+        );
+        e.submit(Request {
+            sampling: SamplingParams { ignore_eos: true, ..Default::default() },
+            ..req(1, 8, 4)
+        });
+        let r = e.run_until_idle().unwrap().remove(0);
+        assert_eq!(r.finish, FinishReason::Length);
+        assert_eq!(r.output.len(), 4);
+        assert_eq!(r.output[0], first_tok);
+    }
+
+    #[test]
+    fn cancel_queued_request() {
+        let mut e = engine();
+        // Fill all 4 slots so a 5th stays queued.
+        for i in 0..5 {
+            e.submit(req(i, 8, 8));
+        }
+        let mut events = e.step().unwrap();
+        let ev = e.cancel(4).unwrap().expect("queued request cancels");
+        let resp = ev.as_finished().unwrap();
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert!(resp.output.is_empty());
+        events.extend(e.run_until_idle_events().unwrap());
+        // The cancelled id never started nor finished through the stream.
+        assert!(!events.iter().any(|ev| ev.id() == 4));
+        assert_eq!(e.stats.cancelled, 1);
+        assert_eq!(e.stats.completed, 4);
+    }
+
+    #[test]
+    fn cancel_mid_prefill_returns_pool_bytes() {
+        let cfg = EngineConfig {
+            max_new_tokens: 8,
+            prefill_chunk: 16,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        let bytes0 = e.kv_bytes_in_use();
+        let free0 = e.kv_free_blocks();
+        e.submit(req(1, 64, 4)); // 4 chunks of 16
+        e.step().unwrap(); // admitted + first chunk only
+        assert!(e.kv_bytes_in_use() > bytes0, "prefill holds pool bytes");
+        let ev = e.cancel(1).unwrap().expect("active request cancels");
+        assert_eq!(ev.as_finished().unwrap().finish, FinishReason::Cancelled);
+        assert_eq!(e.kv_bytes_in_use(), bytes0, "pool bytes not returned");
+        assert_eq!(e.kv_free_blocks(), free0);
+        e.pool_check().unwrap();
+        assert!(e.idle());
+        // The engine keeps serving.
+        e.submit(req(2, 8, 2));
+        assert_eq!(e.run_until_idle().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn cancel_mid_decode_returns_pool_bytes() {
+        // decode_slice 1 keeps the sequence mid-decode across steps;
+        // ignore_eos keeps it from retiring early.
+        let cfg = EngineConfig { max_new_tokens: 16, decode_slice: 1, ..Default::default() };
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        let bytes0 = e.kv_bytes_in_use();
+        e.submit(Request {
+            sampling: SamplingParams { ignore_eos: true, ..Default::default() },
+            ..req(1, 8, 16)
+        });
+        let evs = e.step().unwrap(); // admit + prefill + one decode step
+        assert!(evs.iter().any(|ev| matches!(ev, EngineEvent::Token { .. })));
+        assert!(!e.idle(), "still decoding");
+        let ev = e.cancel(1).unwrap().expect("decoding request cancels");
+        let resp = ev.as_finished().unwrap();
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert!(!resp.output.is_empty(), "partial output is returned");
+        assert_eq!(e.kv_bytes_in_use(), bytes0);
+        e.pool_check().unwrap();
+    }
+
+    #[test]
+    fn cancel_unknown_id_is_noop() {
+        let mut e = engine();
+        assert!(e.cancel(99).unwrap().is_none());
+        e.submit(req(1, 8, 2));
+        e.run_until_idle().unwrap();
+        // Already finished: also a no-op.
+        assert!(e.cancel(1).unwrap().is_none());
+        assert_eq!(e.stats.cancelled, 0);
+    }
+
+    #[test]
     fn chunked_prefill_interleaves_with_decode() {
         // A long prompt admitted while another sequence decodes must not
         // be prefilled in one scheduler step: its chunks spread over
@@ -874,15 +1175,18 @@ mod tests {
         };
         let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
         let mut resps = Vec::new();
+        let finished = |evs: Vec<EngineEvent>| {
+            evs.into_iter().filter_map(EngineEvent::into_finished).collect::<Vec<_>>()
+        };
         // Short prompt, long generation: becomes the decoder.
         e.submit(req(1, 4, 24));
-        resps.extend(e.step().unwrap());
+        resps.extend(finished(e.step().unwrap()));
         let decoded_before = e.stats.decode_tokens;
         assert!(decoded_before > 0);
         // Long prompt arrives: 64 tokens = 4 chunks of 16.
         e.submit(req(2, 64, 2));
         let chunks_before = e.stats.prefill_chunks;
-        resps.extend(e.step().unwrap());
+        resps.extend(finished(e.step().unwrap()));
         assert_eq!(
             e.stats.prefill_chunks - chunks_before,
             1,
@@ -891,9 +1195,9 @@ mod tests {
         // The decoder advanced within the same step.
         assert!(e.stats.decode_tokens > decoded_before);
         // Three more steps finish the prefill.
-        resps.extend(e.step().unwrap());
-        resps.extend(e.step().unwrap());
-        resps.extend(e.step().unwrap());
+        resps.extend(finished(e.step().unwrap()));
+        resps.extend(finished(e.step().unwrap()));
+        resps.extend(finished(e.step().unwrap()));
         assert_eq!(e.stats.prefill_tokens, 4 + 64);
         assert!(e.stats.mean_chunks_per_step() > 0.0);
         resps.extend(e.run_until_idle().unwrap());
@@ -982,6 +1286,7 @@ mod tests {
             tokens: tokens.clone(),
             max_new_tokens: 4,
             dma,
+            ..Default::default()
         };
         e.submit(mk(1, false));
         e.run_until_idle().unwrap();
@@ -1020,7 +1325,9 @@ mod tests {
                 *t = ((*t as u64 * (i + 3)) % 58) as i32 + 6;
             }
             assert!(e.submit(r).is_none());
-            resps.extend(e.step().unwrap());
+            resps.extend(
+                e.step().unwrap().into_iter().filter_map(EngineEvent::into_finished),
+            );
         }
         resps.extend(e.run_until_idle().unwrap());
         assert_eq!(resps.len(), 40);
@@ -1044,7 +1351,8 @@ mod tests {
     #[test]
     fn rejects_empty_prompt() {
         let mut e = engine();
-        let resp = e.submit(Request { id: 1, tokens: vec![], max_new_tokens: 2, dma: false });
+        let resp =
+            e.submit(Request { id: 1, tokens: vec![], max_new_tokens: 2, ..Default::default() });
         assert_eq!(resp.unwrap().finish, FinishReason::Rejected);
     }
 
@@ -1085,10 +1393,62 @@ mod tests {
         }
         let mut got = 0;
         while got < 3 {
-            let r = h.rx.lock().unwrap().recv_timeout(std::time::Duration::from_secs(30)).unwrap();
-            assert!(!r.output.is_empty());
-            got += 1;
+            let ev = h
+                .rx
+                .lock()
+                .unwrap()
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .unwrap();
+            if let EngineEvent::Finished(r) = ev {
+                assert!(!r.output.is_empty());
+                got += 1;
+            }
         }
+        h.shutdown();
+    }
+
+    #[test]
+    fn threaded_handle_cancel_round_trip() {
+        // decode_slice 1: one token per scheduler step, so the cancel
+        // sent at the first token has dozens of steps of margin.
+        let cfg = EngineConfig { max_new_tokens: 64, decode_slice: 1, ..Default::default() };
+        let h = EngineHandle::spawn(
+            || Ok(Box::new(HostBackend::for_tests()) as Box<dyn crate::runtime::ModelBackend>),
+            cfg,
+            5,
+        );
+        h.submit(Request {
+            sampling: SamplingParams { ignore_eos: true, ..Default::default() },
+            ..req(1, 8, 60)
+        })
+        .unwrap();
+        // Wait for the first token, then cancel.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        let mut cancelled = false;
+        let mut finish = None;
+        while std::time::Instant::now() < deadline {
+            let ev = h
+                .rx
+                .lock()
+                .unwrap()
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .unwrap();
+            match ev {
+                EngineEvent::Token { .. } if !cancelled => {
+                    h.cancel(1).unwrap();
+                    cancelled = true;
+                }
+                EngineEvent::Finished(r) => {
+                    finish = Some(r);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let r = finish.expect("terminal event after cancel");
+        assert_eq!(r.finish, FinishReason::Cancelled);
+        assert!(!r.output.is_empty());
+        assert!(r.output.len() < 60);
         h.shutdown();
     }
 }

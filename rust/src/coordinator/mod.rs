@@ -1,12 +1,15 @@
 //! The L3 coordinator: request lifecycle, continuous batching with
-//! prefill/decode separation, admission control against KV capacity, and
-//! multi-worker routing — the serving architecture the paper's kernel
-//! plugs into (vLLM-style, adapted to bucketed PJRT executables).
+//! prefill/decode separation, admission control against KV capacity,
+//! per-token event streaming with cancellation, and multi-worker
+//! routing — the serving architecture the paper's kernel plugs into
+//! (vLLM-style, adapted to bucketed PJRT executables).
 
 pub mod engine;
 pub mod radix;
 pub mod request;
 pub mod router;
+pub mod sampling;
 
 pub use engine::{Engine, EngineHandle};
-pub use request::{FinishReason, Request, Response};
+pub use request::{EngineEvent, FinishReason, Request, Response, SamplingParams};
+pub use sampling::Sampler;

@@ -1,6 +1,50 @@
-//! Request/response types and the request state machine.
+//! Request/response types, sampling parameters, the incremental
+//! [`EngineEvent`] stream, and the request state machine.
+//!
+//! The serving contract is event-based: the engine emits `Started` when
+//! a request is admitted, one `Token` per generated token, and a
+//! terminal `Finished` carrying the assembled [`Response`] — so clients
+//! can stream tokens and measure TTFT, while batch callers keep
+//! consuming the back-compat `Response` built from the same events.
 
+use super::sampling::Sampler;
 use std::time::Instant;
+
+/// Per-request decoding controls. `temperature == 0` (the default)
+/// selects greedy argmax; otherwise sampling is fully deterministic
+/// given `seed` — the per-request sampler owns its own RNG stream, so
+/// batch composition and scheduling cannot change a request's tokens.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; 0 means greedy (argmax).
+    pub temperature: f32,
+    /// Keep only the `top_k` highest logits before sampling (0 = all).
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest probability mass >= `top_p`
+    /// (1.0 = off).
+    pub top_p: f32,
+    /// Seed of the request's private RNG stream.
+    pub seed: u64,
+    /// Generation stops when any of these token ids is produced
+    /// (the stop token is included in the output, like EOS).
+    pub stop: Vec<i32>,
+    /// Keep generating past the EOS token (benchmarks, fixed-length
+    /// probes).
+    pub ignore_eos: bool,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 0,
+            stop: Vec::new(),
+            ignore_eos: false,
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -9,27 +53,46 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Use the DMA (mixed-precision) prefill path.
     pub dma: bool,
+    pub sampling: SamplingParams,
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Request {
+            id: 0,
+            tokens: Vec::new(),
+            max_new_tokens: 16,
+            dma: true,
+            sampling: SamplingParams::default(),
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
     /// Generated the EOS token.
     Eos,
+    /// Generated one of the request's stop tokens.
+    Stop,
     /// Hit the per-request new-token limit.
     Length,
     /// Hit the engine cache capacity.
     CacheFull,
     /// Rejected at admission (queue full / prompt too long).
     Rejected,
+    /// Cancelled by the client (or its connection going away).
+    Cancelled,
 }
 
 impl FinishReason {
     pub fn as_str(&self) -> &'static str {
         match self {
             FinishReason::Eos => "eos",
+            FinishReason::Stop => "stop",
             FinishReason::Length => "length",
             FinishReason::CacheFull => "cache_full",
             FinishReason::Rejected => "rejected",
+            FinishReason::Cancelled => "cancelled",
         }
     }
 }
@@ -45,8 +108,56 @@ pub struct Response {
     pub prefill_ms: f64,
     /// Total decode time (ms) across all generated tokens.
     pub decode_ms: f64,
+    /// Wall-clock submit-to-first-token latency (ms); 0 when no token
+    /// was produced (rejection / pre-prefill cancel).
+    pub ttft_ms: f64,
     /// Error detail when rejected.
     pub error: Option<String>,
+}
+
+/// One item of a request's incremental event stream.
+#[derive(Clone, Debug)]
+pub enum EngineEvent {
+    /// The request left the queue and entered prefill.
+    Started { id: u64, queue_ms: f64 },
+    /// One generated token. `index` is its position in the output
+    /// (0-based); `decode_ms` is this token's share of its batched
+    /// decode step (0 for the first token, which prefill produces).
+    Token { id: u64, token: i32, index: usize, decode_ms: f64 },
+    /// Terminal: the request finished, failed, or was cancelled.
+    Finished(Response),
+}
+
+impl EngineEvent {
+    pub fn id(&self) -> u64 {
+        match self {
+            EngineEvent::Started { id, .. } | EngineEvent::Token { id, .. } => *id,
+            EngineEvent::Finished(r) => r.id,
+        }
+    }
+
+    /// Rewrite the request id (the server maps internal ids back to the
+    /// client-supplied ones).
+    pub fn set_id(&mut self, new_id: u64) {
+        match self {
+            EngineEvent::Started { id, .. } | EngineEvent::Token { id, .. } => *id = new_id,
+            EngineEvent::Finished(r) => r.id = new_id,
+        }
+    }
+
+    pub fn as_finished(&self) -> Option<&Response> {
+        match self {
+            EngineEvent::Finished(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn into_finished(self) -> Option<Response> {
+        match self {
+            EngineEvent::Finished(r) => Some(r),
+            _ => None,
+        }
+    }
 }
 
 /// Engine-internal per-request tracking.
@@ -68,12 +179,16 @@ pub(crate) struct Tracked {
     pub prefill_ms: f64,
     pub decode_ms: f64,
     pub queue_ms: f64,
+    pub ttft_ms: f64,
     /// Next token to feed at the coming decode step.
     pub next_token: i32,
+    /// Per-request seeded sampler (owns the request's RNG stream).
+    pub sampler: Sampler,
 }
 
 impl Tracked {
     pub fn new(req: Request) -> Tracked {
+        let sampler = Sampler::new(&req.sampling);
         Tracked {
             req,
             phase: SeqPhase::Queued,
@@ -82,7 +197,25 @@ impl Tracked {
             prefill_ms: 0.0,
             decode_ms: 0.0,
             queue_ms: 0.0,
+            ttft_ms: 0.0,
             next_token: 0,
+            sampler,
+        }
+    }
+
+    /// Record one generated token and return its stream event. The
+    /// first token stamps the request's wall-clock TTFT.
+    pub fn push_token(&mut self, tok: i32, decode_ms: f64) -> EngineEvent {
+        if self.output.is_empty() {
+            self.ttft_ms = self.enqueued.elapsed().as_secs_f64() * 1e3;
+        }
+        self.output.push(tok);
+        self.next_token = tok;
+        EngineEvent::Token {
+            id: self.req.id,
+            token: tok,
+            index: self.output.len() - 1,
+            decode_ms,
         }
     }
 
@@ -94,6 +227,7 @@ impl Tracked {
             queue_ms: self.queue_ms,
             prefill_ms: self.prefill_ms,
             decode_ms: self.decode_ms,
+            ttft_ms: self.ttft_ms,
             error: None,
         }
     }
@@ -106,25 +240,57 @@ mod tests {
     #[test]
     fn finish_reason_labels() {
         assert_eq!(FinishReason::Eos.as_str(), "eos");
+        assert_eq!(FinishReason::Stop.as_str(), "stop");
         assert_eq!(FinishReason::Length.as_str(), "length");
+        assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
+    }
+
+    #[test]
+    fn sampling_defaults_are_greedy() {
+        let p = SamplingParams::default();
+        assert_eq!(p.temperature, 0.0);
+        assert_eq!(p.top_k, 0);
+        assert_eq!(p.top_p, 1.0);
+        assert!(p.stop.is_empty());
+        assert!(!p.ignore_eos);
     }
 
     #[test]
     fn tracked_responds_with_metrics() {
-        let t = Tracked {
-            req: Request { id: 7, tokens: vec![1], max_new_tokens: 4, dma: true },
-            phase: SeqPhase::Decoding,
-            output: vec![9, 8],
-            enqueued: Instant::now(),
-            prefill_ms: 1.5,
-            decode_ms: 3.0,
-            queue_ms: 0.5,
-            next_token: 8,
-        };
+        let mut t = Tracked::new(Request {
+            id: 7,
+            tokens: vec![1],
+            max_new_tokens: 4,
+            dma: true,
+            ..Default::default()
+        });
+        t.prefill_ms = 1.5;
+        t.decode_ms = 3.0;
+        t.queue_ms = 0.5;
+        let ev = t.push_token(9, 0.0);
+        assert!(matches!(ev, EngineEvent::Token { id: 7, token: 9, index: 0, .. }));
+        assert!(t.ttft_ms >= 0.0);
+        let ev = t.push_token(8, 0.25);
+        assert!(matches!(ev, EngineEvent::Token { index: 1, .. }));
         let r = t.respond(FinishReason::Length);
         assert_eq!(r.id, 7);
         assert_eq!(r.output, vec![9, 8]);
         assert_eq!(r.finish, FinishReason::Length);
         assert!(r.prefill_ms > 0.0);
+    }
+
+    #[test]
+    fn event_id_rewrite() {
+        let mut ev = EngineEvent::Token { id: 3, token: 1, index: 0, decode_ms: 0.0 };
+        assert_eq!(ev.id(), 3);
+        ev.set_id(99);
+        assert_eq!(ev.id(), 99);
+        let mut t = Tracked::new(Request { id: 4, tokens: vec![1], ..Default::default() });
+        t.push_token(2, 0.0);
+        let mut fin = EngineEvent::Finished(t.respond(FinishReason::Eos));
+        fin.set_id(42);
+        assert_eq!(fin.id(), 42);
+        assert_eq!(fin.as_finished().unwrap().id, 42);
+        assert_eq!(fin.into_finished().unwrap().output, vec![2]);
     }
 }

@@ -1,35 +1,89 @@
 //! Multi-worker request router.
 //!
 //! Dispatches requests across engine workers (each owning its own
-//! backend) with pluggable policy: round-robin or least-loaded. The
-//! reference architecture is vllm-project/router; with the CPU PJRT
-//! client a single worker is typical, but the policies and fan-in are
-//! exercised with host-backend workers in tests.
+//! backend) with pluggable policy — round-robin, least-loaded, or
+//! prefix-affinity (hash the chunk-aligned prompt prefix to a worker so
+//! repeated prefixes land on the same radix cache) — and fans the
+//! workers' [`EngineEvent`] streams back in fairly (one event per
+//! worker per rotation, so a busy worker cannot starve the others).
+//! In-flight ownership is tracked so `cancel(id)` routes to the worker
+//! holding the request. The reference architecture is
+//! vllm-project/router; with the CPU PJRT client a single worker is
+//! typical, but the policies and fan-in are exercised with host-backend
+//! workers in tests.
 
 use super::engine::EngineHandle;
-use super::request::{Request, Response};
+use super::request::{EngineEvent, Request, Response};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
     RoundRobin,
     LeastLoaded,
+    /// Hash the first `chunk_tokens` prompt tokens (the engine's
+    /// chunk-aligned shareable prefix) plus the attention mode to a
+    /// worker: requests repeating a prompt prefix land on the worker
+    /// whose radix cache already holds its pages.
+    PrefixAffinity { chunk_tokens: usize },
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastLoaded => "least-loaded",
+            Policy::PrefixAffinity { .. } => "prefix-affinity",
+        }
+    }
+}
+
+/// FNV-1a over the shareable prompt prefix and attention mode.
+fn prefix_hash(tokens: &[i32], dma: bool, chunk_tokens: usize) -> u64 {
+    let span = tokens.len().min(chunk_tokens.max(1));
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    eat(dma as u8);
+    for &t in &tokens[..span] {
+        for b in t.to_le_bytes() {
+            eat(b);
+        }
+    }
+    h
 }
 
 pub struct Router {
     workers: Vec<EngineHandle>,
     policy: Policy,
     next: AtomicUsize,
+    /// Rotation cursor of the event fan-in (fair drain start).
+    drain_from: AtomicUsize,
+    /// In-flight request id -> owning worker (for cancel routing).
+    owners: Mutex<HashMap<u64, usize>>,
 }
 
 impl Router {
     pub fn new(workers: Vec<EngineHandle>, policy: Policy) -> Router {
         assert!(!workers.is_empty(), "router needs at least one worker");
-        Router { workers, policy, next: AtomicUsize::new(0) }
+        Router {
+            workers,
+            policy,
+            next: AtomicUsize::new(0),
+            drain_from: AtomicUsize::new(0),
+            owners: Mutex::new(HashMap::new()),
+        }
     }
 
     pub fn num_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
     }
 
     /// KV-cache storage format of the fleet (workers share one config).
@@ -47,10 +101,16 @@ impl Router {
         self.workers.iter().map(EngineHandle::prefix_hit_tokens).sum()
     }
 
-    /// Pick a worker index for the next request.
+    /// KV pool bytes currently referenced across all workers.
+    pub fn kv_bytes_in_use(&self) -> u64 {
+        self.workers.iter().map(EngineHandle::kv_bytes_in_use).sum()
+    }
+
+    /// Pick a worker index without request context (prefix-affinity
+    /// falls back to round-robin here — use [`Router::pick_for`]).
     pub fn pick(&self) -> usize {
         match self.policy {
-            Policy::RoundRobin => {
+            Policy::RoundRobin | Policy::PrefixAffinity { .. } => {
                 self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len()
             }
             Policy::LeastLoaded => {
@@ -68,36 +128,93 @@ impl Router {
         }
     }
 
+    /// Pick a worker index for `req` under the configured policy.
+    pub fn pick_for(&self, req: &Request) -> usize {
+        match self.policy {
+            Policy::PrefixAffinity { chunk_tokens } => {
+                (prefix_hash(&req.tokens, req.dma, chunk_tokens)
+                    % self.workers.len() as u64) as usize
+            }
+            _ => self.pick(),
+        }
+    }
+
     pub fn submit(&self, req: Request) -> crate::Result<usize> {
-        let w = self.pick();
-        self.workers[w].submit(req)?;
+        let w = self.pick_for(&req);
+        let id = req.id;
+        // Register ownership before the send so the terminal event can
+        // never race the map insert.
+        self.owners.lock().unwrap().insert(id, w);
+        if let Err(e) = self.workers[w].submit(req) {
+            self.owners.lock().unwrap().remove(&id);
+            return Err(e);
+        }
         Ok(w)
     }
 
-    /// Drain up to `n` responses across all workers (non-blocking).
-    pub fn poll_responses(&self, n: usize) -> Vec<Response> {
+    /// Route a cancel to the worker owning `id`. Returns false when the
+    /// id is not in flight (unknown or already drained as finished).
+    pub fn cancel(&self, id: u64) -> crate::Result<bool> {
+        let w = self.owners.lock().unwrap().get(&id).copied();
+        match w {
+            Some(i) => {
+                self.workers[i].cancel(id)?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Drain up to `n` events across all workers (non-blocking), taking
+    /// at most one event per worker per rotation so a worker with a
+    /// deep event backlog cannot starve the others, and rotating the
+    /// starting worker between calls.
+    pub fn poll_events(&self, n: usize) -> Vec<EngineEvent> {
+        let w = self.workers.len();
+        let start = self.drain_from.fetch_add(1, Ordering::Relaxed) % w;
         let mut out = Vec::new();
-        for w in &self.workers {
-            while out.len() < n {
-                match w.rx.lock().unwrap().try_recv() {
-                    Ok(r) => out.push(r),
-                    Err(_) => break,
+        let mut dry = vec![false; w];
+        while out.len() < n {
+            let mut progressed = false;
+            for k in 0..w {
+                if out.len() >= n {
+                    break;
                 }
+                let i = (start + k) % w;
+                if dry[i] {
+                    continue;
+                }
+                match self.workers[i].rx.lock().unwrap().try_recv() {
+                    Ok(ev) => {
+                        if let EngineEvent::Finished(r) = &ev {
+                            self.owners.lock().unwrap().remove(&r.id);
+                        }
+                        out.push(ev);
+                        progressed = true;
+                    }
+                    Err(_) => dry[i] = true,
+                }
+            }
+            if !progressed {
+                break;
             }
         }
         out
     }
 
-    /// Blocking collect of exactly `n` responses (round-robin polling).
+    /// Blocking collect of exactly `n` terminal responses (round-robin
+    /// polling; non-terminal events are drained and dropped). Each poll
+    /// is capped at the responses still owed so a call can never return
+    /// more than `n` even when further terminal events are queued.
     pub fn collect_responses(&self, n: usize, timeout: std::time::Duration) -> Vec<Response> {
         let deadline = std::time::Instant::now() + timeout;
         let mut out = Vec::new();
         while out.len() < n && std::time::Instant::now() < deadline {
-            let got = self.poll_responses(n - out.len());
+            let got = self.poll_events(n - out.len());
             if got.is_empty() {
                 std::thread::sleep(std::time::Duration::from_millis(1));
             }
-            out.extend(got);
+            out.extend(got.into_iter().filter_map(EngineEvent::into_finished));
         }
         out
     }
@@ -113,6 +230,7 @@ impl Router {
 mod tests {
     use super::*;
     use crate::config::EngineConfig;
+    use crate::coordinator::request::SamplingParams;
     use crate::runtime::host::HostBackend;
     use crate::runtime::ModelBackend;
 
@@ -121,7 +239,7 @@ mod tests {
             .map(|_| {
                 EngineHandle::spawn(
                     || Ok(Box::new(HostBackend::for_tests()) as Box<dyn ModelBackend>),
-                    EngineConfig { max_new_tokens: 3, ..Default::default() },
+                    EngineConfig { max_new_tokens: 64, ..Default::default() },
                     5,
                 )
             })
@@ -134,6 +252,7 @@ mod tests {
             tokens: (0..6).map(|i| ((i * 11) % 58) as i32 + 6).collect(),
             max_new_tokens: 2,
             dma: false,
+            ..Default::default()
         }
     }
 
@@ -156,6 +275,8 @@ mod tests {
         let mut ids: Vec<u64> = resps.iter().map(|x| x.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1, 2, 3]);
+        // All terminal events drained: nothing left in flight.
+        assert!(r.owners.lock().unwrap().is_empty());
         r.shutdown();
     }
 
@@ -165,6 +286,110 @@ mod tests {
         // Both idle: always picks a valid index.
         let w = r.pick();
         assert!(w < 2);
+        r.shutdown();
+    }
+
+    #[test]
+    fn prefix_affinity_is_deterministic_on_the_first_chunk() {
+        let r = Router::new(spawn_workers(2), Policy::PrefixAffinity { chunk_tokens: 16 });
+        let mk = |tail: i32, dma: bool| Request {
+            id: 0,
+            tokens: (0..24).map(|i| if i < 16 { i } else { i + tail }).collect(),
+            dma,
+            ..Default::default()
+        };
+        // Same first chunk, different tails: same worker.
+        let a = r.pick_for(&mk(0, false));
+        assert_eq!(a, r.pick_for(&mk(7, false)));
+        assert_eq!(a, r.pick_for(&mk(13, false)));
+        // The mapping keys on the attention mode too (caches are
+        // per-mode), and on the prefix content.
+        let hashes: std::collections::BTreeSet<u64> = (0..32)
+            .map(|s| {
+                prefix_hash(
+                    &(0..16).map(|i| i + s * 100).collect::<Vec<i32>>(),
+                    false,
+                    16,
+                )
+            })
+            .collect();
+        assert!(hashes.len() > 16, "prefix hash collides too much: {}", hashes.len());
+        assert_ne!(
+            prefix_hash(&[1, 2, 3], false, 16),
+            prefix_hash(&[1, 2, 3], true, 16)
+        );
+        r.shutdown();
+    }
+
+    #[test]
+    fn event_drain_is_fair_across_workers() {
+        // Worker 0 runs a long ignore_eos generation (deep event
+        // backlog); worker 1 a short one. A small drain must still
+        // surface worker 1's events instead of draining worker 0 to the
+        // cap first.
+        let r = Router::new(spawn_workers(2), Policy::RoundRobin);
+        let long = Request {
+            id: 100,
+            tokens: (0..6).map(|i| i + 6).collect(),
+            max_new_tokens: 60,
+            dma: false,
+            sampling: SamplingParams { ignore_eos: true, ..Default::default() },
+        };
+        assert_eq!(r.submit(long).unwrap(), 0);
+        assert_eq!(r.submit(req(101)).unwrap(), 1);
+        // Wait until both workers finished (loads back to zero), so both
+        // channels hold their full event streams.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        while (r.workers[0].load() > 0 || r.workers[1].load() > 0)
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // Worker 0 queued ~62 events; a drain of 4 must include worker
+        // 1's (one event per worker per rotation).
+        let evs = r.poll_events(4);
+        assert_eq!(evs.len(), 4);
+        assert!(
+            evs.iter().any(|ev| ev.id() == 101),
+            "unfair drain: {:?}",
+            evs.iter().map(|e| e.id()).collect::<Vec<_>>()
+        );
+        // The rest still arrives.
+        let resps = r.collect_responses(2, std::time::Duration::from_secs(60));
+        assert_eq!(resps.len(), 2);
+        r.shutdown();
+    }
+
+    #[test]
+    fn cancel_routes_to_owner() {
+        let r = Router::new(spawn_workers(2), Policy::RoundRobin);
+        let long = Request {
+            id: 7,
+            tokens: (0..6).map(|i| i + 6).collect(),
+            max_new_tokens: 60,
+            dma: false,
+            sampling: SamplingParams { ignore_eos: true, ..Default::default() },
+        };
+        r.submit(long).unwrap();
+        // Unknown id: not in flight.
+        assert!(!r.cancel(999).unwrap());
+        // In-flight id: routed; the terminal event reports cancelled.
+        assert!(r.cancel(7).unwrap());
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        let mut finish = None;
+        while finish.is_none() && std::time::Instant::now() < deadline {
+            for ev in r.poll_events(64) {
+                if let EngineEvent::Finished(resp) = ev {
+                    finish = Some(resp);
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let resp = finish.expect("terminal event");
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.finish, crate::coordinator::FinishReason::Cancelled);
+        assert!(!r.cancel(7).unwrap(), "drained id no longer in flight");
         r.shutdown();
     }
 }

@@ -23,7 +23,8 @@ fn usage() -> ! {
          [--workers N] [--host-backend] [--seed S] \
          [--kv-format f32|mxfp8-high|nvfp4-low|dual] \
          [--kv-policy SINK/DIAG | l0:S/D;l1:S/D;...] \
-         [--prefill-chunk TOKENS] [--prefix-cache]"
+         [--prefill-chunk TOKENS] [--prefix-cache] \
+         [--route round-robin|least-loaded|prefix-affinity]"
     );
     std::process::exit(2);
 }
@@ -58,11 +59,8 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7433");
     let workers = args.usize_or("workers", 1);
     let host = args.flag("host-backend");
-    let eos = if host {
-        5
-    } else {
-        MetaConfig::load(&artifacts)?.tokens.eos
-    };
+    let meta = if host { None } else { Some(MetaConfig::load(&artifacts)?) };
+    let eos = meta.as_ref().map_or(5, |m| m.tokens.eos);
     let kv_format = match args.get("kv-format") {
         Some(s) => dma::kvquant::KvFormat::parse(s)?,
         None => dma::kvquant::KvFormat::F32,
@@ -80,17 +78,33 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
              (mxfp8-high, nvfp4-low or dual)"
         );
     }
+    let prefill_chunk = args.usize_or("prefill-chunk", 32);
+    // Precision-policy precedence: CLI > AOT bundle export > built-in.
+    let kv_precision_policies = match args.get("kv-policy") {
+        Some(s) => dma::kvquant::KvPolicy::parse_layers(s)?,
+        None => match meta.as_ref().filter(|m| !m.kv_precision_policies.is_empty()) {
+            Some(m) => m.kv_precision_policies.clone(),
+            None => vec![dma::kvquant::KvPolicy::default()],
+        },
+    };
     let cfg = EngineConfig {
         artifact_dir: artifacts.clone().into(),
         max_new_tokens: args.usize_or("max-new-tokens", 32),
-        prefill_chunk: args.usize_or("prefill-chunk", 32),
+        prefill_chunk,
         prefix_cache,
         kv_format,
-        kv_precision_policies: match args.get("kv-policy") {
-            Some(s) => dma::kvquant::KvPolicy::parse_layers(s)?,
-            None => vec![dma::kvquant::KvPolicy::default()],
-        },
+        kv_precision_policies,
         ..Default::default()
+    };
+    let policy = match args.get_or("route", "least-loaded").as_str() {
+        "round-robin" => Policy::RoundRobin,
+        "least-loaded" => Policy::LeastLoaded,
+        // Affinity keys on the same chunk-aligned prefix the radix
+        // caches share at, so repeat prefixes hit a warm worker.
+        "prefix-affinity" => Policy::PrefixAffinity {
+            chunk_tokens: cfg.prefill_chunk.max(1),
+        },
+        other => anyhow::bail!("unknown --route {other:?}"),
     };
     let handles: Vec<EngineHandle> = (0..workers)
         .map(|_| {
@@ -99,12 +113,13 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
             EngineHandle::spawn(move || make_backend(&a, host), c, eos)
         })
         .collect();
-    let router = Arc::new(Router::new(handles, Policy::LeastLoaded));
+    let router = Arc::new(Router::new(handles, policy));
     let stop = Arc::new(AtomicBool::new(false));
     println!(
-        "dma: serving on {addr} ({} worker(s), kv cache {}, policy {}, \
+        "dma: serving on {addr} ({} worker(s), route {}, kv cache {}, policy {}, \
          prefill chunk {}, prefix cache {})",
         workers,
+        policy.name(),
         cfg.kv_format.name(),
         dma::kvquant::KvPolicy::format_layers(&cfg.kv_precision_policies),
         cfg.prefill_chunk,

@@ -1,24 +1,60 @@
 //! TCP JSON-lines serving front end (std::net — tokio is not vendored).
 //!
-//! Protocol: one JSON object per line.
+//! Protocol v2: one JSON object per line.
+//!
+//! Request fields (`tokens` required, everything else optional):
 //!
 //! ```text
-//! -> {"id": 1, "tokens": [1,7,9], "max_new_tokens": 8, "dma": true}
-//! <- {"id": 1, "output": [12, 5], "finish": "eos",
-//!     "queue_ms": 0.1, "prefill_ms": 3.2, "decode_ms": 8.9}
-//! -> {"cmd": "stats"}          (optional control message)
-//! <- {"workers": 1, "kv_format": "f32", "kv_policy": "128/128",
-//!     "prefix_hit_tokens": 0}
+//! -> {"id": 1, "tokens": [1,7,9], "max_new_tokens": 8, "dma": true,
+//!     "temperature": 0.8, "top_k": 40, "top_p": 0.95, "seed": 7,
+//!     "stop": [5, 12], "ignore_eos": false, "stream": true}
 //! ```
 //!
-//! Responses are routed back to the connection that submitted them by an
+//! `temperature: 0` (the default) is greedy decoding; any other value
+//! samples deterministically from the request's `seed`. A non-streaming
+//! request (`"stream"` absent or false) gets exactly one summary line,
+//! as in v1:
+//!
+//! ```text
+//! <- {"id": 1, "output": [12, 5], "finish": "eos", "queue_ms": 0.1,
+//!     "prefill_ms": 3.2, "decode_ms": 8.9, "ttft_ms": 3.4}
+//! ```
+//!
+//! A streaming request receives its event stream as it happens — a
+//! `started` line, one `token` line per generated token, then the same
+//! summary line tagged `"event": "finished"`:
+//!
+//! ```text
+//! <- {"id": 1, "event": "started", "queue_ms": 0.1}
+//! <- {"id": 1, "event": "token", "token": 12, "index": 0, "decode_ms": 0}
+//! <- {"id": 1, "event": "token", "token": 5, "index": 1, "decode_ms": 1.1}
+//! <- {"id": 1, "event": "finished", "output": [12, 5], "finish": "eos", ...}
+//! ```
+//!
+//! Control messages:
+//!
+//! ```text
+//! -> {"cmd": "cancel", "id": 1}   cancel that request (this connection's
+//!                                 id namespace); its terminal line
+//!                                 reports "finish": "cancelled"
+//! -> {"cmd": "stats"}
+//! <- {"workers": 1, "policy": "least-loaded", "kv_format": "f32",
+//!     "kv_policy": "128/128", "prefix_hit_tokens": 0,
+//!     "kv_bytes_in_use": 0}
+//! ```
+//!
+//! A client disconnect cancels every request the connection still has in
+//! flight — abandoned generations release their KV pages instead of
+//! decoding to a dead socket.
+//!
+//! Events are routed back to the connection that submitted them by an
 //! internal request id (client-supplied ids are echoed but may collide
 //! across connections): each accepted request registers a per-connection
-//! channel with the dispatcher, which drains the engine workers and
-//! forwards each completion to its owner.
+//! channel with the dispatcher, which drains the routers' event streams
+//! and forwards each event to its owner.
 
 use crate::coordinator::router::Router;
-use crate::coordinator::{Request, Response};
+use crate::coordinator::{EngineEvent, Request, Response, SamplingParams};
 use crate::util::json::Json;
 use anyhow::Context;
 use std::collections::HashMap;
@@ -27,7 +63,16 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
-pub fn parse_request(line: &str, internal_id: u64) -> Result<(Request, u64), String> {
+/// A parsed inbound request line.
+pub struct ParsedRequest {
+    pub req: Request,
+    /// The id to echo back to the client (defaults to the internal id).
+    pub client_id: u64,
+    /// Stream per-token events to the client.
+    pub stream: bool,
+}
+
+pub fn parse_request(line: &str, internal_id: u64) -> Result<ParsedRequest, String> {
     let j = Json::parse(line).map_err(|e| e.to_string())?;
     let tokens = j
         .get("tokens")
@@ -42,8 +87,29 @@ pub fn parse_request(line: &str, internal_id: u64) -> Result<(Request, u64), Str
         .and_then(Json::as_i64)
         .map(|v| v as u64)
         .unwrap_or(internal_id);
-    Ok((
-        Request {
+    let stop = match j.get("stop") {
+        None => Vec::new(),
+        Some(v) => v
+            .as_arr()
+            .ok_or("stop must be an array of token ids")?
+            .iter()
+            .map(|v| v.as_i64().map(|x| x as i32))
+            .collect::<Option<Vec<i32>>>()
+            .ok_or("stop tokens must be integers")?,
+    };
+    let sampling = SamplingParams {
+        temperature: j
+            .get("temperature")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as f32,
+        top_k: j.get("top_k").and_then(Json::as_usize).unwrap_or(0),
+        top_p: j.get("top_p").and_then(Json::as_f64).unwrap_or(1.0) as f32,
+        seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+        stop,
+        ignore_eos: j.get("ignore_eos").and_then(Json::as_bool).unwrap_or(false),
+    };
+    Ok(ParsedRequest {
+        req: Request {
             id: internal_id,
             tokens,
             max_new_tokens: j
@@ -51,9 +117,11 @@ pub fn parse_request(line: &str, internal_id: u64) -> Result<(Request, u64), Str
                 .and_then(Json::as_usize)
                 .unwrap_or(16),
             dma: j.get("dma").and_then(Json::as_bool).unwrap_or(true),
+            sampling,
         },
         client_id,
-    ))
+        stream: j.get("stream").and_then(Json::as_bool).unwrap_or(false),
+    })
 }
 
 pub fn response_json(r: &Response) -> Json {
@@ -67,6 +135,7 @@ pub fn response_json(r: &Response) -> Json {
         ("queue_ms", Json::num(r.queue_ms)),
         ("prefill_ms", Json::num(r.prefill_ms)),
         ("decode_ms", Json::num(r.decode_ms)),
+        ("ttft_ms", Json::num(r.ttft_ms)),
     ];
     if let Some(e) = &r.error {
         fields.push(("error", Json::str(e.clone())));
@@ -74,8 +143,47 @@ pub fn response_json(r: &Response) -> Json {
     Json::obj(fields)
 }
 
-/// internal id -> (client id, connection's response channel).
-type Pending = Arc<Mutex<HashMap<u64, (u64, mpsc::Sender<Response>)>>>;
+/// Wire form of one event. Non-streaming requests only ever see the
+/// summary (their `Finished` serializes exactly as in protocol v1);
+/// streamed events carry an `"event"` tag.
+pub fn event_json(ev: &EngineEvent, stream: bool) -> Json {
+    match ev {
+        EngineEvent::Started { id, queue_ms } => Json::obj(vec![
+            ("id", Json::num(*id as f64)),
+            ("event", Json::str("started")),
+            ("queue_ms", Json::num(*queue_ms)),
+        ]),
+        EngineEvent::Token { id, token, index, decode_ms } => Json::obj(vec![
+            ("id", Json::num(*id as f64)),
+            ("event", Json::str("token")),
+            ("token", Json::num(*token as f64)),
+            ("index", Json::num(*index as f64)),
+            ("decode_ms", Json::num(*decode_ms)),
+        ]),
+        EngineEvent::Finished(r) => {
+            let mut j = response_json(r);
+            if stream {
+                if let Json::Obj(m) = &mut j {
+                    m.insert("event".into(), Json::str("finished"));
+                }
+            }
+            j
+        }
+    }
+}
+
+struct PendingEntry {
+    client_id: u64,
+    stream: bool,
+    /// The owning connection's outbound line channel. Every byte that
+    /// reaches a socket goes through its connection's single writer
+    /// thread — reader-side control replies included — so lines can
+    /// never interleave mid-write.
+    tx: mpsc::Sender<String>,
+}
+
+/// internal id -> owning connection registration.
+type Pending = Arc<Mutex<HashMap<u64, PendingEntry>>>;
 
 /// Serve until `stop` is set. The bound address is reported through
 /// `on_bind` (tests connect to an ephemeral port).
@@ -92,24 +200,42 @@ pub fn serve(
     let pending: Pending = Arc::new(Mutex::new(HashMap::new()));
     let next_id = Arc::new(AtomicU64::new(1));
 
-    // Dispatcher: drain worker completions, route to owning connections.
+    // Dispatcher: drain worker events, route each to its owning
+    // connection. Token/Started events are forwarded only to streaming
+    // registrations; the terminal event releases the registration.
     let dispatcher = {
         let router = router.clone();
         let pending = pending.clone();
         let stop = stop.clone();
         std::thread::spawn(move || {
             while !stop.load(Ordering::Relaxed) {
-                let got = router.poll_responses(64);
+                let got = router.poll_events(64);
                 if got.is_empty() {
                     std::thread::sleep(std::time::Duration::from_millis(1));
                     continue;
                 }
-                for mut resp in got {
-                    if let Some((client_id, tx)) =
-                        pending.lock().unwrap().remove(&resp.id)
-                    {
-                        resp.id = client_id;
-                        let _ = tx.send(resp);
+                for mut ev in got {
+                    let internal = ev.id();
+                    let terminal = matches!(ev, EngineEvent::Finished(_));
+                    // Hold the registry lock only for the map operation;
+                    // serialization happens outside so per-token string
+                    // formatting never blocks connection submit paths.
+                    let route = {
+                        let mut map = pending.lock().unwrap();
+                        if terminal {
+                            map.remove(&internal).map(|e| (e.stream, e.client_id, e.tx))
+                        } else {
+                            match map.get(&internal) {
+                                Some(e) if e.stream => {
+                                    Some((true, e.client_id, e.tx.clone()))
+                                }
+                                _ => None,
+                            }
+                        }
+                    };
+                    if let Some((stream_mode, client_id, tx)) = route {
+                        ev.set_id(client_id);
+                        let _ = tx.send(event_json(&ev, stream_mode).to_string());
                     }
                 }
             }
@@ -153,61 +279,135 @@ fn handle_conn(
     next_id: &AtomicU64,
 ) -> crate::Result<()> {
     let reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream.try_clone()?;
-    let (tx_conn, rx_conn) = mpsc::channel::<Response>();
+    let (tx_conn, rx_conn) = mpsc::channel::<String>();
 
-    // Writer half: deliver completions in arrival order until every
-    // sender (reader + dispatcher-held registrations) is gone.
+    // Writer half: the connection's only socket writer. Event lines
+    // (from the dispatcher) and control replies (from the reader loop)
+    // all arrive here as whole lines, so they can never interleave
+    // mid-write. Runs until every sender (reader + dispatcher-held
+    // registrations) is gone.
     let mut wstream = stream;
     let writer_thread = std::thread::spawn(move || {
-        for resp in rx_conn {
-            if writeln!(wstream, "{}", response_json(&resp)).is_err() {
+        for line in rx_conn {
+            if writeln!(wstream, "{line}").is_err() {
                 break;
             }
         }
     });
+    let reply = |j: Json| {
+        let _ = tx_conn.send(j.to_string());
+    };
+
+    // (client id, internal id) of every request this connection has in
+    // flight — the cancel command's lookup table, and the set to
+    // auto-cancel when the connection goes away. Pruned of finished
+    // entries on every submission so it stays bounded by the in-flight
+    // count, not the connection's lifetime history.
+    let mut submitted: Vec<(u64, u64)> = Vec::new();
 
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break, // reset mid-read: treat as a disconnect
+        };
         if line.trim().is_empty() {
             continue;
         }
         if let Ok(j) = Json::parse(&line) {
-            if j.get("cmd").and_then(Json::as_str) == Some("stats") {
-                let out = Json::obj(vec![
-                    ("workers", Json::num(router.num_workers() as f64)),
-                    ("kv_format", Json::str(router.kv_format())),
-                    ("kv_policy", Json::str(router.kv_policy())),
-                    (
-                        "prefix_hit_tokens",
-                        Json::num(router.prefix_hit_tokens() as f64),
-                    ),
-                ]);
-                writeln!(writer, "{out}")?;
-                continue;
+            match j.get("cmd").and_then(Json::as_str) {
+                Some("stats") => {
+                    reply(Json::obj(vec![
+                        ("workers", Json::num(router.num_workers() as f64)),
+                        ("policy", Json::str(router.policy_name())),
+                        ("kv_format", Json::str(router.kv_format())),
+                        ("kv_policy", Json::str(router.kv_policy())),
+                        (
+                            "prefix_hit_tokens",
+                            Json::num(router.prefix_hit_tokens() as f64),
+                        ),
+                        (
+                            "kv_bytes_in_use",
+                            Json::num(router.kv_bytes_in_use() as f64),
+                        ),
+                    ]));
+                    continue;
+                }
+                Some("cancel") => {
+                    let target = j.get("id").and_then(Json::as_i64).map(|v| v as u64);
+                    // Latest *still-in-flight* submission under that
+                    // client id wins — a finished request under a reused
+                    // id must not shadow an older one still running.
+                    let internal = target.and_then(|cid| {
+                        let map = pending.lock().unwrap();
+                        submitted
+                            .iter()
+                            .rev()
+                            .find(|(c, i)| *c == cid && map.contains_key(i))
+                            .map(|(_, i)| *i)
+                    });
+                    match internal {
+                        Some(i) => {
+                            // Fire and forget: the request's terminal
+                            // line (finish: "cancelled") is the ack. A
+                            // lost race against completion just means
+                            // the normal summary already went out.
+                            let _ = router.cancel(i);
+                        }
+                        None => {
+                            reply(Json::obj(vec![(
+                                "error",
+                                Json::str("cancel: unknown id"),
+                            )]));
+                        }
+                    }
+                    continue;
+                }
+                Some(other) => {
+                    reply(Json::obj(vec![(
+                        "error",
+                        Json::str(format!("unknown cmd {other:?}")),
+                    )]));
+                    continue;
+                }
+                None => {}
             }
         }
         let internal = next_id.fetch_add(1, Ordering::Relaxed);
         match parse_request(&line, internal) {
-            Ok((req, client_id)) => {
-                pending
-                    .lock()
-                    .unwrap()
-                    .insert(internal, (client_id, tx_conn.clone()));
-                if let Err(e) = router.submit(req) {
+            Ok(parsed) => {
+                {
+                    let mut map = pending.lock().unwrap();
+                    // Drop entries whose requests already finished.
+                    submitted.retain(|(_, i)| map.contains_key(i));
+                    map.insert(
+                        internal,
+                        PendingEntry {
+                            client_id: parsed.client_id,
+                            stream: parsed.stream,
+                            tx: tx_conn.clone(),
+                        },
+                    );
+                }
+                submitted.push((parsed.client_id, internal));
+                if let Err(e) = router.submit(parsed.req) {
                     pending.lock().unwrap().remove(&internal);
-                    let out = Json::obj(vec![("error", Json::str(e.to_string()))]);
-                    writeln!(writer, "{out}")?;
+                    reply(Json::obj(vec![("error", Json::str(e.to_string()))]));
                 }
             }
             Err(msg) => {
-                let out = Json::obj(vec![("error", Json::str(msg))]);
-                writeln!(writer, "{out}")?;
+                reply(Json::obj(vec![("error", Json::str(msg))]));
             }
         }
     }
-    // Input closed: drop our sender; the writer exits once the
-    // dispatcher has delivered (and dropped) every pending registration.
+    // Input closed: cancel whatever this connection still has in flight
+    // (finished ids are no longer routable — those cancels are no-ops),
+    // then drop our sender; the writer exits once the dispatcher has
+    // delivered (and dropped) every remaining registration.
+    for &(_, internal) in &submitted {
+        if pending.lock().unwrap().contains_key(&internal) {
+            let _ = router.cancel(internal);
+        }
+    }
     drop(tx_conn);
     let _ = writer_thread.join();
     Ok(())
@@ -224,70 +424,132 @@ mod tests {
 
     #[test]
     fn parse_request_full() {
-        let (r, client) = parse_request(
-            r#"{"id": 3, "tokens": [1, 2, 3], "max_new_tokens": 5, "dma": false}"#,
+        let p = parse_request(
+            r#"{"id": 3, "tokens": [1, 2, 3], "max_new_tokens": 5, "dma": false,
+                "temperature": 0.7, "top_k": 12, "top_p": 0.9, "seed": 11,
+                "stop": [5, 9], "ignore_eos": true, "stream": true}"#,
             99,
         )
         .unwrap();
-        assert_eq!(r.id, 99); // internal id
-        assert_eq!(client, 3); // echoed id
-        assert_eq!(r.tokens, vec![1, 2, 3]);
-        assert_eq!(r.max_new_tokens, 5);
-        assert!(!r.dma);
+        assert_eq!(p.req.id, 99); // internal id
+        assert_eq!(p.client_id, 3); // echoed id
+        assert_eq!(p.req.tokens, vec![1, 2, 3]);
+        assert_eq!(p.req.max_new_tokens, 5);
+        assert!(!p.req.dma);
+        assert!((p.req.sampling.temperature - 0.7).abs() < 1e-6);
+        assert_eq!(p.req.sampling.top_k, 12);
+        assert!((p.req.sampling.top_p - 0.9).abs() < 1e-6);
+        assert_eq!(p.req.sampling.seed, 11);
+        assert_eq!(p.req.sampling.stop, vec![5, 9]);
+        assert!(p.req.sampling.ignore_eos);
+        assert!(p.stream);
     }
 
     #[test]
     fn parse_request_defaults() {
-        let (r, client) = parse_request(r#"{"tokens": [4]}"#, 42).unwrap();
-        assert_eq!(r.id, 42);
-        assert_eq!(client, 42);
-        assert_eq!(r.max_new_tokens, 16);
-        assert!(r.dma);
+        let p = parse_request(r#"{"tokens": [4]}"#, 42).unwrap();
+        assert_eq!(p.req.id, 42);
+        assert_eq!(p.client_id, 42);
+        assert_eq!(p.req.max_new_tokens, 16);
+        assert!(p.req.dma);
+        assert_eq!(p.req.sampling, SamplingParams::default());
+        assert!(!p.stream);
     }
 
     #[test]
     fn parse_request_rejects_bad_json() {
         assert!(parse_request("{oops", 1).is_err());
         assert!(parse_request(r#"{"no_tokens": 1}"#, 1).is_err());
+        assert!(parse_request(r#"{"tokens": [1], "stop": 5}"#, 1).is_err());
     }
 
-    #[test]
-    fn response_round_trips_as_json() {
-        let r = Response {
+    fn resp() -> Response {
+        Response {
             id: 9,
             output: vec![1, 2],
             finish: crate::coordinator::FinishReason::Eos,
             queue_ms: 0.5,
             prefill_ms: 1.0,
             decode_ms: 2.0,
+            ttft_ms: 1.5,
             error: None,
-        };
-        let j = response_json(&r);
+        }
+    }
+
+    #[test]
+    fn response_round_trips_as_json() {
+        let j = response_json(&resp());
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("id").unwrap().as_i64(), Some(9));
         assert_eq!(parsed.get("finish").unwrap().as_str(), Some("eos"));
         assert_eq!(parsed.get("output").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(parsed.get("ttft_ms").unwrap().as_f64(), Some(1.5));
+        // Non-streamed summary has no event tag (v1 shape).
+        assert!(parsed.get("event").is_none());
     }
 
     #[test]
-    fn end_to_end_over_tcp() {
-        let worker = EngineHandle::spawn(
-            || Ok(Box::new(HostBackend::for_tests()) as Box<dyn ModelBackend>),
-            EngineConfig { max_new_tokens: 3, ..Default::default() },
-            5,
+    fn event_lines_serialize() {
+        let s = event_json(&EngineEvent::Started { id: 4, queue_ms: 0.25 }, true);
+        let js = Json::parse(&s.to_string()).unwrap();
+        assert_eq!(js.get("event").unwrap().as_str(), Some("started"));
+        assert_eq!(js.get("id").unwrap().as_i64(), Some(4));
+
+        let t = event_json(
+            &EngineEvent::Token { id: 4, token: 17, index: 2, decode_ms: 0.5 },
+            true,
         );
-        let router = Arc::new(Router::new(vec![worker], Policy::RoundRobin));
+        let jt = Json::parse(&t.to_string()).unwrap();
+        assert_eq!(jt.get("event").unwrap().as_str(), Some("token"));
+        assert_eq!(jt.get("token").unwrap().as_i64(), Some(17));
+        assert_eq!(jt.get("index").unwrap().as_i64(), Some(2));
+
+        let f = event_json(&EngineEvent::Finished(resp()), true);
+        let jf = Json::parse(&f.to_string()).unwrap();
+        assert_eq!(jf.get("event").unwrap().as_str(), Some("finished"));
+        assert_eq!(jf.get("finish").unwrap().as_str(), Some("eos"));
+    }
+
+    fn spawn_server(
+        cfg: EngineConfig,
+        workers: usize,
+        policy: Policy,
+    ) -> (
+        std::net::SocketAddr,
+        Arc<AtomicBool>,
+        std::thread::JoinHandle<()>,
+    ) {
+        let handles: Vec<EngineHandle> = (0..workers)
+            .map(|_| {
+                let c = cfg.clone();
+                EngineHandle::spawn(
+                    || Ok(Box::new(HostBackend::for_tests()) as Box<dyn ModelBackend>),
+                    c,
+                    5,
+                )
+            })
+            .collect();
+        let router = Arc::new(Router::new(handles, policy));
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = std::sync::mpsc::channel();
         let stop2 = stop.clone();
-        let router2 = router.clone();
         let srv = std::thread::spawn(move || {
-            serve("127.0.0.1:0", router2, stop2, move |a| {
+            serve("127.0.0.1:0", router, stop2, move |a| {
                 tx.send(a).unwrap();
             })
             .unwrap();
         });
         let addr = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        (addr, stop, srv)
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let (addr, stop, srv) = spawn_server(
+            EngineConfig { max_new_tokens: 3, ..Default::default() },
+            1,
+            Policy::RoundRobin,
+        );
 
         let mut conn = TcpStream::connect(addr).unwrap();
         writeln!(conn, r#"{{"cmd": "stats"}}"#).unwrap();
@@ -298,6 +560,7 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         let s = Json::parse(line.trim()).unwrap();
         assert_eq!(s.get("workers").unwrap().as_i64(), Some(1));
+        assert_eq!(s.get("policy").unwrap().as_str(), Some("round-robin"));
         assert_eq!(s.get("kv_format").unwrap().as_str(), Some("f32"));
         assert_eq!(s.get("kv_policy").unwrap().as_str(), Some("128/128"));
         assert_eq!(s.get("prefix_hit_tokens").unwrap().as_i64(), Some(0));
@@ -306,7 +569,256 @@ mod tests {
         let j = Json::parse(line.trim()).unwrap();
         assert_eq!(j.get("id").unwrap().as_i64(), Some(1));
         assert!(j.get("output").unwrap().as_arr().unwrap().len() <= 2);
+        // Non-streaming requests keep the v1 single-line shape.
+        assert!(j.get("event").is_none());
+        assert!(j.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
 
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn streaming_tokens_then_summary_and_cancel_over_tcp() {
+        // The acceptance-bar e2e: a streamed request yields >= 1 token
+        // line before its summary and replays the non-streamed output;
+        // a second, long request is cancelled mid-flight and its KV pool
+        // bytes return to the pre-admission count (via the stats cmd).
+        // decode_slice 1: one token per scheduler step, so the cancel
+        // sent after the first token line has dozens of steps of margin.
+        let (addr, stop, srv) = spawn_server(
+            EngineConfig { max_new_tokens: 64, decode_slice: 1, ..Default::default() },
+            1,
+            Policy::RoundRobin,
+        );
+
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        let read_json = |line: &mut String, reader: &mut BufReader<TcpStream>| {
+            line.clear();
+            reader.read_line(line).unwrap();
+            Json::parse(line.trim()).unwrap()
+        };
+
+        // Idle pool bytes before any request.
+        writeln!(writer, r#"{{"cmd": "stats"}}"#).unwrap();
+        let bytes0 = read_json(&mut line, &mut reader)
+            .get("kv_bytes_in_use")
+            .unwrap()
+            .as_i64()
+            .unwrap();
+
+        // 1. Non-streaming reference run (seeded sampling).
+        writeln!(
+            writer,
+            "{}",
+            concat!(
+                r#"{"id": 1, "tokens": [1, 9, 8, 7, 6], "max_new_tokens": 6, "#,
+                r#""temperature": 0.8, "seed": 21}"#
+            )
+        )
+        .unwrap();
+        let reference = read_json(&mut line, &mut reader);
+        assert_eq!(reference.get("id").unwrap().as_i64(), Some(1));
+        let ref_out: Vec<i64> = reference
+            .get("output")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert!(!ref_out.is_empty());
+
+        // 2. Same request streamed: token lines, then the summary, with
+        //    an identical token sequence.
+        writeln!(
+            writer,
+            "{}",
+            concat!(
+                r#"{"id": 2, "tokens": [1, 9, 8, 7, 6], "max_new_tokens": 6, "#,
+                r#""temperature": 0.8, "seed": 21, "stream": true}"#
+            )
+        )
+        .unwrap();
+        let mut streamed_tokens: Vec<i64> = Vec::new();
+        let mut saw_started = false;
+        let summary = loop {
+            let j = read_json(&mut line, &mut reader);
+            assert_eq!(j.get("id").unwrap().as_i64(), Some(2));
+            match j.get("event").unwrap().as_str().unwrap() {
+                "started" => saw_started = true,
+                "token" => {
+                    assert_eq!(
+                        j.get("index").unwrap().as_i64().unwrap(),
+                        streamed_tokens.len() as i64
+                    );
+                    streamed_tokens.push(j.get("token").unwrap().as_i64().unwrap());
+                }
+                "finished" => break j,
+                other => panic!("unexpected event {other}"),
+            }
+        };
+        assert!(saw_started);
+        assert!(!streamed_tokens.is_empty(), "no token line before the summary");
+        assert_eq!(streamed_tokens, ref_out, "streamed run diverged from batch run");
+        let sum_out: Vec<i64> = summary
+            .get("output")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(sum_out, streamed_tokens);
+        assert!(summary.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+
+        // 3. Long ignore_eos request, cancelled after its first token.
+        writeln!(
+            writer,
+            "{}",
+            concat!(
+                r#"{"id": 3, "tokens": [1, 9, 8, 7, 6], "max_new_tokens": 60, "#,
+                r#""ignore_eos": true, "stream": true}"#
+            )
+        )
+        .unwrap();
+        // Wait for the first token so the cancel lands mid-decode.
+        loop {
+            let j = read_json(&mut line, &mut reader);
+            if j.get("event").unwrap().as_str() == Some("token") {
+                break;
+            }
+        }
+        writeln!(writer, r#"{{"cmd": "cancel", "id": 3}}"#).unwrap();
+        let summary = loop {
+            let j = read_json(&mut line, &mut reader);
+            if j.get("event").unwrap().as_str() == Some("finished") {
+                break j;
+            }
+        };
+        assert_eq!(summary.get("finish").unwrap().as_str(), Some("cancelled"));
+        let n_out = summary.get("output").unwrap().as_arr().unwrap().len();
+        assert!(n_out >= 1 && n_out < 60, "cancel did not interrupt: {n_out}");
+
+        // 4. Pool bytes return to the pre-admission count (the worker
+        //    publishes the gauge after its next scheduler step).
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            writeln!(writer, r#"{{"cmd": "stats"}}"#).unwrap();
+            let bytes = read_json(&mut line, &mut reader)
+                .get("kv_bytes_in_use")
+                .unwrap()
+                .as_i64()
+                .unwrap();
+            if bytes == bytes0 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "pool bytes never returned: {bytes} != {bytes0}"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+
+        // 5. Cancel for an id this connection never sent is an error.
+        writeln!(writer, r#"{{"cmd": "cancel", "id": 77}}"#).unwrap();
+        let j = read_json(&mut line, &mut reader);
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("unknown id"));
+
+        // EOF the server's reader so the connection thread can exit.
+        writer.shutdown(std::net::Shutdown::Write).unwrap();
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn disconnect_cancels_in_flight_requests() {
+        let (addr, stop, srv) = spawn_server(
+            EngineConfig { max_new_tokens: 64, ..Default::default() },
+            1,
+            Policy::RoundRobin,
+        );
+
+        {
+            let conn = TcpStream::connect(addr).unwrap();
+            let mut writer = conn.try_clone().unwrap();
+            let mut reader = BufReader::new(conn);
+            writeln!(
+                writer,
+                "{}",
+                concat!(
+                    r#"{"id": 1, "tokens": [1, 9, 8, 7], "max_new_tokens": 60, "#,
+                    r#""ignore_eos": true, "stream": true}"#
+                )
+            )
+            .unwrap();
+            // Make sure the request is running, then vanish.
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("started"));
+        } // both halves dropped: disconnect
+
+        // The abandoned generation must be cancelled: a fresh connection
+        // sees the pool bytes drain back to zero.
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            writeln!(writer, r#"{{"cmd": "stats"}}"#).unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let bytes = Json::parse(line.trim())
+                .unwrap()
+                .get("kv_bytes_in_use")
+                .unwrap()
+                .as_i64()
+                .unwrap();
+            if bytes == 0 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "disconnect did not cancel: {bytes} bytes still held"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+
+        writer.shutdown(std::net::Shutdown::Write).unwrap();
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_server_multiple_clients() {
+        let (addr, stop, srv) = spawn_server(
+            EngineConfig { max_new_tokens: 3, ..Default::default() },
+            1,
+            Policy::RoundRobin,
+        );
+
+        let clients: Vec<std::thread::JoinHandle<()>> = (0..3)
+            .map(|ci| {
+                std::thread::spawn(move || {
+                    let mut conn = TcpStream::connect(addr).unwrap();
+                    writeln!(
+                        conn,
+                        r#"{{"id": {ci}, "tokens": [1, 9, 8, 7, 6], "max_new_tokens": 2}}"#
+                    )
+                    .unwrap();
+                    conn.shutdown(std::net::Shutdown::Write).unwrap();
+                    let mut line = String::new();
+                    BufReader::new(conn).read_line(&mut line).unwrap();
+                    let j = Json::parse(line.trim()).unwrap();
+                    assert_eq!(j.get("id").unwrap().as_i64(), Some(ci));
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
         stop.store(true, Ordering::Relaxed);
         srv.join().unwrap();
     }

@@ -4,7 +4,7 @@
 use dma::config::EngineConfig;
 use dma::coordinator::engine::{Engine, EngineHandle};
 use dma::coordinator::router::{Policy, Router};
-use dma::coordinator::{FinishReason, Request};
+use dma::coordinator::{EngineEvent, FinishReason, Request, SamplingParams};
 use dma::kvcache::SeqKv;
 use dma::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv};
 use dma::runtime::host::HostBackend;
@@ -17,6 +17,7 @@ fn req(id: u64, len: usize, max_new: usize, dma: bool) -> Request {
         tokens: (0..len).map(|i| ((i * 7 + id as usize) % 58) as i32 + 6).collect(),
         max_new_tokens: max_new,
         dma,
+        ..Default::default()
     }
 }
 
@@ -230,7 +231,13 @@ fn prefix_cache_reproduces_cold_start_and_skips_shared_prefill() {
     // Cold-start oracles: each request alone on a fresh engine, no cache.
     let cold = |tokens: &[i32]| {
         let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg(false), 5);
-        e.submit(Request { id: 9, tokens: tokens.to_vec(), max_new_tokens: 6, dma: false });
+        e.submit(Request {
+            id: 9,
+            tokens: tokens.to_vec(),
+            max_new_tokens: 6,
+            dma: false,
+            ..Default::default()
+        });
         e.run_until_idle().unwrap().remove(0)
     };
     let cold_a = cold(&prompt_a);
@@ -238,13 +245,25 @@ fn prefix_cache_reproduces_cold_start_and_skips_shared_prefill() {
 
     // Warm engine: A populates the cache, B shares its first 48 tokens.
     let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg(true), 5);
-    e.submit(Request { id: 1, tokens: prompt_a.clone(), max_new_tokens: 6, dma: false });
+    e.submit(Request {
+        id: 1,
+        tokens: prompt_a.clone(),
+        max_new_tokens: 6,
+        dma: false,
+        ..Default::default()
+    });
     let first = e.run_until_idle().unwrap();
     assert_eq!(first[0].output, cold_a.output, "request A diverged from cold start");
     assert_eq!(e.stats.prefill_tokens, 64);
     assert_eq!(e.stats.prefix_hit_tokens, 0);
 
-    e.submit(Request { id: 2, tokens: prompt_b.clone(), max_new_tokens: 6, dma: false });
+    e.submit(Request {
+        id: 2,
+        tokens: prompt_b.clone(),
+        max_new_tokens: 6,
+        dma: false,
+        ..Default::default()
+    });
     let second = e.run_until_idle().unwrap();
     assert_eq!(
         second[0].output, cold_b.output,
@@ -254,6 +273,146 @@ fn prefix_cache_reproduces_cold_start_and_skips_shared_prefill() {
     assert_eq!(e.stats.prefix_hits, 1);
     assert_eq!(e.stats.prefix_hit_tokens, 48);
     assert_eq!(e.stats.prefill_tokens, 64 + 16);
+}
+
+// ---------------------------------------------------------------------
+// Cancellation accounting + streaming determinism
+// ---------------------------------------------------------------------
+
+#[test]
+fn cancel_returns_quantized_pool_bytes_mid_prefill_and_mid_decode() {
+    // The satellite acceptance test: cancelling a quantized sequence
+    // mid-prefill and mid-decode returns its pool bytes exactly (the
+    // in-use gauge is a from-scratch recount of the refcount plane, and
+    // the structural invariants are re-checked on every cancel).
+    let cfg = EngineConfig {
+        max_new_tokens: 32,
+        kv_format: KvFormat::Dual,
+        prefill_chunk: 16,
+        decode_slice: 1,
+        kv_precision_policies: vec![KvPolicy { sink: 16, diag: 16 }],
+        ..Default::default()
+    };
+    let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+    let bytes0 = e.kv_bytes_in_use();
+    let free0 = e.kv_free_blocks();
+
+    // Mid-prefill: one 16-token chunk of a 64-token prompt done.
+    e.submit(req(1, 64, 8, false));
+    e.step().unwrap();
+    assert!(e.kv_bytes_in_use() > bytes0, "admission holds pool bytes");
+    let ev = e.cancel(1).unwrap().expect("mid-prefill cancel");
+    assert_eq!(ev.as_finished().unwrap().finish, FinishReason::Cancelled);
+    assert_eq!(e.kv_bytes_in_use(), bytes0, "pool bytes not returned");
+    assert_eq!(e.kv_free_blocks(), free0);
+    e.pool_check().unwrap();
+
+    // Mid-decode: short prompt past prefill, a couple of tokens out.
+    e.submit(Request {
+        sampling: SamplingParams { ignore_eos: true, ..Default::default() },
+        ..req(2, 16, 24, false)
+    });
+    let evs = e.step().unwrap();
+    assert!(evs.iter().any(|ev| matches!(ev, EngineEvent::Token { .. })));
+    assert!(!e.idle(), "still decoding");
+    let ev = e.cancel(2).unwrap().expect("mid-decode cancel");
+    let resp = ev.as_finished().unwrap();
+    assert_eq!(resp.finish, FinishReason::Cancelled);
+    assert!(!resp.output.is_empty(), "partial output survives the cancel");
+    assert_eq!(e.kv_bytes_in_use(), bytes0);
+    assert_eq!(e.kv_free_blocks(), free0);
+    e.pool_check().unwrap();
+    assert_eq!(e.stats.cancelled, 2);
+}
+
+#[test]
+fn cancel_releases_sequence_but_keeps_donated_cache_pages() {
+    // With the radix cache on, a cancel must release exactly the
+    // sequence's own holdings: pages donated by earlier completed
+    // prefills stay resident, the cancelled sequence's COW frontier and
+    // prefix forks go away.
+    let cfg = EngineConfig {
+        max_new_tokens: 8,
+        kv_format: KvFormat::Dual,
+        prefill_chunk: 16,
+        prefix_cache: true,
+        kv_precision_policies: vec![KvPolicy { sink: 16, diag: 16 }],
+        ..Default::default()
+    };
+    let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+    let prompt_a: Vec<i32> = (0..48).map(|i| ((i * 7) % 58) as i32 + 6).collect();
+    // A completes and donates its 3 prompt pages.
+    e.submit(Request {
+        id: 1,
+        tokens: prompt_a.clone(),
+        max_new_tokens: 2,
+        dma: false,
+        ..Default::default()
+    });
+    e.run_until_idle().unwrap();
+    assert_eq!(e.prefix_cache_pages(), 3);
+    let cache_bytes = e.kv_bytes_in_use();
+    assert!(cache_bytes > 0, "donated pages stay accounted");
+
+    // B extends A's prompt (shares 48 of 80 tokens), gets cancelled
+    // mid-prefill while holding prefix forks + its own frontier.
+    let mut prompt_b = prompt_a.clone();
+    prompt_b.extend((0..32).map(|i| ((i * 11) % 58) as i32 + 6));
+    e.submit(Request {
+        id: 2,
+        tokens: prompt_b,
+        max_new_tokens: 8,
+        dma: false,
+        ..Default::default()
+    });
+    e.step().unwrap();
+    assert!(e.kv_bytes_in_use() > cache_bytes);
+    assert_eq!(e.stats.prefix_hit_tokens, 48);
+    let ev = e.cancel(2).unwrap().expect("mid-prefill cancel");
+    assert_eq!(ev.as_finished().unwrap().finish, FinishReason::Cancelled);
+    assert_eq!(e.kv_bytes_in_use(), cache_bytes, "cache retention disturbed");
+    assert_eq!(e.prefix_cache_pages(), 3);
+    e.pool_check().unwrap();
+
+    // The cache still serves: A's exact prompt hits all shared pages.
+    e.submit(Request {
+        id: 3,
+        tokens: prompt_a,
+        max_new_tokens: 2,
+        dma: false,
+        ..Default::default()
+    });
+    e.run_until_idle().unwrap();
+    assert_eq!(e.stats.prefix_hit_tokens, 48 + 32);
+}
+
+#[test]
+fn streamed_token_events_match_non_streamed_run_with_same_seed() {
+    // Satellite acceptance: consuming a seeded request as a token-event
+    // stream yields the identical sequence to the same request run
+    // batch-style on a fresh engine.
+    let cfg = || EngineConfig { max_new_tokens: 12, ..Default::default() };
+    let mk = || Request {
+        sampling: SamplingParams { temperature: 0.9, seed: 1234, ..Default::default() },
+        ..req(5, 12, 10, false)
+    };
+
+    let mut streamed = Engine::new(Box::new(HostBackend::for_tests()), cfg(), 5);
+    streamed.submit(mk());
+    let events = streamed.run_until_idle_events().unwrap();
+    let stream_toks: Vec<i32> = events
+        .iter()
+        .filter_map(|ev| match ev {
+            EngineEvent::Token { token, .. } => Some(*token),
+            _ => None,
+        })
+        .collect();
+    assert!(!stream_toks.is_empty());
+
+    let mut batch = Engine::new(Box::new(HostBackend::for_tests()), cfg(), 5);
+    batch.submit(mk());
+    let resp = batch.run_until_idle().unwrap().remove(0);
+    assert_eq!(stream_toks, resp.output, "streamed run diverged from batch run");
 }
 
 // ---------------------------------------------------------------------
@@ -319,7 +478,13 @@ fn prefill_failure_rejects_request_but_engine_survives() {
         EngineConfig { max_new_tokens: 4, ..Default::default() },
         5,
     );
-    e.submit(Request { id: 1, tokens: vec![6, 13, 7], max_new_tokens: 2, dma: false });
+    e.submit(Request {
+        id: 1,
+        tokens: vec![6, 13, 7],
+        max_new_tokens: 2,
+        dma: false,
+        ..Default::default()
+    });
     e.submit(req(2, 8, 2, false));
     let mut resps = e.run_until_idle().unwrap();
     resps.sort_by_key(|r| r.id);
@@ -336,6 +501,64 @@ fn prefill_failure_rejects_request_but_engine_survives() {
 // ---------------------------------------------------------------------
 // Router + server
 // ---------------------------------------------------------------------
+
+#[test]
+fn prefix_affinity_routes_shared_prefixes_to_the_same_worker() {
+    // Acceptance bar: with 2 workers under Policy::PrefixAffinity, two
+    // prompts sharing a prefix land on the same worker, so the second
+    // hits the first's radix cache (prefix_hit_tokens > 0) — the
+    // cross-worker sharing story from the ROADMAP.
+    let cfg = EngineConfig {
+        max_new_tokens: 4,
+        kv_format: KvFormat::Dual,
+        prefill_chunk: 16,
+        prefix_cache: true,
+        kv_precision_policies: vec![KvPolicy { sink: 16, diag: 16 }],
+        ..Default::default()
+    };
+    let workers: Vec<EngineHandle> = (0..2)
+        .map(|_| {
+            let c = cfg.clone();
+            EngineHandle::spawn(
+                || Ok(Box::new(HostBackend::for_tests()) as Box<dyn ModelBackend>),
+                c,
+                5,
+            )
+        })
+        .collect();
+    let router = Router::new(workers, Policy::PrefixAffinity { chunk_tokens: 16 });
+
+    let prompt_a: Vec<i32> = (0..64).map(|i| ((i * 7) % 58) as i32 + 6).collect();
+    let mut prompt_b = prompt_a.clone();
+    for t in prompt_b[48..].iter_mut() {
+        *t = (*t % 50) + 7; // same first 48 tokens, different tail
+    }
+    let mk = |id: u64, tokens: &[i32]| Request {
+        id,
+        tokens: tokens.to_vec(),
+        max_new_tokens: 4,
+        dma: false,
+        ..Default::default()
+    };
+    let wa = router.submit(mk(1, &prompt_a)).unwrap();
+    assert_eq!(
+        router.collect_responses(1, std::time::Duration::from_secs(60)).len(),
+        1
+    );
+    let wb = router.submit(mk(2, &prompt_b)).unwrap();
+    assert_eq!(wa, wb, "shared prefix routed to a different worker");
+    assert_eq!(
+        router.collect_responses(1, std::time::Duration::from_secs(60)).len(),
+        1
+    );
+    // The worker publishes its hit gauge after the next scheduler pass.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while router.prefix_hit_tokens() == 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(router.prefix_hit_tokens(), 48, "B missed A's radix cache");
+    router.shutdown();
+}
 
 #[test]
 fn multi_worker_router_handles_fanout() {
