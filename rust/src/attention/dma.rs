@@ -19,12 +19,43 @@ use crate::mxfp::block::{fake_quant, fake_quant_scaled, Format, Granularity};
 use crate::mxfp::fused::DualQuantized;
 use crate::tensor::Tensor;
 
+/// Dot product blocked into four independent accumulator chains so the
+/// adds pipeline instead of serializing on one dependency chain (f32
+/// reassociation is deterministic — the same blocking always produces
+/// the same bits, and every kernel sharing this helper stays mutually
+/// bit-exact).
+#[inline]
+pub(crate) fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let n4 = n - n % 4;
+    let mut acc = [0f32; 4];
+    let mut i = 0;
+    while i < n4 {
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut tail = 0f32;
+    for j in n4..n {
+        tail += a[j] * b[j];
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
 /// Compute one `[rows, cols]` logit tile over decoded operands:
 /// `s[r, c] = q_dec[r] . k_tile[c]`, with causal masking against absolute
 /// positions (`q_pos0 + r` is the position of query row `r`, `col0 + c`
 /// the position of key column `c`). Shared by the contiguous DMA loop and
 /// the paged decode path ([`super::paged`]) so both produce bit-identical
 /// floating-point operation sequences.
+///
+/// Hot-path shape: the causal bound is hoisted to a per-row column limit
+/// (masked columns are bulk-filled, never branched per element) and the
+/// `d`-dot is unrolled into fixed-width accumulator blocks
+/// ([`dot_blocked`]).
 pub(crate) fn score_tile(
     q_dec: &[f32],
     rows: usize,
@@ -37,22 +68,21 @@ pub(crate) fn score_tile(
     s_tile: &mut [f32],
 ) {
     for r in 0..rows {
-        let limit = q_pos0 + r as i64;
         let qrow = &q_dec[r * d..(r + 1) * d];
-        for c in 0..cols {
-            let col = col0 + c;
-            if causal && col as i64 > limit {
-                s_tile[r * cols + c] = f32::NEG_INFINITY;
-            } else {
-                let krow = &k_tile[c * d..(c + 1) * d];
-                let mut acc = 0f32;
-                for (a, b) in qrow.iter().zip(krow) {
-                    acc += a * b;
-                }
-                // Base-2 logits: softmax scale folded into Q.
-                s_tile[r * cols + c] = acc;
-            }
+        let srow = &mut s_tile[r * cols..(r + 1) * cols];
+        // Per-row causal column limit: columns [0, c_end) are live, the
+        // rest are masked in one pass — no per-element branch.
+        let c_end = if causal {
+            let limit = q_pos0 + r as i64; // last visible absolute position
+            ((limit + 1 - col0 as i64).max(0) as usize).min(cols)
+        } else {
+            cols
+        };
+        for (c, sv) in srow[..c_end].iter_mut().enumerate() {
+            // Base-2 logits: softmax scale folded into Q.
+            *sv = dot_blocked(qrow, &k_tile[c * d..(c + 1) * d]);
         }
+        srow[c_end..].fill(f32::NEG_INFINITY);
     }
 }
 
@@ -272,6 +302,46 @@ mod tests {
 
     fn qkv(l: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
         (randn(vec![l, d], seed), randn(vec![l, d], seed + 1), randn(vec![l, d], seed + 2))
+    }
+
+    #[test]
+    fn score_tile_matches_naive_reference() {
+        // The blocked, hoisted-causal kernel vs a per-element oracle:
+        // masked cells are exactly -inf, live cells match an f64 dot to
+        // rounding noise. Covers fully-masked rows, partial limits,
+        // widths not a multiple of the accumulator block, non-causal.
+        let mut rng = Rng::new(77);
+        for &(rows, d, cols, col0, q_pos0, causal) in &[
+            (4usize, 32usize, 8usize, 0usize, 0i64, true),
+            (1, 64, 16, 16, 30, true),
+            (3, 48, 8, 240, 2, true), // every column masked
+            (2, 33, 5, 0, 100, true), // d % 4 != 0 tail
+            (2, 40, 7, 3, 0, false),
+        ] {
+            let q: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+            let k: Vec<f32> = (0..cols * d).map(|_| rng.normal() as f32).collect();
+            let mut fast = vec![0f32; rows * cols];
+            score_tile(&q, rows, d, &k, cols, q_pos0, col0, causal, &mut fast);
+            for r in 0..rows {
+                let limit = q_pos0 + r as i64;
+                for c in 0..cols {
+                    let got = fast[r * cols + c];
+                    if causal && (col0 + c) as i64 > limit {
+                        assert_eq!(got, f32::NEG_INFINITY, "r{r} c{c} not masked");
+                    } else {
+                        let mut acc = 0f64;
+                        for i in 0..d {
+                            acc += q[r * d + i] as f64 * k[c * d + i] as f64;
+                        }
+                        let expect = acc as f32;
+                        assert!(
+                            (got - expect).abs() <= 1e-4 * (1.0 + expect.abs()),
+                            "r{r} c{c}: {got} vs {expect}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@
 
 use super::dma::score_tile;
 use super::online_softmax::OnlineSoftmax;
-use crate::kvquant::{KvPolicy, Precision, QuantPagedKv};
+use crate::kvquant::{DecodedPageCache, KvPolicy, Precision, QuantPagedKv};
 use crate::metrics::KvPageStats;
 use crate::mxfp::block::Granularity;
 use crate::mxfp::fused::{dual_quant, DualQuantized};
@@ -44,7 +44,7 @@ pub fn dma_attention_paged(
     let len = k.len();
     assert!(len >= qq.rows, "cache len {len} < query rows {}", qq.rows);
     // Query row r sits at absolute position len - lq + r.
-    paged_attention_impl(qq, k, v, policy, (len - qq.rows) as i64, stats)
+    paged_attention_impl(qq, k, v, policy, (len - qq.rows) as i64, None, stats)
 }
 
 /// GQA decode variant: every row of `qq` is an independent query *head*
@@ -62,7 +62,26 @@ pub fn dma_attention_paged_heads(
     let len = k.len();
     assert!(len >= 1, "empty cache");
     // All rows share the frontier position: no key is ever masked.
-    paged_attention_impl(qq, k, v, policy, len as i64 - 1, stats)
+    paged_attention_impl(qq, k, v, policy, len as i64 - 1, None, stats)
+}
+
+/// [`dma_attention_paged_heads`] backed by a [`DecodedPageCache`]: full
+/// (immutable) K and V pages dequantize through the cache, so a steady
+/// decode re-dequantizes only the partial frontier page each token —
+/// O(frontier) instead of O(context). Bit-identical to the uncached
+/// call: cached tiles are produced by the same decoders from the same
+/// immutable bytes.
+pub fn dma_attention_paged_heads_cached(
+    qq: &DualQuantized,
+    k: &QuantPagedKv,
+    v: &QuantPagedKv,
+    policy: &KvPolicy,
+    cache: &mut DecodedPageCache,
+    stats: &mut KvPageStats,
+) -> Tensor {
+    let len = k.len();
+    assert!(len >= 1, "empty cache");
+    paged_attention_impl(qq, k, v, policy, len as i64 - 1, Some(cache), stats)
 }
 
 fn paged_attention_impl(
@@ -71,6 +90,7 @@ fn paged_attention_impl(
     v: &QuantPagedKv,
     policy: &KvPolicy,
     q_pos0: i64,
+    mut cache: Option<&mut DecodedPageCache>,
     stats: &mut KvPageStats,
 ) -> Tensor {
     let (lq, d) = (qq.rows, qq.d);
@@ -91,9 +111,11 @@ fn paged_attention_impl(
     let schedule = policy.page_precisions(len, pt);
 
     let mut os = OnlineSoftmax::new(lq, d, true);
-    // Hot-loop scratch: one page.
-    let mut k_tile = vec![0f32; pt * d];
-    let mut v_tile = vec![0f32; pt * d];
+    // Hot-loop scratch: one page. The decode tiles are lazy — with a
+    // warm cache and a page-aligned context every page is served from
+    // it and the buffers are never needed.
+    let mut k_tile: Vec<f32> = Vec::new();
+    let mut v_tile: Vec<f32> = Vec::new();
     let mut s_tile = vec![0f32; lq * pt];
     let mut scratch = vec![0f32; lq * pt];
 
@@ -101,15 +123,33 @@ fn paged_attention_impl(
         let (r0, r1) = k.page_rows(j);
         let cols = r1 - r0;
         let eff = k.effective(prec);
-        k.decode_rows(r0, r1, eff, &mut k_tile);
         match eff {
             Precision::High => stats.high_pages += 1,
             Precision::Low => stats.low_pages += 1,
         }
+        // Full pages are immutable: serve their decoded tiles from the
+        // cache when one is attached. The partial frontier page decodes
+        // fresh every step (it grows in place).
+        let k_dec: &[f32] = match cache.as_deref_mut() {
+            Some(c) if j < k.n_full_pages() => c.get_or_decode(k.page_arc(j), eff, stats),
+            _ => {
+                k_tile.resize(pt * d, 0.0);
+                k.decode_rows(r0, r1, eff, &mut k_tile);
+                &k_tile
+            }
+        };
         let q_dec = if eff == Precision::High { &q_high } else { &q_low };
-        score_tile(q_dec, lq, d, &k_tile, cols, q_pos0, r0, true, &mut s_tile);
-        v.decode_rows(r0, r1, Precision::High, &mut v_tile);
-        os.update(&s_tile[..lq * cols], &v_tile[..cols * d], cols, &mut scratch);
+        score_tile(q_dec, lq, d, k_dec, cols, q_pos0, r0, true, &mut s_tile);
+        let v_eff = v.effective(Precision::High);
+        let v_dec: &[f32] = match cache.as_deref_mut() {
+            Some(c) if j < v.n_full_pages() => c.get_or_decode(v.page_arc(j), v_eff, stats),
+            _ => {
+                v_tile.resize(pt * d, 0.0);
+                v.decode_rows(r0, r1, Precision::High, &mut v_tile);
+                &v_tile
+            }
+        };
+        os.update(&s_tile[..lq * cols], &v_dec[..cols * d], cols, &mut scratch);
     }
 
     let mut out = Tensor::zeros(vec![lq, d]);
@@ -320,6 +360,104 @@ mod tests {
     }
 
     #[test]
+    fn property_cached_attention_bit_identical_to_cold_decode() {
+        // Across random formats, policies, lengths and budgets: the
+        // cache-backed kernel must equal the cold kernel bit for bit —
+        // cold cache, warm cache, after evictions, and as the store
+        // grows (precision flips at the moving frontier included).
+        crate::util::prop::check("decoded-page cache bit-exact", 20, |rng| {
+            let d = 32 * (1 + rng.below(2) as usize);
+            let pt = *rng.choose(&[4usize, 8, 16]);
+            let fmt = *rng.choose(&[KvFormat::Dual, KvFormat::Mxfp8, KvFormat::Nvfp4]);
+            let policy = KvPolicy {
+                sink: *rng.choose(&[0usize, 8, 16]),
+                diag: *rng.choose(&[0usize, 8, 32]),
+            };
+            let n0 = pt * (2 + rng.below(4) as usize) + rng.below(pt as u64) as usize;
+            let n_rep = 1 + rng.below(4) as usize;
+            // Budget sometimes too small for everything -> evictions.
+            let budget = *rng.choose(&[256usize, 4096, 1 << 20]);
+            let mut k = QuantPagedKv::new(d, fmt, pt);
+            let mut v = QuantPagedKv::new(d, fmt, pt);
+            let seed = rng.below(1 << 30);
+            k.append_rows(&rows(n0, d, seed));
+            v.append_rows(&rows(n0, d, seed + 1));
+            let mut cache = crate::kvquant::DecodedPageCache::new(budget);
+            let mut s_cold = KvPageStats::default();
+            let mut s_warm = KvPageStats::default();
+            for step in 0..4 {
+                let q = rows(n_rep, d, seed + 10 + step);
+                let qq = dual_quant(&q, n_rep, d, true, Granularity::PerToken);
+                let cold = dma_attention_paged_heads(&qq, &k, &v, &policy, &mut s_cold);
+                let cached = dma_attention_paged_heads_cached(
+                    &qq, &k, &v, &policy, &mut cache, &mut s_warm);
+                crate::prop_assert!(
+                    cold.data == cached.data,
+                    "step {} diverged (fmt {:?} pt {} budget {})",
+                    step, fmt, pt, budget
+                );
+                crate::prop_assert!(
+                    cache.bytes() <= cache.budget_bytes(),
+                    "cache over budget: {} > {}",
+                    cache.bytes(), cache.budget_bytes()
+                );
+                // Grow the store so the frontier (and the diag window)
+                // moves between steps.
+                let g = rows(1, d, seed + 50 + step);
+                k.append_rows(&g);
+                v.append_rows(&g);
+            }
+            // Page-visit counters are identical with and without cache.
+            crate::prop_assert!(
+                (s_cold.high_pages, s_cold.low_pages) == (s_warm.high_pages, s_warm.low_pages),
+                "visit counters diverged: {s_cold:?} vs {s_warm:?}"
+            );
+            crate::prop_assert!(
+                s_warm.cache_hits + s_warm.cache_misses > 0,
+                "cache never consulted"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cached_decode_amortizes_to_frontier_only() {
+        // Steady-state decode over a page-aligned prefix: after the
+        // first (cold) step, every full K and V page hits; only the
+        // growing frontier page misses.
+        let (n, d, pt) = (64usize, 32usize, 8usize);
+        let k0 = filled(n, d, KvFormat::Dual, pt, 70);
+        let v0 = filled(n, d, KvFormat::Dual, pt, 71);
+        let (mut k, mut v) = (k0.fork(), v0.fork());
+        let policy = KvPolicy { sink: 8, diag: 16 };
+        let mut cache = crate::kvquant::DecodedPageCache::new(1 << 20);
+        let mut stats = KvPageStats::default();
+        let step = |k: &QuantPagedKv, v: &QuantPagedKv,
+                    cache: &mut crate::kvquant::DecodedPageCache,
+                    stats: &mut KvPageStats, seed: u64| {
+            let q = rows(2, d, seed);
+            let qq = dual_quant(&q, 2, d, true, Granularity::PerToken);
+            dma_attention_paged_heads_cached(&qq, k, v, &policy, cache, stats)
+        };
+        step(&k, &v, &mut cache, &mut stats, 100);
+        assert_eq!(stats.cache_hits, 0, "cold step cannot hit");
+        assert_eq!(stats.cache_misses, 2 * (n / pt) as u64); // K + V pages
+        // Second step, same geometry: all full pages hit.
+        let cold_misses = stats.cache_misses;
+        step(&k, &v, &mut cache, &mut stats, 101);
+        assert_eq!(stats.cache_misses, cold_misses, "warm step re-decoded a full page");
+        assert_eq!(stats.cache_hits, 2 * (n / pt) as u64);
+        // Growing a partial frontier page: it misses, full pages hit.
+        k.append_rows(&rows(1, d, 102));
+        v.append_rows(&rows(1, d, 102));
+        let (h0, m0) = (stats.cache_hits, stats.cache_misses);
+        step(&k, &v, &mut cache, &mut stats, 103);
+        assert_eq!(stats.cache_hits - h0, 2 * (n / pt) as u64);
+        assert_eq!(stats.cache_misses, m0, "partial frontier page must bypass the cache");
+        assert_eq!(stats.cache_evictions, 0);
+    }
+
+    #[test]
     fn page_hit_counters_follow_policy() {
         let (n, d, pt) = (64usize, 32usize, 8usize);
         let k = filled(n, d, KvFormat::Dual, pt, 3);
@@ -329,7 +467,7 @@ mod tests {
         let mut stats = KvPageStats::default();
         dma_attention_paged(&qq, &k, &v, &KvPolicy { sink: 8, diag: 16 }, &mut stats);
         // 1 sink page + 2 frontier pages high, 5 body pages low.
-        assert_eq!(stats, KvPageStats { high_pages: 3, low_pages: 5 });
+        assert_eq!(stats, KvPageStats { high_pages: 3, low_pages: 5, ..Default::default() });
         assert!((stats.high_fraction() - 3.0 / 8.0).abs() < 1e-12);
     }
 
@@ -563,13 +701,13 @@ mod tests {
         let (q, kc, vc) = mk(2, 70);
         let mut s_near = KvPageStats::default();
         dma_attention_prefill_chunk(&q, &kc, &vc, &k, &v, &policy, &mut s_near);
-        assert_eq!(s_near, KvPageStats { high_pages: 2, low_pages: 2 });
+        assert_eq!(s_near, KvPageStats { high_pages: 2, low_pages: 2, ..Default::default() });
         // Long chunk (frontier 47): the window no longer reaches the
         // prefix at all — only the sink page decodes high.
         let (q, kc, vc) = mk(16, 80);
         let mut s_far = KvPageStats::default();
         dma_attention_prefill_chunk(&q, &kc, &vc, &k, &v, &policy, &mut s_far);
-        assert_eq!(s_far, KvPageStats { high_pages: 1, low_pages: 3 });
+        assert_eq!(s_far, KvPageStats { high_pages: 1, low_pages: 3, ..Default::default() });
     }
 
     #[test]

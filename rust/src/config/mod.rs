@@ -210,6 +210,19 @@ pub struct EngineConfig {
     /// NVFP4-low). One entry broadcasts to every layer; otherwise one
     /// entry per layer (`--kv-policy l0:S/D;l1:S/D;...`).
     pub kv_precision_policies: Vec<crate::kvquant::KvPolicy>,
+    /// Intra-step worker threads (`--threads`): the backend fans the
+    /// batched decode across sequences and the model fans each layer's
+    /// kv-head attention loop, all into disjoint output buffers — token
+    /// streams are identical at any thread count. 1 = fully serial.
+    pub threads: usize,
+    /// Per-slot byte budget for decoded-page f32 tiles
+    /// (`--decoded-cache-mb`): immutable quantized pages dequantize once
+    /// and are reused every decode step until evicted LRU. 0 disables
+    /// the cache (over-budget tiles decode into a reused scratch slot).
+    /// This memory sits *outside* the BlockPool's quantized-byte
+    /// admission budget — plan for up to `decode slots x this budget`
+    /// extra resident bytes (it is included in `kv_bytes_peak`).
+    pub decoded_cache_bytes: usize,
 }
 
 impl Default for EngineConfig {
@@ -225,6 +238,8 @@ impl Default for EngineConfig {
             prefix_cache: false,
             kv_format: crate::kvquant::KvFormat::F32,
             kv_precision_policies: vec![crate::kvquant::KvPolicy::default()],
+            threads: 1,
+            decoded_cache_bytes: crate::kvquant::DECODED_CACHE_BYTES,
         }
     }
 }
@@ -329,5 +344,7 @@ mod tests {
         assert_eq!(cfg.kv_precision_policies[0].diag, 128);
         assert!(!cfg.prefix_cache);
         assert!(cfg.prefill_chunk > 0);
+        assert_eq!(cfg.threads, 1);
+        assert_eq!(cfg.decoded_cache_bytes, crate::kvquant::DECODED_CACHE_BYTES);
     }
 }

@@ -149,7 +149,10 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(backend: Box<dyn ModelBackend>, cfg: EngineConfig, eos_token: i32) -> Engine {
+    pub fn new(mut backend: Box<dyn ModelBackend>, cfg: EngineConfig, eos_token: i32) -> Engine {
+        // Perf knobs: intra-step worker threads and the decoded-page
+        // cache budget (ignored by backends without those mechanisms).
+        backend.set_perf(cfg.threads, cfg.decoded_cache_bytes);
         let max_slots = backend.decode_buckets().into_iter().max().unwrap_or(1);
         // Format-aware KV accounting: the physical budget is what the f32
         // slots would occupy (max_slots full-length caches); cheaper
@@ -736,6 +739,8 @@ pub struct EngineHandle {
     load: std::sync::Arc<std::sync::atomic::AtomicUsize>,
     prefix_hit_tokens: std::sync::Arc<std::sync::atomic::AtomicU64>,
     kv_bytes_in_use: std::sync::Arc<std::sync::atomic::AtomicU64>,
+    decoded_cache_hits: std::sync::Arc<std::sync::atomic::AtomicU64>,
+    decoded_cache_misses: std::sync::Arc<std::sync::atomic::AtomicU64>,
     kv_format: &'static str,
     kv_policy: String,
 }
@@ -757,6 +762,10 @@ impl EngineHandle {
         let pht2 = prefix_hit_tokens.clone();
         let kv_bytes_in_use = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
         let kvb2 = kv_bytes_in_use.clone();
+        let decoded_cache_hits = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let dch2 = decoded_cache_hits.clone();
+        let decoded_cache_misses = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let dcm2 = decoded_cache_misses.clone();
         let join = std::thread::spawn(move || {
             let backend = match make_backend() {
                 Ok(b) => b,
@@ -833,6 +842,14 @@ impl EngineHandle {
                     engine.kv_bytes_in_use() as u64,
                     std::sync::atomic::Ordering::Relaxed,
                 );
+                dch2.store(
+                    engine.stats.kv_pages.cache_hits,
+                    std::sync::atomic::Ordering::Relaxed,
+                );
+                dcm2.store(
+                    engine.stats.kv_pages.cache_misses,
+                    std::sync::atomic::Ordering::Relaxed,
+                );
             }
         });
         EngineHandle {
@@ -842,6 +859,8 @@ impl EngineHandle {
             load,
             prefix_hit_tokens,
             kv_bytes_in_use,
+            decoded_cache_hits,
+            decoded_cache_misses,
             kv_format,
             kv_policy,
         }
@@ -887,6 +906,19 @@ impl EngineHandle {
     /// each scheduler step).
     pub fn kv_bytes_in_use(&self) -> u64 {
         self.kv_bytes_in_use
+            .load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Cumulative decoded-page cache hits on this worker (page decodes
+    /// served without re-dequantizing).
+    pub fn decoded_cache_hits(&self) -> u64 {
+        self.decoded_cache_hits
+            .load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Cumulative decoded-page cache misses on this worker.
+    pub fn decoded_cache_misses(&self) -> u64 {
+        self.decoded_cache_misses
             .load(std::sync::atomic::Ordering::Relaxed)
     }
 
@@ -1227,6 +1259,46 @@ mod tests {
             assert!(e.stats.kv_bytes_per_token < e.stats.kv_f32_bytes_per_token);
             assert!(e.stats.kv_pages.total() > 0, "{format:?}");
             assert!(e.stats.kv_bytes_peak > 0, "{format:?}");
+        }
+    }
+
+    #[test]
+    fn threads_do_not_change_token_streams() {
+        // The --threads determinism contract: a multi-request workload
+        // (greedy and seeded-sampled, f32 and quantized caches) produces
+        // the identical per-request token streams at 1 and 4 threads.
+        for format in [KvFormat::F32, KvFormat::Dual] {
+            let run = |threads: usize| {
+                let cfg = EngineConfig {
+                    max_new_tokens: 8,
+                    kv_format: format,
+                    kv_precision_policies: vec![crate::kvquant::KvPolicy {
+                        sink: 16,
+                        diag: 16,
+                    }],
+                    threads,
+                    ..Default::default()
+                };
+                let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+                for i in 0..6u64 {
+                    let mut r = req(i, 4 + i as usize, 8);
+                    if i % 2 == 1 {
+                        r.sampling = SamplingParams {
+                            temperature: 0.8,
+                            seed: 42 + i,
+                            ..Default::default()
+                        };
+                        r.sampling.ignore_eos = true;
+                    }
+                    assert!(e.submit(r).is_none());
+                }
+                let mut resps = e.run_until_idle().unwrap();
+                resps.sort_by_key(|r| r.id);
+                resps.into_iter().map(|r| r.output).collect::<Vec<_>>()
+            };
+            let serial = run(1);
+            let threaded = run(4);
+            assert_eq!(serial, threaded, "{format:?} token streams diverged");
         }
     }
 

@@ -106,6 +106,16 @@ impl Router {
         self.workers.iter().map(EngineHandle::kv_bytes_in_use).sum()
     }
 
+    /// Decoded-page cache hits across all workers.
+    pub fn decoded_cache_hits(&self) -> u64 {
+        self.workers.iter().map(EngineHandle::decoded_cache_hits).sum()
+    }
+
+    /// Decoded-page cache misses across all workers.
+    pub fn decoded_cache_misses(&self) -> u64 {
+        self.workers.iter().map(EngineHandle::decoded_cache_misses).sum()
+    }
+
     /// Pick a worker index without request context (prefix-affinity
     /// falls back to round-robin here — use [`Router::pick_for`]).
     pub fn pick(&self) -> usize {

@@ -369,7 +369,11 @@ impl SeqKv {
     pub fn resident_bytes(&self) -> usize {
         match self {
             SeqKv::F32(s) => (s.k.len() + s.v.len()) * 4,
-            SeqKv::Quant(s) => s.quantized_bytes(),
+            // Quantized payload plus the slot's decoded-page tiles —
+            // the cache is real memory the sequence holds, bounded by
+            // its byte budget but outside the BlockPool's quantized-byte
+            // admission accounting.
+            SeqKv::Quant(s) => s.quantized_bytes() + s.decoded_bytes(),
         }
     }
 

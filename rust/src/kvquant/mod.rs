@@ -131,7 +131,7 @@ impl std::str::FromStr for KvFormat {
 }
 
 /// Decode precision of one cache page.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Precision {
     High,
     Low,
@@ -482,6 +482,184 @@ impl QuantPagedKv {
 }
 
 // ---------------------------------------------------------------------
+// Decoded-page cache
+// ---------------------------------------------------------------------
+
+/// Default per-slot byte budget for decoded-page tiles (f32 payload).
+pub const DECODED_CACHE_BYTES: usize = 32 << 20;
+
+/// Byte-budgeted LRU cache of dequantized page tiles.
+///
+/// Full pages in [`QuantPagedKv`] are immutable and `Arc`-shared, yet the
+/// decode hot path
+/// ([`crate::attention::paged::dma_attention_paged_heads`]) used to
+/// re-dequantize every one of them each token. This cache keys decoded
+/// `[page_tokens, d]` f32 tiles by `(page identity, precision)` so a
+/// page dequantizes once per precision and is then reused every step —
+/// per-token dequant cost drops from O(context) to O(frontier)
+/// amortized.
+///
+/// * **Identity** is the page's `Arc` pointer; each entry pins its page
+///   with an `Arc` clone so the address can never be recycled while the
+///   entry lives (no ABA), and shared/radix pages hit without any
+///   token-content hashing.
+/// * **Precision flips invalidate naturally**: the position-aware policy
+///   moving a page from the frontier window (High) into the body (Low)
+///   simply misses under the new key; the stale entry ages out LRU.
+/// * **Budget** covers the decoded f32 payload; inserting past it evicts
+///   least-recently-used tiles first. A tile larger than the whole
+///   budget is decoded into a scratch slot and not retained.
+///
+/// Hit/miss/evict counters accumulate into the [`KvPageStats`] the
+/// caller threads through attention, surfacing in engine stats and the
+/// server's `/stats`.
+pub struct DecodedPageCache {
+    budget: usize,
+    bytes: usize,
+    tick: u64,
+    map: std::collections::HashMap<(usize, Precision), DecodedEntry>,
+    /// Landing slot for over-budget tiles (kept out of the map).
+    scratch: Vec<f32>,
+}
+
+struct DecodedEntry {
+    /// Pins the page so its address cannot be reused while cached.
+    _pin: Arc<DualQuantized>,
+    data: Vec<f32>,
+    last_used: u64,
+}
+
+impl DecodedPageCache {
+    pub fn new(budget_bytes: usize) -> DecodedPageCache {
+        DecodedPageCache {
+            budget: budget_bytes,
+            bytes: 0,
+            tick: 0,
+            map: std::collections::HashMap::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Decoded f32 bytes currently resident.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Cached tiles currently resident.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Replace the byte budget (evicts immediately if shrinking below
+    /// the resident size; those forced evictions are not reflected in
+    /// any surfaced `cache_evictions` counter — budgets are normally set
+    /// on cold caches).
+    pub fn set_budget(&mut self, budget_bytes: usize) {
+        self.budget = budget_bytes;
+        let mut stats = crate::metrics::KvPageStats::default();
+        self.evict_to_fit(0, true, &mut stats);
+    }
+
+    /// Try to make room for `incoming` bytes; returns whether they fit.
+    ///
+    /// Eviction policy: reclaim least-recently-used entries, but (unless
+    /// `force`) only ones that have sat unused for several full sweeps
+    /// of the resident set. The decode path visits pages cyclically, so
+    /// a *hot* LRU candidate means the working set simply exceeds the
+    /// budget — under plain LRU every tile would then be evicted right
+    /// before its next reuse (0% hits plus eviction churn). Refusing to
+    /// evict keeps a stable resident subset (hit rate ≈ capacity /
+    /// working set) and the caller serves the overflow from its scratch
+    /// slot; genuinely stale entries (e.g. High tiles orphaned by a
+    /// precision flip) age past the threshold and are reclaimed.
+    fn evict_to_fit(
+        &mut self,
+        incoming: usize,
+        force: bool,
+        stats: &mut crate::metrics::KvPageStats,
+    ) -> bool {
+        while self.bytes + incoming > self.budget && !self.map.is_empty() {
+            let (lru, age) = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, e)| (*k, self.tick.saturating_sub(e.last_used)))
+                .unwrap();
+            if !force && age <= self.map.len() as u64 * 8 + 64 {
+                return false;
+            }
+            let e = self.map.remove(&lru).unwrap();
+            self.bytes -= e.data.len() * 4;
+            stats.cache_evictions += 1;
+        }
+        self.bytes + incoming <= self.budget
+    }
+
+    /// The decoded `[page.rows, d]` tile of `page` at `prec` — served
+    /// from the cache when present (bit-identical to a fresh decode: the
+    /// tile was produced by the same decoder from the same immutable
+    /// bytes), dequantized and retained otherwise. `prec` must already be
+    /// clamped to the retained copies ([`QuantPagedKv::effective`]).
+    pub fn get_or_decode(
+        &mut self,
+        page: &Arc<DualQuantized>,
+        prec: Precision,
+        stats: &mut crate::metrics::KvPageStats,
+    ) -> &[f32] {
+        self.tick += 1;
+        let key = (Arc::as_ptr(page) as usize, prec);
+        // Both exits below re-index the map once more instead of
+        // returning straight from this borrow: an early `return &e.data`
+        // would pin the `get_mut` borrow for the function's output
+        // lifetime across the insert on the other path, which stock NLL
+        // rejects (the classic Polonius case). One extra hash of a
+        // 16-byte key per visit is noise next to the page's score work.
+        if let Some(e) = self.map.get_mut(&key) {
+            stats.cache_hits += 1;
+            e.last_used = self.tick;
+        } else {
+            stats.cache_misses += 1;
+            let n = page.rows * page.d;
+            let bytes = n * 4;
+            // Decide placement before decoding so the no-room path never
+            // allocates: an over-budget tile (including the budget-0
+            // "cache off" mode) or a full cache with a hot working set
+            // decodes into the reused scratch slot, exactly like the
+            // uncached kernel.
+            let fits = bytes <= self.budget && self.evict_to_fit(bytes, false, stats);
+            if !fits {
+                self.scratch.resize(n, 0.0);
+                let dst = &mut self.scratch[..n];
+                match prec {
+                    Precision::High => page.decode_high_rows(0, page.rows, dst),
+                    Precision::Low => page.decode_low_rows(0, page.rows, dst),
+                }
+                return &self.scratch[..n];
+            }
+            let mut data = vec![0f32; n];
+            match prec {
+                Precision::High => page.decode_high_rows(0, page.rows, &mut data),
+                Precision::Low => page.decode_low_rows(0, page.rows, &mut data),
+            }
+            self.bytes += bytes;
+            self.map.insert(
+                key,
+                DecodedEntry { _pin: page.clone(), data, last_used: self.tick },
+            );
+        }
+        &self.map[&key].data
+    }
+}
+
+// ---------------------------------------------------------------------
 // Per-sequence quantized slot
 // ---------------------------------------------------------------------
 
@@ -494,6 +672,11 @@ pub struct QuantSlotKv {
     pub k: Vec<Vec<QuantPagedKv>>,
     /// `[n_layers][n_kv_heads]` value stores.
     pub v: Vec<Vec<QuantPagedKv>>,
+    /// `[n_layers][n_kv_heads]` decoded-page caches (each serves its
+    /// (layer, head)'s K *and* V stores — keys are page identities, so
+    /// the two stores never collide). Per-head so the decode step's
+    /// kv-head fan-out owns disjoint caches without locking.
+    pub decoded: Vec<Vec<DecodedPageCache>>,
     /// Cached tokens (equal to every store's `len`).
     pub pos: usize,
 }
@@ -514,7 +697,20 @@ impl QuantSlotKv {
                 })
                 .collect()
         };
-        QuantSlotKv { k: mk(), v: mk(), cfg, pos: 0 }
+        let per_store = DECODED_CACHE_BYTES / (n_layers * n_kv_heads).max(1);
+        let decoded = (0..n_layers)
+            .map(|_| (0..n_kv_heads).map(|_| DecodedPageCache::new(per_store)).collect())
+            .collect();
+        QuantSlotKv { k: mk(), v: mk(), decoded, cfg, pos: 0 }
+    }
+
+    /// Re-budget the decoded-page caches: `total_bytes` is the whole
+    /// slot's budget, split evenly across the (layer, head) caches.
+    pub fn set_decoded_budget(&mut self, total_bytes: usize) {
+        let n = (self.decoded.len() * self.decoded.first().map_or(1, Vec::len)).max(1);
+        for c in self.decoded.iter_mut().flatten() {
+            c.set_budget(total_bytes / n);
+        }
     }
 
     /// Per-layer precision policy (broadcast when uniform).
@@ -542,12 +738,27 @@ impl QuantSlotKv {
     }
 
     /// O(pages) fork of the whole slot: full pages shared, frontier pages
-    /// copy-on-write.
+    /// copy-on-write. The fork starts with empty decoded-page caches
+    /// (same budgets) — decoded tiles are derived state it rebuilds on
+    /// demand.
     pub fn fork(&self) -> QuantSlotKv {
         let fk = |s: &Vec<Vec<QuantPagedKv>>| {
             s.iter().map(|hs| hs.iter().map(QuantPagedKv::fork).collect()).collect()
         };
-        QuantSlotKv { cfg: self.cfg.clone(), k: fk(&self.k), v: fk(&self.v), pos: self.pos }
+        let decoded = self
+            .decoded
+            .iter()
+            .map(|row| {
+                row.iter().map(|c| DecodedPageCache::new(c.budget_bytes())).collect()
+            })
+            .collect();
+        QuantSlotKv {
+            cfg: self.cfg.clone(),
+            k: fk(&self.k),
+            v: fk(&self.v),
+            decoded,
+            pos: self.pos,
+        }
     }
 
     /// Append one token's K/V rows for `(layer, head)`. The caller bumps
@@ -564,6 +775,13 @@ impl QuantSlotKv {
             s.iter().flatten().map(QuantPagedKv::quantized_bytes).sum()
         };
         sum(&self.k) + sum(&self.v)
+    }
+
+    /// Resident f32 bytes of the slot's decoded-page caches (bounded by
+    /// the configured budget; folded into [`crate::kvcache::SeqKv`]'s
+    /// resident accounting so `kv_bytes_peak` reflects it).
+    pub fn decoded_bytes(&self) -> usize {
+        self.decoded.iter().flatten().map(DecodedPageCache::bytes).sum()
     }
 }
 
@@ -822,6 +1040,112 @@ mod tests {
         assert_eq!(s.n_full_pages(), 2);
         assert_eq!(s.page_rows(0), (0, 8));
         assert_eq!(s.page_rows(2), (16, 19));
+    }
+
+    #[test]
+    fn decoded_cache_hits_are_bit_identical_and_counted() {
+        let (d, pt) = (32usize, 8usize);
+        let mut s = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        s.append_rows(&rows(24, d, 31));
+        let mut cache = DecodedPageCache::new(1 << 20);
+        let mut stats = crate::metrics::KvPageStats::default();
+        for prec in [Precision::High, Precision::Low] {
+            for j in 0..s.n_full_pages() {
+                let mut direct = vec![0f32; pt * d];
+                s.decode_rows(j * pt, (j + 1) * pt, prec, &mut direct);
+                let cold = cache.get_or_decode(s.page_arc(j), prec, &mut stats).to_vec();
+                let warm = cache.get_or_decode(s.page_arc(j), prec, &mut stats).to_vec();
+                assert_eq!(cold, direct, "page {j} {prec:?} cold");
+                assert_eq!(warm, direct, "page {j} {prec:?} warm");
+            }
+        }
+        // 3 pages x 2 precisions: each decoded once, then hit once.
+        assert_eq!(stats.cache_misses, 6);
+        assert_eq!(stats.cache_hits, 6);
+        assert_eq!(stats.cache_evictions, 0);
+        assert_eq!(cache.len(), 6);
+        assert_eq!(cache.bytes(), 6 * pt * d * 4);
+        assert!((stats.cache_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decoded_cache_respects_byte_budget_lru() {
+        let (d, pt) = (32usize, 8usize);
+        let tile = pt * d * 4;
+        let mut s = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        s.append_rows(&rows(4 * pt, d, 32));
+        // Room for exactly two tiles: a 4-tile cyclic working set must
+        // NOT thrash — the first two tiles stay resident, the rest are
+        // served from scratch (no churn, budget always respected).
+        let mut cache = DecodedPageCache::new(2 * tile);
+        let mut stats = crate::metrics::KvPageStats::default();
+        for _round in 0..3 {
+            for j in 0..4 {
+                cache.get_or_decode(s.page_arc(j), Precision::High, &mut stats);
+                assert!(cache.bytes() <= cache.budget_bytes(), "page {j}");
+            }
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(stats.cache_evictions, 0, "hot working set must not churn");
+        // Pages 0 and 1 are resident (hits); 2 and 3 scratch-miss.
+        let h0 = stats.cache_hits;
+        cache.get_or_decode(s.page_arc(0), Precision::High, &mut stats);
+        cache.get_or_decode(s.page_arc(1), Precision::High, &mut stats);
+        assert_eq!(stats.cache_hits, h0 + 2);
+        let m0 = stats.cache_misses;
+        cache.get_or_decode(s.page_arc(2), Precision::High, &mut stats);
+        assert_eq!(stats.cache_misses, m0 + 1);
+        // A resident tile that goes genuinely stale (e.g. orphaned by a
+        // precision flip) ages past the guard and is reclaimed.
+        for _ in 0..200 {
+            cache.get_or_decode(s.page_arc(0), Precision::High, &mut stats);
+        }
+        let e0 = stats.cache_evictions;
+        cache.get_or_decode(s.page_arc(2), Precision::High, &mut stats);
+        assert_eq!(stats.cache_evictions, e0 + 1, "stale page 1 reclaimed");
+        assert_eq!(cache.len(), 2);
+        let h1 = stats.cache_hits;
+        cache.get_or_decode(s.page_arc(2), Precision::High, &mut stats);
+        assert_eq!(stats.cache_hits, h1 + 1, "page 2 now resident");
+        // Shrinking the budget evicts immediately (forced).
+        cache.set_budget(tile);
+        assert!(cache.bytes() <= tile);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn decoded_cache_oversized_tile_is_not_retained() {
+        let (d, pt) = (32usize, 8usize);
+        let mut s = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        s.append_rows(&rows(pt, d, 33));
+        let mut cache = DecodedPageCache::new(16); // smaller than any tile
+        let mut stats = crate::metrics::KvPageStats::default();
+        let mut direct = vec![0f32; pt * d];
+        s.decode_rows(0, pt, Precision::Low, &mut direct);
+        let got = cache.get_or_decode(s.page_arc(0), Precision::Low, &mut stats).to_vec();
+        assert_eq!(got, direct);
+        assert!(cache.is_empty());
+        assert_eq!(cache.bytes(), 0);
+        assert_eq!(stats.cache_misses, 1);
+    }
+
+    #[test]
+    fn slot_decoded_budget_splits_across_stores() {
+        let cfg = KvQuantConfig::new(KvFormat::Dual, KvPolicy::default());
+        let mut q = QuantSlotKv::new(cfg, 2, 2, 32);
+        q.set_decoded_budget(4096);
+        for c in q.decoded.iter().flatten() {
+            assert_eq!(c.budget_bytes(), 1024);
+        }
+        // Forks inherit budgets but start cold.
+        q.set_decoded_budget(4 * 8192);
+        let mut stats = crate::metrics::KvPageStats::default();
+        q.k[0][0].append_rows(&rows(16, 32, 40));
+        q.decoded[0][0].get_or_decode(q.k[0][0].page_arc(0), Precision::High, &mut stats);
+        assert_eq!(q.decoded[0][0].len(), 1);
+        let f = q.fork();
+        assert_eq!(f.decoded[0][0].budget_bytes(), 8192);
+        assert!(f.decoded[0][0].is_empty());
     }
 
     #[test]

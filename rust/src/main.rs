@@ -24,6 +24,7 @@ fn usage() -> ! {
          [--kv-format f32|mxfp8-high|nvfp4-low|dual] \
          [--kv-policy SINK/DIAG | l0:S/D;l1:S/D;...] \
          [--prefill-chunk TOKENS] [--prefix-cache] \
+         [--threads N] [--decoded-cache-mb MB] \
          [--route round-robin|least-loaded|prefix-affinity]"
     );
     std::process::exit(2);
@@ -87,6 +88,10 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
             None => vec![dma::kvquant::KvPolicy::default()],
         },
     };
+    let threads = args.usize_or("threads", 1).max(1);
+    let decoded_cache_bytes = args
+        .usize_or("decoded-cache-mb", dma::kvquant::DECODED_CACHE_BYTES >> 20)
+        << 20;
     let cfg = EngineConfig {
         artifact_dir: artifacts.clone().into(),
         max_new_tokens: args.usize_or("max-new-tokens", 32),
@@ -94,6 +99,8 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         prefix_cache,
         kv_format,
         kv_precision_policies,
+        threads,
+        decoded_cache_bytes,
         ..Default::default()
     };
     let policy = match args.get_or("route", "least-loaded").as_str() {
@@ -117,13 +124,15 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
     let stop = Arc::new(AtomicBool::new(false));
     println!(
         "dma: serving on {addr} ({} worker(s), route {}, kv cache {}, policy {}, \
-         prefill chunk {}, prefix cache {})",
+         prefill chunk {}, prefix cache {}, threads {}, decoded cache {} MiB)",
         workers,
         policy.name(),
         cfg.kv_format.name(),
         dma::kvquant::KvPolicy::format_layers(&cfg.kv_precision_policies),
         cfg.prefill_chunk,
-        if cfg.prefix_cache { "on" } else { "off" }
+        if cfg.prefix_cache { "on" } else { "off" },
+        cfg.threads,
+        cfg.decoded_cache_bytes >> 20
     );
     dma::server::serve(&addr, router, stop, |a| println!("dma: bound {a}"))
 }

@@ -84,11 +84,25 @@ pub fn similarity(reference: &[f32], quantized: &[f32]) -> SimilarityRow {
 
 /// Per-precision page-decode counters for the quantized paged KV cache:
 /// how many cache pages were dequantized MXFP8-high vs NVFP4-low during
-/// decode attention. Reported by the engine alongside cache bytes.
+/// decode attention, plus the decoded-page cache's hit/miss/evict
+/// counters ([`crate::kvquant::DecodedPageCache`]). `high_pages` /
+/// `low_pages` count page *visits* at each precision (the schedule the
+/// policy produced); a visit served from the decoded-page cache also
+/// counts a `cache_hits`, one that had to dequantize counts
+/// `cache_misses`. Reported by the engine alongside cache bytes.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct KvPageStats {
     pub high_pages: u64,
     pub low_pages: u64,
+    /// Page decodes served from the decoded-page cache (dequant skipped).
+    pub cache_hits: u64,
+    /// Cache-eligible page decodes that went through the dequantizer
+    /// (cold tiles, or tiles the budget would not admit). Partial
+    /// frontier pages bypass the cache entirely and are counted in
+    /// neither `cache_hits` nor `cache_misses`.
+    pub cache_misses: u64,
+    /// Decoded tiles dropped to stay inside the cache's byte budget.
+    pub cache_evictions: u64,
 }
 
 impl KvPageStats {
@@ -106,9 +120,22 @@ impl KvPageStats {
         }
     }
 
+    /// Decoded-page cache hit rate over all cache-eligible page decodes.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let n = self.cache_hits + self.cache_misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / n as f64
+        }
+    }
+
     pub fn merge(&mut self, other: KvPageStats) {
         self.high_pages += other.high_pages;
         self.low_pages += other.low_pages;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.cache_evictions += other.cache_evictions;
     }
 }
 
@@ -186,10 +213,19 @@ mod tests {
         let mut s = KvPageStats::default();
         assert_eq!(s.total(), 0);
         assert_eq!(s.high_fraction(), 0.0);
-        s.merge(KvPageStats { high_pages: 3, low_pages: 5 });
-        s.merge(KvPageStats { high_pages: 1, low_pages: 7 });
+        assert_eq!(s.cache_hit_rate(), 0.0);
+        s.merge(KvPageStats { high_pages: 3, low_pages: 5, ..Default::default() });
+        s.merge(KvPageStats {
+            high_pages: 1,
+            low_pages: 7,
+            cache_hits: 6,
+            cache_misses: 2,
+            cache_evictions: 1,
+        });
         assert_eq!(s.total(), 16);
         assert!((s.high_fraction() - 0.25).abs() < 1e-12);
+        assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(s.cache_evictions, 1);
     }
 
     #[test]

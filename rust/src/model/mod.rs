@@ -36,6 +36,10 @@ struct LayerW<'a> {
 pub struct CpuModel {
     pub cfg: ModelConfig,
     pub weights: Weights,
+    /// Worker threads for the decode step's per-kv-head attention
+    /// fan-out (1 = serial; outputs land in disjoint buffers, so the
+    /// results are identical at any thread count).
+    pub threads: usize,
 }
 
 /// Destination cache of one prefill chunk: the exact f32 working state or
@@ -64,6 +68,47 @@ impl ChunkTarget<'_> {
             ChunkTarget::Quant(kv, _) => kv.pos += n,
         }
     }
+}
+
+/// KV store of one decode step — the f32 working cache or the quantized
+/// paged slot (with its page-decode stats) — for the shared layer body
+/// [`CpuModel::decode_step_impl`]. The decode analogue of
+/// [`ChunkTarget`].
+enum DecodeKv<'a> {
+    F32(&'a mut KvState),
+    Quant(
+        &'a mut crate::kvquant::QuantSlotKv,
+        &'a mut crate::metrics::KvPageStats,
+    ),
+}
+
+impl DecodeKv<'_> {
+    fn pos(&self) -> usize {
+        match self {
+            DecodeKv::F32(kv) => kv.len,
+            DecodeKv::Quant(kv, _) => kv.pos,
+        }
+    }
+
+    fn advance_token(&mut self) {
+        match self {
+            DecodeKv::F32(kv) => kv.len += 1,
+            DecodeKv::Quant(kv, _) => kv.pos += 1,
+        }
+    }
+}
+
+/// Work item of the paged decode's kv-head fan-out: one head group's
+/// disjoint output slice, its (shared) stores, its own decoded-page
+/// cache, and a local stats accumulator merged after the parallel
+/// section so counters stay deterministic.
+struct QuantHeadWork<'a> {
+    hkv: usize,
+    out: &'a mut [f32],
+    cache: &'a mut crate::kvquant::DecodedPageCache,
+    k: &'a crate::kvquant::QuantPagedKv,
+    v: &'a crate::kvquant::QuantPagedKv,
+    stats: crate::metrics::KvPageStats,
 }
 
 /// KV cache for one sequence: `[n_layers][n_kv_heads][cap, d_head]`
@@ -102,7 +147,13 @@ impl CpuModel {
             cfg.vocab,
             cfg.d_model
         );
-        Ok(CpuModel { cfg, weights })
+        Ok(CpuModel { cfg, weights, threads: 1 })
+    }
+
+    /// Builder-style thread-count override (see [`Self::threads`]).
+    pub fn with_threads(mut self, threads: usize) -> CpuModel {
+        self.threads = threads.max(1);
+        self
     }
 
     fn layer(&self, li: usize) -> crate::Result<LayerW<'_>> {
@@ -429,113 +480,82 @@ impl CpuModel {
     // ------------------------------------------------------------------
 
     /// One decode step at position `kv.len`; appends to the cache and
-    /// returns logits [vocab].
+    /// returns logits [vocab]. Shares its layer body with
+    /// [`Self::decode_step_paged`] via [`Self::decode_step_impl`].
     pub fn decode_step(&self, token: i32, kv: &mut KvState) -> crate::Result<Vec<f32>> {
-        let cfg = &self.cfg;
-        let pos = kv.len;
-        anyhow::ensure!(pos < kv.cap, "cache full ({pos}/{})", kv.cap);
-        let embed = self.weights.get("embed")?;
-        let mut x: Vec<f32> =
-            embed.data[token as usize * cfg.d_model..(token as usize + 1) * cfg.d_model].to_vec();
-        let n_rep = cfg.n_heads / cfg.n_kv_heads;
+        self.decode_step_with_threads(token, kv, self.threads)
+    }
 
-        for li in 0..cfg.n_layers {
-            let lw = self.layer(li)?;
-            let mut h = vec![0f32; cfg.d_model];
-            Self::rmsnorm(&x, lw.ln1, &mut h);
-            let h = Tensor::new(vec![1, cfg.d_model], h);
-            let q_all = Self::dense(&h, lw.wq);
-            let k_all = Self::dense(&h, lw.wk);
-            let v_all = Self::dense(&h, lw.wv);
-
-            for hkv in 0..cfg.n_kv_heads {
-                let mut kh = Tensor::zeros(vec![1, cfg.d_head]);
-                for c in 0..cfg.d_head {
-                    kh.set(0, c, k_all.at(0, hkv * cfg.d_head + c));
-                }
-                Self::rope(&mut kh, pos, 10000.0);
-                kv.k[li][hkv].row_mut(pos).copy_from_slice(kh.row(0));
-                for c in 0..cfg.d_head {
-                    kv.v[li][hkv].set(pos, c, v_all.at(0, hkv * cfg.d_head + c));
-                }
-            }
-
-            let mut o_all = Tensor::zeros(vec![1, cfg.n_heads * cfg.d_head]);
-            let scale = 1.0 / (cfg.d_head as f32).sqrt();
-            for hq in 0..cfg.n_heads {
-                let mut qh = Tensor::zeros(vec![1, cfg.d_head]);
-                for c in 0..cfg.d_head {
-                    qh.set(0, c, q_all.at(0, hq * cfg.d_head + c));
-                }
-                Self::rope(&mut qh, pos, 10000.0);
-                let kvh = hq / n_rep;
-                // GEMV attention over the cache (full precision; the
-                // quadratic prefill is where DMA applies — see model.py).
-                let kcache = &kv.k[li][kvh];
-                let vcache = &kv.v[li][kvh];
-                let mut s = vec![0f32; pos + 1];
-                for (j, sv) in s.iter_mut().enumerate() {
-                    let mut acc = 0f32;
-                    for c in 0..cfg.d_head {
-                        acc += qh.at(0, c) * kcache.at(j, c);
-                    }
-                    *sv = acc * scale;
-                }
-                let mx = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let mut sum = 0f32;
-                for sv in s.iter_mut() {
-                    *sv = (*sv - mx).exp();
-                    sum += *sv;
-                }
-                for c in 0..cfg.d_head {
-                    let mut acc = 0f32;
-                    for (j, &p) in s.iter().enumerate() {
-                        acc += p * vcache.at(j, c);
-                    }
-                    o_all.set(0, hq * cfg.d_head + c, acc / sum);
-                }
-            }
-            let proj = Self::dense(&o_all, lw.wo);
-            for (xd, pd) in x.iter_mut().zip(&proj.data) {
-                *xd += pd;
-            }
-
-            self.mlp_block(&lw, &mut x);
-        }
-        kv.len = pos + 1;
-
-        self.unembed(&x)
+    /// [`Self::decode_step`] with an explicit kv-head fan-out width — the
+    /// batched-decode caller splits one thread budget between its
+    /// per-sequence fan-out and this per-head one, so the two levels
+    /// never multiply into `threads^2` workers.
+    pub fn decode_step_with_threads(
+        &self,
+        token: i32,
+        kv: &mut KvState,
+        threads: usize,
+    ) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(kv.len < kv.cap, "cache full ({}/{})", kv.len, kv.cap);
+        self.decode_step_impl(token, &mut DecodeKv::F32(kv), threads)
     }
 
     /// One decode step over an MXFP-quantized paged KV cache
     /// ([`crate::kvquant::QuantSlotKv`]): the new token's K/V rows are
     /// quantized on append, and attention runs
-    /// [`crate::attention::paged::dma_attention_paged_heads`] over the
-    /// cache pages with the slot's precision policy, grouping the query
-    /// heads of each kv head so pages decode once per group — K/V never
-    /// materialize in full precision. Appends to the cache and returns
-    /// logits [vocab].
-    ///
-    /// NOTE: the layer body (projections, RoPE base, SwiGLU) mirrors
-    /// [`Self::decode_step`]; changes to one must be applied to both.
+    /// [`crate::attention::paged::dma_attention_paged_heads_cached`]
+    /// over the cache pages with the slot's precision policy, grouping
+    /// the query heads of each kv head so pages decode once per group —
+    /// full pages are further served from the slot's
+    /// [`crate::kvquant::DecodedPageCache`]s, so steady-state decode
+    /// re-dequantizes only the frontier. K/V never materialize in full
+    /// precision. Appends to the cache and returns logits [vocab].
+    /// Shares its layer body with [`Self::decode_step`] via
+    /// [`Self::decode_step_impl`].
     pub fn decode_step_paged(
         &self,
         token: i32,
         kv: &mut crate::kvquant::QuantSlotKv,
         stats: &mut crate::metrics::KvPageStats,
     ) -> crate::Result<Vec<f32>> {
-        use crate::mxfp::block::Granularity;
+        self.decode_step_paged_with_threads(token, kv, stats, self.threads)
+    }
 
+    /// [`Self::decode_step_paged`] with an explicit kv-head fan-out width
+    /// (see [`Self::decode_step_with_threads`]).
+    pub fn decode_step_paged_with_threads(
+        &self,
+        token: i32,
+        kv: &mut crate::kvquant::QuantSlotKv,
+        stats: &mut crate::metrics::KvPageStats,
+        threads: usize,
+    ) -> crate::Result<Vec<f32>> {
+        self.decode_step_impl(token, &mut DecodeKv::Quant(kv, stats), threads)
+    }
+
+    /// The one decode-step layer body, parameterized over the KV store
+    /// (formerly duplicated between the f32 and paged paths). The
+    /// per-layer kv-head attention loop fans across [`Self::threads`]
+    /// scoped workers: each head group writes a disjoint slice of the
+    /// attention output and (paged) owns its head's decoded-page cache,
+    /// so results are bit-identical at any thread count.
+    fn decode_step_impl(
+        &self,
+        token: i32,
+        target: &mut DecodeKv<'_>,
+        threads: usize,
+    ) -> crate::Result<Vec<f32>> {
         let cfg = &self.cfg;
-        let pos = kv.pos;
+        let pos = target.pos();
         anyhow::ensure!((token as usize) < cfg.vocab, "token {token} out of range");
         let embed = self.weights.get("embed")?;
         let mut x: Vec<f32> =
             embed.data[token as usize * cfg.d_model..(token as usize + 1) * cfg.d_model].to_vec();
         let n_rep = cfg.n_heads / cfg.n_kv_heads;
+        let dh = cfg.d_head;
+        let threads = threads.max(1).min(cfg.n_kv_heads);
 
         for li in 0..cfg.n_layers {
-            let policy = kv.policy_for(li);
             let lw = self.layer(li)?;
             let mut h = vec![0f32; cfg.d_model];
             Self::rmsnorm(&x, lw.ln1, &mut h);
@@ -544,47 +564,67 @@ impl CpuModel {
             let k_all = Self::dense(&h, lw.wk);
             let v_all = Self::dense(&h, lw.wv);
 
-            // Quantize-on-append: the new token's post-RoPE K row and V
-            // row go straight into the paged stores.
-            let mut vrow = vec![0f32; cfg.d_head];
+            // Persist the new token's post-RoPE K row and V row for every
+            // kv head before attention reads the caches (the f32 path
+            // writes cache rows; the paged stores quantize on append).
+            let mut vrow = vec![0f32; dh];
             for hkv in 0..cfg.n_kv_heads {
-                let mut kh = Tensor::zeros(vec![1, cfg.d_head]);
-                for c in 0..cfg.d_head {
-                    kh.set(0, c, k_all.at(0, hkv * cfg.d_head + c));
-                    vrow[c] = v_all.at(0, hkv * cfg.d_head + c);
+                let mut kh = Tensor::zeros(vec![1, dh]);
+                for c in 0..dh {
+                    kh.set(0, c, k_all.at(0, hkv * dh + c));
+                    vrow[c] = v_all.at(0, hkv * dh + c);
                 }
                 Self::rope(&mut kh, pos, 10000.0);
-                kv.append_token(li, hkv, kh.row(0), &vrow);
-            }
-
-            let mut o_all = Tensor::zeros(vec![1, cfg.n_heads * cfg.d_head]);
-            for kvh in 0..cfg.n_kv_heads {
-                // Group the n_rep query heads that share this kv head
-                // into one frontier tile so each cache page is decoded
-                // once per group, not once per head.
-                let mut qh = Tensor::zeros(vec![n_rep, cfg.d_head]);
-                for r in 0..n_rep {
-                    let hq = kvh * n_rep + r;
-                    for c in 0..cfg.d_head {
-                        qh.set(r, c, q_all.at(0, hq * cfg.d_head + c));
+                match target {
+                    DecodeKv::F32(kv) => {
+                        kv.k[li][hkv].row_mut(pos).copy_from_slice(kh.row(0));
+                        kv.v[li][hkv].row_mut(pos).copy_from_slice(&vrow);
+                    }
+                    DecodeKv::Quant(kv, _) => {
+                        kv.append_token(li, hkv, kh.row(0), &vrow);
                     }
                 }
-                // RoPE per head row at the shared position `pos`.
-                for r in 0..n_rep {
-                    let mut row = Tensor::new(vec![1, cfg.d_head], qh.row(r).to_vec());
-                    Self::rope(&mut row, pos, 10000.0);
-                    qh.row_mut(r).copy_from_slice(row.row(0));
+            }
+
+            // Attention: one work item per kv head, each owning the
+            // group's disjoint [n_rep * d_head] slice of the output row.
+            let mut o_all = Tensor::zeros(vec![1, cfg.n_heads * dh]);
+            match target {
+                DecodeKv::F32(kv) => {
+                    let (kl, vl) = (&kv.k[li], &kv.v[li]);
+                    let mut items: Vec<(usize, &mut [f32])> =
+                        o_all.data.chunks_mut(n_rep * dh).enumerate().collect();
+                    crate::util::par::par_items(&mut items, threads, |(hkv, out)| {
+                        self.attend_head_f32(
+                            *hkv, out, &q_all, &kl[*hkv], &vl[*hkv], pos, n_rep);
+                    });
                 }
-                // Dual-quantize the head group (softmax scale folded,
-                // base-2) and attend page-by-page over the cache.
-                let qq = crate::mxfp::fused::dual_quant(
-                    &qh.data, n_rep, cfg.d_head, true, Granularity::PerToken);
-                let o = crate::attention::paged::dma_attention_paged_heads(
-                    &qq, &kv.k[li][kvh], &kv.v[li][kvh], &policy, stats);
-                for r in 0..n_rep {
-                    let hq = kvh * n_rep + r;
-                    for c in 0..cfg.d_head {
-                        o_all.set(0, hq * cfg.d_head + c, o.at(r, c));
+                DecodeKv::Quant(kv, stats) => {
+                    let policy = kv.policy_for(li);
+                    let crate::kvquant::QuantSlotKv { k, v, decoded, .. } = &mut **kv;
+                    // Shared slices (Copy) so the map closure can hand
+                    // their element refs to the work items.
+                    let kl: &[crate::kvquant::QuantPagedKv] = &k[li];
+                    let vl: &[crate::kvquant::QuantPagedKv] = &v[li];
+                    let mut items: Vec<QuantHeadWork<'_>> = o_all
+                        .data
+                        .chunks_mut(n_rep * dh)
+                        .zip(decoded[li].iter_mut())
+                        .enumerate()
+                        .map(|(hkv, (out, cache))| QuantHeadWork {
+                            hkv,
+                            out,
+                            cache,
+                            k: &kl[hkv],
+                            v: &vl[hkv],
+                            stats: crate::metrics::KvPageStats::default(),
+                        })
+                        .collect();
+                    crate::util::par::par_items(&mut items, threads, |w| {
+                        self.attend_head_quant(w, &q_all, pos, n_rep, policy)
+                    });
+                    for w in items {
+                        stats.merge(w.stats);
                     }
                 }
             }
@@ -595,9 +635,95 @@ impl CpuModel {
 
             self.mlp_block(&lw, &mut x);
         }
-        kv.pos = pos + 1;
+        target.advance_token();
 
         self.unembed(&x)
+    }
+
+    /// The roped `[n_rep, d_head]` query tile of kv head `hkv`'s group at
+    /// position `pos` (each row roped independently, matching the
+    /// per-head arithmetic of the pre-refactor paths).
+    fn roped_group_q(&self, q_all: &Tensor, hkv: usize, n_rep: usize, pos: usize) -> Tensor {
+        let dh = self.cfg.d_head;
+        let mut qh = Tensor::zeros(vec![n_rep, dh]);
+        for r in 0..n_rep {
+            let hq = hkv * n_rep + r;
+            for c in 0..dh {
+                qh.set(r, c, q_all.at(0, hq * dh + c));
+            }
+        }
+        for r in 0..n_rep {
+            let mut row = Tensor::new(vec![1, dh], qh.row(r).to_vec());
+            Self::rope(&mut row, pos, 10000.0);
+            qh.row_mut(r).copy_from_slice(row.row(0));
+        }
+        qh
+    }
+
+    /// f32 decode attention of one kv head's query group: per-head GEMV
+    /// softmax over cache rows `0..=pos` (full precision; the quadratic
+    /// prefill is where DMA applies — see model.py). Writes the group's
+    /// `[n_rep, d_head]` outputs into `out`.
+    fn attend_head_f32(
+        &self,
+        hkv: usize,
+        out: &mut [f32],
+        q_all: &Tensor,
+        kcache: &Tensor,
+        vcache: &Tensor,
+        pos: usize,
+        n_rep: usize,
+    ) {
+        let dh = self.cfg.d_head;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let qh = self.roped_group_q(q_all, hkv, n_rep, pos);
+        let mut s = vec![0f32; pos + 1];
+        for r in 0..n_rep {
+            let qrow = qh.row(r);
+            for (j, sv) in s.iter_mut().enumerate() {
+                let mut acc = 0f32;
+                for c in 0..dh {
+                    acc += qrow[c] * kcache.at(j, c);
+                }
+                *sv = acc * scale;
+            }
+            let mx = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0f32;
+            for sv in s.iter_mut() {
+                *sv = (*sv - mx).exp();
+                sum += *sv;
+            }
+            for c in 0..dh {
+                let mut acc = 0f32;
+                for (j, &p) in s.iter().enumerate() {
+                    acc += p * vcache.at(j, c);
+                }
+                out[r * dh + c] = acc / sum;
+            }
+        }
+    }
+
+    /// Paged decode attention of one kv head's query group: dual-quantize
+    /// the roped group (softmax scale folded, base-2) and attend
+    /// page-by-page through the head's decoded-page cache.
+    fn attend_head_quant(
+        &self,
+        w: &mut QuantHeadWork<'_>,
+        q_all: &Tensor,
+        pos: usize,
+        n_rep: usize,
+        policy: crate::kvquant::KvPolicy,
+    ) {
+        use crate::mxfp::block::Granularity;
+        let dh = self.cfg.d_head;
+        let qh = self.roped_group_q(q_all, w.hkv, n_rep, pos);
+        let qq = crate::mxfp::fused::dual_quant(&qh.data, n_rep, dh, true,
+                                                Granularity::PerToken);
+        let o = crate::attention::paged::dma_attention_paged_heads_cached(
+            &qq, w.k, w.v, &policy, w.cache, &mut w.stats);
+        for r in 0..n_rep {
+            w.out[r * dh..(r + 1) * dh].copy_from_slice(o.row(r));
+        }
     }
 
     /// Post-attention SwiGLU MLP block for one token row, residual
@@ -1047,6 +1173,54 @@ mod tests {
             t2 = argmax(&l2);
         }
         assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn decode_step_threads_bit_identical() {
+        // The kv-head fan-out must not change a single bit at any thread
+        // count, on both the f32 and the paged decode path (disjoint
+        // output slices, per-head decoded caches, local stats merge).
+        use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv};
+        let toks: Vec<i32> = (0..16).map(|i| ((i * 7) % 60) + 1).collect();
+        let qcfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 8,
+            policies: vec![KvPolicy { sink: 8, diag: 16 }],
+        };
+        let run = |threads: usize| {
+            let cfg = test_config();
+            let m = CpuModel::new(cfg.clone(), random_weights(&cfg, 1))
+                .unwrap()
+                .with_threads(threads);
+            // f32 path.
+            let mut kv = KvState::new(&m.cfg, 64);
+            m.prefill(&toks, AttnMode::Native, &mut kv).unwrap();
+            let mut f32_logits = Vec::new();
+            for t in [7, 9, 11] {
+                f32_logits.push(m.decode_step(t, &mut kv).unwrap());
+            }
+            // Paged path.
+            let mut qkv = QuantSlotKv::new(
+                qcfg.clone(), m.cfg.n_layers, m.cfg.n_kv_heads, m.cfg.d_head);
+            let mut stats = crate::metrics::KvPageStats::default();
+            m.prefill_chunk_quant(&toks, AttnMode::Native, &mut qkv, &mut stats)
+                .unwrap();
+            let mut q_logits = Vec::new();
+            for t in [7, 9, 11] {
+                q_logits.push(m.decode_step_paged(t, &mut qkv, &mut stats).unwrap());
+            }
+            let planes = qkv.k[1][1].planes();
+            (f32_logits, q_logits, stats, planes.fp8_codes, kv)
+        };
+        let (f1, q1, s1, p1, kv1) = run(1);
+        for threads in [2usize, 4, 8] {
+            let (f, q, s, p, kv) = run(threads);
+            assert_eq!(f, f1, "f32 logits diverged at {threads} threads");
+            assert_eq!(q, q1, "paged logits diverged at {threads} threads");
+            assert_eq!(s, s1, "stats diverged at {threads} threads");
+            assert_eq!(p, p1, "cache planes diverged at {threads} threads");
+            assert_eq!(kv.k[0][0].data, kv1.k[0][0].data);
+        }
     }
 
     #[test]

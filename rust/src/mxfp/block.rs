@@ -57,7 +57,8 @@ fn amax(xs: &[f32]) -> f32 {
 }
 
 /// Quantize one block (already scaled into element range) and write the
-/// dequantized values.
+/// dequantized values. Decode tables are hoisted out of the element
+/// loops (E2M1's is a const; the FP8 tables are fetched once per block).
 fn quant_block_values(block: &mut [f32], format: Format) {
     match format {
         Format::Mxfp4 | Format::Nvfp4 => {
@@ -66,13 +67,19 @@ fn quant_block_values(block: &mut [f32], format: Format) {
             }
         }
         Format::Mxfp8E4m3 => {
+            let lut = fp8::e4m3_table();
             for v in block.iter_mut() {
-                *v = fp8::quantize_e4m3(v.clamp(-fp8::E4M3_MAX, fp8::E4M3_MAX));
+                let c = fp8::encode(
+                    v.clamp(-fp8::E4M3_MAX, fp8::E4M3_MAX), fp8::Fp8Kind::E4M3);
+                *v = lut[c as usize];
             }
         }
         Format::Mxfp8E5m2 => {
+            let lut = fp8::e5m2_table();
             for v in block.iter_mut() {
-                *v = fp8::quantize_e5m2(v.clamp(-fp8::E5M2_MAX, fp8::E5M2_MAX));
+                let c = fp8::encode(
+                    v.clamp(-fp8::E5M2_MAX, fp8::E5M2_MAX), fp8::Fp8Kind::E5M2);
+                *v = lut[c as usize];
             }
         }
     }

@@ -50,8 +50,11 @@ pub fn encode(x: f32) -> u8 {
     s | mag
 }
 
-/// Signed decode table indexed by the full 4-bit code.
-const DECODE_LUT: [f32; 16] = [
+/// Signed decode table indexed by the full 4-bit code. Public so the hot
+/// row decoders ([`crate::mxfp::fused::DualQuantized::decode_low_rows`])
+/// can index it straight from packed nibbles without a function call per
+/// element.
+pub const DECODE_LUT: [f32; 16] = [
     0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0,
     -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
 ];
@@ -85,6 +88,18 @@ pub fn decode_slice(codes: &[u8], out: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn lut_matches_arithmetic_decoder_exhaustive() {
+        // All 16 codes: the table equals the arithmetic reconstruction
+        // sign * E2M1_GRID[magnitude] bit for bit (-0.0 included).
+        for code in 0u8..16 {
+            let sign = if code & 0x8 != 0 { -1.0f32 } else { 1.0 };
+            let arith = sign * E2M1_GRID[(code & 0x7) as usize];
+            assert_eq!(decode(code).to_bits(), arith.to_bits(), "code {code:#x}");
+            assert_eq!(DECODE_LUT[code as usize].to_bits(), arith.to_bits());
+        }
+    }
 
     #[test]
     fn representables_round_trip() {

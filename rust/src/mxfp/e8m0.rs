@@ -33,10 +33,33 @@ pub fn decode(code: u8) -> f32 {
     pow2i(code as i32 - 127)
 }
 
+/// The full 256-entry decode table, built once from [`decode`] so it is
+/// bit-exact with the arithmetic decoder by construction. The hot row
+/// decoders hoist this reference once per tile.
+#[inline]
+pub fn table() -> &'static [f32; 256] {
+    static LUT: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| std::array::from_fn(|c| decode(c as u8)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::mxfp::{e2m1::E2M1_EMAX, fp8::E4M3_EMAX};
+
+    #[test]
+    fn lut_matches_arithmetic_decoder_exhaustive() {
+        // All 256 codes: the table equals the arithmetic decoder bit for
+        // bit, and both equal an independent exp2 reconstruction over the
+        // representable exponent range (the e < -126 corner clamps).
+        for code in 0u16..=255 {
+            let code = code as u8;
+            let e = (code as i32 - 127).clamp(-126, 127);
+            let arith = (e as f32).exp2();
+            assert_eq!(decode(code).to_bits(), arith.to_bits(), "code {code}");
+            assert_eq!(table()[code as usize].to_bits(), arith.to_bits());
+        }
+    }
 
     #[test]
     fn amax_448_e4m3_gives_unit_scale() {

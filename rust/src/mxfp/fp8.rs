@@ -137,7 +137,25 @@ pub fn decode(code: u8, kind: Fp8Kind) -> f32 {
     }
 }
 
-fn decode_arith(code: u8, kind: Fp8Kind) -> f32 {
+/// The full 256-entry E4M3 decode table. Hot row decoders hoist this
+/// reference once per tile so the inner loop is a bare indexed load —
+/// no per-element kind dispatch or `OnceLock` read. Built from
+/// [`decode_arith`] once, so it is bit-exact with the arithmetic
+/// decoder by construction.
+#[inline]
+pub fn e4m3_table() -> &'static [f32; 256] {
+    e4m3_lut()
+}
+
+/// The full 256-entry E5M2 decode table (see [`e4m3_table`]).
+#[inline]
+pub fn e5m2_table() -> &'static [f32; 256] {
+    e5m2_lut()
+}
+
+/// Reference arithmetic decoder the tables are built from (and checked
+/// against exhaustively in tests). Not for hot paths.
+pub fn decode_arith(code: u8, kind: Fp8Kind) -> f32 {
     let s = spec(kind);
     let sign = if code >> 7 == 1 { -1.0f32 } else { 1.0 };
     let exp_field = ((code >> s.exp_shift) & ((1 << (7 - s.exp_shift)) - 1)) as i32;
@@ -176,6 +194,31 @@ pub fn decode_e4m3(code: u8) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn lut_matches_arithmetic_decoder_exhaustive() {
+        // Every one of the 256 codes, both formats: the table the hot
+        // decoders index must equal the arithmetic decoder bit for bit
+        // (including -0.0 and subnormal codes).
+        for code in 0u16..=255 {
+            let code = code as u8;
+            for kind in [Fp8Kind::E4M3, Fp8Kind::E5M2] {
+                assert_eq!(
+                    decode(code, kind).to_bits(),
+                    decode_arith(code, kind).to_bits(),
+                    "{kind:?} code {code:#04x}"
+                );
+            }
+            assert_eq!(
+                e4m3_table()[code as usize].to_bits(),
+                decode_arith(code, Fp8Kind::E4M3).to_bits()
+            );
+            assert_eq!(
+                e5m2_table()[code as usize].to_bits(),
+                decode_arith(code, Fp8Kind::E5M2).to_bits()
+            );
+        }
+    }
 
     #[test]
     fn e4m3_clamps_to_448() {

@@ -44,36 +44,49 @@ impl DualQuantized {
     /// Dequantize rows `[r0, r1)` of the NVFP4 low-precision copy into
     /// `out` (`[(r1 - r0), d]`, row-major). This is the tile decoder the
     /// DMA attention loop and the paged KV cache run right before each
-    /// matmul — no full-tensor materialization.
+    /// matmul — no full-tensor materialization, no scratch allocation:
+    /// nibbles are decoded straight from the packed plane through the
+    /// E2M1 table (the unpack convention is `pack.rs`: low nibble =
+    /// even element, high nibble = odd).
     pub fn decode_low_rows(&self, r0: usize, r1: usize, out: &mut [f32]) {
         let d = self.d;
         debug_assert!(r1 <= self.rows && out.len() >= (r1 - r0) * d);
-        let mut codes = vec![0u8; d];
+        let lut4 = &e2m1::DECODE_LUT;
+        let s4_lut = fp8::e4m3_table();
         for (rr, r) in (r0..r1).enumerate() {
-            pack::unpack_row(&self.packed_fp4[r * d / 2..(r + 1) * d / 2], &mut codes);
             let sq = self.sq[r];
+            let packed = &self.packed_fp4[r * d / 2..(r + 1) * d / 2];
+            let orow = &mut out[rr * d..(rr + 1) * d];
             for b in 0..d / NVFP4_BLOCK {
-                let s = fp8::decode_e4m3(self.s4_codes[r * d / NVFP4_BLOCK + b]) * sq;
-                for i in 0..NVFP4_BLOCK {
-                    out[rr * d + b * NVFP4_BLOCK + i] =
-                        e2m1::decode(codes[b * NVFP4_BLOCK + i]) * s;
+                let s = s4_lut[self.s4_codes[r * d / NVFP4_BLOCK + b] as usize] * sq;
+                let pb = &packed[b * (NVFP4_BLOCK / 2)..(b + 1) * (NVFP4_BLOCK / 2)];
+                let ob = &mut orow[b * NVFP4_BLOCK..(b + 1) * NVFP4_BLOCK];
+                for (o, &byte) in ob.chunks_exact_mut(2).zip(pb) {
+                    o[0] = lut4[(byte & 0x0F) as usize] * s;
+                    o[1] = lut4[(byte >> 4) as usize] * s;
                 }
             }
         }
     }
 
     /// Dequantize rows `[r0, r1)` of the MXFP8 high-precision copy into
-    /// `out` (`[(r1 - r0), d]`, row-major).
+    /// `out` (`[(r1 - r0), d]`, row-major). Table references are hoisted
+    /// out of the loops so the per-element work is one indexed load and
+    /// one multiply.
     pub fn decode_high_rows(&self, r0: usize, r1: usize, out: &mut [f32]) {
         let d = self.d;
         debug_assert!(r1 <= self.rows && out.len() >= (r1 - r0) * d);
+        let lut8 = fp8::e4m3_table();
+        let s8_lut = e8m0::table();
         for (rr, r) in (r0..r1).enumerate() {
             let sq = self.sq[r];
+            let orow = &mut out[rr * d..(rr + 1) * d];
             for b in 0..d / MXFP_BLOCK {
-                let s = e8m0::decode(self.s8_codes[r * d / MXFP_BLOCK + b]) * sq;
-                for i in 0..MXFP_BLOCK {
-                    out[rr * d + b * MXFP_BLOCK + i] =
-                        fp8::decode_e4m3(self.fp8_codes[r * d + b * MXFP_BLOCK + i]) * s;
+                let s = s8_lut[self.s8_codes[r * d / MXFP_BLOCK + b] as usize] * sq;
+                let codes = &self.fp8_codes[r * d + b * MXFP_BLOCK..r * d + (b + 1) * MXFP_BLOCK];
+                let ob = &mut orow[b * MXFP_BLOCK..(b + 1) * MXFP_BLOCK];
+                for (o, &c) in ob.iter_mut().zip(codes) {
+                    *o = lut8[c as usize] * s;
                 }
             }
         }
@@ -322,6 +335,36 @@ mod tests {
             q.decode_high_rows(r0, r1, &mut hi);
             assert_eq!(lo, low[r0 * d..r1 * d].to_vec(), "low [{r0}, {r1})");
             assert_eq!(hi, high[r0 * d..r1 * d].to_vec(), "high [{r0}, {r1})");
+        }
+    }
+
+    #[test]
+    fn packed_direct_low_decode_matches_unpack_reference() {
+        // The hot decoder reads nibbles straight from the packed plane;
+        // it must equal the unpack-then-decode reference bit for bit for
+        // every row range.
+        let (rows, d) = (16usize, 96usize);
+        let x = randn(rows, d, 21, 2.0);
+        let q = dual_quant(&x, rows, d, false, Granularity::PerToken);
+        for (r0, r1) in [(0usize, rows), (3, 9), (7, 8)] {
+            let n = r1 - r0;
+            let mut fast = vec![0f32; n * d];
+            q.decode_low_rows(r0, r1, &mut fast);
+            // Reference: unpack the nibbles, then per-element decode.
+            let mut codes = vec![0u8; d];
+            let mut reference = vec![0f32; n * d];
+            for (rr, r) in (r0..r1).enumerate() {
+                crate::mxfp::pack::unpack_row(
+                    &q.packed_fp4[r * d / 2..(r + 1) * d / 2], &mut codes);
+                for b in 0..d / NVFP4_BLOCK {
+                    let s = fp8::decode_e4m3(q.s4_codes[r * d / NVFP4_BLOCK + b]) * q.sq[r];
+                    for i in 0..NVFP4_BLOCK {
+                        reference[rr * d + b * NVFP4_BLOCK + i] =
+                            e2m1::decode(codes[b * NVFP4_BLOCK + i]) * s;
+                    }
+                }
+            }
+            assert_eq!(fast, reference, "[{r0}, {r1})");
         }
     }
 

@@ -23,6 +23,13 @@ pub struct HostBackend {
     /// Cumulative page-decode counters from quantized-cache prefills and
     /// decodes.
     kv_stats: KvPageStats,
+    /// Worker threads for the per-sequence decode fan-out (the model's
+    /// per-kv-head fan-out uses `model.threads`; both are set together
+    /// through [`ModelBackend::set_perf`]).
+    threads: usize,
+    /// Per-slot decoded-page cache budget applied to quantized slots
+    /// opened by this backend.
+    decoded_cache_bytes: usize,
 }
 
 impl HostBackend {
@@ -34,7 +41,16 @@ impl HostBackend {
             cache_len,
             buckets: vec![1, 2, 4],
             kv_stats: KvPageStats::default(),
+            threads: 1,
+            decoded_cache_bytes: crate::kvquant::DECODED_CACHE_BYTES,
         }
+    }
+
+    /// Builder-style perf-knob override (tests/benches; the engine goes
+    /// through [`ModelBackend::set_perf`]).
+    pub fn with_perf(mut self, threads: usize, decoded_cache_bytes: usize) -> HostBackend {
+        self.set_perf(threads, decoded_cache_bytes);
+        self
     }
 
     /// Deterministic random-weight backend used across tests.
@@ -56,40 +72,45 @@ impl HostBackend {
         &self.model.cfg
     }
 
-    /// SlotKv (flat [NL, H, C, Dh]) -> KvState tensors.
-    fn slot_to_state(&self, slot: &SlotKv) -> KvState {
-        let cfg = self.cfg();
-        let mut st = KvState::new(cfg, self.cache_len);
-        let (c, dh) = (self.cache_len, cfg.d_head);
-        for li in 0..cfg.n_layers {
-            for h in 0..cfg.n_kv_heads {
-                let base = (li * cfg.n_kv_heads + h) * c * dh;
-                st.k[li][h].data.copy_from_slice(&slot.k[base..base + c * dh]);
-                st.v[li][h].data.copy_from_slice(&slot.v[base..base + c * dh]);
-            }
-        }
-        st.len = slot.pos;
-        st
-    }
-
     /// KvState (any capacity >= its live rows) -> padded batch SlotKv.
     fn state_to_slot(&self, st: &KvState) -> SlotKv {
-        let cfg = self.cfg();
-        let mut slot = self.slots.empty_slot();
-        let (c, dh) = (self.cache_len, cfg.d_head);
-        let live = st.len.min(c);
-        for li in 0..cfg.n_layers {
-            for h in 0..cfg.n_kv_heads {
-                let base = (li * cfg.n_kv_heads + h) * c * dh;
-                slot.k[base..base + live * dh]
-                    .copy_from_slice(&st.k[li][h].data[..live * dh]);
-                slot.v[base..base + live * dh]
-                    .copy_from_slice(&st.v[li][h].data[..live * dh]);
-            }
-        }
-        slot.pos = st.len;
-        slot
+        state_to_slot(&self.slots, self.cfg(), self.cache_len, st)
     }
+}
+
+/// SlotKv (flat [NL, H, C, Dh]) -> KvState tensors. Free function so the
+/// parallel decode fan-out can call it per sequence without borrowing the
+/// whole backend.
+fn slot_to_state(cfg: &ModelConfig, cache_len: usize, slot: &SlotKv) -> KvState {
+    let mut st = KvState::new(cfg, cache_len);
+    let (c, dh) = (cache_len, cfg.d_head);
+    for li in 0..cfg.n_layers {
+        for h in 0..cfg.n_kv_heads {
+            let base = (li * cfg.n_kv_heads + h) * c * dh;
+            st.k[li][h].data.copy_from_slice(&slot.k[base..base + c * dh]);
+            st.v[li][h].data.copy_from_slice(&slot.v[base..base + c * dh]);
+        }
+    }
+    st.len = slot.pos;
+    st
+}
+
+/// KvState (any capacity >= its live rows) -> padded batch SlotKv.
+fn state_to_slot(layout: &SlotCache, cfg: &ModelConfig, cache_len: usize, st: &KvState) -> SlotKv {
+    let mut slot = layout.empty_slot();
+    let (c, dh) = (cache_len, cfg.d_head);
+    let live = st.len.min(c);
+    for li in 0..cfg.n_layers {
+        for h in 0..cfg.n_kv_heads {
+            let base = (li * cfg.n_kv_heads + h) * c * dh;
+            slot.k[base..base + live * dh]
+                .copy_from_slice(&st.k[li][h].data[..live * dh]);
+            slot.v[base..base + live * dh]
+                .copy_from_slice(&st.v[li][h].data[..live * dh]);
+        }
+    }
+    slot.pos = st.len;
+    slot
 }
 
 impl ModelBackend for HostBackend {
@@ -110,7 +131,7 @@ impl ModelBackend for HostBackend {
         let cfg = self.cfg().clone();
         let (state, done) = match quant {
             Some(qcfg) => {
-                let slot = match seed {
+                let mut slot = match seed {
                     Some(s) => {
                         anyhow::ensure!(
                             s.pos < tokens.len(),
@@ -127,6 +148,7 @@ impl ModelBackend for HostBackend {
                         cfg.d_head,
                     ),
                 };
+                slot.set_decoded_budget(self.decoded_cache_bytes);
                 let done = slot.pos;
                 (PrefillState::Quant(slot), done)
             }
@@ -184,31 +206,92 @@ impl ModelBackend for HostBackend {
         tokens: &[i32],
         slots: &mut [Option<&mut SeqKv>],
     ) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(
+            tokens.len() >= slots.len(),
+            "decode batch mismatch: {} tokens for {} slots",
+            tokens.len(),
+            slots.len()
+        );
         let vocab = self.cfg().vocab;
         let mut out = vec![0f32; slots.len() * vocab];
-        for (i, slot) in slots.iter_mut().enumerate() {
-            let Some(s) = slot else { continue };
-            let logits = match &mut **s {
-                SeqKv::F32(sl) => {
-                    let mut st = self.slot_to_state(sl);
-                    let logits = self.model.decode_step(tokens[i], &mut st)?;
-                    *sl = self.state_to_slot(&st);
-                    logits
-                }
-                SeqKv::Quant(qs) => {
-                    // Mirror the f32 path's capacity guard (KvState checks
-                    // this internally; the paged store grows on demand).
-                    anyhow::ensure!(
-                        qs.pos < self.cache_len,
-                        "cache full ({}/{})",
-                        qs.pos,
-                        self.cache_len
-                    );
-                    self.model.decode_step_paged(tokens[i], qs, &mut self.kv_stats)?
-                }
-            };
-            out[i * vocab..(i + 1) * vocab].copy_from_slice(&logits);
+
+        // One work item per live sequence, each owning its slot and its
+        // disjoint logits row — the batch fans across the worker threads
+        // (intra-step parallelism; identical results at any count, since
+        // sequences are independent). Per-item page stats merge after.
+        struct SeqWork<'a> {
+            token: i32,
+            slot: &'a mut SeqKv,
+            out: &'a mut [f32],
+            stats: KvPageStats,
+            result: crate::Result<()>,
         }
+        let mut items: Vec<SeqWork<'_>> = Vec::new();
+        for ((slot, row), &token) in slots
+            .iter_mut()
+            .zip(out.chunks_mut(vocab))
+            .zip(tokens)
+        {
+            if let Some(s) = slot {
+                items.push(SeqWork {
+                    token,
+                    slot: &mut **s,
+                    out: row,
+                    stats: KvPageStats::default(),
+                    result: Ok(()),
+                });
+            }
+        }
+        let model = &self.model;
+        let layout = &self.slots;
+        let cache_len = self.cache_len;
+        // One thread budget split across the two fan-out levels: `outer`
+        // workers over sequences, each allotted `inner` for the model's
+        // per-kv-head fan-out — the product never exceeds the budget
+        // (a single-sequence batch gives the whole budget to the heads).
+        let outer = self.threads.max(1).min(items.len().max(1));
+        let inner = (self.threads.max(1) / outer).max(1);
+        crate::util::par::par_items(&mut items, outer, |w| {
+            let step = |w: &mut SeqWork<'_>| -> crate::Result<()> {
+                let logits = match &mut *w.slot {
+                    SeqKv::F32(sl) => {
+                        let mut st = slot_to_state(&model.cfg, cache_len, sl);
+                        let logits = model.decode_step_with_threads(w.token, &mut st, inner)?;
+                        *sl = state_to_slot(layout, &model.cfg, cache_len, &st);
+                        logits
+                    }
+                    SeqKv::Quant(qs) => {
+                        // Mirror the f32 path's capacity guard (KvState
+                        // checks this internally; the paged store grows
+                        // on demand).
+                        anyhow::ensure!(
+                            qs.pos < cache_len,
+                            "cache full ({}/{})",
+                            qs.pos,
+                            cache_len
+                        );
+                        model.decode_step_paged_with_threads(
+                            w.token, qs, &mut w.stats, inner)?
+                    }
+                };
+                w.out.copy_from_slice(&logits);
+                Ok(())
+            };
+            w.result = step(w);
+        });
+        // Merge every item's page counters before surfacing any error:
+        // items after a failing one still ran (par_items completes the
+        // whole batch), and their decodes must not vanish from the stats.
+        let mut first_err: crate::Result<()> = Ok(());
+        for w in items {
+            self.kv_stats.merge(w.stats);
+            if first_err.is_ok() {
+                if let Err(e) = w.result {
+                    first_err = Err(e);
+                }
+            }
+        }
+        first_err?;
         Ok(out)
     }
 
@@ -251,6 +334,12 @@ impl ModelBackend for HostBackend {
 
     fn kv_page_stats(&self) -> KvPageStats {
         self.kv_stats
+    }
+
+    fn set_perf(&mut self, threads: usize, decoded_cache_bytes: usize) {
+        self.threads = threads.max(1);
+        self.model.threads = threads.max(1);
+        self.decoded_cache_bytes = decoded_cache_bytes;
     }
 
     fn name(&self) -> &'static str {
@@ -384,6 +473,44 @@ mod tests {
         let f32_logits = be.decode(&[7], &mut [Some(&mut f32_slot)]).unwrap();
         let cos = crate::metrics::cos_sim(&logits, &f32_logits);
         assert!(cos > 0.95, "quantized decode diverged: cos {cos}");
+    }
+
+    #[test]
+    fn threaded_batch_decode_bit_identical_to_serial() {
+        // The per-sequence fan-out (and the model's per-head fan-out
+        // underneath) must produce the same logits bytes as threads = 1,
+        // for a mixed f32/quantized batch.
+        use crate::kvquant::{KvFormat, KvPolicy};
+        let qcfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 8,
+            policies: vec![KvPolicy { sink: 8, diag: 16 }],
+        };
+        let run = |threads: usize| {
+            let mut be = HostBackend::for_tests()
+                .with_perf(threads, crate::kvquant::DECODED_CACHE_BYTES);
+            let toks: Vec<i32> = (0..12).map(|i| ((i * 7) % 60) + 1).collect();
+            let mut s1 = be.prefill(&toks, false, None).unwrap().kv;
+            let mut s2 = be.prefill(&toks, false, Some(&qcfg)).unwrap().kv;
+            let mut s3 = be.prefill(&toks[..7], false, Some(&qcfg)).unwrap().kv;
+            let mut all = Vec::new();
+            for step in 0..3 {
+                let logits = be
+                    .decode(
+                        &[7 + step, 9, 0, 11],
+                        &mut [Some(&mut s1), Some(&mut s2), None, Some(&mut s3)],
+                    )
+                    .unwrap();
+                all.push(logits);
+            }
+            (all, be.kv_page_stats())
+        };
+        let (l1, st1) = run(1);
+        for threads in [2usize, 4] {
+            let (l, st) = run(threads);
+            assert_eq!(l, l1, "logits diverged at {threads} threads");
+            assert_eq!(st, st1, "page stats diverged at {threads} threads");
+        }
     }
 
     #[test]

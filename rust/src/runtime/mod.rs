@@ -78,7 +78,7 @@ impl PrefillSeq {
                 .chain(kv.v.iter().flatten())
                 .map(|t| t.data.len() * 4)
                 .sum(),
-            PrefillState::Quant(q) => q.quantized_bytes(),
+            PrefillState::Quant(q) => q.quantized_bytes() + q.decoded_bytes(),
             PrefillState::Deferred => 0,
         }
     }
@@ -154,6 +154,12 @@ pub trait ModelBackend {
     fn kv_page_stats(&self) -> crate::metrics::KvPageStats {
         crate::metrics::KvPageStats::default()
     }
+
+    /// Apply the engine's performance knobs: `threads` worker threads for
+    /// intra-step fan-out (per-sequence decode, per-kv-head attention)
+    /// and the per-slot decoded-page cache byte budget. Backends without
+    /// those mechanisms (PJRT executables) ignore this.
+    fn set_perf(&mut self, _threads: usize, _decoded_cache_bytes: usize) {}
 
     /// Human-readable backend name for logs/metrics.
     fn name(&self) -> &'static str;

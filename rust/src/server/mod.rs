@@ -40,7 +40,8 @@
 //! -> {"cmd": "stats"}
 //! <- {"workers": 1, "policy": "least-loaded", "kv_format": "f32",
 //!     "kv_policy": "128/128", "prefix_hit_tokens": 0,
-//!     "kv_bytes_in_use": 0}
+//!     "kv_bytes_in_use": 0, "decoded_page_hits": 0,
+//!     "decoded_page_misses": 0, "decoded_page_hit_rate": 0}
 //! ```
 //!
 //! A client disconnect cancels every request the connection still has in
@@ -316,6 +317,14 @@ fn handle_conn(
         if let Ok(j) = Json::parse(&line) {
             match j.get("cmd").and_then(Json::as_str) {
                 Some("stats") => {
+                    let (hits, misses) =
+                        (router.decoded_cache_hits(), router.decoded_cache_misses());
+                    let hit_rate = crate::metrics::KvPageStats {
+                        cache_hits: hits,
+                        cache_misses: misses,
+                        ..Default::default()
+                    }
+                    .cache_hit_rate();
                     reply(Json::obj(vec![
                         ("workers", Json::num(router.num_workers() as f64)),
                         ("policy", Json::str(router.policy_name())),
@@ -329,6 +338,9 @@ fn handle_conn(
                             "kv_bytes_in_use",
                             Json::num(router.kv_bytes_in_use() as f64),
                         ),
+                        ("decoded_page_hits", Json::num(hits as f64)),
+                        ("decoded_page_misses", Json::num(misses as f64)),
+                        ("decoded_page_hit_rate", Json::num(hit_rate)),
                     ]));
                     continue;
                 }
@@ -785,6 +797,57 @@ mod tests {
             );
             std::thread::sleep(std::time::Duration::from_millis(10));
         }
+
+        writer.shutdown(std::net::Shutdown::Write).unwrap();
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn stats_expose_decoded_page_hit_rate() {
+        // Quantized cache + a multi-token generation: steady-state decode
+        // serves full pages from the decoded-page cache, and /stats must
+        // surface the hit counters. threads > 1 exercises the fan-out
+        // through the whole server stack.
+        let (addr, stop, srv) = spawn_server(
+            EngineConfig {
+                max_new_tokens: 16,
+                kv_format: crate::kvquant::KvFormat::Dual,
+                kv_precision_policies: vec![crate::kvquant::KvPolicy { sink: 16, diag: 16 }],
+                threads: 2,
+                ..Default::default()
+            },
+            1,
+            Policy::RoundRobin,
+        );
+
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        // A 40-token prompt fills full pages; 16 decode steps then re-read
+        // them every token.
+        let toks: Vec<String> =
+            (0..40).map(|i| (((i * 7) % 58) + 6).to_string()).collect();
+        writeln!(
+            writer,
+            r#"{{"id": 1, "tokens": [{}], "max_new_tokens": 16, "ignore_eos": true}}"#,
+            toks.join(",")
+        )
+        .unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("output"), "{line}");
+        line.clear();
+        writeln!(writer, r#"{{"cmd": "stats"}}"#).unwrap();
+        reader.read_line(&mut line).unwrap();
+        let s = Json::parse(line.trim()).unwrap();
+        assert_eq!(s.get("kv_format").unwrap().as_str(), Some("dual"));
+        let hits = s.get("decoded_page_hits").unwrap().as_i64().unwrap();
+        let misses = s.get("decoded_page_misses").unwrap().as_i64().unwrap();
+        let rate = s.get("decoded_page_hit_rate").unwrap().as_f64().unwrap();
+        assert!(hits > 0, "no decoded-page hits after a 16-token decode");
+        assert!(misses > 0, "cold pages must miss first");
+        assert!(rate > 0.0 && rate <= 1.0, "rate {rate}");
 
         writer.shutdown(std::net::Shutdown::Write).unwrap();
         stop.store(true, Ordering::Relaxed);

@@ -4,5 +4,6 @@
 pub mod benchkit;
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,93 @@
+//! Scoped-thread fan-out for the decode hot path (rayon is not
+//! vendored).
+//!
+//! [`par_items`] runs a closure over a slice of owned work items,
+//! splitting them across at most `threads` `std::thread::scope` workers.
+//! Each item owns its output buffers (disjoint `&mut` slices carved out
+//! by the caller), so results are identical regardless of thread count —
+//! the determinism contract behind the engine's `--threads` flag.
+//! `threads <= 1` (or a single item) runs inline with zero spawn
+//! overhead, so the serial path is untouched.
+
+/// Apply `f` to every item, fanning the slice across up to `threads`
+/// scoped workers. Items are processed exactly once; ordering across
+/// workers is unspecified, so `f` must only touch state owned by (or
+/// reachable through `Sync` references from) its item.
+///
+/// The calling thread works the first chunk itself, so only
+/// `threads - 1` OS threads are spawned per call. Spawn cost is paid per
+/// invocation (the decode path calls this once per layer); keep the
+/// per-item work well above ~100us or leave `threads` at 1 — the
+/// batched-decode caller splits its budget so the per-sequence and
+/// per-head levels never nest multiplicatively.
+pub fn par_items<T: Send, F: Fn(&mut T) + Sync>(items: &mut [T], threads: usize, f: F) {
+    let threads = threads.max(1).min(items.len());
+    if threads <= 1 {
+        for it in items.iter_mut() {
+            f(it);
+        }
+        return;
+    }
+    let per = items.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut chunks = items.chunks_mut(per);
+        let own = chunks.next();
+        for chunk in chunks {
+            s.spawn(|| {
+                for it in chunk {
+                    f(it);
+                }
+            });
+        }
+        if let Some(chunk) = own {
+            for it in chunk {
+                f(it);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_items_processed_once_any_thread_count() {
+        for threads in [0usize, 1, 2, 3, 7, 64] {
+            let mut items: Vec<(usize, u64)> = (0..13).map(|i| (i, 0u64)).collect();
+            par_items(&mut items, threads, |it| {
+                it.1 += (it.0 as u64 + 1) * 10;
+            });
+            for (i, got) in items {
+                assert_eq!(got, (i as u64 + 1) * 10, "threads {threads} item {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_mut_slices_are_filled_deterministically() {
+        let mut buf = vec![0f32; 24];
+        let serial = {
+            let mut b = vec![0f32; 24];
+            for (i, chunk) in b.chunks_mut(6).enumerate() {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (i * 100 + j) as f32;
+                }
+            }
+            b
+        };
+        let mut items: Vec<(usize, &mut [f32])> = buf.chunks_mut(6).enumerate().collect();
+        par_items(&mut items, 4, |(i, chunk)| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (*i * 100 + j) as f32;
+            }
+        });
+        assert_eq!(buf, serial);
+    }
+
+    #[test]
+    fn empty_slice_is_a_noop() {
+        let mut items: Vec<u32> = Vec::new();
+        par_items(&mut items, 8, |_| panic!("no items to visit"));
+    }
+}
