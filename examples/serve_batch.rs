@@ -266,6 +266,57 @@ fn main() {
         std::thread::sleep(Duration::from_millis(1));
     }
 
+    // ------------------------------------------------------------------
+    // Parallel sampling demo: one prompt prefilled once, three
+    // candidates forked copy-on-write, finalists ranked by cumulative
+    // logprob engine-side.
+    // ------------------------------------------------------------------
+    println!("\n== parallel sampling (n=3 candidates over one prompt prefill) ==");
+    let prompt: Vec<i32> = (0..16).map(|i| ((i * 11) % 50) as i32 + 6).collect();
+    router
+        .submit(Request {
+            id: 1_002,
+            tokens: prompt,
+            max_new_tokens: 8,
+            dma: dma_mode,
+            sampling: SamplingParams {
+                temperature: 0.8,
+                seed: 21,
+                ignore_eos: true,
+                n: 3,
+                ..Default::default()
+            },
+        })
+        .unwrap();
+    let mut streamed = [0usize; 3];
+    'group: loop {
+        for ev in router.poll_events(32) {
+            match ev {
+                EngineEvent::Token { candidate, .. } => {
+                    streamed[candidate] += 1;
+                }
+                EngineEvent::Finished(r) => {
+                    for c in &r.candidates {
+                        println!(
+                            "  candidate {}: {} tokens, finish={}, cum_logprob {:.3}",
+                            c.candidate,
+                            c.output.len(),
+                            c.finish.as_str(),
+                            c.cum_logprob
+                        );
+                    }
+                    assert_eq!(r.candidates.len(), 3);
+                    assert_eq!(r.output, r.candidates[0].output, "best-first");
+                    break 'group;
+                }
+                _ => {}
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(streamed.iter().all(|&n| n > 0), "every candidate streamed: {streamed:?}");
+    println!("  per-candidate token events: {streamed:?}");
+
     println!("\nserve_batch OK");
     router.shutdown();
 }

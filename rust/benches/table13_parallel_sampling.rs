@@ -1,0 +1,210 @@
+//! Table 13 (parallel sampling): tokens/s and KV bytes for sequence
+//! groups (`n` candidates over one COW-forked prompt) vs `n`
+//! independent requests, host backend, dual quantized cache.
+//!
+//! The group path prefills the prompt once, accounts its pages once,
+//! and forks the quantized store copy-on-write per candidate — so its
+//! KV footprint is `1 x prompt + n x frontier` where the independent
+//! baseline pays `n x (prompt + frontier)`. Sibling candidates also
+//! share one decoded-page cache, so the prompt dequantizes once per
+//! group instead of once per sequence.
+//!
+//! ```bash
+//! cargo bench --bench table13_parallel_sampling            # full shapes
+//! cargo bench --bench table13_parallel_sampling -- --quick # CI smoke
+//! ```
+//!
+//! Emits `bench_out/table13_parallel_sampling.csv` and
+//! `bench_out/BENCH_parallel_sampling.json`.
+
+use dma::config::EngineConfig;
+use dma::coordinator::engine::Engine;
+use dma::coordinator::{Request, SamplingParams};
+use dma::kvquant::{KvFormat, KvPolicy, PAGE_TOKENS};
+use dma::runtime::host::HostBackend;
+use dma::util::benchkit::Table;
+use std::time::Instant;
+
+fn engine(max_new: usize) -> Engine {
+    let cfg = EngineConfig {
+        max_new_tokens: max_new,
+        decode_slice: 4,
+        kv_format: KvFormat::Dual,
+        kv_precision_policies: vec![KvPolicy { sink: 16, diag: 16 }],
+        ..Default::default()
+    };
+    Engine::new(Box::new(HostBackend::for_tests()), cfg, 5)
+}
+
+fn prompt(len: usize) -> Vec<i32> {
+    (0..len).map(|i| ((i * 7) % 58) as i32 + 6).collect()
+}
+
+struct RunOut {
+    wall_s: f64,
+    gen_tokens: usize,
+    /// Max pool bytes observed across scheduler steps (quantized KV
+    /// admission accounting).
+    peak_pool_bytes: usize,
+    /// Peak resident bytes (payload + decoded tiles) from engine stats.
+    peak_resident_bytes: u64,
+    /// Candidate outputs keyed by candidate index (grouped run) or
+    /// request order (independent run).
+    outputs: Vec<Vec<i32>>,
+}
+
+/// Drive `e` to idle, sampling the pool gauge each step.
+fn drain(e: &mut Engine) -> (f64, usize, Vec<Vec<i32>>) {
+    let t0 = Instant::now();
+    let mut peak = 0usize;
+    let mut outputs: Vec<Vec<i32>> = Vec::new();
+    while !e.idle() {
+        let events = e.step().expect("engine step");
+        peak = peak.max(e.kv_bytes_in_use());
+        for r in events.into_iter().filter_map(dma::coordinator::EngineEvent::into_finished) {
+            let mut cands: Vec<(usize, Vec<i32>)> =
+                r.candidates.into_iter().map(|c| (c.candidate, c.output)).collect();
+            cands.sort_by_key(|(c, _)| *c);
+            outputs.extend(cands.into_iter().map(|(_, o)| o));
+        }
+    }
+    (t0.elapsed().as_secs_f64(), peak, outputs)
+}
+
+/// One request asking for `n` parallel samples.
+fn run_grouped(n: usize, prompt_len: usize, max_new: usize, temperature: f32) -> RunOut {
+    let mut e = engine(max_new);
+    e.submit(Request {
+        id: 1,
+        tokens: prompt(prompt_len),
+        max_new_tokens: max_new,
+        dma: false,
+        sampling: SamplingParams {
+            temperature,
+            seed: 7,
+            ignore_eos: true,
+            n,
+            ..Default::default()
+        },
+    });
+    let (wall_s, peak, outputs) = drain(&mut e);
+    let gen_tokens: usize = outputs.iter().map(Vec::len).sum();
+    RunOut {
+        wall_s,
+        gen_tokens,
+        peak_pool_bytes: peak,
+        peak_resident_bytes: e.stats.kv_bytes_peak,
+        outputs,
+    }
+}
+
+/// `n` independent single-candidate requests over the same prompt.
+fn run_independent(n: usize, prompt_len: usize, max_new: usize, temperature: f32) -> RunOut {
+    let mut e = engine(max_new);
+    for i in 0..n as u64 {
+        e.submit(Request {
+            id: 1 + i,
+            tokens: prompt(prompt_len),
+            max_new_tokens: max_new,
+            dma: false,
+            sampling: SamplingParams {
+                temperature,
+                seed: 7 + i,
+                ignore_eos: true,
+                ..Default::default()
+            },
+        });
+    }
+    let (wall_s, peak, outputs) = drain(&mut e);
+    let gen_tokens: usize = outputs.iter().map(Vec::len).sum();
+    RunOut {
+        wall_s,
+        gen_tokens,
+        peak_pool_bytes: peak,
+        peak_resident_bytes: e.stats.kv_bytes_peak,
+        outputs,
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (prompt_len, max_new) = if quick { (32usize, 8usize) } else { (64usize, 16usize) };
+    println!(
+        "== Table 13: parallel sampling (dual cache, prompt {prompt_len}, \
+         {max_new} new tokens{}) ==\n",
+        if quick { ", --quick" } else { "" }
+    );
+
+    // Correctness gate before timing anything: a greedy n=4 group must
+    // replay the n=1 stream on every candidate (shared prefill + COW
+    // forks + per-candidate samplers are bit-transparent).
+    let n1 = run_grouped(1, prompt_len, max_new, 0.0);
+    let g4 = run_grouped(4, prompt_len, max_new, 0.0);
+    assert_eq!(g4.outputs.len(), 4);
+    for (c, out) in g4.outputs.iter().enumerate() {
+        assert_eq!(out, &n1.outputs[0], "greedy candidate {c} diverged from n=1");
+    }
+    println!("greedy n=4 candidates bit-match n=1 ({} tokens each)\n", max_new);
+
+    let mut table = Table::new(&[
+        "n",
+        "grouped tok/s",
+        "indep tok/s",
+        "grouped peak KV KiB",
+        "indep peak KV KiB",
+        "KV ratio",
+        "grouped resident KiB",
+        "indep resident KiB",
+    ]);
+    for n in [1usize, 2, 4, 8] {
+        let g = run_grouped(n, prompt_len, max_new, 0.8);
+        let i = run_independent(n, prompt_len, max_new, 0.8);
+        assert_eq!(g.gen_tokens, n * max_new, "grouped run lost tokens");
+        assert_eq!(i.gen_tokens, n * max_new, "independent run lost tokens");
+        let ratio = g.peak_pool_bytes as f64 / i.peak_pool_bytes as f64;
+        table.row(&[
+            n.to_string(),
+            format!("{:.1}", g.gen_tokens as f64 / g.wall_s),
+            format!("{:.1}", i.gen_tokens as f64 / i.wall_s),
+            format!("{:.1}", g.peak_pool_bytes as f64 / 1024.0),
+            format!("{:.1}", i.peak_pool_bytes as f64 / 1024.0),
+            format!("{ratio:.3}"),
+            format!("{:.1}", g.peak_resident_bytes as f64 / 1024.0),
+            format!("{:.1}", i.peak_resident_bytes as f64 / 1024.0),
+        ]);
+        if n == 1 {
+            assert_eq!(
+                g.peak_pool_bytes, i.peak_pool_bytes,
+                "n=1 group must cost exactly one request"
+            );
+        }
+        if n >= 2 {
+            // The acceptance bar: sharing the prompt pages makes the
+            // group's KV sublinear in n. The exact expected footprint is
+            // (prompt + n x frontier) vs n x (prompt + frontier) blocks.
+            assert!(
+                g.peak_pool_bytes < i.peak_pool_bytes,
+                "n={n}: grouped KV {} not below independent {}",
+                g.peak_pool_bytes,
+                i.peak_pool_bytes
+            );
+        }
+        if n == 4 {
+            let prompt_blocks = prompt_len.div_ceil(PAGE_TOKENS);
+            let cand_blocks = max_new.div_ceil(PAGE_TOKENS);
+            let expect =
+                (prompt_blocks + 4 * cand_blocks) as f64 / (4 * (prompt_blocks + cand_blocks)) as f64;
+            assert!(
+                (ratio - expect).abs() < 0.35,
+                "n=4 KV ratio {ratio:.3} far from the {expect:.3} sharing model"
+            );
+        }
+    }
+    table.print();
+    if let Ok(p) = table.write_csv("table13_parallel_sampling") {
+        println!("\nwrote {}", p.display());
+    }
+    if let Ok(p) = table.write_json("BENCH_parallel_sampling") {
+        println!("wrote {}", p.display());
+    }
+}

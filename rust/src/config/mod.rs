@@ -219,10 +219,18 @@ pub struct EngineConfig {
     /// (`--decoded-cache-mb`): immutable quantized pages dequantize once
     /// and are reused every decode step until evicted LRU. 0 disables
     /// the cache (over-budget tiles decode into a reused scratch slot).
-    /// This memory sits *outside* the BlockPool's quantized-byte
-    /// admission budget — plan for up to `decode slots x this budget`
-    /// extra resident bytes (it is included in `kv_bytes_peak`).
+    /// The *live* decoded bytes are charged against the pool's byte
+    /// budget at admission (on top of quantized bytes) and included in
+    /// `kv_bytes_peak`, so a memory-tight deployment cannot over-admit
+    /// while hot decoded tiles hold real memory.
     pub decoded_cache_bytes: usize,
+    /// Physical KV byte budget the admission pool is sized from
+    /// (`--kv-budget-mb`). 0 (the default) derives it from the decode
+    /// slots: `max_slots x cache_len x f32 bytes/token` — what the f32
+    /// batch slots would occupy. Memory-tight deployments pin it
+    /// explicitly; quantized formats get proportionally more admission
+    /// blocks either way.
+    pub kv_budget_bytes: usize,
 }
 
 impl Default for EngineConfig {
@@ -240,6 +248,7 @@ impl Default for EngineConfig {
             kv_precision_policies: vec![crate::kvquant::KvPolicy::default()],
             threads: 1,
             decoded_cache_bytes: crate::kvquant::DECODED_CACHE_BYTES,
+            kv_budget_bytes: 0,
         }
     }
 }
@@ -346,5 +355,6 @@ mod tests {
         assert!(cfg.prefill_chunk > 0);
         assert_eq!(cfg.threads, 1);
         assert_eq!(cfg.decoded_cache_bytes, crate::kvquant::DECODED_CACHE_BYTES);
+        assert_eq!(cfg.kv_budget_bytes, 0, "0 = derive from decode slots");
     }
 }

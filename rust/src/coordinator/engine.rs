@@ -1,36 +1,57 @@
-//! The serving engine: continuous batching over a [`ModelBackend`].
+//! The serving engine: continuous batching of *sequence groups* over a
+//! [`ModelBackend`].
 //!
 //! Policy (vLLM-style, chunked-prefill interleaved):
 //!
 //! 1. While batch slots and KV blocks are free, admit a queued request:
 //!    consult the radix prefix cache ([`super::radix`]) for shared
-//!    quantized pages, pin them (pool fork), and open a streaming
-//!    prefill ([`ModelBackend::begin_prefill`]).
-//! 2. Advance every prefilling sequence by one `--prefill-chunk` slice —
+//!    quantized pages, pin them (pool fork), reserve the group's pool
+//!    budget — the unshared prompt once plus one decode-frontier budget
+//!    per candidate — and open a streaming prefill
+//!    ([`ModelBackend::begin_prefill`]). Admission also charges the
+//!    live decoded-page-cache bytes against the pool's byte budget, so
+//!    a memory-tight deployment cannot over-admit on quantized bytes
+//!    alone.
+//! 2. Advance every prefilling group by one `--prefill-chunk` slice —
 //!    prompts enter the cache incrementally, so a long prompt never
-//!    stalls decoding sequences for its full length.
-//! 3. Run up to `decode_slice` batched decode steps over the decoding
-//!    slots, then loop back to (1)/(2).
-//! 4. A sequence retires on EOS, a stop token, its token budget, cache
-//!    capacity, or a [`Engine::cancel`]; when a quantized prefill
-//!    completes, its full prompt pages are donated to the radix cache
-//!    (block accounting forked out of the sequence's table) so later
-//!    requests sharing the prefix skip that prefill work entirely.
+//!    stalls decoding sequences for its full length. The prompt is
+//!    prefilled **once per group**, however many candidates it has.
+//! 3. At the decode boundary the group fans out: candidate 0 takes the
+//!    prefilled cache, every other candidate forks it
+//!    ([`SeqKv::fork`] — quantized stores share full pages by `Arc` and
+//!    copy-on-write the partial frontier page; shared decoded-page
+//!    caches mean siblings dequantize the prompt once). Each candidate
+//!    owns a [`super::sampling::Sampler`] with a seed derived from
+//!    `(request seed, candidate index)`, so candidate 0 replays an
+//!    `n = 1` request bit-for-bit and every candidate's stream is
+//!    deterministic and batch-invariant.
+//! 4. Run up to `decode_slice` batched decode steps over every live
+//!    candidate of every decoding group, then loop back to (1)/(2).
+//! 5. A candidate retires on EOS, a stop token, its token budget, cache
+//!    capacity, or [`Engine::cancel_candidate`] — releasing its own
+//!    frontier budget while the group's shared prompt pages stay. The
+//!    group retires when its last candidate does: the terminal
+//!    [`EngineEvent::Finished`] reports the `n` best candidates by
+//!    cumulative logprob (`best_of` reranking happens engine-side).
+//!    When a quantized prefill completes, its full prompt pages are
+//!    donated to the radix cache so later requests sharing the prefix
+//!    skip that prefill work entirely.
 //!
 //! Output is an incremental [`EngineEvent`] stream: `Started` on
-//! admission, one `Token` per generated token (sampled through the
-//! request's seeded [`super::sampling::Sampler`]), and a terminal
-//! `Finished` carrying the assembled back-compat [`Response`].
+//! admission, one `Token` per generated token tagged with its candidate
+//! index and logprob, and a terminal `Finished` carrying the assembled
+//! back-compat [`Response`].
 //!
-//! Admission uses the paged [`BlockPool`] accounting: a request is only
-//! admitted when its *unshared* prompt + token budget fit in free KV
-//! blocks (cold cached pages are LRU-evicted under pressure), so decode
-//! can never deadlock on cache space. Cancellation releases the
-//! sequence's own allocation plus its radix forks and re-checks the
-//! pool's byte accounting against a from-scratch recount.
+//! Cancellation ([`Engine::cancel`]) releases every holding of the
+//! group — per-candidate frontier budgets, the shared prompt
+//! allocation, and the radix forks — and re-checks the pool's byte
+//! accounting against a from-scratch recount.
 
 use super::radix::{PrefixHit, RadixCache};
-use super::request::{EngineEvent, FinishReason, Request, Response, SeqPhase, Tracked};
+use super::request::{
+    CandidateResult, EngineEvent, FinishReason, Request, Response, SeqPhase, Tracked,
+};
+use super::sampling::Sampler;
 use crate::config::EngineConfig;
 use crate::kvcache::{BlockPool, SeqId, SeqKv};
 use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv, PAGE_TOKENS};
@@ -39,24 +60,101 @@ use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::time::Instant;
 
-/// Scheduler state of one batch slot.
+/// Hard cap on candidates per request (`max(n, best_of)`): a fork bomb
+/// is an admission error, not a scheduling problem.
+pub const MAX_GROUP: usize = 16;
+
+/// One candidate sequence of a group: its sampler stream, accumulated
+/// output, cache payload, and pool holding. `kv` is `Some` exactly
+/// while the candidate decodes; retiring a candidate drops the payload
+/// (freeing its COW frontier) and releases its pool budget.
+struct Candidate {
+    idx: usize,
+    sampler: Sampler,
+    output: Vec<i32>,
+    logprobs: Vec<f32>,
+    cum_logprob: f64,
+    next_token: i32,
+    kv: Option<SeqKv>,
+    /// Pool id of this candidate's decode-frontier budget.
+    pool_id: SeqId,
+    finish: Option<FinishReason>,
+}
+
+impl Candidate {
+    fn live(&self) -> bool {
+        self.finish.is_none()
+    }
+
+    /// Record one generated token and return its stream event. (The
+    /// group's decode-time total accumulates on its `Tracked`; the
+    /// per-token share rides the event.)
+    fn push_token(&mut self, id: u64, tok: i32, logprob: f32, decode_ms: f64) -> EngineEvent {
+        self.output.push(tok);
+        self.logprobs.push(logprob);
+        self.cum_logprob += logprob as f64;
+        self.next_token = tok;
+        EngineEvent::Token {
+            id,
+            candidate: self.idx,
+            token: tok,
+            index: self.output.len() - 1,
+            logprob,
+            decode_ms,
+        }
+    }
+
+    fn result(&self) -> CandidateResult {
+        CandidateResult {
+            candidate: self.idx,
+            output: self.output.clone(),
+            finish: self.finish.unwrap_or(FinishReason::Cancelled),
+            cum_logprob: self.cum_logprob,
+            logprobs: self.logprobs.clone(),
+        }
+    }
+}
+
+/// Rank a group's candidates for reporting: cancelled candidates last,
+/// then cumulative logprob descending, candidate index breaking ties —
+/// so a greedy group (all candidates identical) reports candidate 0
+/// first and `Response::output` replays the `n = 1` stream.
+fn rank_candidates(cands: &[Candidate]) -> Vec<CandidateResult> {
+    let mut rs: Vec<CandidateResult> = cands.iter().map(Candidate::result).collect();
+    rs.sort_by(|a, b| {
+        let ca = (a.finish == FinishReason::Cancelled) as u8;
+        let cb = (b.finish == FinishReason::Cancelled) as u8;
+        ca.cmp(&cb)
+            .then(b.cum_logprob.total_cmp(&a.cum_logprob))
+            .then(a.candidate.cmp(&b.candidate))
+    });
+    rs
+}
+
+/// Scheduler state of one batch slot (one slot = one sequence group).
 enum SlotState {
-    /// Streaming prefill in flight (advanced one chunk per step).
+    /// Streaming prefill in flight (advanced one chunk per step) —
+    /// shared by the whole group.
     Prefilling(PrefillSeq),
-    /// Generating tokens over its cache.
-    Decoding(SeqKv),
+    /// The group's candidates generating tokens over their caches.
+    Decoding(Vec<Candidate>),
 }
 
 struct Active {
     tracked: Tracked,
     state: SlotState,
-    /// Engine-issued [`BlockPool`] id of this sequence's own allocation.
-    /// Client-chosen request ids never enter the pool namespace — every
-    /// pool id (sequences, radix nodes, shared forks) comes from one
+    /// Engine-issued [`BlockPool`] id of the group's shared prompt
+    /// allocation (the unshared prompt tokens, accounted once however
+    /// many candidates attend them). Client-chosen request ids never
+    /// enter the pool namespace — every pool id (prompt allocations,
+    /// candidate budgets, radix nodes, shared forks) comes from one
     /// internal counter, so they cannot collide.
-    pool_id: SeqId,
+    prompt_pool_id: SeqId,
+    /// Per-candidate budget allocations reserved at admission; consumed
+    /// into [`Candidate`] records at the decode boundary (empty after).
+    cand_pool_ids: Vec<SeqId>,
     /// Pool ids forked from radix-cache nodes (pins the shared pages'
-    /// admission blocks for this sequence's lifetime).
+    /// admission blocks for the group's lifetime).
     shared_forks: Vec<SeqId>,
     /// Prompt tokens imported from the prefix cache (never prefilled
     /// here).
@@ -68,10 +166,14 @@ struct Active {
 pub struct EngineStats {
     pub completed: u64,
     pub rejected: u64,
-    /// Requests cancelled mid-flight (queued, prefilling, or decoding).
+    /// Requests (whole groups) cancelled mid-flight.
     pub cancelled: u64,
+    /// Individual candidates cancelled out of groups that kept running.
+    pub cancelled_candidates: u64,
+    /// Requests admitted with more than one candidate.
+    pub grouped_requests: u64,
     /// Prompt tokens actually run through the model (prefix-cache hits
-    /// are excluded — they skip prefill).
+    /// are excluded — they skip prefill; a group's prompt counts once).
     pub prefill_tokens: u64,
     /// Prefill chunks processed (chunked scheduler work units).
     pub prefill_chunks: u64,
@@ -91,7 +193,8 @@ pub struct EngineStats {
     /// The same cost at f32 — `kv_bytes_per_token / kv_f32_bytes_per_token`
     /// is the cache compression the format buys.
     pub kv_f32_bytes_per_token: u64,
-    /// Peak resident bytes of all active sequence caches.
+    /// Peak resident bytes of all active sequence caches (group-shared
+    /// decoded-page caches counted once per group).
     pub kv_bytes_peak: u64,
     /// Per-precision page-decode hits (quantized caches only).
     pub kv_pages: crate::metrics::KvPageStats,
@@ -141,9 +244,14 @@ pub struct Engine {
     radix: Option<RadixCache>,
     /// Effective prefill chunk (config value rounded up to whole pages).
     prefill_chunk: usize,
+    /// Live decoded-page-cache bytes across active groups (sampled each
+    /// step; shared sibling caches counted once per group). Charged
+    /// against the pool's byte budget at admission.
+    decoded_live: usize,
     /// Id source for every [`BlockPool`] sequence this engine creates
-    /// (request allocations, radix nodes, shared forks). Pool ids are
-    /// never taken from client-supplied request ids.
+    /// (prompt allocations, candidate budgets, radix nodes, shared
+    /// forks). Pool ids are never taken from client-supplied request
+    /// ids.
     next_internal: u64,
     pub stats: EngineStats,
 }
@@ -154,14 +262,19 @@ impl Engine {
         // cache budget (ignored by backends without those mechanisms).
         backend.set_perf(cfg.threads, cfg.decoded_cache_bytes);
         let max_slots = backend.decode_buckets().into_iter().max().unwrap_or(1);
-        // Format-aware KV accounting: the physical budget is what the f32
-        // slots would occupy (max_slots full-length caches); cheaper
+        // Format-aware KV accounting: the physical budget defaults to
+        // what the f32 slots would occupy (max_slots full-length caches)
+        // unless the deployment pins it (`kv_budget_bytes`); cheaper
         // formats get proportionally more 16-token admission blocks.
         let block_tokens = PAGE_TOKENS;
         let (nl, hk, dh) = backend.kv_dims();
         let f32_bpt = 2 * nl * hk * dh * 4;
         let bpt = 2 * nl * hk * cfg.kv_format.row_bytes(dh);
-        let budget = max_slots * backend.cache_len() * f32_bpt;
+        let budget = if cfg.kv_budget_bytes > 0 {
+            cfg.kv_budget_bytes
+        } else {
+            max_slots * backend.cache_len() * f32_bpt
+        };
         let kv_quant = match cfg.kv_format {
             KvFormat::F32 => None,
             format => Some(KvQuantConfig {
@@ -197,6 +310,7 @@ impl Engine {
             kv_dims: (nl, hk, dh),
             radix,
             prefill_chunk,
+            decoded_live: 0,
             next_internal: 0,
             stats,
         }
@@ -217,7 +331,7 @@ impl Engine {
     }
 
     /// Bytes of KV blocks currently referenced in the admission pool
-    /// (running sequences + retained radix pages). Recounted from the
+    /// (running groups + retained radix pages). Recounted from the
     /// refcount plane on every call — cancellation tests compare this
     /// against the pre-admission value.
     pub fn kv_bytes_in_use(&self) -> usize {
@@ -229,62 +343,132 @@ impl Engine {
         self.pool.free_blocks()
     }
 
+    /// Live decoded-page-cache bytes across active groups, as sampled
+    /// after the last scheduler step (what admission charges on top of
+    /// quantized pool bytes).
+    pub fn decoded_bytes_live(&self) -> usize {
+        self.decoded_live
+    }
+
     /// Structural pool-accounting check (used by cancellation paths and
     /// tests).
     pub fn pool_check(&self) -> crate::Result<()> {
         self.pool.check_invariants()
     }
 
+    fn reject(&mut self, req: &Request, error: String) -> Response {
+        self.stats.rejected += 1;
+        Response {
+            id: req.id,
+            output: vec![],
+            finish: FinishReason::Rejected,
+            candidates: vec![],
+            queue_ms: 0.0,
+            prefill_ms: 0.0,
+            decode_ms: 0.0,
+            ttft_ms: 0.0,
+            error: Some(error),
+        }
+    }
+
     /// Submit a request; returns an immediate rejection response when
-    /// admission is impossible (prompt too long / queue full).
+    /// admission is impossible (prompt too long / queue full / invalid
+    /// or oversized candidate group).
     pub fn submit(&mut self, req: Request) -> Option<Response> {
         if self.queue.len() >= self.cfg.queue_limit {
-            self.stats.rejected += 1;
-            return Some(Response {
-                id: req.id,
-                output: vec![],
-                finish: FinishReason::Rejected,
-                queue_ms: 0.0,
-                prefill_ms: 0.0,
-                decode_ms: 0.0,
-                ttft_ms: 0.0,
-                error: Some("queue full".into()),
-            });
+            return Some(self.reject(&req, "queue full".into()));
+        }
+        let s = &req.sampling;
+        if s.best_of != 0 && s.best_of < s.n.max(1) {
+            let msg = format!("best_of {} < n {}", s.best_of, s.n);
+            return Some(self.reject(&req, msg));
+        }
+        let group = s.group_size();
+        if group > MAX_GROUP {
+            let msg = format!("group of {group} candidates exceeds the cap of {MAX_GROUP}");
+            return Some(self.reject(&req, msg));
         }
         let budget = req.tokens.len() + req.max_new_tokens.min(self.cfg.max_new_tokens);
         if req.tokens.is_empty() || budget > self.backend.cache_len() {
-            self.stats.rejected += 1;
-            return Some(Response {
-                id: req.id,
-                output: vec![],
-                finish: FinishReason::Rejected,
-                queue_ms: 0.0,
-                prefill_ms: 0.0,
-                decode_ms: 0.0,
-                ttft_ms: 0.0,
-                error: Some(format!(
-                    "prompt+budget {budget} exceeds cache {}",
-                    self.backend.cache_len()
-                )),
-            });
+            let msg = format!(
+                "prompt+budget {budget} exceeds cache {}",
+                self.backend.cache_len()
+            );
+            return Some(self.reject(&req, msg));
+        }
+        // A group whose combined block budget cannot fit even an empty
+        // pool would queue forever — reject it up front. Credit the
+        // best-case prefix-cache share (the chunk-aligned prefix
+        // strictly inside the prompt): a warm-cache request may need far
+        // fewer blocks than its cold-start worst case, and admission
+        // re-checks the real hit each step.
+        let best_share = if self.radix.is_some() {
+            (req.tokens.len().saturating_sub(1) / self.prefill_chunk) * self.prefill_chunk
+        } else {
+            0
+        };
+        if self.group_blocks_needed(&req, best_share) > self.pool.num_blocks() {
+            let msg = format!(
+                "group KV budget ({} blocks) exceeds the pool ({} blocks)",
+                self.group_blocks_needed(&req, best_share),
+                self.pool.num_blocks()
+            );
+            return Some(self.reject(&req, msg));
         }
         self.queue.push_back(Tracked::new(req));
         None
     }
 
+    /// Pool tokens of candidate `i`'s budget. Candidate 0 keeps the
+    /// original frontier, so its decode growth first fills the free rows
+    /// of the prompt's last block (already covered by the prompt
+    /// allocation) — charging `max_new` minus that free tail keeps an
+    /// `n = 1` request's total block count exactly equal to the pre-group
+    /// `blocks(prompt + max_new)` accounting. Every other candidate
+    /// copies the partial frontier page on its first append (quantized:
+    /// tail + growth; f32 has no page structure, so its fork is a deep
+    /// copy charged the whole prompt again).
+    fn cand_budget_tokens(&self, req: &Request, i: usize) -> usize {
+        let max_new = req.max_new_tokens.min(self.cfg.max_new_tokens);
+        let tail = req.tokens.len() % PAGE_TOKENS;
+        if i == 0 {
+            let free_tail = (PAGE_TOKENS - tail) % PAGE_TOKENS;
+            max_new.saturating_sub(free_tail)
+        } else if self.kv_quant.is_some() {
+            tail + max_new
+        } else {
+            req.tokens.len() + max_new
+        }
+    }
+
+    /// Blocks the whole group needs at admission: the unshared prompt
+    /// once plus one budget per candidate (each allocation rounds to
+    /// whole blocks independently).
+    fn group_blocks_needed(&self, req: &Request, shared_tokens: usize) -> usize {
+        let group = req.sampling.group_size();
+        let mut need = self.pool.blocks_needed(req.tokens.len() - shared_tokens);
+        for i in 0..group {
+            need += self.pool.blocks_needed(self.cand_budget_tokens(req, i));
+        }
+        need
+    }
+
     /// Cancel a request by id, wherever it is in its lifecycle. Queued
-    /// requests are dropped before admission; active ones release their
-    /// KV holdings — the sequence's own pool allocation plus the forks
-    /// pinning radix pages, and the in-flight cache payload (dropping a
-    /// quantized store decrements the shared pages' `Arc` counts, which
-    /// is what frees a COW frontier mid-prefill). Returns the terminal
-    /// event, or `None` when the id is not in flight (already finished).
+    /// requests are dropped before admission; active groups release
+    /// every KV holding — each candidate's budget and cache payload
+    /// (dropping a quantized store decrements the shared pages' `Arc`
+    /// counts, which is what frees a COW frontier), the shared prompt
+    /// allocation, and the forks pinning radix pages. Returns the
+    /// terminal event, or `None` when the id is not in flight (already
+    /// finished).
     pub fn cancel(&mut self, id: u64) -> crate::Result<Option<EngineEvent>> {
         if let Some(pos) = self.queue.iter().position(|t| t.req.id == id) {
             let mut t = self.queue.remove(pos).unwrap();
             t.queue_ms = t.enqueued.elapsed().as_secs_f64() * 1e3;
             self.stats.cancelled += 1;
-            return Ok(Some(EngineEvent::Finished(t.respond(FinishReason::Cancelled))));
+            return Ok(Some(EngineEvent::Finished(
+                t.respond(FinishReason::Cancelled, vec![]),
+            )));
         }
         let Some(idx) = self
             .active
@@ -293,18 +477,143 @@ impl Engine {
         else {
             return Ok(None);
         };
-        let Active { tracked, state, pool_id, shared_forks, .. } =
+        let Active { tracked, state, prompt_pool_id, cand_pool_ids, shared_forks, .. } =
             self.active[idx].take().unwrap();
-        // Drop the cache payload before releasing the accounting: a
-        // mid-prefill quantized store holds Arc'd shared pages whose
-        // admission blocks the forks below pin.
-        drop(state);
-        self.release_holdings(pool_id, &shared_forks)?;
+        // Drop cache payloads before releasing the accounting: a
+        // mid-prefill quantized store (and every candidate's COW fork)
+        // holds Arc'd shared pages whose admission blocks the forks
+        // below pin.
+        let finalists = match state {
+            SlotState::Prefilling(seq) => {
+                drop(seq);
+                for &cid in &cand_pool_ids {
+                    self.pool.release(cid)?;
+                }
+                vec![]
+            }
+            SlotState::Decoding(mut cands) => {
+                for c in cands.iter_mut() {
+                    if c.live() {
+                        c.finish = Some(FinishReason::Cancelled);
+                        c.kv = None;
+                        self.pool.release(c.pool_id)?;
+                    }
+                }
+                // Report every candidate's partial output, best first.
+                rank_candidates(&cands)
+            }
+        };
+        self.release_holdings(prompt_pool_id, &shared_forks)?;
         // Recount path: the byte accounting must match a from-scratch
         // recount of the refcount plane after the release.
         self.pool.check_invariants()?;
         self.stats.cancelled += 1;
-        Ok(Some(EngineEvent::Finished(tracked.respond(FinishReason::Cancelled))))
+        Ok(Some(EngineEvent::Finished(
+            tracked.respond(FinishReason::Cancelled, finalists),
+        )))
+    }
+
+    /// Cancel one candidate of a group while its siblings keep
+    /// generating. Before the decode boundary the candidate is marked
+    /// and its fork never happens; mid-decode its cache payload is
+    /// dropped (freeing the COW frontier — shared prompt pages stay
+    /// pinned by the group) and its pool budget released. Cancelling
+    /// the last live candidate retires the group: the terminal event is
+    /// returned, exactly as [`Engine::cancel`] would. `None` otherwise.
+    pub fn cancel_candidate(
+        &mut self,
+        id: u64,
+        cand: usize,
+    ) -> crate::Result<Option<EngineEvent>> {
+        if let Some(pos) = self.queue.iter().position(|t| t.req.id == id) {
+            return match Self::note_pre_cancel(&mut self.stats, &mut self.queue[pos], cand) {
+                Some(true) => self.cancel(id), // every candidate marked
+                _ => Ok(None),
+            };
+        }
+        let Some(idx) = self
+            .active
+            .iter()
+            .position(|a| a.as_ref().is_some_and(|a| a.tracked.req.id == id))
+        else {
+            return Ok(None);
+        };
+        let is_prefilling = matches!(
+            self.active[idx].as_ref().unwrap().state,
+            SlotState::Prefilling(_)
+        );
+        if is_prefilling {
+            let tracked = &mut self.active[idx].as_mut().unwrap().tracked;
+            return match Self::note_pre_cancel(&mut self.stats, tracked, cand) {
+                Some(true) => self.cancel(id), // every candidate marked
+                _ => Ok(None),
+            };
+        }
+        let mut act = self.active[idx].take().unwrap();
+        let mut hit = false;
+        {
+            let SlotState::Decoding(cands) = &mut act.state else { unreachable!() };
+            if let Some(c) = cands.iter_mut().find(|c| c.idx == cand && c.live()) {
+                c.finish = Some(FinishReason::Cancelled);
+                c.kv = None;
+                self.pool.release(c.pool_id)?;
+                self.stats.cancelled_candidates += 1;
+                hit = true;
+            }
+        }
+        let all_done = matches!(
+            &act.state,
+            SlotState::Decoding(cands) if cands.iter().all(|c| c.finish.is_some())
+        );
+        if all_done {
+            let Active { tracked, state, prompt_pool_id, shared_forks, .. } = act;
+            let SlotState::Decoding(cands) = state else { unreachable!() };
+            self.release_holdings(prompt_pool_id, &shared_forks)?;
+            self.pool.check_invariants()?;
+            // Same wire shape as a normal completion: the `n` best
+            // finalists (a whole-group `cancel` is the one path that
+            // reports everything).
+            let mut finalists = rank_candidates(&cands);
+            finalists.truncate(tracked.req.sampling.num_return());
+            // A group whose other candidates finished normally still
+            // completed; one that lost every candidate to cancels did
+            // not.
+            if finalists.iter().all(|c| c.finish == FinishReason::Cancelled) {
+                self.stats.cancelled += 1;
+            } else {
+                self.stats.completed += 1;
+            }
+            return Ok(Some(EngineEvent::Finished(
+                tracked.respond(FinishReason::Cancelled, finalists),
+            )));
+        }
+        if hit {
+            self.pool.check_invariants()?;
+        }
+        self.active[idx] = Some(act);
+        Ok(None)
+    }
+
+    /// Mark candidate `cand` of a not-yet-decoding request as cancelled
+    /// (the decode boundary skips its fork). `None` when the index is
+    /// out of range; otherwise whether *every* candidate is now marked
+    /// (the caller escalates to a whole-group cancel). Associated
+    /// function so callers can hold a disjoint borrow into the queue or
+    /// a slot alongside the stats.
+    fn note_pre_cancel(
+        stats: &mut EngineStats,
+        t: &mut Tracked,
+        cand: usize,
+    ) -> Option<bool> {
+        let group = t.req.sampling.group_size();
+        if cand >= group {
+            return None;
+        }
+        if !t.pre_cancelled.contains(&cand) {
+            t.pre_cancelled.push(cand);
+            stats.cancelled_candidates += 1;
+        }
+        Some(t.pre_cancelled.len() >= group)
     }
 
     fn free_slot(&self) -> Option<usize> {
@@ -317,25 +626,40 @@ impl Engine {
         id
     }
 
-    /// Release every pool holding of a sequence: its own allocation plus
-    /// the radix-node forks pinning shared pages.
-    fn release_holdings(&mut self, pool_id: SeqId, shared_forks: &[SeqId]) -> crate::Result<()> {
-        self.pool.release(pool_id)?;
+    /// Release the group-shared pool holdings: the prompt allocation
+    /// plus the radix-node forks pinning shared pages.
+    fn release_holdings(&mut self, prompt_pool_id: SeqId, shared_forks: &[SeqId]) -> crate::Result<()> {
+        self.pool.release(prompt_pool_id)?;
         for &id in shared_forks {
             self.pool.release(id)?;
         }
         Ok(())
     }
 
-    /// The finish reason `tok` implies for `t`, if any (EOS respects
-    /// `ignore_eos`, then the request's stop set, then the length cap).
-    fn finish_after_token(&self, t: &Tracked, tok: i32) -> Option<FinishReason> {
-        let max_new = t.req.max_new_tokens.min(self.cfg.max_new_tokens);
-        if tok == self.eos_token && !t.req.sampling.ignore_eos {
+    /// Release everything a not-yet-decoding group holds (admission and
+    /// prefill error paths).
+    fn release_group(
+        &mut self,
+        prompt_pool_id: SeqId,
+        cand_pool_ids: &[SeqId],
+        shared_forks: &[SeqId],
+    ) -> crate::Result<()> {
+        for &cid in cand_pool_ids {
+            self.pool.release(cid)?;
+        }
+        self.release_holdings(prompt_pool_id, shared_forks)
+    }
+
+    /// The finish reason `tok` implies for a candidate with `out_len`
+    /// generated tokens, if any (EOS respects `ignore_eos`, then the
+    /// request's stop set, then the length cap).
+    fn finish_after_token(&self, req: &Request, out_len: usize, tok: i32) -> Option<FinishReason> {
+        let max_new = req.max_new_tokens.min(self.cfg.max_new_tokens);
+        if tok == self.eos_token && !req.sampling.ignore_eos {
             Some(FinishReason::Eos)
-        } else if t.req.sampling.stop.contains(&tok) {
+        } else if req.sampling.stop.contains(&tok) {
             Some(FinishReason::Stop)
-        } else if t.output.len() >= max_new {
+        } else if out_len >= max_new {
             Some(FinishReason::Length)
         } else {
             None
@@ -352,8 +676,6 @@ impl Engine {
         let Some(head) = self.queue.front() else {
             return Ok(false);
         };
-        let budget =
-            head.req.tokens.len() + head.req.max_new_tokens.min(self.cfg.max_new_tokens);
 
         // Prefix-cache lookup. Sharing is capped at a prefill-chunk
         // boundary strictly inside the prompt: the warm run's remaining
@@ -378,15 +700,24 @@ impl Engine {
             shared_forks.push(child);
         }
 
-        // Admission: the unshared prompt + token budget must fit; cold
-        // cached pages are evicted LRU-first to make room. Stop as soon
-        // as an eviction frees no block (the page is still pinned by a
-        // running sequence's fork) — flushing more of the cache could not
-        // help this admission either.
-        let own_budget = budget - hit.tokens;
-        while !self.pool.can_admit(own_budget) {
-            // Only unpinned pages qualify (no running sequence forks
-            // their block), so every eviction frees a block.
+        // Admission: the group's blocks — unshared prompt once, one
+        // frontier budget per candidate — must fit, and the pool's byte
+        // budget must also cover the live decoded-page-cache bytes
+        // (admitting against quantized + decoded keeps a memory-tight
+        // deployment honest). Cold cached pages are evicted LRU-first to
+        // make room; stop as soon as an eviction frees no block — the
+        // page is still pinned by a running group's fork, so flushing
+        // more of the cache could not help this admission either.
+        let head = self.queue.front().unwrap();
+        let need = self.group_blocks_needed(&head.req, hit.tokens);
+        let fits = |pool: &BlockPool, decoded_live: usize| {
+            pool.can_admit_blocks(need)
+                && pool.bytes_in_use() + need * pool.block_bytes() + decoded_live
+                    <= pool.bytes_capacity()
+        };
+        while !fits(&self.pool, self.decoded_live) {
+            // Only unpinned pages qualify (no running group forks their
+            // block), so every eviction frees a block.
             let pool = &self.pool;
             let evicted = self.radix.as_mut().and_then(|r| {
                 r.evict_lru_leaf(|id| pool.seq_max_refcount(id) == Some(1))
@@ -396,7 +727,7 @@ impl Engine {
                 None => break,
             }
         }
-        if !self.pool.can_admit(own_budget) {
+        if !fits(&self.pool, self.decoded_live) {
             for id in shared_forks {
                 self.pool.release(id)?;
             }
@@ -405,15 +736,23 @@ impl Engine {
 
         let mut tracked = self.queue.pop_front().unwrap();
         tracked.queue_ms = tracked.enqueued.elapsed().as_secs_f64() * 1e3;
-        let pool_id = self.next_internal_id();
-        self.pool.allocate(pool_id, own_budget)?;
+        let group = tracked.req.sampling.group_size();
+        let prompt_pool_id = self.next_internal_id();
+        self.pool
+            .allocate(prompt_pool_id, tracked.req.tokens.len() - hit.tokens)?;
+        let mut cand_pool_ids = Vec::with_capacity(group);
+        for i in 0..group {
+            let cid = self.next_internal_id();
+            let toks = self.cand_budget_tokens(&tracked.req, i);
+            self.pool.allocate(cid, toks)?;
+            cand_pool_ids.push(cid);
+        }
 
         // Seed a quantized slot with the shared pages (zero-copy) and
         // open the streaming prefill.
         let seed = if hit.tokens > 0 {
             let (nl, hk, dh) = self.kv_dims;
-            let mut slot =
-                QuantSlotKv::new(self.kv_quant.clone().unwrap(), nl, hk, dh);
+            let mut slot = QuantSlotKv::new(self.kv_quant.clone().unwrap(), nl, hk, dh);
             hit.seed(&mut slot);
             Some(slot)
         } else {
@@ -427,9 +766,9 @@ impl Engine {
         ) {
             Ok(s) => s,
             Err(e) => {
-                self.release_holdings(pool_id, &shared_forks)?;
+                self.release_group(prompt_pool_id, &cand_pool_ids, &shared_forks)?;
                 self.stats.rejected += 1;
-                let mut resp = tracked.respond(FinishReason::Rejected);
+                let mut resp = tracked.respond(FinishReason::Rejected, vec![]);
                 resp.error = Some(e.to_string());
                 out.push(EngineEvent::Finished(resp));
                 return Ok(true);
@@ -439,6 +778,9 @@ impl Engine {
             self.stats.prefix_hits += 1;
             self.stats.prefix_hit_tokens += hit.tokens as u64;
         }
+        if group > 1 {
+            self.stats.grouped_requests += 1;
+        }
         out.push(EngineEvent::Started {
             id: tracked.req.id,
             queue_ms: tracked.queue_ms,
@@ -447,15 +789,16 @@ impl Engine {
         self.active[slot_idx] = Some(Active {
             tracked,
             state: SlotState::Prefilling(seq),
-            pool_id,
+            prompt_pool_id,
+            cand_pool_ids,
             shared_forks,
             shared_tokens: hit.tokens,
         });
         Ok(true)
     }
 
-    /// Advance the prefilling sequence in `idx` by one chunk (phase 2);
-    /// pushes the sequence's events when it finishes (or fails) outright.
+    /// Advance the prefilling group in `idx` by one chunk (phase 2);
+    /// pushes the group's events when it finishes (or fails) outright.
     fn advance_prefill(&mut self, idx: usize, out: &mut Vec<EngineEvent>) -> crate::Result<()> {
         let is_prefilling = matches!(
             self.active[idx].as_ref().map(|a| &a.state),
@@ -469,9 +812,9 @@ impl Engine {
         let before = seq.done;
         let t0 = Instant::now();
         if let Err(e) = self.backend.prefill_chunk(seq, self.prefill_chunk) {
-            self.release_holdings(act.pool_id, &act.shared_forks)?;
+            self.release_group(act.prompt_pool_id, &act.cand_pool_ids, &act.shared_forks)?;
             self.stats.rejected += 1;
-            let mut resp = act.tracked.respond(FinishReason::Rejected);
+            let mut resp = act.tracked.respond(FinishReason::Rejected, vec![]);
             resp.error = Some(e.to_string());
             out.push(EngineEvent::Finished(resp));
             return Ok(());
@@ -489,15 +832,25 @@ impl Engine {
     }
 
     /// Prefill finished: close the streaming state, donate prompt pages
-    /// to the radix cache, sample the first token and either retire the
-    /// sequence immediately or move it to decoding.
+    /// to the radix cache, fan the group out into candidates (candidate
+    /// 0 takes the prefilled cache, the rest fork it copy-on-write),
+    /// sample each candidate's first token from the shared prefill
+    /// logits, and either retire the group immediately or move it to
+    /// decoding.
     fn complete_prefill(
         &mut self,
         idx: usize,
         act: Active,
         out: &mut Vec<EngineEvent>,
     ) -> crate::Result<()> {
-        let Active { mut tracked, state, pool_id, shared_forks, shared_tokens } = act;
+        let Active {
+            mut tracked,
+            state,
+            prompt_pool_id,
+            cand_pool_ids,
+            shared_forks,
+            shared_tokens,
+        } = act;
         let SlotState::Prefilling(seq) = state else { unreachable!() };
         // finish_prefill is real work for deferring backends (PJRT runs
         // the whole monolithic prefill here) — it counts as prefill time.
@@ -505,9 +858,9 @@ impl Engine {
         let pre = match self.backend.finish_prefill(seq) {
             Ok(o) => o,
             Err(e) => {
-                self.release_holdings(pool_id, &shared_forks)?;
+                self.release_group(prompt_pool_id, &cand_pool_ids, &shared_forks)?;
                 self.stats.rejected += 1;
-                let mut resp = tracked.respond(FinishReason::Rejected);
+                let mut resp = tracked.respond(FinishReason::Rejected, vec![]);
                 resp.error = Some(e.to_string());
                 out.push(EngineEvent::Finished(resp));
                 return Ok(());
@@ -516,8 +869,8 @@ impl Engine {
         tracked.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
 
         // Donate the prompt's full pages to the prefix cache: each new
-        // page's admission block is forked out of this sequence's table,
-        // so it stays reserved after the sequence releases.
+        // page's admission block is forked out of the group's prompt
+        // allocation, so it stays reserved after the group releases.
         if let (Some(radix), SeqKv::Quant(q)) = (self.radix.as_mut(), &pre.kv) {
             let shared_pages = shared_tokens / PAGE_TOKENS;
             let pool = &mut self.pool;
@@ -525,11 +878,11 @@ impl Engine {
             radix.insert(&tracked.req.tokens, tracked.req.dma, q, |j| {
                 if j < shared_pages {
                     // An upstream page was evicted mid-flight; this
-                    // sequence's blocks only cover its own suffix.
+                    // group's blocks only cover its own suffix.
                     return None;
                 }
                 let id = *next_internal;
-                match pool.fork_block(pool_id, id, j - shared_pages) {
+                match pool.fork_block(prompt_pool_id, id, j - shared_pages) {
                     Ok(()) => {
                         *next_internal += 1;
                         Some(id)
@@ -539,30 +892,90 @@ impl Engine {
             });
         }
 
-        // First generated token comes from the prefill logits.
-        let tok = tracked.sampler.sample(&pre.last_logits);
-        out.push(tracked.push_token(tok, 0.0));
+        // Fan out: candidate 0 takes the prefilled cache; every other
+        // live candidate forks it (full pages Arc-shared, frontier COW,
+        // decoded-page caches shared so the prompt dequantizes once per
+        // group). Pre-cancelled candidates never fork.
+        let group = tracked.req.sampling.group_size();
+        let req_id = tracked.req.id;
+        let mut kvs: Vec<Option<SeqKv>> = Vec::with_capacity(group);
+        kvs.push(None); // placeholder for candidate 0
+        for i in 1..group {
+            kvs.push(if tracked.pre_cancelled.contains(&i) {
+                None
+            } else {
+                Some(pre.kv.fork())
+            });
+        }
+        kvs[0] = if tracked.pre_cancelled.contains(&0) { None } else { Some(pre.kv) };
+
+        // Logprobs cost an extra O(vocab) log-sum-exp per token: pay it
+        // only when the client asked for them or `best_of` ranking needs
+        // the cumulative value (untracked candidates report 0).
+        let track_lp = tracked.req.sampling.logprobs || group > 1;
+        let mut cands: Vec<Candidate> = Vec::with_capacity(group);
+        for (i, kv) in kvs.into_iter().enumerate() {
+            let mut c = Candidate {
+                idx: i,
+                sampler: tracked.sampler_for(i),
+                output: Vec::new(),
+                logprobs: Vec::new(),
+                cum_logprob: 0.0,
+                next_token: 0,
+                kv,
+                pool_id: cand_pool_ids[i],
+                finish: None,
+            };
+            if c.kv.is_none() {
+                // Pre-cancelled: budget back, never sampled.
+                c.finish = Some(FinishReason::Cancelled);
+                self.pool.release(c.pool_id)?;
+                cands.push(c);
+                continue;
+            }
+            // First generated token comes from the shared prefill
+            // logits; each candidate draws from its own seeded stream.
+            let (tok, lp) = if track_lp {
+                c.sampler.sample_with_logprob(&pre.last_logits)
+            } else {
+                (c.sampler.sample(&pre.last_logits), 0.0)
+            };
+            tracked.stamp_first_token();
+            out.push(c.push_token(req_id, tok, lp, 0.0));
+            if let Some(reason) = self.finish_after_token(&tracked.req, c.output.len(), tok) {
+                c.finish = Some(reason);
+                c.kv = None;
+                self.pool.release(c.pool_id)?;
+            }
+            cands.push(c);
+        }
         tracked.phase = SeqPhase::Decoding;
 
-        if let Some(reason) = self.finish_after_token(&tracked, tok) {
-            self.release_holdings(pool_id, &shared_forks)?;
+        if cands.iter().all(|c| c.finish.is_some()) {
+            self.release_holdings(prompt_pool_id, &shared_forks)?;
             self.stats.completed += 1;
-            out.push(EngineEvent::Finished(tracked.respond(reason)));
+            let n = tracked.req.sampling.num_return();
+            let mut finalists = rank_candidates(&cands);
+            finalists.truncate(n);
+            out.push(EngineEvent::Finished(
+                tracked.respond(FinishReason::Length, finalists),
+            ));
             return Ok(());
         }
         self.active[idx] = Some(Active {
             tracked,
-            state: SlotState::Decoding(pre.kv),
-            pool_id,
+            state: SlotState::Decoding(cands),
+            prompt_pool_id,
+            cand_pool_ids: Vec::new(),
             shared_forks,
             shared_tokens,
         });
         Ok(())
     }
 
-    /// One batched decode step over all decoding sequences; pushes a
-    /// `Token` event per sequence plus terminal events. Returns how many
-    /// sequences finished.
+    /// One batched decode step over every live candidate of every
+    /// decoding group; pushes a `Token` event per candidate plus
+    /// terminal events. Returns how many groups finished.
     fn decode_step(&mut self, out: &mut Vec<EngineEvent>) -> crate::Result<usize> {
         let idxs: Vec<usize> = (0..self.active.len())
             .filter(|&i| {
@@ -576,98 +989,151 @@ impl Engine {
             return Ok(0);
         }
         let t0 = Instant::now();
-        let tokens: Vec<i32> = idxs
-            .iter()
-            .map(|&i| self.active[i].as_ref().unwrap().tracked.next_token)
-            .collect();
-
-        // Borrow all selected slots mutably via split_at_mut-free take.
         let mut taken: Vec<Active> = idxs
             .iter()
             .map(|&i| self.active[i].take().unwrap())
             .collect();
-        {
-            let mut slot_refs: Vec<Option<&mut SeqKv>> = taken
-                .iter_mut()
-                .map(|a| match &mut a.state {
-                    SlotState::Decoding(kv) => Some(kv),
-                    SlotState::Prefilling(_) => {
-                        unreachable!("taken slots are decoding by construction")
-                    }
-                })
-                .collect();
-            let logits = self.backend.decode(&tokens, &mut slot_refs)?;
-            let vocab = self.backend.vocab();
-            let dt = t0.elapsed().as_secs_f64() * 1e3;
-            let batch_n = taken.len();
-            self.stats.decode_steps += 1;
-            self.stats.decode_batch_sum += batch_n as u64;
-            // No pool.extend here: admission already reserved the full
-            // prompt + max_new_tokens budget, so growing the accounting
-            // per generated token would double-count — and, with the
-            // radix cache retaining blocks, could spuriously exhaust the
-            // pool mid-decode.
-            for (bi, act) in taken.iter_mut().enumerate() {
-                let tok = act.tracked.sampler.sample(&logits[bi * vocab..(bi + 1) * vocab]);
-                act.tracked.decode_ms += dt / batch_n as f64;
-                out.push(act.tracked.push_token(tok, dt / batch_n as f64));
-                self.stats.decode_tokens += 1;
+
+        // One decode row per live candidate across every taken group
+        // (the backend's per-sequence fan-out sees them as independent
+        // sequences; sibling candidates share decoded-page caches).
+        let mut tokens: Vec<i32> = Vec::new();
+        let logits = {
+            let mut slot_refs: Vec<Option<&mut SeqKv>> = Vec::new();
+            for act in taken.iter_mut() {
+                let SlotState::Decoding(cands) = &mut act.state else {
+                    unreachable!("taken slots are decoding by construction")
+                };
+                for c in cands.iter_mut().filter(|c| c.finish.is_none()) {
+                    tokens.push(c.next_token);
+                    slot_refs.push(c.kv.as_mut());
+                }
             }
-        }
-        // Retire finished sequences, return the rest to their slots.
-        let mut done = 0;
-        for (k, act) in taken.into_iter().enumerate() {
-            let last = *act.tracked.output.last().unwrap();
-            let SlotState::Decoding(ref kv) = act.state else {
+            self.backend.decode(&tokens, &mut slot_refs)?
+        };
+        let vocab = self.backend.vocab();
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        let batch_n = tokens.len();
+        self.stats.decode_steps += 1;
+        self.stats.decode_batch_sum += batch_n as u64;
+        // No pool.extend here: admission already reserved every
+        // candidate's full budget, so growing the accounting per
+        // generated token would double-count — and, with the radix
+        // cache retaining blocks, could spuriously exhaust the pool
+        // mid-decode.
+        let mut bi = 0usize;
+        for Active { tracked, state, .. } in taken.iter_mut() {
+            let SlotState::Decoding(cands) = state else {
                 unreachable!("taken slots are decoding by construction")
             };
-            let cache_full = kv.pos() >= self.backend.cache_len();
-            let reason = self.finish_after_token(&act.tracked, last).or(if cache_full {
-                Some(FinishReason::CacheFull)
-            } else {
-                None
-            });
-            match reason {
-                Some(r) => {
-                    self.release_holdings(act.pool_id, &act.shared_forks)?;
-                    self.stats.completed += 1;
-                    done += 1;
-                    out.push(EngineEvent::Finished(act.tracked.respond(r)));
+            let id = tracked.req.id;
+            // See complete_prefill: logprobs only when requested or
+            // needed for best_of ranking.
+            let track_lp =
+                tracked.req.sampling.logprobs || tracked.req.sampling.group_size() > 1;
+            for c in cands.iter_mut().filter(|c| c.finish.is_none()) {
+                let row = &logits[bi * vocab..(bi + 1) * vocab];
+                let (tok, lp) = if track_lp {
+                    c.sampler.sample_with_logprob(row)
+                } else {
+                    (c.sampler.sample(row), 0.0)
+                };
+                let share = dt / batch_n as f64;
+                tracked.decode_ms += share;
+                out.push(c.push_token(id, tok, lp, share));
+                self.stats.decode_tokens += 1;
+                bi += 1;
+            }
+        }
+        // Retire finished candidates and groups, return the rest.
+        let cache_len = self.backend.cache_len();
+        let mut done = 0;
+        for (k, mut act) in taken.into_iter().enumerate() {
+            {
+                let Active { tracked, state, .. } = &mut act;
+                let SlotState::Decoding(cands) = state else { unreachable!() };
+                for c in cands.iter_mut().filter(|c| c.finish.is_none()) {
+                    let last = *c.output.last().unwrap();
+                    let cache_full = c.kv.as_ref().unwrap().pos() >= cache_len;
+                    let reason = self
+                        .finish_after_token(&tracked.req, c.output.len(), last)
+                        .or(if cache_full { Some(FinishReason::CacheFull) } else { None });
+                    if let Some(r) = reason {
+                        // Candidate retires: its COW frontier payload
+                        // drops here; its budget returns to the pool.
+                        // The group's shared prompt pages stay until the
+                        // last sibling retires.
+                        c.finish = Some(r);
+                        c.kv = None;
+                        self.pool.release(c.pool_id)?;
+                    }
                 }
-                None => self.active[idxs[k]] = Some(act),
+            }
+            let all_done = matches!(
+                &act.state,
+                SlotState::Decoding(cands) if cands.iter().all(|c| c.finish.is_some())
+            );
+            if all_done {
+                let Active { tracked, state, prompt_pool_id, shared_forks, .. } = act;
+                let SlotState::Decoding(cands) = state else { unreachable!() };
+                self.release_holdings(prompt_pool_id, &shared_forks)?;
+                self.stats.completed += 1;
+                done += 1;
+                let n = tracked.req.sampling.num_return();
+                let mut finalists = rank_candidates(&cands);
+                finalists.truncate(n);
+                out.push(EngineEvent::Finished(
+                    tracked.respond(FinishReason::Length, finalists),
+                ));
+            } else {
+                self.active[idxs[k]] = Some(act);
             }
         }
         Ok(done)
     }
 
-    /// Sample peak resident cache bytes and the backend's cumulative
+    /// Sample peak resident cache bytes, the live decoded-page-cache
+    /// bytes (admission charges them), and the backend's cumulative
     /// page-decode counters with every slot in place. Called from
-    /// [`Self::step`] after the prefill and decode phases so pure-prefill
-    /// windows (where `decode_step` never runs) are covered too — chunked
-    /// prefill is exactly when a sequence's cache grows.
+    /// [`Self::step`] after the prefill and decode phases so
+    /// pure-prefill windows (where `decode_step` never runs) are covered
+    /// too — chunked prefill is exactly when a sequence's cache grows.
+    /// Sibling candidates share decoded-page caches, so a group's
+    /// decoded bytes are counted once, not per candidate.
     fn sample_kv_stats(&mut self) {
-        let live: u64 = self
-            .active
-            .iter()
-            .flatten()
-            .map(|a| match &a.state {
-                SlotState::Decoding(kv) => kv.resident_bytes() as u64,
-                SlotState::Prefilling(seq) => seq.resident_bytes() as u64,
-            })
-            .sum();
+        let mut live: u64 = 0;
+        let mut decoded: u64 = 0;
+        for a in self.active.iter().flatten() {
+            match &a.state {
+                SlotState::Prefilling(seq) => live += seq.resident_bytes() as u64,
+                SlotState::Decoding(cands) => {
+                    let mut group_decoded = 0u64;
+                    for c in cands.iter() {
+                        if let Some(kv) = &c.kv {
+                            let db = kv.decoded_bytes() as u64;
+                            live += kv.resident_bytes() as u64 - db;
+                            group_decoded = group_decoded.max(db);
+                        }
+                    }
+                    live += group_decoded;
+                    decoded += group_decoded;
+                }
+            }
+        }
+        self.decoded_live = decoded as usize;
         self.stats.kv_bytes_peak = self.stats.kv_bytes_peak.max(live);
         self.stats.kv_pages = self.backend.kv_page_stats();
     }
 
     /// Run one scheduling iteration (admit, one prefill chunk per
-    /// prefilling sequence, then a decode slice). Returns the events the
+    /// prefilling group, then a decode slice). Returns the events the
     /// iteration produced, in emission order.
     pub fn step(&mut self) -> crate::Result<Vec<EngineEvent>> {
         self.stats.engine_steps += 1;
         let mut out = Vec::new();
         // Phase 1: admit while slots and KV blocks allow.
         while self.try_admit(&mut out)? {}
-        // Phase 2: one chunk per prefilling sequence — prefill and decode
+        // Phase 2: one chunk per prefilling group — prefill and decode
         // interleave instead of prefill running whole prompts to
         // completion first.
         for idx in 0..self.active.len() {
@@ -727,6 +1193,7 @@ impl Engine {
 enum Msg {
     Submit(Request),
     Cancel(u64),
+    CancelCandidate(u64, usize),
     Shutdown,
 }
 
@@ -791,6 +1258,16 @@ impl EngineHandle {
                             }
                             Ok(None) => {} // already finished — no-op
                             Err(e) => eprintln!("engine cancel error: {e:#}"),
+                        }
+                        false
+                    }
+                    Msg::CancelCandidate(id, cand) => {
+                        match engine.cancel_candidate(id, cand) {
+                            Ok(Some(ev)) => {
+                                let _ = tx_ev.send(ev);
+                            }
+                            Ok(None) => {} // group continues (or no-op)
+                            Err(e) => eprintln!("engine cancel-candidate error: {e:#}"),
                         }
                         false
                     }
@@ -878,6 +1355,15 @@ impl EngineHandle {
     pub fn cancel(&self, id: u64) -> crate::Result<()> {
         self.tx
             .send(Msg::Cancel(id))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))
+    }
+
+    /// Cancel one candidate of request `id`. Fire-and-forget: the
+    /// group's terminal event arrives only if this was its last live
+    /// candidate.
+    pub fn cancel_candidate(&self, id: u64, cand: usize) -> crate::Result<()> {
+        self.tx
+            .send(Msg::CancelCandidate(id, cand))
             .map_err(|_| anyhow::anyhow!("engine thread gone"))
     }
 
@@ -969,15 +1455,25 @@ mod tests {
         assert_eq!(resps[0].id, 1);
         assert!(resps[0].output.len() <= 4 && !resps[0].output.is_empty());
         assert!(matches!(resps[0].finish, FinishReason::Length | FinishReason::Eos));
+        // n = 1: exactly one finalist mirroring the flat fields.
+        assert_eq!(resps[0].candidates.len(), 1);
+        assert_eq!(resps[0].candidates[0].candidate, 0);
+        assert_eq!(resps[0].candidates[0].output, resps[0].output);
+        assert_eq!(resps[0].candidates[0].finish, resps[0].finish);
         assert_eq!(e.stats.completed, 1);
+        assert_eq!(e.stats.grouped_requests, 0);
     }
 
     #[test]
     fn event_stream_matches_terminal_response() {
         // Started precedes the first Token; the Token events replay the
-        // final output exactly, with contiguous indices; TTFT is set.
+        // final output exactly, with contiguous indices; TTFT is set and
+        // (with logprobs requested) every token carries a finite
+        // logprob.
         let mut e = engine();
-        e.submit(req(1, 8, 4));
+        let mut r = req(1, 8, 4);
+        r.sampling.logprobs = true;
+        e.submit(r);
         let events = e.run_until_idle_events().unwrap();
         assert!(matches!(events[0], EngineEvent::Started { id: 1, .. }));
         let toks: Vec<i32> = events
@@ -995,10 +1491,29 @@ mod tests {
             })
             .collect();
         assert_eq!(idxs, (0..toks.len()).collect::<Vec<_>>());
+        for ev in &events {
+            if let EngineEvent::Token { candidate, logprob, .. } = ev {
+                assert_eq!(*candidate, 0, "plain request streams candidate 0");
+                assert!(logprob.is_finite() && *logprob < 0.0, "{logprob}");
+            }
+        }
         let resp = events.last().unwrap().as_finished().expect("terminal event");
         assert_eq!(resp.output, toks);
         assert!(resp.ttft_ms > 0.0);
         assert!(resp.ttft_ms <= resp.queue_ms + resp.prefill_ms + resp.decode_ms + 1.0);
+        // Per-token logprobs accumulate into the finalist's cum_logprob.
+        let c = &resp.candidates[0];
+        assert_eq!(c.logprobs.len(), c.output.len());
+        let sum: f64 = c.logprobs.iter().map(|&l| l as f64).sum();
+        assert!((sum - c.cum_logprob).abs() < 1e-6);
+
+        // Without the flag (and with n=1) logprobs are not tracked:
+        // the hot path skips the log-sum-exp and reports zeros.
+        let mut e = engine();
+        e.submit(req(2, 8, 4));
+        let plain = e.run_until_idle().unwrap().remove(0);
+        assert!(plain.candidates[0].logprobs.iter().all(|&l| l == 0.0));
+        assert_eq!(plain.candidates[0].cum_logprob, 0.0);
     }
 
     #[test]
@@ -1429,6 +1944,32 @@ mod tests {
     }
 
     #[test]
+    fn rejects_invalid_groups() {
+        let mut e = engine();
+        // best_of below n is a contract violation.
+        let mut r = req(1, 8, 4);
+        r.sampling.n = 4;
+        r.sampling.best_of = 2;
+        let resp = e.submit(r).expect("should reject");
+        assert_eq!(resp.finish, FinishReason::Rejected);
+        assert!(resp.error.unwrap().contains("best_of"));
+        // A fork bomb is an admission error.
+        let mut r = req(2, 8, 4);
+        r.sampling.n = MAX_GROUP + 1;
+        let resp = e.submit(r).expect("should reject");
+        assert!(resp.error.unwrap().contains("cap"));
+        assert_eq!(e.stats.rejected, 2);
+        // best_of alone (n defaulting to 1) is fine.
+        let mut r = req(3, 8, 2);
+        r.sampling.best_of = 2;
+        r.sampling.temperature = 0.8;
+        r.sampling.seed = 9;
+        assert!(e.submit(r).is_none());
+        let resp = e.run_until_idle().unwrap().remove(0);
+        assert_eq!(resp.candidates.len(), 1, "n = 1 returns one finalist");
+    }
+
+    #[test]
     fn queue_limit_enforced() {
         let mut e = engine();
         e.cfg.queue_limit = 2;
@@ -1449,6 +1990,260 @@ mod tests {
         assert!(e.stats.prefill_chunks >= 2);
         assert!(e.stats.engine_steps > 0);
         assert!(e.stats.decode_tokens > 0);
+    }
+
+    // -----------------------------------------------------------------
+    // Sequence groups (n / best_of)
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn greedy_group_matches_n1_and_prefills_once() {
+        // A greedy n=4 group: every candidate replays the n=1 stream,
+        // candidate 0 is the reported best, and the prompt is prefilled
+        // exactly once for the whole group.
+        let mut solo = engine();
+        solo.submit(req(1, 8, 4));
+        let n1 = solo.run_until_idle().unwrap().remove(0);
+
+        let mut e = engine();
+        let mut r = req(1, 8, 4);
+        r.sampling.n = 4;
+        assert!(e.submit(r).is_none());
+        let events = e.run_until_idle_events().unwrap();
+        let resp = events.last().unwrap().as_finished().unwrap().clone();
+        assert_eq!(resp.candidates.len(), 4);
+        for c in &resp.candidates {
+            assert_eq!(c.output, n1.output, "greedy candidate {} diverged", c.candidate);
+            assert_eq!(c.finish, n1.finish);
+        }
+        assert_eq!(resp.candidates[0].candidate, 0, "tie-break prefers candidate 0");
+        assert_eq!(resp.output, n1.output);
+        // One prefill for the group: prompt tokens counted once.
+        assert_eq!(e.stats.prefill_tokens, 8);
+        assert_eq!(e.stats.grouped_requests, 1);
+        // Every candidate streamed its own token lines with contiguous
+        // per-candidate indices.
+        for cand in 0..4usize {
+            let idxs: Vec<usize> = events
+                .iter()
+                .filter_map(|ev| match ev {
+                    EngineEvent::Token { candidate, index, .. } if *candidate == cand => {
+                        Some(*index)
+                    }
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(idxs, (0..n1.output.len()).collect::<Vec<_>>(), "candidate {cand}");
+        }
+        // All holdings released.
+        assert_eq!(e.kv_bytes_in_use(), 0);
+        e.pool_check().unwrap();
+    }
+
+    #[test]
+    fn seeded_group_candidate0_matches_n1_and_candidates_reproduce() {
+        let mk = |n: usize| {
+            let mut r = req(1, 8, 6);
+            r.sampling = SamplingParams {
+                temperature: 0.9,
+                seed: 77,
+                ignore_eos: true,
+                n,
+                ..Default::default()
+            };
+            r
+        };
+        let mut solo = engine();
+        solo.submit(mk(1));
+        let n1 = solo.run_until_idle().unwrap().remove(0);
+
+        let by_candidate = |resp: &Response| {
+            let mut m: Vec<(usize, Vec<i32>)> = resp
+                .candidates
+                .iter()
+                .map(|c| (c.candidate, c.output.clone()))
+                .collect();
+            m.sort_by_key(|(c, _)| *c);
+            m
+        };
+        let run = |threads: usize| {
+            let cfg = EngineConfig {
+                max_new_tokens: 8,
+                threads,
+                ..Default::default()
+            };
+            let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+            e.submit(mk(4));
+            by_candidate(&e.run_until_idle().unwrap().remove(0))
+        };
+        let a = run(1);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a[0].1, n1.output, "candidate 0 must replay the n=1 stream");
+        // Distinct seeds: with temperature 0.9 over 6+ draws, at least
+        // one sibling diverges from candidate 0 (overwhelming odds).
+        assert!(a[1..].iter().any(|(_, o)| *o != a[0].1), "{a:?}");
+        // Reproducible across runs and thread counts.
+        assert_eq!(a, run(1));
+        assert_eq!(a, run(4), "threading changed a candidate stream");
+    }
+
+    #[test]
+    fn best_of_reranks_by_cum_logprob() {
+        let mut e = engine();
+        let mut r = req(1, 8, 6);
+        r.sampling = SamplingParams {
+            temperature: 1.1,
+            seed: 5,
+            ignore_eos: true,
+            n: 2,
+            best_of: 4,
+            ..Default::default()
+        };
+        assert!(e.submit(r).is_none());
+        let events = e.run_until_idle_events().unwrap();
+        // All 4 candidates streamed.
+        let mut seen: Vec<usize> = events
+            .iter()
+            .filter_map(|ev| match ev {
+                EngineEvent::Token { candidate, .. } => Some(*candidate),
+                _ => None,
+            })
+            .collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        // Only the 2 best by cumulative logprob are reported, in order.
+        let resp = events.last().unwrap().as_finished().unwrap();
+        assert_eq!(resp.candidates.len(), 2);
+        assert!(
+            resp.candidates[0].cum_logprob >= resp.candidates[1].cum_logprob,
+            "{:?}",
+            resp.candidates.iter().map(|c| c.cum_logprob).collect::<Vec<_>>()
+        );
+        assert_eq!(resp.output, resp.candidates[0].output);
+        for c in &resp.candidates {
+            let sum: f64 = c.logprobs.iter().map(|&l| l as f64).sum();
+            assert!((sum - c.cum_logprob).abs() < 1e-6);
+        }
+        e.pool_check().unwrap();
+        assert_eq!(e.kv_bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn cancel_candidate_frees_frontier_and_group_continues() {
+        // decode_slice 1 + ignore_eos keeps the group decoding across
+        // steps so the candidate-cancel lands mid-flight.
+        let cfg = EngineConfig { max_new_tokens: 8, decode_slice: 1, ..Default::default() };
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        let mut r = req(1, 8, 8);
+        r.sampling.n = 3;
+        r.sampling.ignore_eos = true;
+        assert!(e.submit(r).is_none());
+        e.step().unwrap(); // admit + prefill + first decode step
+        let bytes_before = e.kv_bytes_in_use();
+        assert!(bytes_before > 0);
+
+        // Cancel candidate 1: exactly its budget returns, the shared
+        // prompt allocation stays, the group keeps decoding.
+        let ev = e.cancel_candidate(1, 1).unwrap();
+        assert!(ev.is_none(), "two candidates still live");
+        let freed = bytes_before - e.kv_bytes_in_use();
+        let mut probe = req(1, 8, 8);
+        probe.sampling.n = 3;
+        let cand_blocks = e.pool.blocks_needed(e.cand_budget_tokens(&probe, 1));
+        assert_eq!(freed, cand_blocks * e.pool.block_bytes());
+        e.pool_check().unwrap();
+        assert_eq!(e.stats.cancelled_candidates, 1);
+        assert!(!e.idle());
+
+        // Unknown candidate / request: no-ops.
+        assert!(e.cancel_candidate(1, 9).unwrap().is_none());
+        assert!(e.cancel_candidate(99, 0).unwrap().is_none());
+
+        let resp = e.run_until_idle().unwrap().remove(0);
+        // The group completed; the cancelled candidate reports its
+        // partial output, ranked after the finished siblings.
+        assert_eq!(resp.candidates.len(), 3);
+        assert_eq!(resp.finish, FinishReason::Length);
+        let cancelled: Vec<&CandidateResult> = resp
+            .candidates
+            .iter()
+            .filter(|c| c.finish == FinishReason::Cancelled)
+            .collect();
+        assert_eq!(cancelled.len(), 1);
+        assert_eq!(cancelled[0].candidate, 1);
+        assert!(cancelled[0].output.len() < 8);
+        assert_eq!(resp.candidates.last().unwrap().candidate, 1, "cancelled ranks last");
+        assert_eq!(e.stats.completed, 1);
+        assert_eq!(e.kv_bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn cancelling_every_candidate_ends_the_group() {
+        let cfg = EngineConfig { max_new_tokens: 8, decode_slice: 1, ..Default::default() };
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        let mut r = req(1, 8, 8);
+        r.sampling.n = 2;
+        r.sampling.ignore_eos = true;
+        e.submit(r);
+        e.step().unwrap();
+        assert!(e.cancel_candidate(1, 0).unwrap().is_none());
+        let ev = e.cancel_candidate(1, 1).unwrap().expect("last candidate ends the group");
+        let resp = ev.as_finished().unwrap();
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert_eq!(resp.candidates.len(), 2);
+        assert!(e.idle());
+        assert_eq!(e.kv_bytes_in_use(), 0);
+        e.pool_check().unwrap();
+        assert_eq!(e.stats.cancelled, 1, "all-cancelled group counts as cancelled");
+    }
+
+    #[test]
+    fn cancel_whole_group_recounts_pool() {
+        let cfg = EngineConfig { max_new_tokens: 16, decode_slice: 1, ..Default::default() };
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        let bytes0 = e.kv_bytes_in_use();
+        let mut r = req(1, 8, 16);
+        r.sampling.n = 4;
+        r.sampling.ignore_eos = true;
+        e.submit(r);
+        e.step().unwrap();
+        assert!(e.kv_bytes_in_use() > bytes0);
+        let ev = e.cancel(1).unwrap().expect("group cancels");
+        let resp = ev.as_finished().unwrap();
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert_eq!(resp.candidates.len(), 4, "every candidate reported");
+        assert_eq!(e.kv_bytes_in_use(), bytes0);
+        e.pool_check().unwrap();
+        assert!(e.idle());
+    }
+
+    #[test]
+    fn pre_decode_candidate_cancel_skips_the_fork() {
+        // Cancelling a candidate while the group still prefills marks it
+        // pre-cancelled: it never forks, never samples, and its budget
+        // returns at the decode boundary.
+        let cfg = EngineConfig {
+            max_new_tokens: 4,
+            prefill_chunk: 16,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        let mut r = req(1, 64, 4); // 4 chunks: stays prefilling across steps
+        r.sampling.n = 2;
+        e.submit(r);
+        e.step().unwrap(); // admitted, first chunk
+        assert!(e.cancel_candidate(1, 1).unwrap().is_none());
+        assert_eq!(e.stats.cancelled_candidates, 1);
+        let resp = e.run_until_idle().unwrap().remove(0);
+        assert_eq!(resp.candidates.len(), 2);
+        let c1 = resp.candidates.iter().find(|c| c.candidate == 1).unwrap();
+        assert_eq!(c1.finish, FinishReason::Cancelled);
+        assert!(c1.output.is_empty(), "pre-cancelled candidate never sampled");
+        let c0 = resp.candidates.iter().find(|c| c.candidate == 0).unwrap();
+        assert!(!c0.output.is_empty());
+        assert_eq!(e.kv_bytes_in_use(), 0);
+        e.pool_check().unwrap();
     }
 
     #[test]

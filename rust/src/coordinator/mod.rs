@@ -11,5 +11,7 @@ pub mod router;
 pub mod sampling;
 
 pub use engine::{Engine, EngineHandle};
-pub use request::{EngineEvent, FinishReason, Request, Response, SamplingParams};
+pub use request::{
+    CandidateResult, EngineEvent, FinishReason, Request, Response, SamplingParams,
+};
 pub use sampling::Sampler;

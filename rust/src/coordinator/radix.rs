@@ -19,8 +19,10 @@
 //! Sharing is pure [`Arc`] cloning, no payload copies: [`PrefixHit::seed`]
 //! imports the hit pages into a fresh sequence slot via
 //! [`crate::kvquant::QuantPagedKv::push_shared_page`] (the related
-//! `QuantPagedKv::fork` is the whole-store sequence-fork primitive for
-//! future beam/parallel sampling — same pages, copy-on-write frontier).
+//! `QuantPagedKv::fork` is the whole-store sequence-fork primitive the
+//! engine uses for parallel-sampling candidates — same pages,
+//! copy-on-write frontier; both sharing mechanisms compose, so a
+//! group's prefix-cache pages are pinned once per group).
 //! Pool accounting is wired through
 //! [`crate::kvcache::BlockPool::fork_block`] (donation: one admission
 //! block per cached page, split out of the donor's table) and

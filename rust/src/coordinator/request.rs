@@ -1,19 +1,26 @@
 //! Request/response types, sampling parameters, the incremental
 //! [`EngineEvent`] stream, and the request state machine.
 //!
-//! The serving contract is event-based: the engine emits `Started` when
-//! a request is admitted, one `Token` per generated token, and a
-//! terminal `Finished` carrying the assembled [`Response`] — so clients
-//! can stream tokens and measure TTFT, while batch callers keep
-//! consuming the back-compat `Response` built from the same events.
+//! The serving contract is event-based and *group*-shaped: one request
+//! asks for `n` parallel samples (optionally reranked from `best_of`
+//! generated candidates), the engine emits `Started` when the group is
+//! admitted, one `Token` per generated token tagged with its candidate
+//! index, and a terminal `Finished` carrying the assembled [`Response`]
+//! with the `n` finalists ranked by cumulative logprob — so clients can
+//! stream per-candidate token lines and measure TTFT, while batch
+//! callers keep consuming the back-compat `Response` built from the
+//! same events (for `n = 1` its shape is exactly the PR-3 contract).
 
 use super::sampling::Sampler;
 use std::time::Instant;
 
 /// Per-request decoding controls. `temperature == 0` (the default)
 /// selects greedy argmax; otherwise sampling is fully deterministic
-/// given `seed` — the per-request sampler owns its own RNG stream, so
-/// batch composition and scheduling cannot change a request's tokens.
+/// given `seed` — each candidate of the group owns its own RNG stream
+/// with a seed derived from `(seed, candidate)`
+/// ([`super::sampling::derive_seed`]), so batch composition, scheduling,
+/// thread counts, and sibling candidates cannot change a candidate's
+/// tokens.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SamplingParams {
     /// Softmax temperature; 0 means greedy (argmax).
@@ -23,7 +30,8 @@ pub struct SamplingParams {
     /// Nucleus sampling: keep the smallest probability mass >= `top_p`
     /// (1.0 = off).
     pub top_p: f32,
-    /// Seed of the request's private RNG stream.
+    /// Seed of the request's private RNG stream (candidate 0 uses it
+    /// verbatim, so candidate 0 of a group replays an `n = 1` request).
     pub seed: u64,
     /// Generation stops when any of these token ids is produced
     /// (the stop token is included in the output, like EOS).
@@ -31,6 +39,16 @@ pub struct SamplingParams {
     /// Keep generating past the EOS token (benchmarks, fixed-length
     /// probes).
     pub ignore_eos: bool,
+    /// Parallel samples to return (candidates share one prompt prefill
+    /// and fork the quantized KV copy-on-write at the decode boundary).
+    /// 0 is treated as 1.
+    pub n: usize,
+    /// Candidates to *generate* before keeping the best `n` by
+    /// cumulative logprob (0 = same as `n`; must be >= `n` otherwise).
+    pub best_of: usize,
+    /// Report per-token logprobs in `Token` events and the terminal
+    /// candidates (the wire shape only grows when this is set).
+    pub logprobs: bool,
 }
 
 impl Default for SamplingParams {
@@ -42,7 +60,23 @@ impl Default for SamplingParams {
             seed: 0,
             stop: Vec::new(),
             ignore_eos: false,
+            n: 1,
+            best_of: 0,
+            logprobs: false,
         }
+    }
+}
+
+impl SamplingParams {
+    /// Candidates the engine actually runs: `max(best_of, n, 1)`.
+    pub fn group_size(&self) -> usize {
+        self.best_of.max(self.n).max(1)
+    }
+
+    /// Finalists the terminal response reports: `n` clamped to the
+    /// group size.
+    pub fn num_return(&self) -> usize {
+        self.n.max(1).min(self.group_size())
     }
 }
 
@@ -78,7 +112,7 @@ pub enum FinishReason {
     Length,
     /// Hit the engine cache capacity.
     CacheFull,
-    /// Rejected at admission (queue full / prompt too long).
+    /// Rejected at admission (queue full / prompt too long / bad group).
     Rejected,
     /// Cancelled by the client (or its connection going away).
     Cancelled,
@@ -97,16 +131,41 @@ impl FinishReason {
     }
 }
 
+/// One finalist of a sequence group, as reported by the terminal
+/// [`Response`]. `candidate` is the stable in-group index (the one the
+/// stream's `Token` events were tagged with), preserved through the
+/// logprob-ranked reordering.
+#[derive(Clone, Debug)]
+pub struct CandidateResult {
+    pub candidate: usize,
+    pub output: Vec<i32>,
+    pub finish: FinishReason,
+    /// Sum of the per-token logprobs under the raw model distribution
+    /// (the `best_of` ranking key). 0 for requests that neither set
+    /// `logprobs` nor run multiple candidates — the engine skips the
+    /// per-token log-sum-exp entirely there.
+    pub cum_logprob: f64,
+    /// Per-token logprob of each output token (zeros when untracked;
+    /// the wire only carries it when the request set `logprobs`).
+    pub logprobs: Vec<f32>,
+}
+
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    /// Best finalist's output (identical to `candidates[0].output` when
+    /// finalists exist) — the back-compat `n = 1` view.
     pub output: Vec<i32>,
     pub finish: FinishReason,
+    /// The group's finalists, best first (cum logprob descending,
+    /// candidate index breaking ties; cancelled candidates sort last).
+    /// One entry for a plain `n = 1` request; empty on rejection.
+    pub candidates: Vec<CandidateResult>,
     /// Wall-clock milliseconds spent queued before prefill.
     pub queue_ms: f64,
-    /// Prefill latency (ms).
+    /// Prefill latency (ms) — shared by the whole group.
     pub prefill_ms: f64,
-    /// Total decode time (ms) across all generated tokens.
+    /// Total decode time (ms) across all candidates' generated tokens.
     pub decode_ms: f64,
     /// Wall-clock submit-to-first-token latency (ms); 0 when no token
     /// was produced (rejection / pre-prefill cancel).
@@ -120,10 +179,23 @@ pub struct Response {
 pub enum EngineEvent {
     /// The request left the queue and entered prefill.
     Started { id: u64, queue_ms: f64 },
-    /// One generated token. `index` is its position in the output
-    /// (0-based); `decode_ms` is this token's share of its batched
-    /// decode step (0 for the first token, which prefill produces).
-    Token { id: u64, token: i32, index: usize, decode_ms: f64 },
+    /// One generated token. `candidate` is the producing candidate's
+    /// in-group index (0 for plain requests); `index` is the token's
+    /// position in that candidate's output (0-based); `logprob` is its
+    /// log-probability under the raw model distribution — tracked only
+    /// when the request set `logprobs` or runs more than one candidate
+    /// (`best_of` ranking needs it); 0 otherwise, sparing the default
+    /// greedy hot path an O(vocab) log-sum-exp per token. `decode_ms` is
+    /// this token's share of its batched decode step (0 for a first
+    /// token, which prefill produces).
+    Token {
+        id: u64,
+        candidate: usize,
+        token: i32,
+        index: usize,
+        logprob: f32,
+        decode_ms: f64,
+    },
     /// Terminal: the request finished, failed, or was cancelled.
     Finished(Response),
 }
@@ -170,60 +242,66 @@ pub(crate) enum SeqPhase {
     Decoding,
 }
 
+/// Group-level bookkeeping of one tracked request: lifecycle phase and
+/// timing. Per-candidate state (sampler, output, KV payload, pool
+/// holdings) lives in the engine's candidate records — the group shares
+/// one queue slot, one prefill, and one terminal response.
 #[derive(Debug)]
 pub(crate) struct Tracked {
     pub req: Request,
     pub phase: SeqPhase,
-    pub output: Vec<i32>,
     pub enqueued: Instant,
     pub prefill_ms: f64,
     pub decode_ms: f64,
     pub queue_ms: f64,
     pub ttft_ms: f64,
-    /// Next token to feed at the coming decode step.
-    pub next_token: i32,
-    /// Per-request seeded sampler (owns the request's RNG stream).
-    pub sampler: Sampler,
+    /// Candidate indices cancelled before the decode boundary existed
+    /// (the engine skips forking them instead of cancelling a fork).
+    pub pre_cancelled: Vec<usize>,
 }
 
 impl Tracked {
     pub fn new(req: Request) -> Tracked {
-        let sampler = Sampler::new(&req.sampling);
         Tracked {
             req,
             phase: SeqPhase::Queued,
-            output: Vec::new(),
             enqueued: Instant::now(),
             prefill_ms: 0.0,
             decode_ms: 0.0,
             queue_ms: 0.0,
             ttft_ms: 0.0,
-            next_token: 0,
-            sampler,
+            pre_cancelled: Vec::new(),
         }
     }
 
-    /// Record one generated token and return its stream event. The
-    /// first token stamps the request's wall-clock TTFT.
-    pub fn push_token(&mut self, tok: i32, decode_ms: f64) -> EngineEvent {
-        if self.output.is_empty() {
+    /// Per-candidate sampler (derived seed; candidate 0 replays `n = 1`).
+    pub fn sampler_for(&self, candidate: usize) -> Sampler {
+        Sampler::for_candidate(&self.req.sampling, candidate)
+    }
+
+    /// Stamp the group's wall-clock TTFT at its first generated token
+    /// (idempotent: only the first call records).
+    pub fn stamp_first_token(&mut self) {
+        if self.ttft_ms == 0.0 {
             self.ttft_ms = self.enqueued.elapsed().as_secs_f64() * 1e3;
         }
-        self.output.push(tok);
-        self.next_token = tok;
-        EngineEvent::Token {
-            id: self.req.id,
-            token: tok,
-            index: self.output.len() - 1,
-            decode_ms,
-        }
     }
 
-    pub fn respond(&self, finish: FinishReason) -> Response {
+    /// Assemble the terminal response from ranked finalists (best
+    /// first). `fallback` is the group-level finish when no candidate
+    /// exists (rejection, pre-prefill cancel).
+    pub fn respond(
+        &self,
+        fallback: FinishReason,
+        finalists: Vec<CandidateResult>,
+    ) -> Response {
+        let output = finalists.first().map(|c| c.output.clone()).unwrap_or_default();
+        let finish = finalists.first().map(|c| c.finish).unwrap_or(fallback);
         Response {
             id: self.req.id,
-            output: self.output.clone(),
+            output,
             finish,
+            candidates: finalists,
             queue_ms: self.queue_ms,
             prefill_ms: self.prefill_ms,
             decode_ms: self.decode_ms,
@@ -246,13 +324,32 @@ mod tests {
     }
 
     #[test]
-    fn sampling_defaults_are_greedy() {
+    fn sampling_defaults_are_greedy_single() {
         let p = SamplingParams::default();
         assert_eq!(p.temperature, 0.0);
         assert_eq!(p.top_k, 0);
         assert_eq!(p.top_p, 1.0);
         assert!(p.stop.is_empty());
         assert!(!p.ignore_eos);
+        assert_eq!(p.n, 1);
+        assert_eq!(p.best_of, 0);
+        assert!(!p.logprobs);
+        assert_eq!(p.group_size(), 1);
+        assert_eq!(p.num_return(), 1);
+    }
+
+    #[test]
+    fn group_size_combines_n_and_best_of() {
+        let p = SamplingParams { n: 2, best_of: 4, ..Default::default() };
+        assert_eq!(p.group_size(), 4);
+        assert_eq!(p.num_return(), 2);
+        // best_of 0 means "= n"; n 0 is treated as 1.
+        let p = SamplingParams { n: 3, ..Default::default() };
+        assert_eq!(p.group_size(), 3);
+        assert_eq!(p.num_return(), 3);
+        let p = SamplingParams { n: 0, best_of: 2, ..Default::default() };
+        assert_eq!(p.group_size(), 2);
+        assert_eq!(p.num_return(), 1);
     }
 
     #[test]
@@ -267,27 +364,55 @@ mod tests {
         t.prefill_ms = 1.5;
         t.decode_ms = 3.0;
         t.queue_ms = 0.5;
-        let ev = t.push_token(9, 0.0);
-        assert!(matches!(ev, EngineEvent::Token { id: 7, token: 9, index: 0, .. }));
-        assert!(t.ttft_ms >= 0.0);
-        let ev = t.push_token(8, 0.25);
-        assert!(matches!(ev, EngineEvent::Token { index: 1, .. }));
-        let r = t.respond(FinishReason::Length);
+        t.stamp_first_token();
+        let first = t.ttft_ms;
+        assert!(first > 0.0);
+        t.stamp_first_token();
+        assert_eq!(t.ttft_ms, first, "TTFT stamps once");
+        let finalists = vec![CandidateResult {
+            candidate: 0,
+            output: vec![9, 8],
+            finish: FinishReason::Length,
+            cum_logprob: -1.25,
+            logprobs: vec![-0.5, -0.75],
+        }];
+        let r = t.respond(FinishReason::Cancelled, finalists);
         assert_eq!(r.id, 7);
         assert_eq!(r.output, vec![9, 8]);
-        assert_eq!(r.finish, FinishReason::Length);
+        assert_eq!(r.finish, FinishReason::Length, "best finalist wins");
+        assert_eq!(r.candidates.len(), 1);
+        assert!((r.candidates[0].cum_logprob + 1.25).abs() < 1e-12);
         assert!(r.prefill_ms > 0.0);
+        // No finalists: the fallback reason and an empty output.
+        let r = t.respond(FinishReason::Rejected, vec![]);
+        assert!(r.output.is_empty());
+        assert_eq!(r.finish, FinishReason::Rejected);
     }
 
     #[test]
     fn event_id_rewrite() {
-        let mut ev = EngineEvent::Token { id: 3, token: 1, index: 0, decode_ms: 0.0 };
+        let mut ev = EngineEvent::Token {
+            id: 3,
+            candidate: 1,
+            token: 1,
+            index: 0,
+            logprob: -0.1,
+            decode_ms: 0.0,
+        };
         assert_eq!(ev.id(), 3);
         ev.set_id(99);
         assert_eq!(ev.id(), 99);
-        let mut t = Tracked::new(Request { id: 4, tokens: vec![1], ..Default::default() });
-        t.push_token(2, 0.0);
-        let mut fin = EngineEvent::Finished(t.respond(FinishReason::Eos));
+        let t = Tracked::new(Request { id: 4, tokens: vec![1], ..Default::default() });
+        let mut fin = EngineEvent::Finished(t.respond(
+            FinishReason::Eos,
+            vec![CandidateResult {
+                candidate: 0,
+                output: vec![2],
+                finish: FinishReason::Eos,
+                cum_logprob: -0.5,
+                logprobs: vec![-0.5],
+            }],
+        ));
         fin.set_id(42);
         assert_eq!(fin.id(), 42);
         assert_eq!(fin.as_finished().unwrap().id, 42);

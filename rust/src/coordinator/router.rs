@@ -175,6 +175,20 @@ impl Router {
         }
     }
 
+    /// Route a single-candidate cancel to the worker owning `id` (the
+    /// owner map is keyed by group — candidates never route
+    /// independently). Returns false when the id is not in flight.
+    pub fn cancel_candidate(&self, id: u64, cand: usize) -> crate::Result<bool> {
+        let w = self.owners.lock().unwrap().get(&id).copied();
+        match w {
+            Some(i) => {
+                self.workers[i].cancel_candidate(id, cand)?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
     /// Drain up to `n` events across all workers (non-blocking), taking
     /// at most one event per worker per rotation so a worker with a
     /// deep event backlog cannot starve the others, and rotating the
@@ -368,6 +382,61 @@ mod tests {
         // The rest still arrives.
         let resps = r.collect_responses(2, std::time::Duration::from_secs(60));
         assert_eq!(resps.len(), 2);
+        r.shutdown();
+    }
+
+    #[test]
+    fn group_events_and_candidate_cancel_route_by_group_id() {
+        // Owner maps are keyed by group: a 2-candidate request routes
+        // all its candidate-tagged events and candidate-cancels through
+        // the single owner entry.
+        let workers = vec![EngineHandle::spawn(
+            || Ok(Box::new(HostBackend::for_tests()) as Box<dyn ModelBackend>),
+            EngineConfig { max_new_tokens: 64, decode_slice: 1, ..Default::default() },
+            5,
+        )];
+        let r = Router::new(workers, Policy::RoundRobin);
+        let mut g = req(11);
+        g.max_new_tokens = 40;
+        g.sampling.ignore_eos = true;
+        g.sampling.n = 2;
+        r.submit(g).unwrap();
+        // Unknown id: not routable.
+        assert!(!r.cancel_candidate(999, 0).unwrap());
+        // Wait for candidate 1's first token, then cancel it.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        let mut saw_c1 = false;
+        while !saw_c1 && std::time::Instant::now() < deadline {
+            for ev in r.poll_events(16) {
+                if matches!(ev, EngineEvent::Token { candidate: 1, .. }) {
+                    saw_c1 = true;
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(saw_c1, "candidate 1 never streamed");
+        assert!(r.cancel_candidate(11, 1).unwrap(), "in-flight group routes");
+        // The group still finishes (candidate 0 runs to length) and the
+        // terminal response reports both candidates.
+        let mut finish = None;
+        while finish.is_none() && std::time::Instant::now() < deadline {
+            for ev in r.poll_events(64) {
+                if let EngineEvent::Finished(resp) = ev {
+                    finish = Some(resp);
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let resp = finish.expect("terminal event");
+        assert_eq!(resp.id, 11);
+        assert_eq!(resp.candidates.len(), 2);
+        assert_eq!(resp.finish, crate::coordinator::FinishReason::Length);
+        assert!(resp
+            .candidates
+            .iter()
+            .any(|c| c.finish == crate::coordinator::FinishReason::Cancelled));
+        // Drained: the owner entry is gone.
+        assert!(!r.cancel_candidate(11, 0).unwrap());
         r.shutdown();
     }
 

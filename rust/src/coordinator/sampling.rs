@@ -1,16 +1,50 @@
 //! Seeded token sampling: greedy, temperature, top-k, and nucleus
-//! (top-p) truncation over a logit row.
+//! (top-p) truncation over a logit row, plus per-token logprobs.
 //!
-//! Every request owns one [`Sampler`] seeded from its
-//! [`SamplingParams::seed`](super::request::SamplingParams), so a
-//! request's token stream is a pure function of (prompt, params) — the
-//! scheduler may batch, chunk, or migrate it freely without changing
-//! its output, and a streamed run replays identically to a
-//! non-streamed one.
+//! Every *candidate* of a request's sequence group owns one [`Sampler`]
+//! seeded from [`derive_seed`]`(params.seed, candidate)`, so a
+//! candidate's token stream is a pure function of
+//! (prompt, params, candidate index) — the scheduler may batch, chunk,
+//! fork, or migrate it freely without changing its output, a streamed
+//! run replays identically to a non-streamed one, and candidate 0 of
+//! any group replays the plain `n = 1` request.
 
 use super::request::SamplingParams;
 use crate::model::argmax;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Log-probability of `idx` under the softmax of the raw logit row
+/// (temperature-free: the model's own distribution, which is what eval
+/// harnesses rank with and what `best_of` selection accumulates).
+/// Max-subtracted log-sum-exp in f64 for a stable tail.
+pub fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
+    debug_assert!(idx < logits.len());
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f64 = logits
+        .iter()
+        .map(|&l| ((l - m) as f64).exp())
+        .sum::<f64>()
+        .ln();
+    ((logits[idx] - m) as f64 - lse) as f32
+}
+
+/// The RNG seed of candidate `candidate` in a sequence group seeded with
+/// `seed`. Candidate 0 keeps the base seed unchanged — its stream is
+/// bit-identical to an `n = 1` request with the same parameters — and
+/// higher candidates draw distinct, reproducible seeds from the base
+/// seed's SplitMix64 expansion (a pure function of `(seed, candidate)`:
+/// stable across runs, batch composition, and thread counts).
+pub fn derive_seed(seed: u64, candidate: usize) -> u64 {
+    if candidate == 0 {
+        return seed;
+    }
+    let mut sm = SplitMix64(seed);
+    let mut s = seed;
+    for _ in 0..candidate {
+        s = sm.next_u64();
+    }
+    s
+}
 
 #[derive(Clone, Debug)]
 pub struct Sampler {
@@ -22,17 +56,32 @@ pub struct Sampler {
 
 impl Sampler {
     pub fn new(p: &SamplingParams) -> Sampler {
+        Sampler::for_candidate(p, 0)
+    }
+
+    /// Sampler of candidate `candidate` in a sequence group: same
+    /// truncation knobs, per-candidate derived seed ([`derive_seed`]).
+    pub fn for_candidate(p: &SamplingParams, candidate: usize) -> Sampler {
         Sampler {
             temperature: p.temperature.max(0.0),
             top_k: p.top_k,
             top_p: p.top_p.clamp(0.0, 1.0),
-            rng: Rng::new(p.seed),
+            rng: Rng::new(derive_seed(p.seed, candidate)),
         }
     }
 
     /// True when this sampler is pure argmax (no RNG consumption).
     pub fn greedy(&self) -> bool {
         self.temperature == 0.0
+    }
+
+    /// Draw the next token and report its log-probability under the raw
+    /// (temperature-free) model distribution. The draw consumes exactly
+    /// the same RNG stream as [`Self::sample`], so enabling logprobs can
+    /// never change a token sequence.
+    pub fn sample_with_logprob(&mut self, logits: &[f32]) -> (i32, f32) {
+        let tok = self.sample(logits);
+        (tok, log_softmax_at(logits, tok as usize))
     }
 
     /// Draw the next token from one logit row.
@@ -197,6 +246,63 @@ mod tests {
         let logits = vec![1.0, 0.9, 4.0, 0.8];
         for _ in 0..20 {
             assert_eq!(s.sample(&logits), 2);
+        }
+    }
+
+    #[test]
+    fn derived_seeds_are_stable_and_distinct() {
+        // Candidate 0 keeps the base seed (n=1 bit-compat); higher
+        // candidates get distinct, reproducible seeds.
+        assert_eq!(derive_seed(42, 0), 42);
+        let s1 = derive_seed(42, 1);
+        let s2 = derive_seed(42, 2);
+        assert_ne!(s1, 42);
+        assert_ne!(s1, s2);
+        assert_eq!(s1, derive_seed(42, 1), "derivation must be pure");
+        // Different base seeds derive different candidate streams.
+        assert_ne!(derive_seed(42, 1), derive_seed(43, 1));
+        // for_candidate(p, 0) == new(p): identical streams.
+        let p = params(0.8);
+        let logits: Vec<f32> = (0..32).map(|i| ((i * 13) % 7) as f32 * 0.5).collect();
+        let mut a = Sampler::new(&p);
+        let mut b = Sampler::for_candidate(&p, 0);
+        for _ in 0..32 {
+            assert_eq!(a.sample(&logits), b.sample(&logits));
+        }
+        // Candidate 1 draws a different stream with overwhelming
+        // probability over 64 draws.
+        let mut c = Sampler::for_candidate(&p, 1);
+        let mut a = Sampler::new(&p);
+        let sa: Vec<i32> = (0..64).map(|_| a.sample(&logits)).collect();
+        let sc: Vec<i32> = (0..64).map(|_| c.sample(&logits)).collect();
+        assert_ne!(sa, sc);
+    }
+
+    #[test]
+    fn logprob_is_log_softmax_and_never_perturbs_the_draw() {
+        let logits = vec![0.1f32, 2.0, -1.0, 1.9];
+        // Hand-checked log-softmax of the argmax.
+        let p = log_softmax_at(&logits, 1);
+        let z: f64 = logits.iter().map(|&l| (l as f64).exp()).sum();
+        assert!((p as f64 - (2.0f64.exp() / z).ln()).abs() < 1e-6, "{p}");
+        // Probabilities sum to one.
+        let total: f64 = (0..4).map(|i| (log_softmax_at(&logits, i) as f64).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+        // Greedy: logprob attached, token unchanged.
+        let mut g = Sampler::new(&params(0.0));
+        let (tok, lp) = g.sample_with_logprob(&logits);
+        assert_eq!(tok, 1);
+        assert!((lp - p).abs() < 1e-7);
+        // Sampled: same RNG consumption as sample() — parallel samplers
+        // with the same seed stay in lockstep when one reports logprobs.
+        let mut a = Sampler::new(&params(0.8));
+        let mut b = Sampler::new(&params(0.8));
+        for _ in 0..64 {
+            let (ta, lp) = a.sample_with_logprob(&logits);
+            let tb = b.sample(&logits);
+            assert_eq!(ta, tb);
+            assert!(lp <= 0.0 && lp.is_finite());
+            assert!((lp - log_softmax_at(&logits, ta as usize)).abs() < 1e-7);
         }
     }
 

@@ -106,6 +106,18 @@ impl BlockPool {
         self.blocks_needed(tokens) <= self.free.len()
     }
 
+    /// Can `blocks` blocks be allocated right now? (Group admission sums
+    /// several allocations — shared prompt plus per-candidate budgets —
+    /// whose block counts round independently.)
+    pub fn can_admit_blocks(&self, blocks: usize) -> bool {
+        blocks <= self.free.len()
+    }
+
+    /// Accounting bytes of one block.
+    pub fn block_bytes(&self) -> usize {
+        self.block_tokens * self.bytes_per_token
+    }
+
     /// Allocate blocks for a new sequence.
     pub fn allocate(&mut self, seq: SeqId, tokens: usize) -> crate::Result<()> {
         if self.seqs.contains_key(&seq) {
@@ -377,6 +389,29 @@ impl SeqKv {
         }
     }
 
+    /// Fork this cache for a sibling candidate of a sequence group. The
+    /// quantized store forks in O(pages) — full pages `Arc`-shared, the
+    /// partial frontier page copy-on-write, decoded-page caches shared
+    /// so siblings hit each other's dequantized prefix tiles. The f32
+    /// slot has no page structure, so its fork is a deep copy (which is
+    /// also what the admission accounting charges it for).
+    pub fn fork(&self) -> SeqKv {
+        match self {
+            SeqKv::F32(s) => SeqKv::F32(s.clone()),
+            SeqKv::Quant(q) => SeqKv::Quant(q.fork()),
+        }
+    }
+
+    /// Resident bytes of the decoded-page caches alone (0 for f32).
+    /// Sibling candidates share caches, so a group must count this once,
+    /// not per candidate — see the engine's admission sampling.
+    pub fn decoded_bytes(&self) -> usize {
+        match self {
+            SeqKv::F32(_) => 0,
+            SeqKv::Quant(s) => s.decoded_bytes(),
+        }
+    }
+
     pub fn as_f32(&self) -> Option<&SlotKv> {
         match self {
             SeqKv::F32(s) => Some(s),
@@ -625,6 +660,44 @@ mod tests {
         assert_eq!(kvq.pos(), 0);
         assert_eq!(kvq.resident_bytes(), 0);
         assert!(kvq.as_f32().is_none());
+    }
+
+    #[test]
+    fn seqkv_fork_variants() {
+        // f32: deep copy — mutating the fork leaves the parent alone.
+        let sc = SlotCache::new(1, 1, 8, 32);
+        let mut slot = sc.empty_slot();
+        slot.pos = 4;
+        slot.k[0] = 7.0;
+        let parent = SeqKv::F32(slot);
+        let mut child = parent.fork();
+        assert_eq!(child.pos(), 4);
+        child.as_f32_mut().unwrap().k[0] = 9.0;
+        assert_eq!(parent.as_f32().unwrap().k[0], 7.0);
+        assert_eq!(parent.decoded_bytes(), 0);
+
+        // quant: pages shared, position carried.
+        let mut q = crate::kvquant::QuantSlotKv::new(
+            crate::kvquant::KvQuantConfig {
+                format: crate::kvquant::KvFormat::Dual,
+                page_tokens: 8,
+                policies: vec![crate::kvquant::KvPolicy { sink: 8, diag: 8 }],
+            },
+            1,
+            1,
+            32,
+        );
+        let rows: Vec<f32> = (0..12 * 32).map(|i| (i % 7) as f32 - 3.0).collect();
+        q.k[0][0].append_rows(&rows);
+        q.v[0][0].append_rows(&rows);
+        q.pos = 12;
+        let parent = SeqKv::Quant(q);
+        let child = parent.fork();
+        assert_eq!(child.pos(), 12);
+        let (SeqKv::Quant(p), SeqKv::Quant(c)) = (&parent, &child) else {
+            panic!("variant preserved")
+        };
+        assert!(std::sync::Arc::ptr_eq(p.k[0][0].page_arc(0), c.k[0][0].page_arc(0)));
     }
 
     #[test]

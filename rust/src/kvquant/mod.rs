@@ -675,8 +675,14 @@ pub struct QuantSlotKv {
     /// `[n_layers][n_kv_heads]` decoded-page caches (each serves its
     /// (layer, head)'s K *and* V stores — keys are page identities, so
     /// the two stores never collide). Per-head so the decode step's
-    /// kv-head fan-out owns disjoint caches without locking.
-    pub decoded: Vec<Vec<DecodedPageCache>>,
+    /// kv-head fan-out contends on nothing within one sequence; the
+    /// `Mutex` exists for *sibling* candidates of a sequence group
+    /// ([`Self::fork`] shares these caches), which decode in parallel
+    /// across sequences and hit each other's dequantized prefix tiles.
+    /// Cached tiles are bit-identical to a fresh decode, so sharing can
+    /// never change logits — only the hit/miss counters are
+    /// interleaving-dependent for forked groups.
+    pub decoded: Vec<Vec<Arc<std::sync::Mutex<DecodedPageCache>>>>,
     /// Cached tokens (equal to every store's `len`).
     pub pos: usize,
 }
@@ -699,17 +705,22 @@ impl QuantSlotKv {
         };
         let per_store = DECODED_CACHE_BYTES / (n_layers * n_kv_heads).max(1);
         let decoded = (0..n_layers)
-            .map(|_| (0..n_kv_heads).map(|_| DecodedPageCache::new(per_store)).collect())
+            .map(|_| {
+                (0..n_kv_heads)
+                    .map(|_| Arc::new(std::sync::Mutex::new(DecodedPageCache::new(per_store))))
+                    .collect()
+            })
             .collect();
         QuantSlotKv { k: mk(), v: mk(), decoded, cfg, pos: 0 }
     }
 
     /// Re-budget the decoded-page caches: `total_bytes` is the whole
     /// slot's budget, split evenly across the (layer, head) caches.
+    /// Forked siblings share the caches, so this re-budgets theirs too.
     pub fn set_decoded_budget(&mut self, total_bytes: usize) {
         let n = (self.decoded.len() * self.decoded.first().map_or(1, Vec::len)).max(1);
-        for c in self.decoded.iter_mut().flatten() {
-            c.set_budget(total_bytes / n);
+        for c in self.decoded.iter().flatten() {
+            c.lock().unwrap().set_budget(total_bytes / n);
         }
     }
 
@@ -738,25 +749,21 @@ impl QuantSlotKv {
     }
 
     /// O(pages) fork of the whole slot: full pages shared, frontier pages
-    /// copy-on-write. The fork starts with empty decoded-page caches
-    /// (same budgets) — decoded tiles are derived state it rebuilds on
-    /// demand.
+    /// copy-on-write, and the decoded-page caches *shared* (`Arc`) — a
+    /// sibling candidate of a sequence group re-reads the same immutable
+    /// prefix pages, so the prompt dequantizes once per (layer, head,
+    /// precision) for the whole group instead of once per candidate.
+    /// Each sibling's private frontier page is partial (never cached),
+    /// so sharing only ever serves immutable full-page tiles.
     pub fn fork(&self) -> QuantSlotKv {
         let fk = |s: &Vec<Vec<QuantPagedKv>>| {
             s.iter().map(|hs| hs.iter().map(QuantPagedKv::fork).collect()).collect()
         };
-        let decoded = self
-            .decoded
-            .iter()
-            .map(|row| {
-                row.iter().map(|c| DecodedPageCache::new(c.budget_bytes())).collect()
-            })
-            .collect();
         QuantSlotKv {
             cfg: self.cfg.clone(),
             k: fk(&self.k),
             v: fk(&self.v),
-            decoded,
+            decoded: self.decoded.clone(),
             pos: self.pos,
         }
     }
@@ -779,9 +786,15 @@ impl QuantSlotKv {
 
     /// Resident f32 bytes of the slot's decoded-page caches (bounded by
     /// the configured budget; folded into [`crate::kvcache::SeqKv`]'s
-    /// resident accounting so `kv_bytes_peak` reflects it).
+    /// resident accounting so `kv_bytes_peak` reflects it, and charged
+    /// against pool admission by the engine). Forked siblings share the
+    /// caches — count a group once, not per candidate.
     pub fn decoded_bytes(&self) -> usize {
-        self.decoded.iter().flatten().map(DecodedPageCache::bytes).sum()
+        self.decoded
+            .iter()
+            .flatten()
+            .map(|c| c.lock().unwrap().bytes())
+            .sum()
     }
 }
 
@@ -1135,17 +1148,35 @@ mod tests {
         let mut q = QuantSlotKv::new(cfg, 2, 2, 32);
         q.set_decoded_budget(4096);
         for c in q.decoded.iter().flatten() {
-            assert_eq!(c.budget_bytes(), 1024);
+            assert_eq!(c.lock().unwrap().budget_bytes(), 1024);
         }
-        // Forks inherit budgets but start cold.
+        // Forks SHARE the caches (sequence-group siblings re-read the
+        // same immutable prefix pages): a tile decoded by the parent is
+        // a warm hit for the fork, and re-budgeting either re-budgets
+        // both.
         q.set_decoded_budget(4 * 8192);
         let mut stats = crate::metrics::KvPageStats::default();
         q.k[0][0].append_rows(&rows(16, 32, 40));
-        q.decoded[0][0].get_or_decode(q.k[0][0].page_arc(0), Precision::High, &mut stats);
-        assert_eq!(q.decoded[0][0].len(), 1);
+        q.decoded[0][0].lock().unwrap().get_or_decode(
+            q.k[0][0].page_arc(0),
+            Precision::High,
+            &mut stats,
+        );
+        assert_eq!(q.decoded[0][0].lock().unwrap().len(), 1);
         let f = q.fork();
-        assert_eq!(f.decoded[0][0].budget_bytes(), 8192);
-        assert!(f.decoded[0][0].is_empty());
+        assert!(Arc::ptr_eq(&q.decoded[0][0], &f.decoded[0][0]));
+        assert_eq!(f.decoded[0][0].lock().unwrap().budget_bytes(), 8192);
+        let h0 = stats.cache_hits;
+        f.decoded[0][0].lock().unwrap().get_or_decode(
+            f.k[0][0].page_arc(0),
+            Precision::High,
+            &mut stats,
+        );
+        assert_eq!(stats.cache_hits, h0 + 1, "sibling misses the shared tile");
+        // The group's decoded bytes are shared state: both views report
+        // the same total (count once per group, not per candidate).
+        assert_eq!(q.decoded_bytes(), f.decoded_bytes());
+        assert!(q.decoded_bytes() > 0);
     }
 
     #[test]

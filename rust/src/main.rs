@@ -24,7 +24,8 @@ fn usage() -> ! {
          [--kv-format f32|mxfp8-high|nvfp4-low|dual] \
          [--kv-policy SINK/DIAG | l0:S/D;l1:S/D;...] \
          [--prefill-chunk TOKENS] [--prefix-cache] \
-         [--threads N] [--decoded-cache-mb MB] \
+         [--threads N] [--decoded-cache-mb MB] [--kv-budget-mb MB] \
+         [--writer-queue LINES] [--slow-reader-ms MS] \
          [--route round-robin|least-loaded|prefix-affinity]"
     );
     std::process::exit(2);
@@ -92,6 +93,8 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
     let decoded_cache_bytes = args
         .usize_or("decoded-cache-mb", dma::kvquant::DECODED_CACHE_BYTES >> 20)
         << 20;
+    // 0 = derive the pool budget from the decode slots (the default).
+    let kv_budget_bytes = args.usize_or("kv-budget-mb", 0) << 20;
     let cfg = EngineConfig {
         artifact_dir: artifacts.clone().into(),
         max_new_tokens: args.usize_or("max-new-tokens", 32),
@@ -101,6 +104,7 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         kv_precision_policies,
         threads,
         decoded_cache_bytes,
+        kv_budget_bytes,
         ..Default::default()
     };
     let policy = match args.get_or("route", "least-loaded").as_str() {
@@ -122,9 +126,22 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         .collect();
     let router = Arc::new(Router::new(handles, policy));
     let stop = Arc::new(AtomicBool::new(false));
+    let defaults = dma::server::ServerOpts::default();
+    let opts = dma::server::ServerOpts {
+        writer_queue_lines: args
+            .usize_or("writer-queue", defaults.writer_queue_lines)
+            .max(1),
+        slow_reader_timeout: std::time::Duration::from_millis(
+            args.usize_or(
+                "slow-reader-ms",
+                defaults.slow_reader_timeout.as_millis() as usize,
+            ) as u64,
+        ),
+    };
     println!(
         "dma: serving on {addr} ({} worker(s), route {}, kv cache {}, policy {}, \
-         prefill chunk {}, prefix cache {}, threads {}, decoded cache {} MiB)",
+         prefill chunk {}, prefix cache {}, threads {}, decoded cache {} MiB, \
+         writer queue {} lines / {} ms slow-reader timeout)",
         workers,
         policy.name(),
         cfg.kv_format.name(),
@@ -132,9 +149,11 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         cfg.prefill_chunk,
         if cfg.prefix_cache { "on" } else { "off" },
         cfg.threads,
-        cfg.decoded_cache_bytes >> 20
+        cfg.decoded_cache_bytes >> 20,
+        opts.writer_queue_lines,
+        opts.slow_reader_timeout.as_millis()
     );
-    dma::server::serve(&addr, router, stop, |a| println!("dma: bound {a}"))
+    dma::server::serve_with(&addr, router, opts, stop, |a| println!("dma: bound {a}"))
 }
 
 fn cmd_eval(args: &Args) -> dma::Result<()> {

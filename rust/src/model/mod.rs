@@ -99,13 +99,17 @@ impl DecodeKv<'_> {
 }
 
 /// Work item of the paged decode's kv-head fan-out: one head group's
-/// disjoint output slice, its (shared) stores, its own decoded-page
+/// disjoint output slice, its (shared) stores, its head's decoded-page
 /// cache, and a local stats accumulator merged after the parallel
-/// section so counters stay deterministic.
+/// section so counters stay deterministic. The cache arrives as the
+/// slot's `Arc<Mutex<..>>` handle: within one sequence every head owns a
+/// distinct cache (no contention); the lock serializes *sibling
+/// candidates* of a forked sequence group, which share caches and may
+/// attend the same head concurrently across the per-sequence fan-out.
 struct QuantHeadWork<'a> {
     hkv: usize,
     out: &'a mut [f32],
-    cache: &'a mut crate::kvquant::DecodedPageCache,
+    cache: &'a std::sync::Arc<std::sync::Mutex<crate::kvquant::DecodedPageCache>>,
     k: &'a crate::kvquant::QuantPagedKv,
     v: &'a crate::kvquant::QuantPagedKv,
     stats: crate::metrics::KvPageStats,
@@ -537,8 +541,9 @@ impl CpuModel {
     /// (formerly duplicated between the f32 and paged paths). The
     /// per-layer kv-head attention loop fans across [`Self::threads`]
     /// scoped workers: each head group writes a disjoint slice of the
-    /// attention output and (paged) owns its head's decoded-page cache,
-    /// so results are bit-identical at any thread count.
+    /// attention output and (paged) locks its head's decoded-page cache
+    /// (uncontended within a sequence; shared with forked sibling
+    /// candidates), so results are bit-identical at any thread count.
     fn decode_step_impl(
         &self,
         token: i32,
@@ -609,7 +614,7 @@ impl CpuModel {
                     let mut items: Vec<QuantHeadWork<'_>> = o_all
                         .data
                         .chunks_mut(n_rep * dh)
-                        .zip(decoded[li].iter_mut())
+                        .zip(decoded[li].iter())
                         .enumerate()
                         .map(|(hkv, (out, cache))| QuantHeadWork {
                             hkv,
@@ -719,8 +724,15 @@ impl CpuModel {
         let qh = self.roped_group_q(q_all, w.hkv, n_rep, pos);
         let qq = crate::mxfp::fused::dual_quant(&qh.data, n_rep, dh, true,
                                                 Granularity::PerToken);
+        // Lock the head's decoded-page cache for the attention pass:
+        // uncontended within one sequence (each head owns its cache);
+        // across forked sibling candidates the lock serializes the
+        // shared cache — cached tiles are bit-identical to fresh
+        // decodes, so contention order can never change the output.
+        let mut cache = w.cache.lock().unwrap();
         let o = crate::attention::paged::dma_attention_paged_heads_cached(
-            &qq, w.k, w.v, &policy, w.cache, &mut w.stats);
+            &qq, w.k, w.v, &policy, &mut cache, &mut w.stats);
+        drop(cache);
         for r in 0..n_rep {
             w.out[r * dh..(r + 1) * dh].copy_from_slice(o.row(r));
         }

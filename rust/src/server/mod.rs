@@ -1,34 +1,57 @@
 //! TCP JSON-lines serving front end (std::net — tokio is not vendored).
 //!
-//! Protocol v2: one JSON object per line.
+//! Protocol v2.1: one JSON object per line.
 //!
 //! Request fields (`tokens` required, everything else optional):
 //!
 //! ```text
 //! -> {"id": 1, "tokens": [1,7,9], "max_new_tokens": 8, "dma": true,
 //!     "temperature": 0.8, "top_k": 40, "top_p": 0.95, "seed": 7,
-//!     "stop": [5, 12], "ignore_eos": false, "stream": true}
+//!     "stop": [5, 12], "ignore_eos": false, "stream": true,
+//!     "n": 2, "best_of": 4, "logprobs": true}
 //! ```
 //!
 //! `temperature: 0` (the default) is greedy decoding; any other value
-//! samples deterministically from the request's `seed`. A non-streaming
-//! request (`"stream"` absent or false) gets exactly one summary line,
-//! as in v1:
+//! samples deterministically from the request's `seed`. `n` asks for
+//! that many parallel samples (one prompt prefill, quantized KV forked
+//! copy-on-write per candidate); `best_of` generates that many
+//! candidates and keeps the `n` best by cumulative logprob;
+//! `logprobs: true` adds per-token logprobs to the wire. A
+//! non-streaming request gets exactly one summary line — for `n = 1`
+//! without `logprobs` its shape is exactly the v2 contract:
 //!
 //! ```text
 //! <- {"id": 1, "output": [12, 5], "finish": "eos", "queue_ms": 0.1,
 //!     "prefill_ms": 3.2, "decode_ms": 8.9, "ttft_ms": 3.4}
 //! ```
 //!
+//! With `n > 1` the summary gains a `candidates` array (best first —
+//! cumulative logprob descending, candidate index breaking ties;
+//! `output`/`finish` mirror the best candidate); with `logprobs` it
+//! gains `cum_logprob` plus per-token `logprobs` (top level for the
+//! best candidate, per entry inside `candidates`):
+//!
+//! ```text
+//! <- {"id": 1, "output": [12, 5], "finish": "eos", ...,
+//!     "candidates": [
+//!       {"candidate": 0, "output": [12, 5], "finish": "eos",
+//!        "cum_logprob": -1.7},
+//!       {"candidate": 1, "output": [12, 9], "finish": "eos",
+//!        "cum_logprob": -2.3}]}
+//! ```
+//!
 //! A streaming request receives its event stream as it happens — a
-//! `started` line, one `token` line per generated token, then the same
-//! summary line tagged `"event": "finished"`:
+//! `started` line, one `token` line per generated token (tagged with
+//! the producing `candidate`; `logprob` added when requested), then the
+//! same summary line tagged `"event": "finished"`:
 //!
 //! ```text
 //! <- {"id": 1, "event": "started", "queue_ms": 0.1}
-//! <- {"id": 1, "event": "token", "token": 12, "index": 0, "decode_ms": 0}
-//! <- {"id": 1, "event": "token", "token": 5, "index": 1, "decode_ms": 1.1}
-//! <- {"id": 1, "event": "finished", "output": [12, 5], "finish": "eos", ...}
+//! <- {"id": 1, "event": "token", "candidate": 0, "token": 12,
+//!     "index": 0, "decode_ms": 0}
+//! <- {"id": 1, "event": "token", "candidate": 1, "token": 12,
+//!     "index": 0, "decode_ms": 0}
+//! <- {"id": 1, "event": "finished", "output": [...], ...}
 //! ```
 //!
 //! Control messages:
@@ -37,6 +60,10 @@
 //! -> {"cmd": "cancel", "id": 1}   cancel that request (this connection's
 //!                                 id namespace); its terminal line
 //!                                 reports "finish": "cancelled"
+//! -> {"cmd": "cancel", "id": 1, "candidate": 2}
+//!                                 cancel one candidate; its siblings
+//!                                 keep generating (the terminal line
+//!                                 arrives when the last one finishes)
 //! -> {"cmd": "stats"}
 //! <- {"workers": 1, "policy": "least-loaded", "kv_format": "f32",
 //!     "kv_policy": "128/128", "prefix_hit_tokens": 0,
@@ -44,9 +71,17 @@
 //!     "decoded_page_misses": 0, "decoded_page_hit_rate": 0}
 //! ```
 //!
-//! A client disconnect cancels every request the connection still has in
-//! flight — abandoned generations release their KV pages instead of
-//! decoding to a dead socket.
+//! **Back-pressure / slow readers.** Each connection's outbound lines
+//! flow through a *bounded* writer channel
+//! ([`ServerOpts::writer_queue_lines`]). When a client stops reading
+//! and the queue fills, the dispatcher blocks on that connection for at
+//! most [`ServerOpts::slow_reader_timeout`], then declares the
+//! connection dead: every request it still has in flight is cancelled
+//! (KV pages released), its registrations are dropped, and its socket
+//! is force-closed so both connection threads unblock and exit — a
+//! stalled consumer can no longer grow an unbounded event backlog, pin
+//! cache pages, or leak its thread pair. A clean disconnect cancels the
+//! connection's in-flight requests the same way.
 //!
 //! Events are routed back to the connection that submitted them by an
 //! internal request id (client-supplied ids are echoed but may collide
@@ -63,6 +98,27 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// Server tuning knobs (the protocol itself is not configurable).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOpts {
+    /// Capacity of each connection's outbound line queue. Full means
+    /// the client is not reading as fast as the engine produces.
+    pub writer_queue_lines: usize,
+    /// How long the dispatcher blocks on one connection's full queue
+    /// before declaring it dead and auto-cancelling its requests.
+    pub slow_reader_timeout: Duration,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        ServerOpts {
+            writer_queue_lines: 1024,
+            slow_reader_timeout: Duration::from_secs(2),
+        }
+    }
+}
 
 /// A parsed inbound request line.
 pub struct ParsedRequest {
@@ -108,6 +164,9 @@ pub fn parse_request(line: &str, internal_id: u64) -> Result<ParsedRequest, Stri
         seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
         stop,
         ignore_eos: j.get("ignore_eos").and_then(Json::as_bool).unwrap_or(false),
+        n: j.get("n").and_then(Json::as_usize).unwrap_or(1),
+        best_of: j.get("best_of").and_then(Json::as_usize).unwrap_or(0),
+        logprobs: j.get("logprobs").and_then(Json::as_bool).unwrap_or(false),
     };
     Ok(ParsedRequest {
         req: Request {
@@ -125,7 +184,10 @@ pub fn parse_request(line: &str, internal_id: u64) -> Result<ParsedRequest, Stri
     })
 }
 
-pub fn response_json(r: &Response) -> Json {
+/// Serialize a terminal response. The `n = 1` / no-logprobs shape is
+/// exactly the v2 wire contract; groups add a `candidates` array and
+/// the `logprobs` flag adds `cum_logprob` + per-token `logprobs`.
+pub fn response_json(r: &Response, logprobs: bool) -> Json {
     let mut fields = vec![
         ("id", Json::num(r.id as f64)),
         (
@@ -138,6 +200,40 @@ pub fn response_json(r: &Response) -> Json {
         ("decode_ms", Json::num(r.decode_ms)),
         ("ttft_ms", Json::num(r.ttft_ms)),
     ];
+    if logprobs {
+        if let Some(best) = r.candidates.first() {
+            fields.push(("cum_logprob", Json::num(best.cum_logprob)));
+            fields.push((
+                "logprobs",
+                Json::arr(best.logprobs.iter().map(|&l| Json::num(l as f64)).collect()),
+            ));
+        }
+    }
+    if r.candidates.len() > 1 {
+        let cands = r
+            .candidates
+            .iter()
+            .map(|c| {
+                let mut cf = vec![
+                    ("candidate", Json::num(c.candidate as f64)),
+                    (
+                        "output",
+                        Json::arr(c.output.iter().map(|&t| Json::num(t as f64)).collect()),
+                    ),
+                    ("finish", Json::str(c.finish.as_str())),
+                    ("cum_logprob", Json::num(c.cum_logprob)),
+                ];
+                if logprobs {
+                    cf.push((
+                        "logprobs",
+                        Json::arr(c.logprobs.iter().map(|&l| Json::num(l as f64)).collect()),
+                    ));
+                }
+                Json::obj(cf)
+            })
+            .collect();
+        fields.push(("candidates", Json::arr(cands)));
+    }
     if let Some(e) = &r.error {
         fields.push(("error", Json::str(e.clone())));
     }
@@ -145,24 +241,32 @@ pub fn response_json(r: &Response) -> Json {
 }
 
 /// Wire form of one event. Non-streaming requests only ever see the
-/// summary (their `Finished` serializes exactly as in protocol v1);
-/// streamed events carry an `"event"` tag.
-pub fn event_json(ev: &EngineEvent, stream: bool) -> Json {
+/// summary (their `Finished` serializes exactly as in protocol v2 for
+/// `n = 1`); streamed events carry an `"event"` tag, token lines a
+/// `candidate` tag, and `logprob` when the request asked for it.
+pub fn event_json(ev: &EngineEvent, stream: bool, logprobs: bool) -> Json {
     match ev {
         EngineEvent::Started { id, queue_ms } => Json::obj(vec![
             ("id", Json::num(*id as f64)),
             ("event", Json::str("started")),
             ("queue_ms", Json::num(*queue_ms)),
         ]),
-        EngineEvent::Token { id, token, index, decode_ms } => Json::obj(vec![
-            ("id", Json::num(*id as f64)),
-            ("event", Json::str("token")),
-            ("token", Json::num(*token as f64)),
-            ("index", Json::num(*index as f64)),
-            ("decode_ms", Json::num(*decode_ms)),
-        ]),
+        EngineEvent::Token { id, candidate, token, index, logprob, decode_ms } => {
+            let mut fields = vec![
+                ("id", Json::num(*id as f64)),
+                ("event", Json::str("token")),
+                ("candidate", Json::num(*candidate as f64)),
+                ("token", Json::num(*token as f64)),
+                ("index", Json::num(*index as f64)),
+                ("decode_ms", Json::num(*decode_ms)),
+            ];
+            if logprobs {
+                fields.push(("logprob", Json::num(*logprob as f64)));
+            }
+            Json::obj(fields)
+        }
         EngineEvent::Finished(r) => {
-            let mut j = response_json(r);
+            let mut j = response_json(r, logprobs);
             if stream {
                 if let Json::Obj(m) = &mut j {
                     m.insert("event".into(), Json::str("finished"));
@@ -173,24 +277,150 @@ pub fn event_json(ev: &EngineEvent, stream: bool) -> Json {
     }
 }
 
+/// Per-connection control shared between the connection's threads and
+/// the dispatcher: the dead flag plus the socket handle the dispatcher
+/// shuts down to *unblock* an abandoned connection — a reader parked in
+/// a blocking line read would otherwise never observe the flag, leaking
+/// the reader/writer thread pair and the socket.
+struct ConnCtl {
+    dead: AtomicBool,
+    /// Socket clone force-closed on abandon (`None` only in unit tests
+    /// that drive [`dispatch_event`] without a real connection).
+    sock: Option<TcpStream>,
+}
+
+impl ConnCtl {
+    /// Mark the connection dead and close its socket so both of its
+    /// threads come unstuck (the reader's blocking read errors out, the
+    /// writer's next write fails).
+    fn kill(&self) {
+        self.dead.store(true, Ordering::Relaxed);
+        if let Some(s) = &self.sock {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
 struct PendingEntry {
     client_id: u64,
     stream: bool,
-    /// The owning connection's outbound line channel. Every byte that
-    /// reaches a socket goes through its connection's single writer
-    /// thread — reader-side control replies included — so lines can
-    /// never interleave mid-write.
-    tx: mpsc::Sender<String>,
+    /// Include logprobs on this request's wire lines.
+    logprobs: bool,
+    /// Owning connection id (for slow-reader group cancellation).
+    conn: u64,
+    /// Owning connection's control block (dead flag + socket handle).
+    ctl: Arc<ConnCtl>,
+    /// The owning connection's *bounded* outbound line channel. Every
+    /// byte that reaches a socket goes through its connection's single
+    /// writer thread — reader-side control replies included — so lines
+    /// can never interleave mid-write.
+    tx: mpsc::SyncSender<String>,
 }
 
 /// internal id -> owning connection registration.
 type Pending = Arc<Mutex<HashMap<u64, PendingEntry>>>;
 
-/// Serve until `stop` is set. The bound address is reported through
-/// `on_bind` (tests connect to an ephemeral port).
+/// Push one line into a bounded writer queue, blocking up to `timeout`
+/// when it is full. False means the line could not be delivered (queue
+/// still full — a slow reader — or the writer is gone).
+fn send_with_timeout(tx: &mpsc::SyncSender<String>, line: String, timeout: Duration) -> bool {
+    let mut line = match tx.try_send(line) {
+        Ok(()) => return true,
+        Err(mpsc::TrySendError::Disconnected(_)) => return false,
+        Err(mpsc::TrySendError::Full(l)) => l,
+    };
+    let deadline = std::time::Instant::now() + timeout;
+    loop {
+        std::thread::sleep(Duration::from_millis(1));
+        match tx.try_send(line) {
+            Ok(()) => return true,
+            Err(mpsc::TrySendError::Disconnected(_)) => return false,
+            Err(mpsc::TrySendError::Full(l)) => {
+                if std::time::Instant::now() >= deadline {
+                    return false;
+                }
+                line = l;
+            }
+        }
+    }
+}
+
+/// Declare connection `conn` dead: close its socket (unblocking its
+/// reader/writer threads), drop every registration it owns, and cancel
+/// its in-flight requests so abandoned generations release their KV
+/// pages instead of decoding into a full queue forever.
+fn abandon_connection(conn: u64, ctl: &ConnCtl, pending: &Pending, router: &Router) {
+    ctl.kill();
+    let ids: Vec<u64> = {
+        let mut map = pending.lock().unwrap();
+        let ids: Vec<u64> =
+            map.iter().filter(|(_, e)| e.conn == conn).map(|(id, _)| *id).collect();
+        for id in &ids {
+            map.remove(id);
+        }
+        ids
+    };
+    for id in ids {
+        let _ = router.cancel(id);
+    }
+}
+
+/// Route one engine event to its owning connection (dispatcher body,
+/// factored out for the slow-reader tests). Token/Started events are
+/// forwarded only to streaming registrations; the terminal event
+/// releases the registration. A connection whose queue stays full past
+/// `timeout` is abandoned via [`abandon_connection`].
+fn dispatch_event(mut ev: EngineEvent, pending: &Pending, router: &Router, timeout: Duration) {
+    let internal = ev.id();
+    let terminal = matches!(ev, EngineEvent::Finished(_));
+    // Hold the registry lock only for the map operation; serialization
+    // and (bounded) sending happen outside so per-token work never
+    // blocks connection submit paths.
+    let route = {
+        let mut map = pending.lock().unwrap();
+        if terminal {
+            map.remove(&internal)
+                .map(|e| (e.stream, e.logprobs, e.client_id, e.conn, e.ctl, e.tx))
+        } else {
+            match map.get(&internal) {
+                Some(e) if e.stream => Some((
+                    true,
+                    e.logprobs,
+                    e.client_id,
+                    e.conn,
+                    e.ctl.clone(),
+                    e.tx.clone(),
+                )),
+                _ => None,
+            }
+        }
+    };
+    if let Some((stream_mode, logprobs, client_id, conn, ctl, tx)) = route {
+        ev.set_id(client_id);
+        let line = event_json(&ev, stream_mode, logprobs).to_string();
+        if !send_with_timeout(&tx, line, timeout) {
+            abandon_connection(conn, &ctl, pending, router);
+        }
+    }
+}
+
+/// Serve until `stop` is set, with default [`ServerOpts`]. The bound
+/// address is reported through `on_bind` (tests connect to an ephemeral
+/// port).
 pub fn serve(
     addr: &str,
     router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    on_bind: impl FnOnce(std::net::SocketAddr),
+) -> crate::Result<()> {
+    serve_with(addr, router, ServerOpts::default(), stop, on_bind)
+}
+
+/// [`serve`] with explicit back-pressure knobs.
+pub fn serve_with(
+    addr: &str,
+    router: Arc<Router>,
+    opts: ServerOpts,
     stop: Arc<AtomicBool>,
     on_bind: impl FnOnce(std::net::SocketAddr),
 ) -> crate::Result<()> {
@@ -201,9 +431,7 @@ pub fn serve(
     let pending: Pending = Arc::new(Mutex::new(HashMap::new()));
     let next_id = Arc::new(AtomicU64::new(1));
 
-    // Dispatcher: drain worker events, route each to its owning
-    // connection. Token/Started events are forwarded only to streaming
-    // registrations; the terminal event releases the registration.
+    // Dispatcher: drain worker events, route each to its owner.
     let dispatcher = {
         let router = router.clone();
         let pending = pending.clone();
@@ -212,32 +440,11 @@ pub fn serve(
             while !stop.load(Ordering::Relaxed) {
                 let got = router.poll_events(64);
                 if got.is_empty() {
-                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    std::thread::sleep(Duration::from_millis(1));
                     continue;
                 }
-                for mut ev in got {
-                    let internal = ev.id();
-                    let terminal = matches!(ev, EngineEvent::Finished(_));
-                    // Hold the registry lock only for the map operation;
-                    // serialization happens outside so per-token string
-                    // formatting never blocks connection submit paths.
-                    let route = {
-                        let mut map = pending.lock().unwrap();
-                        if terminal {
-                            map.remove(&internal).map(|e| (e.stream, e.client_id, e.tx))
-                        } else {
-                            match map.get(&internal) {
-                                Some(e) if e.stream => {
-                                    Some((true, e.client_id, e.tx.clone()))
-                                }
-                                _ => None,
-                            }
-                        }
-                    };
-                    if let Some((stream_mode, client_id, tx)) = route {
-                        ev.set_id(client_id);
-                        let _ = tx.send(event_json(&ev, stream_mode).to_string());
-                    }
+                for ev in got {
+                    dispatch_event(ev, &pending, &router, opts.slow_reader_timeout);
                 }
             }
         })
@@ -251,13 +458,13 @@ pub fn serve(
                 let pending = pending.clone();
                 let next_id = next_id.clone();
                 handles.push(std::thread::spawn(move || {
-                    if let Err(e) = handle_conn(stream, &router, &pending, &next_id) {
+                    if let Err(e) = handle_conn(stream, &router, &pending, &next_id, opts) {
                         eprintln!("connection error: {e:#}");
                     }
                 }));
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
+                std::thread::sleep(Duration::from_millis(5));
             }
             Err(e) => {
                 stop.store(true, Ordering::Relaxed);
@@ -278,9 +485,17 @@ fn handle_conn(
     router: &Router,
     pending: &Pending,
     next_id: &AtomicU64,
+    opts: ServerOpts,
 ) -> crate::Result<()> {
     let reader = BufReader::new(stream.try_clone()?);
-    let (tx_conn, rx_conn) = mpsc::channel::<String>();
+    let (tx_conn, rx_conn) = mpsc::sync_channel::<String>(opts.writer_queue_lines.max(1));
+    // The connection id shares the request-id counter: both only need
+    // uniqueness, and one counter cannot collide with itself.
+    let conn_id = next_id.fetch_add(1, Ordering::Relaxed);
+    let ctl = Arc::new(ConnCtl {
+        dead: AtomicBool::new(false),
+        sock: stream.try_clone().ok(),
+    });
 
     // Writer half: the connection's only socket writer. Event lines
     // (from the dispatcher) and control replies (from the reader loop)
@@ -295,8 +510,11 @@ fn handle_conn(
             }
         }
     });
+    // Control replies ride the same bounded queue. A connection that
+    // stopped reading gets its replies dropped after the timeout — the
+    // dispatcher (or the EOF path below) tears it down.
     let reply = |j: Json| {
-        let _ = tx_conn.send(j.to_string());
+        let _ = send_with_timeout(&tx_conn, j.to_string(), opts.slow_reader_timeout);
     };
 
     // (client id, internal id) of every request this connection has in
@@ -307,6 +525,9 @@ fn handle_conn(
     let mut submitted: Vec<(u64, u64)> = Vec::new();
 
     for line in reader.lines() {
+        if ctl.dead.load(Ordering::Relaxed) {
+            break; // declared dead by the dispatcher (slow reader)
+        }
         let line = match line {
             Ok(l) => l,
             Err(_) => break, // reset mid-read: treat as a disconnect
@@ -346,6 +567,7 @@ fn handle_conn(
                 }
                 Some("cancel") => {
                     let target = j.get("id").and_then(Json::as_i64).map(|v| v as u64);
+                    let cand = j.get("candidate").and_then(Json::as_usize);
                     // Latest *still-in-flight* submission under that
                     // client id wins — a finished request under a reused
                     // id must not shadow an older one still running.
@@ -362,8 +584,18 @@ fn handle_conn(
                             // Fire and forget: the request's terminal
                             // line (finish: "cancelled") is the ack. A
                             // lost race against completion just means
-                            // the normal summary already went out.
-                            let _ = router.cancel(i);
+                            // the normal summary already went out. With
+                            // "candidate" only that candidate stops;
+                            // the group's terminal line arrives when
+                            // the last sibling finishes.
+                            match cand {
+                                Some(c) => {
+                                    let _ = router.cancel_candidate(i, c);
+                                }
+                                None => {
+                                    let _ = router.cancel(i);
+                                }
+                            }
                         }
                         None => {
                             reply(Json::obj(vec![(
@@ -396,6 +628,9 @@ fn handle_conn(
                         PendingEntry {
                             client_id: parsed.client_id,
                             stream: parsed.stream,
+                            logprobs: parsed.req.sampling.logprobs,
+                            conn: conn_id,
+                            ctl: ctl.clone(),
                             tx: tx_conn.clone(),
                         },
                     );
@@ -411,10 +646,11 @@ fn handle_conn(
             }
         }
     }
-    // Input closed: cancel whatever this connection still has in flight
-    // (finished ids are no longer routable — those cancels are no-ops),
-    // then drop our sender; the writer exits once the dispatcher has
-    // delivered (and dropped) every remaining registration.
+    // Input closed (or the dispatcher declared us dead): cancel whatever
+    // this connection still has in flight (finished ids are no longer
+    // routable — those cancels are no-ops), then drop our sender; the
+    // writer exits once the dispatcher has delivered (and dropped) every
+    // remaining registration.
     for &(_, internal) in &submitted {
         if pending.lock().unwrap().contains_key(&internal) {
             let _ = router.cancel(internal);
@@ -431,6 +667,7 @@ mod tests {
     use crate::config::EngineConfig;
     use crate::coordinator::engine::EngineHandle;
     use crate::coordinator::router::Policy;
+    use crate::coordinator::CandidateResult;
     use crate::runtime::host::HostBackend;
     use crate::runtime::ModelBackend;
 
@@ -439,7 +676,8 @@ mod tests {
         let p = parse_request(
             r#"{"id": 3, "tokens": [1, 2, 3], "max_new_tokens": 5, "dma": false,
                 "temperature": 0.7, "top_k": 12, "top_p": 0.9, "seed": 11,
-                "stop": [5, 9], "ignore_eos": true, "stream": true}"#,
+                "stop": [5, 9], "ignore_eos": true, "stream": true,
+                "n": 2, "best_of": 4, "logprobs": true}"#,
             99,
         )
         .unwrap();
@@ -454,6 +692,9 @@ mod tests {
         assert_eq!(p.req.sampling.seed, 11);
         assert_eq!(p.req.sampling.stop, vec![5, 9]);
         assert!(p.req.sampling.ignore_eos);
+        assert_eq!(p.req.sampling.n, 2);
+        assert_eq!(p.req.sampling.best_of, 4);
+        assert!(p.req.sampling.logprobs);
         assert!(p.stream);
     }
 
@@ -465,6 +706,9 @@ mod tests {
         assert_eq!(p.req.max_new_tokens, 16);
         assert!(p.req.dma);
         assert_eq!(p.req.sampling, SamplingParams::default());
+        assert_eq!(p.req.sampling.n, 1);
+        assert_eq!(p.req.sampling.best_of, 0);
+        assert!(!p.req.sampling.logprobs);
         assert!(!p.stream);
     }
 
@@ -480,6 +724,13 @@ mod tests {
             id: 9,
             output: vec![1, 2],
             finish: crate::coordinator::FinishReason::Eos,
+            candidates: vec![CandidateResult {
+                candidate: 0,
+                output: vec![1, 2],
+                finish: crate::coordinator::FinishReason::Eos,
+                cum_logprob: -1.5,
+                logprobs: vec![-0.5, -1.0],
+            }],
             queue_ms: 0.5,
             prefill_ms: 1.0,
             decode_ms: 2.0,
@@ -490,33 +741,76 @@ mod tests {
 
     #[test]
     fn response_round_trips_as_json() {
-        let j = response_json(&resp());
+        let j = response_json(&resp(), false);
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("id").unwrap().as_i64(), Some(9));
         assert_eq!(parsed.get("finish").unwrap().as_str(), Some("eos"));
         assert_eq!(parsed.get("output").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(parsed.get("ttft_ms").unwrap().as_f64(), Some(1.5));
-        // Non-streamed summary has no event tag (v1 shape).
+        // Non-streamed n=1 summary keeps the v2 shape exactly: no event
+        // tag, no candidates array, no logprob fields.
         assert!(parsed.get("event").is_none());
+        assert!(parsed.get("candidates").is_none());
+        assert!(parsed.get("cum_logprob").is_none());
+        assert!(parsed.get("logprobs").is_none());
+    }
+
+    #[test]
+    fn response_json_groups_and_logprobs_are_additive() {
+        // logprobs flag: per-token logprobs + cum for the best candidate.
+        let j = response_json(&resp(), true);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("cum_logprob").unwrap().as_f64(), Some(-1.5));
+        assert_eq!(parsed.get("logprobs").unwrap().as_arr().unwrap().len(), 2);
+        assert!(parsed.get("candidates").is_none(), "n=1 has no candidates array");
+
+        // A group summary carries every finalist.
+        let mut r = resp();
+        r.candidates.push(CandidateResult {
+            candidate: 1,
+            output: vec![1, 3],
+            finish: crate::coordinator::FinishReason::Length,
+            cum_logprob: -2.5,
+            logprobs: vec![-0.5, -2.0],
+        });
+        let parsed = Json::parse(&response_json(&r, false).to_string()).unwrap();
+        let cands = parsed.get("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(cands.len(), 2);
+        assert_eq!(cands[0].get("candidate").unwrap().as_i64(), Some(0));
+        assert_eq!(cands[1].get("finish").unwrap().as_str(), Some("length"));
+        assert_eq!(cands[1].get("cum_logprob").unwrap().as_f64(), Some(-2.5));
+        assert!(cands[0].get("logprobs").is_none(), "logprobs only when requested");
+        let parsed = Json::parse(&response_json(&r, true).to_string()).unwrap();
+        let cands = parsed.get("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(cands[1].get("logprobs").unwrap().as_arr().unwrap().len(), 2);
     }
 
     #[test]
     fn event_lines_serialize() {
-        let s = event_json(&EngineEvent::Started { id: 4, queue_ms: 0.25 }, true);
+        let s = event_json(&EngineEvent::Started { id: 4, queue_ms: 0.25 }, true, false);
         let js = Json::parse(&s.to_string()).unwrap();
         assert_eq!(js.get("event").unwrap().as_str(), Some("started"));
         assert_eq!(js.get("id").unwrap().as_i64(), Some(4));
 
-        let t = event_json(
-            &EngineEvent::Token { id: 4, token: 17, index: 2, decode_ms: 0.5 },
-            true,
-        );
+        let ev = EngineEvent::Token {
+            id: 4,
+            candidate: 2,
+            token: 17,
+            index: 2,
+            logprob: -0.75,
+            decode_ms: 0.5,
+        };
+        let t = event_json(&ev, true, false);
         let jt = Json::parse(&t.to_string()).unwrap();
         assert_eq!(jt.get("event").unwrap().as_str(), Some("token"));
+        assert_eq!(jt.get("candidate").unwrap().as_i64(), Some(2));
         assert_eq!(jt.get("token").unwrap().as_i64(), Some(17));
         assert_eq!(jt.get("index").unwrap().as_i64(), Some(2));
+        assert!(jt.get("logprob").is_none(), "logprob only when requested");
+        let jt = Json::parse(&event_json(&ev, true, true).to_string()).unwrap();
+        assert_eq!(jt.get("logprob").unwrap().as_f64(), Some(-0.75));
 
-        let f = event_json(&EngineEvent::Finished(resp()), true);
+        let f = event_json(&EngineEvent::Finished(resp()), true, false);
         let jf = Json::parse(&f.to_string()).unwrap();
         assert_eq!(jf.get("event").unwrap().as_str(), Some("finished"));
         assert_eq!(jf.get("finish").unwrap().as_str(), Some("eos"));
@@ -581,8 +875,9 @@ mod tests {
         let j = Json::parse(line.trim()).unwrap();
         assert_eq!(j.get("id").unwrap().as_i64(), Some(1));
         assert!(j.get("output").unwrap().as_arr().unwrap().len() <= 2);
-        // Non-streaming requests keep the v1 single-line shape.
+        // Non-streaming requests keep the v2 single-line shape.
         assert!(j.get("event").is_none());
+        assert!(j.get("candidates").is_none());
         assert!(j.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
 
         stop.store(true, Ordering::Relaxed);
@@ -666,6 +961,7 @@ mod tests {
                         j.get("index").unwrap().as_i64().unwrap(),
                         streamed_tokens.len() as i64
                     );
+                    assert_eq!(j.get("candidate").unwrap().as_i64(), Some(0));
                     streamed_tokens.push(j.get("token").unwrap().as_i64().unwrap());
                 }
                 "finished" => break j,
@@ -743,6 +1039,206 @@ mod tests {
         writer.shutdown(std::net::Shutdown::Write).unwrap();
         stop.store(true, Ordering::Relaxed);
         srv.join().unwrap();
+    }
+
+    #[test]
+    fn parallel_sampling_and_logprobs_over_tcp() {
+        // decode_slice 1: one token per candidate per scheduler step, so
+        // the candidate-cancel below lands with steps of margin.
+        let (addr, stop, srv) = spawn_server(
+            EngineConfig { max_new_tokens: 32, decode_slice: 1, ..Default::default() },
+            1,
+            Policy::RoundRobin,
+        );
+
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        let read_json = |line: &mut String, reader: &mut BufReader<TcpStream>| {
+            line.clear();
+            reader.read_line(line).unwrap();
+            Json::parse(line.trim()).unwrap()
+        };
+
+        // Streamed n=2 with logprobs: token lines are candidate-tagged
+        // and carry logprob; the summary reports both candidates.
+        writeln!(
+            writer,
+            "{}",
+            concat!(
+                r#"{"id": 1, "tokens": [1, 9, 8, 7, 6], "max_new_tokens": 4, "#,
+                r#""temperature": 0.8, "seed": 3, "n": 2, "logprobs": true, "#,
+                r#""stream": true}"#
+            )
+        )
+        .unwrap();
+        let mut per_candidate: std::collections::HashMap<i64, Vec<i64>> =
+            std::collections::HashMap::new();
+        let summary = loop {
+            let j = read_json(&mut line, &mut reader);
+            match j.get("event").unwrap().as_str().unwrap() {
+                "started" => {}
+                "token" => {
+                    let cand = j.get("candidate").unwrap().as_i64().unwrap();
+                    let toks = per_candidate.entry(cand).or_default();
+                    assert_eq!(j.get("index").unwrap().as_i64().unwrap(), toks.len() as i64);
+                    let lp = j.get("logprob").unwrap().as_f64().unwrap();
+                    assert!(lp <= 0.0 && lp.is_finite());
+                    toks.push(j.get("token").unwrap().as_i64().unwrap());
+                }
+                "finished" => break j,
+                other => panic!("unexpected event {other}"),
+            }
+        };
+        assert_eq!(per_candidate.len(), 2, "both candidates streamed");
+        let cands = summary.get("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(cands.len(), 2);
+        // Summary candidates replay the streamed per-candidate tokens.
+        for c in cands {
+            let idx = c.get("candidate").unwrap().as_i64().unwrap();
+            let out: Vec<i64> = c
+                .get("output")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_i64().unwrap())
+                .collect();
+            assert_eq!(&out, &per_candidate[&idx], "candidate {idx}");
+            assert!(c.get("cum_logprob").unwrap().as_f64().is_some());
+            assert_eq!(
+                c.get("logprobs").unwrap().as_arr().unwrap().len(),
+                out.len()
+            );
+        }
+        // Best-first ordering.
+        assert!(
+            cands[0].get("cum_logprob").unwrap().as_f64().unwrap()
+                >= cands[1].get("cum_logprob").unwrap().as_f64().unwrap()
+        );
+
+        // Non-streaming greedy n=2: single summary line, candidates
+        // identical, flat output mirrors candidate 0.
+        writeln!(
+            writer,
+            r#"{{"id": 2, "tokens": [1, 9, 8, 7, 6], "max_new_tokens": 3, "n": 2}}"#
+        )
+        .unwrap();
+        let j = read_json(&mut line, &mut reader);
+        assert!(j.get("event").is_none());
+        let cands = j.get("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(cands.len(), 2);
+        assert_eq!(
+            cands[0].get("output").unwrap().as_arr().unwrap().len(),
+            j.get("output").unwrap().as_arr().unwrap().len()
+        );
+        assert!(j.get("logprobs").is_none(), "logprobs not requested");
+
+        // Candidate cancel: kill candidate 1 of a long group; the
+        // summary still arrives with candidate 0 run to length.
+        writeln!(
+            writer,
+            "{}",
+            concat!(
+                r#"{"id": 3, "tokens": [1, 9, 8, 7, 6], "max_new_tokens": 8, "#,
+                r#""ignore_eos": true, "n": 2, "stream": true}"#
+            )
+        )
+        .unwrap();
+        loop {
+            let j = read_json(&mut line, &mut reader);
+            if j.get("event").unwrap().as_str() == Some("token") {
+                break;
+            }
+        }
+        writeln!(writer, r#"{{"cmd": "cancel", "id": 3, "candidate": 1}}"#).unwrap();
+        let summary = loop {
+            let j = read_json(&mut line, &mut reader);
+            if j.get("event").unwrap().as_str() == Some("finished") {
+                break j;
+            }
+        };
+        let cands = summary.get("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(cands.len(), 2);
+        let finishes: Vec<&str> = cands
+            .iter()
+            .map(|c| c.get("finish").unwrap().as_str().unwrap())
+            .collect();
+        assert!(finishes.contains(&"cancelled"), "{finishes:?}");
+        assert_eq!(summary.get("finish").unwrap().as_str(), Some("length"));
+
+        writer.shutdown(std::net::Shutdown::Write).unwrap();
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn slow_reader_is_abandoned_and_cancelled() {
+        // Dispatcher-level back-pressure policy: a registration whose
+        // bounded queue never drains is abandoned after the timeout —
+        // its entries leave the registry, its connection is flagged
+        // dead, and its in-flight requests are cancelled (KV released).
+        let h = EngineHandle::spawn(
+            || Ok(Box::new(HostBackend::for_tests()) as Box<dyn ModelBackend>),
+            EngineConfig { max_new_tokens: 64, decode_slice: 1, ..Default::default() },
+            5,
+        );
+        let router = Router::new(vec![h], Policy::RoundRobin);
+        let pending: Pending = Arc::new(Mutex::new(HashMap::new()));
+        let ctl = Arc::new(ConnCtl { dead: AtomicBool::new(false), sock: None });
+        // Capacity-1 queue we never drain: the receiver is alive (so
+        // sends see Full, not Disconnected) but nothing reads.
+        let (tx, _rx) = mpsc::sync_channel::<String>(1);
+        pending.lock().unwrap().insert(
+            100,
+            PendingEntry {
+                client_id: 1,
+                stream: true,
+                logprobs: false,
+                conn: 7,
+                ctl: ctl.clone(),
+                tx,
+            },
+        );
+        router
+            .submit(Request {
+                id: 100,
+                tokens: vec![1, 9, 8, 7],
+                max_new_tokens: 60,
+                dma: false,
+                sampling: SamplingParams { ignore_eos: true, ..Default::default() },
+            })
+            .unwrap();
+        // Drive the dispatcher body until the slow reader trips.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while !ctl.dead.load(Ordering::Relaxed) && std::time::Instant::now() < deadline {
+            for ev in router.poll_events(16) {
+                dispatch_event(ev, &pending, &router, Duration::from_millis(50));
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(ctl.dead.load(Ordering::Relaxed), "slow reader never abandoned");
+        assert!(pending.lock().unwrap().is_empty(), "registration not dropped");
+        // The cancel propagated: the worker's KV gauge drains to zero.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            // Drain any leftover events (the terminal cancelled event
+            // has no registration left and is dropped).
+            for ev in router.poll_events(16) {
+                dispatch_event(ev, &pending, &router, Duration::from_millis(10));
+            }
+            if router.kv_bytes_in_use() == 0 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "slow-reader cancel never released KV: {} bytes",
+                router.kv_bytes_in_use()
+            );
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        router.shutdown();
     }
 
     #[test]

@@ -620,3 +620,215 @@ fn tcp_server_multiple_clients() {
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     srv.join().unwrap();
 }
+
+// ---------------------------------------------------------------------
+// Sequence groups: pool accounting, COW sharing, decoded-byte admission
+// ---------------------------------------------------------------------
+
+/// Dual-format engine used by the group-accounting tests below.
+fn quant_engine(cfg_tweak: impl FnOnce(&mut EngineConfig)) -> Engine {
+    let mut cfg = EngineConfig {
+        max_new_tokens: 8,
+        decode_slice: 1,
+        kv_format: KvFormat::Dual,
+        kv_precision_policies: vec![KvPolicy { sink: 16, diag: 16 }],
+        ..Default::default()
+    };
+    cfg_tweak(&mut cfg);
+    Engine::new(Box::new(HostBackend::for_tests()), cfg, 5)
+}
+
+#[test]
+fn group_accounts_prompt_pages_once() {
+    // Acceptance bar: an n=4 group over a 32-token prompt accounts the
+    // prompt once plus four per-candidate frontier budgets —
+    // bytes == (1 x prompt + 4 x frontier) blocks — while 4 independent
+    // requests account the prompt four times.
+    let page = dma::kvquant::PAGE_TOKENS; // 16
+    let prompt_len = 2 * page; // 32: page-aligned, frontier tail 0
+    let max_new = 8usize;
+
+    let mut grouped = quant_engine(|_| {});
+    let bpt = grouped.stats.kv_bytes_per_token as usize;
+    let block_bytes = page * bpt;
+    let mut r = req(1, prompt_len, max_new, false);
+    r.sampling.n = 4;
+    r.sampling.ignore_eos = true;
+    assert!(grouped.submit(r).is_none());
+    grouped.step().unwrap(); // admitted (+ first prefill chunk)
+    // 1 x prompt (2 blocks) + 4 x frontier budget (1 block each).
+    let prompt_blocks = prompt_len.div_ceil(page);
+    let cand_blocks = max_new.div_ceil(page);
+    let expected = (prompt_blocks + 4 * cand_blocks) * block_bytes;
+    assert_eq!(grouped.kv_bytes_in_use(), expected);
+    let group_bytes = grouped.kv_bytes_in_use();
+    let resps = grouped.run_until_idle().unwrap();
+    assert_eq!(resps.len(), 1);
+    assert_eq!(resps[0].candidates.len(), 4);
+    assert_eq!(grouped.kv_bytes_in_use(), 0, "group released everything");
+    grouped.pool_check().unwrap();
+
+    // 4 independent requests with the same prompt (no prefix cache):
+    // the prompt is accounted once per request.
+    let mut indep = quant_engine(|_| {});
+    for i in 0..4 {
+        let mut r = req(1000 + i, prompt_len, max_new, false);
+        // Identical prompt content on purpose — without the radix cache
+        // there is no sharing to save them.
+        r.tokens = (0..prompt_len).map(|j| ((j * 7 + 1) % 58) as i32 + 6).collect();
+        r.sampling.ignore_eos = true;
+        assert!(indep.submit(r).is_none());
+    }
+    indep.step().unwrap(); // all four admitted (4 slots)
+    let indep_bytes = indep.kv_bytes_in_use();
+    assert_eq!(indep_bytes, 4 * (prompt_blocks + cand_blocks) * block_bytes);
+    assert!(
+        group_bytes * 2 <= indep_bytes,
+        "grouped KV ({group_bytes}) not sublinear vs independent ({indep_bytes})"
+    );
+    indep.run_until_idle().unwrap();
+}
+
+#[test]
+fn group_forks_share_prompt_pages_by_arc() {
+    // The physical sharing claim behind the accounting: sibling
+    // candidates' stores point at the same immutable prompt pages.
+    let mut kv = {
+        let mut be = HostBackend::for_tests();
+        let qcfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 8,
+            policies: vec![KvPolicy { sink: 8, diag: 8 }],
+        };
+        let toks: Vec<i32> = (0..20).map(|i| ((i * 7) % 60) + 1).collect();
+        be.prefill(&toks, false, Some(&qcfg)).unwrap().kv
+    };
+    let fork = kv.fork();
+    let (SeqKv::Quant(parent), SeqKv::Quant(child)) = (&kv, &fork) else {
+        panic!("quant slots expected")
+    };
+    for li in 0..2 {
+        for h in 0..2 {
+            for j in 0..parent.k[li][h].n_full_pages() {
+                assert!(Arc::ptr_eq(
+                    parent.k[li][h].page_arc(j),
+                    child.k[li][h].page_arc(j)
+                ));
+            }
+        }
+    }
+    // Divergent decode growth never touches the shared pages: decode
+    // one token into each and compare the shared prefix bit-for-bit.
+    let mut be = HostBackend::for_tests();
+    let l1 = be.decode(&[7], &mut [Some(&mut kv)]).unwrap();
+    let mut fork = fork;
+    let l2 = be.decode(&[9], &mut [Some(&mut fork)]).unwrap();
+    assert!(l1.iter().all(|v| v.is_finite()));
+    assert!(l2.iter().all(|v| v.is_finite()));
+    assert_eq!(kv.pos(), 21);
+    assert_eq!(fork.pos(), 21);
+    let (SeqKv::Quant(a), SeqKv::Quant(b)) = (&kv, &fork) else { panic!() };
+    let mut pa = vec![0f32; 16 * 32];
+    let mut pb = vec![0f32; 16 * 32];
+    a.k[0][0].decode_rows(0, 16, dma::kvquant::Precision::High, &mut pa);
+    b.k[0][0].decode_rows(0, 16, dma::kvquant::Precision::High, &mut pb);
+    assert_eq!(pa, pb, "shared prefix diverged after sibling decode");
+}
+
+#[test]
+fn decoded_cache_bytes_count_against_admission() {
+    // Memory-tight deployment: pin the pool budget to 8 blocks. One
+    // group's quantized blocks leave 5 free — room for a sibling
+    // request on block count alone — but its hot decoded-page tiles
+    // also charge the byte budget, so the second request must wait
+    // until the first retires.
+    let page = dma::kvquant::PAGE_TOKENS;
+    let prompt_len = 2 * page;
+    let probe = quant_engine(|_| {});
+    let bpt = probe.stats.kv_bytes_per_token as usize;
+    let block_bytes = page * bpt;
+    let mut e = quant_engine(|cfg| cfg.kv_budget_bytes = 8 * block_bytes);
+    assert_eq!(e.kv_free_blocks(), 8);
+
+    let mut r1 = req(1, prompt_len, 8, false);
+    r1.sampling.ignore_eos = true;
+    assert!(e.submit(r1).is_none());
+    // Admit + prefill + first decode steps: the decoded-page cache
+    // fills with the prompt's full pages.
+    e.step().unwrap();
+    e.step().unwrap();
+    assert!(e.decoded_bytes_live() > 0, "decode warmed no decoded tiles");
+
+    let mut r2 = req(2, prompt_len, 8, false);
+    r2.sampling.ignore_eos = true;
+    assert!(e.submit(r2).is_none());
+    let mut started2 = false;
+    for _ in 0..3 {
+        // Blocks alone would admit request 2 — the decoded bytes are
+        // what forbids it.
+        assert!(e.kv_free_blocks() >= 3, "free {}", e.kv_free_blocks());
+        assert!(
+            e.kv_bytes_in_use() + 3 * block_bytes + e.decoded_bytes_live()
+                > 8 * block_bytes,
+            "test lost its premise: headroom appeared"
+        );
+        let evs = e.step().unwrap();
+        started2 |= evs
+            .iter()
+            .any(|ev| matches!(ev, EngineEvent::Started { id: 2, .. }));
+    }
+    assert!(!started2, "request 2 admitted despite hot decoded tiles");
+
+    // Request 1 retires -> decoded bytes die with it -> request 2 runs.
+    let resps = e.run_until_idle().unwrap();
+    assert_eq!(resps.len(), 2);
+    assert!(resps.iter().all(|r| !r.output.is_empty()));
+    assert_eq!(e.decoded_bytes_live(), 0);
+    assert_eq!(e.kv_bytes_in_use(), 0);
+    e.pool_check().unwrap();
+}
+
+#[test]
+fn quantized_group_candidate0_bit_matches_n1() {
+    // Acceptance bar (quantized path): candidate 0 of a greedy n=4
+    // group over the dual cache is bit-identical to the n=1 request,
+    // and so are its seeded candidates per (seed, candidate) across
+    // runs and thread counts.
+    let run = |n: usize, threads: usize, temperature: f32| {
+        let mut e = quant_engine(|cfg| {
+            cfg.threads = threads;
+            cfg.decode_slice = 8;
+        });
+        let mut r = req(1, 24, 6, false);
+        r.sampling = SamplingParams {
+            temperature,
+            seed: 11,
+            ignore_eos: true,
+            n,
+            ..Default::default()
+        };
+        e.submit(r);
+        let resp = e.run_until_idle().unwrap().remove(0);
+        let mut by_cand: Vec<(usize, Vec<i32>)> = resp
+            .candidates
+            .iter()
+            .map(|c| (c.candidate, c.output.clone()))
+            .collect();
+        by_cand.sort_by_key(|(c, _)| *c);
+        by_cand
+    };
+    for temperature in [0.0f32, 0.9] {
+        let n1 = run(1, 1, temperature);
+        let g1 = run(4, 1, temperature);
+        assert_eq!(g1.len(), 4);
+        assert_eq!(g1[0].1, n1[0].1, "candidate 0 diverged at t={temperature}");
+        if temperature == 0.0 {
+            for (c, out) in &g1 {
+                assert_eq!(out, &n1[0].1, "greedy candidate {c} diverged");
+            }
+        }
+        // Reproducible across runs and --threads settings.
+        assert_eq!(g1, run(4, 1, temperature), "rerun diverged");
+        assert_eq!(g1, run(4, 4, temperature), "threads changed a candidate");
+    }
+}
