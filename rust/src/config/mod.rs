@@ -231,6 +231,13 @@ pub struct EngineConfig {
     /// explicitly; quantized formats get proportionally more admission
     /// blocks either way.
     pub kv_budget_bytes: usize,
+    /// Layer-probe sampling cadence (`--metrics-sample-n`): every Nth
+    /// decode step additionally times each layer's attention and KV
+    /// quantize-on-append into the telemetry histograms. 0 (the
+    /// default) disables the probe — the decode hot path then contains
+    /// no clock reads. Only takes effect when the engine runs with
+    /// telemetry attached.
+    pub metrics_sample_n: usize,
 }
 
 impl Default for EngineConfig {
@@ -249,6 +256,7 @@ impl Default for EngineConfig {
             threads: 1,
             decoded_cache_bytes: crate::kvquant::DECODED_CACHE_BYTES,
             kv_budget_bytes: 0,
+            metrics_sample_n: 0,
         }
     }
 }
@@ -356,5 +364,6 @@ mod tests {
         assert_eq!(cfg.threads, 1);
         assert_eq!(cfg.decoded_cache_bytes, crate::kvquant::DECODED_CACHE_BYTES);
         assert_eq!(cfg.kv_budget_bytes, 0, "0 = derive from decode slots");
+        assert_eq!(cfg.metrics_sample_n, 0, "layer probe off by default");
     }
 }

@@ -56,8 +56,10 @@ use crate::config::EngineConfig;
 use crate::kvcache::{BlockPool, SeqId, SeqKv};
 use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv, PAGE_TOKENS};
 use crate::runtime::{ModelBackend, PrefillSeq};
+use crate::telemetry::Telemetry;
 use std::collections::VecDeque;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Hard cap on candidates per request (`max(n, best_of)`): a fork bomb
@@ -165,7 +167,14 @@ struct Active {
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
     pub completed: u64,
+    /// Total submit-time/prefill-time rejections (all causes).
     pub rejected: u64,
+    /// Rejections whose cause was the pool's *block* capacity: the
+    /// group's combined block budget can never fit the pool.
+    pub rejected_blocks: u64,
+    /// Rejections whose cause was the pool's *byte* budget: the group's
+    /// blocks would exceed `kv_budget_bytes` even against an empty pool.
+    pub rejected_bytes: u64,
     /// Requests (whole groups) cancelled mid-flight.
     pub cancelled: u64,
     /// Individual candidates cancelled out of groups that kept running.
@@ -253,7 +262,26 @@ pub struct Engine {
     /// forks). Pool ids are never taken from client-supplied request
     /// ids.
     next_internal: u64,
+    /// Shared telemetry registry (`None` keeps the pre-telemetry hot
+    /// path: every record site is gated on this option).
+    telemetry: Option<Arc<Telemetry>>,
+    /// Worker index for trace-event rows (`pid`); 0 for unmanaged
+    /// engines.
+    worker_idx: usize,
     pub stats: EngineStats,
+}
+
+/// Why [`Engine::reject`] refused a request — feeds the split
+/// `rejected_blocks`/`rejected_bytes` counters so byte-budget tuning is
+/// diagnosable from stats alone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RejectCause {
+    /// Group block budget exceeds the pool's block count.
+    Blocks,
+    /// Group bytes exceed the pool's byte budget.
+    Bytes,
+    /// Anything else: queue full, invalid params, backend error.
+    Other,
 }
 
 impl Engine {
@@ -312,7 +340,41 @@ impl Engine {
             prefill_chunk,
             decoded_live: 0,
             next_internal: 0,
+            telemetry: None,
+            worker_idx: 0,
             stats,
+        }
+    }
+
+    /// Attach the shared telemetry registry (and forward its layer probe
+    /// to the backend). `worker` labels this engine's trace rows and
+    /// gauges. Engines without telemetry pay nothing: every record site
+    /// is behind the `Option`.
+    pub fn set_telemetry(&mut self, telemetry: Arc<Telemetry>, worker: usize) {
+        self.backend.set_probe(Some(telemetry.probe().clone()));
+        self.telemetry = Some(telemetry);
+        self.worker_idx = worker;
+    }
+
+    /// Byte budget of the admission pool (the denominator of KV
+    /// pressure).
+    pub fn kv_bytes_capacity(&self) -> usize {
+        self.pool.bytes_capacity()
+    }
+
+    /// Telemetry bookkeeping of one terminal response (counter + trace
+    /// instant). No-op without telemetry.
+    fn note_finish(&self, id: u64, cancelled: bool) {
+        if let Some(t) = &self.telemetry {
+            if cancelled {
+                t.requests_cancelled.inc();
+            } else {
+                t.requests_completed.inc();
+            }
+            if let Some(tr) = t.trace() {
+                let name = if cancelled { "cancel" } else { "finish" };
+                tr.instant(name, self.worker_idx, id, tr.now_us(), &[]);
+            }
         }
     }
 
@@ -356,8 +418,26 @@ impl Engine {
         self.pool.check_invariants()
     }
 
-    fn reject(&mut self, req: &Request, error: String) -> Response {
+    /// Count one rejection under its cause (total + split counters +
+    /// telemetry).
+    fn note_rejected(&mut self, cause: RejectCause) {
         self.stats.rejected += 1;
+        match cause {
+            RejectCause::Blocks => self.stats.rejected_blocks += 1,
+            RejectCause::Bytes => self.stats.rejected_bytes += 1,
+            RejectCause::Other => {}
+        }
+        if let Some(t) = &self.telemetry {
+            match cause {
+                RejectCause::Blocks => t.rejected_blocks.inc(),
+                RejectCause::Bytes => t.rejected_bytes.inc(),
+                RejectCause::Other => t.rejected_other.inc(),
+            }
+        }
+    }
+
+    fn reject(&mut self, req: &Request, error: String, cause: RejectCause) -> Response {
+        self.note_rejected(cause);
         Response {
             id: req.id,
             output: vec![],
@@ -376,17 +456,17 @@ impl Engine {
     /// or oversized candidate group).
     pub fn submit(&mut self, req: Request) -> Option<Response> {
         if self.queue.len() >= self.cfg.queue_limit {
-            return Some(self.reject(&req, "queue full".into()));
+            return Some(self.reject(&req, "queue full".into(), RejectCause::Other));
         }
         let s = &req.sampling;
         if s.best_of != 0 && s.best_of < s.n.max(1) {
             let msg = format!("best_of {} < n {}", s.best_of, s.n);
-            return Some(self.reject(&req, msg));
+            return Some(self.reject(&req, msg, RejectCause::Other));
         }
         let group = s.group_size();
         if group > MAX_GROUP {
             let msg = format!("group of {group} candidates exceeds the cap of {MAX_GROUP}");
-            return Some(self.reject(&req, msg));
+            return Some(self.reject(&req, msg, RejectCause::Other));
         }
         let budget = req.tokens.len() + req.max_new_tokens.min(self.cfg.max_new_tokens);
         if req.tokens.is_empty() || budget > self.backend.cache_len() {
@@ -394,7 +474,7 @@ impl Engine {
                 "prompt+budget {budget} exceeds cache {}",
                 self.backend.cache_len()
             );
-            return Some(self.reject(&req, msg));
+            return Some(self.reject(&req, msg, RejectCause::Other));
         }
         // A group whose combined block budget cannot fit even an empty
         // pool would queue forever — reject it up front. Credit the
@@ -407,13 +487,34 @@ impl Engine {
         } else {
             0
         };
-        if self.group_blocks_needed(&req, best_share) > self.pool.num_blocks() {
-            let msg = format!(
-                "group KV budget ({} blocks) exceeds the pool ({} blocks)",
-                self.group_blocks_needed(&req, best_share),
-                self.pool.num_blocks()
-            );
-            return Some(self.reject(&req, msg));
+        let need = self.group_blocks_needed(&req, best_share);
+        if need > self.pool.num_blocks() {
+            // The pool's block plane is sized from whichever budget the
+            // deployment made binding: a pinned `kv_budget_bytes` means
+            // this group over-asks the *byte* budget; otherwise it
+            // over-asks the slot-derived *block* capacity.
+            let (cause, msg) = if self.cfg.kv_budget_bytes > 0 {
+                (
+                    RejectCause::Bytes,
+                    format!(
+                        "group KV budget ({} bytes) exceeds kv_budget_bytes ({})",
+                        need * self.pool.block_bytes(),
+                        self.pool.bytes_capacity()
+                    ),
+                )
+            } else {
+                (
+                    RejectCause::Blocks,
+                    format!(
+                        "group KV budget ({need} blocks) exceeds the pool ({} blocks)",
+                        self.pool.num_blocks()
+                    ),
+                )
+            };
+            return Some(self.reject(&req, msg, cause));
+        }
+        if let Some(t) = &self.telemetry {
+            t.requests_submitted.inc();
         }
         self.queue.push_back(Tracked::new(req));
         None
@@ -466,6 +567,7 @@ impl Engine {
             let mut t = self.queue.remove(pos).unwrap();
             t.queue_ms = t.enqueued.elapsed().as_secs_f64() * 1e3;
             self.stats.cancelled += 1;
+            self.note_finish(id, true);
             return Ok(Some(EngineEvent::Finished(
                 t.respond(FinishReason::Cancelled, vec![]),
             )));
@@ -508,6 +610,7 @@ impl Engine {
         // recount of the refcount plane after the release.
         self.pool.check_invariants()?;
         self.stats.cancelled += 1;
+        self.note_finish(id, true);
         Ok(Some(EngineEvent::Finished(
             tracked.respond(FinishReason::Cancelled, finalists),
         )))
@@ -578,11 +681,14 @@ impl Engine {
             // A group whose other candidates finished normally still
             // completed; one that lost every candidate to cancels did
             // not.
-            if finalists.iter().all(|c| c.finish == FinishReason::Cancelled) {
+            let all_cancelled =
+                finalists.iter().all(|c| c.finish == FinishReason::Cancelled);
+            if all_cancelled {
                 self.stats.cancelled += 1;
             } else {
                 self.stats.completed += 1;
             }
+            self.note_finish(id, all_cancelled);
             return Ok(Some(EngineEvent::Finished(
                 tracked.respond(FinishReason::Cancelled, finalists),
             )));
@@ -728,6 +834,16 @@ impl Engine {
             }
         }
         if !fits(&self.pool, self.decoded_live) {
+            if let Some(t) = &self.telemetry {
+                // Which budget clause bound: blocks if the free-block
+                // plane cannot cover the group, otherwise the byte
+                // budget (decoded-page bytes charge it too).
+                if !self.pool.can_admit_blocks(need) {
+                    t.deferred_blocks.inc();
+                } else {
+                    t.deferred_bytes.inc();
+                }
+            }
             for id in shared_forks {
                 self.pool.release(id)?;
             }
@@ -767,7 +883,7 @@ impl Engine {
             Ok(s) => s,
             Err(e) => {
                 self.release_group(prompt_pool_id, &cand_pool_ids, &shared_forks)?;
-                self.stats.rejected += 1;
+                self.note_rejected(RejectCause::Other);
                 let mut resp = tracked.respond(FinishReason::Rejected, vec![]);
                 resp.error = Some(e.to_string());
                 out.push(EngineEvent::Finished(resp));
@@ -780,6 +896,37 @@ impl Engine {
         }
         if group > 1 {
             self.stats.grouped_requests += 1;
+        }
+        if let Some(t) = &self.telemetry {
+            t.requests_admitted.inc();
+            t.queue_us.record_ms(tracked.queue_ms);
+            if hit.tokens > 0 {
+                t.prefix_hit_tokens.add(hit.tokens as u64);
+            }
+            if let Some(tr) = t.trace() {
+                // The queued span ends here (admission) and stretches
+                // back to enqueue; a prefix hit marks the timeline too.
+                let now = tr.now_us();
+                let dur = (tracked.queue_ms * 1e3) as u64;
+                tr.span(
+                    "queued",
+                    self.worker_idx,
+                    tracked.req.id,
+                    now.saturating_sub(dur),
+                    dur,
+                    &[],
+                );
+                if hit.tokens > 0 {
+                    let bytes = hit.tokens as f64 * self.stats.kv_bytes_per_token as f64;
+                    tr.instant(
+                        "prefix_hit",
+                        self.worker_idx,
+                        tracked.req.id,
+                        now,
+                        &[("tokens", hit.tokens as f64), ("bytes", bytes)],
+                    );
+                }
+            }
         }
         out.push(EngineEvent::Started {
             id: tracked.req.id,
@@ -813,16 +960,34 @@ impl Engine {
         let t0 = Instant::now();
         if let Err(e) = self.backend.prefill_chunk(seq, self.prefill_chunk) {
             self.release_group(act.prompt_pool_id, &act.cand_pool_ids, &act.shared_forks)?;
-            self.stats.rejected += 1;
+            self.note_rejected(RejectCause::Other);
             let mut resp = act.tracked.respond(FinishReason::Rejected, vec![]);
             resp.error = Some(e.to_string());
             out.push(EngineEvent::Finished(resp));
             return Ok(());
         }
-        act.tracked.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+        let chunk_ms = t0.elapsed().as_secs_f64() * 1e3;
+        act.tracked.prefill_ms += chunk_ms;
         self.stats.prefill_chunks += 1;
         let SlotState::Prefilling(ref seq) = act.state else { unreachable!() };
-        self.stats.prefill_tokens += (seq.done - before) as u64;
+        let chunk_tokens = seq.done - before;
+        self.stats.prefill_tokens += chunk_tokens as u64;
+        if let Some(t) = &self.telemetry {
+            t.prefill_chunk_us.record_ms(chunk_ms);
+            t.prefill_tokens.add(chunk_tokens as u64);
+            if let Some(tr) = t.trace() {
+                let now = tr.now_us();
+                let dur = (chunk_ms * 1e3) as u64;
+                tr.span(
+                    "prefill_chunk",
+                    self.worker_idx,
+                    act.tracked.req.id,
+                    now.saturating_sub(dur),
+                    dur,
+                    &[("tokens", chunk_tokens as f64), ("done", seq.done as f64)],
+                );
+            }
+        }
         act.tracked.phase = SeqPhase::Prefilling { done_tokens: seq.done };
         if !seq.is_done() {
             self.active[idx] = Some(act);
@@ -859,7 +1024,7 @@ impl Engine {
             Ok(o) => o,
             Err(e) => {
                 self.release_group(prompt_pool_id, &cand_pool_ids, &shared_forks)?;
-                self.stats.rejected += 1;
+                self.note_rejected(RejectCause::Other);
                 let mut resp = tracked.respond(FinishReason::Rejected, vec![]);
                 resp.error = Some(e.to_string());
                 out.push(EngineEvent::Finished(resp));
@@ -950,10 +1115,20 @@ impl Engine {
             cands.push(c);
         }
         tracked.phase = SeqPhase::Decoding;
+        // TTFT was stamped (idempotently) at the first sampled token;
+        // record it once per group. A group whose every candidate was
+        // pre-cancelled never sampled, and never stamps.
+        if tracked.ttft_ms > 0.0 {
+            if let Some(t) = &self.telemetry {
+                t.ttft_us.record_ms(tracked.ttft_ms);
+                t.ttft_10s.add(t.now_sec(), (tracked.ttft_ms * 1e3) as u64);
+            }
+        }
 
         if cands.iter().all(|c| c.finish.is_some()) {
             self.release_holdings(prompt_pool_id, &shared_forks)?;
             self.stats.completed += 1;
+            self.note_finish(req_id, false);
             let n = tracked.req.sampling.num_return();
             let mut finalists = rank_candidates(&cands);
             finalists.truncate(n);
@@ -1016,6 +1191,17 @@ impl Engine {
         let batch_n = tokens.len();
         self.stats.decode_steps += 1;
         self.stats.decode_batch_sum += batch_n as u64;
+        if let Some(t) = &self.telemetry {
+            t.decode_step_us.record_ms(dt);
+            t.decode_tokens.add(batch_n as u64);
+            t.tokens_10s.add(t.now_sec(), batch_n as u64);
+            // Every token of the batch shares the step's wall time
+            // equally (the same amortisation the Token events report).
+            let share_us = (dt * 1e3 / batch_n.max(1) as f64) as u64;
+            for _ in 0..batch_n {
+                t.inter_token_us.record_us(share_us);
+            }
+        }
         // No pool.extend here: admission already reserved every
         // candidate's full budget, so growing the accounting per
         // generated token would double-count — and, with the radix
@@ -1027,6 +1213,7 @@ impl Engine {
                 unreachable!("taken slots are decoding by construction")
             };
             let id = tracked.req.id;
+            let group_start = bi;
             // See complete_prefill: logprobs only when requested or
             // needed for best_of ranking.
             let track_lp =
@@ -1043,6 +1230,23 @@ impl Engine {
                 out.push(c.push_token(id, tok, lp, share));
                 self.stats.decode_tokens += 1;
                 bi += 1;
+            }
+            if let Some(tr) = self.telemetry.as_ref().and_then(|t| t.trace()) {
+                // One span per group per step: the step's wall time on
+                // this request's timeline row, tagged with the batch it
+                // shared and how many of its candidates decoded.
+                let dur = (dt * 1e3) as u64;
+                tr.span(
+                    "decode_step",
+                    self.worker_idx,
+                    id,
+                    tr.now_us().saturating_sub(dur),
+                    dur,
+                    &[
+                        ("batch", batch_n as f64),
+                        ("candidates", (bi - group_start) as f64),
+                    ],
+                );
             }
         }
         // Retire finished candidates and groups, return the rest.
@@ -1078,6 +1282,7 @@ impl Engine {
                 let SlotState::Decoding(cands) = state else { unreachable!() };
                 self.release_holdings(prompt_pool_id, &shared_forks)?;
                 self.stats.completed += 1;
+                self.note_finish(tracked.req.id, false);
                 done += 1;
                 let n = tracked.req.sampling.num_return();
                 let mut finalists = rank_candidates(&cands);
@@ -1131,15 +1336,27 @@ impl Engine {
     pub fn step(&mut self) -> crate::Result<Vec<EngineEvent>> {
         self.stats.engine_steps += 1;
         let mut out = Vec::new();
+        // Phase timing only with telemetry attached — the disabled path
+        // takes no clock reads.
+        let timed = self.telemetry.is_some();
+        let mut t0 = timed.then(Instant::now);
         // Phase 1: admit while slots and KV blocks allow.
         while self.try_admit(&mut out)? {}
+        if let (Some(t), Some(start)) = (&self.telemetry, t0) {
+            t.step_admit_us.record_us(start.elapsed().as_micros() as u64);
+        }
+        t0 = timed.then(Instant::now);
         // Phase 2: one chunk per prefilling group — prefill and decode
         // interleave instead of prefill running whole prompts to
         // completion first.
         for idx in 0..self.active.len() {
             self.advance_prefill(idx, &mut out)?;
         }
+        if let (Some(t), Some(start)) = (&self.telemetry, t0) {
+            t.step_prefill_us.record_us(start.elapsed().as_micros() as u64);
+        }
         self.sample_kv_stats();
+        t0 = timed.then(Instant::now);
         // Phase 3: a slice of decode steps.
         for _ in 0..self.cfg.decode_slice {
             let done = self.decode_step(&mut out)?;
@@ -1156,6 +1373,9 @@ impl Engine {
             if done > 0 && !self.queue.is_empty() {
                 break;
             }
+        }
+        if let (Some(t), Some(start)) = (&self.telemetry, t0) {
+            t.step_decode_us.record_us(start.elapsed().as_micros() as u64);
         }
         self.sample_kv_stats();
         Ok(out)
@@ -1197,17 +1417,30 @@ enum Msg {
     Shutdown,
 }
 
+/// Gauges a worker thread publishes after every scheduler step; the
+/// handle (and through it the router / metrics surface) reads them
+/// lock-free. One `Arc` instead of one per counter.
+#[derive(Debug, Default)]
+struct WorkerShared {
+    load: std::sync::atomic::AtomicUsize,
+    prefix_hit_tokens: std::sync::atomic::AtomicU64,
+    kv_bytes_in_use: std::sync::atomic::AtomicU64,
+    kv_bytes_capacity: std::sync::atomic::AtomicU64,
+    decoded_bytes_live: std::sync::atomic::AtomicU64,
+    kv_high_pages: std::sync::atomic::AtomicU64,
+    kv_low_pages: std::sync::atomic::AtomicU64,
+    decoded_cache_hits: std::sync::atomic::AtomicU64,
+    decoded_cache_misses: std::sync::atomic::AtomicU64,
+    kv_cache_evictions: std::sync::atomic::AtomicU64,
+}
+
 /// A worker thread owning an [`Engine`]; requests and cancels in,
 /// [`EngineEvent`]s out.
 pub struct EngineHandle {
     tx: mpsc::Sender<Msg>,
     pub rx: std::sync::Mutex<mpsc::Receiver<EngineEvent>>,
     join: Option<std::thread::JoinHandle<()>>,
-    load: std::sync::Arc<std::sync::atomic::AtomicUsize>,
-    prefix_hit_tokens: std::sync::Arc<std::sync::atomic::AtomicU64>,
-    kv_bytes_in_use: std::sync::Arc<std::sync::atomic::AtomicU64>,
-    decoded_cache_hits: std::sync::Arc<std::sync::atomic::AtomicU64>,
-    decoded_cache_misses: std::sync::Arc<std::sync::atomic::AtomicU64>,
+    shared: Arc<WorkerShared>,
     kv_format: &'static str,
     kv_policy: String,
 }
@@ -1219,20 +1452,40 @@ impl EngineHandle {
     where
         F: FnOnce() -> crate::Result<Box<dyn ModelBackend>> + Send + 'static,
     {
+        Self::spawn_inner(make_backend, cfg, eos_token, None)
+    }
+
+    /// [`Self::spawn`] with the shared telemetry registry attached:
+    /// histograms and counters aggregate across workers in `telemetry`,
+    /// `worker` labels this engine's trace rows.
+    pub fn spawn_with_telemetry<F>(
+        make_backend: F,
+        cfg: EngineConfig,
+        eos_token: i32,
+        telemetry: Arc<Telemetry>,
+        worker: usize,
+    ) -> EngineHandle
+    where
+        F: FnOnce() -> crate::Result<Box<dyn ModelBackend>> + Send + 'static,
+    {
+        Self::spawn_inner(make_backend, cfg, eos_token, Some((telemetry, worker)))
+    }
+
+    fn spawn_inner<F>(
+        make_backend: F,
+        cfg: EngineConfig,
+        eos_token: i32,
+        telemetry: Option<(Arc<Telemetry>, usize)>,
+    ) -> EngineHandle
+    where
+        F: FnOnce() -> crate::Result<Box<dyn ModelBackend>> + Send + 'static,
+    {
         let kv_format = cfg.kv_format.name();
         let kv_policy = KvPolicy::format_layers(&cfg.kv_precision_policies);
         let (tx, rx_msg) = mpsc::channel::<Msg>();
         let (tx_ev, rx) = mpsc::channel::<EngineEvent>();
-        let load = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
-        let load2 = load.clone();
-        let prefix_hit_tokens = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
-        let pht2 = prefix_hit_tokens.clone();
-        let kv_bytes_in_use = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
-        let kvb2 = kv_bytes_in_use.clone();
-        let decoded_cache_hits = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
-        let dch2 = decoded_cache_hits.clone();
-        let decoded_cache_misses = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
-        let dcm2 = decoded_cache_misses.clone();
+        let shared = Arc::new(WorkerShared::default());
+        let shared2 = shared.clone();
         let join = std::thread::spawn(move || {
             let backend = match make_backend() {
                 Ok(b) => b,
@@ -1242,6 +1495,9 @@ impl EngineHandle {
                 }
             };
             let mut engine = Engine::new(backend, cfg, eos_token);
+            if let Some((t, worker)) = telemetry {
+                engine.set_telemetry(t, worker);
+            }
             // Apply one control message; true means shut down.
             fn apply(engine: &mut Engine, tx_ev: &mpsc::Sender<EngineEvent>, msg: Msg) -> bool {
                 match msg {
@@ -1310,34 +1566,30 @@ impl EngineHandle {
                         break;
                     }
                 }
-                load2.store(engine.load(), std::sync::atomic::Ordering::Relaxed);
-                pht2.store(
-                    engine.stats.prefix_hit_tokens,
-                    std::sync::atomic::Ordering::Relaxed,
-                );
-                kvb2.store(
-                    engine.kv_bytes_in_use() as u64,
-                    std::sync::atomic::Ordering::Relaxed,
-                );
-                dch2.store(
-                    engine.stats.kv_pages.cache_hits,
-                    std::sync::atomic::Ordering::Relaxed,
-                );
-                dcm2.store(
-                    engine.stats.kv_pages.cache_misses,
-                    std::sync::atomic::Ordering::Relaxed,
-                );
+                use std::sync::atomic::Ordering::Relaxed;
+                let s = &shared2;
+                s.load.store(engine.load(), Relaxed);
+                s.prefix_hit_tokens
+                    .store(engine.stats.prefix_hit_tokens, Relaxed);
+                s.kv_bytes_in_use
+                    .store(engine.kv_bytes_in_use() as u64, Relaxed);
+                s.kv_bytes_capacity
+                    .store(engine.kv_bytes_capacity() as u64, Relaxed);
+                s.decoded_bytes_live
+                    .store(engine.decoded_bytes_live() as u64, Relaxed);
+                let pages = engine.stats.kv_pages;
+                s.kv_high_pages.store(pages.high_pages, Relaxed);
+                s.kv_low_pages.store(pages.low_pages, Relaxed);
+                s.decoded_cache_hits.store(pages.cache_hits, Relaxed);
+                s.decoded_cache_misses.store(pages.cache_misses, Relaxed);
+                s.kv_cache_evictions.store(pages.cache_evictions, Relaxed);
             }
         });
         EngineHandle {
             tx,
             rx: std::sync::Mutex::new(rx),
             join: Some(join),
-            load,
-            prefix_hit_tokens,
-            kv_bytes_in_use,
-            decoded_cache_hits,
-            decoded_cache_misses,
+            shared,
             kv_format,
             kv_policy,
         }
@@ -1368,7 +1620,7 @@ impl EngineHandle {
     }
 
     pub fn load(&self) -> usize {
-        self.load.load(std::sync::atomic::Ordering::Relaxed)
+        self.shared.load.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// KV-cache storage format this worker was configured with.
@@ -1384,28 +1636,63 @@ impl EngineHandle {
 
     /// Prompt tokens this worker served from its prefix cache so far.
     pub fn prefix_hit_tokens(&self) -> u64 {
-        self.prefix_hit_tokens
+        self.shared
+            .prefix_hit_tokens
             .load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// KV pool bytes currently referenced by this worker (sampled after
     /// each scheduler step).
     pub fn kv_bytes_in_use(&self) -> u64 {
-        self.kv_bytes_in_use
+        self.shared
+            .kv_bytes_in_use
+            .load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// KV pool byte budget of this worker (constant after spawn; 0 until
+    /// the first step publishes).
+    pub fn kv_bytes_capacity(&self) -> u64 {
+        self.shared
+            .kv_bytes_capacity
+            .load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Live decoded-page-cache bytes charged against this worker's byte
+    /// budget (sampled after each scheduler step).
+    pub fn decoded_bytes_live(&self) -> u64 {
+        self.shared
+            .decoded_bytes_live
             .load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Cumulative decoded-page cache hits on this worker (page decodes
     /// served without re-dequantizing).
     pub fn decoded_cache_hits(&self) -> u64 {
-        self.decoded_cache_hits
+        self.shared
+            .decoded_cache_hits
             .load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Cumulative decoded-page cache misses on this worker.
     pub fn decoded_cache_misses(&self) -> u64 {
-        self.decoded_cache_misses
+        self.shared
+            .decoded_cache_misses
             .load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Full per-precision page-decode counter set of this worker, as
+    /// published after its last scheduler step. The single source the
+    /// server's stats/metrics surfaces derive hit rates from.
+    pub fn kv_page_stats(&self) -> crate::metrics::KvPageStats {
+        use std::sync::atomic::Ordering::Relaxed;
+        let s = &self.shared;
+        crate::metrics::KvPageStats {
+            high_pages: s.kv_high_pages.load(Relaxed),
+            low_pages: s.kv_low_pages.load(Relaxed),
+            cache_hits: s.decoded_cache_hits.load(Relaxed),
+            cache_misses: s.decoded_cache_misses.load(Relaxed),
+            cache_evictions: s.kv_cache_evictions.load(Relaxed),
+        }
     }
 
     pub fn shutdown(mut self) {
@@ -1967,6 +2254,119 @@ mod tests {
         assert!(e.submit(r).is_none());
         let resp = e.run_until_idle().unwrap().remove(0);
         assert_eq!(resp.candidates.len(), 1, "n = 1 returns one finalist");
+    }
+
+    #[test]
+    fn rejected_cause_split_blocks_vs_bytes() {
+        // Slot-derived pool (kv_budget_bytes = 0): an oversized group
+        // over-asks the *block* capacity.
+        let mut e = engine();
+        let mut r = req(1, 64, 8);
+        r.sampling.n = 8; // 8 f32 candidates: ~40 blocks vs a 24-block pool
+        let resp = e.submit(r).expect("should reject");
+        assert_eq!(resp.finish, FinishReason::Rejected);
+        assert!(resp.error.unwrap().contains("blocks"));
+        assert_eq!(e.stats.rejected, 1);
+        assert_eq!(e.stats.rejected_blocks, 1);
+        assert_eq!(e.stats.rejected_bytes, 0);
+
+        // Pinned byte budget: the same group over-asks kv_budget_bytes.
+        let cfg = EngineConfig {
+            max_new_tokens: 8,
+            kv_budget_bytes: 64 << 10,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        let mut r = req(2, 64, 8);
+        r.sampling.n = 8;
+        let resp = e.submit(r).expect("should reject");
+        assert_eq!(resp.finish, FinishReason::Rejected);
+        assert!(resp.error.unwrap().contains("kv_budget_bytes"));
+        assert_eq!(e.stats.rejected, 1);
+        assert_eq!(e.stats.rejected_blocks, 0);
+        assert_eq!(e.stats.rejected_bytes, 1);
+
+        // Contract-violation rejects stay in the "other" bucket: the
+        // all-causes total keeps counting everything.
+        let mut r = req(3, 8, 4);
+        r.sampling.n = 4;
+        r.sampling.best_of = 2;
+        e.submit(r).expect("should reject");
+        assert_eq!(e.stats.rejected, 2);
+        assert_eq!(e.stats.rejected_blocks + e.stats.rejected_bytes, 1);
+    }
+
+    #[test]
+    fn telemetry_records_request_lifecycle() {
+        use crate::telemetry::Telemetry;
+        use std::sync::Arc;
+
+        let t = Arc::new(Telemetry::new());
+        let mut e = engine();
+        e.set_telemetry(t.clone(), 0);
+        assert!(e.submit(req(1, 8, 4)).is_none());
+        let resps = e.run_until_idle().unwrap();
+        assert_eq!(resps.len(), 1);
+
+        assert_eq!(t.requests_submitted.get(), 1);
+        assert_eq!(t.requests_admitted.get(), 1);
+        assert_eq!(t.requests_completed.get(), 1);
+        assert_eq!(t.requests_cancelled.get(), 0);
+        assert_eq!(t.ttft_us.count(), 1, "one TTFT sample per group");
+        assert_eq!(t.queue_us.count(), 1);
+        assert!(t.decode_step_us.count() > 0);
+        assert_eq!(t.decode_tokens.get(), resps[0].output.len() as u64);
+        assert_eq!(t.inter_token_us.count(), t.decode_tokens.get());
+        assert_eq!(t.prefill_tokens.get(), 8);
+        assert!(t.prefill_chunk_us.count() >= 1);
+        // Step-phase histograms tick once per engine step.
+        assert_eq!(t.step_admit_us.count(), e.stats.engine_steps);
+        assert_eq!(t.step_decode_us.count(), e.stats.engine_steps);
+        // The rolling windows saw the decode.
+        let now = t.now_sec();
+        assert!(t.tokens_10s.rate_per_sec(now) > 0.0);
+
+        // A rejection shows up in the telemetry counters too.
+        e.submit(req(2, 200, 4)).expect("oversized prompt rejects");
+        assert_eq!(t.rejected_other.get(), 1);
+
+        // Cancel path: queued cancel marks the request cancelled.
+        assert!(e.submit(req(3, 8, 60)).is_none());
+        e.cancel(3).unwrap();
+        e.run_until_idle().unwrap();
+        assert_eq!(t.requests_cancelled.get(), 1);
+    }
+
+    #[test]
+    fn trace_sink_captures_request_timeline() {
+        use crate::telemetry::{Telemetry, TraceSink};
+        use std::sync::Arc;
+
+        let dir = std::env::temp_dir().join("dma_engine_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("trace_{}.jsonl", std::process::id()));
+        let sink = TraceSink::create(&path).unwrap();
+        let t = Arc::new(Telemetry::new().with_trace(sink));
+        let mut e = engine();
+        e.set_telemetry(t, 3);
+        assert!(e.submit(req(9, 8, 4)).is_none());
+        e.run_until_idle().unwrap();
+        // Spans are buffered until the next instant event or sink drop;
+        // dropping the engine releases the last `Arc<Telemetry>`.
+        drop(e);
+
+        let body = std::fs::read_to_string(&path).unwrap();
+        let mut names = std::collections::BTreeSet::new();
+        for line in body.lines() {
+            let j = crate::util::json::Json::parse(line).unwrap();
+            assert_eq!(j.get("pid").unwrap().as_i64(), Some(3), "worker index");
+            assert_eq!(j.get("tid").unwrap().as_i64(), Some(9), "request id");
+            names.insert(j.get("name").unwrap().as_str().unwrap().to_string());
+        }
+        for expected in ["queued", "prefill_chunk", "decode_step", "finish"] {
+            assert!(names.contains(expected), "missing {expected:?} in {names:?}");
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -14,9 +14,10 @@
 
 use super::engine::EngineHandle;
 use super::request::{EngineEvent, Request, Response};
+use crate::telemetry::{Telemetry, WorkerGauges};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
@@ -64,6 +65,8 @@ pub struct Router {
     drain_from: AtomicUsize,
     /// In-flight request id -> owning worker (for cancel routing).
     owners: Mutex<HashMap<u64, usize>>,
+    /// Serving telemetry shared with the workers (`None` = disabled).
+    telemetry: Option<Arc<Telemetry>>,
 }
 
 impl Router {
@@ -75,7 +78,27 @@ impl Router {
             next: AtomicUsize::new(0),
             drain_from: AtomicUsize::new(0),
             owners: Mutex::new(HashMap::new()),
+            telemetry: None,
         }
+    }
+
+    /// Like [`Router::new`], with the fleet-wide [`Telemetry`] attached
+    /// (the same instance the workers were spawned with via
+    /// [`EngineHandle::spawn_with_telemetry`]): the router records event
+    /// fan-in latency into it and serves it to the metrics endpoint.
+    pub fn with_telemetry(
+        workers: Vec<EngineHandle>,
+        policy: Policy,
+        telemetry: Arc<Telemetry>,
+    ) -> Router {
+        let mut r = Router::new(workers, policy);
+        r.telemetry = Some(telemetry);
+        r
+    }
+
+    /// The attached fleet telemetry, if any.
+    pub fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        self.telemetry.as_ref()
     }
 
     pub fn num_workers(&self) -> usize {
@@ -114,6 +137,30 @@ impl Router {
     /// Decoded-page cache misses across all workers.
     pub fn decoded_cache_misses(&self) -> u64 {
         self.workers.iter().map(EngineHandle::decoded_cache_misses).sum()
+    }
+
+    /// Per-worker queue-depth and KV-pressure gauges, sampled from each
+    /// worker's published atomics (index = worker index).
+    pub fn worker_gauges(&self) -> Vec<WorkerGauges> {
+        self.workers
+            .iter()
+            .map(|w| WorkerGauges {
+                queue_depth: w.load() as u64,
+                kv_bytes_in_use: w.kv_bytes_in_use(),
+                kv_bytes_capacity: w.kv_bytes_capacity(),
+                decoded_bytes_live: w.decoded_bytes_live(),
+            })
+            .collect()
+    }
+
+    /// Fleet-wide page-decode counters: the one engine-provided snapshot
+    /// consumers should read instead of reassembling per-field sums.
+    pub fn kv_page_stats(&self) -> crate::metrics::KvPageStats {
+        let mut total = crate::metrics::KvPageStats::default();
+        for w in &self.workers {
+            total.merge(w.kv_page_stats());
+        }
+        total
     }
 
     /// Pick a worker index without request context (prefix-affinity
@@ -194,6 +241,7 @@ impl Router {
     /// deep event backlog cannot starve the others, and rotating the
     /// starting worker between calls.
     pub fn poll_events(&self, n: usize) -> Vec<EngineEvent> {
+        let drain_start = self.telemetry.as_ref().map(|_| std::time::Instant::now());
         let w = self.workers.len();
         let start = self.drain_from.fetch_add(1, Ordering::Relaxed) % w;
         let mut out = Vec::new();
@@ -221,6 +269,13 @@ impl Router {
             }
             if !progressed {
                 break;
+            }
+        }
+        // Only productive drains are recorded — the poll loop spins on
+        // empty polls, which would swamp the histogram with zeros.
+        if let (Some(t), Some(start)) = (&self.telemetry, drain_start) {
+            if !out.is_empty() {
+                t.fanin_us.record_us(start.elapsed().as_micros() as u64);
             }
         }
         out

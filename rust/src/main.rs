@@ -26,7 +26,8 @@ fn usage() -> ! {
          [--prefill-chunk TOKENS] [--prefix-cache] \
          [--threads N] [--decoded-cache-mb MB] [--kv-budget-mb MB] \
          [--writer-queue LINES] [--slow-reader-ms MS] \
-         [--route round-robin|least-loaded|prefix-affinity]"
+         [--route round-robin|least-loaded|prefix-affinity] \
+         [--trace-out FILE] [--metrics-sample-n N]"
     );
     std::process::exit(2);
 }
@@ -95,6 +96,7 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         << 20;
     // 0 = derive the pool budget from the decode slots (the default).
     let kv_budget_bytes = args.usize_or("kv-budget-mb", 0) << 20;
+    let metrics_sample_n = args.usize_or("metrics-sample-n", 0);
     let cfg = EngineConfig {
         artifact_dir: artifacts.clone().into(),
         max_new_tokens: args.usize_or("max-new-tokens", 32),
@@ -105,6 +107,7 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         threads,
         decoded_cache_bytes,
         kv_budget_bytes,
+        metrics_sample_n,
         ..Default::default()
     };
     let policy = match args.get_or("route", "least-loaded").as_str() {
@@ -117,14 +120,28 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         },
         other => anyhow::bail!("unknown --route {other:?}"),
     };
+    // The serve path always runs with telemetry attached (idle cost is a
+    // handful of atomics); the trace sink and layer probe stay opt-in.
+    let mut telemetry = dma::telemetry::Telemetry::new();
+    if metrics_sample_n > 0 {
+        telemetry = telemetry.with_probe(metrics_sample_n as u64);
+    }
+    let trace_out = args.get("trace-out").map(str::to_string);
+    if let Some(path) = &trace_out {
+        let sink = dma::telemetry::TraceSink::create(std::path::Path::new(path))
+            .map_err(|e| anyhow::anyhow!("creating --trace-out {path}: {e}"))?;
+        telemetry = telemetry.with_trace(sink);
+    }
+    let telemetry = Arc::new(telemetry);
     let handles: Vec<EngineHandle> = (0..workers)
-        .map(|_| {
+        .map(|i| {
             let a = artifacts.clone();
             let c = cfg.clone();
-            EngineHandle::spawn(move || make_backend(&a, host), c, eos)
+            let t = telemetry.clone();
+            EngineHandle::spawn_with_telemetry(move || make_backend(&a, host), c, eos, t, i)
         })
         .collect();
-    let router = Arc::new(Router::new(handles, policy));
+    let router = Arc::new(Router::with_telemetry(handles, policy, telemetry));
     let stop = Arc::new(AtomicBool::new(false));
     let defaults = dma::server::ServerOpts::default();
     let opts = dma::server::ServerOpts {
@@ -141,7 +158,8 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
     println!(
         "dma: serving on {addr} ({} worker(s), route {}, kv cache {}, policy {}, \
          prefill chunk {}, prefix cache {}, threads {}, decoded cache {} MiB, \
-         writer queue {} lines / {} ms slow-reader timeout)",
+         writer queue {} lines / {} ms slow-reader timeout, trace {}, \
+         layer probe {})",
         workers,
         policy.name(),
         cfg.kv_format.name(),
@@ -151,7 +169,13 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         cfg.threads,
         cfg.decoded_cache_bytes >> 20,
         opts.writer_queue_lines,
-        opts.slow_reader_timeout.as_millis()
+        opts.slow_reader_timeout.as_millis(),
+        trace_out.as_deref().unwrap_or("off"),
+        if metrics_sample_n > 0 {
+            format!("every {metrics_sample_n} steps")
+        } else {
+            "off".to_string()
+        }
     );
     dma::server::serve_with(&addr, router, opts, stop, |a| println!("dma: bound {a}"))
 }

@@ -40,6 +40,9 @@ pub struct CpuModel {
     /// fan-out (1 = serial; outputs land in disjoint buffers, so the
     /// results are identical at any thread count).
     pub threads: usize,
+    /// Sampled per-layer timing probe (`--metrics-sample-n`). `None`
+    /// (the default) keeps the decode hot path free of clock reads.
+    pub probe: Option<std::sync::Arc<crate::telemetry::LayerProbe>>,
 }
 
 /// Destination cache of one prefill chunk: the exact f32 working state or
@@ -151,7 +154,7 @@ impl CpuModel {
             cfg.vocab,
             cfg.d_model
         );
-        Ok(CpuModel { cfg, weights, threads: 1 })
+        Ok(CpuModel { cfg, weights, threads: 1, probe: None })
     }
 
     /// Builder-style thread-count override (see [`Self::threads`]).
@@ -559,6 +562,10 @@ impl CpuModel {
         let n_rep = cfg.n_heads / cfg.n_kv_heads;
         let dh = cfg.d_head;
         let threads = threads.max(1).min(cfg.n_kv_heads);
+        // One sampling decision per decode step: either every layer of
+        // this step is timed or none is, so the probe's histograms stay
+        // per-layer comparable.
+        let probe = self.probe.as_ref().filter(|p| p.should_sample());
 
         for li in 0..cfg.n_layers {
             let lw = self.layer(li)?;
@@ -572,6 +579,7 @@ impl CpuModel {
             // Persist the new token's post-RoPE K row and V row for every
             // kv head before attention reads the caches (the f32 path
             // writes cache rows; the paged stores quantize on append).
+            let append_start = probe.map(|_| std::time::Instant::now());
             let mut vrow = vec![0f32; dh];
             for hkv in 0..cfg.n_kv_heads {
                 let mut kh = Tensor::zeros(vec![1, dh]);
@@ -590,9 +598,13 @@ impl CpuModel {
                     }
                 }
             }
+            if let (Some(p), Some(start)) = (probe, append_start) {
+                p.kv_append_us.record_us(start.elapsed().as_micros() as u64);
+            }
 
             // Attention: one work item per kv head, each owning the
             // group's disjoint [n_rep * d_head] slice of the output row.
+            let attn_start = probe.map(|_| std::time::Instant::now());
             let mut o_all = Tensor::zeros(vec![1, cfg.n_heads * dh]);
             match target {
                 DecodeKv::F32(kv) => {
@@ -632,6 +644,9 @@ impl CpuModel {
                         stats.merge(w.stats);
                     }
                 }
+            }
+            if let (Some(p), Some(start)) = (probe, attn_start) {
+                p.attn_us.record_us(start.elapsed().as_micros() as u64);
             }
             let proj = Self::dense(&o_all, lw.wo);
             for (xd, pd) in x.iter_mut().zip(&proj.data) {

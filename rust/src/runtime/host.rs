@@ -342,6 +342,10 @@ impl ModelBackend for HostBackend {
         self.decoded_cache_bytes = decoded_cache_bytes;
     }
 
+    fn set_probe(&mut self, probe: Option<std::sync::Arc<crate::telemetry::LayerProbe>>) {
+        self.model.probe = probe;
+    }
+
     fn name(&self) -> &'static str {
         "host-cpu"
     }

@@ -161,6 +161,12 @@ pub trait ModelBackend {
     /// those mechanisms (PJRT executables) ignore this.
     fn set_perf(&mut self, _threads: usize, _decoded_cache_bytes: usize) {}
 
+    /// Attach the sampled per-layer timing probe
+    /// ([`crate::telemetry::LayerProbe`], `--metrics-sample-n`), or
+    /// detach with `None`. Backends without layer-level instrumentation
+    /// ignore it.
+    fn set_probe(&mut self, _probe: Option<std::sync::Arc<crate::telemetry::LayerProbe>>) {}
+
     /// Human-readable backend name for logs/metrics.
     fn name(&self) -> &'static str;
 }

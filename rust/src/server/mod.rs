@@ -1,6 +1,6 @@
 //! TCP JSON-lines serving front end (std::net — tokio is not vendored).
 //!
-//! Protocol v2.1: one JSON object per line.
+//! Protocol v2.2: one JSON object per line.
 //!
 //! Request fields (`tokens` required, everything else optional):
 //!
@@ -70,6 +70,25 @@
 //!     "kv_bytes_in_use": 0, "decoded_page_hits": 0,
 //!     "decoded_page_misses": 0, "decoded_page_hit_rate": 0}
 //! ```
+//!
+//! New in v2.2: when the server was started with telemetry attached
+//! (the `serve` subcommand always does), the `stats` reply additionally
+//! carries latency summaries and rolling-window gauges — nested
+//! `{"count", "p50_ms", "p90_ms", "p99_ms", "mean_ms"}` objects under
+//! `ttft`, `inter_token`, `decode_step`, `queue`, plus flat
+//! `tokens_per_second_10s`, `ttft_ms_10s`, `requests_completed`, and
+//! `requests_cancelled` — and a `metrics` command exposes the full
+//! Prometheus text exposition (every histogram, counter, and per-worker
+//! gauge; see the crate's README "Observability" section):
+//!
+//! ```text
+//! -> {"cmd": "metrics"}
+//! <- {"metrics": "# HELP dma_ttft_seconds ...\n# TYPE ...\n..."}
+//! ```
+//!
+//! The text lives in one JSON string field (`\n`-escaped) so the reply
+//! stays a single line like every other protocol message; a scraper
+//! unescapes the field to recover the standard exposition format.
 //!
 //! **Back-pressure / slow readers.** Each connection's outbound lines
 //! flow through a *bounded* writer channel
@@ -538,15 +557,11 @@ fn handle_conn(
         if let Ok(j) = Json::parse(&line) {
             match j.get("cmd").and_then(Json::as_str) {
                 Some("stats") => {
-                    let (hits, misses) =
-                        (router.decoded_cache_hits(), router.decoded_cache_misses());
-                    let hit_rate = crate::metrics::KvPageStats {
-                        cache_hits: hits,
-                        cache_misses: misses,
-                        ..Default::default()
-                    }
-                    .cache_hit_rate();
-                    reply(Json::obj(vec![
+                    // One engine-provided snapshot — the hit rate comes
+                    // from the same counters the workers merged, not a
+                    // hand-reassembled struct.
+                    let pages = router.kv_page_stats();
+                    let mut fields = vec![
                         ("workers", Json::num(router.num_workers() as f64)),
                         ("policy", Json::str(router.policy_name())),
                         ("kv_format", Json::str(router.kv_format())),
@@ -559,10 +574,62 @@ fn handle_conn(
                             "kv_bytes_in_use",
                             Json::num(router.kv_bytes_in_use() as f64),
                         ),
-                        ("decoded_page_hits", Json::num(hits as f64)),
-                        ("decoded_page_misses", Json::num(misses as f64)),
-                        ("decoded_page_hit_rate", Json::num(hit_rate)),
-                    ]));
+                        ("decoded_page_hits", Json::num(pages.cache_hits as f64)),
+                        ("decoded_page_misses", Json::num(pages.cache_misses as f64)),
+                        ("decoded_page_hit_rate", Json::num(pages.cache_hit_rate())),
+                    ];
+                    // Stats v2: latency summaries + rolling gauges when
+                    // the fleet runs with telemetry attached.
+                    if let Some(t) = router.telemetry() {
+                        let hist = |h: &crate::telemetry::Histogram| {
+                            let s = h.snapshot();
+                            Json::obj(vec![
+                                ("count", Json::num(s.count as f64)),
+                                ("p50_ms", Json::num(s.p50_us() as f64 / 1e3)),
+                                ("p90_ms", Json::num(s.p90_us() as f64 / 1e3)),
+                                ("p99_ms", Json::num(s.p99_us() as f64 / 1e3)),
+                                ("mean_ms", Json::num(s.mean_us() / 1e3)),
+                            ])
+                        };
+                        let now = t.now_sec();
+                        fields.push(("ttft", hist(&t.ttft_us)));
+                        fields.push(("inter_token", hist(&t.inter_token_us)));
+                        fields.push(("decode_step", hist(&t.decode_step_us)));
+                        fields.push(("queue", hist(&t.queue_us)));
+                        fields.push((
+                            "tokens_per_second_10s",
+                            Json::num(t.tokens_10s.rate_per_sec(now)),
+                        ));
+                        fields.push(("ttft_ms_10s", Json::num(t.ttft_10s.mean(now) / 1e3)));
+                        fields.push((
+                            "requests_completed",
+                            Json::num(t.requests_completed.get() as f64),
+                        ));
+                        fields.push((
+                            "requests_cancelled",
+                            Json::num(t.requests_cancelled.get() as f64),
+                        ));
+                    }
+                    reply(Json::obj(fields));
+                    continue;
+                }
+                Some("metrics") => {
+                    match router.telemetry() {
+                        Some(t) => {
+                            let text = crate::telemetry::render_prometheus(
+                                t,
+                                &router.worker_gauges(),
+                                &router.kv_page_stats(),
+                            );
+                            reply(Json::obj(vec![("metrics", Json::str(text))]));
+                        }
+                        None => {
+                            reply(Json::obj(vec![(
+                                "error",
+                                Json::str("metrics: telemetry not attached"),
+                            )]));
+                        }
+                    }
                     continue;
                 }
                 Some("cancel") => {
@@ -825,17 +892,20 @@ mod tests {
         Arc<AtomicBool>,
         std::thread::JoinHandle<()>,
     ) {
+        let telemetry = Arc::new(crate::telemetry::Telemetry::new());
         let handles: Vec<EngineHandle> = (0..workers)
-            .map(|_| {
+            .map(|i| {
                 let c = cfg.clone();
-                EngineHandle::spawn(
+                EngineHandle::spawn_with_telemetry(
                     || Ok(Box::new(HostBackend::for_tests()) as Box<dyn ModelBackend>),
                     c,
                     5,
+                    telemetry.clone(),
+                    i,
                 )
             })
             .collect();
-        let router = Arc::new(Router::new(handles, policy));
+        let router = Arc::new(Router::with_telemetry(handles, policy, telemetry));
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = std::sync::mpsc::channel();
         let stop2 = stop.clone();
@@ -1344,6 +1414,100 @@ mod tests {
         assert!(hits > 0, "no decoded-page hits after a 16-token decode");
         assert!(misses > 0, "cold pages must miss first");
         assert!(rate > 0.0 && rate <= 1.0, "rate {rate}");
+
+        writer.shutdown(std::net::Shutdown::Write).unwrap();
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn metrics_cmd_reflects_completed_request() {
+        // A completed streamed request must be visible in both surfaces:
+        // the Prometheus text (nonzero TTFT count, worker gauges) and
+        // the stats v2 summaries, and the decoded-page counters of the
+        // two surfaces must agree (one engine-provided snapshot).
+        let (addr, stop, srv) = spawn_server(
+            EngineConfig {
+                max_new_tokens: 8,
+                kv_format: crate::kvquant::KvFormat::Dual,
+                kv_precision_policies: vec![crate::kvquant::KvPolicy { sink: 16, diag: 16 }],
+                ..Default::default()
+            },
+            1,
+            Policy::RoundRobin,
+        );
+
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        let read_json = |line: &mut String, reader: &mut BufReader<TcpStream>| {
+            line.clear();
+            reader.read_line(line).unwrap();
+            Json::parse(line.trim()).unwrap()
+        };
+
+        // Stream one request to completion (a 40-token prompt fills
+        // quantized pages so the decoded-page counters move).
+        let toks: Vec<String> =
+            (0..40).map(|i| (((i * 7) % 58) + 6).to_string()).collect();
+        writeln!(
+            writer,
+            r#"{{"id": 1, "tokens": [{}], "max_new_tokens": 8, "ignore_eos": true, "stream": true}}"#,
+            toks.join(",")
+        )
+        .unwrap();
+        let mut tokens = 0;
+        loop {
+            let j = read_json(&mut line, &mut reader);
+            match j.get("event").unwrap().as_str().unwrap() {
+                "token" => tokens += 1,
+                "finished" => break,
+                _ => {}
+            }
+        }
+        assert!(tokens > 0);
+
+        // The metrics reply is one JSON line whose "metrics" field holds
+        // the Prometheus exposition text.
+        writeln!(writer, r#"{{"cmd": "metrics"}}"#).unwrap();
+        let j = read_json(&mut line, &mut reader);
+        let text = j.get("metrics").unwrap().as_str().unwrap().to_string();
+        for family in [
+            "# TYPE dma_ttft_seconds histogram",
+            "# TYPE dma_inter_token_seconds histogram",
+            "# TYPE dma_decode_step_seconds histogram",
+            "# TYPE dma_requests_completed_total counter",
+            "# TYPE dma_worker_queue_depth gauge",
+            "# TYPE dma_worker_kv_pressure gauge",
+        ] {
+            assert!(text.contains(family), "missing {family:?} in:\n{text}");
+        }
+        assert!(text.contains("dma_ttft_seconds_count 1"), "{text}");
+        assert!(text.contains("dma_requests_completed_total 1"), "{text}");
+        let cache_hits = text
+            .lines()
+            .find_map(|l| l.strip_prefix("dma_decoded_page_hits_total "))
+            .expect("dma_decoded_page_hits_total sample")
+            .parse::<u64>()
+            .unwrap();
+
+        // Stats v2 agrees with the exposition.
+        writeln!(writer, r#"{{"cmd": "stats"}}"#).unwrap();
+        let s = read_json(&mut line, &mut reader);
+        assert_eq!(
+            s.get("decoded_page_hits").unwrap().as_i64().unwrap() as u64,
+            cache_hits,
+            "stats and metrics disagree on decoded-page hits"
+        );
+        let ttft = s.get("ttft").unwrap();
+        assert_eq!(ttft.get("count").unwrap().as_i64(), Some(1));
+        assert!(ttft.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(s.get("requests_completed").unwrap().as_i64(), Some(1));
+        assert!(
+            s.get("tokens_per_second_10s").unwrap().as_f64().unwrap() > 0.0,
+            "rolling throughput gauge empty right after a decode"
+        );
 
         writer.shutdown(std::net::Shutdown::Write).unwrap();
         stop.store(true, Ordering::Relaxed);

@@ -1,0 +1,1067 @@
+//! Serving telemetry: lock-free latency histograms, counters, rolling
+//! 10 s gauges, per-request trace timelines, and Prometheus text
+//! exposition.
+//!
+//! Everything on the record path is a handful of relaxed atomic ops —
+//! no locks, no allocation — so instrumented code can call it from the
+//! engine step loop and the per-layer decode fan-out without perturbing
+//! the latencies being measured. The engine holds an
+//! `Option<Arc<Telemetry>>`: `None` (the default, and what every bench
+//! and library caller gets) keeps the pre-telemetry hot path
+//! byte-for-byte, `Some` is what `dma serve` attaches so the server can
+//! answer `{"cmd":"metrics"}` (see `benches/table14_telemetry_overhead`
+//! for the overhead proof).
+//!
+//! Layout:
+//! * [`Histogram`] — fixed log2-bucket latency histogram (µs domain).
+//! * [`Counter`] — monotonic `u64`.
+//! * [`RollingWindow`] — per-second ring for "last 10 s" gauges.
+//! * [`Telemetry`] — the typed registry of everything above, plus the
+//!   optional [`TraceSink`] and the sampled [`LayerProbe`].
+//! * [`render_prometheus`] — text exposition (format version 0.0.4).
+//! * [`TraceSink`] — Chrome `trace_event` JSONL writer (`--trace-out`;
+//!   load the file with `chrome://tracing` or Perfetto).
+
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Number of log2 buckets. Bucket 0 holds exact zeros, bucket `i`
+/// (1 <= i < BUCKETS-1) holds values in `[2^(i-1), 2^i - 1]` µs, and the
+/// last bucket saturates (everything >= 2^(BUCKETS-2)). 40 buckets put
+/// the saturation point at 2^38 µs ≈ 76 hours — far above any latency
+/// this stack produces.
+pub const BUCKETS: usize = 40;
+
+/// Upper bound (inclusive, in µs) of bucket `i`. The saturating last
+/// bucket has no finite bound; [`render_prometheus`] emits it as `+Inf`.
+pub fn bucket_upper_us(i: usize) -> u64 {
+    (1u64 << i) - 1
+}
+
+/// Bucket index for a recorded value in µs.
+#[inline]
+fn bucket_idx(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Lock-free fixed-bucket log-scale histogram over µs values.
+///
+/// `record` is three relaxed `fetch_add`s — no allocation, no locks, no
+/// ordering constraints — so it is safe to call from any thread at any
+/// rate. Reads take an O(BUCKETS) [`snapshot`](Self::snapshot); a
+/// snapshot is not atomic across buckets, which only matters below
+/// single-counter precision.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one value in µs.
+    #[inline]
+    pub fn record_us(&self, v: u64) {
+        self.buckets[bucket_idx(v)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum_us.fetch_add(v, Relaxed);
+    }
+
+    /// Record a duration given in milliseconds (the engine's native
+    /// bookkeeping unit).
+    #[inline]
+    pub fn record_ms(&self, ms: f64) {
+        self.record_us((ms * 1e3).max(0.0) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Relaxed)),
+            count: self.count.load(Relaxed),
+            sum_us: self.sum_us.load(Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`] with percentile readout.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub count: u64,
+    pub sum_us: u64,
+}
+
+impl HistogramSnapshot {
+    /// Percentile upper bound in µs: the inclusive upper edge of the
+    /// bucket containing the `q`-quantile sample (`q` in [0, 1]). The
+    /// true sample value lies within a factor of 2 below the returned
+    /// bound (exact for 0). Returns 0 for an empty histogram.
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                return bucket_upper_us(i);
+            }
+        }
+        bucket_upper_us(BUCKETS - 1)
+    }
+
+    pub fn p50_us(&self) -> u64 {
+        self.percentile_us(0.50)
+    }
+
+    pub fn p90_us(&self) -> u64 {
+        self.percentile_us(0.90)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.percentile_us(0.99)
+    }
+
+    /// Mean in µs (0 for an empty histogram).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+}
+
+/// Monotonic counter (relaxed atomic add).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Ring slots of the rolling window. 16 > 10 so a full 10 s read window
+/// of per-second slots is always available while the current second is
+/// still being written.
+const WINDOW_SLOTS: u64 = 16;
+
+/// Seconds summarised by the rolling gauges.
+const WINDOW_SECS: u64 = 10;
+
+/// Lock-free "last 10 seconds" accumulator: a ring of per-second slots
+/// tagged with their absolute second. Writers CAS-claim the slot for the
+/// current second (resetting a stale slot); readers sum the slots whose
+/// tags fall inside the window. Claim races can drop a stray sample —
+/// acceptable for a rolling gauge, never for the histograms (which is
+/// why those are separate).
+#[derive(Debug)]
+pub struct RollingWindow {
+    slots: [WindowSlot; WINDOW_SLOTS as usize],
+}
+
+#[derive(Debug, Default)]
+struct WindowSlot {
+    /// Absolute second this slot currently represents (+1, so that the
+    /// zero-initialised state can never alias second 0).
+    sec_tag: AtomicU64,
+    sum: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Default for RollingWindow {
+    fn default() -> RollingWindow {
+        RollingWindow { slots: std::array::from_fn(|_| WindowSlot::default()) }
+    }
+}
+
+impl RollingWindow {
+    /// Add `v` to the slot for absolute second `sec`.
+    pub fn add(&self, sec: u64, v: u64) {
+        let slot = &self.slots[(sec % WINDOW_SLOTS) as usize];
+        let tag = sec + 1;
+        let cur = slot.sec_tag.load(Relaxed);
+        if cur != tag {
+            if slot.sec_tag.compare_exchange(cur, tag, Relaxed, Relaxed).is_ok() {
+                slot.sum.store(0, Relaxed);
+                slot.n.store(0, Relaxed);
+            } else if slot.sec_tag.load(Relaxed) != tag {
+                return; // lost the race to a different second; drop
+            }
+        }
+        slot.sum.fetch_add(v, Relaxed);
+        slot.n.fetch_add(1, Relaxed);
+    }
+
+    /// (sum, n) over the last [`WINDOW_SECS`] seconds ending at `now_sec`.
+    pub fn totals(&self, now_sec: u64) -> (u64, u64) {
+        let lo = now_sec.saturating_sub(WINDOW_SECS - 1) + 1;
+        let (mut sum, mut n) = (0u64, 0u64);
+        for slot in &self.slots {
+            let tag = slot.sec_tag.load(Relaxed);
+            if tag >= lo && tag <= now_sec + 1 {
+                sum += slot.sum.load(Relaxed);
+                n += slot.n.load(Relaxed);
+            }
+        }
+        (sum, n)
+    }
+
+    /// Sum over the window divided by the window length in seconds.
+    pub fn rate_per_sec(&self, now_sec: u64) -> f64 {
+        self.totals(now_sec).0 as f64 / WINDOW_SECS as f64
+    }
+
+    /// Mean of the recorded values over the window (0 when empty).
+    pub fn mean(&self, now_sec: u64) -> f64 {
+        let (sum, n) = self.totals(now_sec);
+        if n == 0 {
+            0.0
+        } else {
+            sum as f64 / n as f64
+        }
+    }
+}
+
+/// Sampled per-layer timing probe for the model's decode hot path
+/// (`--metrics-sample-n`). One decode step in `sample_every` is timed:
+/// per-layer attention (dequant-inclusive on the quantized-cache path)
+/// and per-layer KV quantize-on-append. `sample_every == 0` disables the
+/// probe; the model then pays one relaxed load per decode step and
+/// nothing per layer.
+#[derive(Debug)]
+pub struct LayerProbe {
+    sample_every: u64,
+    ctr: AtomicU64,
+    pub attn_us: Histogram,
+    pub kv_append_us: Histogram,
+}
+
+impl LayerProbe {
+    pub fn new(sample_every: u64) -> LayerProbe {
+        LayerProbe {
+            sample_every,
+            ctr: AtomicU64::new(0),
+            attn_us: Histogram::new(),
+            kv_append_us: Histogram::new(),
+        }
+    }
+
+    pub fn disabled() -> LayerProbe {
+        LayerProbe::new(0)
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every
+    }
+
+    /// Decide once per decode step whether this step's layers are timed.
+    #[inline]
+    pub fn should_sample(&self) -> bool {
+        self.sample_every != 0 && self.ctr.fetch_add(1, Relaxed) % self.sample_every == 0
+    }
+}
+
+/// Chrome `trace_event` JSONL sink (`--trace-out`). Each line is one
+/// complete-span (`"ph":"X"`) or instant (`"ph":"i"`) event; wrap the
+/// lines in `[...]` (or load the JSONL directly into Perfetto) to view.
+/// `pid` is the worker index, `tid` the request id, timestamps are µs
+/// since sink creation. Writes take a mutex around a buffered writer;
+/// spans stay buffered and reach disk on the next instant event
+/// (request finish/cancel) or when the sink drops. Tracing is
+/// explicitly opt-in and not on the zero-overhead path.
+#[derive(Debug)]
+pub struct TraceSink {
+    epoch: Instant,
+    w: Mutex<BufWriter<File>>,
+}
+
+impl TraceSink {
+    pub fn create(path: &Path) -> std::io::Result<TraceSink> {
+        Ok(TraceSink {
+            epoch: Instant::now(),
+            w: Mutex::new(BufWriter::new(File::create(path)?)),
+        })
+    }
+
+    /// Microseconds since sink creation (the trace timebase).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Emit a complete span: `[ts_us, ts_us + dur_us]` on row
+    /// (pid=worker, tid=request).
+    pub fn span(
+        &self,
+        name: &str,
+        worker: usize,
+        request: u64,
+        ts_us: u64,
+        dur_us: u64,
+        args: &[(&str, f64)],
+    ) {
+        self.write_event(name, "X", worker, request, ts_us, Some(dur_us), args);
+    }
+
+    /// Emit an instant event at `ts_us`.
+    pub fn instant(
+        &self,
+        name: &str,
+        worker: usize,
+        request: u64,
+        ts_us: u64,
+        args: &[(&str, f64)],
+    ) {
+        self.write_event(name, "i", worker, request, ts_us, None, args);
+    }
+
+    fn write_event(
+        &self,
+        name: &str,
+        ph: &str,
+        worker: usize,
+        request: u64,
+        ts_us: u64,
+        dur_us: Option<u64>,
+        args: &[(&str, f64)],
+    ) {
+        let mut line = format!(
+            "{{\"name\":\"{name}\",\"ph\":\"{ph}\",\"ts\":{ts_us},\"pid\":{worker},\"tid\":{request}"
+        );
+        if let Some(d) = dur_us {
+            line += &format!(",\"dur\":{d}");
+        }
+        if ph == "i" {
+            line += ",\"s\":\"t\"";
+        }
+        if !args.is_empty() {
+            line += ",\"args\":{";
+            for (i, (k, v)) in args.iter().enumerate() {
+                if i > 0 {
+                    line += ",";
+                }
+                if v.fract() == 0.0 && v.abs() < 1e15 {
+                    line += &format!("\"{k}\":{}", *v as i64);
+                } else {
+                    line += &format!("\"{k}\":{v}");
+                }
+            }
+            line += "}";
+        }
+        line += "}\n";
+        let mut w = self.w.lock().unwrap();
+        let _ = w.write_all(line.as_bytes());
+        // Spans stay buffered (one flush per span would syscall on every
+        // decode step); instants mark request-level milestones
+        // (finish/cancel), so flushing there bounds loss on an unclean
+        // exit to the in-flight requests' spans.
+        if ph == "i" {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// The serving stack's telemetry registry: typed histograms, counters
+/// and rolling gauges, plus the optional trace sink and the sampled
+/// layer probe. One instance is shared (`Arc`) across every engine
+/// worker, so histograms and counters aggregate fleet-wide; per-worker
+/// gauges (queue depth, KV pressure) stay on each `EngineHandle`'s
+/// published atomics and are joined in at render time.
+#[derive(Debug)]
+pub struct Telemetry {
+    epoch: Instant,
+    // -- latency histograms (µs domain) --------------------------------
+    /// Queue-entry to admission.
+    pub queue_us: Histogram,
+    /// Queue-entry to first generated token (per request group).
+    pub ttft_us: Histogram,
+    /// Decode-step wall time amortised per generated token.
+    pub inter_token_us: Histogram,
+    /// One batched decode step.
+    pub decode_step_us: Histogram,
+    /// One prefill chunk.
+    pub prefill_chunk_us: Histogram,
+    /// Engine step phase: admission sweep.
+    pub step_admit_us: Histogram,
+    /// Engine step phase: prefill sweep.
+    pub step_prefill_us: Histogram,
+    /// Engine step phase: decode slice.
+    pub step_decode_us: Histogram,
+    /// Router event fan-in: one `poll_events` drain that yielded events.
+    pub fanin_us: Histogram,
+    // -- admission / progress counters ----------------------------------
+    pub requests_submitted: Counter,
+    pub requests_admitted: Counter,
+    pub requests_completed: Counter,
+    pub requests_cancelled: Counter,
+    /// Rejections because the group cannot ever fit the pool's blocks.
+    pub rejected_blocks: Counter,
+    /// Rejections because the group cannot ever fit the byte budget.
+    pub rejected_bytes: Counter,
+    /// Rejections for non-capacity reasons (queue full, bad params...).
+    pub rejected_other: Counter,
+    /// Admission deferrals (request stays queued) split by which budget
+    /// clause failed this step.
+    pub deferred_blocks: Counter,
+    pub deferred_bytes: Counter,
+    pub prefill_tokens: Counter,
+    pub decode_tokens: Counter,
+    pub prefix_hit_tokens: Counter,
+    // -- rolling 10 s gauges --------------------------------------------
+    /// Generated tokens; read as tokens/s over the window.
+    pub tokens_10s: RollingWindow,
+    /// TTFT samples in µs; read as a rolling mean.
+    pub ttft_10s: RollingWindow,
+    // -- opt-in extras --------------------------------------------------
+    trace: Option<TraceSink>,
+    probe: Arc<LayerProbe>,
+}
+
+impl Default for Telemetry {
+    fn default() -> Telemetry {
+        Telemetry::new()
+    }
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry {
+            epoch: Instant::now(),
+            queue_us: Histogram::new(),
+            ttft_us: Histogram::new(),
+            inter_token_us: Histogram::new(),
+            decode_step_us: Histogram::new(),
+            prefill_chunk_us: Histogram::new(),
+            step_admit_us: Histogram::new(),
+            step_prefill_us: Histogram::new(),
+            step_decode_us: Histogram::new(),
+            fanin_us: Histogram::new(),
+            requests_submitted: Counter::default(),
+            requests_admitted: Counter::default(),
+            requests_completed: Counter::default(),
+            requests_cancelled: Counter::default(),
+            rejected_blocks: Counter::default(),
+            rejected_bytes: Counter::default(),
+            rejected_other: Counter::default(),
+            deferred_blocks: Counter::default(),
+            deferred_bytes: Counter::default(),
+            prefill_tokens: Counter::default(),
+            decode_tokens: Counter::default(),
+            prefix_hit_tokens: Counter::default(),
+            tokens_10s: RollingWindow::default(),
+            ttft_10s: RollingWindow::default(),
+            trace: None,
+            probe: Arc::new(LayerProbe::disabled()),
+        }
+    }
+
+    /// Attach a Chrome trace_event sink (`--trace-out`).
+    pub fn with_trace(mut self, sink: TraceSink) -> Telemetry {
+        self.trace = Some(sink);
+        self
+    }
+
+    /// Attach a per-layer sampling probe (`--metrics-sample-n`).
+    pub fn with_probe(mut self, sample_every: u64) -> Telemetry {
+        self.probe = Arc::new(LayerProbe::new(sample_every));
+        self
+    }
+
+    pub fn trace(&self) -> Option<&TraceSink> {
+        self.trace.as_ref()
+    }
+
+    pub fn probe(&self) -> &Arc<LayerProbe> {
+        &self.probe
+    }
+
+    /// Absolute second on the telemetry clock (rolling-window key).
+    pub fn now_sec(&self) -> u64 {
+        self.epoch.elapsed().as_secs()
+    }
+}
+
+/// Per-worker gauge snapshot joined into the Prometheus render; built by
+/// `Router::worker_gauges` from each `EngineHandle`'s published atomics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerGauges {
+    pub queue_depth: u64,
+    pub kv_bytes_in_use: u64,
+    pub kv_bytes_capacity: u64,
+    pub decoded_bytes_live: u64,
+}
+
+impl WorkerGauges {
+    /// KV byte-budget pressure in [0, 1] (decoded-page bytes charge the
+    /// same budget as the paged stores, matching engine admission).
+    pub fn kv_pressure(&self) -> f64 {
+        if self.kv_bytes_capacity == 0 {
+            0.0
+        } else {
+            (self.kv_bytes_in_use + self.decoded_bytes_live) as f64
+                / self.kv_bytes_capacity as f64
+        }
+    }
+}
+
+fn render_histogram(out: &mut String, name: &str, help: &str, s: &HistogramSnapshot) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    let mut cum = 0u64;
+    for i in 0..BUCKETS {
+        cum += s.buckets[i];
+        if i == BUCKETS - 1 {
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+        } else {
+            // Inclusive integer-µs upper bound, exposed in seconds.
+            let le = bucket_upper_us(i) as f64 / 1e6;
+            out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+    }
+    out.push_str(&format!("{name}_sum {}\n", s.sum_us as f64 / 1e6));
+    out.push_str(&format!("{name}_count {}\n", s.count));
+}
+
+fn render_counter(out: &mut String, name: &str, help: &str, v: u64) {
+    out.push_str(&format!(
+        "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+    ));
+}
+
+fn render_gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    out.push_str(&format!(
+        "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"
+    ));
+}
+
+/// Render the full metric surface in Prometheus text exposition format.
+/// `workers` carries the per-worker gauges (index = worker label);
+/// `pages` is the fleet-wide page-decode snapshot
+/// ([`crate::metrics::KvPageStats`], `Router::kv_page_stats`).
+pub fn render_prometheus(
+    t: &Telemetry,
+    workers: &[WorkerGauges],
+    pages: &crate::metrics::KvPageStats,
+) -> String {
+    let mut out = String::with_capacity(8192);
+
+    render_histogram(
+        &mut out,
+        "dma_ttft_seconds",
+        "Time from enqueue to first generated token",
+        &t.ttft_us.snapshot(),
+    );
+    render_histogram(
+        &mut out,
+        "dma_inter_token_seconds",
+        "Decode-step wall time amortised per generated token",
+        &t.inter_token_us.snapshot(),
+    );
+    render_histogram(
+        &mut out,
+        "dma_decode_step_seconds",
+        "Batched decode step wall time",
+        &t.decode_step_us.snapshot(),
+    );
+    render_histogram(
+        &mut out,
+        "dma_prefill_chunk_seconds",
+        "Prefill chunk wall time",
+        &t.prefill_chunk_us.snapshot(),
+    );
+    render_histogram(
+        &mut out,
+        "dma_queue_seconds",
+        "Time from enqueue to admission",
+        &t.queue_us.snapshot(),
+    );
+    render_histogram(
+        &mut out,
+        "dma_step_admit_seconds",
+        "Engine step admission-phase wall time",
+        &t.step_admit_us.snapshot(),
+    );
+    render_histogram(
+        &mut out,
+        "dma_step_prefill_seconds",
+        "Engine step prefill-phase wall time",
+        &t.step_prefill_us.snapshot(),
+    );
+    render_histogram(
+        &mut out,
+        "dma_step_decode_seconds",
+        "Engine step decode-phase wall time",
+        &t.step_decode_us.snapshot(),
+    );
+    render_histogram(
+        &mut out,
+        "dma_router_fanin_seconds",
+        "Router event fan-in drain wall time",
+        &t.fanin_us.snapshot(),
+    );
+    let probe = t.probe();
+    if probe.sample_every() > 0 {
+        render_histogram(
+            &mut out,
+            "dma_layer_attn_seconds",
+            "Sampled per-layer decode attention wall time",
+            &probe.attn_us.snapshot(),
+        );
+        render_histogram(
+            &mut out,
+            "dma_layer_kv_append_seconds",
+            "Sampled per-layer KV quantize-on-append wall time",
+            &probe.kv_append_us.snapshot(),
+        );
+    }
+
+    render_counter(
+        &mut out,
+        "dma_requests_submitted_total",
+        "Requests accepted into the queue",
+        t.requests_submitted.get(),
+    );
+    render_counter(
+        &mut out,
+        "dma_requests_admitted_total",
+        "Requests admitted to prefill",
+        t.requests_admitted.get(),
+    );
+    render_counter(
+        &mut out,
+        "dma_requests_completed_total",
+        "Requests finished with a terminal response",
+        t.requests_completed.get(),
+    );
+    render_counter(
+        &mut out,
+        "dma_requests_cancelled_total",
+        "Requests cancelled before completion",
+        t.requests_cancelled.get(),
+    );
+    out.push_str(concat!(
+        "# HELP dma_requests_rejected_total Requests rejected at submit, by cause\n",
+        "# TYPE dma_requests_rejected_total counter\n"
+    ));
+    out.push_str(&format!(
+        "dma_requests_rejected_total{{cause=\"blocks\"}} {}\n",
+        t.rejected_blocks.get()
+    ));
+    out.push_str(&format!(
+        "dma_requests_rejected_total{{cause=\"bytes\"}} {}\n",
+        t.rejected_bytes.get()
+    ));
+    out.push_str(&format!(
+        "dma_requests_rejected_total{{cause=\"other\"}} {}\n",
+        t.rejected_other.get()
+    ));
+    out.push_str(concat!(
+        "# HELP dma_admission_deferred_total Admission attempts deferred, by failing budget\n",
+        "# TYPE dma_admission_deferred_total counter\n"
+    ));
+    out.push_str(&format!(
+        "dma_admission_deferred_total{{cause=\"blocks\"}} {}\n",
+        t.deferred_blocks.get()
+    ));
+    out.push_str(&format!(
+        "dma_admission_deferred_total{{cause=\"bytes\"}} {}\n",
+        t.deferred_bytes.get()
+    ));
+    render_counter(
+        &mut out,
+        "dma_prefill_tokens_total",
+        "Prompt tokens prefilled (including prefix-cache hits)",
+        t.prefill_tokens.get(),
+    );
+    render_counter(
+        &mut out,
+        "dma_decode_tokens_total",
+        "Tokens generated by decode",
+        t.decode_tokens.get(),
+    );
+    render_counter(
+        &mut out,
+        "dma_prefix_hit_tokens_total",
+        "Prompt tokens served from the prefix cache",
+        t.prefix_hit_tokens.get(),
+    );
+    out.push_str(concat!(
+        "# HELP dma_kv_pages_decoded_total Quantized KV pages decoded, by tile precision\n",
+        "# TYPE dma_kv_pages_decoded_total counter\n"
+    ));
+    out.push_str(&format!(
+        "dma_kv_pages_decoded_total{{precision=\"high\"}} {}\n",
+        pages.high_pages
+    ));
+    out.push_str(&format!(
+        "dma_kv_pages_decoded_total{{precision=\"low\"}} {}\n",
+        pages.low_pages
+    ));
+    render_counter(
+        &mut out,
+        "dma_decoded_page_hits_total",
+        "Decoded-page cache hits",
+        pages.cache_hits,
+    );
+    render_counter(
+        &mut out,
+        "dma_decoded_page_misses_total",
+        "Decoded-page cache misses",
+        pages.cache_misses,
+    );
+    render_counter(
+        &mut out,
+        "dma_decoded_page_evictions_total",
+        "Decoded-page cache evictions",
+        pages.cache_evictions,
+    );
+
+    let now = t.now_sec();
+    render_gauge(
+        &mut out,
+        "dma_tokens_per_second_10s",
+        "Generated tokens per second over the last 10 s",
+        t.tokens_10s.rate_per_sec(now),
+    );
+    render_gauge(
+        &mut out,
+        "dma_ttft_ms_10s",
+        "Mean TTFT in ms over the last 10 s",
+        t.ttft_10s.mean(now) / 1e3,
+    );
+
+    fn per_worker(
+        out: &mut String,
+        name: &str,
+        help: &str,
+        workers: &[WorkerGauges],
+        get: impl Fn(&WorkerGauges) -> f64,
+    ) {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
+        for (i, w) in workers.iter().enumerate() {
+            out.push_str(&format!("{name}{{worker=\"{i}\"}} {}\n", get(w)));
+        }
+    }
+    per_worker(
+        &mut out,
+        "dma_worker_queue_depth",
+        "In-flight requests owned by the worker",
+        workers,
+        |w| w.queue_depth as f64,
+    );
+    per_worker(
+        &mut out,
+        "dma_worker_kv_bytes_in_use",
+        "KV cache bytes resident on the worker",
+        workers,
+        |w| w.kv_bytes_in_use as f64,
+    );
+    per_worker(
+        &mut out,
+        "dma_worker_kv_bytes_capacity",
+        "KV cache byte budget of the worker",
+        workers,
+        |w| w.kv_bytes_capacity as f64,
+    );
+    per_worker(
+        &mut out,
+        "dma_worker_decoded_bytes_live",
+        "Decoded-page cache bytes charged against the worker budget",
+        workers,
+        |w| w.decoded_bytes_live as f64,
+    );
+    per_worker(
+        &mut out,
+        "dma_worker_kv_pressure",
+        "KV byte-budget utilisation in [0,1]",
+        workers,
+        |w| w.kv_pressure(),
+    );
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_idx(0), 0);
+        assert_eq!(bucket_idx(1), 1);
+        assert_eq!(bucket_idx(2), 2);
+        assert_eq!(bucket_idx(3), 2);
+        assert_eq!(bucket_idx(4), 3);
+        assert_eq!(bucket_idx(7), 3);
+        assert_eq!(bucket_idx(8), 4);
+        // Every bucket's inclusive edges map to itself.
+        for i in 1..BUCKETS - 1 {
+            assert_eq!(bucket_idx(1u64 << (i - 1)), i, "lower edge of bucket {i}");
+            assert_eq!(bucket_idx((1u64 << i) - 1), i, "upper edge of bucket {i}");
+        }
+        // The last bucket saturates.
+        assert_eq!(bucket_idx(1u64 << (BUCKETS - 1)), BUCKETS - 1);
+        assert_eq!(bucket_idx(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn overflow_bucket_saturates() {
+        let h = Histogram::new();
+        h.record_us(u64::MAX);
+        h.record_us(1u64 << 50);
+        let s = h.snapshot();
+        assert_eq!(s.buckets[BUCKETS - 1], 2);
+        assert_eq!(s.count, 2);
+        // p99 lands in the saturating bucket and reports its sentinel
+        // upper bound rather than wrapping.
+        assert_eq!(s.percentile_us(0.99), bucket_upper_us(BUCKETS - 1));
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.percentile_us(0.5), 0);
+        assert_eq!(s.mean_us(), 0.0);
+    }
+
+    /// Histogram percentiles vs a sorted-vec oracle: the reported bucket
+    /// upper bound must bracket the exact sample percentile from below
+    /// within one bucket (factor of 2).
+    #[test]
+    fn percentile_matches_sorted_oracle() {
+        prop::check("histogram percentile oracle", 25, |rng| {
+            let n = rng.int_in(1, 400) as usize;
+            let h = Histogram::new();
+            let mut vals: Vec<u64> = (0..n)
+                .map(|_| {
+                    // Span many decades, including zeros.
+                    let mag = rng.int_in(0, 20) as u32;
+                    (rng.uniform() * f64::from(1u32 << mag)) as u64
+                })
+                .collect();
+            for &v in &vals {
+                h.record_us(v);
+            }
+            vals.sort_unstable();
+            let s = h.snapshot();
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let oracle = vals[rank - 1];
+                let got = s.percentile_us(q);
+                prop_assert!(
+                    got >= oracle,
+                    "p{q}: bucket bound {got} below oracle {oracle}"
+                );
+                // One log2 bucket of slack: bound < 2 * max(oracle, 1).
+                prop_assert!(
+                    got < 2 * oracle.max(1) || got == 0,
+                    "p{q}: bucket bound {got} too far above oracle {oracle}"
+                );
+            }
+            prop_assert!(s.count == n as u64);
+            Ok(())
+        });
+    }
+
+    /// Concurrent recording loses no samples and lands every value in
+    /// its correct bucket.
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let threads = 8;
+        let per = 5000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        // Deterministic spread across buckets per thread.
+                        h.record_us((i + t) % 1024);
+                    }
+                })
+            })
+            .collect();
+        for jh in handles {
+            jh.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, threads * per);
+        assert_eq!(s.buckets.iter().sum::<u64>(), threads * per);
+        // Cross-check against a serially-built reference histogram.
+        let reference = Histogram::new();
+        for t in 0..threads {
+            for i in 0..per {
+                reference.record_us((i + t) % 1024);
+            }
+        }
+        let r = reference.snapshot();
+        assert_eq!(s.buckets, r.buckets);
+        assert_eq!(s.sum_us, r.sum_us);
+    }
+
+    #[test]
+    fn rolling_window_drops_stale_seconds() {
+        let w = RollingWindow::default();
+        w.add(100, 50);
+        w.add(105, 30);
+        let (sum, n) = w.totals(105);
+        assert_eq!((sum, n), (80, 2));
+        assert_eq!(w.rate_per_sec(105), 8.0);
+        assert_eq!(w.mean(105), 40.0);
+        // 30 s later both slots are outside the window.
+        let (sum, n) = w.totals(135);
+        assert_eq!((sum, n), (0, 0));
+        // Ring reuse: second 116 lands on slot 100 % 16 and evicts it.
+        w.add(116, 7);
+        let (sum, _) = w.totals(120);
+        assert_eq!(sum, 7);
+    }
+
+    #[test]
+    fn rolling_window_second_zero_is_counted() {
+        let w = RollingWindow::default();
+        w.add(0, 5);
+        assert_eq!(w.totals(0), (5, 1));
+    }
+
+    #[test]
+    fn layer_probe_sampling_cadence() {
+        let p = LayerProbe::new(4);
+        let hits: Vec<bool> = (0..8).map(|_| p.should_sample()).collect();
+        assert_eq!(hits, vec![true, false, false, false, true, false, false, false]);
+        let off = LayerProbe::disabled();
+        assert!(!(0..8).any(|_| off.should_sample()));
+    }
+
+    #[test]
+    fn prometheus_render_has_required_families() {
+        let t = Telemetry::new();
+        t.ttft_us.record_ms(12.5);
+        t.inter_token_us.record_us(800);
+        t.decode_step_us.record_us(3200);
+        t.rejected_blocks.inc();
+        t.requests_completed.inc();
+        let workers = [
+            WorkerGauges {
+                queue_depth: 2,
+                kv_bytes_in_use: 1000,
+                kv_bytes_capacity: 4000,
+                decoded_bytes_live: 200,
+            },
+            WorkerGauges::default(),
+        ];
+        let pages = crate::metrics::KvPageStats {
+            high_pages: 3,
+            low_pages: 9,
+            cache_hits: 5,
+            cache_misses: 2,
+            cache_evictions: 1,
+        };
+        let text = render_prometheus(&t, &workers, &pages);
+        for family in [
+            "dma_ttft_seconds_bucket",
+            "dma_ttft_seconds_count 1",
+            "dma_inter_token_seconds_bucket",
+            "dma_decode_step_seconds_bucket",
+            "dma_requests_rejected_total{cause=\"blocks\"} 1",
+            "dma_requests_completed_total 1",
+            "dma_admission_deferred_total{cause=\"bytes\"} 0",
+            "dma_worker_queue_depth{worker=\"0\"} 2",
+            "dma_worker_queue_depth{worker=\"1\"} 0",
+            "dma_worker_kv_pressure{worker=\"0\"} 0.3",
+            "dma_tokens_per_second_10s",
+            "dma_ttft_ms_10s",
+            "dma_kv_pages_decoded_total{precision=\"high\"} 3",
+            "dma_kv_pages_decoded_total{precision=\"low\"} 9",
+            "dma_decoded_page_hits_total 5",
+            "dma_decoded_page_misses_total 2",
+            "dma_decoded_page_evictions_total 1",
+            "le=\"+Inf\"",
+        ] {
+            assert!(text.contains(family), "missing '{family}' in:\n{text}");
+        }
+        // Every histogram line set is cumulative and ends at count.
+        assert!(text.contains("dma_ttft_seconds_sum 0.0125"));
+    }
+
+    #[test]
+    fn worker_gauges_pressure() {
+        let w = WorkerGauges {
+            kv_bytes_in_use: 750,
+            kv_bytes_capacity: 1000,
+            decoded_bytes_live: 250,
+            ..Default::default()
+        };
+        assert_eq!(w.kv_pressure(), 1.0);
+        assert_eq!(WorkerGauges::default().kv_pressure(), 0.0);
+    }
+
+    #[test]
+    fn trace_sink_writes_chrome_trace_events() {
+        let dir = std::env::temp_dir().join("dma_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("trace_{}.jsonl", std::process::id()));
+        let sink = TraceSink::create(&path).unwrap();
+        sink.span("decode_step", 0, 7, 100, 250, &[("batch", 3.0), ("ms", 0.25)]);
+        sink.instant("finish", 1, 7, 400, &[]);
+        drop(sink);
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let ev = crate::util::json::Json::parse(lines[0]).unwrap();
+        assert_eq!(ev.get("name").unwrap().as_str(), Some("decode_step"));
+        assert_eq!(ev.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(ev.get("ts").unwrap().as_usize(), Some(100));
+        assert_eq!(ev.get("dur").unwrap().as_usize(), Some(250));
+        assert_eq!(ev.get("pid").unwrap().as_usize(), Some(0));
+        assert_eq!(ev.get("tid").unwrap().as_usize(), Some(7));
+        assert_eq!(
+            ev.get("args").unwrap().get("batch").unwrap().as_usize(),
+            Some(3)
+        );
+        let inst = crate::util::json::Json::parse(lines[1]).unwrap();
+        assert_eq!(inst.get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(inst.get("s").unwrap().as_str(), Some("t"));
+        std::fs::remove_file(&path).ok();
+    }
+}
