@@ -23,26 +23,11 @@ use crate::tensor::Tensor;
 /// adds pipeline instead of serializing on one dependency chain (f32
 /// reassociation is deterministic — the same blocking always produces
 /// the same bits, and every kernel sharing this helper stays mutually
-/// bit-exact).
+/// bit-exact). Delegates to [`crate::simd`], which vectorizes the same
+/// chain structure when the `simd` feature is on.
 #[inline]
 pub(crate) fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let n4 = n - n % 4;
-    let mut acc = [0f32; 4];
-    let mut i = 0;
-    while i < n4 {
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
-        i += 4;
-    }
-    let mut tail = 0f32;
-    for j in n4..n {
-        tail += a[j] * b[j];
-    }
-    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+    crate::simd::dot_blocked(a, b)
 }
 
 /// Compute one `[rows, cols]` logit tile over decoded operands:

@@ -75,16 +75,12 @@ impl OnlineSoftmax {
             self.m[r] = m_new;
             let arow = &mut self.acc[r * self.d..(r + 1) * self.d];
             if alpha != 1.0 {
-                for a in arow.iter_mut() {
-                    *a *= alpha;
-                }
+                crate::simd::scale_in_place(arow, alpha);
             }
             for (j, &p) in prow.iter().enumerate() {
                 if p != 0.0 {
                     let vrow = &v[j * self.d..(j + 1) * self.d];
-                    for (a, &vv) in arow.iter_mut().zip(vrow) {
-                        *a += p * vv;
-                    }
+                    crate::simd::axpy(arow, p, vrow);
                 }
             }
         }

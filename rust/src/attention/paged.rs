@@ -193,6 +193,41 @@ pub fn dma_attention_prefill_chunk(
     policy: &KvPolicy,
     stats: &mut KvPageStats,
 ) -> Tensor {
+    prefill_chunk_impl(q, k_chunk, v_chunk, k, v, policy, None, stats)
+}
+
+/// [`dma_attention_prefill_chunk`] backed by a [`DecodedPageCache`]:
+/// full prefix K/V pages dequantize through the cache, so a sequence
+/// prefilled in `c` chunks decodes each prefix page once instead of
+/// once per chunk — and when the cache handle is the slot's
+/// (`QuantSlotKv.decoded`), the decode steps that follow inherit the
+/// warm tiles. Bit-identical to the uncached call: cached tiles come
+/// from the same decoders over the same immutable bytes. The partial
+/// frontier page (growing in place between chunks) always decodes
+/// fresh.
+pub fn dma_attention_prefill_chunk_cached(
+    q: &Tensor,
+    k_chunk: &Tensor,
+    v_chunk: &Tensor,
+    k: &QuantPagedKv,
+    v: &QuantPagedKv,
+    policy: &KvPolicy,
+    cache: &mut DecodedPageCache,
+    stats: &mut KvPageStats,
+) -> Tensor {
+    prefill_chunk_impl(q, k_chunk, v_chunk, k, v, policy, Some(cache), stats)
+}
+
+fn prefill_chunk_impl(
+    q: &Tensor,
+    k_chunk: &Tensor,
+    v_chunk: &Tensor,
+    k: &QuantPagedKv,
+    v: &QuantPagedKv,
+    policy: &KvPolicy,
+    mut cache: Option<&mut DecodedPageCache>,
+    stats: &mut KvPageStats,
+) -> Tensor {
     let (rows, d) = (q.rows(), q.cols());
     let lq = k_chunk.rows();
     assert!(lq >= 1, "empty chunk");
@@ -214,8 +249,10 @@ pub fn dma_attention_prefill_chunk(
     qq.decode_high_rows(0, rows, &mut q_high);
 
     let mut os = OnlineSoftmax::new(rows, d, true);
-    let mut k_tile = vec![0f32; pt * d];
-    let mut v_tile = vec![0f32; pt * d];
+    // Lazy decode tiles, mirroring the decode path: with a warm cache
+    // and a page-aligned prefix they are never allocated.
+    let mut k_tile: Vec<f32> = Vec::new();
+    let mut v_tile: Vec<f32> = Vec::new();
     let mut s_tile = vec![0f32; rows * pt.max(lq)];
     let mut scratch = vec![0f32; rows * pt.max(lq)];
 
@@ -226,16 +263,34 @@ pub fn dma_attention_prefill_chunk(
         let (r0, r1) = k.page_rows(j);
         let cols = r1 - r0;
         let eff = k.effective(prec);
-        k.decode_rows(r0, r1, eff, &mut k_tile);
         match eff {
             Precision::High => stats.high_pages += 1,
             Precision::Low => stats.low_pages += 1,
         }
+        // Full prefix pages are immutable within and across chunks:
+        // serve them from the cache when one is attached. The partial
+        // frontier page grows between chunks and decodes fresh.
+        let k_dec: &[f32] = match cache.as_deref_mut() {
+            Some(c) if j < k.n_full_pages() => c.get_or_decode(k.page_arc(j), eff, stats),
+            _ => {
+                k_tile.resize(pt * d, 0.0);
+                k.decode_rows(r0, r1, eff, &mut k_tile);
+                &k_tile
+            }
+        };
         let q_dec = if eff == Precision::High { &q_high } else { &q_low };
-        score_tile(q_dec, rows, d, &k_tile, cols, pos0 as i64, r0, false,
+        score_tile(q_dec, rows, d, k_dec, cols, pos0 as i64, r0, false,
                    &mut s_tile[..rows * cols]);
-        v.decode_rows(r0, r1, Precision::High, &mut v_tile);
-        os.update(&s_tile[..rows * cols], &v_tile[..cols * d], cols, &mut scratch);
+        let v_eff = v.effective(Precision::High);
+        let v_dec: &[f32] = match cache.as_deref_mut() {
+            Some(c) if j < v.n_full_pages() => c.get_or_decode(v.page_arc(j), v_eff, stats),
+            _ => {
+                v_tile.resize(pt * d, 0.0);
+                v.decode_rows(r0, r1, Precision::High, &mut v_tile);
+                &v_tile
+            }
+        };
+        os.update(&s_tile[..rows * cols], &v_dec[..cols * d], cols, &mut scratch);
     }
 
     // The chunk's own causal triangle in f32, base-2 logits: fold the
@@ -679,6 +734,100 @@ mod tests {
             }
         }
         assert_eq!(s_single.total(), n_rep as u64 * s_group.total());
+    }
+
+    #[test]
+    fn cached_prefill_chunks_bit_identical_and_reuse_prefix() {
+        // Prefill a 40-token prompt in 5 chunks of 8 over a growing
+        // dual-format prefix (pt = 8, so every prefix page is full).
+        // The cached kernel must equal the uncached one bit for bit,
+        // and re-decode only pages it has never seen: with sink=0,
+        // diag=0 every K page decodes low at every chunk, so each of
+        // the 4 distinct prefix pages misses exactly once per store
+        // (K + V = 8 misses) and the other 12 page-visits per store
+        // pair hit (10 + 10 visits total, 12 hits).
+        let (d, pt, lq, n_chunks) = (32usize, 8usize, 8usize, 5usize);
+        let prompt_q = rows(n_chunks * lq, d, 120);
+        let prompt_k = rows(n_chunks * lq, d, 121);
+        let prompt_v = rows(n_chunks * lq, d, 122);
+        let policy = KvPolicy { sink: 0, diag: 0 };
+
+        let run = |cache: Option<&mut DecodedPageCache>, stats: &mut KvPageStats| {
+            let mut cache = cache;
+            let mut k = QuantPagedKv::new(d, KvFormat::Dual, pt);
+            let mut v = QuantPagedKv::new(d, KvFormat::Dual, pt);
+            let mut outs: Vec<Vec<f32>> = Vec::new();
+            for c in 0..n_chunks {
+                let sl = |p: &[f32]| p[c * lq * d..(c + 1) * lq * d].to_vec();
+                let q = Tensor::new(vec![lq, d], sl(&prompt_q));
+                let kc = Tensor::new(vec![lq, d], sl(&prompt_k));
+                let vc = Tensor::new(vec![lq, d], sl(&prompt_v));
+                let out = match cache.as_deref_mut() {
+                    Some(cc) => dma_attention_prefill_chunk_cached(
+                        &q, &kc, &vc, &k, &v, &policy, cc, stats),
+                    None => dma_attention_prefill_chunk(
+                        &q, &kc, &vc, &k, &v, &policy, stats),
+                };
+                outs.push(out.data);
+                k.append_rows(&kc.data);
+                v.append_rows(&vc.data);
+            }
+            outs
+        };
+
+        let mut s_cold = KvPageStats::default();
+        let cold = run(None, &mut s_cold);
+        let mut cache = DecodedPageCache::new(1 << 20);
+        let mut s_warm = KvPageStats::default();
+        let warm = run(Some(&mut cache), &mut s_warm);
+
+        assert_eq!(cold, warm, "cached prefill diverged from uncached");
+        // Same page-visit counters; only the cache counters differ.
+        assert_eq!(
+            (s_cold.high_pages, s_cold.low_pages),
+            (s_warm.high_pages, s_warm.low_pages)
+        );
+        assert_eq!(s_cold.total(), 10, "0+1+2+3+4 prefix K-page visits");
+        assert_eq!((s_cold.cache_hits, s_cold.cache_misses), (0, 0));
+        assert_eq!(s_warm.cache_misses, 8, "each distinct page decodes once per store");
+        assert_eq!(s_warm.cache_hits, 12, "every revisit served from the cache");
+        assert_eq!(s_warm.cache_evictions, 0);
+    }
+
+    #[test]
+    fn cached_prefill_partial_frontier_page_bypasses_cache() {
+        // Chunks of 4 with pt = 8: every other chunk leaves a half-full
+        // frontier page, which must decode fresh (it grows in place) —
+        // and still match the uncached kernel bit for bit.
+        let (d, pt, lq, n_chunks) = (32usize, 8usize, 4usize, 6usize);
+        let prompt_q = rows(n_chunks * lq, d, 130);
+        let prompt_k = rows(n_chunks * lq, d, 131);
+        let prompt_v = rows(n_chunks * lq, d, 132);
+        let policy = KvPolicy { sink: 8, diag: 8 };
+
+        let mut k = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        let mut v = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        let mut cache = DecodedPageCache::new(1 << 20);
+        let (mut s_cold, mut s_warm) = (KvPageStats::default(), KvPageStats::default());
+        for c in 0..n_chunks {
+            let sl = |p: &[f32]| p[c * lq * d..(c + 1) * lq * d].to_vec();
+            let q = Tensor::new(vec![lq, d], sl(&prompt_q));
+            let kc = Tensor::new(vec![lq, d], sl(&prompt_k));
+            let vc = Tensor::new(vec![lq, d], sl(&prompt_v));
+            let cold = dma_attention_prefill_chunk(&q, &kc, &vc, &k, &v, &policy, &mut s_cold);
+            let warm = dma_attention_prefill_chunk_cached(
+                &q, &kc, &vc, &k, &v, &policy, &mut cache, &mut s_warm);
+            assert_eq!(cold.data, warm.data, "chunk {c}");
+            k.append_rows(&kc.data);
+            v.append_rows(&vc.data);
+        }
+        // Odd chunks see a partial frontier page: visits outnumber
+        // cache consultations, and revisited full pages do hit.
+        assert!(s_warm.cache_hits > 0, "full prefix pages never reused");
+        assert!(
+            (s_warm.cache_hits + s_warm.cache_misses) < 2 * s_cold.total(),
+            "partial frontier pages must bypass the cache"
+        );
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub mod mxfp;
 pub mod perfmodel;
 pub mod runtime;
 pub mod server;
+pub mod simd;
 pub mod telemetry;
 pub mod tensor;
 pub mod util;

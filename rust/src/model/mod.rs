@@ -118,6 +118,23 @@ struct QuantHeadWork<'a> {
     stats: crate::metrics::KvPageStats,
 }
 
+/// Work item of the quantized prefill's kv-head fan-out (the prefill
+/// analogue of [`QuantHeadWork`]): one head group's stacked roped query
+/// tiles, the chunk's f32 K/V tiles, the head's quantized prefix stores
+/// and decoded-page cache, and an owned output tile plus local stats —
+/// everything disjoint per head, so the fan-out is bit-identical at any
+/// thread count and stats merge back in head order.
+struct PrefillHeadWork<'a> {
+    qs: Tensor,
+    k_chunk: &'a Tensor,
+    v_chunk: &'a Tensor,
+    k: &'a crate::kvquant::QuantPagedKv,
+    v: &'a crate::kvquant::QuantPagedKv,
+    cache: &'a std::sync::Arc<std::sync::Mutex<crate::kvquant::DecodedPageCache>>,
+    out: Tensor,
+    stats: crate::metrics::KvPageStats,
+}
+
 /// KV cache for one sequence: `[n_layers][n_kv_heads][cap, d_head]`
 /// (post-RoPE keys, matching the JAX export).
 #[derive(Clone, Debug)]
@@ -272,10 +289,14 @@ impl CpuModel {
     /// straight into the paged stores (no f32 staging slot), and chunk
     /// attention reads the *quantized* prefix pages at the position-aware
     /// policy precision
-    /// ([`crate::attention::paged::dma_attention_prefill_chunk`]) — the
-    /// cache is authoritative, which is what lets the radix prefix cache
-    /// seed `kv` with pages produced by another sequence and still
-    /// reproduce cold-start outputs token for token.
+    /// ([`crate::attention::paged::dma_attention_prefill_chunk_cached`],
+    /// through the slot's per-head [`crate::kvquant::DecodedPageCache`]s,
+    /// so a prefix page dequantizes once per sequence instead of once per
+    /// chunk) — the cache is authoritative, which is what lets the radix
+    /// prefix cache seed `kv` with pages produced by another sequence and
+    /// still reproduce cold-start outputs token for token. Chunks with a
+    /// prefix fan their per-kv-head attention across the worker pool
+    /// (bit-identical at any thread count).
     ///
     /// A single full-prompt chunk is bit-exact with the legacy monolithic
     /// path (f32 prefill + [`crate::kvquant::QuantSlotKv::from_slot`]):
@@ -366,62 +387,28 @@ impl CpuModel {
                 Self::rope(&mut qh, pos0, 10000.0);
                 qh
             };
-            for kvh in 0..cfg.n_kv_heads {
-                if pos0 == 0 {
-                    // First chunk: identical to the monolithic path.
-                    for rh in 0..n_rep {
-                        let hq = kvh * n_rep + rh;
-                        let qh = build_q(hq);
-                        let o = match mode {
-                            AttnMode::Native => {
-                                crate::attention::reference::attention(
-                                    &qh, &k_heads[kvh], &v_heads[kvh], true)
-                            }
-                            AttnMode::Dma => {
-                                if t % tile.bm == 0 && t % tile.bn == 0 {
-                                    crate::attention::dma::dma_attention(
-                                        &qh, &k_heads[kvh], &v_heads[kvh], &tile)
-                                } else {
-                                    // Irregular length: fall back to exact.
-                                    crate::attention::reference::attention(
-                                        &qh, &k_heads[kvh], &v_heads[kvh], true)
-                                }
-                            }
-                        };
-                        for r in 0..t {
-                            for c in 0..cfg.d_head {
-                                o_all.set(r, hq * cfg.d_head + c, o.at(r, c));
-                            }
-                        }
-                    }
-                    continue;
-                }
-                match target {
-                    ChunkTarget::F32(kv) => {
-                        // Exact rectangular attention over prefix + chunk:
-                        // row r attends keys 0..=pos0+r, the same per-row
-                        // arithmetic as one monolithic pass (bit-invariant
-                        // to chunking). The prefix slice is materialized
-                        // once per kv head, not per query head.
-                        let k_cache = kv.k[li][kvh].slice_rows(0, pos0 + t);
-                        let v_cache = kv.v[li][kvh].slice_rows(0, pos0 + t);
-                        for rh in 0..n_rep {
-                            let hq = kvh * n_rep + rh;
-                            let qh = build_q(hq);
-                            let o = crate::attention::reference::attention(
-                                &qh, &k_cache, &v_cache, true);
-                            for r in 0..t {
-                                for c in 0..cfg.d_head {
-                                    o_all.set(r, hq * cfg.d_head + c, o.at(r, c));
-                                }
-                            }
-                        }
-                    }
-                    ChunkTarget::Quant(kv, stats) => {
-                        // Stack the group's query tiles so each prefix
-                        // page decodes once per kv head, not once per
-                        // query head (mirrors decode's head grouping;
-                        // bit-identical to per-head calls).
+            // Quantized prefix chunks fan their per-kv-head attention
+            // across the persistent worker pool, the same split as the
+            // decode step. The first chunk (no prefix) and the f32 path
+            // stay serial — their per-head work is cheap or shares the
+            // mutable f32 cache borrows.
+            let quant_prefix = pos0 > 0 && matches!(target, ChunkTarget::Quant(..));
+            if quant_prefix {
+                let ChunkTarget::Quant(kv, stats) = target else { unreachable!() };
+                let policy = kv.policy_for(li);
+                let threads = self.threads.max(1).min(cfg.n_kv_heads);
+                let crate::kvquant::QuantSlotKv { k, v, decoded, .. } = &mut **kv;
+                let kl: &[crate::kvquant::QuantPagedKv] = &k[li];
+                let vl: &[crate::kvquant::QuantPagedKv] = &v[li];
+                // Stack each head group's roped query tiles serially
+                // (`build_q` borrows the layer activations) so each
+                // prefix page decodes once per kv head, not once per
+                // query head — then run the cached prefill kernel per kv
+                // head in parallel. Bit-identical to per-head serial
+                // calls: every item owns its queries, output tile and
+                // stats, and cached tiles equal fresh decodes.
+                let mut items: Vec<PrefillHeadWork<'_>> = (0..cfg.n_kv_heads)
+                    .map(|kvh| {
                         let mut qs = Tensor::zeros(vec![n_rep * t, cfg.d_head]);
                         for rh in 0..n_rep {
                             let qh = build_q(kvh * n_rep + rh);
@@ -429,16 +416,83 @@ impl CpuModel {
                                 qs.row_mut(rh * t + r).copy_from_slice(qh.row(r));
                             }
                         }
-                        let o = crate::attention::paged::dma_attention_prefill_chunk(
-                            &qs, &k_heads[kvh], &v_heads[kvh],
-                            &kv.k[li][kvh], &kv.v[li][kvh],
-                            &kv.policy_for(li), stats);
+                        PrefillHeadWork {
+                            qs,
+                            k_chunk: &k_heads[kvh],
+                            v_chunk: &v_heads[kvh],
+                            k: &kl[kvh],
+                            v: &vl[kvh],
+                            cache: &decoded[li][kvh],
+                            out: Tensor::zeros(vec![1, 1]),
+                            stats: crate::metrics::KvPageStats::default(),
+                        }
+                    })
+                    .collect();
+                crate::util::pool::par_items(&mut items, threads, |w| {
+                    let mut cache = w.cache.lock().unwrap();
+                    w.out = crate::attention::paged::dma_attention_prefill_chunk_cached(
+                        &w.qs, w.k_chunk, w.v_chunk, w.k, w.v, &policy,
+                        &mut cache, &mut w.stats);
+                });
+                for (kvh, w) in items.into_iter().enumerate() {
+                    stats.merge(w.stats);
+                    for rh in 0..n_rep {
+                        let hq = kvh * n_rep + rh;
+                        for r in 0..t {
+                            for c in 0..cfg.d_head {
+                                o_all.set(r, hq * cfg.d_head + c, w.out.at(rh * t + r, c));
+                            }
+                        }
+                    }
+                }
+            } else {
+                for kvh in 0..cfg.n_kv_heads {
+                    if pos0 == 0 {
+                        // First chunk: identical to the monolithic path.
                         for rh in 0..n_rep {
                             let hq = kvh * n_rep + rh;
+                            let qh = build_q(hq);
+                            let o = match mode {
+                                AttnMode::Native => {
+                                    crate::attention::reference::attention(
+                                        &qh, &k_heads[kvh], &v_heads[kvh], true)
+                                }
+                                AttnMode::Dma => {
+                                    if t % tile.bm == 0 && t % tile.bn == 0 {
+                                        crate::attention::dma::dma_attention(
+                                            &qh, &k_heads[kvh], &v_heads[kvh], &tile)
+                                    } else {
+                                        // Irregular length: fall back to exact.
+                                        crate::attention::reference::attention(
+                                            &qh, &k_heads[kvh], &v_heads[kvh], true)
+                                    }
+                                }
+                            };
                             for r in 0..t {
                                 for c in 0..cfg.d_head {
-                                    o_all.set(r, hq * cfg.d_head + c, o.at(rh * t + r, c));
+                                    o_all.set(r, hq * cfg.d_head + c, o.at(r, c));
                                 }
+                            }
+                        }
+                        continue;
+                    }
+                    // pos0 > 0 and not quantized (handled above): exact
+                    // rectangular attention over prefix + chunk: row r
+                    // attends keys 0..=pos0+r, the same per-row
+                    // arithmetic as one monolithic pass (bit-invariant
+                    // to chunking). The prefix slice is materialized
+                    // once per kv head, not per query head.
+                    let ChunkTarget::F32(kv) = target else { unreachable!() };
+                    let k_cache = kv.k[li][kvh].slice_rows(0, pos0 + t);
+                    let v_cache = kv.v[li][kvh].slice_rows(0, pos0 + t);
+                    for rh in 0..n_rep {
+                        let hq = kvh * n_rep + rh;
+                        let qh = build_q(hq);
+                        let o = crate::attention::reference::attention(
+                            &qh, &k_cache, &v_cache, true);
+                        for r in 0..t {
+                            for c in 0..cfg.d_head {
+                                o_all.set(r, hq * cfg.d_head + c, o.at(r, c));
                             }
                         }
                     }
@@ -543,7 +597,8 @@ impl CpuModel {
     /// The one decode-step layer body, parameterized over the KV store
     /// (formerly duplicated between the f32 and paged paths). The
     /// per-layer kv-head attention loop fans across [`Self::threads`]
-    /// scoped workers: each head group writes a disjoint slice of the
+    /// workers of the persistent pool ([`crate::util::pool`] — no OS
+    /// thread spawns per layer): each head group writes a disjoint slice of the
     /// attention output and (paged) locks its head's decoded-page cache
     /// (uncontended within a sequence; shared with forked sibling
     /// candidates), so results are bit-identical at any thread count.
@@ -611,7 +666,7 @@ impl CpuModel {
                     let (kl, vl) = (&kv.k[li], &kv.v[li]);
                     let mut items: Vec<(usize, &mut [f32])> =
                         o_all.data.chunks_mut(n_rep * dh).enumerate().collect();
-                    crate::util::par::par_items(&mut items, threads, |(hkv, out)| {
+                    crate::util::pool::par_items(&mut items, threads, |(hkv, out)| {
                         self.attend_head_f32(
                             *hkv, out, &q_all, &kl[*hkv], &vl[*hkv], pos, n_rep);
                     });
@@ -637,7 +692,7 @@ impl CpuModel {
                             stats: crate::metrics::KvPageStats::default(),
                         })
                         .collect();
-                    crate::util::par::par_items(&mut items, threads, |w| {
+                    crate::util::pool::par_items(&mut items, threads, |w| {
                         self.attend_head_quant(w, &q_all, pos, n_rep, policy)
                     });
                     for w in items {
@@ -1247,6 +1302,91 @@ mod tests {
             assert_eq!(s, s1, "stats diverged at {threads} threads");
             assert_eq!(p, p1, "cache planes diverged at {threads} threads");
             assert_eq!(kv.k[0][0].data, kv1.k[0][0].data);
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_threads_bit_identical() {
+        // Chunked prefill fans per-kv-head prefix attention across the
+        // worker pool and routes prefix page reads through per-head
+        // decoded caches; neither may change a bit at any thread count,
+        // on the f32 or the quantized path. The decode continuation is
+        // checked both greedy and with seeded categorical sampling.
+        use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv};
+        let toks: Vec<i32> = (0..24).map(|i| ((i * 11) % 60) + 1).collect();
+        let qcfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 8,
+            policies: vec![KvPolicy { sink: 8, diag: 16 }],
+        };
+        // Seeded categorical draw from a softmax over the logits.
+        let sample = |logits: &[f32], rng: &mut crate::util::rng::Rng| -> i32 {
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let ps: Vec<f64> = logits.iter().map(|&x| ((x - m) as f64).exp()).collect();
+            let z: f64 = ps.iter().sum();
+            let mut u = rng.uniform() * z;
+            for (i, p) in ps.iter().enumerate() {
+                u -= p;
+                if u <= 0.0 {
+                    return i as i32;
+                }
+            }
+            (logits.len() - 1) as i32
+        };
+        let run = |threads: usize| {
+            let cfg = test_config();
+            let m = CpuModel::new(cfg.clone(), random_weights(&cfg, 3))
+                .unwrap()
+                .with_threads(threads);
+            // f32 path, 6-token chunks (offset from the 8-token pages so
+            // quant chunks below straddle page boundaries the same way).
+            let mut kv = KvState::new(&m.cfg, 64);
+            let mut f32_logits = Vec::new();
+            for chunk in toks.chunks(6) {
+                f32_logits.push(m.prefill_chunk(chunk, AttnMode::Native, &mut kv).unwrap());
+            }
+            // Quantized path, same chunking.
+            let mut qkv = QuantSlotKv::new(
+                qcfg.clone(), m.cfg.n_layers, m.cfg.n_kv_heads, m.cfg.d_head);
+            let mut stats = crate::metrics::KvPageStats::default();
+            let mut q_logits = Vec::new();
+            for chunk in toks.chunks(6) {
+                q_logits.push(
+                    m.prefill_chunk_quant(chunk, AttnMode::Native, &mut qkv, &mut stats)
+                        .unwrap(),
+                );
+            }
+            // Decode continuation: greedy on f32, seeded on paged.
+            let mut greedy = Vec::new();
+            let last = f32_logits.last().unwrap();
+            let rows = last.data.len() / m.cfg.vocab;
+            let mut tok = argmax(&last.data[(rows - 1) * m.cfg.vocab..]) as i32;
+            for _ in 0..3 {
+                let lg = m.decode_step(tok, &mut kv).unwrap();
+                tok = argmax(&lg) as i32;
+                greedy.push(tok);
+            }
+            let mut rng = crate::util::rng::Rng::new(17);
+            let mut sampled = Vec::new();
+            let mut tok = 5i32;
+            for _ in 0..3 {
+                let lg = m.decode_step_paged(tok, &mut qkv, &mut stats).unwrap();
+                tok = sample(&lg, &mut rng);
+                sampled.push(tok);
+            }
+            let planes = qkv.k[1][0].planes();
+            (f32_logits, q_logits, greedy, sampled, stats, planes.fp8_codes)
+        };
+        let (f1, q1, g1, t1, s1, p1) = run(1);
+        assert_eq!(f1.len(), 4, "expected 4 chunks");
+        for threads in [2usize, 4, 8] {
+            let (f, q, g, t, s, p) = run(threads);
+            assert_eq!(f, f1, "f32 chunk logits diverged at {threads} threads");
+            assert_eq!(q, q1, "quant chunk logits diverged at {threads} threads");
+            assert_eq!(g, g1, "greedy continuation diverged at {threads} threads");
+            assert_eq!(t, t1, "seeded continuation diverged at {threads} threads");
+            assert_eq!(s, s1, "page stats diverged at {threads} threads");
+            assert_eq!(p, p1, "cache planes diverged at {threads} threads");
         }
     }
 

@@ -61,10 +61,7 @@ impl DualQuantized {
                 let s = s4_lut[self.s4_codes[r * d / NVFP4_BLOCK + b] as usize] * sq;
                 let pb = &packed[b * (NVFP4_BLOCK / 2)..(b + 1) * (NVFP4_BLOCK / 2)];
                 let ob = &mut orow[b * NVFP4_BLOCK..(b + 1) * NVFP4_BLOCK];
-                for (o, &byte) in ob.chunks_exact_mut(2).zip(pb) {
-                    o[0] = lut4[(byte & 0x0F) as usize] * s;
-                    o[1] = lut4[(byte >> 4) as usize] * s;
-                }
+                crate::simd::nibble_lut_mul_scale(ob, pb, lut4, s);
             }
         }
     }
@@ -85,9 +82,7 @@ impl DualQuantized {
                 let s = s8_lut[self.s8_codes[r * d / MXFP_BLOCK + b] as usize] * sq;
                 let codes = &self.fp8_codes[r * d + b * MXFP_BLOCK..r * d + (b + 1) * MXFP_BLOCK];
                 let ob = &mut orow[b * MXFP_BLOCK..(b + 1) * MXFP_BLOCK];
-                for (o, &c) in ob.iter_mut().zip(codes) {
-                    *o = lut8[c as usize] * s;
-                }
+                crate::simd::lut_mul_scale(ob, codes, lut8, s);
             }
         }
     }

@@ -251,7 +251,7 @@ impl ModelBackend for HostBackend {
         // (a single-sequence batch gives the whole budget to the heads).
         let outer = self.threads.max(1).min(items.len().max(1));
         let inner = (self.threads.max(1) / outer).max(1);
-        crate::util::par::par_items(&mut items, outer, |w| {
+        crate::util::pool::par_items(&mut items, outer, |w| {
             let step = |w: &mut SeqWork<'_>| -> crate::Result<()> {
                 let logits = match &mut *w.slot {
                     SeqKv::F32(sl) => {
@@ -515,6 +515,38 @@ mod tests {
             assert_eq!(l, l1, "logits diverged at {threads} threads");
             assert_eq!(st, st1, "page stats diverged at {threads} threads");
         }
+    }
+
+    #[test]
+    fn engine_restart_does_not_leak_pool_workers() {
+        // Backends borrow the process-wide worker pool; creating and
+        // dropping an engine must not spawn a fresh set of threads per
+        // restart. After one warm-up decode (which may lazily grow the
+        // pool to the requested width), repeated restarts keep the
+        // worker count flat.
+        let cycle = || {
+            let mut be = HostBackend::for_tests()
+                .with_perf(4, crate::kvquant::DECODED_CACHE_BYTES);
+            let toks: Vec<i32> = (0..8).map(|i| ((i * 5) % 60) + 1).collect();
+            let mut s1 = be.prefill(&toks, false, None).unwrap().kv;
+            let mut s2 = be.prefill(&toks, false, None).unwrap().kv;
+            be.decode(&[3, 9], &mut [Some(&mut s1), Some(&mut s2)])
+                .unwrap();
+        };
+        cycle();
+        let after_first = crate::util::pool::worker_count();
+        for _ in 0..32 {
+            cycle();
+        }
+        // Other tests share the process-global pool and may grow it
+        // legitimately while this loop runs, so allow slack up to the
+        // widest fan-out any test requests — a per-restart leak (3 new
+        // workers x 32 cycles) would sail past it.
+        let after = crate::util::pool::worker_count();
+        assert!(
+            after <= after_first.max(63),
+            "pool grew across engine restarts: {after_first} -> {after}"
+        );
     }
 
     #[test]

@@ -1,0 +1,524 @@
+//! Vectorized inner kernels for the attention hot path, behind the
+//! `simd` cargo feature.
+//!
+//! Every function here has one canonical definition — the scalar code in
+//! [`scalar`] — and an optional `core::arch` implementation (SSE2 on
+//! x86_64, NEON on aarch64; both are baseline features of their targets,
+//! so there is no runtime dispatch). The public functions select the
+//! widest available implementation at compile time; any other
+//! arch/feature combination silently falls back to scalar, so the crate
+//! builds everywhere.
+//!
+//! **Bit-exactness contract.** The vector paths must produce the same
+//! f32 bits as the scalar paths on every input:
+//!
+//! * [`dot_blocked`] keeps the 4-chain reassociation explicit: vector
+//!   lane `i` accumulates exactly the scalar chain `acc[i]` (same
+//!   multiplies, same adds, same order), and the horizontal reduction is
+//!   the scalar `(l0 + l1) + (l2 + l3)` — never a tree the compiler
+//!   picks.
+//! * Everything else ([`scale_in_place`], [`axpy`], [`lut_mul_scale`],
+//!   [`nibble_lut_mul_scale`]) is elementwise: per element one IEEE
+//!   multiply (and one add), identically rounded in scalar and vector
+//!   form. FMA is never used — a fused multiply-add rounds once where
+//!   mul-then-add rounds twice, which would change bits.
+//!
+//! The unit tests here compare the dispatch against [`scalar`] on
+//! random shapes (including ragged tails); the cross-language goldens
+//! (`testdata/golden_mxfp.json`, `testdata/golden_kvquant.json`) cover
+//! the same paths end to end because [`crate::mxfp::fused`] and
+//! [`crate::attention`] route their inner loops through this module —
+//! CI runs the full test suite with the feature both off and on.
+
+/// Canonical scalar kernels — the bit-exactness reference. Public so
+/// tests and `benches/table12_decode_hotpath.rs` can time and compare
+/// the dispatch against them even when the `simd` feature is on.
+pub mod scalar {
+    /// Dot product blocked into four independent accumulator chains so
+    /// the adds pipeline instead of serializing on one dependency chain
+    /// (f32 reassociation is deterministic — the same blocking always
+    /// produces the same bits).
+    #[inline]
+    pub fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let n4 = n - n % 4;
+        let mut acc = [0f32; 4];
+        let mut i = 0;
+        while i < n4 {
+            acc[0] += a[i] * b[i];
+            acc[1] += a[i + 1] * b[i + 1];
+            acc[2] += a[i + 2] * b[i + 2];
+            acc[3] += a[i + 3] * b[i + 3];
+            i += 4;
+        }
+        let mut tail = 0f32;
+        for j in n4..n {
+            tail += a[j] * b[j];
+        }
+        (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+    }
+
+    /// `x[i] *= alpha` (OnlineSoftmax accumulator rescale).
+    #[inline]
+    pub fn scale_in_place(x: &mut [f32], alpha: f32) {
+        for v in x.iter_mut() {
+            *v *= alpha;
+        }
+    }
+
+    /// `acc[i] += p * v[i]` (OnlineSoftmax probability-weighted V row).
+    #[inline]
+    pub fn axpy(acc: &mut [f32], p: f32, v: &[f32]) {
+        debug_assert_eq!(acc.len(), v.len());
+        for (a, &vv) in acc.iter_mut().zip(v) {
+            *a += p * vv;
+        }
+    }
+
+    /// `out[i] = lut[codes[i]] * s` (MXFP8 E4M3 row decode, one block).
+    #[inline]
+    pub fn lut_mul_scale(out: &mut [f32], codes: &[u8], lut: &[f32; 256], s: f32) {
+        debug_assert_eq!(out.len(), codes.len());
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = lut[c as usize] * s;
+        }
+    }
+
+    /// Packed-nibble gather-decode: `out[2i] = lut[packed[i] & 0xF] * s`,
+    /// `out[2i+1] = lut[packed[i] >> 4] * s` (NVFP4 E2M1 row decode; the
+    /// pack convention is `mxfp::pack` — low nibble = even element).
+    #[inline]
+    pub fn nibble_lut_mul_scale(out: &mut [f32], packed: &[u8], lut: &[f32; 16], s: f32) {
+        debug_assert_eq!(out.len(), packed.len() * 2);
+        for (o, &byte) in out.chunks_exact_mut(2).zip(packed) {
+            o[0] = lut[(byte & 0x0F) as usize] * s;
+            o[1] = lut[(byte >> 4) as usize] * s;
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    //! SSE2 implementations (baseline on x86_64 — no runtime detection).
+    //! Mul and add stay separate instructions; see the module contract.
+    use core::arch::x86_64::*;
+
+    #[inline]
+    pub fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let n4 = n - n % 4;
+        let mut lanes = [0f32; 4];
+        // SAFETY: all loads/stores are within the n4-bounded prefix of
+        // the slices (unaligned ops, no alignment requirement).
+        unsafe {
+            let mut acc = _mm_setzero_ps();
+            let mut i = 0;
+            while i < n4 {
+                let av = _mm_loadu_ps(a.as_ptr().add(i));
+                let bv = _mm_loadu_ps(b.as_ptr().add(i));
+                acc = _mm_add_ps(acc, _mm_mul_ps(av, bv));
+                i += 4;
+            }
+            _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        }
+        let mut tail = 0f32;
+        for j in n4..n {
+            tail += a[j] * b[j];
+        }
+        (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + tail
+    }
+
+    #[inline]
+    pub fn scale_in_place(x: &mut [f32], alpha: f32) {
+        let n = x.len();
+        let n4 = n - n % 4;
+        // SAFETY: in-place unaligned load/store pairs within [0, n4).
+        unsafe {
+            let al = _mm_set1_ps(alpha);
+            let mut i = 0;
+            while i < n4 {
+                let p = x.as_mut_ptr().add(i);
+                _mm_storeu_ps(p, _mm_mul_ps(_mm_loadu_ps(p), al));
+                i += 4;
+            }
+        }
+        for v in &mut x[n4..] {
+            *v *= alpha;
+        }
+    }
+
+    #[inline]
+    pub fn axpy(acc: &mut [f32], p: f32, v: &[f32]) {
+        debug_assert_eq!(acc.len(), v.len());
+        let n = acc.len();
+        let n4 = n - n % 4;
+        // SAFETY: unaligned ops within the n4-bounded prefix; `acc` and
+        // `v` are distinct slices (&mut vs &).
+        unsafe {
+            let pv = _mm_set1_ps(p);
+            let mut i = 0;
+            while i < n4 {
+                let ap = acc.as_mut_ptr().add(i);
+                let vv = _mm_loadu_ps(v.as_ptr().add(i));
+                _mm_storeu_ps(ap, _mm_add_ps(_mm_loadu_ps(ap), _mm_mul_ps(pv, vv)));
+                i += 4;
+            }
+        }
+        for (a, &vv) in acc[n4..].iter_mut().zip(&v[n4..]) {
+            *a += p * vv;
+        }
+    }
+
+    #[inline]
+    pub fn lut_mul_scale(out: &mut [f32], codes: &[u8], lut: &[f32; 256], s: f32) {
+        debug_assert_eq!(out.len(), codes.len());
+        let n = out.len();
+        let n4 = n - n % 4;
+        // SAFETY: stores within [0, n4); gathers are safe indexing (SSE2
+        // has no gather — the vector win is the 4-wide scale multiply
+        // and single store).
+        unsafe {
+            let sv = _mm_set1_ps(s);
+            let mut i = 0;
+            while i < n4 {
+                let g = _mm_set_ps(
+                    lut[codes[i + 3] as usize],
+                    lut[codes[i + 2] as usize],
+                    lut[codes[i + 1] as usize],
+                    lut[codes[i] as usize],
+                );
+                _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_mul_ps(g, sv));
+                i += 4;
+            }
+        }
+        for (o, &c) in out[n4..].iter_mut().zip(&codes[n4..]) {
+            *o = lut[c as usize] * s;
+        }
+    }
+
+    #[inline]
+    pub fn nibble_lut_mul_scale(out: &mut [f32], packed: &[u8], lut: &[f32; 16], s: f32) {
+        debug_assert_eq!(out.len(), packed.len() * 2);
+        let nb = packed.len();
+        let nb2 = nb - nb % 2; // two packed bytes -> one 4-lane vector
+        // SAFETY: each store writes out[2b..2b+4] with 2b + 4 <= 2*nb2.
+        unsafe {
+            let sv = _mm_set1_ps(s);
+            let mut b = 0;
+            while b < nb2 {
+                let (b0, b1) = (packed[b], packed[b + 1]);
+                let g = _mm_set_ps(
+                    lut[(b1 >> 4) as usize],
+                    lut[(b1 & 0x0F) as usize],
+                    lut[(b0 >> 4) as usize],
+                    lut[(b0 & 0x0F) as usize],
+                );
+                _mm_storeu_ps(out.as_mut_ptr().add(2 * b), _mm_mul_ps(g, sv));
+                b += 2;
+            }
+        }
+        for (o, &byte) in out[2 * nb2..].chunks_exact_mut(2).zip(&packed[nb2..]) {
+            o[0] = lut[(byte & 0x0F) as usize] * s;
+            o[1] = lut[(byte >> 4) as usize] * s;
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    //! NEON implementations (baseline on aarch64). `vmulq`/`vaddq` only —
+    //! no `vfmaq`, which would fuse the rounding and change bits.
+    use core::arch::aarch64::*;
+
+    #[inline]
+    pub fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let n4 = n - n % 4;
+        let mut lanes = [0f32; 4];
+        // SAFETY: loads/stores within the n4-bounded prefix.
+        unsafe {
+            let mut acc = vdupq_n_f32(0.0);
+            let mut i = 0;
+            while i < n4 {
+                let av = vld1q_f32(a.as_ptr().add(i));
+                let bv = vld1q_f32(b.as_ptr().add(i));
+                acc = vaddq_f32(acc, vmulq_f32(av, bv));
+                i += 4;
+            }
+            vst1q_f32(lanes.as_mut_ptr(), acc);
+        }
+        let mut tail = 0f32;
+        for j in n4..n {
+            tail += a[j] * b[j];
+        }
+        (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + tail
+    }
+
+    #[inline]
+    pub fn scale_in_place(x: &mut [f32], alpha: f32) {
+        let n = x.len();
+        let n4 = n - n % 4;
+        // SAFETY: in-place load/store pairs within [0, n4).
+        unsafe {
+            let al = vdupq_n_f32(alpha);
+            let mut i = 0;
+            while i < n4 {
+                let p = x.as_mut_ptr().add(i);
+                vst1q_f32(p, vmulq_f32(vld1q_f32(p), al));
+                i += 4;
+            }
+        }
+        for v in &mut x[n4..] {
+            *v *= alpha;
+        }
+    }
+
+    #[inline]
+    pub fn axpy(acc: &mut [f32], p: f32, v: &[f32]) {
+        debug_assert_eq!(acc.len(), v.len());
+        let n = acc.len();
+        let n4 = n - n % 4;
+        // SAFETY: ops within the n4-bounded prefix; distinct slices.
+        unsafe {
+            let pv = vdupq_n_f32(p);
+            let mut i = 0;
+            while i < n4 {
+                let ap = acc.as_mut_ptr().add(i);
+                let vv = vld1q_f32(v.as_ptr().add(i));
+                vst1q_f32(ap, vaddq_f32(vld1q_f32(ap), vmulq_f32(pv, vv)));
+                i += 4;
+            }
+        }
+        for (a, &vv) in acc[n4..].iter_mut().zip(&v[n4..]) {
+            *a += p * vv;
+        }
+    }
+
+    #[inline]
+    pub fn lut_mul_scale(out: &mut [f32], codes: &[u8], lut: &[f32; 256], s: f32) {
+        debug_assert_eq!(out.len(), codes.len());
+        let n = out.len();
+        let n4 = n - n % 4;
+        // SAFETY: stores within [0, n4); gathers are safe indexing.
+        unsafe {
+            let sv = vdupq_n_f32(s);
+            let mut i = 0;
+            while i < n4 {
+                let g = [
+                    lut[codes[i] as usize],
+                    lut[codes[i + 1] as usize],
+                    lut[codes[i + 2] as usize],
+                    lut[codes[i + 3] as usize],
+                ];
+                let gv = vld1q_f32(g.as_ptr());
+                vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(gv, sv));
+                i += 4;
+            }
+        }
+        for (o, &c) in out[n4..].iter_mut().zip(&codes[n4..]) {
+            *o = lut[c as usize] * s;
+        }
+    }
+
+    #[inline]
+    pub fn nibble_lut_mul_scale(out: &mut [f32], packed: &[u8], lut: &[f32; 16], s: f32) {
+        debug_assert_eq!(out.len(), packed.len() * 2);
+        let nb = packed.len();
+        let nb2 = nb - nb % 2;
+        // SAFETY: each store writes out[2b..2b+4] with 2b + 4 <= 2*nb2.
+        unsafe {
+            let sv = vdupq_n_f32(s);
+            let mut b = 0;
+            while b < nb2 {
+                let (b0, b1) = (packed[b], packed[b + 1]);
+                let g = [
+                    lut[(b0 & 0x0F) as usize],
+                    lut[(b0 >> 4) as usize],
+                    lut[(b1 & 0x0F) as usize],
+                    lut[(b1 >> 4) as usize],
+                ];
+                let gv = vld1q_f32(g.as_ptr());
+                vst1q_f32(out.as_mut_ptr().add(2 * b), vmulq_f32(gv, sv));
+                b += 2;
+            }
+        }
+        for (o, &byte) in out[2 * nb2..].chunks_exact_mut(2).zip(&packed[nb2..]) {
+            o[0] = lut[(byte & 0x0F) as usize] * s;
+            o[1] = lut[(byte >> 4) as usize] * s;
+        }
+    }
+}
+
+// Compile-time dispatch: exactly one arm of each function body survives
+// cfg evaluation, so there is no runtime branch and no dead code.
+
+/// Blocked dot product (see [`scalar::dot_blocked`] for the canonical
+/// reassociation). Shared by every score kernel in [`crate::attention`].
+#[inline]
+pub fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        x86::dot_blocked(a, b)
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        neon::dot_blocked(a, b)
+    }
+    #[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        scalar::dot_blocked(a, b)
+    }
+}
+
+/// `x[i] *= alpha` (OnlineSoftmax accumulator rescale).
+#[inline]
+pub fn scale_in_place(x: &mut [f32], alpha: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        x86::scale_in_place(x, alpha)
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        neon::scale_in_place(x, alpha)
+    }
+    #[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        scalar::scale_in_place(x, alpha)
+    }
+}
+
+/// `acc[i] += p * v[i]` (OnlineSoftmax probability-weighted V row).
+#[inline]
+pub fn axpy(acc: &mut [f32], p: f32, v: &[f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        x86::axpy(acc, p, v)
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        neon::axpy(acc, p, v)
+    }
+    #[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        scalar::axpy(acc, p, v)
+    }
+}
+
+/// `out[i] = lut[codes[i]] * s` (MXFP8 E4M3 block decode).
+#[inline]
+pub fn lut_mul_scale(out: &mut [f32], codes: &[u8], lut: &[f32; 256], s: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        x86::lut_mul_scale(out, codes, lut, s)
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        neon::lut_mul_scale(out, codes, lut, s)
+    }
+    #[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        scalar::lut_mul_scale(out, codes, lut, s)
+    }
+}
+
+/// Packed-nibble gather-decode (NVFP4 E2M1 block decode).
+#[inline]
+pub fn nibble_lut_mul_scale(out: &mut [f32], packed: &[u8], lut: &[f32; 16], s: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        x86::nibble_lut_mul_scale(out, packed, lut, s)
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        neon::nibble_lut_mul_scale(out, packed, lut, s)
+    }
+    #[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        scalar::nibble_lut_mul_scale(out, packed, lut, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randf(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32 * 2.0).collect()
+    }
+
+    fn randb(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect()
+    }
+
+    // Ragged lengths exercise both the vector body and the scalar tail.
+    const LENS: [usize; 6] = [0, 3, 4, 31, 32, 61];
+
+    #[test]
+    fn dot_blocked_bit_matches_scalar() {
+        for (i, &n) in LENS.iter().enumerate() {
+            let a = randf(n, 100 + i as u64);
+            let b = randf(n, 200 + i as u64);
+            assert_eq!(
+                dot_blocked(&a, &b).to_bits(),
+                scalar::dot_blocked(&a, &b).to_bits(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_in_place_bit_matches_scalar() {
+        for (i, &n) in LENS.iter().enumerate() {
+            for alpha in [0.0f32, 1.0, 0.37, -2.5e-3] {
+                let mut x = randf(n, 300 + i as u64);
+                let mut y = x.clone();
+                scale_in_place(&mut x, alpha);
+                scalar::scale_in_place(&mut y, alpha);
+                assert_eq!(bits(&x), bits(&y), "n={n} alpha={alpha}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_bit_matches_scalar() {
+        for (i, &n) in LENS.iter().enumerate() {
+            let v = randf(n, 400 + i as u64);
+            let mut a = randf(n, 500 + i as u64);
+            let mut b = a.clone();
+            axpy(&mut a, 0.73, &v);
+            scalar::axpy(&mut b, 0.73, &v);
+            assert_eq!(bits(&a), bits(&b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn lut_decoders_bit_match_scalar() {
+        let lut8 = crate::mxfp::fp8::e4m3_table();
+        let lut4 = &crate::mxfp::e2m1::DECODE_LUT;
+        for (i, &n) in LENS.iter().enumerate() {
+            let codes = randb(n, 600 + i as u64);
+            let mut a = vec![0f32; n];
+            let mut b = vec![0f32; n];
+            lut_mul_scale(&mut a, &codes, lut8, 0.031);
+            scalar::lut_mul_scale(&mut b, &codes, lut8, 0.031);
+            assert_eq!(bits(&a), bits(&b), "lut8 n={n}");
+
+            let packed = randb(n, 700 + i as u64);
+            let mut a = vec![0f32; 2 * n];
+            let mut b = vec![0f32; 2 * n];
+            nibble_lut_mul_scale(&mut a, &packed, lut4, 1.7);
+            scalar::nibble_lut_mul_scale(&mut b, &packed, lut4, 1.7);
+            assert_eq!(bits(&a), bits(&b), "lut4 n={n}");
+        }
+    }
+
+    fn bits(x: &[f32]) -> Vec<u32> {
+        x.iter().map(|v| v.to_bits()).collect()
+    }
+}

@@ -636,6 +636,12 @@ pub fn render_prometheus(
         "Router event fan-in drain wall time",
         &t.fanin_us.snapshot(),
     );
+    render_histogram(
+        &mut out,
+        "dma_pool_wait_seconds",
+        "Worker-pool job enqueue-to-dequeue wall time",
+        &crate::util::pool::wait_histogram().snapshot(),
+    );
     let probe = t.probe();
     if probe.sample_every() > 0 {
         render_histogram(
@@ -1003,6 +1009,7 @@ mod tests {
             "dma_ttft_seconds_count 1",
             "dma_inter_token_seconds_bucket",
             "dma_decode_step_seconds_bucket",
+            "dma_pool_wait_seconds_bucket",
             "dma_requests_rejected_total{cause=\"blocks\"} 1",
             "dma_requests_completed_total 1",
             "dma_admission_deferred_total{cause=\"bytes\"} 0",

@@ -5,5 +5,6 @@ pub mod benchkit;
 pub mod cli;
 pub mod json;
 pub mod par;
+pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -8,6 +8,36 @@
 //! the determinism contract behind the engine's `--threads` flag.
 //! `threads <= 1` (or a single item) runs inline with zero spawn
 //! overhead, so the serial path is untouched.
+//!
+//! The hot paths have moved to the persistent [`crate::util::pool`]
+//! (same contract, no per-call spawns); this scoped version remains as
+//! the spawn-overhead baseline `benches/table12_decode_hotpath.rs`
+//! measures the pool against, and as the dependency-free fallback.
+
+/// Balanced partition of `len` items over `workers` chunks: the first
+/// `len % workers` chunks carry one extra item, so per-worker item
+/// counts never differ by more than 1. (The previous `div_ceil` split
+/// could idle trailing workers entirely — 5 items over 4 workers gave
+/// chunks of 2, 2, 1, 0.)
+pub fn balanced_chunk_sizes(len: usize, workers: usize) -> Vec<usize> {
+    let workers = workers.max(1).min(len.max(1));
+    let base = len / workers;
+    let extra = len % workers;
+    (0..workers).map(|i| base + usize::from(i < extra)).collect()
+}
+
+/// Split `items` into the chunks described by [`balanced_chunk_sizes`].
+pub(crate) fn balanced_chunks<T>(items: &mut [T], workers: usize) -> Vec<&mut [T]> {
+    let sizes = balanced_chunk_sizes(items.len(), workers);
+    let mut rest = items;
+    let mut out = Vec::with_capacity(sizes.len());
+    for sz in sizes {
+        let (head, tail) = rest.split_at_mut(sz);
+        out.push(head);
+        rest = tail;
+    }
+    out
+}
 
 /// Apply `f` to every item, fanning the slice across up to `threads`
 /// scoped workers. Items are processed exactly once; ordering across
@@ -28,9 +58,9 @@ pub fn par_items<T: Send, F: Fn(&mut T) + Sync>(items: &mut [T], threads: usize,
         }
         return;
     }
-    let per = items.len().div_ceil(threads);
+    let mut chunks = balanced_chunks(items, threads);
     std::thread::scope(|s| {
-        let mut chunks = items.chunks_mut(per);
+        let mut chunks = chunks.drain(..);
         let own = chunks.next();
         for chunk in chunks {
             s.spawn(|| {
@@ -62,6 +92,25 @@ mod tests {
                 assert_eq!(got, (i as u64 + 1) * 10, "threads {threads} item {i}");
             }
         }
+    }
+
+    #[test]
+    fn partitioning_is_balanced() {
+        // Per-worker item counts differ by at most 1 and every worker
+        // gets work (the old div_ceil split gave 5/4 -> [2, 2, 1, 0]).
+        for (len, workers) in
+            [(5usize, 4usize), (13, 4), (8, 8), (7, 3), (64, 7), (2, 8), (1, 4)]
+        {
+            let sizes = balanced_chunk_sizes(len, workers);
+            assert_eq!(sizes.iter().sum::<usize>(), len, "{len}/{workers}");
+            let (mn, mx) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            assert!(mx - mn <= 1, "{len}/{workers}: unbalanced {sizes:?}");
+            assert!(mn >= 1, "{len}/{workers}: idle worker in {sizes:?}");
+        }
+        assert_eq!(balanced_chunk_sizes(5, 4), vec![2, 1, 1, 1]);
     }
 
     #[test]

@@ -1,0 +1,349 @@
+//! Persistent worker pool for the decode/prefill hot paths.
+//!
+//! [`par_items`] offers the exact contract of
+//! [`crate::util::par::par_items`] — disjoint owned items, bit-identical
+//! results at any thread count, inline fallback for `threads <= 1` — but
+//! feeds a lazily-initialized process-global pool over a channel instead
+//! of paying `threads - 1` OS thread spawns per call. The scoped version
+//! spawns once per layer per token on the decode path; the pool spawns
+//! once per process and amortizes to a channel send plus a condvar wait.
+//!
+//! The pool grows on demand to the largest `threads - 1` any caller has
+//! requested and never shrinks; engine restarts in one process reuse the
+//! same workers ([`worker_count`] exposes the size for the no-leak
+//! test). Workers never unwind: each job runs under `catch_unwind`, and
+//! a panic in any chunk is re-raised on the submitting thread after all
+//! of the call's chunks have finished, so stack-borrowed work items are
+//! never touched past the submitter's frame.
+//!
+//! Queueing is observable: every job records enqueue-to-dequeue latency
+//! into [`wait_histogram`], exported as `dma_pool_wait_seconds` by
+//! [`crate::telemetry::render_prometheus`].
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::telemetry::Histogram;
+
+/// Enqueue-to-dequeue wall time of pool jobs, in integer microseconds.
+/// Zero-alloc to record (three relaxed atomic adds), so it stays on even
+/// in benches; the process-global pool means one process-global family.
+pub fn wait_histogram() -> &'static Histogram {
+    static H: OnceLock<Histogram> = OnceLock::new();
+    H.get_or_init(Histogram::new)
+}
+
+/// Number of live pool workers (0 until the first fan-out). The pool
+/// only grows when a call asks for more concurrency than any call
+/// before it; repeated fan-outs and engine restarts reuse workers.
+pub fn worker_count() -> usize {
+    pool().spawned.load(Ordering::Acquire)
+}
+
+/// Type-erased unit of work: a raw context pointer plus the monomorphic
+/// runner that knows its real type. The submitter keeps the context
+/// alive on its stack until the latch confirms every job has finished,
+/// which is what makes the erased pointer sound.
+struct Job {
+    data: *mut (),
+    run: unsafe fn(*mut ()),
+    submitted: Instant,
+}
+
+// SAFETY: `data` points into the submitting thread's stack frame, which
+// outlives the job (the submitter blocks on the latch before returning),
+// and the pointed-to context only exposes `Send` items and a `Sync`
+// closure to the runner.
+unsafe impl Send for Job {}
+
+/// Completion latch for one `par_items` call: counts outstanding jobs
+/// and carries the sticky panic flag back to the submitter.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(jobs: usize) -> Latch {
+        Latch {
+            remaining: Mutex::new(jobs),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    fn arrive(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        while *g > 0 {
+            g = self.done.wait(g).unwrap();
+        }
+    }
+}
+
+/// One chunk of a fan-out, in the form the erased runner reconstructs:
+/// raw slice parts, the shared closure, and the call's latch.
+struct ChunkCtx<T, F> {
+    ptr: *mut T,
+    len: usize,
+    f: *const F,
+    latch: *const Latch,
+}
+
+/// Monomorphic runner behind `Job::run`. Catches panics so the worker
+/// thread survives, then arrives at the latch unconditionally — the
+/// submitter must never deadlock on a panicked chunk.
+///
+/// SAFETY: caller (the worker loop) must pass a `data` obtained from
+/// `par_items`'s `ChunkCtx<T, F>` for these exact `T`, `F`, and only
+/// while the submitting call is still blocked on its latch.
+unsafe fn run_chunk<T, F: Fn(&mut T) + Sync>(data: *mut ()) {
+    let ctx = &*(data as *const ChunkCtx<T, F>);
+    let latch = &*ctx.latch;
+    let res = catch_unwind(AssertUnwindSafe(|| {
+        let items = std::slice::from_raw_parts_mut(ctx.ptr, ctx.len);
+        let f = &*ctx.f;
+        for it in items {
+            f(it);
+        }
+    }));
+    if res.is_err() {
+        latch.panicked.store(true, Ordering::Release);
+    }
+    latch.arrive();
+}
+
+struct Pool {
+    /// Guarded sender: `mpsc::Sender` is not `Sync` on older toolchains,
+    /// and a fan-out sends all its jobs in one short critical section.
+    tx: Mutex<Sender<Job>>,
+    /// Shared dequeue end; contention is fine because jobs are coarse
+    /// (a per-kv-head or per-sequence attention chunk, not a row).
+    rx: Arc<Mutex<Receiver<Job>>>,
+    spawned: AtomicUsize,
+    grow: Mutex<()>,
+}
+
+fn pool() -> &'static Pool {
+    static P: OnceLock<Pool> = OnceLock::new();
+    P.get_or_init(|| {
+        let (tx, rx) = channel::<Job>();
+        Pool {
+            tx: Mutex::new(tx),
+            rx: Arc::new(Mutex::new(rx)),
+            spawned: AtomicUsize::new(0),
+            grow: Mutex::new(()),
+        }
+    })
+}
+
+impl Pool {
+    fn ensure_workers(&self, n: usize) {
+        if self.spawned.load(Ordering::Acquire) >= n {
+            return;
+        }
+        let _g = self.grow.lock().unwrap();
+        let cur = self.spawned.load(Ordering::Acquire);
+        for _ in cur..n {
+            let rx = Arc::clone(&self.rx);
+            std::thread::Builder::new()
+                .name("dma-pool-worker".into())
+                .spawn(move || worker_loop(rx))
+                .expect("spawn pool worker");
+        }
+        if n > cur {
+            self.spawned.store(n, Ordering::Release);
+        }
+    }
+
+    fn submit(&self, jobs: impl Iterator<Item = Job>) {
+        let tx = self.tx.lock().unwrap();
+        for job in jobs {
+            tx.send(job).expect("pool receiver lives for the process");
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        let job = {
+            let g = match rx.lock() {
+                Ok(g) => g,
+                Err(_) => return,
+            };
+            g.recv()
+        };
+        let job = match job {
+            Ok(j) => j,
+            Err(_) => return,
+        };
+        wait_histogram().record_us(job.submitted.elapsed().as_micros() as u64);
+        // SAFETY: jobs come only from `par_items`, whose submitter is
+        // still blocked on the latch, so the context is alive and typed
+        // for this runner.
+        unsafe { (job.run)(job.data) };
+    }
+}
+
+/// Apply `f` to every item, fanning the slice across up to `threads`
+/// workers of the process-global pool. Same contract as
+/// [`crate::util::par::par_items`]: items are processed exactly once,
+/// partitioning is balanced and depends only on `items.len()` and
+/// `threads`, and each item owns its outputs — so results are
+/// bit-identical at any thread count. `threads <= 1` (or a single item)
+/// runs inline without touching the pool.
+///
+/// The calling thread works the first chunk itself while pool workers
+/// drain the rest; a panic in any chunk resumes on the calling thread
+/// after all chunks finish, and the workers survive for reuse.
+pub fn par_items<T: Send, F: Fn(&mut T) + Sync>(items: &mut [T], threads: usize, f: F) {
+    let threads = threads.max(1).min(items.len());
+    if threads <= 1 {
+        for it in items.iter_mut() {
+            f(it);
+        }
+        return;
+    }
+
+    let pool = pool();
+    pool.ensure_workers(threads - 1);
+
+    let latch = Latch::new(threads - 1);
+    let mut chunks = super::par::balanced_chunks(items, threads).into_iter();
+    let own = chunks.next().expect("threads >= 2 implies a first chunk");
+    // Contexts live on this frame; the latch wait below keeps them (and
+    // `f`, and the chunks' borrows) alive until every job is done.
+    let ctxs: Vec<ChunkCtx<T, F>> = chunks
+        .map(|c| ChunkCtx {
+            ptr: c.as_mut_ptr(),
+            len: c.len(),
+            f: &f,
+            latch: &latch,
+        })
+        .collect();
+    pool.submit(ctxs.iter().map(|ctx| Job {
+        data: ctx as *const ChunkCtx<T, F> as *mut (),
+        run: run_chunk::<T, F>,
+        submitted: Instant::now(),
+    }));
+
+    // Work the first chunk inline. Catch — don't propagate yet — so the
+    // latch wait always runs and workers never outlive the contexts.
+    let own_res = catch_unwind(AssertUnwindSafe(|| {
+        for it in own {
+            f(it);
+        }
+    }));
+    latch.wait();
+
+    if let Err(e) = own_res {
+        resume_unwind(e);
+    }
+    if latch.panicked.load(Ordering::Acquire) {
+        panic!("util::pool::par_items: a pooled chunk panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_items_processed_once_any_thread_count() {
+        for threads in [0usize, 1, 2, 3, 7, 64] {
+            let mut items: Vec<(usize, u64)> = (0..13).map(|i| (i, 0u64)).collect();
+            par_items(&mut items, threads, |it| {
+                it.1 += (it.0 as u64 + 1) * 10;
+            });
+            for (i, got) in items {
+                assert_eq!(got, (i as u64 + 1) * 10, "threads {threads} item {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_mut_slices_match_serial_bit_for_bit() {
+        let serial = {
+            let mut b = vec![0f32; 24];
+            for (i, chunk) in b.chunks_mut(6).enumerate() {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (i * 100 + j) as f32;
+                }
+            }
+            b
+        };
+        for threads in [1usize, 2, 4, 8] {
+            let mut buf = vec![0f32; 24];
+            let mut items: Vec<(usize, &mut [f32])> =
+                buf.chunks_mut(6).enumerate().collect();
+            par_items(&mut items, threads, |(i, chunk)| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (*i * 100 + j) as f32;
+                }
+            });
+            assert_eq!(buf, serial, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn empty_slice_is_a_noop() {
+        let mut items: Vec<u32> = Vec::new();
+        par_items(&mut items, 8, |_| panic!("no items to visit"));
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let mut items: Vec<u32> = (0..8).collect();
+        let hit = catch_unwind(AssertUnwindSafe(|| {
+            par_items(&mut items, 4, |it| {
+                if *it == 6 {
+                    panic!("boom in pooled chunk");
+                }
+            });
+        }));
+        assert!(hit.is_err(), "panic in a pooled chunk must propagate");
+        // The pool is still serviceable after a panicked round.
+        let mut items: Vec<u64> = vec![0; 9];
+        par_items(&mut items, 4, |it| *it += 1);
+        assert!(items.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn repeated_fanouts_do_not_leak_workers() {
+        let mut items = vec![0u64; 16];
+        par_items(&mut items, 4, |it| *it += 1); // warm to this test's size
+        let before = worker_count();
+        assert!(before >= 3, "pool should hold at least threads-1 workers");
+        for _ in 0..100 {
+            par_items(&mut items, 4, |it| *it += 1);
+        }
+        // Reuse, not respawn: growth is bounded by the largest request
+        // (other tests share the process-global pool), never per-call.
+        let after = worker_count();
+        assert!(
+            after <= before.max(63),
+            "pool grew per-call: {before} -> {after}"
+        );
+        assert_eq!(items.iter().sum::<u64>(), 16 * 101);
+    }
+
+    #[test]
+    fn wait_histogram_records_queue_time() {
+        let n0 = wait_histogram().snapshot().count;
+        let mut items = vec![0u64; 8];
+        par_items(&mut items, 4, |it| *it += 1);
+        // 3 jobs were queued; the submitter's inline chunk never queues.
+        assert!(wait_histogram().snapshot().count >= n0 + 3);
+    }
+}
