@@ -231,6 +231,18 @@ pub struct EngineConfig {
     /// explicitly; quantized formats get proportionally more admission
     /// blocks either way.
     pub kv_budget_bytes: usize,
+    /// Speculative decoding mode (`--spec off|prompt-lookup`): when
+    /// enabled, each decoding candidate drafts tokens from its own
+    /// prompt+output history, verifies the whole chain in one batched
+    /// multi-token decode pass, and rolls rejected positions back out of
+    /// the KV cache. Output distributions are exactly preserved (greedy
+    /// bit-replays the non-speculative stream) — see [`crate::spec`].
+    pub spec: crate::spec::SpecMode,
+    /// Max draft tokens verified per decode step (`--spec-k`). Higher
+    /// values amortize more per-step overhead on repetitive text but
+    /// waste verify work when drafts miss; 4 is a good default for
+    /// prompt-lookup drafting.
+    pub spec_k: usize,
     /// Layer-probe sampling cadence (`--metrics-sample-n`): every Nth
     /// decode step additionally times each layer's attention and KV
     /// quantize-on-append into the telemetry histograms. 0 (the
@@ -256,6 +268,8 @@ impl Default for EngineConfig {
             threads: 1,
             decoded_cache_bytes: crate::kvquant::DECODED_CACHE_BYTES,
             kv_budget_bytes: 0,
+            spec: crate::spec::SpecMode::Off,
+            spec_k: 4,
             metrics_sample_n: 0,
         }
     }
@@ -364,6 +378,8 @@ mod tests {
         assert_eq!(cfg.threads, 1);
         assert_eq!(cfg.decoded_cache_bytes, crate::kvquant::DECODED_CACHE_BYTES);
         assert_eq!(cfg.kv_budget_bytes, 0, "0 = derive from decode slots");
+        assert_eq!(cfg.spec, crate::spec::SpecMode::Off, "speculation off by default");
+        assert_eq!(cfg.spec_k, 4);
         assert_eq!(cfg.metrics_sample_n, 0, "layer probe off by default");
     }
 }

@@ -27,6 +27,12 @@
 //!    deterministic and batch-invariant.
 //! 4. Run up to `decode_slice` batched decode steps over every live
 //!    candidate of every decoding group, then loop back to (1)/(2).
+//!    With `--spec` on, each step instead drafts up to `--spec-k`
+//!    tokens per candidate ([`crate::spec`]), verifies the chain in one
+//!    batched multi-token decode, emits the accepted prefix plus the
+//!    sampled correction, and truncates rejected positions back out of
+//!    the KV cache — the emitted stream is bit-identical to sequential
+//!    decode at every temperature.
 //! 5. A candidate retires on EOS, a stop token, its token budget, cache
 //!    capacity, or [`Engine::cancel_candidate`] — releasing its own
 //!    frontier budget while the group's shared prompt pages stay. The
@@ -56,6 +62,7 @@ use crate::config::EngineConfig;
 use crate::kvcache::{BlockPool, SeqId, SeqKv};
 use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv, PAGE_TOKENS};
 use crate::runtime::{ModelBackend, PrefillSeq};
+use crate::spec::{PromptLookupProposer, Proposer, SpecMode};
 use crate::telemetry::Telemetry;
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -196,6 +203,17 @@ pub struct EngineStats {
     pub decode_tokens: u64,
     pub decode_steps: u64,
     pub decode_batch_sum: u64,
+    /// Speculative verification rounds run (one per live candidate per
+    /// decode step while `--spec` is on; 0 forever when it is off).
+    pub spec_rounds: u64,
+    /// Draft tokens proposed across all rounds.
+    pub spec_proposed: u64,
+    /// Draft tokens verified and emitted verbatim.
+    pub spec_accepted: u64,
+    /// Draft positions decoded into the KV cache and then truncated
+    /// back out after a mismatch (`spec_proposed - spec_accepted` minus
+    /// drafts cut short by a finish).
+    pub spec_rolled_back: u64,
     /// Admission accounting cost of one cached token in bytes at the
     /// configured `kv_format` (all layers/heads, K + V).
     pub kv_bytes_per_token: u64,
@@ -225,6 +243,17 @@ impl EngineStats {
             0.0
         } else {
             self.prefill_chunks as f64 / self.engine_steps as f64
+        }
+    }
+
+    /// Mean tokens emitted per speculative round — the speedup knob
+    /// speculation turns: sequential decode emits exactly 1 per step,
+    /// so anything above 1.0 is batching the verifier bought.
+    pub fn mean_spec_tokens_per_round(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / self.spec_rounds as f64
         }
     }
 
@@ -629,7 +658,12 @@ impl Engine {
         cand: usize,
     ) -> crate::Result<Option<EngineEvent>> {
         if let Some(pos) = self.queue.iter().position(|t| t.req.id == id) {
-            return match Self::note_pre_cancel(&mut self.stats, &mut self.queue[pos], cand) {
+            return match Self::note_pre_cancel(
+                &mut self.stats,
+                &self.telemetry,
+                &mut self.queue[pos],
+                cand,
+            ) {
                 Some(true) => self.cancel(id), // every candidate marked
                 _ => Ok(None),
             };
@@ -646,8 +680,13 @@ impl Engine {
             SlotState::Prefilling(_)
         );
         if is_prefilling {
-            let tracked = &mut self.active[idx].as_mut().unwrap().tracked;
-            return match Self::note_pre_cancel(&mut self.stats, tracked, cand) {
+            let act = self.active[idx].as_mut().unwrap();
+            return match Self::note_pre_cancel(
+                &mut self.stats,
+                &self.telemetry,
+                &mut act.tracked,
+                cand,
+            ) {
                 Some(true) => self.cancel(id), // every candidate marked
                 _ => Ok(None),
             };
@@ -661,6 +700,9 @@ impl Engine {
                 c.kv = None;
                 self.pool.release(c.pool_id)?;
                 self.stats.cancelled_candidates += 1;
+                if let Some(t) = &self.telemetry {
+                    t.candidates_cancelled.inc();
+                }
                 hit = true;
             }
         }
@@ -708,6 +750,7 @@ impl Engine {
     /// a slot alongside the stats.
     fn note_pre_cancel(
         stats: &mut EngineStats,
+        telemetry: &Option<Arc<Telemetry>>,
         t: &mut Tracked,
         cand: usize,
     ) -> Option<bool> {
@@ -718,6 +761,9 @@ impl Engine {
         if !t.pre_cancelled.contains(&cand) {
             t.pre_cancelled.push(cand);
             stats.cancelled_candidates += 1;
+            if let Some(tm) = telemetry {
+                tm.candidates_cancelled.inc();
+            }
         }
         Some(t.pre_cancelled.len() >= group)
     }
@@ -1168,7 +1214,131 @@ impl Engine {
             .iter()
             .map(|&i| self.active[i].take().unwrap())
             .collect();
+        if self.cfg.spec.enabled() && self.cfg.spec_k > 0 {
+            self.spec_decode_round(&mut taken, out, t0)?;
+        } else {
+            self.sequential_decode_round(&mut taken, out, t0)?;
+        }
+        // Retire finished candidates and groups, return the rest.
+        let cache_len = self.backend.cache_len();
+        let mut done = 0;
+        for (k, mut act) in taken.into_iter().enumerate() {
+            {
+                let Active { tracked, state, prompt_pool_id, shared_tokens, .. } = &mut act;
+                let SlotState::Decoding(cands) = state else { unreachable!() };
+                for c in cands.iter_mut().filter(|c| c.finish.is_none()) {
+                    let last = *c.output.last().unwrap();
+                    let cache_full = c.kv.as_ref().unwrap().pos() >= cache_len;
+                    let reason = self
+                        .finish_after_token(&tracked.req, c.output.len(), last)
+                        .or(if cache_full { Some(FinishReason::CacheFull) } else { None });
+                    if let Some(r) = reason {
+                        // Candidate retires: donate its decode-grown
+                        // full pages to the prefix cache, then drop its
+                        // COW frontier payload and return its budget to
+                        // the pool. The group's shared prompt pages stay
+                        // until the last sibling retires.
+                        self.donate_decode_pages(
+                            &tracked.req,
+                            *shared_tokens,
+                            *prompt_pool_id,
+                            c,
+                        );
+                        c.finish = Some(r);
+                        c.kv = None;
+                        self.pool.release(c.pool_id)?;
+                    }
+                }
+            }
+            let all_done = matches!(
+                &act.state,
+                SlotState::Decoding(cands) if cands.iter().all(|c| c.finish.is_some())
+            );
+            if all_done {
+                let Active { tracked, state, prompt_pool_id, shared_forks, .. } = act;
+                let SlotState::Decoding(cands) = state else { unreachable!() };
+                self.release_holdings(prompt_pool_id, &shared_forks)?;
+                self.stats.completed += 1;
+                self.note_finish(tracked.req.id, false);
+                done += 1;
+                let n = tracked.req.sampling.num_return();
+                let mut finalists = rank_candidates(&cands);
+                finalists.truncate(n);
+                out.push(EngineEvent::Finished(
+                    tracked.respond(FinishReason::Length, finalists),
+                ));
+            } else {
+                self.active[idxs[k]] = Some(act);
+            }
+        }
+        Ok(done)
+    }
 
+    /// Donate a retiring candidate's decode-grown full pages to the
+    /// radix prefix cache (the prompt's pages were donated at the
+    /// prefill boundary). Each newly cached page's admission block is
+    /// forked out of whichever allocation covers it — the group's
+    /// prompt allocation for pages overlapping the prompt, the
+    /// candidate's own budget for pages grown during decode — so the
+    /// block stays reserved after the candidate releases. Only
+    /// chunk-aligned *full* pages are donated (the radix trie's unit),
+    /// which is what makes retention safe under speculative rollback: a
+    /// truncated frontier never reaches the cache, and full pages hold
+    /// exactly the sequential stream's rows.
+    fn donate_decode_pages(
+        &mut self,
+        req: &Request,
+        shared_tokens: usize,
+        prompt_pool_id: SeqId,
+        c: &Candidate,
+    ) {
+        let Some(radix) = self.radix.as_mut() else { return };
+        let Some(SeqKv::Quant(q)) = &c.kv else { return };
+        let l = req.tokens.len();
+        let shared_pages = shared_tokens / PAGE_TOKENS;
+        // Block map of the full token stream: pages strictly inside the
+        // prompt live in the shared forks (dedup-hit below) or the
+        // group's prompt allocation. Candidate 0 kept the original
+        // frontier, so the mixed prompt/output page (if any) is the
+        // prompt allocation's last block and its own budget starts at
+        // the next page boundary; siblings COW-copied the partial tail
+        // page, so their budgets start at the last whole-prompt-page
+        // boundary.
+        let prompt_pages = l.div_ceil(PAGE_TOKENS);
+        let cand_base = if c.idx == 0 { prompt_pages } else { l / PAGE_TOKENS };
+        let stream: Vec<i32> =
+            req.tokens.iter().chain(c.output.iter()).copied().collect();
+        let pool = &mut self.pool;
+        let next_internal = &mut self.next_internal;
+        radix.insert(&stream, req.dma, q, |j| {
+            if j < shared_pages {
+                // An upstream shared page was evicted mid-flight: none
+                // of this group's blocks cover it, so the walk stops.
+                return None;
+            }
+            let id = *next_internal;
+            let forked = if j >= cand_base {
+                pool.fork_block(c.pool_id, id, j - cand_base)
+            } else {
+                pool.fork_block(prompt_pool_id, id, j - shared_pages)
+            };
+            match forked {
+                Ok(()) => {
+                    *next_internal += 1;
+                    Some(id)
+                }
+                Err(_) => None,
+            }
+        });
+    }
+
+    /// The plain decode round: one token per live candidate per step.
+    fn sequential_decode_round(
+        &mut self,
+        taken: &mut [Active],
+        out: &mut Vec<EngineEvent>,
+        t0: Instant,
+    ) -> crate::Result<()> {
         // One decode row per live candidate across every taken group
         // (the backend's per-sequence fan-out sees them as independent
         // sequences; sibling candidates share decoded-page caches).
@@ -1249,52 +1419,186 @@ impl Engine {
                 );
             }
         }
-        // Retire finished candidates and groups, return the rest.
+        Ok(())
+    }
+
+    /// One speculative decode round over every live candidate: draft up
+    /// to `spec_k` tokens per candidate, verify every chain in a single
+    /// batched multi-token decode, emit the verified prefix plus the
+    /// token the verifier sampled at the first divergence (or the bonus
+    /// token after a fully accepted chain), and truncate the rejected
+    /// tail back out of the KV cache so cache state matches sequential
+    /// decode bit for bit.
+    fn spec_decode_round(
+        &mut self,
+        taken: &mut [Active],
+        out: &mut Vec<EngineEvent>,
+        t0: Instant,
+    ) -> crate::Result<()> {
         let cache_len = self.backend.cache_len();
-        let mut done = 0;
-        for (k, mut act) in taken.into_iter().enumerate() {
-            {
-                let Active { tracked, state, .. } = &mut act;
-                let SlotState::Decoding(cands) = state else { unreachable!() };
-                for c in cands.iter_mut().filter(|c| c.finish.is_none()) {
-                    let last = *c.output.last().unwrap();
-                    let cache_full = c.kv.as_ref().unwrap().pos() >= cache_len;
-                    let reason = self
-                        .finish_after_token(&tracked.req, c.output.len(), last)
-                        .or(if cache_full { Some(FinishReason::CacheFull) } else { None });
-                    if let Some(r) = reason {
-                        // Candidate retires: its COW frontier payload
-                        // drops here; its budget returns to the pool.
-                        // The group's shared prompt pages stay until the
-                        // last sibling retires.
-                        c.finish = Some(r);
-                        c.kv = None;
-                        self.pool.release(c.pool_id)?;
-                    }
+        let mut proposer = match self.cfg.spec {
+            SpecMode::PromptLookup => PromptLookupProposer::default(),
+            SpecMode::Off => unreachable!("spec round only runs when --spec is on"),
+        };
+        // Build one chain per live candidate: position 0 is the token
+        // sequential decode would feed this step; the rest are drafts
+        // from the candidate's own prompt+output history. The chain is
+        // capped so the candidate can neither outrun its
+        // admission-reserved budget (`max_new`) nor the model's
+        // positional range — the pool is never touched mid-round, and
+        // rollback below only ever *shrinks* cache occupancy.
+        let mut chains: Vec<Vec<i32>> = Vec::new();
+        for act in taken.iter_mut() {
+            let SlotState::Decoding(cands) = &mut act.state else {
+                unreachable!("taken slots are decoding by construction")
+            };
+            let req = &act.tracked.req;
+            let max_new = req.max_new_tokens.min(self.cfg.max_new_tokens);
+            for c in cands.iter_mut().filter(|c| c.finish.is_none()) {
+                let pos0 = c.kv.as_ref().unwrap().pos();
+                let budget = max_new
+                    .saturating_sub(c.output.len())
+                    .min(cache_len.saturating_sub(pos0));
+                let mut chain = vec![c.next_token];
+                if budget > 1 {
+                    let history: Vec<i32> =
+                        req.tokens.iter().chain(c.output.iter()).copied().collect();
+                    chain.extend(proposer.propose(&history, self.cfg.spec_k.min(budget - 1)));
                 }
-            }
-            let all_done = matches!(
-                &act.state,
-                SlotState::Decoding(cands) if cands.iter().all(|c| c.finish.is_some())
-            );
-            if all_done {
-                let Active { tracked, state, prompt_pool_id, shared_forks, .. } = act;
-                let SlotState::Decoding(cands) = state else { unreachable!() };
-                self.release_holdings(prompt_pool_id, &shared_forks)?;
-                self.stats.completed += 1;
-                self.note_finish(tracked.req.id, false);
-                done += 1;
-                let n = tracked.req.sampling.num_return();
-                let mut finalists = rank_candidates(&cands);
-                finalists.truncate(n);
-                out.push(EngineEvent::Finished(
-                    tracked.respond(FinishReason::Length, finalists),
-                ));
-            } else {
-                self.active[idxs[k]] = Some(act);
+                chains.push(chain);
             }
         }
-        Ok(done)
+
+        // Verify: one batched multi-token decode over every chain.
+        let rows = {
+            let mut slot_refs: Vec<Option<&mut SeqKv>> = Vec::new();
+            for act in taken.iter_mut() {
+                let SlotState::Decoding(cands) = &mut act.state else { unreachable!() };
+                for c in cands.iter_mut().filter(|c| c.finish.is_none()) {
+                    slot_refs.push(c.kv.as_mut());
+                }
+            }
+            self.backend.decode_multi(&chains, &mut slot_refs)?
+        };
+        let vocab = self.backend.vocab();
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        let batch_n = chains.len();
+        let total_rows: usize = chains.iter().map(Vec::len).sum();
+        self.stats.decode_steps += 1;
+        self.stats.decode_batch_sum += batch_n as u64;
+        // Every decoded row shares the step's wall time equally —
+        // including rows that end up rolled back; their cost is real.
+        let share = dt / total_rows.max(1) as f64;
+        let mut bi = 0usize;
+        let mut emitted_total = 0u64;
+        for act in taken.iter_mut() {
+            let Active { tracked, state, .. } = act;
+            let SlotState::Decoding(cands) = state else { unreachable!() };
+            let id = tracked.req.id;
+            let group_start = bi;
+            let track_lp =
+                tracked.req.sampling.logprobs || tracked.req.sampling.group_size() > 1;
+            let mut group_emitted = 0usize;
+            for c in cands.iter_mut().filter(|c| c.finish.is_none()) {
+                let chain = &chains[bi];
+                let logits = &rows[bi];
+                bi += 1;
+                let m = chain.len();
+                debug_assert_eq!(logits.len(), m * vocab);
+                let pos0 = c.kv.as_ref().unwrap().pos() - m;
+                // Sample-and-match walk (see [`crate::spec`]): draw row
+                // `j` with the candidate's own sampler — the draw IS the
+                // emitted token. A draw matching draft `j + 1` validates
+                // row `j + 1`'s logits (they were conditioned on exactly
+                // that draft being fed), so the walk continues; any
+                // mismatch — or a finish — stops it before another draw,
+                // keeping the RNG stream in lockstep with sequential
+                // decode. Draws land on a scratch checkpoint committed
+                // after the walk, so draws taken == tokens emitted by
+                // construction.
+                let mut scratch = c.sampler.checkpoint();
+                let mut emitted = 0usize;
+                let mut accepted = 0usize;
+                for j in 0..m {
+                    let row = &logits[j * vocab..(j + 1) * vocab];
+                    let (tok, lp) = if track_lp {
+                        scratch.sample_with_logprob(row)
+                    } else {
+                        (scratch.sample(row), 0.0)
+                    };
+                    tracked.decode_ms += share;
+                    out.push(c.push_token(id, tok, lp, share));
+                    emitted += 1;
+                    let matched = j + 1 < m && tok == chain[j + 1];
+                    if matched {
+                        accepted += 1;
+                    }
+                    if self
+                        .finish_after_token(&tracked.req, c.output.len(), tok)
+                        .is_some()
+                    {
+                        // Sequential decode never samples past a finish;
+                        // an extra draw here would desync the stream.
+                        break;
+                    }
+                    if !matched {
+                        break;
+                    }
+                }
+                c.sampler.restore(scratch);
+                let proposed = m - 1;
+                let rolled_back = m - emitted;
+                if rolled_back > 0 {
+                    // Pop the rejected positions back out of the cache:
+                    // sequential decode at this point holds exactly
+                    // `pos0 + emitted` rows (the new `next_token` is not
+                    // cached yet). Arc-shared full pages are never
+                    // mutated — eviction demotes via copy-on-write.
+                    c.kv.as_mut().unwrap().truncate(pos0 + emitted);
+                }
+                self.stats.spec_rounds += 1;
+                self.stats.spec_proposed += proposed as u64;
+                self.stats.spec_accepted += accepted as u64;
+                self.stats.spec_rolled_back += rolled_back as u64;
+                self.stats.decode_tokens += emitted as u64;
+                group_emitted += emitted;
+                emitted_total += emitted as u64;
+                if let Some(t) = &self.telemetry {
+                    t.spec_proposed_tokens.add(proposed as u64);
+                    t.spec_accepted_tokens.add(accepted as u64);
+                    t.spec_rolled_back_tokens.add(rolled_back as u64);
+                    t.spec_tokens_per_round.record_us(emitted as u64);
+                }
+            }
+            if let Some(tr) = self.telemetry.as_ref().and_then(|t| t.trace()) {
+                let dur = (dt * 1e3) as u64;
+                tr.span(
+                    "decode_step",
+                    self.worker_idx,
+                    id,
+                    tr.now_us().saturating_sub(dur),
+                    dur,
+                    &[
+                        ("batch", batch_n as f64),
+                        ("candidates", (bi - group_start) as f64),
+                        ("emitted", group_emitted as f64),
+                    ],
+                );
+            }
+        }
+        if let Some(t) = &self.telemetry {
+            t.decode_step_us.record_ms(dt);
+            t.decode_tokens.add(emitted_total);
+            t.tokens_10s.add(t.now_sec(), emitted_total);
+            // Every emitted token shares the step's wall time equally
+            // (rolled-back rows inflate each share — the honest
+            // inter-token latency speculation actually delivered).
+            let share_us = (dt * 1e3 / emitted_total.max(1) as f64) as u64;
+            for _ in 0..emitted_total {
+                t.inter_token_us.record_us(share_us);
+            }
+        }
+        Ok(())
     }
 
     /// Sample peak resident cache bytes, the live decoded-page-cache
@@ -1443,6 +1747,8 @@ pub struct EngineHandle {
     shared: Arc<WorkerShared>,
     kv_format: &'static str,
     kv_policy: String,
+    spec_mode: &'static str,
+    spec_k: usize,
 }
 
 impl EngineHandle {
@@ -1482,6 +1788,8 @@ impl EngineHandle {
     {
         let kv_format = cfg.kv_format.name();
         let kv_policy = KvPolicy::format_layers(&cfg.kv_precision_policies);
+        let spec_mode = cfg.spec.name();
+        let spec_k = cfg.spec_k;
         let (tx, rx_msg) = mpsc::channel::<Msg>();
         let (tx_ev, rx) = mpsc::channel::<EngineEvent>();
         let shared = Arc::new(WorkerShared::default());
@@ -1592,6 +1900,8 @@ impl EngineHandle {
             shared,
             kv_format,
             kv_policy,
+            spec_mode,
+            spec_k,
         }
     }
 
@@ -1632,6 +1942,18 @@ impl EngineHandle {
     /// (`SINK/DIAG` or per-layer `l0:...;l1:...`).
     pub fn kv_policy(&self) -> &str {
         &self.kv_policy
+    }
+
+    /// Speculative-decoding mode this worker was configured with
+    /// (`off` | `prompt-lookup`).
+    pub fn spec_mode(&self) -> &'static str {
+        self.spec_mode
+    }
+
+    /// Draft tokens per speculative round this worker was configured
+    /// with (meaningful only when [`Self::spec_mode`] is not `off`).
+    pub fn spec_k(&self) -> usize {
+        self.spec_k
     }
 
     /// Prompt tokens this worker served from its prefix cache so far.
@@ -2102,6 +2424,115 @@ mod tests {
             let threaded = run(4);
             assert_eq!(serial, threaded, "{format:?} token streams diverged");
         }
+    }
+
+    #[test]
+    fn speculation_preserves_token_streams() {
+        // --spec prompt-lookup must be invisible in the outputs: greedy
+        // and seeded-sampled streams are bit-identical to the
+        // non-speculative engine across kv formats and thread counts,
+        // and rollback leaves the pool's byte accounting clean.
+        for format in [KvFormat::F32, KvFormat::Dual] {
+            for threads in [1usize, 4] {
+                let run = |spec: SpecMode| {
+                    let cfg = EngineConfig {
+                        max_new_tokens: 16,
+                        kv_format: format,
+                        kv_precision_policies: vec![crate::kvquant::KvPolicy {
+                            sink: 16,
+                            diag: 16,
+                        }],
+                        threads,
+                        spec,
+                        spec_k: 4,
+                        ..Default::default()
+                    };
+                    let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+                    for i in 0..5u64 {
+                        let mut r = if i == 0 {
+                            // Periodic prompt the prompt-lookup proposer
+                            // can mine for accepted drafts.
+                            Request {
+                                id: 0,
+                                tokens: (0..24).map(|j| ((j % 4) + 7) as i32).collect(),
+                                max_new_tokens: 12,
+                                ..Default::default()
+                            }
+                        } else {
+                            req(i, 4 + i as usize * 3, 12)
+                        };
+                        r.sampling.ignore_eos = i != 2;
+                        if i == 3 {
+                            r.sampling.temperature = 0.8;
+                            r.sampling.seed = 7;
+                        }
+                        assert!(e.submit(r).is_none());
+                    }
+                    let mut resps = e.run_until_idle().unwrap();
+                    resps.sort_by_key(|r| r.id);
+                    e.pool_check().unwrap();
+                    assert_eq!(e.kv_bytes_in_use(), 0, "{format:?} leaked kv bytes");
+                    let outs: Vec<Vec<i32>> =
+                        resps.into_iter().map(|r| r.output).collect();
+                    (outs, e.stats.clone())
+                };
+                let (base, base_stats) = run(SpecMode::Off);
+                let (spec, spec_stats) = run(SpecMode::PromptLookup);
+                assert_eq!(
+                    base, spec,
+                    "{format:?} threads={threads}: speculation changed a stream"
+                );
+                assert_eq!(base_stats.spec_rounds, 0);
+                assert_eq!(base_stats.spec_proposed, 0);
+                assert!(spec_stats.spec_rounds > 0, "{format:?} no spec rounds ran");
+                assert!(spec_stats.spec_proposed > 0, "{format:?} proposer never fired");
+                assert!(spec_stats.spec_accepted <= spec_stats.spec_proposed);
+                assert!(spec_stats.spec_rolled_back <= spec_stats.spec_proposed);
+                // Identical streams => identical emitted-token counts,
+                // and every spec round emits at least one token.
+                assert_eq!(base_stats.decode_tokens, spec_stats.decode_tokens);
+                assert!(spec_stats.decode_tokens >= spec_stats.spec_rounds);
+                assert!(spec_stats.mean_spec_tokens_per_round() >= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn radix_retains_decode_grown_pages() {
+        // Satellite: at retirement the engine donates *all* full pages of
+        // prompt ++ output to the radix cache, not just the prompt-time
+        // pages — so a follow-up prompt extending into the generated
+        // region shares across the prompt/output boundary.
+        let cfg = || EngineConfig {
+            max_new_tokens: 16,
+            kv_format: KvFormat::Dual,
+            prefill_chunk: 16,
+            prefix_cache: true,
+            kv_precision_policies: vec![crate::kvquant::KvPolicy { sink: 16, diag: 16 }],
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg(), 5);
+        let mut r1 = req(1, 24, 12);
+        r1.sampling.ignore_eos = true;
+        e.submit(r1);
+        let first = e.run_until_idle().unwrap().remove(0);
+        assert_eq!(first.output.len(), 12);
+        // 24 prompt + 12 output = 36 tokens -> 2 full pages retained; the
+        // second page (tokens 16..32) is decode-grown.
+        assert_eq!(e.prefix_cache_pages(), 2);
+        e.pool_check().unwrap();
+
+        // Follow-up prompt = old prompt ++ generated tokens: both pages
+        // hit, so 32 of 36 tokens are shared (> the 16 a prompt-only
+        // donation could give).
+        let mut tokens = req(1, 24, 12).tokens;
+        tokens.extend_from_slice(&first.output);
+        e.submit(Request { id: 2, tokens, max_new_tokens: 4, ..Default::default() });
+        let second = e.run_until_idle().unwrap();
+        assert_eq!(second[0].id, 2);
+        assert!(!second[0].output.is_empty());
+        assert_eq!(e.stats.prefix_hit_tokens, 32, "decode-grown page missed");
+        e.pool_check().unwrap();
     }
 
     #[test]

@@ -119,6 +119,17 @@ impl Router {
         self.workers[0].kv_policy()
     }
 
+    /// Speculative-decoding mode of the fleet (workers share one
+    /// config): `off` | `prompt-lookup`.
+    pub fn spec_mode(&self) -> &'static str {
+        self.workers[0].spec_mode()
+    }
+
+    /// Draft tokens per speculative round of the fleet.
+    pub fn spec_k(&self) -> usize {
+        self.workers[0].spec_k()
+    }
+
     /// Prompt tokens served from prefix caches across all workers.
     pub fn prefix_hit_tokens(&self) -> u64 {
         self.workers.iter().map(EngineHandle::prefix_hit_tokens).sum()

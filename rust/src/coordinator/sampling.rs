@@ -75,6 +75,20 @@ impl Sampler {
         self.temperature == 0.0
     }
 
+    /// Snapshot the sampler (RNG position included) for speculative
+    /// verification: the verifier draws from the checkpoint and commits
+    /// it back with [`Self::restore`] only for draws that were actually
+    /// emitted, so an abandoned round leaves the RNG stream exactly
+    /// where sequential decode would have it.
+    pub fn checkpoint(&self) -> Sampler {
+        self.clone()
+    }
+
+    /// Adopt a checkpoint's state (see [`Self::checkpoint`]).
+    pub fn restore(&mut self, ckpt: Sampler) {
+        *self = ckpt;
+    }
+
     /// Draw the next token and report its log-probability under the raw
     /// (temperature-free) model distribution. The draw consumes exactly
     /// the same RNG stream as [`Self::sample`], so enabling logprobs can
@@ -276,6 +290,34 @@ mod tests {
         let sa: Vec<i32> = (0..64).map(|_| a.sample(&logits)).collect();
         let sc: Vec<i32> = (0..64).map(|_| c.sample(&logits)).collect();
         assert_ne!(sa, sc);
+    }
+
+    #[test]
+    fn checkpoint_restore_replays_the_stream() {
+        let logits: Vec<f32> = (0..32).map(|i| ((i * 13) % 7) as f32 * 0.5).collect();
+        let mut s = Sampler::new(&params(0.9));
+        let _ = s.sample(&logits); // advance off the seed
+        // A checkpoint draws the same future as the original...
+        let mut ck = s.checkpoint();
+        let expect: Vec<i32> = (0..16).map(|_| ck.sample(&logits)).collect();
+        // ...speculative draws on a scratch clone never move `s`...
+        let mut scratch = s.checkpoint();
+        for _ in 0..7 {
+            let _ = scratch.sample(&logits);
+        }
+        let got: Vec<i32> = (0..16).map(|_| s.sample(&logits)).collect();
+        assert_eq!(got, expect, "abandoned speculative draws perturbed the stream");
+        // ...and restoring a committed scratch adopts its position.
+        let mut a = Sampler::new(&params(0.9));
+        let mut b = Sampler::new(&params(0.9));
+        let mut scratch = a.checkpoint();
+        let s3: Vec<i32> = (0..3).map(|_| scratch.sample(&logits)).collect();
+        a.restore(scratch);
+        let b3: Vec<i32> = (0..3).map(|_| b.sample(&logits)).collect();
+        assert_eq!(s3, b3);
+        for _ in 0..8 {
+            assert_eq!(a.sample(&logits), b.sample(&logits));
+        }
     }
 
     #[test]

@@ -121,6 +121,40 @@ pub fn score_batch(
     Ok(if total == 0 { 0.0 } else { correct as f64 / total as f64 })
 }
 
+/// Greedy continuation through a backend's serving path: prefill the
+/// prompt, then argmax-decode up to `max_new` tokens. This is the
+/// reference non-speculative greedy stream — the speculative bench
+/// ([`crate::spec`]) diffs its engine output against this loop, and it
+/// doubles as a harness entry point for qualitative continuation checks
+/// (feed it a [`gen_induction`] prefix and the model should extend the
+/// motif). Uses the f32 decode path; `dma` selects the attention flavor.
+pub fn greedy_continuation(
+    backend: &mut dyn ModelBackend,
+    prompt: &[i32],
+    max_new: usize,
+    dma: bool,
+) -> crate::Result<Vec<i32>> {
+    anyhow::ensure!(!prompt.is_empty(), "greedy_continuation: empty prompt");
+    let vocab = backend.vocab();
+    // Decode step i appends emitted token i to the cache; the final
+    // emitted token never enters it, hence the +1.
+    let cap = backend.cache_len().saturating_sub(prompt.len()) + 1;
+    let n = max_new.min(cap);
+    let pre = backend.prefill(prompt, dma, None)?;
+    let mut kv = pre.kv;
+    let mut next = crate::model::argmax(&pre.last_logits[..vocab]);
+    let mut out = Vec::with_capacity(n);
+    for step in 0..n {
+        out.push(next);
+        if step + 1 == n {
+            break;
+        }
+        let logits = backend.decode(&[next], &mut [Some(&mut kv)])?;
+        next = crate::model::argmax(&logits[..vocab]);
+    }
+    Ok(out)
+}
+
 /// A Table-3 row: task name + native/DMA scores.
 #[derive(Debug, Clone)]
 pub struct EvalRow {
@@ -202,6 +236,26 @@ mod tests {
             let e = generate(task, &mut rng, &tid, 96);
             assert!(e.tokens.iter().all(|&t| (0..64).contains(&t)), "{task}");
         }
+    }
+
+    #[test]
+    fn greedy_continuation_is_deterministic_and_bounded() {
+        let tid = ids();
+        let mut rng = Rng::new(9);
+        let e = gen_induction(&mut rng, &tid, 24);
+        let mut be = crate::runtime::host::HostBackend::for_tests();
+        let a = greedy_continuation(&mut be, &e.tokens, 8, false).unwrap();
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|&t| (0..tid.vocab).contains(&t)));
+        // Fresh backend, same weights: bit-identical stream.
+        let mut be2 = crate::runtime::host::HostBackend::for_tests();
+        assert_eq!(a, greedy_continuation(&mut be2, &e.tokens, 8, false).unwrap());
+        // DMA attention flavor runs end-to-end too.
+        assert_eq!(greedy_continuation(&mut be, &e.tokens, 4, true).unwrap().len(), 4);
+        // max_new is clamped to the cache budget (last token is never cached).
+        let cap = be.cache_len().saturating_sub(e.tokens.len()) + 1;
+        let long = greedy_continuation(&mut be, &e.tokens, 10_000, false).unwrap();
+        assert_eq!(long.len(), cap);
     }
 
     #[test]

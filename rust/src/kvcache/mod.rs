@@ -159,6 +159,33 @@ impl BlockPool {
         Ok(())
     }
 
+    /// Shrink a sequence to `tokens` tokens (speculative-decode KV
+    /// rollback), re-crediting whole blocks past the new boundary.
+    /// Popped blocks decrement their refcount and return to the free
+    /// list at zero — a block shared with a fork or a radix-cache entry
+    /// survives in the other holder, mirroring how the quantized store
+    /// drops only *its* `Arc` on shared pages.
+    pub fn truncate(&mut self, seq: SeqId, tokens: usize) -> crate::Result<()> {
+        let bt = self.block_tokens;
+        let entry = self
+            .seqs
+            .get_mut(&seq)
+            .ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        if tokens > entry.tokens {
+            bail!("truncate would grow seq {seq}: {tokens} > {}", entry.tokens);
+        }
+        let keep = tokens.div_ceil(bt);
+        while entry.blocks.len() > keep {
+            let b = entry.blocks.pop().unwrap();
+            self.refcount[b] -= 1;
+            if self.refcount[b] == 0 {
+                self.free.push(b);
+            }
+        }
+        entry.tokens = tokens;
+        Ok(())
+    }
+
     /// Fork a sequence sharing all current blocks (copy-on-write prefix
     /// reuse, e.g. beam candidates).
     pub fn fork(&mut self, parent: SeqId, child: SeqId) -> crate::Result<()> {
@@ -402,6 +429,23 @@ impl SeqKv {
         }
     }
 
+    /// Roll the cache back to `pos` tokens (speculative-decode rejection).
+    /// The f32 slot is position-addressed over a pre-allocated buffer, so
+    /// rollback is just the position: the decode path writes row `pos`
+    /// and attends rows `0..pos+1`, so stale bytes past the frontier are
+    /// unreachable and the replayed tokens overwrite them bit-exactly.
+    /// The quantized store pops rows/pages copy-on-write — see
+    /// [`crate::kvquant::QuantSlotKv::truncate_to`].
+    pub fn truncate(&mut self, pos: usize) {
+        match self {
+            SeqKv::F32(s) => {
+                assert!(pos <= s.pos, "truncate {pos} > pos {}", s.pos);
+                s.pos = pos;
+            }
+            SeqKv::Quant(q) => q.truncate_to(pos),
+        }
+    }
+
     /// Resident bytes of the decoded-page caches alone (0 for f32).
     /// Sibling candidates share caches, so a group must count this once,
     /// not per candidate — see the engine's admission sampling.
@@ -527,18 +571,48 @@ mod tests {
     }
 
     #[test]
+    fn truncate_recredits_whole_blocks() {
+        let mut p = BlockPool::with_byte_budget(8 * 16 * 100, 16, 100);
+        p.allocate(1, 44).unwrap(); // 3 blocks
+        assert_eq!(p.bytes_in_use(), 3 * 16 * 100);
+        // Within the last block: no blocks freed, token count drops.
+        p.truncate(1, 36).unwrap();
+        assert_eq!(p.free_blocks(), 5);
+        assert_eq!(p.seq_tokens(1), Some(36));
+        // Across a boundary: the trailing block is re-credited.
+        p.truncate(1, 30).unwrap();
+        assert_eq!(p.free_blocks(), 6);
+        assert_eq!(p.bytes_in_use(), 2 * 16 * 100);
+        p.check_invariants().unwrap();
+        // A block shared with a fork survives the parent's rollback.
+        p.fork(1, 2).unwrap();
+        p.truncate(1, 0).unwrap();
+        assert_eq!(p.free_blocks(), 6); // child still holds both blocks
+        assert_eq!(p.seq_tokens(2), Some(30));
+        p.check_invariants().unwrap();
+        // Growing via truncate is an error; unknown seq is an error.
+        assert!(p.truncate(1, 1).is_err());
+        assert!(p.truncate(9, 0).is_err());
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
     fn property_random_ops_keep_invariants() {
-        // Interleaves allocate / extend / fork / fork_block / release and
-        // asserts, beyond the structural invariants, that the byte
-        // accounting matches a from-scratch recount every step — fork
-        // carries real traffic now (radix prefix cache), so shared blocks
-        // must be counted exactly once however many sequences hold them.
+        // Interleaves allocate / extend / fork / fork_block / truncate /
+        // release and asserts, beyond the structural invariants, that the
+        // byte accounting matches a from-scratch recount every step —
+        // fork carries real traffic now (radix prefix cache), so shared
+        // blocks must be counted exactly once however many sequences hold
+        // them, and truncate (speculative rollback) must re-credit
+        // exactly the popped whole blocks.
         crate::util::prop::check("blockpool invariants", 25, |rng| {
             let mut p = BlockPool::with_byte_budget(32 * 8 * 64, 8, 64);
             let mut live: Vec<SeqId> = Vec::new();
             let mut next_id: SeqId = 0;
             for _ in 0..300 {
-                match rng.below(5) {
+                match rng.below(6) {
                     0 => {
                         let toks = rng.int_in(1, 40) as usize;
                         if p.can_admit(toks) {
@@ -573,6 +647,16 @@ mod tests {
                                 live.push(next_id);
                                 next_id += 1;
                             }
+                        }
+                    }
+                    4 => {
+                        // Speculative-rollback-style truncation.
+                        if !live.is_empty() {
+                            let i = rng.below(live.len() as u64) as usize;
+                            let id = live[i];
+                            let toks = p.seq_tokens(id).unwrap();
+                            let cut = rng.below(toks as u64 + 1) as usize;
+                            p.truncate(id, cut).map_err(|e| e.to_string())?;
                         }
                     }
                     _ => {

@@ -423,6 +423,52 @@ impl QuantPagedKv {
         }
     }
 
+    /// Truncate the store to `new_len` tokens, the KV-rollback primitive
+    /// under speculative decoding ([`crate::spec`]): rejected draft
+    /// positions are popped from the tail so the cache replays the state
+    /// it had before the drafts were appended (bit-exact — per-token
+    /// `S_q` means surviving rows' bits are untouched).
+    ///
+    /// Shared state is never mutated: whole rejected pages and a fully
+    /// rejected frontier are dropped by releasing *our* `Arc` (a forked
+    /// sibling or radix entry holding the page is unaffected), and a page
+    /// that must be demoted back to a partial frontier goes through
+    /// `Arc::make_mut`, which copies first if the page is still shared.
+    ///
+    /// `on_evict` runs for every full page about to be dropped or
+    /// demoted, *before* the demotion copy — the caller invalidates its
+    /// [`DecodedPageCache`] entries there, both to re-credit the decoded
+    /// bytes and to drop the cache's pin so an unshared page demotes in
+    /// place instead of copying.
+    pub fn truncate(&mut self, new_len: usize, mut on_evict: impl FnMut(&Arc<DualQuantized>)) {
+        let len = self.len();
+        assert!(new_len <= len, "truncate {new_len} > len {len}");
+        if new_len == len {
+            return;
+        }
+        let pt = self.page_tokens;
+        let keep_full = new_len / pt;
+        let tail_rows = new_len % pt;
+        if keep_full >= self.pages.len() {
+            // Target inside the current frontier: pop rows copy-on-write.
+            Arc::make_mut(&mut self.frontier).truncate_rows(new_len - self.pages.len() * pt);
+            return;
+        }
+        // The frontier is fully rejected: drop our reference.
+        self.frontier = Arc::new(DualQuantized::empty(self.d));
+        while self.pages.len() > keep_full + usize::from(tail_rows > 0) {
+            let p = self.pages.pop().unwrap();
+            on_evict(&p);
+        }
+        if tail_rows > 0 {
+            // Demote the boundary page back to a partial frontier.
+            let mut p = self.pages.pop().unwrap();
+            on_evict(&p);
+            Arc::make_mut(&mut p).truncate_rows(tail_rows);
+            self.frontier = p;
+        }
+    }
+
     /// Clamp a requested precision to the copies this format retains.
     pub fn effective(&self, p: Precision) -> Precision {
         match p {
@@ -603,6 +649,22 @@ impl DecodedPageCache {
         self.bytes + incoming <= self.budget
     }
 
+    /// Drop any cached tiles of `page` (both precisions), re-crediting
+    /// their bytes and releasing the entries' `Arc` pins. Called by
+    /// [`QuantSlotKv::truncate_to`] before a page is dropped or demoted
+    /// so the cache never serves a tile for rolled-back rows — the
+    /// demoted frontier is a *different* allocation after
+    /// `Arc::make_mut`, but the original page object would otherwise
+    /// stay pinned (and resident) until LRU aging found it.
+    pub fn invalidate_page(&mut self, page: &Arc<DualQuantized>) {
+        let ptr = Arc::as_ptr(page) as usize;
+        for prec in [Precision::High, Precision::Low] {
+            if let Some(e) = self.map.remove(&(ptr, prec)) {
+                self.bytes -= e.data.len() * 4;
+            }
+        }
+    }
+
     /// The decoded `[page.rows, d]` tile of `page` at `prec` — served
     /// from the cache when present (bit-identical to a fresh decode: the
     /// tile was produced by the same decoder from the same immutable
@@ -773,6 +835,29 @@ impl QuantSlotKv {
     pub fn append_token(&mut self, layer: usize, head: usize, krow: &[f32], vrow: &[f32]) {
         self.k[layer][head].append_rows(krow);
         self.v[layer][head].append_rows(vrow);
+    }
+
+    /// Roll the whole slot back to `pos` cached tokens, truncating every
+    /// (layer, head) K and V store and invalidating any decoded-page
+    /// tiles of pages that get dropped or demoted. Rolled-back bytes are
+    /// re-credited immediately (both the quantized payload via
+    /// [`Self::quantized_bytes`] and the decoded tiles via
+    /// [`Self::decoded_bytes`]). Shared full pages survive in their
+    /// other holders untouched — see [`QuantPagedKv::truncate`].
+    pub fn truncate_to(&mut self, pos: usize) {
+        assert!(pos <= self.pos, "truncate_to {pos} > pos {}", self.pos);
+        if pos == self.pos {
+            return;
+        }
+        for li in 0..self.k.len() {
+            for h in 0..self.k[li].len() {
+                let cache = &self.decoded[li][h];
+                let inval = |p: &Arc<DualQuantized>| cache.lock().unwrap().invalidate_page(p);
+                self.k[li][h].truncate(pos, inval);
+                self.v[li][h].truncate(pos, inval);
+            }
+        }
+        self.pos = pos;
     }
 
     /// Total resident bytes of the quantized payload (per-sequence view;
@@ -1246,5 +1331,179 @@ mod tests {
         assert_eq!(q.pos, 1);
         assert_eq!(q.k[0][1].len(), 1);
         assert_eq!(q.quantized_bytes(), 2 * 2 * KvFormat::Nvfp4.row_bytes(32));
+    }
+
+    #[test]
+    fn truncate_then_reappend_is_bit_identical() {
+        // The rollback contract: truncate(n) followed by re-appending the
+        // same rows reproduces the never-truncated store bit for bit, at
+        // every boundary case (inside frontier, exactly on a page edge,
+        // demoting a full page, down to zero).
+        let (d, pt) = (32usize, 8usize);
+        let x = rows(21, d, 40);
+        for cut in [20usize, 17, 16, 15, 8, 5, 0] {
+            let mut s = QuantPagedKv::new(d, KvFormat::Dual, pt);
+            s.append_rows(&x);
+            s.truncate(cut, |_| {});
+            assert_eq!(s.len(), cut, "cut {cut}");
+            assert_eq!(s.n_full_pages(), cut / pt, "cut {cut}");
+            s.append_rows(&x[cut * d..]);
+            let mut oracle = QuantPagedKv::new(d, KvFormat::Dual, pt);
+            oracle.append_rows(&x);
+            assert_eq!(s.planes().packed_fp4, oracle.planes().packed_fp4, "cut {cut}");
+            assert_eq!(s.planes().fp8_codes, oracle.planes().fp8_codes, "cut {cut}");
+            assert_eq!(s.planes().sq, oracle.planes().sq, "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn truncate_reports_dropped_and_demoted_pages() {
+        let (d, pt) = (32usize, 8usize);
+        let mut s = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        s.append_rows(&rows(27, d, 41)); // 3 full pages + 3-row frontier
+        let page_ptrs: Vec<usize> =
+            (0..3).map(|j| Arc::as_ptr(s.page_arc(j)) as usize).collect();
+        let mut evicted = Vec::new();
+        // 27 -> 13: frontier dropped (no callback — it was never
+        // cacheable), page 2 dropped, page 1 demoted to a 5-row frontier.
+        s.truncate(13, |p| evicted.push(Arc::as_ptr(p) as usize));
+        assert_eq!(evicted, vec![page_ptrs[2], page_ptrs[1]]);
+        assert_eq!(s.len(), 13);
+        assert_eq!(s.n_full_pages(), 1);
+        assert_eq!(s.frontier.rows, 5);
+        // Truncating within the frontier never touches full pages.
+        evicted.clear();
+        s.truncate(9, |p| evicted.push(Arc::as_ptr(p) as usize));
+        assert!(evicted.is_empty());
+        assert_eq!(s.len(), 9);
+    }
+
+    #[test]
+    fn fork_then_truncate_leaves_sibling_intact() {
+        let (d, pt) = (32usize, 8usize);
+        let x = rows(20, d, 42);
+        let mut parent = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        parent.append_rows(&x);
+        let child = parent.fork();
+        // Parent rolls back across a page boundary while the child still
+        // shares page 1 and the frontier: the demotion must copy
+        // (Arc::make_mut), never mutate the shared page.
+        let shared = child.page_arc(1).clone();
+        parent.truncate(11, |_| {});
+        assert_eq!(parent.len(), 11);
+        assert_eq!(shared.rows, pt, "shared page untouched");
+        assert_eq!(child.len(), 20);
+        let mut a = vec![0f32; 20 * d];
+        child.decode_rows(0, 20, Precision::High, &mut a);
+        let mut oracle = QuantPagedKv::new(d, KvFormat::Dual, pt);
+        oracle.append_rows(&x);
+        let mut b = vec![0f32; 20 * d];
+        oracle.decode_rows(0, 20, Precision::High, &mut b);
+        assert_eq!(a, b, "child bytes unchanged by parent rollback");
+        // And the parent's surviving prefix still matches the oracle.
+        let mut c = vec![0f32; 11 * d];
+        parent.decode_rows(0, 11, Precision::High, &mut c);
+        assert_eq!(c, b[..11 * d].to_vec());
+    }
+
+    #[test]
+    fn slot_truncate_invalidates_decoded_tiles_and_recredits_bytes() {
+        let cfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 8,
+            policies: vec![KvPolicy { sink: 8, diag: 8 }],
+        };
+        let mut q = QuantSlotKv::new(cfg, 1, 1, 32);
+        q.k[0][0].append_rows(&rows(20, 32, 50));
+        q.v[0][0].append_rows(&rows(20, 32, 51));
+        q.pos = 20;
+        // Warm the decoded cache on every full page of K and V.
+        let mut stats = crate::metrics::KvPageStats::default();
+        {
+            let mut c = q.decoded[0][0].lock().unwrap();
+            for j in 0..2 {
+                c.get_or_decode(q.k[0][0].page_arc(j), Precision::High, &mut stats);
+                c.get_or_decode(q.v[0][0].page_arc(j), Precision::High, &mut stats);
+            }
+        }
+        let warm = q.decoded_bytes();
+        assert_eq!(warm, 4 * 8 * 32 * 4, "4 full-page tiles resident");
+        // Roll back to 13 tokens: page 1 of K and V is demoted, so its
+        // tiles must be invalidated and their bytes re-credited.
+        q.truncate_to(13);
+        assert_eq!(q.pos, 13);
+        assert_eq!(q.k[0][0].len(), 13);
+        assert_eq!(q.v[0][0].len(), 13);
+        assert_eq!(q.decoded_bytes(), 2 * 8 * 32 * 4, "page-0 tiles survive");
+        assert_eq!(q.decoded[0][0].lock().unwrap().len(), 2);
+        // The cache no longer pins the demoted pages, so the demotion
+        // left page 0 shared and the rest reclaimed; decode still works.
+        let mut out = vec![0f32; 13 * 32];
+        q.k[0][0].decode_rows(0, 13, Precision::High, &mut out);
+    }
+
+    #[test]
+    fn property_append_fork_truncate_interleave() {
+        // Random interleavings of append / fork / truncate keep the
+        // store's geometry consistent and its surviving bytes equal to a
+        // shadow Vec<f32> replay quantized from scratch.
+        crate::util::prop::check("kvquant_append_fork_truncate", 40, |rng| {
+            let (d, pt) = (32usize, 8usize);
+            let mut s = QuantPagedKv::new(d, KvFormat::Dual, pt);
+            let mut shadow: Vec<f32> = Vec::new();
+            let mut forks: Vec<(QuantPagedKv, usize)> = Vec::new();
+            for _ in 0..30 {
+                match rng.next_u64() % 4 {
+                    0 | 1 => {
+                        let n = (rng.next_u64() % 11) as usize;
+                        let seed = rng.next_u64();
+                        let x = rows(n, d, seed);
+                        s.append_rows(&x);
+                        shadow.extend_from_slice(&x);
+                    }
+                    2 => {
+                        let len = s.len();
+                        let cut = (rng.next_u64() % (len as u64 + 1)) as usize;
+                        s.truncate(cut, |_| {});
+                        shadow.truncate(cut * d);
+                    }
+                    _ => {
+                        if forks.len() < 4 {
+                            forks.push((s.fork(), s.len()));
+                        } else {
+                            forks.remove((rng.next_u64() % 4) as usize);
+                        }
+                    }
+                }
+                // Geometry invariants after every op.
+                let len = s.len();
+                crate::prop_assert!(len * d == shadow.len(), "len {} shadow {}", len, shadow.len());
+                crate::prop_assert!(
+                    s.n_full_pages() == len / pt || s.n_full_pages() == len.div_ceil(pt),
+                    "full pages {} for len {}",
+                    s.n_full_pages(),
+                    len
+                );
+                crate::prop_assert!(
+                    s.quantized_bytes()
+                        >= s.n_full_pages() * pt * KvFormat::Dual.row_bytes(d),
+                    "byte recount below page floor"
+                );
+            }
+            // Surviving bytes equal a from-scratch quantization of the
+            // shadow (per-token S_q chunking invariance + exact row pop).
+            let mut oracle = QuantPagedKv::new(d, KvFormat::Dual, pt);
+            oracle.append_rows(&shadow);
+            if s.planes().sq != oracle.planes().sq
+                || s.planes().packed_fp4 != oracle.planes().packed_fp4
+            {
+                return Err("store diverged from shadow replay".into());
+            }
+            // Forks still decode their snapshot prefix correctly.
+            for (f, flen) in &forks {
+                crate::prop_assert!(f.len() == *flen, "fork len changed");
+            }
+            Ok(())
+        });
     }
 }

@@ -40,6 +40,7 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod server;
 pub mod simd;
+pub mod spec;
 pub mod telemetry;
 pub mod tensor;
 pub mod util;

@@ -25,6 +25,7 @@ fn usage() -> ! {
          [--kv-policy SINK/DIAG | l0:S/D;l1:S/D;...] \
          [--prefill-chunk TOKENS] [--prefix-cache] \
          [--threads N] [--decoded-cache-mb MB] [--kv-budget-mb MB] \
+         [--spec off|prompt-lookup] [--spec-k N] \
          [--writer-queue LINES] [--slow-reader-ms MS] \
          [--route round-robin|least-loaded|prefix-affinity] \
          [--trace-out FILE] [--metrics-sample-n N]"
@@ -97,6 +98,14 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
     // 0 = derive the pool budget from the decode slots (the default).
     let kv_budget_bytes = args.usize_or("kv-budget-mb", 0) << 20;
     let metrics_sample_n = args.usize_or("metrics-sample-n", 0);
+    let spec = match args.get("spec") {
+        Some(s) => dma::spec::SpecMode::parse(s)?,
+        None => dma::spec::SpecMode::Off,
+    };
+    let spec_k = args.usize_or("spec-k", 4);
+    if spec.enabled() && spec_k == 0 {
+        anyhow::bail!("--spec {} needs --spec-k >= 1", spec.name());
+    }
     let cfg = EngineConfig {
         artifact_dir: artifacts.clone().into(),
         max_new_tokens: args.usize_or("max-new-tokens", 32),
@@ -108,6 +117,8 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         decoded_cache_bytes,
         kv_budget_bytes,
         metrics_sample_n,
+        spec,
+        spec_k,
         ..Default::default()
     };
     let policy = match args.get_or("route", "least-loaded").as_str() {
@@ -158,7 +169,7 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
     println!(
         "dma: serving on {addr} ({} worker(s), route {}, kv cache {}, policy {}, \
          prefill chunk {}, prefix cache {}, threads {}, decoded cache {} MiB, \
-         writer queue {} lines / {} ms slow-reader timeout, trace {}, \
+         spec {}, writer queue {} lines / {} ms slow-reader timeout, trace {}, \
          layer probe {})",
         workers,
         policy.name(),
@@ -168,6 +179,11 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         if cfg.prefix_cache { "on" } else { "off" },
         cfg.threads,
         cfg.decoded_cache_bytes >> 20,
+        if cfg.spec.enabled() {
+            format!("{} k={}", cfg.spec.name(), cfg.spec_k)
+        } else {
+            "off".to_string()
+        },
         opts.writer_queue_lines,
         opts.slow_reader_timeout.as_millis(),
         trace_out.as_deref().unwrap_or("off"),

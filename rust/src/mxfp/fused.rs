@@ -117,6 +117,28 @@ impl DualQuantized {
         self.rows += other.rows;
     }
 
+    /// Drop all rows past `new_rows` from every resident plane (a plane
+    /// an earlier [`Self::append_rows`] skipped stays empty —
+    /// `Vec::truncate` past the end is a no-op). Because `S_q` is
+    /// per-token, popping rows is exact: the surviving rows' bits are
+    /// untouched, so truncating and re-appending the same tokens
+    /// reproduces the original store bit for bit. This is the primitive
+    /// under speculative-decode KV rollback ([`crate::kvquant`]).
+    pub fn truncate_rows(&mut self, new_rows: usize) {
+        assert!(
+            new_rows <= self.rows,
+            "truncate_rows {new_rows} > rows {}",
+            self.rows
+        );
+        let d = self.d;
+        self.packed_fp4.truncate(new_rows * d / 2);
+        self.s4_codes.truncate(new_rows * d / NVFP4_BLOCK);
+        self.fp8_codes.truncate(new_rows * d);
+        self.s8_codes.truncate(new_rows * d / MXFP_BLOCK);
+        self.sq.truncate(new_rows);
+        self.rows = new_rows;
+    }
+
     /// An empty store of width `d` ready for [`Self::append_rows`].
     pub fn empty(d: usize) -> DualQuantized {
         assert_eq!(d % MXFP_BLOCK, 0, "d={d} must be a multiple of 32");
@@ -382,6 +404,40 @@ mod tests {
         assert_eq!(acc.fp8_codes, bulk.fp8_codes);
         assert_eq!(acc.s8_codes, bulk.s8_codes);
         assert_eq!(acc.sq, bulk.sq);
+    }
+
+    #[test]
+    fn truncate_rows_is_exact_pop() {
+        // Truncating rows then re-appending the same tokens must equal
+        // never having appended-and-rolled-back at all, bit for bit —
+        // the invariant speculative-decode rollback rests on.
+        let (rows, d) = (13usize, 32usize);
+        let x = randn(rows, d, 14, 1.5);
+        let full = dual_quant(&x, rows, d, false, Granularity::PerToken);
+        let mut q = full.clone();
+        q.truncate_rows(9);
+        assert_eq!(q.rows, 9);
+        assert_eq!(q.packed_fp4, full.packed_fp4[..9 * d / 2].to_vec());
+        assert_eq!(q.sq, full.sq[..9].to_vec());
+        let tail = dual_quant(&x[9 * d..], rows - 9, d, false, Granularity::PerToken);
+        q.append_rows(&tail, true, true);
+        assert_eq!(q.packed_fp4, full.packed_fp4);
+        assert_eq!(q.s4_codes, full.s4_codes);
+        assert_eq!(q.fp8_codes, full.fp8_codes);
+        assert_eq!(q.s8_codes, full.s8_codes);
+        assert_eq!(q.sq, full.sq);
+        // Truncation on a partial-plane store skips the absent planes.
+        let mut low_only = DualQuantized::empty(d);
+        low_only.append_rows(&full, true, false);
+        low_only.truncate_rows(4);
+        assert_eq!(low_only.rows, 4);
+        assert!(low_only.fp8_codes.is_empty());
+        assert_eq!(low_only.packed_fp4, full.packed_fp4[..4 * d / 2].to_vec());
+        // Truncate to 0 empties everything.
+        let mut z = full.clone();
+        z.truncate_rows(0);
+        assert_eq!(z.rows, 0);
+        assert!(z.sq.is_empty() && z.packed_fp4.is_empty());
     }
 
     #[test]

@@ -295,6 +295,98 @@ impl ModelBackend for HostBackend {
         Ok(out)
     }
 
+    fn decode_multi(
+        &mut self,
+        chains: &[Vec<i32>],
+        slots: &mut [Option<&mut SeqKv>],
+    ) -> crate::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(chains.len() == slots.len(), "chains/slots length mismatch");
+        let vocab = self.cfg().vocab;
+
+        // One work item per live chain; chains fan across the worker
+        // threads like single-token batches do, and each chain walks its
+        // tokens serially through the exact decode-step kernels — so the
+        // logits are bit-identical to the default per-token replay (and
+        // to non-speculative decode), just without the per-token batch
+        // assembly and slot round-trips.
+        struct ChainWork<'a> {
+            chain: &'a [i32],
+            slot: &'a mut SeqKv,
+            out: Vec<f32>,
+            stats: KvPageStats,
+            result: crate::Result<()>,
+        }
+        let mut items: Vec<ChainWork<'_>> = Vec::new();
+        for (slot, chain) in slots.iter_mut().zip(chains) {
+            if let Some(s) = slot {
+                items.push(ChainWork {
+                    chain,
+                    slot: &mut **s,
+                    out: Vec::with_capacity(chain.len() * vocab),
+                    stats: KvPageStats::default(),
+                    result: Ok(()),
+                });
+            }
+        }
+        let model = &self.model;
+        let layout = &self.slots;
+        let cache_len = self.cache_len;
+        let outer = self.threads.max(1).min(items.len().max(1));
+        let inner = (self.threads.max(1) / outer).max(1);
+        crate::util::pool::par_items(&mut items, outer, |w| {
+            let step = |w: &mut ChainWork<'_>| -> crate::Result<()> {
+                match &mut *w.slot {
+                    SeqKv::F32(sl) => {
+                        // One state round-trip for the whole chain; the
+                        // conversions are pure copies, so per-token
+                        // round-trips would produce the same bits.
+                        let mut st = slot_to_state(&model.cfg, cache_len, sl);
+                        for &t in w.chain {
+                            let logits = model.decode_step_with_threads(t, &mut st, inner)?;
+                            w.out.extend_from_slice(&logits);
+                        }
+                        *sl = state_to_slot(layout, &model.cfg, cache_len, &st);
+                    }
+                    SeqKv::Quant(qs) => {
+                        for &t in w.chain {
+                            anyhow::ensure!(
+                                qs.pos < cache_len,
+                                "cache full ({}/{})",
+                                qs.pos,
+                                cache_len
+                            );
+                            let logits = model.decode_step_paged_with_threads(
+                                t, qs, &mut w.stats, inner)?;
+                            w.out.extend_from_slice(&logits);
+                        }
+                    }
+                }
+                Ok(())
+            };
+            w.result = step(w);
+        });
+        let mut first_err: crate::Result<()> = Ok(());
+        let mut rows = Vec::with_capacity(items.len());
+        for w in items {
+            self.kv_stats.merge(w.stats);
+            if first_err.is_ok() {
+                if let Err(e) = w.result {
+                    first_err = Err(e);
+                }
+            }
+            rows.push(w.out);
+        }
+        first_err?;
+        // Re-expand to one row vector per input position (None slots get
+        // an empty row), matching the trait contract.
+        let mut out = Vec::with_capacity(chains.len());
+        let mut it = rows.into_iter();
+        for slot in slots.iter() {
+            out.push(if slot.is_some() { it.next().unwrap() } else { Vec::new() });
+        }
+        Ok(out)
+    }
+
     fn eval_logits(
         &mut self,
         tokens: &[i32],
@@ -514,6 +606,56 @@ mod tests {
             let (l, st) = run(threads);
             assert_eq!(l, l1, "logits diverged at {threads} threads");
             assert_eq!(st, st1, "page stats diverged at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn decode_multi_bit_identical_to_per_token_decode() {
+        // The speculative verifier's batched chain walk must reproduce
+        // the sequential single-token decode bit for bit — for a mixed
+        // f32/quantized batch with uneven chain lengths and a padding
+        // slot, at every thread count.
+        use crate::kvquant::{KvFormat, KvPolicy};
+        let qcfg = KvQuantConfig {
+            format: KvFormat::Dual,
+            page_tokens: 8,
+            policies: vec![KvPolicy { sink: 8, diag: 16 }],
+        };
+        let toks: Vec<i32> = (0..12).map(|i| ((i * 7) % 60) + 1).collect();
+        let chains: Vec<Vec<i32>> = vec![vec![7, 9, 11], vec![], vec![13, 15], vec![8]];
+
+        // Oracle: per-token decode through the default trait impl's
+        // replay (explicit loop here so the oracle cannot share code with
+        // the override under test).
+        let mut be = HostBackend::for_tests();
+        let mut o1 = be.prefill(&toks, false, None).unwrap().kv;
+        let mut o2 = be.prefill(&toks, false, Some(&qcfg)).unwrap().kv;
+        let mut o3 = be.prefill(&toks[..7], false, Some(&qcfg)).unwrap().kv;
+        let mut oracle: Vec<Vec<f32>> = vec![Vec::new(); 4];
+        for (i, s) in [(0usize, &mut o1), (2, &mut o2), (3, &mut o3)] {
+            for &t in &chains[i] {
+                let l = be.decode(&[t], &mut [Some(&mut *s)]).unwrap();
+                oracle[i].extend_from_slice(&l);
+            }
+        }
+
+        for threads in [1usize, 2, 4] {
+            let mut be = HostBackend::for_tests()
+                .with_perf(threads, crate::kvquant::DECODED_CACHE_BYTES);
+            let mut s1 = be.prefill(&toks, false, None).unwrap().kv;
+            let mut s2 = be.prefill(&toks, false, Some(&qcfg)).unwrap().kv;
+            let mut s3 = be.prefill(&toks[..7], false, Some(&qcfg)).unwrap().kv;
+            let rows = be
+                .decode_multi(
+                    &chains,
+                    &mut [Some(&mut s1), None, Some(&mut s2), Some(&mut s3)],
+                )
+                .unwrap();
+            assert_eq!(rows, oracle, "diverged at {threads} threads");
+            assert_eq!(rows[1], Vec::<f32>::new());
+            assert_eq!(s1.pos(), 15);
+            assert_eq!(s2.pos(), 14);
+            assert_eq!(s3.pos(), 8);
         }
     }
 

@@ -131,6 +131,35 @@ pub trait ModelBackend {
         slots: &mut [Option<&mut SeqKv>],
     ) -> crate::Result<Vec<f32>>;
 
+    /// Multi-token decode for speculative verification ([`crate::spec`]):
+    /// feed `chains[i]` (the sequence's next token followed by its draft
+    /// tokens) into `slots[i]` one token at a time, returning each slot's
+    /// flat `[chains[i].len() * vocab]` logits — row `j` is the logits
+    /// after appending `chains[i][..=j]`. `None` slots get an empty row
+    /// vector. The default implementation replays the single-token
+    /// [`Self::decode`] per token, so it is bit-identical to sequential
+    /// decode by construction; backends override it to batch the chain
+    /// walk without changing the bits.
+    fn decode_multi(
+        &mut self,
+        chains: &[Vec<i32>],
+        slots: &mut [Option<&mut SeqKv>],
+    ) -> crate::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(chains.len() == slots.len(), "chains/slots length mismatch");
+        let vocab = self.vocab();
+        let mut out = vec![Vec::new(); chains.len()];
+        for (i, chain) in chains.iter().enumerate() {
+            let Some(s) = slots[i].as_mut() else { continue };
+            let rows = &mut out[i];
+            rows.reserve(chain.len() * vocab);
+            for &t in chain {
+                let logits = self.decode(&[t], &mut [Some(&mut **s)])?;
+                rows.extend_from_slice(&logits[..vocab]);
+            }
+        }
+        Ok(out)
+    }
+
     /// Batched full-sequence logits for the eval harness:
     /// tokens [B, L] row-major -> logits [B, L, vocab].
     fn eval_logits(&mut self, tokens: &[i32], b: usize, l: usize, dma: bool)

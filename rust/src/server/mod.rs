@@ -1,6 +1,6 @@
 //! TCP JSON-lines serving front end (std::net — tokio is not vendored).
 //!
-//! Protocol v2.2: one JSON object per line.
+//! Protocol v2.3: one JSON object per line.
 //!
 //! Request fields (`tokens` required, everything else optional):
 //!
@@ -89,6 +89,26 @@
 //! The text lives in one JSON string field (`\n`-escaped) so the reply
 //! stays a single line like every other protocol message; a scraper
 //! unescapes the field to recover the standard exposition format.
+//!
+//! New in v2.3: the telemetry-backed `stats` reply splits cancellation
+//! counts into a nested `"cancelled": {"groups", "candidates"}` object
+//! (v2.2's flat `requests_cancelled` — whole groups only — stays for
+//! compatibility; `candidates` counts individual candidates cancelled
+//! out of groups that kept running, which the flat field conflated with
+//! nothing at all), and reports the speculative-decoding configuration
+//! and counters under a nested `"spec"` object:
+//!
+//! ```text
+//! <- {..., "cancelled": {"groups": 0, "candidates": 0},
+//!     "spec": {"mode": "prompt-lookup", "k": 4, "rounds": 31,
+//!              "proposed_tokens": 92, "accepted_tokens": 61,
+//!              "rolled_back_tokens": 24}}
+//! ```
+//!
+//! `mode`/`k` echo the `--spec`/`--spec-k` the server was started with
+//! (`"mode": "off"` and zero counters when speculation is disabled);
+//! `rounds` counts per-candidate verification rounds, and the token
+//! counters are cumulative across the fleet.
 //!
 //! **Back-pressure / slow readers.** Each connection's outbound lines
 //! flow through a *bounded* writer channel
@@ -608,6 +628,50 @@ fn handle_conn(
                         fields.push((
                             "requests_cancelled",
                             Json::num(t.requests_cancelled.get() as f64),
+                        ));
+                        // Stats v2.3: the flat field above counts whole
+                        // groups only; the nested object splits groups
+                        // from individual candidates cancelled out of
+                        // groups that kept running.
+                        fields.push((
+                            "cancelled",
+                            Json::obj(vec![
+                                (
+                                    "groups",
+                                    Json::num(t.requests_cancelled.get() as f64),
+                                ),
+                                (
+                                    "candidates",
+                                    Json::num(t.candidates_cancelled.get() as f64),
+                                ),
+                            ]),
+                        ));
+                        // Stats v2.3: speculative-decoding config +
+                        // counters (mode "off" and zeros when disabled).
+                        fields.push((
+                            "spec",
+                            Json::obj(vec![
+                                ("mode", Json::str(router.spec_mode())),
+                                ("k", Json::num(router.spec_k() as f64)),
+                                (
+                                    "rounds",
+                                    Json::num(
+                                        t.spec_tokens_per_round.snapshot().count as f64,
+                                    ),
+                                ),
+                                (
+                                    "proposed_tokens",
+                                    Json::num(t.spec_proposed_tokens.get() as f64),
+                                ),
+                                (
+                                    "accepted_tokens",
+                                    Json::num(t.spec_accepted_tokens.get() as f64),
+                                ),
+                                (
+                                    "rolled_back_tokens",
+                                    Json::num(t.spec_rolled_back_tokens.get() as f64),
+                                ),
+                            ]),
                         ));
                     }
                     reply(Json::obj(fields));
@@ -1508,6 +1572,101 @@ mod tests {
             s.get("tokens_per_second_10s").unwrap().as_f64().unwrap() > 0.0,
             "rolling throughput gauge empty right after a decode"
         );
+        // Stats v2.3: the cancelled split and the spec block are present
+        // even with speculation off (mode "off", all counters zero), and
+        // the spec metric families render all-zero in the exposition.
+        let cancelled = s.get("cancelled").unwrap();
+        assert_eq!(cancelled.get("groups").unwrap().as_i64(), Some(0));
+        assert_eq!(cancelled.get("candidates").unwrap().as_i64(), Some(0));
+        let spec = s.get("spec").unwrap();
+        assert_eq!(spec.get("mode").unwrap().as_str(), Some("off"));
+        assert_eq!(spec.get("rounds").unwrap().as_i64(), Some(0));
+        assert_eq!(spec.get("proposed_tokens").unwrap().as_i64(), Some(0));
+        assert_eq!(spec.get("accepted_tokens").unwrap().as_i64(), Some(0));
+        assert_eq!(spec.get("rolled_back_tokens").unwrap().as_i64(), Some(0));
+        assert!(text.contains("dma_spec_proposed_tokens_total 0"), "{text}");
+        assert!(text.contains("# TYPE dma_spec_accepted_tokens histogram"), "{text}");
+
+        writer.shutdown(std::net::Shutdown::Write).unwrap();
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn spec_stats_report_acceptance_over_tcp() {
+        // A periodic prompt makes the prompt-lookup proposer draft the
+        // continuation; greedy decode then accepts multiple tokens per
+        // round, which the v2.3 spec block and metric families report.
+        let (addr, stop, srv) = spawn_server(
+            EngineConfig {
+                max_new_tokens: 16,
+                spec: crate::spec::SpecMode::PromptLookup,
+                spec_k: 4,
+                ..Default::default()
+            },
+            1,
+            Policy::RoundRobin,
+        );
+
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        let toks: Vec<String> =
+            (0..24).map(|i| ((i % 4) + 7).to_string()).collect();
+        writeln!(
+            writer,
+            r#"{{"id": 1, "tokens": [{}], "max_new_tokens": 12, "ignore_eos": true}}"#,
+            toks.join(",")
+        )
+        .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("output").unwrap().as_arr().unwrap().len(), 12);
+
+        writeln!(writer, r#"{{"cmd": "stats"}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let s = Json::parse(line.trim()).unwrap();
+        let spec = s.get("spec").unwrap();
+        assert_eq!(spec.get("mode").unwrap().as_str(), Some("prompt-lookup"));
+        assert_eq!(spec.get("k").unwrap().as_i64(), Some(4));
+        // 12 emitted tokens minus the prefill-boundary one: 11 decode
+        // emissions over rounds that each emit at least one token.
+        let rounds = spec.get("rounds").unwrap().as_i64().unwrap();
+        assert!((1..=11).contains(&rounds), "rounds {rounds} out of range");
+        let proposed = spec.get("proposed_tokens").unwrap().as_i64().unwrap();
+        let accepted = spec.get("accepted_tokens").unwrap().as_i64().unwrap();
+        let rolled = spec.get("rolled_back_tokens").unwrap().as_i64().unwrap();
+        assert!(accepted <= proposed, "accepted {accepted} > proposed {proposed}");
+        assert!(rolled <= proposed, "rolled back {rolled} > proposed {proposed}");
+        // Each round emits its accepted prefix plus the sampled
+        // correction/bonus token — except a final round cut short by
+        // the length cap on a matched draft, which emits exactly its
+        // accepted count. 11 decode emissions total, so:
+        assert!(
+            rounds + accepted == 11 || rounds + accepted == 12,
+            "emission accounting broke: rounds {rounds} + accepted {accepted}"
+        );
+
+        writeln!(writer, r#"{{"cmd": "metrics"}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        let text = j.get("metrics").unwrap().as_str().unwrap().to_string();
+        let sample = |name: &str| -> u64 {
+            text.lines()
+                .find_map(|l| l.strip_prefix(name))
+                .unwrap_or_else(|| panic!("missing {name} in:\n{text}"))
+                .trim()
+                .parse()
+                .unwrap()
+        };
+        assert_eq!(sample("dma_spec_proposed_tokens_total ") as i64, proposed);
+        assert_eq!(sample("dma_spec_accepted_tokens_total ") as i64, accepted);
+        assert_eq!(sample("dma_spec_rolled_back_tokens_total ") as i64, rolled);
+        assert_eq!(sample("dma_spec_accepted_tokens_count ") as i64, rounds);
 
         writer.shutdown(std::net::Shutdown::Write).unwrap();
         stop.store(true, Ordering::Relaxed);

@@ -1,0 +1,203 @@
+//! Speculative decoding: self-drafting proposers and the acceptance
+//! rule that keeps the output distribution exactly that of sequential
+//! decode.
+//!
+//! The serving decode step is memory-bound — the low-bit MXFP cache
+//! already shrinks the bytes each step must touch, and speculation
+//! amortizes the remaining per-step overhead (scheduler, batch
+//! assembly, weight streaming) across several tokens. The subsystem has
+//! three parts:
+//!
+//! * **Proposers** ([`Proposer`]) draft up to `k` likely continuations.
+//!   [`PromptLookupProposer`] self-drafts from the sequence's own
+//!   prompt+output history by n-gram matching — no second model, no new
+//!   weights, and drafts are free to be wrong.
+//! * **Verification** runs the target model over the whole draft chain
+//!   in one batched multi-token decode
+//!   ([`crate::runtime::ModelBackend::decode_multi`]) and walks the
+//!   resulting logit rows with the *sample-and-match* rule (below).
+//! * **Rollback** truncates rejected draft positions back out of the KV
+//!   cache ([`crate::kvcache::SeqKv::truncate`],
+//!   [`crate::kvcache::BlockPool::truncate`]) so the cache replays the
+//!   sequential state bit for bit.
+//!
+//! ## Sample-and-match preserves the distribution exactly
+//!
+//! For a *deterministic* (point-mass) proposal like prompt lookup,
+//! standard rejection sampling degenerates to: accept draft `d` with
+//! probability `p(d)` under the target distribution, else resample from
+//! the residual `p` restricted to tokens `!= d`, renormalized. Drawing
+//! `t ~ p` and accepting iff `t == d` — emitting `t` itself as the
+//! correction otherwise — produces *the same joint distribution*: the
+//! match event has probability `p(d)`, and conditioned on a mismatch,
+//! `t` is distributed exactly as the residual. So the verifier simply
+//! draws each position with the candidate's own [`Sampler`] (same RNG
+//! stream, same truncation knobs) and compares against the draft. One
+//! RNG draw per *emitted* token — never per drafted token — means the
+//! sampler stream advances exactly as sequential decode would, so
+//! seeded sampling replays bit-for-bit at every temperature, and greedy
+//! (`temperature == 0`, no draws at all) is trivially identical.
+//!
+//! [`Sampler`]: crate::coordinator::sampling::Sampler
+
+/// Which speculation strategy the engine runs (`--spec`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SpecMode {
+    /// Plain sequential decode (the default).
+    #[default]
+    Off,
+    /// Self-drafting n-gram lookup over the sequence's own history.
+    PromptLookup,
+}
+
+impl SpecMode {
+    pub fn parse(s: &str) -> crate::Result<SpecMode> {
+        match s {
+            "off" => Ok(SpecMode::Off),
+            "prompt-lookup" => Ok(SpecMode::PromptLookup),
+            other => anyhow::bail!("unknown spec mode '{other}' (off | prompt-lookup)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpecMode::Off => "off",
+            SpecMode::PromptLookup => "prompt-lookup",
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        *self != SpecMode::Off
+    }
+}
+
+/// A draft-token source. `history` is the sequence's full token stream
+/// so far (prompt followed by emitted output, *including* the token
+/// about to be fed this step); the proposer returns up to `k` guesses
+/// for the tokens that will follow it. Proposals carry no probabilities
+/// — the acceptance rule only ever compares tokens — so any heuristic
+/// is sound; a bad proposer costs throughput, never correctness.
+pub trait Proposer {
+    fn propose(&mut self, history: &[i32], k: usize) -> Vec<i32>;
+}
+
+/// Self-drafting proposer: find the longest n-gram suffix of `history`
+/// that occurred earlier, and draft the tokens that followed its most
+/// recent earlier occurrence. Repetitive text — code, templated chat,
+/// retrieval-stuffed prompts — re-walks its own phrasing constantly, so
+/// the continuation of a repeated n-gram is a strong guess at the cost
+/// of a substring scan (no model, no extra memory traffic on the
+/// decode's critical path).
+pub struct PromptLookupProposer {
+    /// Shortest suffix worth matching. 1 drafts aggressively (any
+    /// repeated token proposes); raise it to cut mis-drafts on prose.
+    pub min_ngram: usize,
+    /// Longest suffix tried first (longer matches are more specific, so
+    /// their continuations accept more often).
+    pub max_ngram: usize,
+}
+
+impl Default for PromptLookupProposer {
+    fn default() -> Self {
+        PromptLookupProposer { min_ngram: 1, max_ngram: 3 }
+    }
+}
+
+impl Proposer for PromptLookupProposer {
+    fn propose(&mut self, history: &[i32], k: usize) -> Vec<i32> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let len = history.len();
+        for n in (self.min_ngram..=self.max_ngram).rev() {
+            // Need the suffix plus at least one earlier position.
+            if n == 0 || len < n + 1 {
+                continue;
+            }
+            let suffix = &history[len - n..];
+            // Most recent earlier occurrence wins (local phrasing beats
+            // something from the distant prompt) — unless it sits so
+            // close to the end that its continuation is cut short, in
+            // which case an older occurrence with a full-`k`
+            // continuation is a better draft (a periodic stream's
+            // freshest match always abuts the suffix).
+            let mut best: Option<(usize, usize)> = None; // (start, avail)
+            for i in (0..len - n).rev() {
+                if &history[i..i + n] == suffix {
+                    let start = i + n;
+                    let avail = k.min(len - start);
+                    if avail == k {
+                        return history[start..start + k].to_vec();
+                    }
+                    if best.map_or(true, |(_, a)| avail > a) {
+                        best = Some((start, avail));
+                    }
+                }
+            }
+            if let Some((start, avail)) = best {
+                if avail > 0 {
+                    return history[start..start + avail].to_vec();
+                }
+            }
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parsing_round_trips() {
+        for m in [SpecMode::Off, SpecMode::PromptLookup] {
+            assert_eq!(SpecMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(SpecMode::parse("medusa").is_err());
+        assert!(!SpecMode::Off.enabled());
+        assert!(SpecMode::PromptLookup.enabled());
+        assert_eq!(SpecMode::default(), SpecMode::Off);
+    }
+
+    #[test]
+    fn lookup_drafts_the_continuation_of_a_repeated_ngram() {
+        let mut p = PromptLookupProposer::default();
+        // "...7 8 9 4 5 | 7 8" -> the earlier "7 8" was followed by 9 4 5.
+        let h = vec![1, 2, 7, 8, 9, 4, 5, 7, 8];
+        assert_eq!(p.propose(&h, 3), vec![9, 4, 5]);
+        // k truncates the draft.
+        assert_eq!(p.propose(&h, 2), vec![9, 4]);
+        assert_eq!(p.propose(&h, 0), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn lookup_prefers_longer_ngrams_and_recent_matches() {
+        let mut p = PromptLookupProposer { min_ngram: 1, max_ngram: 2 };
+        // Suffix "3 4": bigram matches at index 2 (followed by 9); the
+        // unigram "4" also matches at 5 (followed by 8) — the bigram is
+        // more specific and must win.
+        let h = vec![1, 2, 3, 4, 9, 4, 8, 3, 4];
+        assert_eq!(p.propose(&h, 1), vec![9]);
+        // Two bigram occurrences: the most recent earlier one wins.
+        let h = vec![5, 6, 1, 5, 6, 2, 5, 6];
+        assert_eq!(p.propose(&h, 1), vec![2]);
+    }
+
+    #[test]
+    fn lookup_handles_no_match_and_degenerate_histories() {
+        let mut p = PromptLookupProposer::default();
+        assert_eq!(p.propose(&[], 4), Vec::<i32>::new());
+        assert_eq!(p.propose(&[7], 4), Vec::<i32>::new());
+        // All-distinct history: nothing repeats.
+        assert_eq!(p.propose(&[1, 2, 3, 4, 5], 4), Vec::<i32>::new());
+        // A constant stream drafts itself (the trigram match at the
+        // start is followed only by the final 9 — drafts never run past
+        // the end of observed history).
+        assert_eq!(p.propose(&[9, 9, 9, 9], 3), vec![9]);
+        assert_eq!(p.propose(&[9, 9, 9, 9, 9, 9, 9], 3), vec![9, 9, 9]);
+        // Suffix match flush against the end: earlier "1 2" is followed
+        // only by tokens inside the suffix itself — still a valid draft.
+        let h = vec![1, 2, 1, 2];
+        assert_eq!(p.propose(&h, 4), vec![1, 2]);
+    }
+}

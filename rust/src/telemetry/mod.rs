@@ -445,6 +445,19 @@ pub struct Telemetry {
     pub prefill_tokens: Counter,
     pub decode_tokens: Counter,
     pub prefix_hit_tokens: Counter,
+    /// Individual candidates cancelled out of a still-running group
+    /// (whole-group cancels count once in `requests_cancelled`).
+    pub candidates_cancelled: Counter,
+    // -- speculative decoding ([`crate::spec`]) -------------------------
+    /// Draft tokens proposed for verification.
+    pub spec_proposed_tokens: Counter,
+    /// Draft tokens accepted by verification.
+    pub spec_accepted_tokens: Counter,
+    /// Drafted positions rolled back out of the KV cache.
+    pub spec_rolled_back_tokens: Counter,
+    /// Tokens emitted per speculative round (accepted drafts plus the
+    /// correction/bonus token) — a token-count histogram, not a latency.
+    pub spec_tokens_per_round: Histogram,
     // -- rolling 10 s gauges --------------------------------------------
     /// Generated tokens; read as tokens/s over the window.
     pub tokens_10s: RollingWindow,
@@ -486,6 +499,11 @@ impl Telemetry {
             prefill_tokens: Counter::default(),
             decode_tokens: Counter::default(),
             prefix_hit_tokens: Counter::default(),
+            candidates_cancelled: Counter::default(),
+            spec_proposed_tokens: Counter::default(),
+            spec_accepted_tokens: Counter::default(),
+            spec_rolled_back_tokens: Counter::default(),
+            spec_tokens_per_round: Histogram::new(),
             tokens_10s: RollingWindow::default(),
             ttft_10s: RollingWindow::default(),
             trace: None,
@@ -556,6 +574,24 @@ fn render_histogram(out: &mut String, name: &str, help: &str, s: &HistogramSnaps
         }
     }
     out.push_str(&format!("{name}_sum {}\n", s.sum_us as f64 / 1e6));
+    out.push_str(&format!("{name}_count {}\n", s.count));
+}
+
+/// Histogram render for counting (unitless) domains: bucket edges are
+/// the raw recorded integers, not µs-to-seconds conversions — used for
+/// the tokens-per-round speculation histogram.
+fn render_histogram_counts(out: &mut String, name: &str, help: &str, s: &HistogramSnapshot) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    let mut cum = 0u64;
+    for i in 0..BUCKETS {
+        cum += s.buckets[i];
+        if i == BUCKETS - 1 {
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+        } else {
+            out.push_str(&format!("{name}_bucket{{le=\"{}\"}} {cum}\n", bucket_upper_us(i)));
+        }
+    }
+    out.push_str(&format!("{name}_sum {}\n", s.sum_us));
     out.push_str(&format!("{name}_count {}\n", s.count));
 }
 
@@ -727,6 +763,38 @@ pub fn render_prometheus(
         "dma_prefix_hit_tokens_total",
         "Prompt tokens served from the prefix cache",
         t.prefix_hit_tokens.get(),
+    );
+    render_counter(
+        &mut out,
+        "dma_candidates_cancelled_total",
+        "Individual candidates cancelled out of still-running groups",
+        t.candidates_cancelled.get(),
+    );
+    // Speculation families render unconditionally (all-zero when --spec
+    // off) so scrapes and dashboards never see the series appear late.
+    render_histogram_counts(
+        &mut out,
+        "dma_spec_accepted_tokens",
+        "Tokens emitted per speculative round (accepted drafts + correction/bonus)",
+        &t.spec_tokens_per_round.snapshot(),
+    );
+    render_counter(
+        &mut out,
+        "dma_spec_proposed_tokens_total",
+        "Draft tokens proposed for speculative verification",
+        t.spec_proposed_tokens.get(),
+    );
+    render_counter(
+        &mut out,
+        "dma_spec_accepted_tokens_total",
+        "Draft tokens accepted by speculative verification",
+        t.spec_accepted_tokens.get(),
+    );
+    render_counter(
+        &mut out,
+        "dma_spec_rolled_back_tokens_total",
+        "Drafted positions rolled back out of the KV cache",
+        t.spec_rolled_back_tokens.get(),
     );
     out.push_str(concat!(
         "# HELP dma_kv_pages_decoded_total Quantized KV pages decoded, by tile precision\n",
@@ -987,6 +1055,11 @@ mod tests {
         t.decode_step_us.record_us(3200);
         t.rejected_blocks.inc();
         t.requests_completed.inc();
+        t.spec_proposed_tokens.add(6);
+        t.spec_accepted_tokens.add(4);
+        t.spec_rolled_back_tokens.add(2);
+        t.spec_tokens_per_round.record_us(3);
+        t.candidates_cancelled.inc();
         let workers = [
             WorkerGauges {
                 queue_depth: 2,
@@ -1023,12 +1096,32 @@ mod tests {
             "dma_decoded_page_hits_total 5",
             "dma_decoded_page_misses_total 2",
             "dma_decoded_page_evictions_total 1",
+            "dma_spec_proposed_tokens_total 6",
+            "dma_spec_accepted_tokens_total 4",
+            "dma_spec_rolled_back_tokens_total 2",
+            "dma_spec_accepted_tokens_count 1",
+            "dma_candidates_cancelled_total 1",
             "le=\"+Inf\"",
         ] {
             assert!(text.contains(family), "missing '{family}' in:\n{text}");
         }
         // Every histogram line set is cumulative and ends at count.
         assert!(text.contains("dma_ttft_seconds_sum 0.0125"));
+        // The token-count histogram renders raw (unitless) bucket edges
+        // and sum: a 3-token round lands under le="3", not le-in-seconds.
+        assert!(text.contains("dma_spec_accepted_tokens_bucket{le=\"3\"} 1"), "{text}");
+        assert!(text.contains("dma_spec_accepted_tokens_sum 3"));
+
+        // All-zero speculation families still render with --spec off.
+        let cold = render_prometheus(&Telemetry::new(), &[], &pages);
+        for family in [
+            "# TYPE dma_spec_accepted_tokens histogram",
+            "# TYPE dma_spec_proposed_tokens_total counter",
+            "# TYPE dma_spec_rolled_back_tokens_total counter",
+            "# TYPE dma_candidates_cancelled_total counter",
+        ] {
+            assert!(cold.contains(family), "missing '{family}'");
+        }
     }
 
     #[test]
