@@ -119,7 +119,7 @@ fn run(cfg: EngineConfig, workers: usize, label: &str) -> RunStats {
                     engine_ttft.push(r.ttft_ms);
                     finished += 1;
                 }
-                EngineEvent::Started { .. } => {}
+                EngineEvent::Started { .. } | EngineEvent::Restarted { .. } => {}
             }
         }
     }

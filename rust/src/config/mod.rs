@@ -176,6 +176,44 @@ impl MetaConfig {
     }
 }
 
+/// Admission behavior under KV byte pressure (`--shed-policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Pre-resilience behavior: over-budget groups queue until blocks
+    /// free up (deferred admission), new submissions queue until
+    /// `queue_limit`.
+    Off,
+    /// Graceful degradation: under sustained byte pressure the engine
+    /// first shrinks the decoded-page cache budget and admits *new*
+    /// sequences under the all-low KV precision policy (dual-format
+    /// caches only — both planes exist, so flipping the read policy is
+    /// always safe); if the projected demand still exceeds the pool,
+    /// new submissions are shed with a structured
+    /// `Rejected{retry_after_ms}` instead of queueing forever.
+    Degrade,
+}
+
+impl ShedPolicy {
+    pub fn parse(s: &str) -> crate::Result<ShedPolicy> {
+        match s {
+            "off" => Ok(ShedPolicy::Off),
+            "degrade" => Ok(ShedPolicy::Degrade),
+            other => Err(anyhow!("unknown shed policy '{other}' (off|degrade)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedPolicy::Off => "off",
+            ShedPolicy::Degrade => "degrade",
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        *self != ShedPolicy::Off
+    }
+}
+
 /// Engine/serving knobs (CLI-overridable).
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -250,6 +288,18 @@ pub struct EngineConfig {
     /// no clock reads. Only takes effect when the engine runs with
     /// telemetry attached.
     pub metrics_sample_n: usize,
+    /// Server-wide wall-clock budget per request in milliseconds,
+    /// measured from submission and enforced at the engine step
+    /// boundary (`--request-timeout-ms`); 0 disables. Requests that
+    /// exceed it finish with reason `timeout` and release their pool
+    /// bytes like a cancel.
+    pub request_timeout_ms: u64,
+    /// Max milliseconds a request may wait *queued* before admission
+    /// (`--queue-timeout-ms`); 0 disables. Bounds time-to-first-work
+    /// under overload so clients can retry elsewhere.
+    pub queue_timeout_ms: u64,
+    /// Admission behavior under KV byte pressure (`--shed-policy`).
+    pub shed_policy: ShedPolicy,
 }
 
 impl Default for EngineConfig {
@@ -271,6 +321,9 @@ impl Default for EngineConfig {
             spec: crate::spec::SpecMode::Off,
             spec_k: 4,
             metrics_sample_n: 0,
+            request_timeout_ms: 0,
+            queue_timeout_ms: 0,
+            shed_policy: ShedPolicy::Off,
         }
     }
 }
@@ -381,5 +434,18 @@ mod tests {
         assert_eq!(cfg.spec, crate::spec::SpecMode::Off, "speculation off by default");
         assert_eq!(cfg.spec_k, 4);
         assert_eq!(cfg.metrics_sample_n, 0, "layer probe off by default");
+        assert_eq!(cfg.request_timeout_ms, 0, "no deadline by default");
+        assert_eq!(cfg.queue_timeout_ms, 0);
+        assert_eq!(cfg.shed_policy, ShedPolicy::Off);
+    }
+
+    #[test]
+    fn shed_policy_parses_and_names() {
+        assert_eq!(ShedPolicy::parse("off").unwrap(), ShedPolicy::Off);
+        assert_eq!(ShedPolicy::parse("degrade").unwrap(), ShedPolicy::Degrade);
+        assert!(ShedPolicy::parse("bogus").is_err());
+        assert_eq!(ShedPolicy::Degrade.name(), "degrade");
+        assert!(!ShedPolicy::Off.enabled());
+        assert!(ShedPolicy::Degrade.enabled());
     }
 }

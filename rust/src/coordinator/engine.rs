@@ -64,6 +64,7 @@ use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv, PAGE_TOKENS
 use crate::runtime::{ModelBackend, PrefillSeq};
 use crate::spec::{PromptLookupProposer, Proposer, SpecMode};
 use crate::telemetry::Telemetry;
+use crate::util::failpoint;
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -186,6 +187,11 @@ pub struct EngineStats {
     pub cancelled: u64,
     /// Individual candidates cancelled out of groups that kept running.
     pub cancelled_candidates: u64,
+    /// Requests cancelled at a deadline (finish reason `timeout`:
+    /// `deadline_ms`, `--request-timeout-ms`, or `--queue-timeout-ms`).
+    pub timeouts: u64,
+    /// Submissions shed under KV pressure (`--shed-policy`).
+    pub shed: u64,
     /// Requests admitted with more than one candidate.
     pub grouped_requests: u64,
     /// Prompt tokens actually run through the model (prefix-cache hits
@@ -297,6 +303,14 @@ pub struct Engine {
     /// Worker index for trace-event rows (`pid`); 0 for unmanaged
     /// engines.
     worker_idx: usize,
+    /// Degraded mode (`--shed-policy degrade` under byte pressure):
+    /// decoded-page cache budget shrunk, new dual-format sequences
+    /// admitted under the all-low precision policy.
+    degraded: bool,
+    /// Sticky: any submitted request carried a per-request deadline, so
+    /// the step boundary must scan for expiries even without the
+    /// engine-wide timeout knobs.
+    saw_deadline: bool,
     pub stats: EngineStats,
 }
 
@@ -371,6 +385,8 @@ impl Engine {
             next_internal: 0,
             telemetry: None,
             worker_idx: 0,
+            degraded: false,
+            saw_deadline: false,
             stats,
         }
     }
@@ -477,6 +493,7 @@ impl Engine {
             decode_ms: 0.0,
             ttft_ms: 0.0,
             error: Some(error),
+            retry_after_ms: None,
         }
     }
 
@@ -542,11 +559,118 @@ impl Engine {
             };
             return Some(self.reject(&req, msg, cause));
         }
+        // KV-pressure load shedding (`--shed-policy degrade`): when the
+        // projected demand — resident pool bytes, live decoded-page
+        // bytes, every queued group's budget, and this group — exceeds
+        // the byte budget, first enter degraded mode (shrink the
+        // decoded-page cache, admit new dual-format sequences all-low);
+        // if pressure persists on the next over-budget submit, shed with
+        // a structured retry hint instead of queueing forever.
+        if self.cfg.shed_policy.enabled() {
+            let bb = self.pool.block_bytes();
+            let queued_bytes: usize = self
+                .queue
+                .iter()
+                .map(|t| self.group_blocks_needed(&t.req, 0) * bb)
+                .sum();
+            let projected =
+                self.pool.bytes_in_use() + self.decoded_live + queued_bytes + need * bb;
+            if projected > self.pool.bytes_capacity() {
+                if self.degraded {
+                    let retry = self.retry_after_ms(&req);
+                    self.stats.shed += 1;
+                    if let Some(t) = &self.telemetry {
+                        t.requests_shed.inc();
+                    }
+                    let msg = format!(
+                        "shed under KV pressure ({projected} bytes projected against a {} byte budget)",
+                        self.pool.bytes_capacity()
+                    );
+                    let mut resp = self.reject(&req, msg, RejectCause::Bytes);
+                    resp.retry_after_ms = Some(retry);
+                    return Some(resp);
+                }
+                self.enter_degraded();
+            } else if self.degraded
+                && self.queue.is_empty()
+                && self.pool.bytes_in_use() + self.decoded_live
+                    <= self.pool.bytes_capacity() / 2
+            {
+                // Hysteresis: pressure cleared well below the budget and
+                // nothing is waiting — restore full precision/caching.
+                self.exit_degraded();
+            }
+        }
+        if req.sampling.deadline_ms > 0 {
+            self.saw_deadline = true;
+        }
         if let Some(t) = &self.telemetry {
             t.requests_submitted.inc();
         }
         self.queue.push_back(Tracked::new(req));
         None
+    }
+
+    /// Suggested client backoff when shedding: the time the rolling
+    /// 10 s decode-throughput window needs to clear this request's
+    /// token budget, clamped to [50 ms, 10 s] (1 s when the window is
+    /// cold or no telemetry is attached).
+    fn retry_after_ms(&self, req: &Request) -> u64 {
+        let budget = req.max_new_tokens.min(self.cfg.max_new_tokens).max(1) as f64;
+        let rate = self
+            .telemetry
+            .as_ref()
+            .map_or(0.0, |t| t.tokens_10s.rate_per_sec(t.now_sec()));
+        if rate <= 0.0 {
+            1000
+        } else {
+            ((budget / rate) * 1e3).clamp(50.0, 10_000.0) as u64
+        }
+    }
+
+    /// Enter degraded mode: quarter the decoded-page cache budget
+    /// (applies to caches created from here on) and admit new
+    /// dual-format sequences under the all-low precision policy.
+    /// Running sequences are untouched — dual pages store both planes,
+    /// so mixed read policies can never corrupt shared radix pages.
+    fn enter_degraded(&mut self) {
+        if self.degraded {
+            return;
+        }
+        self.degraded = true;
+        self.backend
+            .set_perf(self.cfg.threads, self.cfg.decoded_cache_bytes / 4);
+    }
+
+    /// Leave degraded mode: restore the configured decoded-page cache
+    /// budget and the configured precision policy for new admissions.
+    fn exit_degraded(&mut self) {
+        if !self.degraded {
+            return;
+        }
+        self.degraded = false;
+        self.backend
+            .set_perf(self.cfg.threads, self.cfg.decoded_cache_bytes);
+    }
+
+    /// Whether the engine is currently degraded under KV pressure.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// The quant config admission hands a *new* sequence: the
+    /// configured one, or — degraded, dual format only — an all-low
+    /// policy. Single-plane formats keep their configured policy (there
+    /// is no cheaper plane to switch to).
+    fn admission_kv_quant(&self) -> Option<KvQuantConfig> {
+        let q = self.kv_quant.clone()?;
+        if self.degraded && q.format == KvFormat::Dual {
+            return Some(KvQuantConfig {
+                policies: vec![KvPolicy { sink: 0, diag: 0 }],
+                ..q
+            });
+        }
+        Some(q)
     }
 
     /// Pool tokens of candidate `i`'s budget. Candidate 0 keeps the
@@ -592,14 +716,23 @@ impl Engine {
     /// terminal event, or `None` when the id is not in flight (already
     /// finished).
     pub fn cancel(&mut self, id: u64) -> crate::Result<Option<EngineEvent>> {
+        self.finish_early(id, FinishReason::Cancelled)
+    }
+
+    /// Shared teardown behind [`Engine::cancel`] and deadline
+    /// enforcement: identical KV release discipline, different finish
+    /// reason on the wire (`cancelled` vs `timeout`).
+    fn finish_early(
+        &mut self,
+        id: u64,
+        reason: FinishReason,
+    ) -> crate::Result<Option<EngineEvent>> {
         if let Some(pos) = self.queue.iter().position(|t| t.req.id == id) {
             let mut t = self.queue.remove(pos).unwrap();
             t.queue_ms = t.enqueued.elapsed().as_secs_f64() * 1e3;
-            self.stats.cancelled += 1;
+            self.note_finish_early_stats(reason);
             self.note_finish(id, true);
-            return Ok(Some(EngineEvent::Finished(
-                t.respond(FinishReason::Cancelled, vec![]),
-            )));
+            return Ok(Some(EngineEvent::Finished(t.respond(reason, vec![]))));
         }
         let Some(idx) = self
             .active
@@ -625,7 +758,7 @@ impl Engine {
             SlotState::Decoding(mut cands) => {
                 for c in cands.iter_mut() {
                     if c.live() {
-                        c.finish = Some(FinishReason::Cancelled);
+                        c.finish = Some(reason);
                         c.kv = None;
                         self.pool.release(c.pool_id)?;
                     }
@@ -638,11 +771,80 @@ impl Engine {
         // Recount path: the byte accounting must match a from-scratch
         // recount of the refcount plane after the release.
         self.pool.check_invariants()?;
-        self.stats.cancelled += 1;
+        self.note_finish_early_stats(reason);
         self.note_finish(id, true);
-        Ok(Some(EngineEvent::Finished(
-            tracked.respond(FinishReason::Cancelled, finalists),
-        )))
+        Ok(Some(EngineEvent::Finished(tracked.respond(reason, finalists))))
+    }
+
+    fn note_finish_early_stats(&mut self, reason: FinishReason) {
+        if reason == FinishReason::Timeout {
+            self.stats.timeouts += 1;
+        } else {
+            self.stats.cancelled += 1;
+        }
+    }
+
+    /// Which deadline (if any) request `t` has blown after `elapsed_ms`
+    /// in the engine. Precedence: the queue timeout only ever fires
+    /// before admission; a per-request `deadline_ms` is the client's own
+    /// bound and wins over the server-wide `request_timeout_ms`.
+    fn deadline_cause(&self, t: &Tracked, queued: bool, elapsed_ms: u64) -> Option<&'static str> {
+        if queued && self.cfg.queue_timeout_ms > 0 && elapsed_ms >= self.cfg.queue_timeout_ms {
+            return Some("queue");
+        }
+        let d = t.req.sampling.deadline_ms;
+        if d > 0 && elapsed_ms >= d {
+            return Some("deadline");
+        }
+        if self.cfg.request_timeout_ms > 0 && elapsed_ms >= self.cfg.request_timeout_ms {
+            return Some("request");
+        }
+        None
+    }
+
+    fn note_deadline_cancel(&self, cause: &'static str) {
+        if let Some(t) = &self.telemetry {
+            match cause {
+                "queue" => t.deadline_cancels_queue.inc(),
+                "deadline" => t.deadline_cancels_deadline.inc(),
+                _ => t.deadline_cancels_request.inc(),
+            }
+        }
+    }
+
+    /// Deadline sweep at the step boundary: cancel every queued or
+    /// active request whose clock has run out, with finish reason
+    /// `timeout` and the same KV teardown as a client cancel. A no-op
+    /// unless a server timeout is configured or some submitted request
+    /// carried `deadline_ms` (the sticky `saw_deadline` latch), so
+    /// deployments without deadlines pay one branch per step.
+    fn enforce_deadlines(&mut self, out: &mut Vec<EngineEvent>) -> crate::Result<()> {
+        if self.cfg.request_timeout_ms == 0
+            && self.cfg.queue_timeout_ms == 0
+            && !self.saw_deadline
+        {
+            return Ok(());
+        }
+        let mut expired: Vec<(u64, &'static str)> = Vec::new();
+        for t in &self.queue {
+            let elapsed = t.enqueued.elapsed().as_millis() as u64;
+            if let Some(cause) = self.deadline_cause(t, true, elapsed) {
+                expired.push((t.req.id, cause));
+            }
+        }
+        for a in self.active.iter().flatten() {
+            let elapsed = a.tracked.enqueued.elapsed().as_millis() as u64;
+            if let Some(cause) = self.deadline_cause(&a.tracked, false, elapsed) {
+                expired.push((a.tracked.req.id, cause));
+            }
+        }
+        for (id, cause) in expired {
+            if let Some(ev) = self.finish_early(id, FinishReason::Timeout)? {
+                self.note_deadline_cancel(cause);
+                out.push(ev);
+            }
+        }
+        Ok(())
     }
 
     /// Cancel one candidate of a group while its siblings keep
@@ -828,6 +1030,7 @@ impl Engine {
         let Some(head) = self.queue.front() else {
             return Ok(false);
         };
+        failpoint::check("pool_admission")?;
 
         // Prefix-cache lookup. Sharing is capped at a prefill-chunk
         // boundary strictly inside the prompt: the warm run's remaining
@@ -911,10 +1114,13 @@ impl Engine {
         }
 
         // Seed a quantized slot with the shared pages (zero-copy) and
-        // open the streaming prefill.
+        // open the streaming prefill. Degraded admissions get the
+        // all-low policy variant (dual pages carry both planes, so
+        // seeding from full-precision runs stays exact).
+        let adm_quant = self.admission_kv_quant();
         let seed = if hit.tokens > 0 {
             let (nl, hk, dh) = self.kv_dims;
-            let mut slot = QuantSlotKv::new(self.kv_quant.clone().unwrap(), nl, hk, dh);
+            let mut slot = QuantSlotKv::new(adm_quant.clone().unwrap(), nl, hk, dh);
             hit.seed(&mut slot);
             Some(slot)
         } else {
@@ -923,7 +1129,7 @@ impl Engine {
         let seq = match self.backend.begin_prefill(
             &tracked.req.tokens,
             tracked.req.dma,
-            self.kv_quant.as_ref(),
+            adm_quant.as_ref(),
             seed,
         ) {
             Ok(s) => s,
@@ -1000,6 +1206,7 @@ impl Engine {
         if !is_prefilling {
             return Ok(());
         }
+        failpoint::check("prefill_chunk")?;
         let mut act = self.active[idx].take().unwrap();
         let SlotState::Prefilling(ref mut seq) = act.state else { unreachable!() };
         let before = seq.done;
@@ -1209,6 +1416,7 @@ impl Engine {
         if idxs.is_empty() {
             return Ok(0);
         }
+        failpoint::check("decode_step")?;
         let t0 = Instant::now();
         let mut taken: Vec<Active> = idxs
             .iter()
@@ -1470,6 +1678,7 @@ impl Engine {
         }
 
         // Verify: one batched multi-token decode over every chain.
+        failpoint::check("decode_multi")?;
         let rows = {
             let mut slot_refs: Vec<Option<&mut SeqKv>> = Vec::new();
             for act in taken.iter_mut() {
@@ -1640,6 +1849,9 @@ impl Engine {
     pub fn step(&mut self) -> crate::Result<Vec<EngineEvent>> {
         self.stats.engine_steps += 1;
         let mut out = Vec::new();
+        // Phase 0: deadline sweep — expired requests release their KV
+        // before this step schedules anything against the pool.
+        self.enforce_deadlines(&mut out)?;
         // Phase timing only with telemetry attached — the disabled path
         // takes no clock reads.
         let timed = self.telemetry.is_some();
@@ -1736,15 +1948,42 @@ struct WorkerShared {
     decoded_cache_hits: std::sync::atomic::AtomicU64,
     decoded_cache_misses: std::sync::atomic::AtomicU64,
     kv_cache_evictions: std::sync::atomic::AtomicU64,
+    /// True from spawn until the worker loop returns — by any path,
+    /// including a panic (the [`HealthGuard`] drop runs during unwind).
+    healthy: std::sync::atomic::AtomicBool,
 }
 
+/// Marks the worker unhealthy when its thread exits — normal return,
+/// step error, backend-init failure, or panic unwind all drop it.
+struct HealthGuard(Arc<WorkerShared>);
+
+impl Drop for HealthGuard {
+    fn drop(&mut self) {
+        self.0
+            .healthy
+            .store(false, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+/// The backend factory a worker (re)spawn runs on its own thread. `Fn`
+/// (not `FnOnce`) so supervision can respawn a dead worker from the
+/// same recipe.
+pub type BackendFactory =
+    Arc<dyn Fn() -> crate::Result<Box<dyn ModelBackend>> + Send + Sync>;
+
 /// A worker thread owning an [`Engine`]; requests and cancels in,
-/// [`EngineEvent`]s out.
+/// [`EngineEvent`]s out. Keeps its spawn recipe (factory + config) so a
+/// supervisor can [`Self::respawn`] an identical replacement after a
+/// crash.
 pub struct EngineHandle {
     tx: mpsc::Sender<Msg>,
     pub rx: std::sync::Mutex<mpsc::Receiver<EngineEvent>>,
     join: Option<std::thread::JoinHandle<()>>,
     shared: Arc<WorkerShared>,
+    factory: BackendFactory,
+    cfg: EngineConfig,
+    eos_token: i32,
+    telemetry_spec: Option<(Arc<Telemetry>, usize)>,
     kv_format: &'static str,
     kv_policy: String,
     spec_mode: &'static str,
@@ -1753,12 +1992,13 @@ pub struct EngineHandle {
 
 impl EngineHandle {
     /// Spawn the engine loop on its own thread. `make_backend` runs on
-    /// the worker thread (PJRT handles are not Send).
+    /// the worker thread (PJRT handles are not Send) and is retained
+    /// for supervision respawns.
     pub fn spawn<F>(make_backend: F, cfg: EngineConfig, eos_token: i32) -> EngineHandle
     where
-        F: FnOnce() -> crate::Result<Box<dyn ModelBackend>> + Send + 'static,
+        F: Fn() -> crate::Result<Box<dyn ModelBackend>> + Send + Sync + 'static,
     {
-        Self::spawn_inner(make_backend, cfg, eos_token, None)
+        Self::spawn_inner(Arc::new(make_backend), cfg, eos_token, None)
     }
 
     /// [`Self::spawn`] with the shared telemetry registry attached:
@@ -1772,20 +2012,31 @@ impl EngineHandle {
         worker: usize,
     ) -> EngineHandle
     where
-        F: FnOnce() -> crate::Result<Box<dyn ModelBackend>> + Send + 'static,
+        F: Fn() -> crate::Result<Box<dyn ModelBackend>> + Send + Sync + 'static,
     {
-        Self::spawn_inner(make_backend, cfg, eos_token, Some((telemetry, worker)))
+        Self::spawn_inner(Arc::new(make_backend), cfg, eos_token, Some((telemetry, worker)))
     }
 
-    fn spawn_inner<F>(
-        make_backend: F,
+    /// Spawn a fresh worker from this handle's recipe: same backend
+    /// factory, config, eos token, and telemetry label. Used by router
+    /// supervision after detecting a dead worker; the replacement
+    /// starts with an empty engine, so the supervisor re-dispatches the
+    /// dead worker's requests (bit-exact for seeded/greedy sampling).
+    pub fn respawn(&self) -> EngineHandle {
+        Self::spawn_inner(
+            self.factory.clone(),
+            self.cfg.clone(),
+            self.eos_token,
+            self.telemetry_spec.clone(),
+        )
+    }
+
+    fn spawn_inner(
+        make_backend: BackendFactory,
         cfg: EngineConfig,
         eos_token: i32,
         telemetry: Option<(Arc<Telemetry>, usize)>,
-    ) -> EngineHandle
-    where
-        F: FnOnce() -> crate::Result<Box<dyn ModelBackend>> + Send + 'static,
-    {
+    ) -> EngineHandle {
         let kv_format = cfg.kv_format.name();
         let kv_policy = KvPolicy::format_layers(&cfg.kv_precision_policies);
         let spec_mode = cfg.spec.name();
@@ -1793,8 +2044,17 @@ impl EngineHandle {
         let (tx, rx_msg) = mpsc::channel::<Msg>();
         let (tx_ev, rx) = mpsc::channel::<EngineEvent>();
         let shared = Arc::new(WorkerShared::default());
+        shared
+            .healthy
+            .store(true, std::sync::atomic::Ordering::Relaxed);
         let shared2 = shared.clone();
+        let factory = make_backend.clone();
+        let thread_cfg = cfg.clone();
+        let thread_telemetry = telemetry.clone();
         let join = std::thread::spawn(move || {
+            let _health = HealthGuard(shared2.clone());
+            let cfg = thread_cfg;
+            let telemetry = thread_telemetry;
             let backend = match make_backend() {
                 Ok(b) => b,
                 Err(e) => {
@@ -1898,11 +2158,24 @@ impl EngineHandle {
             rx: std::sync::Mutex::new(rx),
             join: Some(join),
             shared,
+            factory,
+            cfg,
+            eos_token,
+            telemetry_spec: telemetry,
             kv_format,
             kv_policy,
             spec_mode,
             spec_k,
         }
+    }
+
+    /// Whether the worker thread is still running its engine loop.
+    /// False from the moment the thread exits (panic, step error, or
+    /// backend-init failure) until a [`Self::respawn`] replaces it.
+    pub fn healthy(&self) -> bool {
+        self.shared
+            .healthy
+            .load(std::sync::atomic::Ordering::Relaxed)
     }
 
     pub fn submit(&self, req: Request) -> crate::Result<()> {
@@ -3148,5 +3421,138 @@ mod tests {
         assert!(!r.output.is_empty());
         assert!(r.output.len() < 60);
         h.shutdown();
+    }
+
+    #[test]
+    fn queued_deadline_times_out_with_clean_pool() {
+        let mut e = engine();
+        let mut r = req(1, 6, 8);
+        r.sampling.deadline_ms = 1;
+        assert!(e.submit(r).is_none());
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let evs = e.run_until_idle_events().unwrap();
+        let resp = evs.iter().find_map(EngineEvent::as_finished).expect("terminal");
+        assert_eq!(resp.finish, FinishReason::Timeout);
+        assert_eq!(e.stats.timeouts, 1);
+        assert_eq!(e.stats.cancelled, 0);
+        assert_eq!(e.kv_bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn request_timeout_cancels_mid_generation() {
+        let cfg = EngineConfig {
+            max_new_tokens: 80,
+            decode_slice: 1,
+            request_timeout_ms: 30,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        let mut r = req(7, 6, 80);
+        r.sampling.ignore_eos = true;
+        assert!(e.submit(r).is_none());
+        // A few manual steps: admit, prefill, and the first decode
+        // tokens — far from the 80-token budget, so the request is
+        // mid-generation when the clock runs out.
+        let mut early = Vec::new();
+        for _ in 0..3 {
+            early.extend(e.step().unwrap());
+        }
+        assert!(
+            early.iter().all(|ev| ev.as_finished().is_none()),
+            "must still be generating before the deadline"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(45));
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        let mut finish = None;
+        while finish.is_none() && std::time::Instant::now() < deadline {
+            for ev in e.step().unwrap() {
+                if let EngineEvent::Finished(resp) = ev {
+                    finish = Some(resp);
+                }
+            }
+        }
+        let resp = finish.expect("timed out before the 30 s harness bound");
+        assert_eq!(resp.finish, FinishReason::Timeout);
+        assert!(!resp.output.is_empty(), "generation was underway");
+        // The teardown released every holding (recount-checked inside
+        // finish_early; the gauge must agree).
+        assert_eq!(e.kv_bytes_in_use(), 0);
+        assert_eq!(e.stats.timeouts, 1);
+    }
+
+    #[test]
+    fn deadline_cause_prefers_queue_then_deadline_then_request() {
+        let cfg = EngineConfig {
+            request_timeout_ms: 100,
+            queue_timeout_ms: 50,
+            ..Default::default()
+        };
+        let e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        let mut r = req(1, 6, 4);
+        r.sampling.deadline_ms = 80;
+        let t = Tracked::new(r);
+        assert_eq!(e.deadline_cause(&t, true, 60), Some("queue"));
+        assert_eq!(e.deadline_cause(&t, false, 60), None);
+        assert_eq!(e.deadline_cause(&t, false, 85), Some("deadline"));
+        assert_eq!(e.deadline_cause(&t, true, 85), Some("queue"));
+        let t2 = Tracked::new(req(2, 6, 4));
+        assert_eq!(e.deadline_cause(&t2, false, 85), None);
+        assert_eq!(e.deadline_cause(&t2, false, 150), Some("request"));
+    }
+
+    #[test]
+    fn shed_policy_degrades_then_sheds_with_retry_hint() {
+        // Probe the format's bytes/token, then pin a 64-token budget.
+        let bpt = engine().stats.kv_bytes_per_token as usize;
+        let cfg = EngineConfig {
+            max_new_tokens: 24,
+            kv_budget_bytes: bpt * 64,
+            shed_policy: crate::config::ShedPolicy::Degrade,
+            ..Default::default()
+        };
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        assert!(e.submit(req(1, 24, 24)).is_none(), "first fits the budget");
+        assert!(!e.is_degraded());
+        // Second projects over budget: degrade and keep queueing.
+        assert!(e.submit(req(2, 24, 24)).is_none());
+        assert!(e.is_degraded());
+        // Third, still over pressure while degraded: shed.
+        let resp = e.submit(req(3, 24, 24)).expect("third submission is shed");
+        assert_eq!(resp.finish, FinishReason::Rejected);
+        let retry = resp.retry_after_ms.expect("shed responses carry a retry hint");
+        assert!((50..=10_000).contains(&retry), "retry {retry}ms outside bounds");
+        assert_eq!(e.stats.shed, 1);
+        // The queued work still completes under the degraded config.
+        let resps = e.run_until_idle().unwrap();
+        assert_eq!(resps.len(), 2);
+        assert_eq!(e.kv_bytes_in_use(), 0);
+        // Pressure cleared: the next fitting submit restores full mode.
+        assert!(e.submit(req(4, 24, 8)).is_none());
+        assert!(!e.is_degraded());
+        let _ = e.run_until_idle().unwrap();
+    }
+
+    #[test]
+    fn handle_reports_health_and_respawns_identically() {
+        let h = EngineHandle::spawn(
+            || Ok(Box::new(HostBackend::for_tests()) as Box<dyn crate::runtime::ModelBackend>),
+            EngineConfig { max_new_tokens: 8, ..Default::default() },
+            5,
+        );
+        assert!(h.healthy());
+        // A respawned handle works standalone from the same recipe.
+        let h2 = h.respawn();
+        h2.submit(req(1, 6, 4)).unwrap();
+        let ev = h2
+            .rx
+            .lock()
+            .unwrap()
+            .recv_timeout(std::time::Duration::from_secs(30));
+        assert!(ev.is_ok(), "respawned worker serves requests");
+        h2.shutdown();
+        // Shutdown flips the health gauge (the guard drops on return).
+        let shared = h.shared.clone();
+        h.shutdown();
+        assert!(!shared.healthy.load(std::sync::atomic::Ordering::Relaxed));
     }
 }

@@ -49,6 +49,12 @@ pub struct SamplingParams {
     /// Report per-token logprobs in `Token` events and the terminal
     /// candidates (the wire shape only grows when this is set).
     pub logprobs: bool,
+    /// Per-request wall-clock budget in milliseconds measured from
+    /// submission; 0 means no per-request deadline. Enforced at the
+    /// engine step boundary (finish reason `timeout`), combined with
+    /// the server-wide `--request-timeout-ms` / `--queue-timeout-ms`
+    /// knobs — whichever bound is tighter wins.
+    pub deadline_ms: u64,
 }
 
 impl Default for SamplingParams {
@@ -63,6 +69,7 @@ impl Default for SamplingParams {
             n: 1,
             best_of: 0,
             logprobs: false,
+            deadline_ms: 0,
         }
     }
 }
@@ -116,6 +123,9 @@ pub enum FinishReason {
     Rejected,
     /// Cancelled by the client (or its connection going away).
     Cancelled,
+    /// Exceeded its deadline (`deadline_ms`, `--request-timeout-ms`,
+    /// or `--queue-timeout-ms`) and was cancelled by the engine.
+    Timeout,
 }
 
 impl FinishReason {
@@ -127,6 +137,7 @@ impl FinishReason {
             FinishReason::CacheFull => "cache_full",
             FinishReason::Rejected => "rejected",
             FinishReason::Cancelled => "cancelled",
+            FinishReason::Timeout => "timeout",
         }
     }
 }
@@ -172,6 +183,10 @@ pub struct Response {
     pub ttft_ms: f64,
     /// Error detail when rejected.
     pub error: Option<String>,
+    /// When the engine shed this request under KV pressure
+    /// (`--shed-policy`): suggested client backoff, computed from the
+    /// rolling decode-throughput window. `None` everywhere else.
+    pub retry_after_ms: Option<u64>,
 }
 
 /// One item of a request's incremental event stream.
@@ -196,6 +211,13 @@ pub enum EngineEvent {
         logprob: f32,
         decode_ms: f64,
     },
+    /// The group's worker died and a supervisor replayed the request on
+    /// a fresh engine. The seeded sampler regenerates the first
+    /// `replayed_tokens` tokens of each candidate bit-exactly, so the
+    /// router suppresses them and the client's stream continues with
+    /// consistent indices; this event tells streaming clients a restart
+    /// happened (and batch clients nothing changed).
+    Restarted { id: u64, replayed_tokens: usize },
     /// Terminal: the request finished, failed, or was cancelled.
     Finished(Response),
 }
@@ -203,7 +225,9 @@ pub enum EngineEvent {
 impl EngineEvent {
     pub fn id(&self) -> u64 {
         match self {
-            EngineEvent::Started { id, .. } | EngineEvent::Token { id, .. } => *id,
+            EngineEvent::Started { id, .. }
+            | EngineEvent::Token { id, .. }
+            | EngineEvent::Restarted { id, .. } => *id,
             EngineEvent::Finished(r) => r.id,
         }
     }
@@ -212,7 +236,9 @@ impl EngineEvent {
     /// client-supplied ones).
     pub fn set_id(&mut self, new_id: u64) {
         match self {
-            EngineEvent::Started { id, .. } | EngineEvent::Token { id, .. } => *id = new_id,
+            EngineEvent::Started { id, .. }
+            | EngineEvent::Token { id, .. }
+            | EngineEvent::Restarted { id, .. } => *id = new_id,
             EngineEvent::Finished(r) => r.id = new_id,
         }
     }
@@ -307,6 +333,7 @@ impl Tracked {
             decode_ms: self.decode_ms,
             ttft_ms: self.ttft_ms,
             error: None,
+            retry_after_ms: None,
         }
     }
 }
@@ -321,6 +348,7 @@ mod tests {
         assert_eq!(FinishReason::Stop.as_str(), "stop");
         assert_eq!(FinishReason::Length.as_str(), "length");
         assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
+        assert_eq!(FinishReason::Timeout.as_str(), "timeout");
     }
 
     #[test]

@@ -16,8 +16,9 @@ use super::engine::EngineHandle;
 use super::request::{EngineEvent, Request, Response};
 use crate::telemetry::{Telemetry, WorkerGauges};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::TryRecvError;
+use std::sync::{Arc, Mutex, RwLock};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
@@ -57,14 +58,34 @@ fn prefix_hash(tokens: &[i32], dma: bool, chunk_tokens: usize) -> u64 {
     h
 }
 
+/// Everything the router needs to recover one in-flight request after
+/// its worker dies: the original request (replayed verbatim on the
+/// replacement engine — per-request seeded sampling makes the rerun
+/// bit-exact) and the per-candidate count of tokens already forwarded
+/// to the client, so the replayed prefix is suppressed and stream
+/// indices stay consistent.
+struct OwnerState {
+    worker: usize,
+    req: Request,
+    /// A `Started` event was forwarded (replay duplicates are dropped).
+    started: bool,
+    /// Next expected token `index` per candidate — tokens below this
+    /// are replays of already-streamed output.
+    emitted: Vec<usize>,
+}
+
 pub struct Router {
-    workers: Vec<EngineHandle>,
+    /// `RwLock` per slot so supervision can swap a dead handle for a
+    /// fresh one while submits on other workers proceed.
+    workers: Vec<RwLock<EngineHandle>>,
     policy: Policy,
     next: AtomicUsize,
     /// Rotation cursor of the event fan-in (fair drain start).
     drain_from: AtomicUsize,
-    /// In-flight request id -> owning worker (for cancel routing).
-    owners: Mutex<HashMap<u64, usize>>,
+    /// In-flight request id -> owning worker + replay state.
+    owners: Mutex<HashMap<u64, OwnerState>>,
+    /// Workers respawned after a crash (see [`Router::restarts`]).
+    restarts: AtomicU64,
     /// Serving telemetry shared with the workers (`None` = disabled).
     telemetry: Option<Arc<Telemetry>>,
 }
@@ -73,11 +94,12 @@ impl Router {
     pub fn new(workers: Vec<EngineHandle>, policy: Policy) -> Router {
         assert!(!workers.is_empty(), "router needs at least one worker");
         Router {
-            workers,
+            workers: workers.into_iter().map(RwLock::new).collect(),
             policy,
             next: AtomicUsize::new(0),
             drain_from: AtomicUsize::new(0),
             owners: Mutex::new(HashMap::new()),
+            restarts: AtomicU64::new(0),
             telemetry: None,
         }
     }
@@ -111,55 +133,76 @@ impl Router {
 
     /// KV-cache storage format of the fleet (workers share one config).
     pub fn kv_format(&self) -> &'static str {
-        self.workers[0].kv_format()
+        self.workers[0].read().unwrap().kv_format()
     }
 
     /// Precision policy spec of the fleet (workers share one config).
-    pub fn kv_policy(&self) -> &str {
-        self.workers[0].kv_policy()
+    pub fn kv_policy(&self) -> String {
+        self.workers[0].read().unwrap().kv_policy().to_string()
     }
 
     /// Speculative-decoding mode of the fleet (workers share one
     /// config): `off` | `prompt-lookup`.
     pub fn spec_mode(&self) -> &'static str {
-        self.workers[0].spec_mode()
+        self.workers[0].read().unwrap().spec_mode()
     }
 
     /// Draft tokens per speculative round of the fleet.
     pub fn spec_k(&self) -> usize {
-        self.workers[0].spec_k()
+        self.workers[0].read().unwrap().spec_k()
     }
 
     /// Prompt tokens served from prefix caches across all workers.
     pub fn prefix_hit_tokens(&self) -> u64 {
-        self.workers.iter().map(EngineHandle::prefix_hit_tokens).sum()
+        self.workers
+            .iter()
+            .map(|w| w.read().unwrap().prefix_hit_tokens())
+            .sum()
     }
 
     /// KV pool bytes currently referenced across all workers.
     pub fn kv_bytes_in_use(&self) -> u64 {
-        self.workers.iter().map(EngineHandle::kv_bytes_in_use).sum()
+        self.workers
+            .iter()
+            .map(|w| w.read().unwrap().kv_bytes_in_use())
+            .sum()
     }
 
     /// Decoded-page cache hits across all workers.
     pub fn decoded_cache_hits(&self) -> u64 {
-        self.workers.iter().map(EngineHandle::decoded_cache_hits).sum()
+        self.workers
+            .iter()
+            .map(|w| w.read().unwrap().decoded_cache_hits())
+            .sum()
     }
 
     /// Decoded-page cache misses across all workers.
     pub fn decoded_cache_misses(&self) -> u64 {
-        self.workers.iter().map(EngineHandle::decoded_cache_misses).sum()
+        self.workers
+            .iter()
+            .map(|w| w.read().unwrap().decoded_cache_misses())
+            .sum()
     }
 
-    /// Per-worker queue-depth and KV-pressure gauges, sampled from each
-    /// worker's published atomics (index = worker index).
+    /// Workers respawned after a crash since this router started.
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// Per-worker queue-depth, KV-pressure, and liveness gauges, sampled
+    /// from each worker's published atomics (index = worker index).
     pub fn worker_gauges(&self) -> Vec<WorkerGauges> {
         self.workers
             .iter()
-            .map(|w| WorkerGauges {
-                queue_depth: w.load() as u64,
-                kv_bytes_in_use: w.kv_bytes_in_use(),
-                kv_bytes_capacity: w.kv_bytes_capacity(),
-                decoded_bytes_live: w.decoded_bytes_live(),
+            .map(|w| {
+                let w = w.read().unwrap();
+                WorkerGauges {
+                    queue_depth: w.load() as u64,
+                    kv_bytes_in_use: w.kv_bytes_in_use(),
+                    kv_bytes_capacity: w.kv_bytes_capacity(),
+                    decoded_bytes_live: w.decoded_bytes_live(),
+                    healthy: w.healthy(),
+                }
             })
             .collect()
     }
@@ -169,7 +212,7 @@ impl Router {
     pub fn kv_page_stats(&self) -> crate::metrics::KvPageStats {
         let mut total = crate::metrics::KvPageStats::default();
         for w in &self.workers {
-            total.merge(w.kv_page_stats());
+            total.merge(w.read().unwrap().kv_page_stats());
         }
         total
     }
@@ -185,7 +228,7 @@ impl Router {
                 let mut best = 0;
                 let mut best_load = usize::MAX;
                 for (i, w) in self.workers.iter().enumerate() {
-                    let l = w.load();
+                    let l = w.read().unwrap().load();
                     if l < best_load {
                         best_load = l;
                         best = i;
@@ -210,10 +253,20 @@ impl Router {
     pub fn submit(&self, req: Request) -> crate::Result<usize> {
         let w = self.pick_for(&req);
         let id = req.id;
-        // Register ownership before the send so the terminal event can
-        // never race the map insert.
-        self.owners.lock().unwrap().insert(id, w);
-        if let Err(e) = self.workers[w].submit(req) {
+        let group = req.sampling.group_size();
+        // Register ownership (with a clone of the request for crash
+        // replay) before the send so the terminal event can never race
+        // the map insert.
+        self.owners.lock().unwrap().insert(
+            id,
+            OwnerState {
+                worker: w,
+                req: req.clone(),
+                started: false,
+                emitted: vec![0; group],
+            },
+        );
+        if let Err(e) = self.workers[w].read().unwrap().submit(req) {
             self.owners.lock().unwrap().remove(&id);
             return Err(e);
         }
@@ -223,10 +276,10 @@ impl Router {
     /// Route a cancel to the worker owning `id`. Returns false when the
     /// id is not in flight (unknown or already drained as finished).
     pub fn cancel(&self, id: u64) -> crate::Result<bool> {
-        let w = self.owners.lock().unwrap().get(&id).copied();
+        let w = self.owners.lock().unwrap().get(&id).map(|s| s.worker);
         match w {
             Some(i) => {
-                self.workers[i].cancel(id)?;
+                self.workers[i].read().unwrap().cancel(id)?;
                 Ok(true)
             }
             None => Ok(false),
@@ -237,10 +290,10 @@ impl Router {
     /// owner map is keyed by group — candidates never route
     /// independently). Returns false when the id is not in flight.
     pub fn cancel_candidate(&self, id: u64, cand: usize) -> crate::Result<bool> {
-        let w = self.owners.lock().unwrap().get(&id).copied();
+        let w = self.owners.lock().unwrap().get(&id).map(|s| s.worker);
         match w {
             Some(i) => {
-                self.workers[i].cancel_candidate(id, cand)?;
+                self.workers[i].read().unwrap().cancel_candidate(id, cand)?;
                 Ok(true)
             }
             None => Ok(false),
@@ -257,6 +310,7 @@ impl Router {
         let start = self.drain_from.fetch_add(1, Ordering::Relaxed) % w;
         let mut out = Vec::new();
         let mut dry = vec![false; w];
+        let mut dead: Vec<usize> = Vec::new();
         while out.len() < n {
             let mut progressed = false;
             for k in 0..w {
@@ -267,20 +321,32 @@ impl Router {
                 if dry[i] {
                     continue;
                 }
-                match self.workers[i].rx.lock().unwrap().try_recv() {
+                let polled = self.workers[i].read().unwrap().rx.lock().unwrap().try_recv();
+                match polled {
                     Ok(ev) => {
-                        if let EngineEvent::Finished(r) = &ev {
-                            self.owners.lock().unwrap().remove(&r.id);
+                        if let Some(ev) = self.filter_event(ev) {
+                            out.push(ev);
                         }
-                        out.push(ev);
                         progressed = true;
                     }
-                    Err(_) => dry[i] = true,
+                    Err(TryRecvError::Empty) => dry[i] = true,
+                    // The sender dropped: the worker thread is gone.
+                    // mpsc delivers every buffered event before
+                    // reporting disconnection, so at this point all
+                    // output the dead engine produced has been
+                    // forwarded — the emitted counts are exact.
+                    Err(TryRecvError::Disconnected) => {
+                        dry[i] = true;
+                        dead.push(i);
+                    }
                 }
             }
             if !progressed {
                 break;
             }
+        }
+        for i in dead {
+            self.supervise(i, &mut out);
         }
         // Only productive drains are recorded — the poll loop spins on
         // empty polls, which would swamp the histogram with zeros.
@@ -290,6 +356,95 @@ impl Router {
             }
         }
         out
+    }
+
+    /// Per-event replay bookkeeping on the fan-in path. Tracks how much
+    /// of each candidate's stream has been forwarded and drops events a
+    /// post-crash replay regenerates (`Started` duplicates and tokens
+    /// below the per-candidate high-water mark — bit-exact by the
+    /// seeded-sampler argument, so suppression is lossless).
+    fn filter_event(&self, ev: EngineEvent) -> Option<EngineEvent> {
+        match &ev {
+            EngineEvent::Started { id, .. } => {
+                let mut owners = self.owners.lock().unwrap();
+                if let Some(st) = owners.get_mut(id) {
+                    if st.started {
+                        return None;
+                    }
+                    st.started = true;
+                }
+                Some(ev)
+            }
+            EngineEvent::Token { id, candidate, index, .. } => {
+                let mut owners = self.owners.lock().unwrap();
+                if let Some(st) = owners.get_mut(id) {
+                    if let Some(mark) = st.emitted.get_mut(*candidate) {
+                        if *index < *mark {
+                            return None;
+                        }
+                        *mark = *index + 1;
+                    }
+                }
+                Some(ev)
+            }
+            EngineEvent::Finished(r) => {
+                self.owners.lock().unwrap().remove(&r.id);
+                Some(ev)
+            }
+            EngineEvent::Restarted { .. } => Some(ev),
+        }
+    }
+
+    /// Recover worker `i` after its thread died: swap in a fresh engine
+    /// spawned from the same recipe and re-dispatch every group the
+    /// dead worker owned — queued and mid-generation alike — from the
+    /// original request. Seeded/greedy sampling regenerates the exact
+    /// token sequence, [`Self::filter_event`] suppresses the
+    /// already-streamed prefix, and streaming clients get a
+    /// [`EngineEvent::Restarted`] marker per started group.
+    fn supervise(&self, i: usize, out: &mut Vec<EngineEvent>) {
+        let mut slot = self.workers[i].write().unwrap();
+        // Another poll may have supervised this slot between our drain
+        // and this lock; a healthy replacement means nothing to do.
+        if slot.healthy() {
+            return;
+        }
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = &self.telemetry {
+            t.worker_restarts.inc();
+        }
+        let fresh = slot.respawn();
+        // Dropping the old handle joins the dead thread (immediate) and
+        // releases its channels.
+        let _dead = std::mem::replace(&mut *slot, fresh);
+        // Deterministic replay order: ascending id, independent of map
+        // iteration order.
+        let mut owned: Vec<(u64, Request, bool, usize)> = self
+            .owners
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, st)| st.worker == i)
+            .map(|(&id, st)| {
+                (id, st.req.clone(), st.started, st.emitted.first().copied().unwrap_or(0))
+            })
+            .collect();
+        owned.sort_unstable_by_key(|&(id, ..)| id);
+        for (id, req, started, replayed_tokens) in owned {
+            if let Err(e) = slot.submit(req) {
+                // The replacement died on arrival (e.g. backend init
+                // failed); a later poll will supervise it again and
+                // retry the re-dispatch.
+                eprintln!("router: re-dispatch of request {id} failed: {e:#}");
+                continue;
+            }
+            if let Some(t) = &self.telemetry {
+                t.requests_replayed.inc();
+            }
+            if started {
+                out.push(EngineEvent::Restarted { id, replayed_tokens });
+            }
+        }
     }
 
     /// Blocking collect of exactly `n` terminal responses (round-robin
@@ -311,7 +466,7 @@ impl Router {
 
     pub fn shutdown(self) {
         for w in self.workers {
-            w.shutdown();
+            w.into_inner().unwrap().shutdown();
         }
     }
 }
@@ -430,7 +585,7 @@ mod tests {
         // Wait until both workers finished (loads back to zero), so both
         // channels hold their full event streams.
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
-        while (r.workers[0].load() > 0 || r.workers[1].load() > 0)
+        while (r.workers[0].read().unwrap().load() > 0 || r.workers[1].read().unwrap().load() > 0)
             && std::time::Instant::now() < deadline
         {
             std::thread::sleep(std::time::Duration::from_millis(5));
@@ -536,5 +691,204 @@ mod tests {
         assert_eq!(resp.finish, crate::coordinator::FinishReason::Cancelled);
         assert!(!r.cancel(7).unwrap(), "drained id no longer in flight");
         r.shutdown();
+    }
+
+    // --- chaos: crash recovery under injected faults ------------------
+
+    /// Per-id token stream: (candidate, index, token) in arrival order.
+    type TokenStreams = std::collections::BTreeMap<u64, Vec<(usize, usize, i32)>>;
+
+    /// Fixed-length greedy request; `key` varies the prompt so distinct
+    /// keys produce distinct deterministic streams (greedy sampling
+    /// depends only on the prompt, never on the id).
+    fn stream_req(id: u64, key: u64, len: usize, max_new: usize) -> Request {
+        Request {
+            id,
+            tokens: (0..len)
+                .map(|i| ((i * 13 + key as usize * 7) % 58) as i32 + 6)
+                .collect(),
+            max_new_tokens: max_new,
+            dma: false,
+            sampling: SamplingParams { ignore_eos: true, ..Default::default() },
+        }
+    }
+
+    /// Poll until `expect` terminal responses arrive, recording every
+    /// forwarded token and `Restarted` marker. Errs instead of hanging.
+    fn drain_all(
+        r: &Router,
+        expect: usize,
+        secs: u64,
+    ) -> Result<(TokenStreams, std::collections::BTreeMap<u64, Response>, usize), String> {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(secs);
+        let mut tokens = TokenStreams::new();
+        let mut resps = std::collections::BTreeMap::new();
+        let mut restarted = 0usize;
+        while resps.len() < expect {
+            if std::time::Instant::now() >= deadline {
+                return Err(format!(
+                    "drain hung: {} of {expect} responses after {secs}s",
+                    resps.len()
+                ));
+            }
+            let evs = r.poll_events(64);
+            if evs.is_empty() {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            for ev in evs {
+                match ev {
+                    EngineEvent::Token { id, candidate, index, token, .. } => {
+                        tokens.entry(id).or_default().push((candidate, index, token));
+                    }
+                    EngineEvent::Restarted { .. } => restarted += 1,
+                    EngineEvent::Finished(resp) => {
+                        resps.insert(resp.id, resp);
+                    }
+                    EngineEvent::Started { .. } => {}
+                }
+            }
+        }
+        Ok((tokens, resps, restarted))
+    }
+
+    /// Wait for every worker's published KV gauge to drain to zero.
+    fn pool_drains(r: &Router, secs: u64) -> bool {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(secs);
+        while r.kv_bytes_in_use() > 0 {
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        true
+    }
+
+    #[test]
+    fn worker_crash_replays_streams_bit_exactly() {
+        use crate::util::failpoint;
+        let _g = failpoint::exclusive();
+        failpoint::clear();
+        // Fault-free baseline: one deterministic stream per prompt key.
+        let r = Router::new(spawn_workers(2), Policy::RoundRobin);
+        for k in 0..4u64 {
+            r.submit(stream_req(k, k, 8, 16)).unwrap();
+        }
+        let (base_tokens, base_resps, base_restarted) =
+            drain_all(&r, 4, 120).expect("baseline");
+        assert_eq!(base_restarted, 0);
+        r.shutdown();
+
+        // Same prompts under a deterministic decode-path panic schedule.
+        // Waves of fresh ids advance the schedule's hit counter until a
+        // fault actually fires (hit indices are monotonic across waves,
+        // so which wave fires is fixed by the seed, not by timing).
+        failpoint::configure("decode_step:panic:0.05", 0xC0FFEE).unwrap();
+        let r = Router::new(spawn_workers(2), Policy::RoundRobin);
+        for wave in 0..10u64 {
+            let ids: Vec<u64> = (0..4).map(|k| wave * 4 + k).collect();
+            for &id in &ids {
+                r.submit(stream_req(id, id % 4, 8, 16)).unwrap();
+            }
+            let (tokens, resps, _) = drain_all(&r, 4, 120).expect("chaos wave");
+            // Bit-exact modulo Restarted markers: streams and terminal
+            // outputs match the fault-free run.
+            for &id in &ids {
+                let k = id % 4;
+                assert_eq!(tokens[&id], base_tokens[&k], "stream diverged (id {id})");
+                assert_eq!(resps[&id].output, base_resps[&k].output);
+                assert_eq!(resps[&id].finish, base_resps[&k].finish);
+            }
+            if failpoint::fired("decode_step") > 0 {
+                break;
+            }
+        }
+        let fired = failpoint::fired("decode_step");
+        let restarts = r.restarts();
+        failpoint::clear();
+        assert!(fired > 0, "schedule never fired across 10 waves");
+        assert!(restarts > 0, "a decode-path panic must respawn the worker");
+        assert!(pool_drains(&r, 30), "KV bytes did not drain after recovery");
+        assert!(
+            r.worker_gauges().iter().all(|g| g.healthy),
+            "all workers healthy after supervision"
+        );
+        r.shutdown();
+    }
+
+    #[test]
+    fn restarted_marker_reports_replayed_prefix() {
+        use crate::util::failpoint;
+        let _g = failpoint::exclusive();
+        // Every decode step panics until cleared: the single worker
+        // dies as soon as request 0 reaches decoding, with zero tokens
+        // emitted beyond the prefill token.
+        failpoint::configure("decode_step:panic:1", 1).unwrap();
+        let r = Router::new(spawn_workers(1), Policy::RoundRobin);
+        r.submit(stream_req(0, 0, 8, 6)).unwrap();
+        // Drain until the first Restarted marker shows up.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        let mut replayed = None;
+        while replayed.is_none() {
+            assert!(std::time::Instant::now() < deadline, "no Restarted marker");
+            for ev in r.poll_events(16) {
+                if let EngineEvent::Restarted { id, replayed_tokens } = ev {
+                    assert_eq!(id, 0);
+                    replayed = Some(replayed_tokens);
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        // The marker counts exactly the tokens forwarded before death.
+        let forwarded = replayed.unwrap();
+        assert!(forwarded <= 2, "died at the first decode: {forwarded} tokens");
+        failpoint::clear();
+        // With faults gone the replay completes normally.
+        let (_, resps, _) = drain_all(&r, 1, 120).expect("post-clear completion");
+        assert_eq!(resps[&0].output.len(), 6);
+        r.shutdown();
+    }
+
+    #[test]
+    fn chaos_property_random_schedules_recover() {
+        use crate::util::failpoint;
+        let _g = failpoint::exclusive();
+        failpoint::clear();
+        // Deterministic fault-free expectation per prompt key.
+        let r = Router::new(spawn_workers(2), Policy::RoundRobin);
+        for k in 0..4u64 {
+            r.submit(stream_req(k, k, 6, 10)).unwrap();
+        }
+        let (base_tokens, base_resps, _) = drain_all(&r, 4, 120).expect("baseline");
+        r.shutdown();
+        let sites = ["pool_admission:error", "decode_step:panic", "prefill_chunk:error"];
+        crate::util::prop::check("chaos_recovery", 3, |rng| {
+            let site = sites[rng.int_in(0, sites.len() as i64) as usize];
+            let prob = 0.02 + rng.uniform() * 0.1;
+            let seed = rng.int_in(0, i64::MAX) as u64;
+            failpoint::configure(&format!("{site}:{prob}"), seed)?;
+            let r = Router::new(spawn_workers(2), Policy::RoundRobin);
+            for k in 0..4u64 {
+                r.submit(stream_req(k, k, 6, 10)).unwrap();
+            }
+            let (tokens, resps, _) = drain_all(&r, 4, 120)?;
+            failpoint::clear();
+            for k in 0..4u64 {
+                crate::prop_assert!(
+                    tokens[&k] == base_tokens[&k],
+                    "stream {k} diverged under {site} (seed {seed})"
+                );
+                crate::prop_assert!(
+                    resps[&k].output == base_resps[&k].output,
+                    "output {k} diverged under {site} (seed {seed})"
+                );
+            }
+            crate::prop_assert!(
+                pool_drains(&r, 30),
+                "KV bytes did not drain under {site} (seed {seed})"
+            );
+            r.shutdown();
+            Ok(())
+        });
+        failpoint::clear();
     }
 }

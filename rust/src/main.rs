@@ -27,8 +27,12 @@ fn usage() -> ! {
          [--threads N] [--decoded-cache-mb MB] [--kv-budget-mb MB] \
          [--spec off|prompt-lookup] [--spec-k N] \
          [--writer-queue LINES] [--slow-reader-ms MS] \
+         [--max-line-bytes N] \
          [--route round-robin|least-loaded|prefix-affinity] \
-         [--trace-out FILE] [--metrics-sample-n N]"
+         [--trace-out FILE] [--metrics-sample-n N] \
+         [--request-timeout-ms MS] [--queue-timeout-ms MS] \
+         [--shed-policy off|degrade] \
+         [--fault SITE:KIND:PROB[:DELAY_MS]] [--fault-seed S]"
     );
     std::process::exit(2);
 }
@@ -106,6 +110,23 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
     if spec.enabled() && spec_k == 0 {
         anyhow::bail!("--spec {} needs --spec-k >= 1", spec.name());
     }
+    // Deterministic fault injection (see util::failpoint): the CLI spec
+    // wins over the DMA_FAULTS / DMA_FAULT_SEED environment. Armed
+    // before the workers spawn so every site fires from step one.
+    let fault_summary = match args.get("fault") {
+        Some(spec) => {
+            let fault_seed = args.usize_or("fault-seed", 0) as u64;
+            dma::util::failpoint::configure(spec, fault_seed)
+                .map_err(|e| anyhow::anyhow!("--fault: {e}"))?;
+            Some(format!("{spec} (seed {fault_seed})"))
+        }
+        None => dma::util::failpoint::configure_from_env()
+            .map_err(|e| anyhow::anyhow!("DMA_FAULTS: {e}"))?,
+    };
+    let shed_policy = match args.get("shed-policy") {
+        Some(s) => dma::config::ShedPolicy::parse(s)?,
+        None => dma::config::ShedPolicy::Off,
+    };
     let cfg = EngineConfig {
         artifact_dir: artifacts.clone().into(),
         max_new_tokens: args.usize_or("max-new-tokens", 32),
@@ -119,6 +140,9 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         metrics_sample_n,
         spec,
         spec_k,
+        request_timeout_ms: args.usize_or("request-timeout-ms", 0) as u64,
+        queue_timeout_ms: args.usize_or("queue-timeout-ms", 0) as u64,
+        shed_policy,
         ..Default::default()
     };
     let policy = match args.get_or("route", "least-loaded").as_str() {
@@ -165,12 +189,15 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
                 defaults.slow_reader_timeout.as_millis() as usize,
             ) as u64,
         ),
+        max_line_bytes: args
+            .usize_or("max-line-bytes", defaults.max_line_bytes)
+            .max(64),
     };
     println!(
         "dma: serving on {addr} ({} worker(s), route {}, kv cache {}, policy {}, \
          prefill chunk {}, prefix cache {}, threads {}, decoded cache {} MiB, \
          spec {}, writer queue {} lines / {} ms slow-reader timeout, trace {}, \
-         layer probe {})",
+         layer probe {}, shed {}, timeouts req/queue {}/{} ms, faults {})",
         workers,
         policy.name(),
         cfg.kv_format.name(),
@@ -191,7 +218,11 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
             format!("every {metrics_sample_n} steps")
         } else {
             "off".to_string()
-        }
+        },
+        cfg.shed_policy.name(),
+        cfg.request_timeout_ms,
+        cfg.queue_timeout_ms,
+        fault_summary.as_deref().unwrap_or("off")
     );
     dma::server::serve_with(&addr, router, opts, stop, |a| println!("dma: bound {a}"))
 }

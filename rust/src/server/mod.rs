@@ -1,6 +1,6 @@
 //! TCP JSON-lines serving front end (std::net — tokio is not vendored).
 //!
-//! Protocol v2.3: one JSON object per line.
+//! Protocol v2.4: one JSON object per line.
 //!
 //! Request fields (`tokens` required, everything else optional):
 //!
@@ -110,6 +110,37 @@
 //! `rounds` counts per-candidate verification rounds, and the token
 //! counters are cumulative across the fleet.
 //!
+//! New in v2.4 (resilience):
+//!
+//! * Requests accept `"deadline_ms"` — a total time budget measured
+//!   from enqueue. A request that exceeds it (or the server-wide
+//!   `--request-timeout-ms` / `--queue-timeout-ms` bounds) is finished
+//!   early with `"finish": "timeout"`, keeping whatever tokens it had
+//!   produced.
+//! * A summary rejected by KV-pressure load shedding
+//!   (`--shed-policy degrade`) carries `"retry_after_ms"` — the
+//!   client's backoff hint, derived from the rolling throughput window.
+//! * A streamed request that survived a worker crash sees one marker
+//!   line before its stream resumes:
+//!   `{"id": 1, "event": "restarted", "replayed_tokens": 3}`. The
+//!   request was re-dispatched from its prompt on a fresh worker;
+//!   the first `replayed_tokens` positions are regenerated internally
+//!   and (being greedy/seeded) reproduce the already-delivered tokens
+//!   bit-exactly, so they are *not* re-sent — the next `token` line
+//!   after the marker continues where the stream left off.
+//! * The telemetry-backed `stats` reply gains a nested `"resilience"`
+//!   object (`worker_restarts`, `requests_replayed`, `requests_shed`,
+//!   `deadline_cancels`), and the `metrics` exposition the matching
+//!   `dma_worker_restarts_total`, `dma_requests_replayed_total`,
+//!   `dma_requests_shed_total`, cause-labelled
+//!   `dma_deadline_cancels_total`, and per-worker `dma_worker_healthy`
+//!   families.
+//! * Connection hardening: an inbound line longer than
+//!   [`ServerOpts::max_line_bytes`] gets a structured `{"error": ...}`
+//!   reply and a clean close (the oversized tail is never buffered);
+//!   bytes that are not valid UTF-8, and a half-frame cut off by a
+//!   disconnect, get a structured error instead of a silent hang.
+//!
 //! **Back-pressure / slow readers.** Each connection's outbound lines
 //! flow through a *bounded* writer channel
 //! ([`ServerOpts::writer_queue_lines`]). When a client stops reading
@@ -148,6 +179,11 @@ pub struct ServerOpts {
     /// How long the dispatcher blocks on one connection's full queue
     /// before declaring it dead and auto-cancelling its requests.
     pub slow_reader_timeout: Duration,
+    /// Longest inbound line accepted. A longer line is answered with a
+    /// structured error and the connection is closed — the tail of the
+    /// oversized line is never pulled into memory, so a misbehaving (or
+    /// malicious) client cannot balloon the server's heap.
+    pub max_line_bytes: usize,
 }
 
 impl Default for ServerOpts {
@@ -155,6 +191,7 @@ impl Default for ServerOpts {
         ServerOpts {
             writer_queue_lines: 1024,
             slow_reader_timeout: Duration::from_secs(2),
+            max_line_bytes: 1 << 20,
         }
     }
 }
@@ -206,6 +243,11 @@ pub fn parse_request(line: &str, internal_id: u64) -> Result<ParsedRequest, Stri
         n: j.get("n").and_then(Json::as_usize).unwrap_or(1),
         best_of: j.get("best_of").and_then(Json::as_usize).unwrap_or(0),
         logprobs: j.get("logprobs").and_then(Json::as_bool).unwrap_or(false),
+        deadline_ms: j
+            .get("deadline_ms")
+            .and_then(Json::as_i64)
+            .map(|v| v.max(0) as u64)
+            .unwrap_or(0),
     };
     Ok(ParsedRequest {
         req: Request {
@@ -276,6 +318,9 @@ pub fn response_json(r: &Response, logprobs: bool) -> Json {
     if let Some(e) = &r.error {
         fields.push(("error", Json::str(e.clone())));
     }
+    if let Some(ms) = r.retry_after_ms {
+        fields.push(("retry_after_ms", Json::num(ms as f64)));
+    }
     Json::obj(fields)
 }
 
@@ -304,6 +349,11 @@ pub fn event_json(ev: &EngineEvent, stream: bool, logprobs: bool) -> Json {
             }
             Json::obj(fields)
         }
+        EngineEvent::Restarted { id, replayed_tokens } => Json::obj(vec![
+            ("id", Json::num(*id as f64)),
+            ("event", Json::str("restarted")),
+            ("replayed_tokens", Json::num(*replayed_tokens as f64)),
+        ]),
         EngineEvent::Finished(r) => {
             let mut j = response_json(r, logprobs);
             if stream {
@@ -363,6 +413,12 @@ type Pending = Arc<Mutex<HashMap<u64, PendingEntry>>>;
 /// when it is full. False means the line could not be delivered (queue
 /// still full — a slow reader — or the writer is gone).
 fn send_with_timeout(tx: &mpsc::SyncSender<String>, line: String, timeout: Duration) -> bool {
+    // Fault-injection site: an injected error here makes the line
+    // undeliverable, which the dispatcher treats exactly like a slow
+    // reader (connection abandoned, in-flight requests cancelled).
+    if crate::util::failpoint::check("writer_queue").is_err() {
+        return false;
+    }
     let mut line = match tx.try_send(line) {
         Ok(()) => return true,
         Err(mpsc::TrySendError::Disconnected(_)) => return false,
@@ -380,6 +436,81 @@ fn send_with_timeout(tx: &mpsc::SyncSender<String>, line: String, timeout: Durat
                 }
                 line = l;
             }
+        }
+    }
+}
+
+/// Outcome of one bounded line read ([`read_line_bounded`]).
+enum LineRead {
+    /// A complete line is in the buffer (terminator stripped). EOF with
+    /// trailing unterminated bytes — a frame cut off mid-line by a
+    /// disconnect — also lands here so the caller can report it; the
+    /// *next* read returns `Eof`.
+    Line,
+    /// Clean EOF: no pending bytes.
+    Eof,
+    /// The line exceeds the cap. The buffer holds a truncated prefix
+    /// and the remainder was left unconsumed — there is no way to
+    /// resync mid-line without buffering it, so the caller must close.
+    TooLong,
+}
+
+/// Read one `\n`-terminated line into `buf` without ever buffering more
+/// than `max` bytes of it. The unbounded-allocation alternative
+/// (`BufRead::read_line`) would let one hostile line grow the heap by
+/// its full length before the server could react.
+fn read_line_bounded(
+    r: &mut impl BufRead,
+    buf: &mut Vec<u8>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(if buf.is_empty() { LineRead::Eof } else { LineRead::Line });
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                if buf.len() + i > max {
+                    return Ok(LineRead::TooLong);
+                }
+                buf.extend_from_slice(&chunk[..i]);
+                r.consume(i + 1);
+                return Ok(LineRead::Line);
+            }
+            None => {
+                let n = chunk.len();
+                if buf.len() + n > max {
+                    return Ok(LineRead::TooLong);
+                }
+                buf.extend_from_slice(chunk);
+                r.consume(n);
+            }
+        }
+    }
+}
+
+/// Connection writer body: drain the bounded line queue onto the
+/// socket. Exits when every sender is gone, a write fails, *or* the
+/// connection is declared dead — the periodic dead-flag check is the
+/// point: a plain blocking `recv` would keep an abandoned connection's
+/// writer parked for as long as any sender clone survived (the reader
+/// thread can hold one for seconds while it times out a reply), leaking
+/// the thread pair the abandon was supposed to reap.
+fn writer_loop(rx: mpsc::Receiver<String>, mut sock: impl Write, ctl: &ConnCtl) {
+    loop {
+        if ctl.dead.load(Ordering::Relaxed) {
+            return; // dropping `rx` discards whatever was still queued
+        }
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(line) => {
+                if writeln!(sock, "{line}").is_err() {
+                    return;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
         }
     }
 }
@@ -526,7 +657,7 @@ fn handle_conn(
     next_id: &AtomicU64,
     opts: ServerOpts,
 ) -> crate::Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream.try_clone()?);
     let (tx_conn, rx_conn) = mpsc::sync_channel::<String>(opts.writer_queue_lines.max(1));
     // The connection id shares the request-id counter: both only need
     // uniqueness, and one counter cannot collide with itself.
@@ -540,15 +671,10 @@ fn handle_conn(
     // (from the dispatcher) and control replies (from the reader loop)
     // all arrive here as whole lines, so they can never interleave
     // mid-write. Runs until every sender (reader + dispatcher-held
-    // registrations) is gone.
-    let mut wstream = stream;
-    let writer_thread = std::thread::spawn(move || {
-        for line in rx_conn {
-            if writeln!(wstream, "{line}").is_err() {
-                break;
-            }
-        }
-    });
+    // registrations) is gone or the connection is declared dead.
+    let wstream = stream;
+    let wctl = ctl.clone();
+    let writer_thread = std::thread::spawn(move || writer_loop(rx_conn, wstream, &wctl));
     // Control replies ride the same bounded queue. A connection that
     // stopped reading gets its replies dropped after the timeout — the
     // dispatcher (or the EOF path below) tears it down.
@@ -563,13 +689,37 @@ fn handle_conn(
     // count, not the connection's lifetime history.
     let mut submitted: Vec<(u64, u64)> = Vec::new();
 
-    for line in reader.lines() {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
         if ctl.dead.load(Ordering::Relaxed) {
             break; // declared dead by the dispatcher (slow reader)
         }
-        let line = match line {
-            Ok(l) => l,
+        match read_line_bounded(&mut reader, &mut buf, opts.max_line_bytes) {
+            Ok(LineRead::Line) => {}
+            Ok(LineRead::Eof) => break,
+            Ok(LineRead::TooLong) => {
+                // Cannot resync mid-line without buffering the rest of
+                // it: report and close.
+                reply(Json::obj(vec![(
+                    "error",
+                    Json::str(format!(
+                        "line exceeds {} bytes; closing connection",
+                        opts.max_line_bytes
+                    )),
+                )]));
+                break;
+            }
             Err(_) => break, // reset mid-read: treat as a disconnect
+        }
+        let line = match std::str::from_utf8(&buf) {
+            Ok(s) => s,
+            Err(_) => {
+                reply(Json::obj(vec![(
+                    "error",
+                    Json::str("line is not valid UTF-8"),
+                )]));
+                continue;
+            }
         };
         if line.trim().is_empty() {
             continue;
@@ -670,6 +820,32 @@ fn handle_conn(
                                 (
                                     "rolled_back_tokens",
                                     Json::num(t.spec_rolled_back_tokens.get() as f64),
+                                ),
+                            ]),
+                        ));
+                        // Stats v2.4: resilience counters (worker
+                        // supervision, load shedding, deadlines).
+                        let deadline_cancels = t.deadline_cancels_request.get()
+                            + t.deadline_cancels_queue.get()
+                            + t.deadline_cancels_deadline.get();
+                        fields.push((
+                            "resilience",
+                            Json::obj(vec![
+                                (
+                                    "worker_restarts",
+                                    Json::num(router.restarts() as f64),
+                                ),
+                                (
+                                    "requests_replayed",
+                                    Json::num(t.requests_replayed.get() as f64),
+                                ),
+                                (
+                                    "requests_shed",
+                                    Json::num(t.requests_shed.get() as f64),
+                                ),
+                                (
+                                    "deadline_cancels",
+                                    Json::num(deadline_cancels as f64),
                                 ),
                             ]),
                         ));
@@ -808,7 +984,7 @@ mod tests {
             r#"{"id": 3, "tokens": [1, 2, 3], "max_new_tokens": 5, "dma": false,
                 "temperature": 0.7, "top_k": 12, "top_p": 0.9, "seed": 11,
                 "stop": [5, 9], "ignore_eos": true, "stream": true,
-                "n": 2, "best_of": 4, "logprobs": true}"#,
+                "n": 2, "best_of": 4, "logprobs": true, "deadline_ms": 250}"#,
             99,
         )
         .unwrap();
@@ -826,6 +1002,7 @@ mod tests {
         assert_eq!(p.req.sampling.n, 2);
         assert_eq!(p.req.sampling.best_of, 4);
         assert!(p.req.sampling.logprobs);
+        assert_eq!(p.req.sampling.deadline_ms, 250);
         assert!(p.stream);
     }
 
@@ -867,6 +1044,7 @@ mod tests {
             decode_ms: 2.0,
             ttft_ms: 1.5,
             error: None,
+            retry_after_ms: None,
         }
     }
 
@@ -1701,6 +1879,292 @@ mod tests {
         for c in clients {
             c.join().unwrap();
         }
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn restarted_and_retry_after_serialize() {
+        // v2.4 wire shapes: the restart marker and the shed backoff hint.
+        let ev = EngineEvent::Restarted { id: 5, replayed_tokens: 3 };
+        let j = Json::parse(&event_json(&ev, true, false).to_string()).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str(), Some("restarted"));
+        assert_eq!(j.get("id").unwrap().as_i64(), Some(5));
+        assert_eq!(j.get("replayed_tokens").unwrap().as_i64(), Some(3));
+
+        let mut r = resp();
+        let j = Json::parse(&response_json(&r, false).to_string()).unwrap();
+        assert!(j.get("retry_after_ms").is_none(), "hint only when shed");
+        r.finish = crate::coordinator::FinishReason::Rejected;
+        r.retry_after_ms = Some(750);
+        let j = Json::parse(&response_json(&r, false).to_string()).unwrap();
+        assert_eq!(j.get("finish").unwrap().as_str(), Some("rejected"));
+        assert_eq!(j.get("retry_after_ms").unwrap().as_i64(), Some(750));
+    }
+
+    #[test]
+    fn read_line_bounded_frames_caps_and_partial_frames() {
+        use std::io::Cursor;
+        let mut buf = Vec::new();
+
+        // Two frames, then clean EOF.
+        let mut r = Cursor::new(b"abc\ndef\n".to_vec());
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 16).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"abc");
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 16).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"def");
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 16).unwrap(), LineRead::Eof));
+
+        // A mid-frame disconnect surfaces the partial line, then EOF.
+        let mut r = Cursor::new(b"partial".to_vec());
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 16).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"partial");
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 16).unwrap(), LineRead::Eof));
+
+        // An oversized line trips the cap without buffering its tail.
+        let mut r = Cursor::new(vec![b'x'; 1000]);
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 64).unwrap(), LineRead::TooLong));
+        assert!(buf.len() <= 64, "buffered {} bytes past the cap", buf.len());
+
+        // A line exactly at the cap is still a valid line.
+        let mut r = Cursor::new(b"abcd\n".to_vec());
+        assert!(matches!(read_line_bounded(&mut r, &mut buf, 4).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"abcd");
+    }
+
+    #[test]
+    fn writer_queue_failpoint_reports_undeliverable() {
+        let _x = crate::util::failpoint::exclusive();
+        crate::util::failpoint::configure("writer_queue:error:1", 7).unwrap();
+        let (tx, _rx) = mpsc::sync_channel::<String>(4);
+        assert!(!send_with_timeout(&tx, "hi".into(), Duration::from_millis(5)));
+        crate::util::failpoint::clear();
+        assert!(send_with_timeout(&tx, "hi".into(), Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn writer_thread_exits_when_abandoned_client_never_reads() {
+        // Regression: the writer used to drain its queue with a plain
+        // blocking `recv`, so an abandoned connection kept its writer
+        // thread alive for as long as any sender clone survived — and a
+        // writer wedged in a blocking socket write to a client that
+        // never reads was stuck until the kernel buffer drained (never).
+        // ConnCtl::kill must reap it either way.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap(); // never read from
+        let (sock, _) = listener.accept().unwrap();
+        let ctl = Arc::new(ConnCtl {
+            dead: AtomicBool::new(false),
+            sock: sock.try_clone().ok(),
+        });
+        let (tx, rx) = mpsc::sync_channel::<String>(4);
+        let wctl = ctl.clone();
+        let writer = std::thread::spawn(move || writer_loop(rx, sock, &wctl));
+        // Flood until the bounded queue jams behind the kernel socket
+        // buffer (the peer never reads).
+        let big = "x".repeat(64 * 1024);
+        for _ in 0..256 {
+            if !send_with_timeout(&tx, big.clone(), Duration::from_millis(1)) {
+                break;
+            }
+        }
+        ctl.kill();
+        // The writer must exit promptly even though `tx` is still alive.
+        let (done_tx, done_rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            let _ = writer.join();
+            let _ = done_tx.send(());
+        });
+        done_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("writer thread leaked after abandon");
+        drop(tx);
+        drop(client);
+    }
+
+    #[test]
+    fn hostile_lines_get_structured_errors_then_close() {
+        // Invalid UTF-8 and malformed JSON get structured error replies
+        // and the connection keeps working; an oversized line gets an
+        // error and a clean close.
+        let (addr, stop, srv) = spawn_server(
+            EngineConfig { max_new_tokens: 2, ..Default::default() },
+            1,
+            Policy::RoundRobin,
+        );
+
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        let read_json = |line: &mut String, reader: &mut BufReader<TcpStream>| {
+            line.clear();
+            reader.read_line(line).unwrap();
+            Json::parse(line.trim()).unwrap()
+        };
+
+        writer.write_all(b"\xff\xfe\n").unwrap();
+        let j = read_json(&mut line, &mut reader);
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("UTF-8"));
+
+        writeln!(writer, "{{oops").unwrap();
+        let j = read_json(&mut line, &mut reader);
+        assert!(j.get("error").is_some(), "malformed JSON must error");
+
+        // Still alive: a real request round-trips.
+        writeln!(writer, r#"{{"id": 1, "tokens": [1, 9, 8], "max_new_tokens": 1}}"#).unwrap();
+        let j = read_json(&mut line, &mut reader);
+        assert_eq!(j.get("id").unwrap().as_i64(), Some(1));
+
+        // Oversized line (the default cap is 1 MiB): error, then EOF.
+        let big = vec![b'x'; (1 << 20) + 1024];
+        writer.write_all(&big).unwrap();
+        writer.flush().unwrap();
+        let j = read_json(&mut line, &mut reader);
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("exceeds"));
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "server must close");
+
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn server_survives_worker_crash_and_replays_stream() {
+        // The acceptance-bar e2e at the TCP layer: with decode-step
+        // panics injected, the server keeps serving, the client sees a
+        // "restarted" marker, and the greedy stream it gets after the
+        // splice is bit-identical to the fault-free run.
+        let _x = crate::util::failpoint::exclusive();
+        crate::util::failpoint::clear();
+        let (addr, stop, srv) = spawn_server(
+            EngineConfig { max_new_tokens: 8, decode_slice: 1, ..Default::default() },
+            2,
+            Policy::RoundRobin,
+        );
+
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        let read_json = |line: &mut String, reader: &mut BufReader<TcpStream>| {
+            line.clear();
+            reader.read_line(line).unwrap();
+            Json::parse(line.trim()).unwrap()
+        };
+
+        // Fault-free baseline (greedy: output is a pure function of the
+        // prompt, so the replayed run must reproduce it exactly).
+        writeln!(
+            writer,
+            r#"{{"id": 1, "tokens": [3, 9, 4, 7, 6], "max_new_tokens": 6, "ignore_eos": true}}"#
+        )
+        .unwrap();
+        let baseline: Vec<i64> = read_json(&mut line, &mut reader)
+            .get("output")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(baseline.len(), 6);
+
+        // Every decode step panics until the marker arrives.
+        crate::util::failpoint::configure("decode_step:panic:1", 0xD1CE).unwrap();
+        writeln!(
+            writer,
+            "{}",
+            concat!(
+                r#"{"id": 2, "tokens": [3, 9, 4, 7, 6], "max_new_tokens": 6, "#,
+                r#""ignore_eos": true, "stream": true}"#
+            )
+        )
+        .unwrap();
+        let mut tokens: Vec<i64> = Vec::new();
+        let mut saw_restarted = false;
+        let summary = loop {
+            let j = read_json(&mut line, &mut reader);
+            match j.get("event").unwrap().as_str().unwrap() {
+                "started" => {}
+                "restarted" => {
+                    saw_restarted = true;
+                    // Let the replayed dispatch run to completion.
+                    crate::util::failpoint::clear();
+                }
+                "token" => {
+                    assert_eq!(
+                        j.get("index").unwrap().as_i64().unwrap(),
+                        tokens.len() as i64,
+                        "token indices must stay gapless across the splice"
+                    );
+                    tokens.push(j.get("token").unwrap().as_i64().unwrap());
+                }
+                "finished" => break j,
+                other => panic!("unexpected event {other}"),
+            }
+        };
+        crate::util::failpoint::clear();
+        assert!(saw_restarted, "worker crash never surfaced a restart marker");
+        assert_eq!(tokens, baseline, "replayed stream diverged");
+        let sum_out: Vec<i64> = summary
+            .get("output")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(sum_out, baseline);
+
+        // The supervision counters are visible on both surfaces.
+        writeln!(writer, r#"{{"cmd": "metrics"}}"#).unwrap();
+        let text = read_json(&mut line, &mut reader)
+            .get("metrics")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        let restarts = text
+            .lines()
+            .find_map(|l| l.strip_prefix("dma_worker_restarts_total "))
+            .expect("dma_worker_restarts_total sample")
+            .parse::<u64>()
+            .unwrap();
+        assert!(restarts >= 1, "no restart recorded: {restarts}");
+        assert!(text.contains("dma_requests_replayed_total"), "{text}");
+        assert!(text.contains("dma_worker_healthy{worker=\"0\"} 1"), "{text}");
+        writeln!(writer, r#"{{"cmd": "stats"}}"#).unwrap();
+        let s = read_json(&mut line, &mut reader);
+        let res = s.get("resilience").unwrap();
+        assert_eq!(
+            res.get("worker_restarts").unwrap().as_i64().unwrap() as u64,
+            restarts,
+            "stats and metrics disagree on restarts"
+        );
+        assert!(res.get("requests_replayed").unwrap().as_i64().unwrap() >= 1);
+
+        // Final pool recount is clean: every page released.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            writeln!(writer, r#"{{"cmd": "stats"}}"#).unwrap();
+            let bytes = read_json(&mut line, &mut reader)
+                .get("kv_bytes_in_use")
+                .unwrap()
+                .as_i64()
+                .unwrap();
+            if bytes == 0 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "pool never drained after crash recovery: {bytes} bytes"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+
+        writer.shutdown(std::net::Shutdown::Write).unwrap();
         stop.store(true, Ordering::Relaxed);
         srv.join().unwrap();
     }

@@ -448,6 +448,18 @@ pub struct Telemetry {
     /// Individual candidates cancelled out of a still-running group
     /// (whole-group cancels count once in `requests_cancelled`).
     pub candidates_cancelled: Counter,
+    // -- resilience ------------------------------------------------------
+    /// Engine workers respawned by the router's supervisor.
+    pub worker_restarts: Counter,
+    /// In-flight/queued groups re-dispatched after a worker death.
+    pub requests_replayed: Counter,
+    /// Submissions shed under KV pressure (`--shed-policy`).
+    pub requests_shed: Counter,
+    /// Deadline cancellations, split by which bound fired
+    /// (`dma_deadline_cancels_total{cause=...}`).
+    pub deadline_cancels_request: Counter,
+    pub deadline_cancels_queue: Counter,
+    pub deadline_cancels_deadline: Counter,
     // -- speculative decoding ([`crate::spec`]) -------------------------
     /// Draft tokens proposed for verification.
     pub spec_proposed_tokens: Counter,
@@ -500,6 +512,12 @@ impl Telemetry {
             decode_tokens: Counter::default(),
             prefix_hit_tokens: Counter::default(),
             candidates_cancelled: Counter::default(),
+            worker_restarts: Counter::default(),
+            requests_replayed: Counter::default(),
+            requests_shed: Counter::default(),
+            deadline_cancels_request: Counter::default(),
+            deadline_cancels_queue: Counter::default(),
+            deadline_cancels_deadline: Counter::default(),
             spec_proposed_tokens: Counter::default(),
             spec_accepted_tokens: Counter::default(),
             spec_rolled_back_tokens: Counter::default(),
@@ -539,12 +557,27 @@ impl Telemetry {
 
 /// Per-worker gauge snapshot joined into the Prometheus render; built by
 /// `Router::worker_gauges` from each `EngineHandle`'s published atomics.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct WorkerGauges {
     pub queue_depth: u64,
     pub kv_bytes_in_use: u64,
     pub kv_bytes_capacity: u64,
     pub decoded_bytes_live: u64,
+    /// Worker thread alive (cleared on panic/exit until the supervisor
+    /// respawns it).
+    pub healthy: bool,
+}
+
+impl Default for WorkerGauges {
+    fn default() -> WorkerGauges {
+        WorkerGauges {
+            queue_depth: 0,
+            kv_bytes_in_use: 0,
+            kv_bytes_capacity: 0,
+            decoded_bytes_live: 0,
+            healthy: true,
+        }
+    }
 }
 
 impl WorkerGauges {
@@ -770,6 +803,42 @@ pub fn render_prometheus(
         "Individual candidates cancelled out of still-running groups",
         t.candidates_cancelled.get(),
     );
+    // Resilience families render unconditionally (all-zero in a healthy
+    // fleet) so dashboards can alert on their first increment.
+    render_counter(
+        &mut out,
+        "dma_worker_restarts_total",
+        "Engine workers respawned by the router's supervisor",
+        t.worker_restarts.get(),
+    );
+    render_counter(
+        &mut out,
+        "dma_requests_replayed_total",
+        "Groups re-dispatched onto a fresh engine after a worker death",
+        t.requests_replayed.get(),
+    );
+    render_counter(
+        &mut out,
+        "dma_requests_shed_total",
+        "Submissions shed under KV pressure (--shed-policy)",
+        t.requests_shed.get(),
+    );
+    out.push_str(concat!(
+        "# HELP dma_deadline_cancels_total Requests cancelled at a deadline, by which bound fired\n",
+        "# TYPE dma_deadline_cancels_total counter\n"
+    ));
+    out.push_str(&format!(
+        "dma_deadline_cancels_total{{cause=\"request\"}} {}\n",
+        t.deadline_cancels_request.get()
+    ));
+    out.push_str(&format!(
+        "dma_deadline_cancels_total{{cause=\"queue\"}} {}\n",
+        t.deadline_cancels_queue.get()
+    ));
+    out.push_str(&format!(
+        "dma_deadline_cancels_total{{cause=\"deadline\"}} {}\n",
+        t.deadline_cancels_deadline.get()
+    ));
     // Speculation families render unconditionally (all-zero when --spec
     // off) so scrapes and dashboards never see the series appear late.
     render_histogram_counts(
@@ -887,6 +956,13 @@ pub fn render_prometheus(
         "KV byte-budget utilisation in [0,1]",
         workers,
         |w| w.kv_pressure(),
+    );
+    per_worker(
+        &mut out,
+        "dma_worker_healthy",
+        "1 while the worker thread is alive, 0 between death and respawn",
+        workers,
+        |w| if w.healthy { 1.0 } else { 0.0 },
     );
 
     out
@@ -1060,14 +1136,19 @@ mod tests {
         t.spec_rolled_back_tokens.add(2);
         t.spec_tokens_per_round.record_us(3);
         t.candidates_cancelled.inc();
+        t.worker_restarts.inc();
+        t.requests_replayed.add(2);
+        t.requests_shed.add(3);
+        t.deadline_cancels_queue.inc();
         let workers = [
             WorkerGauges {
                 queue_depth: 2,
                 kv_bytes_in_use: 1000,
                 kv_bytes_capacity: 4000,
                 decoded_bytes_live: 200,
+                healthy: true,
             },
-            WorkerGauges::default(),
+            WorkerGauges { healthy: false, ..Default::default() },
         ];
         let pages = crate::metrics::KvPageStats {
             high_pages: 3,
@@ -1101,6 +1182,14 @@ mod tests {
             "dma_spec_rolled_back_tokens_total 2",
             "dma_spec_accepted_tokens_count 1",
             "dma_candidates_cancelled_total 1",
+            "dma_worker_restarts_total 1",
+            "dma_requests_replayed_total 2",
+            "dma_requests_shed_total 3",
+            "dma_deadline_cancels_total{cause=\"request\"} 0",
+            "dma_deadline_cancels_total{cause=\"queue\"} 1",
+            "dma_deadline_cancels_total{cause=\"deadline\"} 0",
+            "dma_worker_healthy{worker=\"0\"} 1",
+            "dma_worker_healthy{worker=\"1\"} 0",
             "le=\"+Inf\"",
         ] {
             assert!(text.contains(family), "missing '{family}' in:\n{text}");
@@ -1119,6 +1208,11 @@ mod tests {
             "# TYPE dma_spec_proposed_tokens_total counter",
             "# TYPE dma_spec_rolled_back_tokens_total counter",
             "# TYPE dma_candidates_cancelled_total counter",
+            "# TYPE dma_worker_restarts_total counter",
+            "# TYPE dma_requests_replayed_total counter",
+            "# TYPE dma_requests_shed_total counter",
+            "# TYPE dma_deadline_cancels_total counter",
+            "# TYPE dma_worker_healthy gauge",
         ] {
             assert!(cold.contains(family), "missing '{family}'");
         }

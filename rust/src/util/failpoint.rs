@@ -1,0 +1,315 @@
+//! Deterministic fault injection for resilience testing.
+//!
+//! A *failpoint* is a named site in the serving path (`pool_admission`,
+//! `decode_step`, `prefill_chunk`, `decode_multi`, `writer_queue`) that
+//! can be armed at process start to inject a fault on a reproducible
+//! schedule: `--fault "site:kind:prob[:delay_ms]"` on the CLI or the
+//! `DMA_FAULTS` env var (comma-separated specs; `DMA_FAULT_SEED` seeds
+//! the schedule). Kinds:
+//!
+//! - `panic` — panic in place, killing the engine worker thread (the
+//!   router's supervisor detects the closed event channel and respawns).
+//! - `error` — return an `Err` from the site, which propagates out of
+//!   `Engine::step` and stops the worker loop (same recovery path).
+//! - `delay` — sleep `delay_ms` (default 10) to simulate a wedged
+//!   backend or slow I/O without killing anything.
+//!
+//! The schedule is deterministic: hit `i` of site `s` fires iff
+//! `mix(seed, fnv(s), i) < prob`, so a given `(spec, seed)` pair
+//! reproduces the exact same fault sequence run after run — chaos tests
+//! shrink to a seed, not to a flaky trace.
+//!
+//! Cost when disarmed: [`check`] is one `Relaxed` atomic load and an
+//! immediate return — no allocation, no lock, no branch on site name.
+//! `table16_resilience` asserts the zero-allocation claim with a
+//! counting global allocator.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, RwLock};
+
+/// What an armed site injects when its schedule fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic in place (simulates a crashing worker).
+    Panic,
+    /// Return an error from the site (simulates a failing backend call).
+    Error,
+    /// Sleep `delay_ms` (simulates a wedged dependency).
+    Delay,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Result<FaultKind, String> {
+        match s {
+            "panic" => Ok(FaultKind::Panic),
+            "error" => Ok(FaultKind::Error),
+            "delay" => Ok(FaultKind::Delay),
+            other => Err(format!("unknown fault kind '{other}' (panic|error|delay)")),
+        }
+    }
+}
+
+struct Site {
+    name: String,
+    name_hash: u64,
+    kind: FaultKind,
+    /// Probability in [0, 1] that a given hit fires.
+    prob: f64,
+    delay_ms: u64,
+    /// Times the site was reached (schedule index).
+    hits: AtomicU64,
+    /// Times the site actually injected a fault.
+    fired: AtomicU64,
+}
+
+/// Fast-path gate: a single `Relaxed` load decides "disarmed" without
+/// touching the registry lock.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: RwLock<Vec<Site>> = RwLock::new(Vec::new());
+/// Serializes tests that arm the global registry (see [`exclusive`]).
+static EXCLUSIVE: Mutex<()> = Mutex::new(());
+
+/// FNV-1a over the site name; folded into the schedule so distinct
+/// sites see decorrelated streams under one seed.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// SplitMix64-style finalizer mapping (seed, site, hit) to a uniform
+/// in [0, 1) — the deterministic schedule.
+fn schedule_uniform(seed: u64, name_hash: u64, hit: u64) -> f64 {
+    let mut z = seed
+        ^ name_hash.rotate_left(17)
+        ^ hit.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Arm the registry from a comma-separated spec string
+/// (`site:kind:prob[:delay_ms]`), replacing any previous configuration.
+/// An empty spec disarms. Errors on malformed specs without changing
+/// the current configuration.
+pub fn configure(spec: &str, seed: u64) -> Result<(), String> {
+    let mut sites = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let fields: Vec<&str> = part.split(':').collect();
+        if fields.len() < 3 || fields.len() > 4 {
+            return Err(format!(
+                "bad fault spec '{part}' (want site:kind:prob[:delay_ms])"
+            ));
+        }
+        let kind = FaultKind::parse(fields[1])?;
+        let prob: f64 = fields[2]
+            .parse()
+            .map_err(|_| format!("bad fault probability '{}'", fields[2]))?;
+        if !(0.0..=1.0).contains(&prob) {
+            return Err(format!("fault probability {prob} outside [0, 1]"));
+        }
+        let delay_ms = match fields.get(3) {
+            Some(d) => d
+                .parse()
+                .map_err(|_| format!("bad fault delay '{d}'"))?,
+            None => 10,
+        };
+        sites.push(Site {
+            name: fields[0].to_string(),
+            name_hash: fnv1a(fields[0]).wrapping_add(seed.rotate_left(32)),
+            kind,
+            prob,
+            delay_ms,
+            hits: AtomicU64::new(0),
+            fired: AtomicU64::new(0),
+        });
+    }
+    let armed = !sites.is_empty();
+    *REGISTRY.write().unwrap() = sites;
+    ARMED.store(armed, Ordering::Release);
+    Ok(())
+}
+
+/// Arm from `DMA_FAULTS` / `DMA_FAULT_SEED` if set; no-op otherwise.
+/// Returns the spec that was applied, if any.
+pub fn configure_from_env() -> Result<Option<String>, String> {
+    let Ok(spec) = std::env::var("DMA_FAULTS") else { return Ok(None) };
+    if spec.trim().is_empty() {
+        return Ok(None);
+    }
+    let seed = std::env::var("DMA_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    configure(&spec, seed)?;
+    Ok(Some(spec))
+}
+
+/// Disarm all sites and clear counters.
+pub fn clear() {
+    ARMED.store(false, Ordering::Release);
+    REGISTRY.write().unwrap().clear();
+}
+
+/// True when any site is armed.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Times `site` actually injected a fault since the last
+/// [`configure`]/[`clear`].
+pub fn fired(site: &str) -> u64 {
+    REGISTRY
+        .read()
+        .unwrap()
+        .iter()
+        .filter(|s| s.name == site)
+        .map(|s| s.fired.load(Ordering::Relaxed))
+        .sum()
+}
+
+/// Total injected faults across all sites.
+pub fn fired_total() -> u64 {
+    REGISTRY
+        .read()
+        .unwrap()
+        .iter()
+        .map(|s| s.fired.load(Ordering::Relaxed))
+        .sum()
+}
+
+/// Hit `site`: decide on the deterministic schedule and inject the
+/// configured fault. Disarmed cost is one `Relaxed` load. `Panic`
+/// panics in place; `Delay` sleeps and returns `Ok`; `Error` returns
+/// `Err` for the caller to propagate.
+#[inline]
+pub fn check(site: &str) -> crate::Result<()> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    check_armed(site)
+}
+
+#[cold]
+fn check_armed(site: &str) -> crate::Result<()> {
+    let reg = REGISTRY.read().unwrap();
+    for s in reg.iter().filter(|s| s.name == site) {
+        let hit = s.hits.fetch_add(1, Ordering::Relaxed);
+        if schedule_uniform(0, s.name_hash, hit) >= s.prob {
+            continue;
+        }
+        s.fired.fetch_add(1, Ordering::Relaxed);
+        match s.kind {
+            FaultKind::Panic => {
+                let msg = format!("failpoint '{site}' injected panic (hit {hit})");
+                drop(reg);
+                panic!("{msg}");
+            }
+            FaultKind::Delay => {
+                let ms = s.delay_ms;
+                drop(reg);
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                return Ok(());
+            }
+            FaultKind::Error => {
+                drop(reg);
+                return Err(anyhow::anyhow!(
+                    "failpoint '{site}' injected error (hit {hit})"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Serialize tests (and benches) that arm the process-global registry.
+/// Poisoned guards are recovered — a chaos test that panics on purpose
+/// must not poison every later test.
+pub fn exclusive() -> MutexGuard<'static, ()> {
+    EXCLUSIVE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_check_is_ok_and_silent() {
+        let _g = exclusive();
+        clear();
+        assert!(!armed());
+        for _ in 0..1000 {
+            check("decode_step").unwrap();
+        }
+        assert_eq!(fired_total(), 0);
+    }
+
+    #[test]
+    fn spec_parsing_rejects_malformed() {
+        let _g = exclusive();
+        clear();
+        assert!(configure("decode_step:panic", 0).is_err(), "missing prob");
+        assert!(configure("a:bogus:0.5", 0).is_err(), "unknown kind");
+        assert!(configure("a:panic:1.5", 0).is_err(), "prob > 1");
+        assert!(configure("a:delay:0.5:abc", 0).is_err(), "bad delay");
+        assert!(!armed(), "failed configure leaves registry disarmed");
+        configure("a:error:0.5, b:delay:1:2", 7).unwrap();
+        assert!(armed());
+        clear();
+    }
+
+    #[test]
+    fn error_schedule_is_deterministic_and_matches_prob() {
+        let _g = exclusive();
+        configure("site_a:error:0.25", 42).unwrap();
+        let outcomes: Vec<bool> = (0..400).map(|_| check("site_a").is_err()).collect();
+        let fires = outcomes.iter().filter(|&&f| f).count();
+        assert!(fires > 40 && fires < 180, "~25% of 400, got {fires}");
+        assert_eq!(fired("site_a") as usize, fires);
+        // Same spec + seed replays the exact same schedule.
+        configure("site_a:error:0.25", 42).unwrap();
+        let replay: Vec<bool> = (0..400).map(|_| check("site_a").is_err()).collect();
+        assert_eq!(outcomes, replay);
+        // A different seed produces a different schedule.
+        configure("site_a:error:0.25", 43).unwrap();
+        let other: Vec<bool> = (0..400).map(|_| check("site_a").is_err()).collect();
+        assert_ne!(outcomes, other);
+        clear();
+    }
+
+    #[test]
+    fn sites_are_independent() {
+        let _g = exclusive();
+        configure("only_this:error:1", 0).unwrap();
+        assert!(check("only_this").is_err());
+        check("some_other_site").unwrap();
+        assert_eq!(fired("some_other_site"), 0);
+        clear();
+    }
+
+    #[test]
+    fn panic_kind_panics_in_place() {
+        let _g = exclusive();
+        configure("boom:panic:1", 0).unwrap();
+        let caught = std::panic::catch_unwind(|| {
+            let _ = check("boom");
+        });
+        assert!(caught.is_err());
+        assert_eq!(fired("boom"), 1);
+        clear();
+    }
+
+    #[test]
+    fn delay_kind_sleeps_and_succeeds() {
+        let _g = exclusive();
+        configure("slow:delay:1:20", 0).unwrap();
+        let t0 = std::time::Instant::now();
+        check("slow").unwrap();
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(15));
+        clear();
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod failpoint;
 pub mod json;
 pub mod par;
 pub mod pool;
