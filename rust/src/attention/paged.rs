@@ -122,7 +122,9 @@ fn paged_attention_impl(
     for (j, &prec) in schedule.iter().enumerate() {
         let (r0, r1) = k.page_rows(j);
         let cols = r1 - r0;
-        let eff = k.effective(prec);
+        // Per-page clamp: a precision-aged shared page serves low even
+        // when the store format carries both copies (kvquant::tier).
+        let eff = k.effective_at(j, prec);
         match eff {
             Precision::High => stats.high_pages += 1,
             Precision::Low => stats.low_pages += 1,
@@ -140,7 +142,7 @@ fn paged_attention_impl(
         };
         let q_dec = if eff == Precision::High { &q_high } else { &q_low };
         score_tile(q_dec, lq, d, k_dec, cols, q_pos0, r0, true, &mut s_tile);
-        let v_eff = v.effective(Precision::High);
+        let v_eff = v.effective_at(j, Precision::High);
         let v_dec: &[f32] = match cache.as_deref_mut() {
             Some(c) if j < v.n_full_pages() => c.get_or_decode(v.page_arc(j), v_eff, stats),
             _ => {
@@ -262,7 +264,9 @@ fn prefill_chunk_impl(
     for (j, &prec) in schedule.iter().enumerate() {
         let (r0, r1) = k.page_rows(j);
         let cols = r1 - r0;
-        let eff = k.effective(prec);
+        // Per-page clamp: a precision-aged shared page serves low even
+        // when the store format carries both copies (kvquant::tier).
+        let eff = k.effective_at(j, prec);
         match eff {
             Precision::High => stats.high_pages += 1,
             Precision::Low => stats.low_pages += 1,
@@ -281,7 +285,7 @@ fn prefill_chunk_impl(
         let q_dec = if eff == Precision::High { &q_high } else { &q_low };
         score_tile(q_dec, rows, d, k_dec, cols, pos0 as i64, r0, false,
                    &mut s_tile[..rows * cols]);
-        let v_eff = v.effective(Precision::High);
+        let v_eff = v.effective_at(j, Precision::High);
         let v_dec: &[f32] = match cache.as_deref_mut() {
             Some(c) if j < v.n_full_pages() => c.get_or_decode(v.page_arc(j), v_eff, stats),
             _ => {

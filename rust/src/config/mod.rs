@@ -191,6 +191,14 @@ pub enum ShedPolicy {
     /// new submissions are shed with a structured
     /// `Rejected{retry_after_ms}` instead of queueing forever.
     Degrade,
+    /// Spill-first shedding: under byte pressure the engine first spills
+    /// reclaimable cold prefix pages to disk through the KV tier
+    /// (requires `--kv-spill cold|aging`; the spill rung is a no-op
+    /// without it) and re-checks the projection; only if demand still
+    /// exceeds the pool are new submissions shed with
+    /// `Rejected{retry_after_ms}`. No precision degradation — spilled
+    /// pages reload bit-exactly.
+    Spill,
 }
 
 impl ShedPolicy {
@@ -198,7 +206,8 @@ impl ShedPolicy {
         match s {
             "off" => Ok(ShedPolicy::Off),
             "degrade" => Ok(ShedPolicy::Degrade),
-            other => Err(anyhow!("unknown shed policy '{other}' (off|degrade)")),
+            "spill" => Ok(ShedPolicy::Spill),
+            other => Err(anyhow!("unknown shed policy '{other}' (off|degrade|spill)")),
         }
     }
 
@@ -206,6 +215,7 @@ impl ShedPolicy {
         match self {
             ShedPolicy::Off => "off",
             ShedPolicy::Degrade => "degrade",
+            ShedPolicy::Spill => "spill",
         }
     }
 
@@ -300,6 +310,22 @@ pub struct EngineConfig {
     pub queue_timeout_ms: u64,
     /// Admission behavior under KV byte pressure (`--shed-policy`).
     pub shed_policy: ShedPolicy,
+    /// Tiered KV memory mode (`--kv-spill off|cold|aging`): `cold`
+    /// spills LRU prefix pages to disk under pressure and reloads them
+    /// bit-exactly on a radix hit; `aging` additionally walks idle
+    /// pages down the `hot → aged → spilled` schedule, dropping the
+    /// high-precision planes of pages outside each layer's sink window
+    /// first. Requires `--prefix-cache` (the spill unit is a radix
+    /// page). See [`crate::kvquant::tier`].
+    pub kv_spill: crate::kvquant::tier::TierMode,
+    /// Directory for the per-worker spill files (`--kv-spill-dir`).
+    /// `None` uses a process-scoped directory under the OS temp dir;
+    /// files are deleted when the engine drops either way.
+    pub kv_spill_dir: Option<PathBuf>,
+    /// Idle milliseconds before a resident page ages (`--kv-age-ms`);
+    /// aged pages spill after twice this. Only meaningful with
+    /// `--kv-spill aging`.
+    pub kv_age_ms: u64,
 }
 
 impl Default for EngineConfig {
@@ -324,6 +350,9 @@ impl Default for EngineConfig {
             request_timeout_ms: 0,
             queue_timeout_ms: 0,
             shed_policy: ShedPolicy::Off,
+            kv_spill: crate::kvquant::tier::TierMode::Off,
+            kv_spill_dir: None,
+            kv_age_ms: 250,
         }
     }
 }
@@ -437,15 +466,21 @@ mod tests {
         assert_eq!(cfg.request_timeout_ms, 0, "no deadline by default");
         assert_eq!(cfg.queue_timeout_ms, 0);
         assert_eq!(cfg.shed_policy, ShedPolicy::Off);
+        assert_eq!(cfg.kv_spill, crate::kvquant::tier::TierMode::Off);
+        assert!(cfg.kv_spill_dir.is_none(), "spill dir derived from temp dir");
+        assert_eq!(cfg.kv_age_ms, 250);
     }
 
     #[test]
     fn shed_policy_parses_and_names() {
         assert_eq!(ShedPolicy::parse("off").unwrap(), ShedPolicy::Off);
         assert_eq!(ShedPolicy::parse("degrade").unwrap(), ShedPolicy::Degrade);
+        assert_eq!(ShedPolicy::parse("spill").unwrap(), ShedPolicy::Spill);
         assert!(ShedPolicy::parse("bogus").is_err());
         assert_eq!(ShedPolicy::Degrade.name(), "degrade");
+        assert_eq!(ShedPolicy::Spill.name(), "spill");
         assert!(!ShedPolicy::Off.enabled());
         assert!(ShedPolicy::Degrade.enabled());
+        assert!(ShedPolicy::Spill.enabled());
     }
 }

@@ -58,8 +58,9 @@ use super::request::{
     CandidateResult, EngineEvent, FinishReason, Request, Response, SeqPhase, Tracked,
 };
 use super::sampling::Sampler;
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, ShedPolicy};
 use crate::kvcache::{BlockPool, SeqId, SeqKv};
+use crate::kvquant::tier::{TierManager, TierStats};
 use crate::kvquant::{KvFormat, KvPolicy, KvQuantConfig, QuantSlotKv, PAGE_TOKENS};
 use crate::runtime::{ModelBackend, PrefillSeq};
 use crate::spec::{PromptLookupProposer, Proposer, SpecMode};
@@ -231,6 +232,18 @@ pub struct EngineStats {
     pub kv_bytes_peak: u64,
     /// Per-precision page-decode hits (quantized caches only).
     pub kv_pages: crate::metrics::KvPageStats,
+    /// Tiered-KV counters (`--kv-spill`, sampled from the tier manager
+    /// each step; all 0 with the tier off): radix pages precision-aged
+    /// (high planes dropped, bytes credited back to the pool), …
+    pub kv_pages_aged: u64,
+    /// … pages written out to the spill file, …
+    pub kv_pages_spilled: u64,
+    /// … and spilled pages reloaded on a prefix re-request.
+    pub kv_pages_reloaded: u64,
+    /// Cumulative bytes written to this worker's spill file.
+    pub kv_spill_bytes: u64,
+    /// Cumulative bytes read back from it.
+    pub kv_reload_bytes: u64,
 }
 
 impl EngineStats {
@@ -286,6 +299,10 @@ pub struct Engine {
     /// Radix prefix cache of shared quantized pages (quantized formats
     /// with `prefix_cache` on).
     radix: Option<RadixCache>,
+    /// Tiered KV memory (`--kv-spill`): owns the per-worker spill file
+    /// and the page index. `Some` only alongside the radix cache — the
+    /// spill unit is an immutable radix page.
+    tier: Option<TierManager>,
     /// Effective prefill chunk (config value rounded up to whole pages).
     prefill_chunk: usize,
     /// Live decoded-page-cache bytes across active groups (sampled each
@@ -365,6 +382,24 @@ impl Engine {
         } else {
             None
         };
+        // Tiered KV memory: the spill unit is an immutable radix page,
+        // so the tier only exists alongside the prefix cache. A spill
+        // file that cannot be opened disables the tier (never the
+        // engine) — serving degrades to drop-only eviction.
+        let tier = if cfg.kv_spill.enabled() && radix.is_some() {
+            let dir = cfg.kv_spill_dir.clone().unwrap_or_else(|| {
+                std::env::temp_dir().join(format!("dma_spill_{}", std::process::id()))
+            });
+            match TierManager::new(cfg.kv_spill, &dir) {
+                Ok(t) => Some(t),
+                Err(e) => {
+                    eprintln!("kv spill disabled: cannot open spill file in {}: {e}", dir.display());
+                    None
+                }
+            }
+        } else {
+            None
+        };
         let stats = EngineStats {
             kv_bytes_per_token: bpt as u64,
             kv_f32_bytes_per_token: f32_bpt as u64,
@@ -380,6 +415,7 @@ impl Engine {
             kv_quant,
             kv_dims: (nl, hk, dh),
             radix,
+            tier,
             prefill_chunk,
             decoded_live: 0,
             next_internal: 0,
@@ -430,6 +466,27 @@ impl Engine {
     /// Pages currently resident in the radix prefix cache.
     pub fn prefix_cache_pages(&self) -> usize {
         self.radix.as_ref().map_or(0, RadixCache::len)
+    }
+
+    /// Tier snapshot: spill/reload counters and on-disk gauges from the
+    /// tier manager, resident hot/aged page gauges from the radix
+    /// cache. All-zero when neither exists.
+    pub fn tier_stats(&self) -> TierStats {
+        let mut ts = self.tier.as_ref().map(TierManager::stats).unwrap_or_default();
+        if let Some(r) = &self.radix {
+            let (hot, aged) = r.tier_pages();
+            ts.hot_pages = hot;
+            ts.aged_pages = aged;
+        }
+        ts
+    }
+
+    /// Spill mode actually in effect (`off` when the tier failed to
+    /// open its spill file or the config never enabled it).
+    pub fn kv_spill_mode(&self) -> crate::kvquant::tier::TierMode {
+        self.tier
+            .as_ref()
+            .map_or(crate::kvquant::tier::TierMode::Off, TierManager::mode)
     }
 
     /// Number of requests currently queued + active (router load signal).
@@ -573,10 +630,34 @@ impl Engine {
                 .iter()
                 .map(|t| self.group_blocks_needed(&t.req, 0) * bb)
                 .sum();
-            let projected =
+            let mut projected =
                 self.pool.bytes_in_use() + self.decoded_live + queued_bytes + need * bb;
+            // Spill rung: before degrading or shedding, reclaim cold
+            // radix pages to disk. Spilled pages reload bit-exactly, so
+            // this is always preferable to losing precision (degrade)
+            // or the request (shed). Only unpinned pages qualify; stop
+            // when spilling stops helping.
             if projected > self.pool.bytes_capacity() {
-                if self.degraded {
+                let decoded_live = self.decoded_live;
+                if let (Some(tier), Some(radix)) = (self.tier.as_mut(), self.radix.as_mut()) {
+                    let pool = &mut self.pool;
+                    while projected > pool.bytes_capacity() {
+                        let spilled = radix
+                            .spill_lru(tier, |id| pool.seq_max_refcount(id) == Some(1));
+                        let Some(id) = spilled else { break };
+                        if pool.release(id).is_err() {
+                            break;
+                        }
+                        projected =
+                            pool.bytes_in_use() + decoded_live + queued_bytes + need * bb;
+                    }
+                }
+            }
+            if projected > self.pool.bytes_capacity() {
+                // `spill` has no degraded rung — its whole point is to
+                // avoid precision loss — so persistent pressure sheds
+                // directly once spilling can no longer reclaim bytes.
+                if self.degraded || self.cfg.shed_policy == ShedPolicy::Spill {
                     let retry = self.retry_after_ms(&req);
                     self.stats.shed += 1;
                     if let Some(t) = &self.telemetry {
@@ -1032,6 +1113,39 @@ impl Engine {
         };
         failpoint::check("pool_admission")?;
 
+        // Tier reload: a spilled prefix being re-requested is reloaded
+        // *before* the lookup so the hit can include it. Each reloaded
+        // page re-enters the pool under its original radix id (sync
+        // read sweep, then the first page decodes inline and the rest
+        // of the prefix run decodes in parallel). An allocation failure
+        // just truncates the reload — the lookup serves what became
+        // resident.
+        if self.tier.is_some() {
+            let t0 = self.telemetry.is_some().then(Instant::now);
+            let pt = PAGE_TOKENS;
+            let threads = self.cfg.threads;
+            // Both hooks mutate the pool but the walk calls them
+            // strictly in turn; a RefCell reconciles the borrows.
+            let pool = std::cell::RefCell::new(&mut self.pool);
+            let tier = self.tier.as_mut().unwrap();
+            let radix = self.radix.as_mut().unwrap();
+            let (pages, _bytes) = radix.reload_path(
+                &head.req.tokens,
+                head.req.dma,
+                tier,
+                threads,
+                |id| pool.borrow_mut().allocate(id, pt).is_ok(),
+                |id| {
+                    let _ = pool.borrow_mut().release(id);
+                },
+            );
+            if pages > 0 {
+                if let (Some(t), Some(start)) = (&self.telemetry, t0) {
+                    t.kv_reload_us.record_us(start.elapsed().as_micros() as u64);
+                }
+            }
+        }
+
         // Prefix-cache lookup. Sharing is capped at a prefill-chunk
         // boundary strictly inside the prompt: the warm run's remaining
         // chunk boundaries then coincide with the cold run's, so the
@@ -1072,11 +1186,19 @@ impl Engine {
         };
         while !fits(&self.pool, self.decoded_live) {
             // Only unpinned pages qualify (no running group forks their
-            // block), so every eviction frees a block.
+            // block), so every eviction frees a block. With the tier on,
+            // eviction routes through the spill hook instead of dropping
+            // the page — it stays reloadable from disk.
             let pool = &self.pool;
-            let evicted = self.radix.as_mut().and_then(|r| {
-                r.evict_lru_leaf(|id| pool.seq_max_refcount(id) == Some(1))
-            });
+            let evicted = match (&mut self.tier, &mut self.radix) {
+                (Some(tier), Some(r)) => {
+                    r.spill_lru(tier, |id| pool.seq_max_refcount(id) == Some(1))
+                }
+                (None, Some(r)) => {
+                    r.evict_lru_leaf(|id| pool.seq_max_refcount(id) == Some(1))
+                }
+                _ => None,
+            };
             match evicted {
                 Some(id) => self.pool.release(id)?,
                 None => break,
@@ -1841,6 +1963,60 @@ impl Engine {
         self.decoded_live = decoded as usize;
         self.stats.kv_bytes_peak = self.stats.kv_bytes_peak.max(live);
         self.stats.kv_pages = self.backend.kv_page_stats();
+        if let Some(tier) = &self.tier {
+            let ts = tier.stats();
+            // Telemetry counters advance by the delta since the last
+            // sample (the stats fields mirror the tier's cumulative
+            // counters, so the previous sample is right here).
+            if let Some(t) = &self.telemetry {
+                t.kv_spill_bytes
+                    .add(ts.spill_bytes.saturating_sub(self.stats.kv_spill_bytes));
+                t.kv_reload_bytes
+                    .add(ts.reload_bytes.saturating_sub(self.stats.kv_reload_bytes));
+                t.kv_pages_aged
+                    .add(ts.pages_aged.saturating_sub(self.stats.kv_pages_aged));
+            }
+            self.stats.kv_pages_aged = ts.pages_aged;
+            self.stats.kv_pages_spilled = ts.pages_spilled;
+            self.stats.kv_pages_reloaded = ts.pages_reloaded;
+            self.stats.kv_spill_bytes = ts.spill_bytes;
+            self.stats.kv_reload_bytes = ts.reload_bytes;
+        }
+    }
+
+    /// Aging pass (`--kv-spill aging`): walk the radix cache and move
+    /// unpinned pages down the tier schedule — idle past `--kv-age-ms`
+    /// drops the high planes (warm; saved bytes are credited back to
+    /// the pool's byte budget), idle past twice that spills the page to
+    /// disk (cold; its block is released outright).
+    fn age_tick(&mut self) {
+        let Some(tier) = self.tier.as_mut() else { return };
+        if !tier.mode().ages() {
+            return;
+        }
+        let Some(radix) = self.radix.as_mut() else { return };
+        let age = std::time::Duration::from_millis(self.cfg.kv_age_ms);
+        let policies = if self.cfg.kv_precision_policies.is_empty() {
+            vec![KvPolicy::default()]
+        } else {
+            self.cfg.kv_precision_policies.clone()
+        };
+        // The pin check reads the pool while the credit/release hooks
+        // mutate it; the walk calls them strictly in turn, so a RefCell
+        // reconciles the closures' borrows without ever panicking.
+        let pool = std::cell::RefCell::new(&mut self.pool);
+        radix.age_idle(
+            tier,
+            age,
+            &policies,
+            &|id| pool.borrow().seq_max_refcount(id) == Some(1),
+            &mut |id, bytes| {
+                let _ = pool.borrow_mut().credit_bytes(id, bytes);
+            },
+            &mut |id| {
+                let _ = pool.borrow_mut().release(id);
+            },
+        );
     }
 
     /// Run one scheduling iteration (admit, one prefill chunk per
@@ -1850,8 +2026,11 @@ impl Engine {
         self.stats.engine_steps += 1;
         let mut out = Vec::new();
         // Phase 0: deadline sweep — expired requests release their KV
-        // before this step schedules anything against the pool.
+        // before this step schedules anything against the pool — then
+        // the tier's aging pass, so reclaimed bytes are visible to this
+        // step's admissions.
         self.enforce_deadlines(&mut out)?;
+        self.age_tick();
         // Phase timing only with telemetry attached — the disabled path
         // takes no clock reads.
         let timed = self.telemetry.is_some();
@@ -1948,6 +2127,16 @@ struct WorkerShared {
     decoded_cache_hits: std::sync::atomic::AtomicU64,
     decoded_cache_misses: std::sync::atomic::AtomicU64,
     kv_cache_evictions: std::sync::atomic::AtomicU64,
+    // Tier gauges and counters, mirrored from [`Engine::tier_stats`].
+    tier_hot_pages: std::sync::atomic::AtomicU64,
+    tier_aged_pages: std::sync::atomic::AtomicU64,
+    tier_spilled_pages: std::sync::atomic::AtomicU64,
+    tier_spilled_bytes: std::sync::atomic::AtomicU64,
+    tier_pages_aged: std::sync::atomic::AtomicU64,
+    tier_pages_spilled: std::sync::atomic::AtomicU64,
+    tier_pages_reloaded: std::sync::atomic::AtomicU64,
+    tier_spill_bytes: std::sync::atomic::AtomicU64,
+    tier_reload_bytes: std::sync::atomic::AtomicU64,
     /// True from spawn until the worker loop returns — by any path,
     /// including a panic (the [`HealthGuard`] drop runs during unwind).
     healthy: std::sync::atomic::AtomicBool,
@@ -1988,6 +2177,7 @@ pub struct EngineHandle {
     kv_policy: String,
     spec_mode: &'static str,
     spec_k: usize,
+    kv_spill: &'static str,
 }
 
 impl EngineHandle {
@@ -2041,6 +2231,7 @@ impl EngineHandle {
         let kv_policy = KvPolicy::format_layers(&cfg.kv_precision_policies);
         let spec_mode = cfg.spec.name();
         let spec_k = cfg.spec_k;
+        let kv_spill = cfg.kv_spill.name();
         let (tx, rx_msg) = mpsc::channel::<Msg>();
         let (tx_ev, rx) = mpsc::channel::<EngineEvent>();
         let shared = Arc::new(WorkerShared::default());
@@ -2151,6 +2342,16 @@ impl EngineHandle {
                 s.decoded_cache_hits.store(pages.cache_hits, Relaxed);
                 s.decoded_cache_misses.store(pages.cache_misses, Relaxed);
                 s.kv_cache_evictions.store(pages.cache_evictions, Relaxed);
+                let ts = engine.tier_stats();
+                s.tier_hot_pages.store(ts.hot_pages, Relaxed);
+                s.tier_aged_pages.store(ts.aged_pages, Relaxed);
+                s.tier_spilled_pages.store(ts.spilled_pages, Relaxed);
+                s.tier_spilled_bytes.store(ts.spilled_bytes, Relaxed);
+                s.tier_pages_aged.store(ts.pages_aged, Relaxed);
+                s.tier_pages_spilled.store(ts.pages_spilled, Relaxed);
+                s.tier_pages_reloaded.store(ts.pages_reloaded, Relaxed);
+                s.tier_spill_bytes.store(ts.spill_bytes, Relaxed);
+                s.tier_reload_bytes.store(ts.reload_bytes, Relaxed);
             }
         });
         EngineHandle {
@@ -2166,6 +2367,7 @@ impl EngineHandle {
             kv_policy,
             spec_mode,
             spec_k,
+            kv_spill,
         }
     }
 
@@ -2287,6 +2489,30 @@ impl EngineHandle {
             cache_hits: s.decoded_cache_hits.load(Relaxed),
             cache_misses: s.decoded_cache_misses.load(Relaxed),
             cache_evictions: s.kv_cache_evictions.load(Relaxed),
+        }
+    }
+
+    /// Spill mode this worker was configured with (`off` | `cold` |
+    /// `aging`).
+    pub fn kv_spill_mode(&self) -> &'static str {
+        self.kv_spill
+    }
+
+    /// Tier gauge/counter snapshot of this worker, as published after
+    /// its last scheduler step.
+    pub fn tier_stats(&self) -> TierStats {
+        use std::sync::atomic::Ordering::Relaxed;
+        let s = &self.shared;
+        TierStats {
+            hot_pages: s.tier_hot_pages.load(Relaxed),
+            aged_pages: s.tier_aged_pages.load(Relaxed),
+            spilled_pages: s.tier_spilled_pages.load(Relaxed),
+            spilled_bytes: s.tier_spilled_bytes.load(Relaxed),
+            pages_aged: s.tier_pages_aged.load(Relaxed),
+            pages_spilled: s.tier_pages_spilled.load(Relaxed),
+            pages_reloaded: s.tier_pages_reloaded.load(Relaxed),
+            spill_bytes: s.tier_spill_bytes.load(Relaxed),
+            reload_bytes: s.tier_reload_bytes.load(Relaxed),
         }
     }
 
@@ -3554,5 +3780,141 @@ mod tests {
         let shared = h.shared.clone();
         h.shutdown();
         assert!(!shared.healthy.load(std::sync::atomic::Ordering::Relaxed));
+    }
+
+    /// Dual-format admission block bytes of the test backend, probed
+    /// from a throwaway engine (the tier tests size byte budgets in
+    /// whole blocks).
+    fn dual_block_bytes() -> usize {
+        let probe = Engine::new(
+            Box::new(HostBackend::for_tests()),
+            EngineConfig { kv_format: KvFormat::Dual, ..Default::default() },
+            5,
+        );
+        probe.stats.kv_bytes_per_token as usize * PAGE_TOKENS
+    }
+
+    fn tier_cfg(
+        dir: &std::path::Path,
+        mode: crate::kvquant::tier::TierMode,
+        threads: usize,
+        budget_blocks: usize,
+    ) -> EngineConfig {
+        EngineConfig {
+            max_new_tokens: 8,
+            kv_format: KvFormat::Dual,
+            prefix_cache: true,
+            kv_spill: mode,
+            kv_spill_dir: Some(dir.to_path_buf()),
+            kv_budget_bytes: budget_blocks * dual_block_bytes(),
+            shed_policy: ShedPolicy::Spill,
+            threads,
+            ..Default::default()
+        }
+    }
+
+    /// Warm-after-spill determinism: a prompt whose donated pages were
+    /// pushed to disk by another request's admission pressure must
+    /// reload them and reproduce its cold-start token stream
+    /// bit-exactly.
+    fn spilled_prefix_case(threads: usize) {
+        let dir = crate::util::spill::TempDir::new("engine_tier").unwrap();
+        let cfg = tier_cfg(dir.path(), crate::kvquant::tier::TierMode::Cold, threads, 8);
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        // Cold start: prompt A prefills from scratch and donates its 4
+        // pages (4 of the 8 budget blocks) to the radix cache.
+        assert!(e.submit(req(1, 64, 8)).is_none());
+        let cold = e.run_until_idle().unwrap();
+        assert_eq!(cold.len(), 1);
+        // Disjoint prompt B: its projected demand exceeds the budget,
+        // so admission routes A's pages through the spill hook instead
+        // of dropping them.
+        let mut b = req(2, 64, 8);
+        for t in b.tokens.iter_mut() {
+            *t = ((*t as u64 * 5) % 58) as i32 + 6;
+        }
+        assert!(e.submit(b).is_none());
+        let _ = e.run_until_idle().unwrap();
+        assert!(e.stats.kv_pages_spilled > 0, "pressure must spill, not reject");
+        // Warm-after-spill: the same prompt as A reloads its spilled
+        // prefix from disk and must match the cold run exactly.
+        assert!(e.submit(req(3, 64, 8)).is_none());
+        let warm = e.run_until_idle().unwrap();
+        assert_eq!(warm.len(), 1);
+        assert_eq!(warm[0].output, cold[0].output, "threads={threads}");
+        assert!(e.stats.kv_pages_reloaded > 0, "the hit must come from disk");
+        assert_eq!(e.stats.rejected, 0);
+        assert_eq!(e.stats.shed, 0);
+        assert!(e.kv_bytes_in_use() <= e.kv_bytes_capacity());
+        assert!(e.pool.check_invariants().is_ok());
+    }
+
+    #[test]
+    fn spilled_prefix_reloads_bit_exact_single_thread() {
+        spilled_prefix_case(1);
+    }
+
+    #[test]
+    fn spilled_prefix_reloads_bit_exact_threaded() {
+        spilled_prefix_case(4);
+    }
+
+    #[test]
+    fn over_budget_working_set_completes_with_spill() {
+        // 10 disjoint 64-token prompts donate 40 pages against an
+        // 8-block budget: drop-only serving would discard the overflow;
+        // with the tier it lives on disk — and either way every request
+        // must complete (the acceptance bar: no `rejected` under
+        // `--shed-policy spill`).
+        let dir = crate::util::spill::TempDir::new("engine_tier_ws").unwrap();
+        let cfg = tier_cfg(dir.path(), crate::kvquant::tier::TierMode::Cold, 1, 8);
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        for i in 0..10u64 {
+            let mut r = req(i, 64, 8);
+            for t in r.tokens.iter_mut() {
+                *t = ((*t as u64 * (i + 3)) % 58) as i32 + 6;
+            }
+            assert!(e.submit(r).is_none(), "request {i} must not shed");
+            let resps = e.run_until_idle().unwrap();
+            assert_eq!(resps.len(), 1);
+            assert!(
+                !matches!(resps[0].finish, FinishReason::Rejected),
+                "request {i} rejected"
+            );
+        }
+        assert_eq!(e.stats.completed, 10);
+        assert_eq!(e.stats.rejected, 0);
+        assert_eq!(e.stats.shed, 0);
+        assert!(e.tier_stats().spilled_pages > 0, "overflow must be on disk");
+        // Resident ceiling held: only the budget's blocks are in memory.
+        assert!(e.kv_bytes_in_use() <= e.kv_bytes_capacity());
+        assert!(e.pool.check_invariants().is_ok());
+    }
+
+    #[test]
+    fn aging_schedule_credits_then_spills_idle_pages() {
+        // `--kv-spill aging` with an instant clock: one idle step ages
+        // every unpinned donated page (dropping high planes outside the
+        // 16-token sink window and crediting the bytes back to the
+        // pool), the next spills them and clears the credit.
+        let dir = crate::util::spill::TempDir::new("engine_tier_age").unwrap();
+        let mut cfg =
+            tier_cfg(dir.path(), crate::kvquant::tier::TierMode::Aging, 1, 64);
+        cfg.kv_age_ms = 0;
+        cfg.kv_precision_policies = vec![KvPolicy { sink: 16, diag: 16 }];
+        let mut e = Engine::new(Box::new(HostBackend::for_tests()), cfg, 5);
+        assert!(e.submit(req(1, 64, 8)).is_none());
+        let resps = e.run_until_idle().unwrap();
+        assert_eq!(resps.len(), 1);
+        let _ = e.step().unwrap();
+        assert!(e.stats.kv_pages_aged >= 3, "{}", e.stats.kv_pages_aged);
+        assert!(e.pool.credited_bytes() > 0, "aged pages credit bytes back");
+        assert!(e.pool.check_invariants().is_ok());
+        let _ = e.step().unwrap();
+        assert!(e.stats.kv_pages_spilled >= 4, "{}", e.stats.kv_pages_spilled);
+        assert_eq!(e.pool.credited_bytes(), 0, "spilling releases the credit");
+        assert_eq!(e.tier_stats().aged_pages, 0);
+        assert!(e.tier_stats().spilled_pages >= 4);
+        assert!(e.pool.check_invariants().is_ok());
     }
 }

@@ -31,21 +31,41 @@
 //! only targets unpinned pages, so every eviction frees a block.
 
 use crate::kvcache::SeqId;
-use crate::kvquant::QuantSlotKv;
+use crate::kvquant::tier::{age_page, decode_node, TierManager};
+use crate::kvquant::{KvPolicy, QuantSlotKv};
 use crate::mxfp::fused::DualQuantized;
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// `[layer][kv head]` page payload of one node.
 type PagePlane = Vec<Vec<Arc<DualQuantized>>>;
 
+/// Tier residency of one node's planes ([`crate::kvquant::tier`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PageState {
+    /// Planes resident with the store format's full plane set.
+    Hot,
+    /// Planes resident, precision-aged down to the low copy (outside
+    /// each layer's sink window); bytes credited back to the pool.
+    Aged,
+    /// Planes on disk in the worker's spill file; `k`/`v` are empty and
+    /// the node's pool block is released until a reload.
+    Spilled,
+}
+
 struct Node {
-    /// BlockPool accounting id holding this page's admission block.
+    /// BlockPool accounting id holding this page's admission block
+    /// (while resident; a spilled node keeps the id as its spill-index
+    /// key and re-allocates under it on reload).
     pool_id: SeqId,
     k: PagePlane,
     v: PagePlane,
     /// LRU stamp (monotonic clock; larger = touched more recently).
     stamp: u64,
+    /// Wall-clock last touch driving the aging schedule.
+    touched: Instant,
+    state: PageState,
     children: BTreeMap<Vec<i32>, Node>,
 }
 
@@ -111,7 +131,10 @@ pub struct RadixCache {
     /// warm-run-equals-cold-run contract.
     roots: [BTreeMap<Vec<i32>, Node>; 2],
     clock: u64,
+    /// Resident (hot + aged) pages; spilled nodes are not counted.
     pages: usize,
+    /// Resident pages currently in the aged tier.
+    aged: usize,
 }
 
 impl RadixCache {
@@ -121,6 +144,7 @@ impl RadixCache {
             roots: [BTreeMap::new(), BTreeMap::new()],
             clock: 0,
             pages: 0,
+            aged: 0,
         }
     }
 
@@ -131,6 +155,11 @@ impl RadixCache {
 
     pub fn is_empty(&self) -> bool {
         self.pages == 0
+    }
+
+    /// Resident page split `(hot, aged)` for the tier gauges.
+    pub fn tier_pages(&self) -> (u64, u64) {
+        ((self.pages - self.aged) as u64, self.aged as u64)
     }
 
     /// Longest cached prefix of `prompt` under attention mode `dma`,
@@ -148,8 +177,16 @@ impl RadixCache {
             }
             let cur = level;
             let Some(node) = cur.get_mut(chunk) else { break };
+            if node.state == PageState::Spilled {
+                // Non-resident planes cannot be shared; the hit stops
+                // here (the engine reloads spilled path nodes *before*
+                // looking up, so this only triggers when a reload could
+                // not re-admit the page — the suffix prefills normally).
+                break;
+            }
             self.clock += 1;
             node.stamp = self.clock;
+            node.touched = Instant::now();
             hit.tokens += pt;
             hit.pool_ids.push(node.pool_id);
             hit.k.push(node.k.clone());
@@ -194,6 +231,8 @@ impl RadixCache {
                         k: plane(&slot.k),
                         v: plane(&slot.v),
                         stamp: self.clock,
+                        touched: Instant::now(),
+                        state: PageState::Hot,
                         children: BTreeMap::new(),
                     },
                 );
@@ -201,8 +240,15 @@ impl RadixCache {
                 inserted += 1;
             }
             let node = cur.get_mut(chunk).unwrap();
+            if node.state == PageState::Spilled {
+                // An existing-but-spilled node stays the authority for
+                // this range; donating a duplicate under it would fork
+                // the trie. Rehydration happens through `reload_path`.
+                break;
+            }
             self.clock += 1;
             node.stamp = self.clock;
+            node.touched = Instant::now();
             level = &mut node.children;
         }
         inserted
@@ -224,7 +270,9 @@ impl RadixCache {
             let mut best: Option<(u64, Vec<Vec<i32>>)> = None;
             for (key, node) in level {
                 let cand = if node.children.is_empty() {
-                    if evictable(node.pool_id) {
+                    // Spilled leaves hold no pool block; drop-eviction
+                    // targets resident pages only.
+                    if node.state != PageState::Spilled && evictable(node.pool_id) {
                         Some((node.stamp, vec![key.clone()]))
                     } else {
                         None
@@ -261,7 +309,275 @@ impl RadixCache {
         }
         let node = level.remove(path.last().unwrap()).unwrap();
         self.pages -= 1;
+        if node.state == PageState::Aged {
+            self.aged -= 1;
+        }
         Some(node.pool_id)
+    }
+
+    /// Spill the least-recently-used *resident* page that passes
+    /// `evictable` to the tier's spill file — the tiered replacement
+    /// for [`Self::evict_lru_leaf`] under admission pressure. Any
+    /// depth qualifies, not just leaves: spilling keeps the node in
+    /// the trie (children, future hits, and the token key survive;
+    /// only the planes move to disk), so structure is never orphaned.
+    /// Returns the node's pool id for the engine to release — every
+    /// successful spill frees one admission block. `None` when nothing
+    /// resident qualifies or the spill write failed (the caller falls
+    /// back to pure-drop eviction or defers the admission).
+    pub fn spill_lru(
+        &mut self,
+        tier: &mut TierManager,
+        evictable: impl Fn(SeqId) -> bool,
+    ) -> Option<SeqId> {
+        fn min_resident(
+            level: &BTreeMap<Vec<i32>, Node>,
+            evictable: &impl Fn(SeqId) -> bool,
+        ) -> Option<(u64, Vec<Vec<i32>>)> {
+            let mut best: Option<(u64, Vec<Vec<i32>>)> = None;
+            for (key, node) in level {
+                let mut cand = None;
+                if node.state != PageState::Spilled && evictable(node.pool_id) {
+                    cand = Some((node.stamp, vec![key.clone()]));
+                }
+                if let Some((s, mut path)) = min_resident(&node.children, evictable) {
+                    if cand.as_ref().is_none_or(|&(bs, _)| s < bs) {
+                        path.insert(0, key.clone());
+                        cand = Some((s, path));
+                    }
+                }
+                if let Some((s, path)) = cand {
+                    if best.as_ref().is_none_or(|&(bs, _)| s < bs) {
+                        best = Some((s, path));
+                    }
+                }
+            }
+            best
+        }
+        let (root_idx, path) = self
+            .roots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| min_resident(r, &evictable).map(|(s, p)| (s, i, p)))
+            .min_by_key(|&(s, _, _)| s)
+            .map(|(_, i, p)| (i, p))?;
+        let mut level = &mut self.roots[root_idx];
+        for key in &path[..path.len() - 1] {
+            level = &mut level.get_mut(key).unwrap().children;
+        }
+        let node = level.get_mut(path.last().unwrap()).unwrap();
+        if tier.spill(node.pool_id, &node.k, &node.v).is_err() {
+            return None;
+        }
+        node.k = Vec::new();
+        node.v = Vec::new();
+        if node.state == PageState::Aged {
+            self.aged -= 1;
+        }
+        node.state = PageState::Spilled;
+        self.pages -= 1;
+        Some(node.pool_id)
+    }
+
+    /// Reload every spilled node on `prompt`'s match path back into
+    /// residency so the subsequent [`Self::lookup`] sees the whole
+    /// prefix. For each spilled node, in path order, `alloc(pool_id)`
+    /// must re-reserve its admission block under the same id (returning
+    /// `false` stops the reload there — the surviving prefix still
+    /// hits; the suffix prefills normally). The first touched node's
+    /// record is decoded synchronously on the engine thread; the rest
+    /// of the run's records are prefetched — read back in one serial
+    /// I/O sweep, then decoded in parallel on the process worker pool
+    /// (`util::pool`) — so a long spilled prefix reloads at pool
+    /// parallelism instead of page-at-a-time. Returns
+    /// `(pages_reloaded, bytes_read)`.
+    ///
+    /// A checksum mismatch panics: the spill file is this process's own
+    /// write-back of immutable pages, so corruption means undefined
+    /// logits, not a recoverable miss.
+    pub fn reload_path(
+        &mut self,
+        prompt: &[i32],
+        dma: bool,
+        tier: &mut TierManager,
+        threads: usize,
+        mut alloc: impl FnMut(SeqId) -> bool,
+        mut unalloc: impl FnMut(SeqId),
+    ) -> (u64, u64) {
+        struct Pending<'a> {
+            id: SeqId,
+            k: &'a mut PagePlane,
+            v: &'a mut PagePlane,
+            state: &'a mut PageState,
+            bytes: Vec<u8>,
+            checksum: u64,
+        }
+        let pt = self.page_tokens;
+        // Serial sweep: collect each spilled path node's raw record.
+        let mut pending: Vec<Pending> = Vec::new();
+        let mut level = &mut self.roots[dma as usize];
+        let mut bytes_read = 0u64;
+        for chunk in prompt.chunks_exact(pt) {
+            let cur = level;
+            let Some(node) = cur.get_mut(chunk) else { break };
+            let Node { pool_id, k, v, state, children, .. } = node;
+            if *state == PageState::Spilled {
+                if !alloc(*pool_id) {
+                    break;
+                }
+                let (bytes, checksum) = match tier.take_spilled(*pool_id) {
+                    Ok(r) => r,
+                    Err(_) => {
+                        // I/O failure: give the block back and stop the
+                        // hit here; the record stays indexed on disk.
+                        unalloc(*pool_id);
+                        break;
+                    }
+                };
+                bytes_read += bytes.len() as u64;
+                pending.push(Pending { id: *pool_id, k, v, state, bytes, checksum });
+            }
+            level = children;
+        }
+        if pending.is_empty() {
+            return (0, 0);
+        }
+        // First touch decodes synchronously; the rest of the run rides
+        // the worker pool.
+        let decode = |p: &mut Pending| {
+            let (k, v) = decode_node(&p.bytes, p.checksum)
+                .unwrap_or_else(|e| panic!("kv spill reload of page {}: {e}", p.id));
+            *p.k = k;
+            *p.v = v;
+        };
+        let (first, rest) = pending.split_at_mut(1);
+        decode(&mut first[0]);
+        crate::util::pool::par_items(rest, threads, decode);
+        let reloaded = pending.len() as u64;
+        for p in pending {
+            // Fresh stamps/touch come from the lookup that follows.
+            *p.state = PageState::Hot;
+            self.pages += 1;
+        }
+        (reloaded, bytes_read)
+    }
+
+    /// One pass of the aging schedule `hot → aged → spilled` over every
+    /// resident page: a page idle past `age` whose block no other
+    /// sequence pins (`evictable`) drops its high-precision planes —
+    /// except for layers whose [`KvPolicy`] sink window covers the
+    /// page, the positions the paper's policy keeps high because they
+    /// tolerate precision loss worst — and the saved bytes are credited
+    /// back through `credit`. A page idle past `2 * age` in the aged
+    /// tier spills to disk and `release(pool_id)` frees its block.
+    /// Returns `(nodes_aged, nodes_spilled)` this pass.
+    pub fn age_idle(
+        &mut self,
+        tier: &mut TierManager,
+        age: Duration,
+        policies: &[KvPolicy],
+        evictable: &impl Fn(SeqId) -> bool,
+        credit: &mut impl FnMut(SeqId, usize),
+        release: &mut impl FnMut(SeqId),
+    ) -> (u64, u64) {
+        struct Walk<'a, E, C, R> {
+            tier: &'a mut TierManager,
+            age: Duration,
+            now: Instant,
+            pt: usize,
+            policies: &'a [KvPolicy],
+            evictable: &'a E,
+            credit: &'a mut C,
+            release: &'a mut R,
+            aged_nodes: u64,
+            spilled_nodes: u64,
+            aged_delta: isize,
+            resident_delta: isize,
+        }
+        fn visit<E: Fn(SeqId) -> bool, C: FnMut(SeqId, usize), R: FnMut(SeqId)>(
+            level: &mut BTreeMap<Vec<i32>, Node>,
+            depth: usize,
+            w: &mut Walk<'_, E, C, R>,
+        ) {
+            for node in level.values_mut() {
+                visit(&mut node.children, depth + 1, w);
+                if node.state == PageState::Spilled
+                    || w.now.duration_since(node.touched) < w.age
+                    || !(w.evictable)(node.pool_id)
+                {
+                    continue;
+                }
+                match node.state {
+                    PageState::Hot => {
+                        // Drop the high planes of every layer whose sink
+                        // window has moved past this page.
+                        let default = KvPolicy::default();
+                        let mut saved = 0usize;
+                        for planes in [&mut node.k, &mut node.v] {
+                            for (li, heads) in planes.iter_mut().enumerate() {
+                                let pol = w
+                                    .policies
+                                    .get(li.min(w.policies.len().wrapping_sub(1)))
+                                    .unwrap_or(&default);
+                                if depth * w.pt < pol.sink {
+                                    continue;
+                                }
+                                for page in heads.iter_mut() {
+                                    if let Some((aged, bytes)) = age_page(page) {
+                                        *page = aged;
+                                        saved += bytes;
+                                    }
+                                }
+                            }
+                        }
+                        if saved > 0 {
+                            (w.credit)(node.pool_id, saved);
+                        }
+                        node.state = PageState::Aged;
+                        w.tier.note_aged(1);
+                        w.aged_nodes += 1;
+                        w.aged_delta += 1;
+                    }
+                    PageState::Aged => {
+                        if w.now.duration_since(node.touched) < w.age * 2 {
+                            continue;
+                        }
+                        if w.tier.spill(node.pool_id, &node.k, &node.v).is_err() {
+                            continue;
+                        }
+                        node.k = Vec::new();
+                        node.v = Vec::new();
+                        node.state = PageState::Spilled;
+                        (w.release)(node.pool_id);
+                        w.spilled_nodes += 1;
+                        w.aged_delta -= 1;
+                        w.resident_delta -= 1;
+                    }
+                    PageState::Spilled => unreachable!(),
+                }
+            }
+        }
+        let mut w = Walk {
+            tier,
+            age,
+            now: Instant::now(),
+            pt: self.page_tokens,
+            policies,
+            evictable,
+            credit,
+            release,
+            aged_nodes: 0,
+            spilled_nodes: 0,
+            aged_delta: 0,
+            resident_delta: 0,
+        };
+        for root in &mut self.roots {
+            visit(root, 0, &mut w);
+        }
+        let (aged_nodes, spilled_nodes) = (w.aged_nodes, w.spilled_nodes);
+        self.aged = (self.aged as isize + w.aged_delta) as usize;
+        self.pages = (self.pages as isize + w.resident_delta) as usize;
+        (aged_nodes, spilled_nodes)
     }
 }
 
@@ -432,5 +748,178 @@ mod tests {
         assert_eq!(c.evict_lru_leaf(|_| true), None);
         assert!(c.is_empty());
         assert_eq!(c.lookup(&a, false, 64).tokens, 0);
+    }
+
+    fn tier(dir: &crate::util::spill::TempDir) -> TierManager {
+        TierManager::new(crate::kvquant::tier::TierMode::Aging, dir.path()).unwrap()
+    }
+
+    #[test]
+    fn spill_then_reload_restores_hit_bit_exact() {
+        let dir = crate::util::spill::TempDir::new("dma_radix_tier").unwrap();
+        let mut t = tier(&dir);
+        let mut c = RadixCache::new(4);
+        let p = prompt(12);
+        let slot = slot_with(12, 9);
+        c.insert(&p, false, &slot, |j| Some(500 + j as u64));
+        assert_eq!(c.len(), 3);
+
+        // LRU resident page is the path root (last-touch order).
+        assert_eq!(c.spill_lru(&mut t, |_| true), Some(500));
+        assert_eq!((c.len(), t.spilled_pages()), (2, 1));
+        // The hit stops at the spilled root page.
+        assert_eq!(c.lookup(&p, false, 64).tokens, 0);
+        // Insert over the spilled range donates nothing (the spilled
+        // node stays the authority for its range).
+        assert_eq!(c.insert(&p, false, &slot, |j| Some(900 + j as u64)), 0);
+
+        // Reload the path: the block re-reserves under the same id and
+        // the planes come back bit-exact.
+        let mut allocs = Vec::new();
+        let (n, bytes) = c.reload_path(
+            &p,
+            false,
+            &mut t,
+            1,
+            |id| {
+                allocs.push(id);
+                true
+            },
+            |_| (),
+        );
+        assert_eq!((n, allocs), (1, vec![500]));
+        assert!(bytes > 0);
+        assert_eq!(t.spilled_pages(), 0);
+        let hit = c.lookup(&p, false, 64);
+        assert_eq!(hit.tokens, 12);
+        assert_eq!(c.len(), 3);
+        for (j, pk) in hit.k.iter().enumerate() {
+            for li in 0..2 {
+                for h in 0..2 {
+                    let orig = slot.k[li][h].page_arc(j);
+                    assert_eq!(pk[li][h].packed_fp4, orig.packed_fp4);
+                    assert_eq!(pk[li][h].fp8_codes, orig.fp8_codes);
+                    assert_eq!(pk[li][h].sq, orig.sq);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spill_order_follows_last_touch_and_alloc_failure_stops_reload() {
+        let dir = crate::util::spill::TempDir::new("dma_radix_tier").unwrap();
+        let mut t = tier(&dir);
+        let mut c = RadixCache::new(4);
+        let p = prompt(12);
+        c.insert(&p, false, &slot_with(12, 19), |j| Some(700 + j as u64));
+        c.lookup(&p, false, 64); // re-touch the whole path in order
+        assert_eq!(c.spill_lru(&mut t, |_| true), Some(700));
+        assert_eq!(c.spill_lru(&mut t, |_| true), Some(701));
+        assert_eq!(c.spill_lru(&mut t, |_| true), Some(702));
+        assert_eq!(c.spill_lru(&mut t, |_| true), None);
+        assert_eq!((c.len(), t.spilled_pages()), (0, 3));
+
+        // Only the first two reload allocations succeed: the third page
+        // stays spilled and the hit covers the reloaded prefix only.
+        let mut budget = 2;
+        let (n, _) = c.reload_path(
+            &p,
+            false,
+            &mut t,
+            1,
+            |_| {
+                if budget == 0 {
+                    return false;
+                }
+                budget -= 1;
+                true
+            },
+            |_| (),
+        );
+        assert_eq!(n, 2);
+        assert_eq!(t.spilled_pages(), 1);
+        assert_eq!(c.lookup(&p, false, 64).tokens, 8);
+    }
+
+    #[test]
+    fn age_idle_respects_sink_window_then_spills() {
+        let dir = crate::util::spill::TempDir::new("dma_radix_tier").unwrap();
+        let mut t = tier(&dir);
+        let mut c = RadixCache::new(4);
+        let p = prompt(8);
+        let slot = slot_with(8, 10);
+        c.insert(&p, false, &slot, |j| Some(600 + j as u64));
+        let policies = vec![KvPolicy { sink: 4, diag: 4 }];
+
+        let mut credits = Vec::new();
+        let mut released = Vec::new();
+        let (aged, spilled) = c.age_idle(
+            &mut t,
+            Duration::ZERO,
+            &policies,
+            &|_| true,
+            &mut |id, b| credits.push((id, b)),
+            &mut |id| released.push(id),
+        );
+        assert_eq!((aged, spilled), (2, 0));
+        assert_eq!(c.tier_pages(), (0, 2));
+        // Page 0 sits inside the sink window (sink = 4 tokens = 1 page):
+        // its planes stay high, so only page 1 credits bytes back.
+        assert_eq!(credits.len(), 1);
+        assert_eq!(credits[0].0, 601);
+        assert!(credits[0].1 > 0);
+        let hit = c.lookup(&p, false, 64);
+        assert_eq!(hit.tokens, 8);
+        assert!(!hit.k[0][0][0].fp8_codes.is_empty(), "sink page kept high");
+        assert!(hit.k[1][1][1].fp8_codes.is_empty(), "body page aged to low");
+        assert!(!hit.k[1][1][1].packed_fp4.is_empty());
+
+        // Second pass: aged pages past 2x the idle threshold spill and
+        // release their blocks.
+        let (aged, spilled) = c.age_idle(
+            &mut t,
+            Duration::ZERO,
+            &policies,
+            &|_| true,
+            &mut |_, _| (),
+            &mut |id| released.push(id),
+        );
+        assert_eq!((aged, spilled), (0, 2));
+        assert_eq!(c.tier_pages(), (0, 0));
+        assert!(c.is_empty());
+        released.sort_unstable();
+        assert_eq!(released, vec![600, 601]);
+        assert_eq!(t.spilled_pages(), 2);
+
+        // Reload brings the whole prefix back; the aged page returns in
+        // its aged (low-only) form — spill is bit-exact per tier.
+        let (n, _) = c.reload_path(&p, false, &mut t, 2, |_| true, |_| ());
+        assert_eq!(n, 2);
+        let hit = c.lookup(&p, false, 64);
+        assert_eq!(hit.tokens, 8);
+        assert!(!hit.k[0][0][0].fp8_codes.is_empty());
+        assert!(hit.k[1][0][1].fp8_codes.is_empty());
+    }
+
+    #[test]
+    fn pinned_pages_never_age_or_spill() {
+        let dir = crate::util::spill::TempDir::new("dma_radix_tier").unwrap();
+        let mut t = tier(&dir);
+        let mut c = RadixCache::new(4);
+        let p = prompt(8);
+        c.insert(&p, false, &slot_with(8, 11), |j| Some(800 + j as u64));
+        // The engine's evictable closure says page 800 is pinned.
+        let (aged, spilled) = c.age_idle(
+            &mut t,
+            Duration::ZERO,
+            &[KvPolicy { sink: 0, diag: 0 }],
+            &|id| id != 800,
+            &mut |_, _| (),
+            &mut |_| (),
+        );
+        assert_eq!((aged, spilled), (1, 0));
+        assert_eq!(c.spill_lru(&mut t, |id| id != 800), Some(801));
+        assert_eq!(c.spill_lru(&mut t, |id| id != 800), None);
+        assert_eq!(c.tier_pages(), (1, 0));
     }
 }

@@ -152,6 +152,22 @@ impl Router {
         self.workers[0].read().unwrap().spec_k()
     }
 
+    /// KV spill mode of the fleet (workers share one config): `off` |
+    /// `cold` | `aging`.
+    pub fn kv_spill_mode(&self) -> &'static str {
+        self.workers[0].read().unwrap().kv_spill_mode()
+    }
+
+    /// Fleet-wide tier residency and spill/reload counters, merged
+    /// across workers.
+    pub fn tier_stats(&self) -> crate::kvquant::tier::TierStats {
+        let mut total = crate::kvquant::tier::TierStats::default();
+        for w in &self.workers {
+            total.merge(&w.read().unwrap().tier_stats());
+        }
+        total
+    }
+
     /// Prompt tokens served from prefix caches across all workers.
     pub fn prefix_hit_tokens(&self) -> u64 {
         self.workers
@@ -196,11 +212,16 @@ impl Router {
             .iter()
             .map(|w| {
                 let w = w.read().unwrap();
+                let tier = w.tier_stats();
                 WorkerGauges {
                     queue_depth: w.load() as u64,
                     kv_bytes_in_use: w.kv_bytes_in_use(),
                     kv_bytes_capacity: w.kv_bytes_capacity(),
                     decoded_bytes_live: w.decoded_bytes_live(),
+                    tier_hot_pages: tier.hot_pages,
+                    tier_aged_pages: tier.aged_pages,
+                    tier_spilled_pages: tier.spilled_pages,
+                    tier_spilled_bytes: tier.spilled_bytes,
                     healthy: w.healthy(),
                 }
             })

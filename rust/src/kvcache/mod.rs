@@ -44,6 +44,15 @@ pub struct BlockPool {
     refcount: Vec<u32>,
     free: Vec<usize>,
     seqs: BTreeMap<SeqId, SeqEntry>,
+    /// Per-sequence byte credits from precision aging
+    /// ([`crate::kvquant::tier`]): a radix page whose high planes were
+    /// dropped physically shrank in place, but its block still occupies
+    /// one accounting slot — the credit lets [`Self::bytes_in_use`]
+    /// report the real residency so admission can use the freed bytes.
+    credits: BTreeMap<SeqId, usize>,
+    /// Running sum of `credits` (kept incrementally; `bytes_in_use` is
+    /// on the admission hot path).
+    credited: usize,
 }
 
 impl BlockPool {
@@ -54,6 +63,8 @@ impl BlockPool {
             refcount: vec![0; num_blocks],
             free: (0..num_blocks).rev().collect(),
             seqs: BTreeMap::new(),
+            credits: BTreeMap::new(),
+            credited: 0,
         }
     }
 
@@ -91,10 +102,33 @@ impl BlockPool {
         self.refcount.len() * self.block_tokens * self.bytes_per_token
     }
 
-    /// Bytes of allocated (referenced) blocks.
+    /// Bytes of allocated (referenced) blocks, net of aging credits.
     pub fn bytes_in_use(&self) -> usize {
         let used = self.refcount.iter().filter(|&&r| r > 0).count();
-        used * self.block_tokens * self.bytes_per_token
+        (used * self.block_tokens * self.bytes_per_token).saturating_sub(self.credited)
+    }
+
+    /// Credit `bytes` back against `seq`'s blocks after its pages were
+    /// precision-aged (their high planes dropped in place). The credit
+    /// is capped at the sequence's accounting bytes — a block can never
+    /// report negative residency — and cleared when the sequence is
+    /// released (the whole block returns to the pool then).
+    pub fn credit_bytes(&mut self, seq: SeqId, bytes: usize) -> crate::Result<()> {
+        let entry = self
+            .seqs
+            .get(&seq)
+            .ok_or_else(|| anyhow!("credit for unknown sequence {seq}"))?;
+        let cap = entry.blocks.len() * self.block_tokens * self.bytes_per_token;
+        let cur = self.credits.entry(seq).or_insert(0);
+        let add = bytes.min(cap.saturating_sub(*cur));
+        *cur += add;
+        self.credited += add;
+        Ok(())
+    }
+
+    /// Total outstanding aging credits.
+    pub fn credited_bytes(&self) -> usize {
+        self.credited
     }
 
     pub fn blocks_needed(&self, tokens: usize) -> usize {
@@ -183,6 +217,16 @@ impl BlockPool {
             }
         }
         entry.tokens = tokens;
+        let blocks = entry.blocks.len();
+        // Popped blocks re-credit in full, so any aging credit against
+        // them must shrink to keep the per-seq cap.
+        if let Some(c) = self.credits.get_mut(&seq) {
+            let cap = blocks * bt * self.bytes_per_token;
+            if *c > cap {
+                self.credited -= *c - cap;
+                *c = cap;
+            }
+        }
         Ok(())
     }
 
@@ -233,6 +277,9 @@ impl BlockPool {
             .seqs
             .remove(&seq)
             .ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        if let Some(c) = self.credits.remove(&seq) {
+            self.credited -= c;
+        }
         for b in entry.blocks {
             self.refcount[b] -= 1;
             if self.refcount[b] == 0 {
@@ -271,6 +318,20 @@ impl BlockPool {
                     bail!("seq {id} references freed block {b}");
                 }
             }
+        }
+        let mut total = 0usize;
+        for (id, &c) in &self.credits {
+            let Some(e) = self.seqs.get(id) else {
+                bail!("credit for released sequence {id}");
+            };
+            let cap = e.blocks.len() * self.block_tokens * self.bytes_per_token;
+            if c > cap {
+                bail!("seq {id} credit {c} exceeds its {cap} accounting bytes");
+            }
+            total += c;
+        }
+        if total != self.credited {
+            bail!("credit ledger drift: entries sum {total}, running total {}", self.credited);
         }
         Ok(())
     }
@@ -725,6 +786,47 @@ mod tests {
         assert_eq!(p.bytes_in_use(), 2 * 16 * 100);
         p.release(1).unwrap();
         assert_eq!(p.bytes_in_use(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn aging_credits_reduce_bytes_and_clear_on_release() {
+        let mut p = BlockPool::with_byte_budget(4 * 16 * 100, 16, 100);
+        p.allocate(1, 16).unwrap(); // 1 block = 1600 accounting bytes
+        p.allocate(2, 16).unwrap();
+        assert_eq!(p.bytes_in_use(), 2 * 1600);
+        p.credit_bytes(1, 600).unwrap();
+        assert_eq!(p.credited_bytes(), 600);
+        assert_eq!(p.bytes_in_use(), 2 * 1600 - 600);
+        p.check_invariants().unwrap();
+        // Credits accumulate but cap at the seq's accounting bytes.
+        p.credit_bytes(1, 600).unwrap();
+        p.credit_bytes(1, 9999).unwrap();
+        assert_eq!(p.credited_bytes(), 1600);
+        assert_eq!(p.bytes_in_use(), 1600);
+        p.check_invariants().unwrap();
+        // Unknown sequences are an error.
+        assert!(p.credit_bytes(42, 1).is_err());
+        // Release clears the credit along with the blocks.
+        p.release(1).unwrap();
+        assert_eq!(p.credited_bytes(), 0);
+        assert_eq!(p.bytes_in_use(), 1600);
+        p.release(2).unwrap();
+        assert_eq!(p.bytes_in_use(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn truncate_shrinks_credit_to_surviving_blocks() {
+        let mut p = BlockPool::with_byte_budget(4 * 16 * 100, 16, 100);
+        p.allocate(1, 32).unwrap(); // 2 blocks
+        p.credit_bytes(1, 2000).unwrap();
+        assert_eq!(p.credited_bytes(), 2000);
+        p.truncate(1, 16).unwrap(); // 1 block survives, cap now 1600
+        assert_eq!(p.credited_bytes(), 1600);
+        p.check_invariants().unwrap();
+        p.release(1).unwrap();
+        assert_eq!(p.credited_bytes(), 0);
         p.check_invariants().unwrap();
     }
 

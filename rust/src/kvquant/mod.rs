@@ -49,6 +49,8 @@ use crate::mxfp::{MXFP_BLOCK, NVFP4_BLOCK};
 use anyhow::bail;
 use std::sync::Arc;
 
+pub mod tier;
+
 /// Default page size in tokens. Matches the engine's KV block size so
 /// pages align one-to-one with [`crate::kvcache::BlockPool`] admission
 /// blocks.
@@ -478,6 +480,26 @@ impl QuantPagedKv {
         }
     }
 
+    /// Per-page clamp: [`Self::effective`] plus the planes page `j`
+    /// actually retains. A precision-aged radix page ([`tier`]) keeps
+    /// only its NVFP4 copy even inside a `dual`-format store, so a High
+    /// request against it must serve the low copy instead of decoding
+    /// an empty plane. For stores whose pages all carry the format's
+    /// full plane set (every store the tier never touched) this is
+    /// exactly [`Self::effective`].
+    pub fn effective_at(&self, j: usize, p: Precision) -> Precision {
+        let eff = self.effective(p);
+        let page = self.page_ref(j);
+        if page.rows == 0 {
+            return eff;
+        }
+        match eff {
+            Precision::High if page.fp8_codes.is_empty() => Precision::Low,
+            Precision::Low if page.packed_fp4.is_empty() => Precision::High,
+            e => e,
+        }
+    }
+
     fn page_ref(&self, j: usize) -> &DualQuantized {
         if j < self.pages.len() {
             &self.pages[j]
@@ -491,12 +513,13 @@ impl QuantPagedKv {
     pub fn decode_rows(&self, r0: usize, r1: usize, p: Precision, out: &mut [f32]) {
         let (d, pt) = (self.d, self.page_tokens);
         debug_assert!(r1 <= self.len());
-        let eff = self.effective(p);
         let mut r = r0;
         while r < r1 {
             let j = r / pt;
             let w0 = r - j * pt;
             let w1 = (r1 - j * pt).min(pt);
+            // Clamped per page: an aged shared page serves its low copy.
+            let eff = self.effective_at(j, p);
             let page = self.page_ref(j);
             let dst = &mut out[(r - r0) * d..(r - r0 + (w1 - w0)) * d];
             match eff {

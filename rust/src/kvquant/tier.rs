@@ -1,0 +1,700 @@
+//! Tiered KV memory: precision aging and disk spill for cold radix
+//! prefix pages.
+//!
+//! The radix cache (PR 2) made KV residency binary — a cached page was
+//! either resident at full byte cost or LRU-dropped and gone. This
+//! module adds the two tiers in between, turning `--kv-budget-mb`
+//! pressure into graceful degradation instead of recompute/reject:
+//!
+//! ```text
+//!   hot    resident, all planes the store format carries
+//!    │  idle past --kv-age-ms (and outside every layer's sink window)
+//!    ▼
+//!   warm   "precision-aged": the MXFP8 high planes are dropped and the
+//!          page is served from its NVFP4 low copy; the freed bytes are
+//!          credited back to the BlockPool so admission can reuse them
+//!    │  idle past 2x --kv-age-ms, or admission pressure
+//!    ▼
+//!   cold   spilled to the worker's spill file on disk; the page's pool
+//!          block is released entirely; a radix hit reloads it —
+//!          synchronously at first touch, with the rest of the prefix
+//!          run prefetched through `util::pool` so chunked prefill
+//!          overlaps reload I/O with compute
+//! ```
+//!
+//! The spill unit is one radix **node**: all `[layer][head]` K and V
+//! pages for one `page_tokens` range. Nodes are immutable and
+//! Arc-shared, so spilling is a pure serialize-and-release — nothing is
+//! mutated — and a reload is bit-exact by construction (an FNV-1a
+//! checksum over the serialized planes is verified on every reload).
+//! `--kv-spill cold` therefore preserves the warm-run-equals-cold-run
+//! contract exactly; `--kv-spill aging` additionally trades quality
+//! headroom (high-plane hits on aged pages clamp to the low copy, see
+//! [`super::QuantPagedKv::effective_at`]) for residency, guided per
+//! layer by the sink window of [`super::KvPolicy`] — the
+//! block-sensitivity observation that early (sink) positions tolerate
+//! precision loss worst.
+
+use crate::kvcache::SeqId;
+use crate::mxfp::fused::DualQuantized;
+use crate::util::spill::{fnv1a, SpillFile};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// `[layer][kv head]` page planes of one radix node — the spill unit.
+pub type SpillPlanes = Vec<Vec<Arc<DualQuantized>>>;
+
+/// Which tier transitions are enabled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TierMode {
+    /// No tiering: eviction drops pages (pre-tier behavior).
+    Off,
+    /// Spill/reload only — every transition is bit-exact.
+    Cold,
+    /// Precision aging before spill (quality-for-residency trade).
+    Aging,
+}
+
+impl TierMode {
+    pub fn parse(s: &str) -> crate::Result<TierMode> {
+        match s {
+            "off" => Ok(TierMode::Off),
+            "cold" => Ok(TierMode::Cold),
+            "aging" => Ok(TierMode::Aging),
+            other => anyhow::bail!("unknown kv spill mode '{other}' (off|cold|aging)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TierMode::Off => "off",
+            TierMode::Cold => "cold",
+            TierMode::Aging => "aging",
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        !matches!(self, TierMode::Off)
+    }
+
+    /// Whether idle pages age down to their low-precision copy.
+    pub fn ages(&self) -> bool {
+        matches!(self, TierMode::Aging)
+    }
+}
+
+/// Point-in-time tier accounting, merged across workers for stats v2.5
+/// and the Prometheus gauges.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Resident radix pages still holding every plane.
+    pub hot_pages: u64,
+    /// Resident pages serving from the low copy only.
+    pub aged_pages: u64,
+    /// Pages on disk.
+    pub spilled_pages: u64,
+    /// Bytes currently on disk (live extents).
+    pub spilled_bytes: u64,
+    /// Cumulative hot→aged transitions.
+    pub pages_aged: u64,
+    /// Cumulative →spilled transitions.
+    pub pages_spilled: u64,
+    /// Cumulative spilled→resident transitions.
+    pub pages_reloaded: u64,
+    /// Cumulative bytes written to spill files.
+    pub spill_bytes: u64,
+    /// Cumulative bytes read back.
+    pub reload_bytes: u64,
+}
+
+impl TierStats {
+    pub fn merge(&mut self, other: &TierStats) {
+        self.hot_pages += other.hot_pages;
+        self.aged_pages += other.aged_pages;
+        self.spilled_pages += other.spilled_pages;
+        self.spilled_bytes += other.spilled_bytes;
+        self.pages_aged += other.pages_aged;
+        self.pages_spilled += other.pages_spilled;
+        self.pages_reloaded += other.pages_reloaded;
+        self.spill_bytes += other.spill_bytes;
+        self.reload_bytes += other.reload_bytes;
+    }
+}
+
+/// Precision-age one immutable page: rebuild it with the MXFP8 high
+/// planes dropped, keeping the NVFP4 copy and the shared per-token
+/// scales. Returns the aged page and the bytes saved, or `None` when
+/// the page has nothing to age (no high planes, or no low copy to fall
+/// back on — an `mxfp8-high`-format store must not lose its only
+/// planes). The original Arc is untouched: live sharers keep decoding
+/// the full page; only the radix node swaps to the aged copy, and only
+/// when no live sequence pins its block.
+pub fn age_page(page: &Arc<DualQuantized>) -> Option<(Arc<DualQuantized>, usize)> {
+    if page.rows == 0 || page.fp8_codes.is_empty() || page.packed_fp4.is_empty() {
+        return None;
+    }
+    let saved = page.fp8_codes.len() + page.s8_codes.len();
+    let aged = DualQuantized {
+        rows: page.rows,
+        d: page.d,
+        packed_fp4: page.packed_fp4.clone(),
+        s4_codes: page.s4_codes.clone(),
+        fp8_codes: Vec::new(),
+        s8_codes: Vec::new(),
+        sq: page.sq.clone(),
+    };
+    Some((Arc::new(aged), saved))
+}
+
+fn put_u32(out: &mut Vec<u8>, v: usize) {
+    out.extend_from_slice(&u32::try_from(v).expect("plane too large").to_le_bytes());
+}
+
+fn get_u32(bytes: &[u8], pos: &mut usize) -> Result<usize, String> {
+    let end = *pos + 4;
+    let raw = bytes
+        .get(*pos..end)
+        .ok_or_else(|| format!("truncated spill record at byte {pos}"))?;
+    *pos = end;
+    Ok(u32::from_le_bytes(raw.try_into().unwrap()) as usize)
+}
+
+fn get_bytes<'a>(bytes: &'a [u8], pos: &mut usize, len: usize) -> Result<&'a [u8], String> {
+    let end = *pos + len;
+    let raw = bytes
+        .get(*pos..end)
+        .ok_or_else(|| format!("truncated spill record at byte {pos}"))?;
+    *pos = end;
+    Ok(raw)
+}
+
+fn encode_page(out: &mut Vec<u8>, p: &DualQuantized) {
+    put_u32(out, p.rows);
+    put_u32(out, p.d);
+    put_u32(out, p.packed_fp4.len());
+    put_u32(out, p.s4_codes.len());
+    put_u32(out, p.fp8_codes.len());
+    put_u32(out, p.s8_codes.len());
+    out.extend_from_slice(&p.packed_fp4);
+    out.extend_from_slice(&p.s4_codes);
+    out.extend_from_slice(&p.fp8_codes);
+    out.extend_from_slice(&p.s8_codes);
+    for &s in &p.sq {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+}
+
+fn decode_page(bytes: &[u8], pos: &mut usize) -> Result<DualQuantized, String> {
+    let rows = get_u32(bytes, pos)?;
+    let d = get_u32(bytes, pos)?;
+    let n4 = get_u32(bytes, pos)?;
+    let ns4 = get_u32(bytes, pos)?;
+    let n8 = get_u32(bytes, pos)?;
+    let ns8 = get_u32(bytes, pos)?;
+    let packed_fp4 = get_bytes(bytes, pos, n4)?.to_vec();
+    let s4_codes = get_bytes(bytes, pos, ns4)?.to_vec();
+    let fp8_codes = get_bytes(bytes, pos, n8)?.to_vec();
+    let s8_codes = get_bytes(bytes, pos, ns8)?.to_vec();
+    let sq_raw = get_bytes(bytes, pos, rows * 4)?;
+    let sq = sq_raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(DualQuantized { rows, d, packed_fp4, s4_codes, fp8_codes, s8_codes, sq })
+}
+
+fn encode_planes(out: &mut Vec<u8>, planes: &SpillPlanes) {
+    put_u32(out, planes.len());
+    put_u32(out, planes.first().map_or(0, Vec::len));
+    for heads in planes {
+        for page in heads {
+            encode_page(out, page);
+        }
+    }
+}
+
+fn decode_planes(bytes: &[u8], pos: &mut usize) -> Result<SpillPlanes, String> {
+    let layers = get_u32(bytes, pos)?;
+    let heads = get_u32(bytes, pos)?;
+    let mut planes = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        let mut row = Vec::with_capacity(heads);
+        for _ in 0..heads {
+            row.push(Arc::new(decode_page(bytes, pos)?));
+        }
+        planes.push(row);
+    }
+    Ok(planes)
+}
+
+/// Serialize one node's K and V planes into the on-disk record format:
+/// a pure byte-plane dump (u32 LE lengths + raw code bytes + f32 LE
+/// scales), so a round trip is bit-exact by construction.
+pub fn encode_node(k: &SpillPlanes, v: &SpillPlanes) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_planes(&mut out, k);
+    encode_planes(&mut out, v);
+    out
+}
+
+/// Parse a spill record back into `(k, v)` planes after verifying its
+/// checksum. Pure CPU work — this is the half of a reload that the
+/// engine fans out through `util::pool` when prefetching a prefix run.
+pub fn decode_node(bytes: &[u8], checksum: u64) -> Result<(SpillPlanes, SpillPlanes), String> {
+    let got = fnv1a(bytes);
+    if got != checksum {
+        return Err(format!(
+            "spill record checksum mismatch: stored {checksum:#x}, read back {got:#x}"
+        ));
+    }
+    let mut pos = 0;
+    let k = decode_planes(bytes, &mut pos)?;
+    let v = decode_planes(bytes, &mut pos)?;
+    if pos != bytes.len() {
+        return Err(format!(
+            "spill record has {} trailing bytes",
+            bytes.len() - pos
+        ));
+    }
+    Ok((k, v))
+}
+
+/// Index entry: where one spilled node lives in the worker's spill file.
+#[derive(Clone, Copy, Debug)]
+struct SpilledEntry {
+    offset: u64,
+    len: u64,
+    checksum: u64,
+}
+
+/// Per-worker tier state: the spill file, the page index, and the
+/// cumulative transition counters. Owned by one engine worker thread —
+/// the same single-writer discipline as the rest of the engine state.
+pub struct TierManager {
+    mode: TierMode,
+    file: SpillFile,
+    index: HashMap<SeqId, SpilledEntry>,
+    live_bytes: u64,
+    pages_aged: u64,
+    pages_spilled: u64,
+    pages_reloaded: u64,
+    spill_bytes: u64,
+    reload_bytes: u64,
+}
+
+impl TierManager {
+    /// Open a tier manager spilling into `dir` (created if missing).
+    /// Each manager gets a process-unique file name so multiple workers
+    /// (and multiple engines in tests) can share one directory.
+    pub fn new(mode: TierMode, dir: &Path) -> std::io::Result<TierManager> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        std::fs::create_dir_all(dir)?;
+        let name = format!(
+            "worker_{}_{}.spill",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        );
+        Ok(TierManager {
+            mode,
+            file: SpillFile::create(&dir.join(name))?,
+            index: HashMap::new(),
+            live_bytes: 0,
+            pages_aged: 0,
+            pages_spilled: 0,
+            pages_reloaded: 0,
+            spill_bytes: 0,
+            reload_bytes: 0,
+        })
+    }
+
+    pub fn mode(&self) -> TierMode {
+        self.mode
+    }
+
+    pub fn spill_path(&self) -> &Path {
+        self.file.path()
+    }
+
+    /// Record a hot→aged transition (the swap itself happens in the
+    /// radix cache, which owns the node planes).
+    pub fn note_aged(&mut self, pages: u64) {
+        self.pages_aged += pages;
+    }
+
+    /// Spill one node's planes to disk under `id` (its pool accounting
+    /// id — unique for the node's lifetime and reused on reload).
+    /// Returns the bytes written.
+    pub fn spill(
+        &mut self,
+        id: SeqId,
+        k: &SpillPlanes,
+        v: &SpillPlanes,
+    ) -> std::io::Result<usize> {
+        assert!(!self.index.contains_key(&id), "double spill of node {id}");
+        let record = encode_node(k, v);
+        let checksum = fnv1a(&record);
+        let offset = self.file.write_extent(&record)?;
+        let len = record.len() as u64;
+        self.index.insert(id, SpilledEntry { offset, len, checksum });
+        self.live_bytes += len;
+        self.pages_spilled += 1;
+        self.spill_bytes += len;
+        Ok(record.len())
+    }
+
+    pub fn contains(&self, id: SeqId) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    /// Pull the raw record of a spilled node off disk, freeing its
+    /// extent and index entry. The caller completes the reload with
+    /// [`decode_node`] (possibly on a pool worker — the I/O here is the
+    /// serial part, the decode is the parallel part).
+    pub fn take_spilled(&mut self, id: SeqId) -> std::io::Result<(Vec<u8>, u64)> {
+        let entry = self
+            .index
+            .remove(&id)
+            .unwrap_or_else(|| panic!("reload of node {id} that was never spilled"));
+        let bytes = match self.file.read_extent(entry.offset, entry.len) {
+            Ok(b) => b,
+            Err(e) => {
+                // Failed read: put the entry back so the node is not
+                // stranded half-reloaded; the caller drops the hit.
+                self.index.insert(id, entry);
+                return Err(e);
+            }
+        };
+        self.file.free_extent(entry.offset, entry.len);
+        self.live_bytes -= entry.len;
+        self.pages_reloaded += 1;
+        self.reload_bytes += entry.len;
+        Ok((bytes, entry.checksum))
+    }
+
+    /// Reload one node synchronously: read, verify, parse.
+    pub fn reload(&mut self, id: SeqId) -> std::io::Result<(SpillPlanes, SpillPlanes)> {
+        let (bytes, checksum) = self.take_spilled(id)?;
+        decode_node(&bytes, checksum).map_err(std::io::Error::other)
+    }
+
+    /// Discard a spilled node without reading it back (its radix node
+    /// was dropped, or rehydrated from a fresh prefill).
+    pub fn drop_entry(&mut self, id: SeqId) {
+        if let Some(entry) = self.index.remove(&id) {
+            self.file.free_extent(entry.offset, entry.len);
+            self.live_bytes -= entry.len;
+        }
+    }
+
+    /// Pages currently on disk.
+    pub fn spilled_pages(&self) -> u64 {
+        self.index.len() as u64
+    }
+
+    /// Bytes currently on disk (live extents only).
+    pub fn spilled_bytes(&self) -> u64 {
+        self.live_bytes
+    }
+
+    /// Tier snapshot with the manager's share of the fields filled in
+    /// (the engine adds hot/aged residency, which the radix cache owns).
+    pub fn stats(&self) -> TierStats {
+        TierStats {
+            hot_pages: 0,
+            aged_pages: 0,
+            spilled_pages: self.spilled_pages(),
+            spilled_bytes: self.spilled_bytes(),
+            pages_aged: self.pages_aged,
+            pages_spilled: self.pages_spilled,
+            pages_reloaded: self.pages_reloaded,
+            spill_bytes: self.spill_bytes,
+            reload_bytes: self.reload_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvquant::{KvFormat, Precision, QuantPagedKv};
+    use crate::util::rng::Rng;
+    use crate::util::spill::TempDir;
+
+    fn store_with(tokens: usize, d: usize, rng: &mut Rng) -> QuantPagedKv {
+        let mut s = QuantPagedKv::new(d, KvFormat::Dual, 4);
+        let rows: Vec<f32> = (0..tokens * d).map(|_| rng.normal() as f32).collect();
+        s.append_rows(&rows);
+        s
+    }
+
+    fn planes_with(layers: usize, heads: usize, tokens: usize, d: usize, seed: u64) -> SpillPlanes {
+        let mut rng = Rng::new(seed);
+        (0..layers)
+            .map(|_| {
+                (0..heads)
+                    .map(|_| store_with(tokens, d, &mut rng).page_arc(0).clone())
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn pages_eq(a: &DualQuantized, b: &DualQuantized) -> bool {
+        a.rows == b.rows
+            && a.d == b.d
+            && a.packed_fp4 == b.packed_fp4
+            && a.s4_codes == b.s4_codes
+            && a.fp8_codes == b.fp8_codes
+            && a.s8_codes == b.s8_codes
+            && a.sq.iter().zip(&b.sq).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn planes_eq(a: &SpillPlanes, b: &SpillPlanes) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(ra, rb)| {
+                ra.len() == rb.len() && ra.iter().zip(rb).all(|(x, y)| pages_eq(x, y))
+            })
+    }
+
+    #[test]
+    fn mode_parses_and_names() {
+        for (s, m) in [
+            ("off", TierMode::Off),
+            ("cold", TierMode::Cold),
+            ("aging", TierMode::Aging),
+        ] {
+            assert_eq!(TierMode::parse(s).unwrap(), m);
+            assert_eq!(m.name(), s);
+        }
+        assert!(TierMode::parse("warm")
+            .unwrap_err()
+            .to_string()
+            .contains("off|cold|aging"));
+        assert!(!TierMode::Off.enabled());
+        assert!(TierMode::Cold.enabled() && !TierMode::Cold.ages());
+        assert!(TierMode::Aging.enabled() && TierMode::Aging.ages());
+    }
+
+    #[test]
+    fn encode_decode_round_trips_bit_exactly() {
+        let k = planes_with(2, 2, 4, 32, 11);
+        let v = planes_with(2, 2, 4, 32, 12);
+        let record = encode_node(&k, &v);
+        let (k2, v2) = decode_node(&record, fnv1a(&record)).unwrap();
+        assert!(planes_eq(&k, &k2));
+        assert!(planes_eq(&v, &v2));
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let k = planes_with(1, 1, 4, 32, 13);
+        let v = planes_with(1, 1, 4, 32, 14);
+        let mut record = encode_node(&k, &v);
+        let checksum = fnv1a(&record);
+        let mid = record.len() / 2;
+        record[mid] ^= 0x40;
+        let err = decode_node(&record, checksum).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        // Truncation is also caught (checksum first, then bounds).
+        let record = encode_node(&k, &v);
+        let short = &record[..record.len() - 3];
+        assert!(decode_node(short, checksum).is_err());
+    }
+
+    #[test]
+    fn age_page_drops_high_planes_only() {
+        let mut rng = Rng::new(21);
+        let store = store_with(4, 32, &mut rng);
+        let page = store.page_arc(0);
+        let (aged, saved) = age_page(page).unwrap();
+        assert_eq!(saved, page.fp8_codes.len() + page.s8_codes.len());
+        assert!(aged.fp8_codes.is_empty() && aged.s8_codes.is_empty());
+        assert_eq!(aged.packed_fp4, page.packed_fp4);
+        assert_eq!(aged.s4_codes, page.s4_codes);
+        assert_eq!(aged.sq, page.sq);
+        assert_eq!(aged.rows, page.rows);
+        // The low copy decodes bit-identically to the original's.
+        let d = page.d;
+        let (mut a, mut b) = (vec![0.0f32; 4 * d], vec![0.0f32; 4 * d]);
+        page.decode_low_rows(0, 4, &mut a);
+        aged.decode_low_rows(0, 4, &mut b);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        // Aging an already-aged page is a no-op (nothing left to drop).
+        assert!(age_page(&aged).is_none());
+    }
+
+    #[test]
+    fn aged_page_decodes_through_store_at_low() {
+        // An aged page swapped back into a Dual store must clamp High
+        // requests down to its surviving low copy.
+        let mut rng = Rng::new(22);
+        let store = store_with(4, 32, &mut rng);
+        let (aged, _) = age_page(store.page_arc(0)).unwrap();
+        let mut swapped = QuantPagedKv::new(32, KvFormat::Dual, 4);
+        swapped.push_shared_page(aged);
+        assert_eq!(swapped.effective_at(0, Precision::High), Precision::Low);
+        let mut got = vec![0.0f32; 4 * 32];
+        swapped.decode_rows(0, 4, Precision::High, &mut got);
+        let mut want = vec![0.0f32; 4 * 32];
+        store.decode_rows(0, 4, Precision::Low, &mut want);
+        assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn manager_spill_reload_round_trip() {
+        let dir = TempDir::new("dma_tier_test").unwrap();
+        let mut t = TierManager::new(TierMode::Cold, dir.path()).unwrap();
+        let k = planes_with(2, 2, 4, 32, 31);
+        let v = planes_with(2, 2, 4, 32, 32);
+        let written = t.spill(7, &k, &v).unwrap();
+        assert!(t.contains(7));
+        assert_eq!(t.spilled_pages(), 1);
+        assert_eq!(t.spilled_bytes(), written as u64);
+        let (k2, v2) = t.reload(7).unwrap();
+        assert!(!t.contains(7));
+        assert_eq!(t.spilled_pages(), 0);
+        assert_eq!(t.spilled_bytes(), 0);
+        assert!(planes_eq(&k, &k2));
+        assert!(planes_eq(&v, &v2));
+        let s = t.stats();
+        assert_eq!((s.pages_spilled, s.pages_reloaded), (1, 1));
+        assert_eq!(s.spill_bytes, s.reload_bytes);
+    }
+
+    #[test]
+    fn drop_entry_frees_extent_for_reuse() {
+        let dir = TempDir::new("dma_tier_test").unwrap();
+        let mut t = TierManager::new(TierMode::Cold, dir.path()).unwrap();
+        let k = planes_with(1, 2, 4, 32, 41);
+        let v = planes_with(1, 2, 4, 32, 42);
+        t.spill(1, &k, &v).unwrap();
+        let grown = t.file.file_bytes();
+        t.drop_entry(1);
+        assert_eq!(t.spilled_bytes(), 0);
+        // Same-shape respill reuses the freed extent: no file growth.
+        t.spill(2, &k, &v).unwrap();
+        assert_eq!(t.file.file_bytes(), grown);
+        t.drop_entry(99); // unknown id: no-op
+    }
+
+    #[test]
+    fn stats_merge_sums_fields() {
+        let a = TierStats {
+            hot_pages: 1,
+            aged_pages: 2,
+            spilled_pages: 3,
+            spilled_bytes: 4,
+            pages_aged: 5,
+            pages_spilled: 6,
+            pages_reloaded: 7,
+            spill_bytes: 8,
+            reload_bytes: 9,
+        };
+        let mut m = a;
+        m.merge(&a);
+        assert_eq!(m.hot_pages, 2);
+        assert_eq!(m.spilled_bytes, 8);
+        assert_eq!(m.reload_bytes, 18);
+    }
+
+    // Satellite: interleave append / fork / age / spill / reload against
+    // an in-memory mirror — planes stay bit-exact through every path and
+    // every reload passes its checksum.
+    #[test]
+    fn property_tier_round_trips_match_mirror() {
+        crate::util::prop::check("tier spill/reload vs mirror", 12, |rng| {
+            let dir = TempDir::new("dma_tier_prop").map_err(|e| e.to_string())?;
+            let mut t = TierManager::new(TierMode::Aging, dir.path()).map_err(|e| e.to_string())?;
+            let d = crate::util::prop::gen::dim_multiple_of(rng, 32, 32, 64);
+            let layers = rng.int_in(1, 3) as usize;
+            let heads = rng.int_in(1, 3) as usize;
+
+            // mirror: id -> (k, v) as the tier should reproduce them.
+            let mut mirror: Vec<(SeqId, SpillPlanes, SpillPlanes)> = Vec::new();
+            let mut spilled: Vec<usize> = Vec::new();
+            let mut next_id: SeqId = 1;
+
+            for _ in 0..20 {
+                match rng.int_in(0, 4) {
+                    // Build a fresh node (append path), maybe via fork.
+                    0 | 1 => {
+                        let tokens = 4;
+                        let mk = |rng: &mut Rng| -> SpillPlanes {
+                            (0..layers)
+                                .map(|_| {
+                                    (0..heads)
+                                        .map(|_| {
+                                            let mut s = store_with(tokens, d, rng);
+                                            if rng.uniform() < 0.5 {
+                                                s = s.fork();
+                                            }
+                                            s.page_arc(0).clone()
+                                        })
+                                        .collect()
+                                })
+                                .collect()
+                        };
+                        let (k, v) = (mk(rng), mk(rng));
+                        mirror.push((next_id, k, v));
+                        next_id += 1;
+                    }
+                    // Age a resident node (mirror ages too).
+                    2 => {
+                        let resident: Vec<usize> = (0..mirror.len())
+                            .filter(|i| !spilled.contains(i))
+                            .collect();
+                        if let Some(&i) =
+                            resident.get(rng.int_in(0, resident.len().max(1) as i64) as usize)
+                        {
+                            let (_, k, v) = &mut mirror[i];
+                            let mut aged_pages = 0u64;
+                            for planes in [k, v] {
+                                for heads in planes.iter_mut() {
+                                    for page in heads.iter_mut() {
+                                        if let Some((aged, _)) = age_page(page) {
+                                            *page = aged;
+                                            aged_pages += 1;
+                                        }
+                                    }
+                                }
+                            }
+                            t.note_aged(aged_pages);
+                        }
+                    }
+                    // Spill a resident node.
+                    _ => {
+                        let resident: Vec<usize> = (0..mirror.len())
+                            .filter(|i| !spilled.contains(i))
+                            .collect();
+                        if let Some(&i) =
+                            resident.get(rng.int_in(0, resident.len().max(1) as i64) as usize)
+                        {
+                            let (id, k, v) = &mirror[i];
+                            t.spill(*id, k, v).map_err(|e| e.to_string())?;
+                            spilled.push(i);
+                        }
+                    }
+                }
+                // Randomly reload one spilled node and compare planes.
+                if !spilled.is_empty() && rng.uniform() < 0.5 {
+                    let si = rng.int_in(0, spilled.len() as i64) as usize;
+                    let i = spilled.swap_remove(si);
+                    let (id, k, v) = &mirror[i];
+                    let (k2, v2) = t.reload(*id).map_err(|e| e.to_string())?;
+                    crate::prop_assert!(planes_eq(k, &k2), "reloaded K planes differ");
+                    crate::prop_assert!(planes_eq(v, &v2), "reloaded V planes differ");
+                }
+            }
+            // Drain: every remaining spilled node reloads bit-exactly.
+            for i in spilled {
+                let (id, k, v) = &mirror[i];
+                let (k2, v2) = t.reload(*id).map_err(|e| e.to_string())?;
+                crate::prop_assert!(planes_eq(k, &k2), "drained K planes differ");
+                crate::prop_assert!(planes_eq(v, &v2), "drained V planes differ");
+            }
+            crate::prop_assert!(t.spilled_bytes() == 0, "live bytes after drain");
+            Ok(())
+        });
+    }
+}

@@ -31,7 +31,8 @@ fn usage() -> ! {
          [--route round-robin|least-loaded|prefix-affinity] \
          [--trace-out FILE] [--metrics-sample-n N] \
          [--request-timeout-ms MS] [--queue-timeout-ms MS] \
-         [--shed-policy off|degrade] \
+         [--shed-policy off|degrade|spill] \
+         [--kv-spill off|cold|aging] [--kv-spill-dir DIR] [--kv-age-ms MS] \
          [--fault SITE:KIND:PROB[:DELAY_MS]] [--fault-seed S]"
     );
     std::process::exit(2);
@@ -127,6 +128,22 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         Some(s) => dma::config::ShedPolicy::parse(s)?,
         None => dma::config::ShedPolicy::Off,
     };
+    let kv_spill = match args.get("kv-spill") {
+        Some(s) => dma::kvquant::tier::TierMode::parse(s)?,
+        None => dma::kvquant::tier::TierMode::Off,
+    };
+    let kv_spill_dir = args.get("kv-spill-dir").map(std::path::PathBuf::from);
+    let kv_age_ms = args.usize_or("kv-age-ms", 250) as u64;
+    if kv_spill.enabled() && !prefix_cache {
+        anyhow::bail!(
+            "--kv-spill {} tiers shared radix pages; it needs --prefix-cache \
+             (and therefore a quantized --kv-format)",
+            kv_spill.name()
+        );
+    }
+    if shed_policy == dma::config::ShedPolicy::Spill && !kv_spill.enabled() {
+        anyhow::bail!("--shed-policy spill needs --kv-spill cold|aging");
+    }
     let cfg = EngineConfig {
         artifact_dir: artifacts.clone().into(),
         max_new_tokens: args.usize_or("max-new-tokens", 32),
@@ -143,6 +160,9 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         request_timeout_ms: args.usize_or("request-timeout-ms", 0) as u64,
         queue_timeout_ms: args.usize_or("queue-timeout-ms", 0) as u64,
         shed_policy,
+        kv_spill,
+        kv_spill_dir,
+        kv_age_ms,
         ..Default::default()
     };
     let policy = match args.get_or("route", "least-loaded").as_str() {
@@ -197,7 +217,7 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
         "dma: serving on {addr} ({} worker(s), route {}, kv cache {}, policy {}, \
          prefill chunk {}, prefix cache {}, threads {}, decoded cache {} MiB, \
          spec {}, writer queue {} lines / {} ms slow-reader timeout, trace {}, \
-         layer probe {}, shed {}, timeouts req/queue {}/{} ms, faults {})",
+         layer probe {}, shed {}, kv spill {}, timeouts req/queue {}/{} ms, faults {})",
         workers,
         policy.name(),
         cfg.kv_format.name(),
@@ -220,6 +240,18 @@ fn cmd_serve(args: &Args) -> dma::Result<()> {
             "off".to_string()
         },
         cfg.shed_policy.name(),
+        if cfg.kv_spill.enabled() {
+            format!(
+                "{} (dir {}, age {} ms)",
+                cfg.kv_spill.name(),
+                cfg.kv_spill_dir
+                    .as_deref()
+                    .map_or_else(|| "auto".to_string(), |p| p.display().to_string()),
+                cfg.kv_age_ms
+            )
+        } else {
+            "off".to_string()
+        },
         cfg.request_timeout_ms,
         cfg.queue_timeout_ms,
         fault_summary.as_deref().unwrap_or("off")

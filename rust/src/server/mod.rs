@@ -1,6 +1,6 @@
 //! TCP JSON-lines serving front end (std::net — tokio is not vendored).
 //!
-//! Protocol v2.4: one JSON object per line.
+//! Protocol v2.5: one JSON object per line.
 //!
 //! Request fields (`tokens` required, everything else optional):
 //!
@@ -140,6 +140,28 @@
 //!   reply and a clean close (the oversized tail is never buffered);
 //!   bytes that are not valid UTF-8, and a half-frame cut off by a
 //!   disconnect, get a structured error instead of a silent hang.
+//!
+//! New in v2.5 (tiered KV memory):
+//!
+//! * The `stats` reply always carries a nested `"tier"` object — no
+//!   telemetry required, mode `"off"` and zeros when `--kv-spill` is
+//!   disabled:
+//!
+//! ```text
+//! <- {..., "tier": {"mode": "aging", "hot_pages": 12, "aged_pages": 3,
+//!     "spilled_pages": 40, "spilled_bytes": 281600, "pages_aged": 9,
+//!     "pages_spilled": 44, "pages_reloaded": 4, "spill_bytes": 309760,
+//!     "reload_bytes": 28160}}
+//! ```
+//!
+//!   `hot_pages`/`aged_pages`/`spilled_pages`/`spilled_bytes` are
+//!   residency gauges (hot pages hold every precision plane, aged pages
+//!   serve from their NVFP4 copy, spilled pages live in the per-worker
+//!   spill files); the rest are cumulative counters, fleet-wide.
+//! * The `metrics` exposition gains `dma_kv_spill_bytes_total`,
+//!   `dma_kv_reload_bytes_total`, `dma_kv_pages_aged_total`, the
+//!   `dma_kv_reload_seconds` histogram, tier-labelled
+//!   `dma_kv_tier_pages` gauges, and the `dma_kv_spilled_bytes` gauge.
 //!
 //! **Back-pressure / slow readers.** Each connection's outbound lines
 //! flow through a *bounded* writer channel
@@ -748,6 +770,25 @@ fn handle_conn(
                         ("decoded_page_misses", Json::num(pages.cache_misses as f64)),
                         ("decoded_page_hit_rate", Json::num(pages.cache_hit_rate())),
                     ];
+                    // Stats v2.5: tiered KV memory — always present
+                    // (mode "off" and zeros with --kv-spill off), so
+                    // clients need no feature probe.
+                    let tier = router.tier_stats();
+                    fields.push((
+                        "tier",
+                        Json::obj(vec![
+                            ("mode", Json::str(router.kv_spill_mode())),
+                            ("hot_pages", Json::num(tier.hot_pages as f64)),
+                            ("aged_pages", Json::num(tier.aged_pages as f64)),
+                            ("spilled_pages", Json::num(tier.spilled_pages as f64)),
+                            ("spilled_bytes", Json::num(tier.spilled_bytes as f64)),
+                            ("pages_aged", Json::num(tier.pages_aged as f64)),
+                            ("pages_spilled", Json::num(tier.pages_spilled as f64)),
+                            ("pages_reloaded", Json::num(tier.pages_reloaded as f64)),
+                            ("spill_bytes", Json::num(tier.spill_bytes as f64)),
+                            ("reload_bytes", Json::num(tier.reload_bytes as f64)),
+                        ]),
+                    ));
                     // Stats v2: latency summaries + rolling gauges when
                     // the fleet runs with telemetry attached.
                     if let Some(t) = router.telemetry() {
@@ -1764,6 +1805,16 @@ mod tests {
         assert_eq!(spec.get("rolled_back_tokens").unwrap().as_i64(), Some(0));
         assert!(text.contains("dma_spec_proposed_tokens_total 0"), "{text}");
         assert!(text.contains("# TYPE dma_spec_accepted_tokens histogram"), "{text}");
+        // Stats v2.5: the tier block is always present (mode "off" and
+        // zeros here — this server runs without --kv-spill), and the
+        // tier families render all-zero in the exposition.
+        let tier = s.get("tier").unwrap();
+        assert_eq!(tier.get("mode").unwrap().as_str(), Some("off"));
+        assert_eq!(tier.get("spilled_pages").unwrap().as_i64(), Some(0));
+        assert_eq!(tier.get("pages_aged").unwrap().as_i64(), Some(0));
+        assert_eq!(tier.get("spill_bytes").unwrap().as_i64(), Some(0));
+        assert!(text.contains("dma_kv_spill_bytes_total 0"), "{text}");
+        assert!(text.contains("dma_kv_tier_pages{tier=\"spilled\"} 0"), "{text}");
 
         writer.shutdown(std::net::Shutdown::Write).unwrap();
         stop.store(true, Ordering::Relaxed);

@@ -470,6 +470,16 @@ pub struct Telemetry {
     /// Tokens emitted per speculative round (accepted drafts plus the
     /// correction/bonus token) — a token-count histogram, not a latency.
     pub spec_tokens_per_round: Histogram,
+    // -- tiered KV memory (`--kv-spill`) --------------------------------
+    /// Bytes written to the workers' spill files (cold-tier writes).
+    pub kv_spill_bytes: Counter,
+    /// Bytes read back from spill files on spilled-prefix reloads.
+    pub kv_reload_bytes: Counter,
+    /// Radix pages precision-aged (MXFP8 planes dropped, bytes credited
+    /// back to the pool).
+    pub kv_pages_aged: Counter,
+    /// One spilled-prefix reload sweep (disk read + parallel decode).
+    pub kv_reload_us: Histogram,
     // -- rolling 10 s gauges --------------------------------------------
     /// Generated tokens; read as tokens/s over the window.
     pub tokens_10s: RollingWindow,
@@ -522,6 +532,10 @@ impl Telemetry {
             spec_accepted_tokens: Counter::default(),
             spec_rolled_back_tokens: Counter::default(),
             spec_tokens_per_round: Histogram::new(),
+            kv_spill_bytes: Counter::default(),
+            kv_reload_bytes: Counter::default(),
+            kv_pages_aged: Counter::default(),
+            kv_reload_us: Histogram::new(),
             tokens_10s: RollingWindow::default(),
             ttft_10s: RollingWindow::default(),
             trace: None,
@@ -563,6 +577,13 @@ pub struct WorkerGauges {
     pub kv_bytes_in_use: u64,
     pub kv_bytes_capacity: u64,
     pub decoded_bytes_live: u64,
+    /// Tier residency (`--kv-spill`): prefix-cache pages holding every
+    /// plane, pages aged down to their low copy, pages on disk, and the
+    /// spill-file bytes holding them. All 0 with the tier off.
+    pub tier_hot_pages: u64,
+    pub tier_aged_pages: u64,
+    pub tier_spilled_pages: u64,
+    pub tier_spilled_bytes: u64,
     /// Worker thread alive (cleared on panic/exit until the supervisor
     /// respawns it).
     pub healthy: bool,
@@ -575,6 +596,10 @@ impl Default for WorkerGauges {
             kv_bytes_in_use: 0,
             kv_bytes_capacity: 0,
             decoded_bytes_live: 0,
+            tier_hot_pages: 0,
+            tier_aged_pages: 0,
+            tier_spilled_pages: 0,
+            tier_spilled_bytes: 0,
             healthy: true,
         }
     }
@@ -710,6 +735,14 @@ pub fn render_prometheus(
         "dma_pool_wait_seconds",
         "Worker-pool job enqueue-to-dequeue wall time",
         &crate::util::pool::wait_histogram().snapshot(),
+    );
+    // Tier families render unconditionally (all-zero with --kv-spill
+    // off) so scrapes never see the series appear late.
+    render_histogram(
+        &mut out,
+        "dma_kv_reload_seconds",
+        "Spilled-prefix reload sweep wall time (disk read + parallel decode)",
+        &t.kv_reload_us.snapshot(),
     );
     let probe = t.probe();
     if probe.sample_every() > 0 {
@@ -895,6 +928,24 @@ pub fn render_prometheus(
         "Decoded-page cache evictions",
         pages.cache_evictions,
     );
+    render_counter(
+        &mut out,
+        "dma_kv_spill_bytes_total",
+        "Bytes written to the workers' KV spill files",
+        t.kv_spill_bytes.get(),
+    );
+    render_counter(
+        &mut out,
+        "dma_kv_reload_bytes_total",
+        "Bytes read back from KV spill files on prefix reloads",
+        t.kv_reload_bytes.get(),
+    );
+    render_counter(
+        &mut out,
+        "dma_kv_pages_aged_total",
+        "Prefix-cache pages precision-aged to their low copy",
+        t.kv_pages_aged.get(),
+    );
 
     let now = t.now_sec();
     render_gauge(
@@ -908,6 +959,28 @@ pub fn render_prometheus(
         "dma_ttft_ms_10s",
         "Mean TTFT in ms over the last 10 s",
         t.ttft_10s.mean(now) / 1e3,
+    );
+    // Fleet-wide tier residency, summed from the per-worker snapshots.
+    let tier = workers.iter().fold((0u64, 0u64, 0u64, 0u64), |a, w| {
+        (
+            a.0 + w.tier_hot_pages,
+            a.1 + w.tier_aged_pages,
+            a.2 + w.tier_spilled_pages,
+            a.3 + w.tier_spilled_bytes,
+        )
+    });
+    out.push_str(concat!(
+        "# HELP dma_kv_tier_pages Prefix-cache pages resident per KV tier, fleet-wide\n",
+        "# TYPE dma_kv_tier_pages gauge\n"
+    ));
+    out.push_str(&format!("dma_kv_tier_pages{{tier=\"hot\"}} {}\n", tier.0));
+    out.push_str(&format!("dma_kv_tier_pages{{tier=\"aged\"}} {}\n", tier.1));
+    out.push_str(&format!("dma_kv_tier_pages{{tier=\"spilled\"}} {}\n", tier.2));
+    render_gauge(
+        &mut out,
+        "dma_kv_spilled_bytes",
+        "Spill-file bytes holding live cold pages, fleet-wide",
+        tier.3 as f64,
     );
 
     fn per_worker(
@@ -1140,15 +1213,23 @@ mod tests {
         t.requests_replayed.add(2);
         t.requests_shed.add(3);
         t.deadline_cancels_queue.inc();
+        t.kv_spill_bytes.add(4096);
+        t.kv_reload_bytes.add(2048);
+        t.kv_pages_aged.add(7);
+        t.kv_reload_us.record_us(150);
         let workers = [
             WorkerGauges {
                 queue_depth: 2,
                 kv_bytes_in_use: 1000,
                 kv_bytes_capacity: 4000,
                 decoded_bytes_live: 200,
+                tier_hot_pages: 10,
+                tier_aged_pages: 4,
+                tier_spilled_pages: 6,
+                tier_spilled_bytes: 3000,
                 healthy: true,
             },
-            WorkerGauges { healthy: false, ..Default::default() },
+            WorkerGauges { tier_hot_pages: 1, tier_spilled_bytes: 500, healthy: false, ..Default::default() },
         ];
         let pages = crate::metrics::KvPageStats {
             high_pages: 3,
@@ -1190,6 +1271,14 @@ mod tests {
             "dma_deadline_cancels_total{cause=\"deadline\"} 0",
             "dma_worker_healthy{worker=\"0\"} 1",
             "dma_worker_healthy{worker=\"1\"} 0",
+            "dma_kv_spill_bytes_total 4096",
+            "dma_kv_reload_bytes_total 2048",
+            "dma_kv_pages_aged_total 7",
+            "dma_kv_reload_seconds_count 1",
+            "dma_kv_tier_pages{tier=\"hot\"} 11",
+            "dma_kv_tier_pages{tier=\"aged\"} 4",
+            "dma_kv_tier_pages{tier=\"spilled\"} 6",
+            "dma_kv_spilled_bytes 3500",
             "le=\"+Inf\"",
         ] {
             assert!(text.contains(family), "missing '{family}' in:\n{text}");
@@ -1213,6 +1302,12 @@ mod tests {
             "# TYPE dma_requests_shed_total counter",
             "# TYPE dma_deadline_cancels_total counter",
             "# TYPE dma_worker_healthy gauge",
+            "# TYPE dma_kv_spill_bytes_total counter",
+            "# TYPE dma_kv_reload_bytes_total counter",
+            "# TYPE dma_kv_pages_aged_total counter",
+            "# TYPE dma_kv_reload_seconds histogram",
+            "# TYPE dma_kv_tier_pages gauge",
+            "# TYPE dma_kv_spilled_bytes gauge",
         ] {
             assert!(cold.contains(family), "missing '{family}'");
         }

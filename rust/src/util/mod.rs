@@ -9,3 +9,4 @@ pub mod par;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod spill;

@@ -1,0 +1,220 @@
+//! Spill-file primitives for the tiered KV memory
+//! ([`crate::kvquant::tier`]): a single-writer append-mostly extent
+//! file with exact-size free-extent reuse, plus the FNV-1a checksum
+//! the tier index stores per spilled page.
+//!
+//! One [`SpillFile`] belongs to one engine worker (the engine thread is
+//! the only reader and writer, so the file needs no locking). Extents
+//! are written at the end of the file or into a previously freed extent
+//! of *exactly* the same length — spilled radix pages of one
+//! deployment share a handful of byte sizes (page geometry is fixed per
+//! model; only the aged/unaged split varies), so exact-size reuse keeps
+//! the file from growing across spill/reload cycles without the
+//! complexity of a general allocator. The file is deleted on drop:
+//! spilled pages are a cache, never durable state.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// FNV-1a over `bytes` — the per-extent checksum recorded in the tier
+/// index and verified on reload (a reload must be bit-exact or fail
+/// loudly; serving stale or torn planes would silently corrupt logits).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Append-mostly extent file with exact-size free-list reuse.
+pub struct SpillFile {
+    file: File,
+    path: PathBuf,
+    /// Append cursor (bytes 0..end are live or on the free list).
+    end: u64,
+    /// Freed extents by length: `len -> offsets` (LIFO reuse).
+    free: BTreeMap<u64, Vec<u64>>,
+    free_bytes: u64,
+}
+
+impl std::fmt::Debug for SpillFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpillFile")
+            .field("path", &self.path)
+            .field("end", &self.end)
+            .field("free_bytes", &self.free_bytes)
+            .finish()
+    }
+}
+
+impl SpillFile {
+    /// Create (truncating any previous run's leftover) at `path`.
+    pub fn create(path: &Path) -> std::io::Result<SpillFile> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(SpillFile {
+            file,
+            path: path.to_path_buf(),
+            end: 0,
+            free: BTreeMap::new(),
+            free_bytes: 0,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Bytes the file spans (live extents + free holes).
+    pub fn file_bytes(&self) -> u64 {
+        self.end
+    }
+
+    /// Bytes sitting in freed extents awaiting exact-size reuse.
+    pub fn free_bytes(&self) -> u64 {
+        self.free_bytes
+    }
+
+    /// Write `bytes` into a freed extent of the same length when one
+    /// exists, at the end of the file otherwise. Returns the extent's
+    /// offset (its length is `bytes.len()`).
+    pub fn write_extent(&mut self, bytes: &[u8]) -> std::io::Result<u64> {
+        let len = bytes.len() as u64;
+        let offset = match self.free.get_mut(&len).and_then(Vec::pop) {
+            Some(off) => {
+                if self.free.get(&len).is_some_and(Vec::is_empty) {
+                    self.free.remove(&len);
+                }
+                self.free_bytes -= len;
+                off
+            }
+            None => {
+                let off = self.end;
+                self.end += len;
+                off
+            }
+        };
+        self.file.seek(SeekFrom::Start(offset))?;
+        self.file.write_all(bytes)?;
+        Ok(offset)
+    }
+
+    /// Read the `len` bytes at `offset` (an extent previously returned
+    /// by [`Self::write_extent`] and not yet freed).
+    pub fn read_extent(&mut self, offset: u64, len: u64) -> std::io::Result<Vec<u8>> {
+        let mut buf = vec![0u8; len as usize];
+        self.file.seek(SeekFrom::Start(offset))?;
+        self.file.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Return an extent to the free list for exact-size reuse.
+    pub fn free_extent(&mut self, offset: u64, len: u64) {
+        self.free.entry(len).or_default().push(offset);
+        self.free_bytes += len;
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        // Spill contents are a cache of resident state — never reused
+        // across processes — so leave nothing behind.
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// A process-unique temporary directory removed (recursively) on drop —
+/// the scope tests and benches run their spill files in so an aborted
+/// run cannot accumulate leftovers.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new(prefix: &str) -> std::io::Result<TempDir> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "{prefix}_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_is_stable_and_sensitive() {
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"ab"));
+    }
+
+    #[test]
+    fn extents_round_trip() {
+        let dir = TempDir::new("dma_spill_test").unwrap();
+        let mut f = SpillFile::create(&dir.path().join("a.spill")).unwrap();
+        let a = f.write_extent(&[1u8; 64]).unwrap();
+        let b = f.write_extent(&[2u8; 32]).unwrap();
+        assert_eq!((a, b), (0, 64));
+        assert_eq!(f.read_extent(a, 64).unwrap(), vec![1u8; 64]);
+        assert_eq!(f.read_extent(b, 32).unwrap(), vec![2u8; 32]);
+        assert_eq!(f.file_bytes(), 96);
+    }
+
+    #[test]
+    fn freed_extents_are_reused_exact_size() {
+        let dir = TempDir::new("dma_spill_test").unwrap();
+        let mut f = SpillFile::create(&dir.path().join("b.spill")).unwrap();
+        let a = f.write_extent(&[7u8; 48]).unwrap();
+        let _b = f.write_extent(&[8u8; 48]).unwrap();
+        f.free_extent(a, 48);
+        assert_eq!(f.free_bytes(), 48);
+        // Different size: appends, hole untouched.
+        let c = f.write_extent(&[9u8; 24]).unwrap();
+        assert_eq!(c, 96);
+        assert_eq!(f.free_bytes(), 48);
+        // Same size: lands in the hole, file does not grow.
+        let d = f.write_extent(&[3u8; 48]).unwrap();
+        assert_eq!(d, a);
+        assert_eq!(f.free_bytes(), 0);
+        assert_eq!(f.file_bytes(), 120);
+        assert_eq!(f.read_extent(d, 48).unwrap(), vec![3u8; 48]);
+    }
+
+    #[test]
+    fn spill_file_removes_itself_and_tempdir_cleans_up() {
+        let dir = TempDir::new("dma_spill_test").unwrap();
+        let root = dir.path().to_path_buf();
+        let p = root.join("c.spill");
+        let f = SpillFile::create(&p).unwrap();
+        assert!(p.exists());
+        drop(f);
+        assert!(!p.exists(), "spill file must be deleted on drop");
+        drop(dir);
+        assert!(!root.exists(), "tempdir must be removed on drop");
+    }
+}
